@@ -1,0 +1,61 @@
+//! Pattern explorer: sweep every generator's knobs and watch the
+//! classifier + the AI models respond — a tour of the library's
+//! structural-analysis layer.
+//!
+//! ```sh
+//! cargo run --release --example pattern_explorer
+//! ```
+
+use spmm_roofline::gen::{
+    banded, chung_lu, erdos_renyi, mesh2d, rmat, ChungLuParams, MeshKind, Prng,
+};
+use spmm_roofline::model::AiParams;
+use spmm_roofline::pattern::classify;
+use spmm_roofline::report::Table;
+use spmm_roofline::sparse::Csr;
+
+fn main() {
+    let mut t = Table::new(
+        "pattern explorer — generator → classifier → model AI (d=16)",
+        &["Generator", "n", "nnz/row", "CV", "Classified", "AI model", "AI@16"],
+    );
+    let n = 20_000usize;
+    let mut add = |name: &str, a: Csr| {
+        let cls = classify(&a);
+        let ai = cls.model.ai(AiParams::new(a.nrows, 16, a.nnz()));
+        t.row(vec![
+            name.to_string(),
+            a.nrows.to_string(),
+            format!("{:.1}", a.avg_row_len()),
+            format!("{:.2}", cls.stats.row_len_cv),
+            cls.class.to_string(),
+            cls.model.name().to_string(),
+            format!("{ai:.4}"),
+        ]);
+    };
+
+    let mut rng = Prng::new(1);
+    add("erdos_renyi deg=2", erdos_renyi(n, n, 2.0, &mut rng));
+    add("erdos_renyi deg=20", erdos_renyi(n, n, 20.0, &mut rng));
+    add("banded bw=4", banded(n, 4, 0.8, &mut rng));
+    add("banded bw=32", banded(n, 32, 0.1, &mut rng));
+    add("mesh road", mesh2d(141, MeshKind::Road, 0.62, &mut rng));
+    add("mesh triangular", mesh2d(141, MeshKind::Triangular, 0.9, &mut rng));
+    add("mesh path", mesh2d(141, MeshKind::Path, 0.5, &mut rng));
+    add(
+        "chung_lu α=2.1",
+        chung_lu(ChungLuParams { n, alpha: 2.1, avg_deg: 16.0, k_min: 3.0 }, &mut rng),
+    );
+    add(
+        "chung_lu α=2.9",
+        chung_lu(ChungLuParams { n, alpha: 2.9, avg_deg: 16.0, k_min: 3.0 }, &mut rng),
+    );
+    add("rmat skewed", rmat(14, 12.0, 0.57, 0.19, 0.19, &mut rng));
+    add("rmat uniform", rmat(14, 12.0, 0.25, 0.25, 0.25, &mut rng));
+
+    println!("{}", t.to_text());
+    println!("Notes:");
+    println!("- heavier tails (smaller α, skewed R-MAT) should classify Scale-free;");
+    println!("- meshes classify Blocked via tile-local edges, bands classify Diagonal;");
+    println!("- the AI column orders exactly as §III predicts: diagonal > blocked/scale-free > random.");
+}

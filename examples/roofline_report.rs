@@ -1,0 +1,138 @@
+//! **End-to-end driver** (deliverable (b)/DESIGN.md): runs the paper's
+//! entire evaluation pipeline on the proxy dataset and emits every
+//! artifact — Table III/IV analogs, the Table V grid, Fig. 1 and
+//! Fig. 2 SVGs, the AI-model validation, and the engine's
+//! routing/prediction report — into `results/`.
+//!
+//! This is the run recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example roofline_report [scale]
+//! ```
+
+use spmm_roofline::config::ExperimentConfig;
+use spmm_roofline::coordinator::{Engine, EngineConfig, JobSpec};
+use spmm_roofline::gen::{proxy_suite, representative_suite};
+use spmm_roofline::harness;
+use spmm_roofline::report::{probe_system, Table};
+use spmm_roofline::spmm::Impl;
+
+fn main() -> spmm_roofline::Result<()> {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.25);
+    let cfg = ExperimentConfig { scale, iters: 3, warmup: 1, ..Default::default() };
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let mut md = String::new();
+
+    // ---- Table IV analog: the machine ------------------------------
+    println!("== calibrating machine (STREAM + FMA) ==");
+    let machine = harness::machine_params_cached(cfg.threads);
+    let sys_table = probe_system().to_table(Some(machine));
+    println!("{}", sys_table.to_text());
+    md.push_str(&sys_table.to_markdown());
+
+    // ---- Table III analog: the dataset ------------------------------
+    let mut t3 = Table::new(
+        format!("Table III analog — proxy dataset (scale {scale})"),
+        &["Pattern", "Proxy", "Paper matrix", "Rows", "Nonzeros", "nnz/row"],
+    );
+    for p in proxy_suite() {
+        let m = p.generate(cfg.scale);
+        t3.row(vec![
+            p.class.to_string(),
+            p.name.into(),
+            p.paper_name.into(),
+            m.nrows.to_string(),
+            m.nnz().to_string(),
+            format!("{:.2}", m.avg_row_len()),
+        ]);
+    }
+    println!("{}", t3.to_text());
+    md.push_str(&t3.to_markdown());
+
+    // ---- Table V -----------------------------------------------------
+    println!("== Table V sweep (12 matrices × 3 impls × 4 widths) ==");
+    let tv = harness::run_table_v(&cfg)?;
+    println!("{}", tv.render(&cfg).to_text());
+    md.push_str(&tv.render(&cfg).to_markdown());
+    tv.save_csv(&format!("{}/table_v.csv", cfg.out_dir))?;
+    for (desc, ok) in tv.shape_checks(&cfg) {
+        println!("  [{}] {desc}", if ok { "PASS" } else { "FAIL" });
+        md.push_str(&format!("- [{}] {desc}\n", if ok { "x" } else { " " }));
+    }
+
+    // ---- Fig. 1 -------------------------------------------------------
+    println!("\n== Fig. 1 sweep ==");
+    let f1 = harness::run_fig1(&cfg)?;
+    println!("{}", f1.render().to_text());
+    f1.save_svgs(&cfg.out_dir)?;
+    f1.save_csv(&format!("{}/fig1.csv", cfg.out_dir))?;
+    md.push_str(&f1.render().to_markdown());
+
+    // ---- Fig. 2 -------------------------------------------------------
+    println!("== Fig. 2 roofline overlays ==");
+    let f2 = harness::run_fig2(&cfg, Some(machine))?;
+    println!("{}", f2.render().to_text());
+    f2.save_svgs(&cfg.out_dir)?;
+    f2.save_csv(&format!("{}/fig2.csv", cfg.out_dir))?;
+    for (desc, ok) in f2.shape_checks() {
+        println!("  [{}] {desc}", if ok { "PASS" } else { "FAIL" });
+        md.push_str(&format!("- [{}] {desc}\n", if ok { "x" } else { " " }));
+    }
+
+    // ---- V1: model vs simulated traffic -------------------------------
+    println!("\n== V1: AI models vs simulated DRAM traffic ==");
+    let mut small = cfg.clone();
+    small.scale = (scale / 8.0).max(0.005);
+    let rows = harness::run_validate_ai(&small)?;
+    let vt = harness::validate::render(&rows);
+    println!("{}", vt.to_text());
+    md.push_str(&vt.to_markdown());
+    harness::validate::save_csv(&rows, &format!("{}/validate_ai.csv", cfg.out_dir))?;
+
+    // ---- the engine: classify → predict → route ------------------------
+    println!("== roofline-guided engine (with XLA backend if artifacts exist) ==");
+    let mut engine = Engine::new(EngineConfig {
+        threads: cfg.threads,
+        machine: Some(machine),
+        iters: cfg.iters,
+        warmup: cfg.warmup,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb, Impl::Ell],
+        artifacts_dir: Some(cfg.artifacts_dir.clone()),
+    })?;
+    println!("xla backend: {}", if engine.has_xla() { "loaded" } else { "absent (run `make artifacts`)" });
+    for proxy in representative_suite() {
+        engine.register(proxy.name, proxy.generate(cfg.scale))?;
+    }
+    let mut te = Table::new(
+        "Engine routing (auto-selected kernel per job)",
+        &["Matrix", "Class", "d", "Routed", "Pred GF/s", "Meas GF/s", "Ratio"],
+    );
+    let names: Vec<String> = engine.registry().names().iter().map(|s| s.to_string()).collect();
+    for name in &names {
+        for &d in &cfg.d_values {
+            let rec = engine.submit(&JobSpec::new(name.clone(), d))?;
+            te.row(vec![
+                rec.matrix.clone(),
+                rec.class.to_string(),
+                d.to_string(),
+                rec.chosen.to_string(),
+                format!("{:.2}", rec.predicted_gflops),
+                format!("{:.2}", rec.measured_gflops),
+                format!("{:.2}", rec.prediction_ratio()),
+            ]);
+        }
+    }
+    println!("{}", te.to_text());
+    md.push_str(&te.to_markdown());
+    let rep = engine.prediction_report();
+    let summary = format!(
+        "engine prediction: n={} geomean(meas/pred)={:.2} mean|ln err|={:.2}\n",
+        rep.n_jobs, rep.geomean_ratio, rep.mean_abs_log_err
+    );
+    println!("{summary}");
+    md.push_str(&summary);
+
+    std::fs::write(format!("{}/report.md", cfg.out_dir), md)?;
+    println!("full report written to {}/report.md (+ CSVs and SVGs)", cfg.out_dir);
+    Ok(())
+}

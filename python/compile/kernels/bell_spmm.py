@@ -1,0 +1,126 @@
+"""Layer-1: blocked-ELL SpMM — the MXU mapping of the paper's CSB.
+
+DESIGN.md §Hardware-Adaptation: CSB's cache tiles become *dense*
+``bs × bs`` blocks (cuSPARSE's blocked-ELL layout), so the per-block
+work is a dense ``(bs, bs) @ (bs, d)`` contraction — exactly what the
+TPU MXU (or tensor cores, for the GPU papers the related work targets)
+consumes. Padding is two-level: every block row stores ``max_blocks``
+block slots (empty slots point at block-column 0 with an all-zero
+tile), and blocks pad internally with zeros.
+
+Layout:
+  block_cols: (nbr, mb)          int32  — block-column index per slot
+  blocks:     (nbr, mb, bs, bs)  float  — dense tiles
+  b:          (n, d)             float  — dense operand (n = nbr·bs)
+  out:        (n, d)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bell_kernel(bcols_ref, blocks_ref, b_ref, o_ref):
+    """One grid step = one block row: mb dense (bs,bs)@(bs,d) MACs."""
+    bcols = bcols_ref[...]  # (1, mb)
+    blocks = blocks_ref[...]  # (1, mb, bs, bs)
+    b = b_ref[...]  # (n, d)
+    _, mb, bs, _ = blocks.shape
+    d = b.shape[1]
+    acc = jnp.zeros((bs, d), dtype=o_ref.dtype)
+    for k in range(mb):  # static unroll over block slots
+        col = bcols[0, k]
+        tile = blocks[0, k]  # (bs, bs)
+        start = (col * bs).astype(jnp.int32)
+        rows = jax.lax.dynamic_slice(b, (start, jnp.int32(0)), (bs, d))  # (bs, d)
+        acc = acc + tile @ rows  # the MXU contraction
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bell_spmm(block_cols, blocks, b):
+    """Blocked-ELL SpMM ``C = A @ B``.
+
+    Args:
+      block_cols: ``(nbr, mb)`` int32 — block-column per slot (padding
+        slots: any valid index with an all-zero tile).
+      blocks: ``(nbr, mb, bs, bs)`` dense tiles.
+      b: ``(n, d)`` with ``n == nbr * bs``.
+
+    Returns:
+      ``(n, d)``.
+    """
+    nbr, mb, bs, bs2 = blocks.shape
+    assert bs == bs2, "tiles must be square"
+    n, d = b.shape
+    if n != nbr * bs:
+        raise ValueError(f"b rows {n} != nbr*bs {nbr * bs}")
+    return pl.pallas_call(
+        _bell_kernel,
+        grid=(nbr,),
+        in_specs=[
+            pl.BlockSpec((1, mb), lambda i: (i, 0)),
+            pl.BlockSpec((1, mb, bs, bs), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), blocks.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(block_cols, blocks, b)
+
+
+def bell_from_dense(a, bs, mb=None):
+    """Build blocked-ELL arrays from a dense matrix (test helper /
+    small-matrix path; the Rust side builds the same layout from CSR).
+
+    Returns ``(block_cols, blocks)`` with ``mb`` = max nonzero blocks
+    per block row (or the given mb, which must be >= that).
+    """
+    import numpy as np
+
+    a = np.asarray(a)
+    n, m = a.shape
+    assert n % bs == 0 and m % bs == 0, "pad the matrix to a multiple of bs first"
+    nbr, nbc = n // bs, m // bs
+    rows = []
+    for i in range(nbr):
+        cols_here = []
+        for j in range(nbc):
+            tile = a[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs]
+            if np.any(tile != 0.0):
+                cols_here.append(j)
+        rows.append(cols_here)
+    need = max((len(r) for r in rows), default=0) or 1
+    if mb is None:
+        mb = need
+    assert mb >= need, f"mb={mb} < max blocks/row {need}"
+    block_cols = np.zeros((nbr, mb), np.int32)
+    blocks = np.zeros((nbr, mb, bs, bs), a.dtype)
+    for i, cols_here in enumerate(rows):
+        for k, j in enumerate(cols_here):
+            block_cols[i, k] = j
+            blocks[i, k] = a[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs]
+    return jnp.asarray(block_cols), jnp.asarray(blocks)
+
+
+def bell_ref(block_cols, blocks, b):
+    """Pure-jnp oracle: scatter tiles into dense A, then matmul."""
+    nbr, mb, bs, _ = blocks.shape
+    n = nbr * bs
+    a = jnp.zeros((n, b.shape[0]), blocks.dtype)
+    for i in range(nbr):
+        for k in range(mb):
+            j = int(block_cols[i, k])
+            a = a.at[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs].add(blocks[i, k])
+    return a @ b
+
+
+def mxu_utilization_estimate(bs, fill_ratio):
+    """DESIGN.md §7: fraction of MXU MACs doing useful work for a
+    given tile edge and structural fill. The MXU is a 128×128 systolic
+    array; a (bs,bs)@(bs,d) issue occupies (bs/128)² of it per pass,
+    and `fill_ratio` of the multiplies are structurally nonzero."""
+    occupancy = min(bs / 128.0, 1.0) ** 2
+    return occupancy * fill_ratio

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes and dtypes).
+The references are deliberately naive: direct gathers and einsums with
+no tiling, so their correctness is self-evident.
+"""
+
+import jax.numpy as jnp
+
+
+def ell_spmm_ref(cols, vals, b):
+    """Reference padded-ELL SpMM: ``C = A @ B``.
+
+    Args:
+      cols: ``(n, w)`` int32 — column index of each slot (padding slots
+        may hold any in-range index).
+      vals: ``(n, w)`` float — value of each slot (0.0 in padding).
+      b: ``(n_cols, d)`` float dense matrix.
+
+    Returns:
+      ``(n, d)`` dense result.
+    """
+    gathered = jnp.take(b, cols, axis=0)  # (n, w, d)
+    return jnp.einsum("rw,rwd->rd", vals, gathered)
+
+
+def gcn_layer_ref(cols, vals, b, w):
+    """Reference GCN-style layer: ``relu((A @ B) @ W)``."""
+    return jnp.maximum(ell_spmm_ref(cols, vals, b) @ w, 0.0)
+
+
+def dense_spmm_ref(a_dense, b):
+    """Fully dense reference (tiny shapes only)."""
+    return a_dense @ b

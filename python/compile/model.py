@@ -1,0 +1,52 @@
+"""Layer-2: the JAX compute graphs that get AOT-lowered for the Rust
+runtime.
+
+Two entry points:
+
+* :func:`spmm` — the paper's kernel, padded-ELL SpMM, dispatching to
+  the Layer-1 Pallas kernel.
+* :func:`gcn_layer` — the applied workload the paper's introduction
+  motivates (GNN propagation): ``relu((A @ B) @ W)``, i.e. SpMM feeding
+  a dense feature transform. Lowering this whole layer as one module
+  lets XLA fuse the SpMM epilogue into the matmul prologue.
+
+Python only ever runs at build time (``make artifacts``); the Rust
+coordinator executes the lowered HLO through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.bell_spmm import bell_spmm
+from compile.kernels.ell_spmm import ell_spmm
+
+# The paper stores matrix values in double precision (§III); keep the
+# artifacts in f64 so the Rust-native kernels and the XLA path are
+# bit-comparable.
+jax.config.update("jax_enable_x64", True)
+
+
+def spmm(cols, vals, b, *, block_rows=None):
+    """Padded-ELL SpMM ``C = A @ B`` (Layer-1 Pallas kernel inside)."""
+    kwargs = {} if block_rows is None else {"block_rows": block_rows}
+    return ell_spmm(cols, vals, b, **kwargs)
+
+
+def gcn_layer(cols, vals, b, w):
+    """One GCN-style propagation layer: ``relu((A @ B) @ W)``."""
+    return jnp.maximum(spmm(cols, vals, b) @ w, 0.0)
+
+
+def bell_entry(block_cols, blocks, b):
+    """AOT entry point for blocked-ELL SpMM (the MXU-mapped kernel)."""
+    return (bell_spmm(block_cols, blocks, b),)
+
+
+def spmm_entry(cols, vals, b):
+    """AOT entry point for plain SpMM (tuple-returning, see aot.py)."""
+    return (spmm(cols, vals, b),)
+
+
+def gcn_entry(cols, vals, b, w):
+    """AOT entry point for the GCN layer."""
+    return (gcn_layer(cols, vals, b, w),)

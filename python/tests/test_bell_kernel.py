@@ -1,0 +1,74 @@
+"""Blocked-ELL Pallas kernel vs oracle and dense matmul (hypothesis
+over block geometry)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bell_spmm import (
+    bell_from_dense,
+    bell_ref,
+    bell_spmm,
+    mxu_utilization_estimate,
+)
+
+jax.config.update("jax_enable_x64", True)
+
+
+def random_block_matrix(rng, nbr, nbc, bs, block_density):
+    """Dense matrix whose nonzeros live in randomly chosen bs×bs blocks."""
+    a = np.zeros((nbr * bs, nbc * bs))
+    for i in range(nbr):
+        for j in range(nbc):
+            if rng.uniform() < block_density:
+                a[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs] = rng.uniform(
+                    -1, 1, size=(bs, bs)
+                )
+    # guarantee at least one block so mb >= 1 is honest
+    a[:bs, :bs] = rng.uniform(-1, 1, size=(bs, bs))
+    return a
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nbr=st.integers(1, 5),
+    bs=st.sampled_from([1, 2, 4, 8]),
+    d=st.integers(1, 17),
+    density=st.floats(0.1, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_dense_matmul(nbr, bs, d, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_block_matrix(rng, nbr, nbr, bs, density)
+    bcols, blocks = bell_from_dense(a, bs)
+    b = jnp.asarray(rng.uniform(-1, 1, size=(nbr * bs, d)))
+    got = bell_spmm(bcols, blocks, b)
+    want = jnp.asarray(a) @ b
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_matches_ref_with_extra_padding_slots():
+    rng = np.random.default_rng(3)
+    a = random_block_matrix(rng, 3, 3, 4, 0.5)
+    bcols, blocks = bell_from_dense(a, 4, mb=6)  # over-padded
+    b = jnp.asarray(rng.uniform(-1, 1, size=(12, 5)))
+    got = bell_spmm(bcols, blocks, b)
+    np.testing.assert_allclose(got, bell_ref(bcols, blocks, b), rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(got, jnp.asarray(a) @ b, rtol=1e-12, atol=1e-12)
+
+
+def test_rejects_bad_b_rows():
+    rng = np.random.default_rng(4)
+    a = random_block_matrix(rng, 2, 2, 4, 0.5)
+    bcols, blocks = bell_from_dense(a, 4)
+    b = jnp.zeros((9, 3))
+    with pytest.raises(ValueError, match="b rows"):
+        bell_spmm(bcols, blocks, b)
+
+
+def test_mxu_estimate_monotone():
+    assert mxu_utilization_estimate(128, 1.0) == 1.0
+    assert mxu_utilization_estimate(8, 1.0) < 0.01
+    assert mxu_utilization_estimate(64, 0.5) < mxu_utilization_estimate(64, 1.0)

@@ -1,0 +1,122 @@
+"""Layer-1 correctness: the Pallas ELL-SpMM kernel vs the pure-jnp
+oracle, with hypothesis sweeping shapes, dtypes and padding patterns.
+
+This is the CORE correctness signal for the compile path: everything
+the Rust runtime executes flows through this kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ell_spmm import choose_block_rows, ell_spmm, vmem_footprint_bytes
+from compile.kernels.ref import dense_spmm_ref, ell_spmm_ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_ell(rng, n, w, ncols, dtype, pad_fraction=0.3):
+    """Random padded-ELL arrays with ~pad_fraction zeroed slots."""
+    cols = rng.integers(0, ncols, size=(n, w)).astype(np.int32)
+    vals = rng.uniform(-1, 1, size=(n, w)).astype(dtype)
+    mask = rng.uniform(size=(n, w)) < pad_fraction
+    vals[mask] = 0.0
+    return jnp.asarray(cols), jnp.asarray(vals)
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+@pytest.mark.parametrize("n,w,d", [(8, 1, 1), (16, 4, 3), (32, 8, 16), (64, 3, 64)])
+def test_matches_reference_grid(dtype, n, w, d):
+    rng = np.random.default_rng(42)
+    cols, vals = make_ell(rng, n, w, n, dtype)
+    b = jnp.asarray(rng.uniform(-1, 1, size=(n, d)).astype(dtype))
+    got = ell_spmm(cols, vals, b, block_rows=n)
+    want = ell_spmm_ref(cols, vals, b)
+    tol = 1e-12 if dtype == np.float64 else 1e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+    assert got.dtype == dtype
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_tiles=st.integers(1, 4),
+    bt=st.sampled_from([4, 8, 16]),
+    w=st.integers(1, 9),
+    d=st.integers(1, 17),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_reference_hypothesis(n_tiles, bt, w, d, seed):
+    """Property: for every (grid, width, d), kernel == oracle."""
+    n = n_tiles * bt
+    rng = np.random.default_rng(seed)
+    cols, vals = make_ell(rng, n, w, n, np.float64)
+    b = jnp.asarray(rng.uniform(-1, 1, size=(n, d)))
+    got = ell_spmm(cols, vals, b, block_rows=bt)
+    want = ell_spmm_ref(cols, vals, b)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_equivalent_to_dense_matmul(seed):
+    """Property: scattering the ELL arrays into a dense A and doing a
+    dense matmul gives the same C (padding contributes nothing)."""
+    rng = np.random.default_rng(seed)
+    n, w, d = 24, 5, 7
+    cols, vals = make_ell(rng, n, w, n, np.float64)
+    b = jnp.asarray(rng.uniform(-1, 1, size=(n, d)))
+    a_dense = np.zeros((n, n))
+    for r in range(n):
+        for k in range(w):
+            a_dense[r, int(cols[r, k])] += float(vals[r, k])
+    got = ell_spmm(cols, vals, b, block_rows=n)
+    want = dense_spmm_ref(jnp.asarray(a_dense), b)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_rejects_indivisible_grid():
+    rng = np.random.default_rng(0)
+    cols, vals = make_ell(rng, 10, 2, 10, np.float64)
+    b = jnp.zeros((10, 4))
+    with pytest.raises(ValueError, match="not divisible"):
+        ell_spmm(cols, vals, b, block_rows=3)
+
+
+def test_grid_tiling_equivalence():
+    """Same input through different tilings -> identical output."""
+    rng = np.random.default_rng(7)
+    n, w, d = 64, 6, 8
+    cols, vals = make_ell(rng, n, w, n, np.float64)
+    b = jnp.asarray(rng.uniform(-1, 1, size=(n, d)))
+    outs = [
+        np.asarray(ell_spmm(cols, vals, b, block_rows=bt)) for bt in (8, 16, 32, 64)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+def test_all_padding_gives_zero():
+    n, w, d = 16, 4, 4
+    cols = jnp.zeros((n, w), jnp.int32)
+    vals = jnp.zeros((n, w), jnp.float64)
+    b = jnp.ones((n, d), jnp.float64)
+    out = ell_spmm(cols, vals, b, block_rows=n)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_vmem_footprint_within_budget():
+    """The auto-chosen tiling must fit a 16 MiB per-core VMEM budget at
+    every artifact shape (DESIGN.md §7)."""
+    for (n, w, d) in [(16384, 16, 1), (16384, 16, 64), (4096, 8, 16), (65536, 64, 64)]:
+        bt = choose_block_rows(n, w, d)
+        assert n % bt == 0
+        fp = vmem_footprint_bytes(bt, w, d, n)
+        assert fp <= 16 << 20, f"(n={n},w={w},d={d}): footprint {fp} exceeds budget"
+
+
+def test_choose_block_rows_prefers_whole_matrix_when_it_fits():
+    assert choose_block_rows(4096, 8, 16) == 4096
+    # huge d forces tiling
+    assert choose_block_rows(1 << 20, 64, 64) < (1 << 20)

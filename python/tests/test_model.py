@@ -1,0 +1,57 @@
+"""Layer-2 correctness: the JAX model graphs vs references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import ell_spmm_ref, gcn_layer_ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rand_problem(rng, n, w, d):
+    cols = jnp.asarray(rng.integers(0, n, size=(n, w)).astype(np.int32))
+    vals = jnp.asarray(rng.uniform(-1, 1, size=(n, w)))
+    b = jnp.asarray(rng.uniform(-1, 1, size=(n, d)))
+    return cols, vals, b
+
+
+def test_spmm_matches_ref():
+    rng = np.random.default_rng(1)
+    cols, vals, b = _rand_problem(rng, 32, 4, 8)
+    np.testing.assert_allclose(
+        model.spmm(cols, vals, b, block_rows=16),
+        ell_spmm_ref(cols, vals, b),
+        rtol=1e-12,
+        atol=1e-12,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dout=st.integers(1, 9))
+def test_gcn_layer_matches_ref(seed, dout):
+    rng = np.random.default_rng(seed)
+    n, w, d = 32, 3, 6
+    cols, vals, b = _rand_problem(rng, n, w, d)
+    wgt = jnp.asarray(rng.uniform(-1, 1, size=(d, dout)))
+    got = model.gcn_layer(cols, vals, b, wgt)
+    want = gcn_layer_ref(cols, vals, b, wgt)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+    assert bool(jnp.all(got >= 0.0))  # relu
+
+def test_entries_return_tuples():
+    rng = np.random.default_rng(3)
+    cols, vals, b = _rand_problem(rng, 16, 2, 4)
+    out = model.spmm_entry(cols, vals, b)
+    assert isinstance(out, tuple) and len(out) == 1
+    wgt = jnp.asarray(rng.uniform(-1, 1, size=(4, 4)))
+    out = model.gcn_entry(cols, vals, b, wgt)
+    assert isinstance(out, tuple) and len(out) == 1
+
+
+def test_spmm_is_f64_end_to_end():
+    rng = np.random.default_rng(4)
+    cols, vals, b = _rand_problem(rng, 16, 2, 4)
+    assert model.spmm(cols, vals, b, block_rows=16).dtype == jnp.float64

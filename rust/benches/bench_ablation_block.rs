@@ -1,0 +1,27 @@
+//! Bench A1: CSB block-size sweep — performance and the
+//! `z = t(1 − e^{−D/t})` occupancy statistics vs block dimension, on a
+//! blocked mesh and a uniform-random matrix.
+
+use spmm_roofline::config::ExperimentConfig;
+use spmm_roofline::harness::ablate_block_size;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cfg = ExperimentConfig {
+        scale: envf("REPRO_SCALE", 0.25),
+        iters: envf("REPRO_ITERS", 3.0) as usize,
+        warmup: 1,
+        ..Default::default()
+    };
+    let dims = [64usize, 256, 1024, 4096, 16384];
+    for matrix in ["road_usa_p", "er_18_10", "com_lj_p"] {
+        for d in [4usize, 64] {
+            let (t, _) =
+                ablate_block_size(&cfg, matrix, d, &dims).expect("block ablation failed");
+            println!("{}", t.to_text());
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Bench A3: thread scaling of the three native kernels.
+//!
+//! This testbed exposes a single physical core, so the sweep measures
+//! scheduling overhead rather than parallel speedup — documented as
+//! such in EXPERIMENTS.md (the paper used 64 threads on 64 cores).
+
+use spmm_roofline::config::ExperimentConfig;
+use spmm_roofline::harness::ablate_threads;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cfg = ExperimentConfig {
+        scale: envf("REPRO_SCALE", 0.25),
+        iters: envf("REPRO_ITERS", 3.0) as usize,
+        warmup: 1,
+        ..Default::default()
+    };
+    for matrix in ["er_18_10", "road_usa_p"] {
+        let t = ablate_threads(&cfg, matrix, 16, &[1, 2, 4, 8]).expect("thread ablation failed");
+        println!("{}", t.to_text());
+    }
+    println!(
+        "hardware threads available: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate the paper's Fig. 1 (GFLOP/s vs dense width d for
+//! one representative matrix per sparsity class).
+//!
+//! Uses a denser d grid than the paper's table so the curves are
+//! smooth. Writes `results/fig1_*.svg` + `results/fig1.csv`.
+
+use spmm_roofline::config::ExperimentConfig;
+use spmm_roofline::harness::run_fig1;
+use spmm_roofline::spmm::Impl;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cfg = ExperimentConfig {
+        scale: envf("REPRO_SCALE", 0.25),
+        iters: envf("REPRO_ITERS", 3.0) as usize,
+        warmup: 1,
+        d_values: vec![1, 2, 4, 8, 16, 32, 64],
+        ..Default::default()
+    };
+    eprintln!("bench_fig1: scale={} iters={}", cfg.scale, cfg.iters);
+    let data = run_fig1(&cfg).expect("fig1 sweep failed");
+    println!("{}", data.render().to_text());
+    data.save_svgs("results").expect("svg write failed");
+    data.save_csv("results/fig1.csv").expect("csv write failed");
+    println!("wrote results/fig1_*.svg and results/fig1.csv");
+
+    // the paper's headline observation: perf improves with d, peaking
+    // near d = 32..64
+    for (name, _, _) in &data.matrices {
+        for im in [Impl::Csr, Impl::Opt, Impl::Csb] {
+            if let Some(best) = data.best_d(name, im) {
+                println!("  best d for {name}/{im}: {best}");
+            }
+        }
+    }
+}

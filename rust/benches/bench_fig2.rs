@@ -1,0 +1,35 @@
+//! Bench: regenerate the paper's Fig. 2 (sparsity-aware roofline
+//! overlays: bandwidth roof, model-AI verticals, measured points).
+//!
+//! β and π are measured on this machine (STREAM + FMA loop) before the
+//! sweep. Writes `results/fig2_*.svg` + `results/fig2.csv`.
+
+use spmm_roofline::config::ExperimentConfig;
+use spmm_roofline::harness::{machine_params_cached, run_fig2};
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cfg = ExperimentConfig {
+        scale: envf("REPRO_SCALE", 0.25),
+        iters: envf("REPRO_ITERS", 3.0) as usize,
+        warmup: 1,
+        ..Default::default()
+    };
+    let machine = machine_params_cached(cfg.threads);
+    eprintln!(
+        "bench_fig2: scale={} β={:.1} GB/s π={:.0} GFLOP/s (paper: β=122.6)",
+        cfg.scale, machine.beta_gbs, machine.pi_gflops
+    );
+    let data = run_fig2(&cfg, Some(machine)).expect("fig2 sweep failed");
+    println!("{}", data.render().to_text());
+    println!("shape checks vs the paper's §IV-D claims:");
+    for (desc, ok) in data.shape_checks() {
+        println!("  [{}] {desc}", if ok { "PASS" } else { "FAIL" });
+    }
+    data.save_svgs("results").expect("svg write failed");
+    data.save_csv("results/fig2.csv").expect("csv write failed");
+    println!("wrote results/fig2_*.svg and results/fig2.csv");
+}

@@ -1,0 +1,24 @@
+//! Bench: the STREAM port + peak-FLOP loop that calibrate the
+//! roofline's β and π (the paper's §IV-B measured β = 122.6 GB/s on
+//! one EPYC-7763 socket).
+
+use spmm_roofline::membench::{peak_flops_gflops, stream_benchmark};
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    for len in [1usize << 20, 4 << 20, 16 << 20] {
+        let r = stream_benchmark(len, threads, 3);
+        println!(
+            "STREAM len={:>9} ({:>5.1} MiB/array): copy={:>7.2} scale={:>7.2} add={:>7.2} triad={:>7.2} GB/s",
+            len,
+            len as f64 * 8.0 / (1 << 20) as f64,
+            r.copy_gbs,
+            r.scale_gbs,
+            r.add_gbs,
+            r.triad_gbs
+        );
+    }
+    let pi = peak_flops_gflops(threads);
+    println!("peak FMA throughput: {pi:.2} GFLOP/s ({threads} threads)");
+    println!("paper reference: β=122.6 GB/s, π≈2509 GFLOP/s (64 cores)");
+}

@@ -1,0 +1,57 @@
+//! Bench: regenerate the paper's Table V (SpMM GFLOP/s across
+//! formats × d) on the proxy dataset.
+//!
+//! `REPRO_SCALE` (default 0.25) and `REPRO_ITERS` (default 3) tune
+//! runtime; `cargo bench --bench bench_table_v` writes
+//! `results/table_v.csv` alongside the printed table and the paper's
+//! shape checks.
+
+use spmm_roofline::config::ExperimentConfig;
+use spmm_roofline::harness::{paper_table_v, run_table_v};
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cfg = ExperimentConfig {
+        scale: envf("REPRO_SCALE", 0.25),
+        iters: envf("REPRO_ITERS", 3.0) as usize,
+        warmup: 1,
+        ..Default::default()
+    };
+    eprintln!(
+        "bench_table_v: scale={} iters={} threads={}",
+        cfg.scale, cfg.iters, cfg.threads
+    );
+    let data = run_table_v(&cfg).expect("table v sweep failed");
+    println!("{}", data.render(&cfg).to_text());
+    println!("shape checks vs the paper's §IV-C claims:");
+    for (desc, ok) in data.shape_checks(&cfg) {
+        println!("  [{}] {desc}", if ok { "PASS" } else { "FAIL" });
+    }
+    data.save_csv("results/table_v.csv").expect("csv write failed");
+    println!("wrote results/table_v.csv");
+
+    // side-by-side with the paper for representative cells
+    let paper = paper_table_v();
+    println!("\npaper-vs-proxy spot cells (GFLOP/s — absolute numbers differ, shape should hold):");
+    for (name, proxy_name) in [
+        ("road_usa", "road_usa_p"),
+        ("com-LiveJournal", "com_lj_p"),
+        ("rajat31", "rajat31_p"),
+        ("er_22_10", "er_18_10"),
+    ] {
+        for d in [1usize, 64] {
+            let p = paper
+                .iter()
+                .find(|(n, dd, im, _)| *n == name && *dd == d && *im == "CSB")
+                .map(|x| x.3)
+                .unwrap_or(0.0);
+            let ours = data
+                .get(proxy_name, d, spmm_roofline::spmm::Impl::Csb)
+                .unwrap_or(0.0);
+            println!("  {name:>18} d={d:<3} CSB paper={p:>8.2} ours={ours:>8.2}");
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Bench: the XLA/PJRT request path vs the native kernels on the same
+//! arrays.
+//!
+//! Loads the AOT artifacts (`make artifacts` first), stages an ELL
+//! matrix matching the artifacts' static shape, and measures SpMM
+//! GFLOP/s end-to-end through PJRT (including the B-in / C-out literal
+//! transfers a request pays) against the native ELL and CSR kernels.
+
+use spmm_roofline::gen::{erdos_renyi, Prng};
+use spmm_roofline::harness::measure_kernel;
+use spmm_roofline::runtime::{ArtifactManifest, XlaRuntime, XlaSpmm};
+use spmm_roofline::sparse::{Coo, Csr};
+use spmm_roofline::spmm::{CsrSpmm, EllSpmm};
+
+/// Keep at most `width` nonzeros per row (the artifact's static slot
+/// budget) — preserves the random access pattern.
+fn truncate_rows(a: &Csr, width: usize) -> Csr {
+    let mut coo = Coo::with_capacity(a.nrows, a.ncols, a.nnz());
+    for r in 0..a.nrows {
+        for (k, (c, v)) in a.row_cols(r).iter().zip(a.row_vals(r)).enumerate() {
+            if k >= width {
+                break;
+            }
+            coo.push(r, *c as usize, *v);
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+fn main() {
+    let manifest = match ArtifactManifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("bench_xla skipped: {e}");
+            return;
+        }
+    };
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    eprintln!("bench_xla: platform={}", rt.platform());
+
+    let n = 16384usize;
+    let width = 16usize;
+    let mut rng = Prng::new(0xA17);
+    let a = truncate_rows(&erdos_renyi(n, n, 10.0, &mut rng), width);
+    assert!(a.max_row_len() <= width);
+
+    println!("matrix: er n={n} nnz={} (truncated to width {width})", a.nnz());
+    println!(
+        "{:>4}  {:>10} {:>10} {:>10}  {:>8}",
+        "d", "XLA GF/s", "ELL GF/s", "CSR GF/s", "XLA/ELL"
+    );
+    for d in [1usize, 4, 16, 64] {
+        let spec = match manifest.find_ell(n, width, d) {
+            Some(s) => s,
+            None => {
+                eprintln!("  no artifact for d={d}, skipping");
+                continue;
+            }
+        };
+        let xla = XlaSpmm::from_csr(&rt, spec, &a).expect("stage artifact");
+        let ell = EllSpmm::from_csr(&a, 1);
+        let csr = CsrSpmm::new(a.clone(), 1);
+        let mx = measure_kernel(&xla, d, 3, 1);
+        let me = measure_kernel(&ell, d, 3, 1);
+        let mc = measure_kernel(&csr, d, 3, 1);
+        println!(
+            "{d:>4}  {:>10.3} {:>10.3} {:>10.3}  {:>8.2}",
+            mx.gflops,
+            me.gflops,
+            mc.gflops,
+            mx.gflops / me.gflops
+        );
+    }
+    println!("\nnote: XLA time includes per-request literal transfers (B in, C out);");
+    println!("the native ELL row shares the identical padded arrays.");
+}

@@ -1,0 +1,202 @@
+//! Inclusive L1→L2→L3→DRAM hierarchy with per-level counters and a
+//! DRAM-byte total.
+
+use crate::cachesim::cache::{Cache, CacheConfig, CacheStats};
+
+/// Geometry of the simulated hierarchy.
+#[derive(Debug, Clone, Copy)]
+pub struct HierarchyConfig {
+    pub l1: CacheConfig,
+    pub l2: CacheConfig,
+    pub l3: CacheConfig,
+}
+
+impl HierarchyConfig {
+    /// One EPYC-7763 core's slice of the paper's test system
+    /// (Table IV): 32 KiB 8-way L1D, 512 KiB 8-way L2, and a
+    /// per-core-appropriate 32 MiB 16-way slice of the 256 MiB L3.
+    pub fn epyc7763_core() -> HierarchyConfig {
+        HierarchyConfig {
+            l1: CacheConfig { size_bytes: 32 << 10, line_bytes: 64, ways: 8 },
+            l2: CacheConfig { size_bytes: 512 << 10, line_bytes: 64, ways: 8 },
+            l3: CacheConfig { size_bytes: 32 << 20, line_bytes: 64, ways: 16 },
+        }
+    }
+
+    /// Smaller hierarchy for fast simulation in tests.
+    pub fn tiny() -> HierarchyConfig {
+        HierarchyConfig {
+            l1: CacheConfig { size_bytes: 4 << 10, line_bytes: 64, ways: 4 },
+            l2: CacheConfig { size_bytes: 32 << 10, line_bytes: 64, ways: 8 },
+            l3: CacheConfig { size_bytes: 256 << 10, line_bytes: 64, ways: 8 },
+        }
+    }
+}
+
+/// Traffic summary after a replay.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficReport {
+    pub l1: CacheStats,
+    pub l2: CacheStats,
+    pub l3: CacheStats,
+    /// Total bytes fetched from DRAM (L3-miss lines × line size +
+    /// write-backs modeled as write-through streaming stores).
+    pub dram_bytes: u64,
+    /// Total bytes the kernel logically touched (accesses × access
+    /// width).
+    pub logical_bytes: u64,
+}
+
+impl TrafficReport {
+    /// DRAM bytes / logical bytes — below 1.0 when caches filter
+    /// traffic.
+    pub fn traffic_ratio(&self) -> f64 {
+        if self.logical_bytes == 0 {
+            0.0
+        } else {
+            self.dram_bytes as f64 / self.logical_bytes as f64
+        }
+    }
+}
+
+/// The simulated hierarchy. Reads walk L1→L2→L3; a miss at every level
+/// charges one DRAM line. Stores are modeled as write-allocate reads
+/// plus a DRAM write-back charge per evicted... simplified: streaming
+/// stores charge their bytes directly to DRAM once per line via a
+/// dedicated store-line tracker (SpMM writes C exactly once, so
+/// write-allocate vs streaming only shifts a constant).
+pub struct Hierarchy {
+    pub l1: Cache,
+    pub l2: Cache,
+    pub l3: Cache,
+    line_bytes: u64,
+    dram_bytes: u64,
+    logical_bytes: u64,
+    /// last store line, to coalesce sequential store traffic
+    last_store_line: u64,
+}
+
+impl Hierarchy {
+    pub fn new(cfg: HierarchyConfig) -> Hierarchy {
+        assert_eq!(cfg.l1.line_bytes, cfg.l2.line_bytes);
+        assert_eq!(cfg.l1.line_bytes, cfg.l3.line_bytes);
+        Hierarchy {
+            line_bytes: cfg.l1.line_bytes as u64,
+            l1: Cache::new(cfg.l1),
+            l2: Cache::new(cfg.l2),
+            l3: Cache::new(cfg.l3),
+            dram_bytes: 0,
+            logical_bytes: 0,
+            last_store_line: u64::MAX,
+        }
+    }
+
+    /// Simulate a load of `bytes` starting at `addr` (split across
+    /// lines as needed).
+    #[inline]
+    pub fn load(&mut self, addr: u64, bytes: u32) {
+        self.logical_bytes += bytes as u64;
+        let first = addr >> self.line_bytes.trailing_zeros();
+        let last = (addr + bytes as u64 - 1) >> self.line_bytes.trailing_zeros();
+        for line in first..=last {
+            let a = line << self.line_bytes.trailing_zeros();
+            if !self.l1.access(a) && !self.l2.access(a) && !self.l3.access(a) {
+                self.dram_bytes += self.line_bytes;
+            }
+        }
+    }
+
+    /// Simulate a store of `bytes` at `addr`: charged to DRAM once per
+    /// line (streaming-store model; C is written exactly once in SpMM).
+    #[inline]
+    pub fn store(&mut self, addr: u64, bytes: u32) {
+        self.logical_bytes += bytes as u64;
+        let shift = self.line_bytes.trailing_zeros();
+        let first = addr >> shift;
+        let last = (addr + bytes as u64 - 1) >> shift;
+        for line in first..=last {
+            if line != self.last_store_line {
+                self.dram_bytes += self.line_bytes;
+                self.last_store_line = line;
+            }
+        }
+    }
+
+    /// Charge bytes straight to DRAM without touching the caches
+    /// (used for end-of-kernel write-back accounting).
+    pub fn charge_dram(&mut self, bytes: u64) {
+        self.dram_bytes += bytes;
+    }
+
+    /// Counters so far.
+    pub fn report(&self) -> TrafficReport {
+        TrafficReport {
+            l1: self.l1.stats,
+            l2: self.l2.stats,
+            l3: self.l3.stats,
+            dram_bytes: self.dram_bytes,
+            logical_bytes: self.logical_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_cascade_charges_dram_once() {
+        let mut h = Hierarchy::new(HierarchyConfig::tiny());
+        h.load(0, 8);
+        let r = h.report();
+        assert_eq!(r.l1.misses, 1);
+        assert_eq!(r.l2.misses, 1);
+        assert_eq!(r.l3.misses, 1);
+        assert_eq!(r.dram_bytes, 64);
+        // second access: L1 hit, nothing moves
+        h.load(8, 8);
+        let r = h.report();
+        assert_eq!(r.dram_bytes, 64);
+        assert_eq!(r.l1.misses, 1);
+    }
+
+    #[test]
+    fn straddling_load_touches_two_lines() {
+        let mut h = Hierarchy::new(HierarchyConfig::tiny());
+        h.load(60, 8); // crosses 64B boundary
+        assert_eq!(h.report().dram_bytes, 128);
+    }
+
+    #[test]
+    fn l2_catches_l1_evictions() {
+        let mut h = Hierarchy::new(HierarchyConfig::tiny());
+        // stream 8 KiB (2× L1) twice: second pass should hit L2
+        for addr in (0..8192u64).step_by(64) {
+            h.load(addr, 8);
+        }
+        let after_first = h.report().dram_bytes;
+        for addr in (0..8192u64).step_by(64) {
+            h.load(addr, 8);
+        }
+        let r = h.report();
+        assert_eq!(r.dram_bytes, after_first, "second pass served from L2/L3");
+        assert!(r.l2.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn sequential_stores_coalesce() {
+        let mut h = Hierarchy::new(HierarchyConfig::tiny());
+        for i in 0..8u64 {
+            h.store(i * 8, 8);
+        }
+        assert_eq!(h.report().dram_bytes, 64);
+    }
+
+    #[test]
+    fn traffic_ratio() {
+        let mut h = Hierarchy::new(HierarchyConfig::tiny());
+        h.load(0, 64);
+        let r = h.report();
+        assert!((r.traffic_ratio() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,17 @@
+//! Cache-hierarchy simulator.
+//!
+//! The paper *infers* memory traffic analytically; we additionally
+//! *measure* it by replaying the exact address stream of each SpMM
+//! kernel through a set-associative LRU L1/L2/L3 hierarchy and counting
+//! DRAM-line fills. This is the V1 experiment of DESIGN.md: modeled
+//! bytes (Eqs. 2–4 denominators) vs simulated DRAM bytes, per pattern —
+//! which separates "model error" from "implementation inefficiency",
+//! the confound the paper's §V limitations call out.
+
+mod cache;
+mod hierarchy;
+mod trace;
+
+pub use cache::{Cache, CacheConfig, CacheStats};
+pub use hierarchy::{Hierarchy, HierarchyConfig, TrafficReport};
+pub use trace::{trace_csb_spmm, trace_csr_spmm, SpmmLayout};

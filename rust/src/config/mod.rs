@@ -1,0 +1,170 @@
+//! Experiment configuration: a TOML-subset parser (serde is
+//! unavailable offline) and the typed config structs the harness and
+//! CLI consume.
+
+mod toml_lite;
+
+pub use toml_lite::{TomlLite, TomlValue};
+
+use crate::error::{Error, Result};
+use crate::spmm::Impl;
+use std::path::Path;
+
+/// Configuration for a full experiment run (Table V / Fig. 1 / Fig. 2
+/// sweeps). Defaults reproduce the paper's settings scaled to this
+/// testbed; a TOML-lite file and/or CLI flags override.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Global matrix scale multiplier (1.0 = DESIGN.md §6 sizes).
+    pub scale: f64,
+    /// Dense widths to sweep — the paper uses {1, 4, 16, 64}.
+    pub d_values: Vec<usize>,
+    /// Worker threads per kernel execution.
+    pub threads: usize,
+    /// Implementations to benchmark.
+    pub impls: Vec<Impl>,
+    /// Timed iterations per cell (median reported).
+    pub iters: usize,
+    /// Warmup iterations per cell.
+    pub warmup: usize,
+    /// Output directory for CSV/SVG/markdown artifacts.
+    pub out_dir: String,
+    /// Include the XLA/PJRT implementation where artifacts exist.
+    pub use_xla: bool,
+    /// Artifacts directory (HLO text + manifest).
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            scale: 1.0,
+            d_values: vec![1, 4, 16, 64],
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+            iters: 5,
+            warmup: 1,
+            out_dir: "results".into(),
+            use_xla: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-lite file, applying values over the defaults.
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_text(&text)
+    }
+
+    /// Parse from TOML-lite text.
+    pub fn from_toml_text(text: &str) -> Result<Self> {
+        let t = TomlLite::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = t.get_f64("scale")? {
+            cfg.scale = v;
+        }
+        if let Some(v) = t.get_usize_array("d_values")? {
+            cfg.d_values = v;
+        }
+        if let Some(v) = t.get_f64("threads")? {
+            cfg.threads = v as usize;
+        }
+        if let Some(v) = t.get_f64("iters")? {
+            cfg.iters = v as usize;
+        }
+        if let Some(v) = t.get_f64("warmup")? {
+            cfg.warmup = v as usize;
+        }
+        if let Some(v) = t.get_str("out_dir")? {
+            cfg.out_dir = v.to_string();
+        }
+        if let Some(v) = t.get_str("artifacts_dir")? {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = t.get_bool("use_xla")? {
+            cfg.use_xla = v;
+        }
+        if let Some(list) = t.get_str_array("impls")? {
+            cfg.impls = list
+                .iter()
+                .map(|s| parse_impl(s))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check field values.
+    pub fn validate(&self) -> Result<()> {
+        if self.scale <= 0.0 {
+            return Err(Error::Config("scale must be > 0".into()));
+        }
+        if self.d_values.is_empty() || self.d_values.iter().any(|&d| d == 0 || d > 4096) {
+            return Err(Error::Config("d_values must be nonempty, each in 1..=4096".into()));
+        }
+        if self.threads == 0 || self.iters == 0 {
+            return Err(Error::Config("threads and iters must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Parse an implementation name (paper or internal spelling).
+pub fn parse_impl(s: &str) -> Result<Impl> {
+    match s.to_ascii_uppercase().as_str() {
+        "CSR" => Ok(Impl::Csr),
+        "OPT" | "MKL" => Ok(Impl::Opt),
+        "CSB" => Ok(Impl::Csb),
+        "ELL" => Ok(Impl::Ell),
+        "BSR" => Ok(Impl::Bsr),
+        "XLA" => Ok(Impl::Xla),
+        other => Err(Error::Config(format!("unknown impl '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_settings() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.d_values, vec![1, 4, 16, 64]);
+        assert_eq!(c.impls, vec![Impl::Csr, Impl::Opt, Impl::Csb]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_overrides() {
+        let text = r#"
+# experiment overrides
+scale = 0.5
+d_values = [1, 8]
+impls = ["CSR", "MKL", "ELL"]
+out_dir = "out"
+use_xla = true
+"#;
+        let c = ExperimentConfig::from_toml_text(text).unwrap();
+        assert_eq!(c.scale, 0.5);
+        assert_eq!(c.d_values, vec![1, 8]);
+        assert_eq!(c.impls, vec![Impl::Csr, Impl::Opt, Impl::Ell]);
+        assert_eq!(c.out_dir, "out");
+        assert!(c.use_xla);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ExperimentConfig::from_toml_text("scale = -1").is_err());
+        assert!(ExperimentConfig::from_toml_text("d_values = []").is_err());
+        assert!(ExperimentConfig::from_toml_text("impls = [\"NOPE\"]").is_err());
+    }
+
+    #[test]
+    fn impl_aliases() {
+        assert_eq!(parse_impl("mkl").unwrap(), Impl::Opt);
+        assert_eq!(parse_impl("csb").unwrap(), Impl::Csb);
+        assert!(parse_impl("??").is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! A TOML-subset parser: top-level `key = value` pairs, `[section]`
+//! headers flattened to `section.key`, comments, strings, numbers,
+//! booleans, and flat arrays of strings/numbers. Exactly what the
+//! config files need — nothing more.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+/// A parsed document: flattened dotted keys → values.
+#[derive(Debug, Clone, Default)]
+pub struct TomlLite {
+    map: BTreeMap<String, TomlValue>,
+}
+
+impl TomlLite {
+    /// Parse a document. Fails with a line-numbered message.
+    pub fn parse(text: &str) -> Result<TomlLite> {
+        let mut map = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(section) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                prefix = section.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Parse(format!("line {}: expected 'key = value'", lineno + 1))
+            })?;
+            let key = if prefix.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{prefix}.{}", k.trim())
+            };
+            let value = parse_value(v.trim())
+                .map_err(|e| Error::Parse(format!("line {}: {e}", lineno + 1)))?;
+            map.insert(key, value);
+        }
+        Ok(TomlLite { map })
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.map.get(key)
+    }
+
+    /// All flattened keys in sorted order.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    /// Distinct `[section]` names, in first-seen (sorted) order.
+    pub fn sections(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for k in self.map.keys() {
+            if let Some((sec, _)) = k.split_once('.') {
+                if out.last().map(|s| s.as_str()) != Some(sec) {
+                    out.push(sec.to_string());
+                }
+            }
+        }
+        out.dedup();
+        out
+    }
+
+    /// Typed lookups — `Ok(None)` when absent, `Err` on wrong type.
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Num(x)) => Ok(Some(*x)),
+            Some(v) => Err(Error::Parse(format!("{key}: expected number, got {v:?}"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Bool(b)) => Ok(Some(*b)),
+            Some(v) => Err(Error::Parse(format!("{key}: expected bool, got {v:?}"))),
+        }
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<Option<&str>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Str(s)) => Ok(Some(s)),
+            Some(v) => Err(Error::Parse(format!("{key}: expected string, got {v:?}"))),
+        }
+    }
+
+    pub fn get_usize_array(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Array(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Ok(*x as usize),
+                    other => {
+                        Err(Error::Parse(format!("{key}: expected integer, got {other:?}")))
+                    }
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+            Some(v) => Err(Error::Parse(format!("{key}: expected array, got {v:?}"))),
+        }
+    }
+
+    pub fn get_str_array(&self, key: &str) -> Result<Option<Vec<String>>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Array(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Str(s) => Ok(s.clone()),
+                    other => Err(Error::Parse(format!("{key}: expected string, got {other:?}"))),
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+            Some(v) => Err(Error::Parse(format!("{key}: expected array, got {v:?}"))),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // honor '#' outside quotes
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = split_array_items(inner)?;
+        let vals = items
+            .iter()
+            .map(|it| parse_value(it.trim()))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Array(vals));
+    }
+    s.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+fn split_array_items(s: &str) -> std::result::Result<Vec<String>, String> {
+    let mut items = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for ch in s.chars() {
+        match ch {
+            '"' => {
+                in_str = !in_str;
+                cur.push(ch);
+            }
+            ',' if !in_str => {
+                items.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur);
+    }
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let t = TomlLite::parse("a = 1.5\nb = \"hi\"\nc = true\n").unwrap();
+        assert_eq!(t.get_f64("a").unwrap(), Some(1.5));
+        assert_eq!(t.get_str("b").unwrap(), Some("hi"));
+        assert_eq!(t.get_bool("c").unwrap(), Some(true));
+        assert_eq!(t.get_f64("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn parses_arrays_and_sections() {
+        let t = TomlLite::parse("[exp]\nds = [1, 2, 3]\nnames = [\"x\", \"y\"]\n").unwrap();
+        assert_eq!(t.get_usize_array("exp.ds").unwrap(), Some(vec![1, 2, 3]));
+        assert_eq!(
+            t.get_str_array("exp.names").unwrap(),
+            Some(vec!["x".into(), "y".into()])
+        );
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let t = TomlLite::parse("a = 1 # trailing\ns = \"a#b\"\n").unwrap();
+        assert_eq!(t.get_f64("a").unwrap(), Some(1.0));
+        assert_eq!(t.get_str("s").unwrap(), Some("a#b"));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = TomlLite::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn type_errors() {
+        let t = TomlLite::parse("a = \"s\"\narr = [1, \"x\"]\n").unwrap();
+        assert!(t.get_f64("a").is_err());
+        assert!(t.get_usize_array("arr").is_err());
+    }
+
+    #[test]
+    fn fractional_in_usize_array_rejected() {
+        let t = TomlLite::parse("xs = [1.5]\n").unwrap();
+        assert!(t.get_usize_array("xs").is_err());
+    }
+}

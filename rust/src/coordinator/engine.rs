@@ -1,0 +1,288 @@
+//! The engine: classify → predict → route → execute → learn.
+
+use crate::error::{Error, Result};
+use crate::membench;
+use crate::metrics::{bench_adaptive, gflops, spmm_flops};
+use crate::model::{MachineParams, Roofline};
+use crate::coordinator::job::{JobRecord, JobSpec, PredictionReport};
+use crate::coordinator::planner::Planner;
+use crate::coordinator::registry::MatrixRegistry;
+use crate::gen::Prng;
+use crate::runtime::{ArtifactManifest, XlaRuntime};
+use crate::sparse::Csr;
+use crate::spmm::{DenseMatrix, Impl};
+
+/// Engine construction options.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads per kernel execution.
+    pub threads: usize,
+    /// Calibrate β/π by measurement (`None`) or inject known machine
+    /// parameters (tests; avoids a multi-second STREAM run).
+    pub machine: Option<MachineParams>,
+    /// Timed iterations per job (median reported).
+    pub iters: usize,
+    /// Warmup iterations per job.
+    pub warmup: usize,
+    /// Native implementations prepared at registration.
+    pub impls: Vec<Impl>,
+    /// Attach XLA artifacts from this directory when present.
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            machine: None,
+            iters: 3,
+            warmup: 1,
+            impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+            artifacts_dir: Some("artifacts".into()),
+        }
+    }
+}
+
+/// The roofline-guided SpMM engine (see module docs).
+pub struct Engine {
+    registry: MatrixRegistry,
+    planner: Planner,
+    config: EngineConfig,
+    xla: Option<(XlaRuntime, ArtifactManifest)>,
+    history: Vec<JobRecord>,
+    rng: Prng,
+}
+
+impl Engine {
+    /// Build an engine: calibrates the machine roofline unless one was
+    /// injected, and probes the artifact directory for the XLA
+    /// backend.
+    pub fn new(config: EngineConfig) -> Result<Engine> {
+        let machine = match config.machine {
+            Some(m) => m,
+            None => membench::measure_machine(config.threads),
+        };
+        let planner = Planner::new(Roofline::new(machine));
+        let xla = match &config.artifacts_dir {
+            Some(dir) => match ArtifactManifest::load(dir) {
+                Ok(manifest) => match XlaRuntime::cpu() {
+                    Ok(rt) => Some((rt, manifest)),
+                    Err(_) => None,
+                },
+                Err(_) => None, // artifacts not built — native-only mode
+            },
+            None => None,
+        };
+        Ok(Engine {
+            registry: MatrixRegistry::new(config.threads),
+            planner,
+            config,
+            xla,
+            history: Vec::new(),
+            rng: Prng::new(0x5eed),
+        })
+    }
+
+    /// The machine parameters the roofline uses.
+    pub fn machine(&self) -> MachineParams {
+        self.planner.roofline().machine
+    }
+
+    /// Whether the XLA backend is live.
+    pub fn has_xla(&self) -> bool {
+        self.xla.is_some()
+    }
+
+    /// Register a matrix under a name; prepares the configured native
+    /// kernels and stages matching XLA artifacts.
+    pub fn register(&mut self, name: &str, csr: Csr) -> Result<()> {
+        let impls = self.config.impls.clone();
+        self.registry.register(name, csr, &impls)?;
+        if let Some((rt, manifest)) = &self.xla {
+            // staging failure (no fitting artifact) is not an error
+            let _ = self.registry.attach_xla(name, rt, manifest);
+        }
+        Ok(())
+    }
+
+    /// Planner access (reports).
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// Registry access (reports).
+    pub fn registry(&self) -> &MatrixRegistry {
+        &self.registry
+    }
+
+    /// Execute a job: route to the predicted-best implementation (or
+    /// the forced one), measure, and fold the measurement back into
+    /// the planner's priors.
+    pub fn submit(&mut self, job: &JobSpec) -> Result<JobRecord> {
+        let entry = self
+            .registry
+            .get(&job.matrix)
+            .ok_or_else(|| Error::Usage(format!("matrix '{}' not registered", job.matrix)))?;
+        let cls = entry.classification.clone();
+        let available = entry.available(job.d);
+        if available.is_empty() {
+            return Err(Error::Usage(format!(
+                "no kernels available for '{}' at d={}",
+                job.matrix, job.d
+            )));
+        }
+        let chosen = match job.force_impl {
+            Some(im) => {
+                if !available.contains(&im) {
+                    return Err(Error::Usage(format!(
+                        "impl {im} not prepared for '{}' at d={} (have {:?})",
+                        job.matrix, job.d, available
+                    )));
+                }
+                self.planner.predict(&cls, job.d, im)
+            }
+            None => self.planner.rank(&cls, job.d, &available)[0],
+        };
+
+        let kernel = entry.kernel(chosen.im, job.d).expect("available impl must have kernel");
+        let n = kernel.ncols();
+        let b = DenseMatrix::random(n, job.d, &mut self.rng);
+        let mut c = DenseMatrix::zeros(kernel.nrows(), job.d);
+        // surface kernel errors before timing
+        kernel.execute(&b, &mut c)?;
+        let r = bench_adaptive(self.config.warmup, self.config.iters, self.config.iters * 4, 0.2, |_| {
+            kernel.execute(&b, &mut c).expect("kernel failed mid-benchmark");
+        });
+        let secs = r.median_secs();
+        let flops = spmm_flops(kernel.nnz(), job.d);
+        let measured = gflops(flops, secs);
+
+        self.planner.observe(cls.class, chosen.im, chosen.ai, measured);
+        let record = JobRecord {
+            matrix: job.matrix.clone(),
+            class: cls.class,
+            d: job.d,
+            chosen: chosen.im,
+            predicted_gflops: chosen.predicted_gflops,
+            ai: chosen.ai,
+            secs,
+            measured_gflops: measured,
+        };
+        self.history.push(record.clone());
+        Ok(record)
+    }
+
+    /// Run a batch of jobs in order, stopping at the first hard error.
+    pub fn run_batch(&mut self, jobs: &[JobSpec]) -> Result<Vec<JobRecord>> {
+        jobs.iter().map(|j| self.submit(j)).collect()
+    }
+
+    /// Every record executed so far.
+    pub fn history(&self) -> &[JobRecord] {
+        &self.history
+    }
+
+    /// Prediction-accuracy summary, including the routing hit rate
+    /// over (matrix, d) groups where multiple impls were measured.
+    pub fn prediction_report(&self) -> PredictionReport {
+        let mut rep = PredictionReport::of(&self.history);
+        // routing hit rate: for groups with >1 impls, did the planner's
+        // choice (first non-forced record) match the measured best?
+        use std::collections::HashMap;
+        let mut groups: HashMap<(String, usize), Vec<&JobRecord>> = HashMap::new();
+        for r in &self.history {
+            groups.entry((r.matrix.clone(), r.d)).or_default().push(r);
+        }
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for (_, rs) in groups {
+            if rs.len() < 2 {
+                continue;
+            }
+            let best = rs
+                .iter()
+                .max_by(|a, b| a.measured_gflops.partial_cmp(&b.measured_gflops).unwrap())
+                .unwrap();
+            // what would the planner pick now?
+            let impls: Vec<Impl> = rs.iter().map(|r| r.chosen).collect();
+            if let Some(entry) = self.registry.get(&best.matrix) {
+                let pick = self.planner.rank(&entry.classification, best.d, &impls)[0].im;
+                total += 1;
+                if pick == best.chosen {
+                    hits += 1;
+                }
+            }
+        }
+        if total > 0 {
+            rep.routing_hit_rate = Some(hits as f64 / total as f64);
+        }
+        rep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, mesh2d, MeshKind, Prng};
+
+    fn test_engine() -> Engine {
+        Engine::new(EngineConfig {
+            threads: 2,
+            machine: Some(MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 }),
+            iters: 2,
+            warmup: 0,
+            impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+            artifacts_dir: None,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn submit_routes_and_measures() {
+        let mut e = test_engine();
+        let a = erdos_renyi(500, 500, 6.0, &mut Prng::new(180));
+        e.register("er", a).unwrap();
+        let rec = e.submit(&JobSpec::new("er", 8)).unwrap();
+        assert!(rec.measured_gflops > 0.0);
+        assert!(rec.ai > 0.0);
+        assert_eq!(rec.matrix, "er");
+        assert_eq!(e.history().len(), 1);
+    }
+
+    #[test]
+    fn forced_impl_respected() {
+        let mut e = test_engine();
+        let a = mesh2d(32, MeshKind::Road, 0.6, &mut Prng::new(181));
+        e.register("mesh", a).unwrap();
+        for im in [Impl::Csr, Impl::Opt, Impl::Csb] {
+            let rec = e.submit(&JobSpec::new("mesh", 4).with_impl(im)).unwrap();
+            assert_eq!(rec.chosen, im);
+        }
+        let rep = e.prediction_report();
+        assert_eq!(rep.n_jobs, 3);
+        assert!(rep.routing_hit_rate.is_some());
+    }
+
+    #[test]
+    fn unknown_matrix_and_impl_errors() {
+        let mut e = test_engine();
+        assert!(e.submit(&JobSpec::new("ghost", 4)).is_err());
+        let a = erdos_renyi(100, 100, 3.0, &mut Prng::new(182));
+        e.register("m", a).unwrap();
+        assert!(e.submit(&JobSpec::new("m", 4).with_impl(Impl::Xla)).is_err());
+    }
+
+    #[test]
+    fn priors_learn_from_history() {
+        let mut e = test_engine();
+        let a = erdos_renyi(400, 400, 5.0, &mut Prng::new(183));
+        e.register("m", a).unwrap();
+        let cls = e.registry().get("m").unwrap().classification.clone();
+        let before = e.planner().prior(cls.class, Impl::Csr);
+        for _ in 0..4 {
+            e.submit(&JobSpec::new("m", 4).with_impl(Impl::Csr)).unwrap();
+        }
+        let after = e.planner().prior(cls.class, Impl::Csr);
+        assert_ne!(before, after);
+    }
+}

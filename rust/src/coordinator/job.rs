@@ -1,0 +1,140 @@
+//! Job and result types for the engine.
+
+use crate::gen::SparsityClass;
+use crate::spmm::Impl;
+
+/// A unit of work: multiply registered matrix `matrix` by a dense
+/// matrix with `d` columns.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Name the matrix was registered under.
+    pub matrix: String,
+    /// Dense width.
+    pub d: usize,
+    /// Force a specific implementation (None = let the planner
+    /// route).
+    pub force_impl: Option<Impl>,
+}
+
+impl JobSpec {
+    pub fn new(matrix: impl Into<String>, d: usize) -> JobSpec {
+        JobSpec { matrix: matrix.into(), d, force_impl: None }
+    }
+
+    pub fn with_impl(mut self, im: Impl) -> JobSpec {
+        self.force_impl = Some(im);
+        self
+    }
+}
+
+/// Outcome of one executed job.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub matrix: String,
+    pub class: SparsityClass,
+    pub d: usize,
+    /// Implementation the job ran on.
+    pub chosen: Impl,
+    /// Planner's predicted GFLOP/s for the chosen implementation.
+    pub predicted_gflops: f64,
+    /// Model arithmetic intensity used for the prediction.
+    pub ai: f64,
+    /// Measured wall-clock seconds (median over the job's
+    /// iterations).
+    pub secs: f64,
+    /// Measured GFLOP/s.
+    pub measured_gflops: f64,
+}
+
+impl JobRecord {
+    /// measured / predicted — 1.0 is a perfect prediction.
+    pub fn prediction_ratio(&self) -> f64 {
+        if self.predicted_gflops <= 0.0 {
+            0.0
+        } else {
+            self.measured_gflops / self.predicted_gflops
+        }
+    }
+}
+
+/// Aggregate prediction accuracy over a set of records.
+#[derive(Debug, Clone)]
+pub struct PredictionReport {
+    pub n_jobs: usize,
+    /// Geometric mean of measured/predicted.
+    pub geomean_ratio: f64,
+    /// Mean absolute relative error of log-ratio.
+    pub mean_abs_log_err: f64,
+    /// Fraction of jobs where the chosen impl was measured-best among
+    /// the impls actually tried for the same (matrix, d). Only
+    /// meaningful when jobs sweep impls.
+    pub routing_hit_rate: Option<f64>,
+}
+
+impl PredictionReport {
+    /// Summarise a slice of job records.
+    pub fn of(records: &[JobRecord]) -> PredictionReport {
+        let n = records.len();
+        if n == 0 {
+            return PredictionReport {
+                n_jobs: 0,
+                geomean_ratio: 0.0,
+                mean_abs_log_err: 0.0,
+                routing_hit_rate: None,
+            };
+        }
+        let mut log_sum = 0.0;
+        let mut abs_log = 0.0;
+        for r in records {
+            let ratio = r.prediction_ratio().max(1e-12);
+            log_sum += ratio.ln();
+            abs_log += ratio.ln().abs();
+        }
+        PredictionReport {
+            n_jobs: n,
+            geomean_ratio: (log_sum / n as f64).exp(),
+            mean_abs_log_err: abs_log / n as f64,
+            routing_hit_rate: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(pred: f64, meas: f64) -> JobRecord {
+        JobRecord {
+            matrix: "m".into(),
+            class: SparsityClass::Random,
+            d: 4,
+            chosen: Impl::Csr,
+            predicted_gflops: pred,
+            ai: 0.1,
+            secs: 0.01,
+            measured_gflops: meas,
+        }
+    }
+
+    #[test]
+    fn ratio_and_geomean() {
+        let records = vec![rec(2.0, 1.0), rec(1.0, 2.0)];
+        assert_eq!(records[0].prediction_ratio(), 0.5);
+        let rep = PredictionReport::of(&records);
+        assert!((rep.geomean_ratio - 1.0).abs() < 1e-12);
+        assert!((rep.mean_abs_log_err - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report() {
+        let rep = PredictionReport::of(&[]);
+        assert_eq!(rep.n_jobs, 0);
+    }
+
+    #[test]
+    fn jobspec_builder() {
+        let j = JobSpec::new("x", 16).with_impl(Impl::Csb);
+        assert_eq!(j.force_impl, Some(Impl::Csb));
+        assert_eq!(j.d, 16);
+    }
+}

@@ -1,0 +1,28 @@
+//! The L3 coordinator: a **roofline-guided SpMM engine**.
+//!
+//! The paper's thesis is that the right performance model — and
+//! therefore the right data structure — depends on the matrix's
+//! sparsity structure. The engine operationalises that: for each
+//! registered matrix it
+//!
+//! 1. **classifies** the sparsity pattern ([`crate::pattern`]),
+//! 2. **predicts** attainable GFLOP/s per implementation from the
+//!    matching sparsity-aware roofline model ([`crate::model`]) and a
+//!    per-(class, impl) efficiency prior calibrated from the paper's
+//!    Table V,
+//! 3. **routes** each SpMM job to the predicted-best kernel, and
+//! 4. **records** prediction vs measurement, so the planner's accuracy
+//!    is itself a measurable output (`prediction_report`).
+//!
+//! The XLA/PJRT artifact slots in as one more backend when an artifact
+//! matching the job's static shape exists.
+
+mod engine;
+mod job;
+mod planner;
+mod registry;
+
+pub use engine::{Engine, EngineConfig};
+pub use job::{JobRecord, JobSpec, PredictionReport};
+pub use planner::{Planner, Prediction};
+pub use registry::{MatrixEntry, MatrixRegistry};

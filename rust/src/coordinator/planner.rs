@@ -1,0 +1,203 @@
+//! The planner: sparsity-aware roofline prediction per implementation.
+//!
+//! Prediction = `roofline(model AI) × prior(class, impl)`. The prior
+//! encodes the paper's Table V / Fig. 2 findings as fractions of the
+//! per-pattern roof each implementation historically reaches — e.g.
+//! CSB sits nearest the roof on blocked matrices, CSR/MKL lead on
+//! banded ones, everything lands far under the roof on random
+//! matrices (the model is a lower bound on AI, not on achieved
+//! fraction). Priors start from the paper's measured ratios and are
+//! refined online: after each job the engine updates the prior with an
+//! exponential moving average of measured/roof.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::gen::SparsityClass;
+use crate::model::{AiParams, Roofline, SparsityModel};
+use crate::pattern::Classification;
+use crate::spmm::Impl;
+
+/// A prediction for one implementation.
+#[derive(Debug, Clone, Copy)]
+pub struct Prediction {
+    pub im: Impl,
+    /// Model arithmetic intensity (FLOPs/byte).
+    pub ai: f64,
+    /// Bandwidth-roof performance at that AI.
+    pub roof_gflops: f64,
+    /// Prior efficiency fraction applied.
+    pub prior: f64,
+    /// Predicted GFLOP/s = roof × prior.
+    pub predicted_gflops: f64,
+}
+
+/// Roofline-guided planner with online prior refinement.
+pub struct Planner {
+    roofline: Roofline,
+    /// (class, impl) → efficiency prior (fraction of roof).
+    priors: Mutex<HashMap<(SparsityClass, Impl), f64>>,
+    /// EMA weight for online updates.
+    ema: f64,
+}
+
+/// Initial efficiency priors, read off the paper's Fig. 2 (fraction of
+/// the per-pattern bandwidth roof each implementation attains) and
+/// Table V orderings. The XLA/ELL backends are seeded at CSR-like
+/// fractions scaled by their padding overhead at execute time.
+fn seed_prior(class: SparsityClass, im: Impl) -> f64 {
+    use Impl::*;
+    use SparsityClass::*;
+    match (class, im) {
+        // Fig. 2(a): all impls well below the random roof; CSB closest
+        (Random, Csr) => 0.35,
+        (Random, Opt) => 0.42,
+        (Random, Csb) => 0.60,
+        // Fig. 2(b): diagonal roof is an upper bound nobody reaches;
+        // CSR/OPT lead, CSB's block machinery only pays off at high d
+        (Diagonal, Csr) => 0.45,
+        (Diagonal, Opt) => 0.50,
+        (Diagonal, Csb) => 0.35,
+        // Fig. 2(c): CSB approaches the blocked roof
+        (Blocked, Csr) => 0.55,
+        (Blocked, Opt) => 0.60,
+        (Blocked, Csb) => 0.85,
+        // Fig. 2(d): CSR/MKL near the roof at small d; CSB can exceed
+        // it (effective-bandwidth effect) — seed slightly above OPT
+        (ScaleFree, Csr) => 0.70,
+        (ScaleFree, Opt) => 0.80,
+        (ScaleFree, Csb) => 0.85,
+        // BSR: dense tiles pay off only where blocks fill (meshes)
+        (Blocked, Bsr) => 0.7,
+        (_, Bsr) => 0.25,
+        // ELL ~ CSR minus padding tax (charged separately);
+        // XLA ~ ELL minus transfer overhead
+        (_, Ell) => 0.9 * seed_prior(class, Csr),
+        (_, Xla) => 0.6 * seed_prior(class, Csr),
+    }
+}
+
+impl Planner {
+    /// Planner over a calibrated roofline.
+    pub fn new(roofline: Roofline) -> Planner {
+        Planner { roofline, priors: Mutex::new(HashMap::new()), ema: 0.3 }
+    }
+
+    /// The roofline used for predictions.
+    pub fn roofline(&self) -> &Roofline {
+        &self.roofline
+    }
+
+    /// Current prior for (class, impl).
+    pub fn prior(&self, class: SparsityClass, im: Impl) -> f64 {
+        *self
+            .priors
+            .lock()
+            .unwrap()
+            .entry((class, im))
+            .or_insert_with(|| seed_prior(class, im))
+    }
+
+    /// Predict attainable GFLOP/s for one implementation on a
+    /// classified matrix.
+    pub fn predict(&self, cls: &Classification, d: usize, im: Impl) -> Prediction {
+        let p = AiParams::new(cls.stats.n, d, cls.stats.nnz);
+        let ai = cls.model.ai(p);
+        let roof = self.roofline.attainable_gflops(ai);
+        let prior = self.prior(cls.class, im);
+        Prediction { im, ai, roof_gflops: roof, prior, predicted_gflops: roof * prior }
+    }
+
+    /// Rank the candidate implementations, best predicted first.
+    pub fn rank(&self, cls: &Classification, d: usize, candidates: &[Impl]) -> Vec<Prediction> {
+        let mut preds: Vec<Prediction> =
+            candidates.iter().map(|&im| self.predict(cls, d, im)).collect();
+        preds.sort_by(|a, b| b.predicted_gflops.partial_cmp(&a.predicted_gflops).unwrap());
+        preds
+    }
+
+    /// Online refinement: fold a measured efficiency (measured /
+    /// roof) into the prior with an EMA.
+    pub fn observe(&self, class: SparsityClass, im: Impl, ai: f64, measured_gflops: f64) {
+        let roof = self.roofline.attainable_gflops(ai);
+        if roof <= 0.0 {
+            return;
+        }
+        let eff = (measured_gflops / roof).clamp(0.0, 2.0);
+        let mut priors = self.priors.lock().unwrap();
+        let slot = priors.entry((class, im)).or_insert_with(|| seed_prior(class, im));
+        *slot = (1.0 - self.ema) * *slot + self.ema * eff;
+    }
+
+    /// The model AI the planner would use for a classified matrix at
+    /// width `d` (exposed for reports).
+    pub fn model_ai(&self, cls: &Classification, d: usize) -> f64 {
+        cls.model.ai(AiParams::new(cls.stats.n, d, cls.stats.nnz))
+    }
+
+    /// The parameterised model itself (for figure annotations).
+    pub fn model_of(&self, cls: &Classification) -> SparsityModel {
+        cls.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{chung_lu, erdos_renyi, mesh2d, ChungLuParams, MeshKind, Prng};
+    use crate::model::MachineParams;
+    use crate::pattern::classify;
+
+    fn planner() -> Planner {
+        Planner::new(Roofline::new(MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 }))
+    }
+
+    #[test]
+    fn blocked_routes_to_csb() {
+        let a = mesh2d(64, MeshKind::Road, 0.62, &mut Prng::new(160));
+        let cls = classify(&a);
+        let p = planner();
+        let ranked = p.rank(&cls, 16, &Impl::NATIVE);
+        assert_eq!(ranked[0].im, Impl::Csb, "{:?}", ranked);
+    }
+
+    #[test]
+    fn scalefree_prediction_monotone_in_d_roof() {
+        let a = chung_lu(
+            ChungLuParams { n: 4000, alpha: 2.2, avg_deg: 12.0, k_min: 2.0 },
+            &mut Prng::new(161),
+        );
+        let cls = classify(&a);
+        let p = planner();
+        let p1 = p.predict(&cls, 1, Impl::Opt);
+        let p16 = p.predict(&cls, 16, Impl::Opt);
+        assert!(p16.ai > p1.ai);
+        assert!(p16.predicted_gflops > p1.predicted_gflops);
+    }
+
+    #[test]
+    fn observe_moves_prior_toward_measurement() {
+        let a = erdos_renyi(2000, 2000, 6.0, &mut Prng::new(162));
+        let cls = classify(&a);
+        let p = planner();
+        let before = p.predict(&cls, 4, Impl::Csr);
+        // report a measurement far above the prediction
+        for _ in 0..10 {
+            p.observe(cls.class, Impl::Csr, before.ai, before.roof_gflops);
+        }
+        let after = p.predict(&cls, 4, Impl::Csr);
+        assert!(after.predicted_gflops > before.predicted_gflops);
+        assert!(after.prior > before.prior);
+    }
+
+    #[test]
+    fn rank_is_sorted() {
+        let a = erdos_renyi(1000, 1000, 4.0, &mut Prng::new(163));
+        let cls = classify(&a);
+        let p = planner();
+        let ranked = p.rank(&cls, 64, &Impl::NATIVE);
+        for w in ranked.windows(2) {
+            assert!(w[0].predicted_gflops >= w[1].predicted_gflops);
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! The matrix registry: prepared kernels + classification per
+//! registered matrix.
+//!
+//! Preparation (format conversion, classification, artifact staging)
+//! happens once at registration — mirroring the paper's methodology,
+//! which excludes loading and data-structure construction from the
+//! timed region.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::pattern::{classify, Classification};
+use crate::runtime::{ArtifactManifest, XlaRuntime, XlaSpmm};
+use crate::sparse::Csr;
+use crate::spmm::{build_native, Impl, Spmm};
+
+/// One registered matrix with its prepared kernels.
+pub struct MatrixEntry {
+    pub name: String,
+    pub classification: Classification,
+    /// Prepared kernels by implementation. XLA kernels are per-d, so
+    /// they key on (impl, d); native kernels use d = 0 (any width).
+    kernels: HashMap<(Impl, usize), Box<dyn Spmm>>,
+    /// The CSR source (kept for late kernel construction).
+    csr: Csr,
+    threads: usize,
+}
+
+impl MatrixEntry {
+    /// Kernel lookup: native kernels serve any d; XLA kernels must
+    /// match exactly.
+    pub fn kernel(&self, im: Impl, d: usize) -> Option<&dyn Spmm> {
+        let key = if im == Impl::Xla { (im, d) } else { (im, 0) };
+        self.kernels.get(&key).map(|b| b.as_ref())
+    }
+
+    /// Which implementations can serve width `d` right now.
+    pub fn available(&self, d: usize) -> Vec<Impl> {
+        let mut v: Vec<Impl> = Vec::new();
+        for &(im, kd) in self.kernels.keys() {
+            if (im != Impl::Xla && kd == 0) || (im == Impl::Xla && kd == d) {
+                if !v.contains(&im) {
+                    v.push(im);
+                }
+            }
+        }
+        v.sort_by_key(|im| format!("{im}"));
+        v
+    }
+
+    /// Rows of the matrix.
+    pub fn n(&self) -> usize {
+        self.csr.nrows
+    }
+
+    /// Nonzeros of the matrix.
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+}
+
+/// Registry of prepared matrices.
+pub struct MatrixRegistry {
+    entries: HashMap<String, MatrixEntry>,
+    threads: usize,
+}
+
+impl MatrixRegistry {
+    pub fn new(threads: usize) -> MatrixRegistry {
+        MatrixRegistry { entries: HashMap::new(), threads: threads.max(1) }
+    }
+
+    /// Register a matrix: classify it and prepare the requested native
+    /// kernels.
+    pub fn register(&mut self, name: impl Into<String>, csr: Csr, impls: &[Impl]) -> Result<()> {
+        let name = name.into();
+        let classification = classify(&csr);
+        let mut kernels: HashMap<(Impl, usize), Box<dyn Spmm>> = HashMap::new();
+        for &im in impls {
+            if im == Impl::Xla {
+                continue; // staged separately via attach_xla
+            }
+            kernels.insert((im, 0), build_native(im, &csr, self.threads)?);
+        }
+        self.entries.insert(
+            name.clone(),
+            MatrixEntry { name, classification, kernels, csr, threads: self.threads },
+        );
+        Ok(())
+    }
+
+    /// Stage XLA kernels for every artifact in the manifest whose
+    /// static shape fits the named matrix. Returns how many artifacts
+    /// were staged.
+    pub fn attach_xla(
+        &mut self,
+        name: &str,
+        rt: &XlaRuntime,
+        manifest: &ArtifactManifest,
+    ) -> Result<usize> {
+        let entry = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| Error::Usage(format!("matrix '{name}' not registered")))?;
+        let mut staged = 0;
+        let width = entry.csr.max_row_len();
+        for spec in manifest.of_kind(crate::runtime::ArtifactKind::EllSpmm) {
+            if spec.n == entry.csr.nrows && spec.width >= width.max(1) {
+                let k = XlaSpmm::from_csr(rt, spec, &entry.csr)?;
+                entry.kernels.insert((Impl::Xla, spec.d), Box::new(k));
+                staged += 1;
+            }
+        }
+        Ok(staged)
+    }
+
+    /// Prepare one extra native kernel after registration.
+    pub fn add_native(&mut self, name: &str, im: Impl) -> Result<()> {
+        let entry = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| Error::Usage(format!("matrix '{name}' not registered")))?;
+        let k = build_native(im, &entry.csr, entry.threads)?;
+        entry.kernels.insert((im, 0), k);
+        Ok(())
+    }
+
+    /// Lookup.
+    pub fn get(&self, name: &str) -> Option<&MatrixEntry> {
+        self.entries.get(name)
+    }
+
+    /// Registered names (sorted).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, Prng};
+
+    #[test]
+    fn register_and_lookup() {
+        let mut reg = MatrixRegistry::new(2);
+        let a = erdos_renyi(200, 200, 4.0, &mut Prng::new(170));
+        reg.register("er", a, &[Impl::Csr, Impl::Csb]).unwrap();
+        let e = reg.get("er").unwrap();
+        assert!(e.kernel(Impl::Csr, 16).is_some());
+        assert!(e.kernel(Impl::Csb, 1).is_some());
+        assert!(e.kernel(Impl::Opt, 4).is_none());
+        assert_eq!(e.available(4), vec![Impl::Csb, Impl::Csr]);
+        assert_eq!(reg.names(), vec!["er"]);
+    }
+
+    #[test]
+    fn add_native_later() {
+        let mut reg = MatrixRegistry::new(1);
+        let a = erdos_renyi(100, 100, 3.0, &mut Prng::new(171));
+        reg.register("m", a, &[Impl::Csr]).unwrap();
+        reg.add_native("m", Impl::Opt).unwrap();
+        assert!(reg.get("m").unwrap().kernel(Impl::Opt, 8).is_some());
+        assert!(reg.add_native("missing", Impl::Opt).is_err());
+    }
+}

@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the spmm-roofline library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Dimension mismatch between operands (e.g. `A.cols != B.rows`).
+    #[error("dimension mismatch: {0}")]
+    DimensionMismatch(String),
+
+    /// A sparse structure failed validation (unsorted/out-of-range
+    /// indices, broken row pointers, ...).
+    #[error("invalid sparse structure: {0}")]
+    InvalidStructure(String),
+
+    /// Error parsing an external format (MatrixMarket, TOML-lite,
+    /// manifest JSON).
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Invalid configuration value.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// The requested artifact is missing from `artifacts/` — run
+    /// `make artifacts` first.
+    #[error("missing artifact: {0} (run `make artifacts`)")]
+    MissingArtifact(String),
+
+    /// An error surfaced by the XLA/PJRT runtime.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Unknown CLI command / bad CLI usage.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    /// Underlying IO error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

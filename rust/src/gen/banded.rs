@@ -1,0 +1,83 @@
+//! Banded / diagonal generators — the paper's "Diagonal" class
+//! (`rajat31`, `ideal_diagonal_22`).
+
+use crate::gen::Prng;
+use crate::sparse::{Coo, Csr};
+
+/// Exact diagonal pattern (the paper's `ideal_diagonal_22`): `n` rows,
+/// one nonzero per row at column `r`, value 1.0.
+pub fn ideal_diagonal(n: usize) -> Csr {
+    let mut coo = Coo::with_capacity(n, n, n);
+    for r in 0..n {
+        coo.push(r, r, 1.0);
+    }
+    Csr::from_coo(coo)
+}
+
+/// Banded matrix: the diagonal is always present; every off-diagonal
+/// cell within `|i−j| ≤ bandwidth` is present with probability `fill`.
+/// Expected nonzeros per row ≈ `1 + 2·bandwidth·fill` (edge rows
+/// slightly fewer). Values uniform in `[-1, 1)`.
+///
+/// `rajat31` (circuit simulation, ~4.3 nnz/row clustered near the
+/// diagonal) is proxied with `bandwidth = 8, fill ≈ 0.21`.
+pub fn banded(n: usize, bandwidth: usize, fill: f64, rng: &mut Prng) -> Csr {
+    assert!(n > 0);
+    let expected = (n as f64 * (1.0 + 2.0 * bandwidth as f64 * fill)) as usize;
+    let mut coo = Coo::with_capacity(n, n, expected + 16);
+    for r in 0..n {
+        let lo = r.saturating_sub(bandwidth);
+        let hi = (r + bandwidth).min(n - 1);
+        for c in lo..=hi {
+            if c == r {
+                coo.push(r, c, rng.range_f64(0.5, 1.5)); // keep the diagonal robustly nonzero
+            } else if rng.bernoulli(fill) {
+                coo.push(r, c, rng.range_f64(-1.0, 1.0));
+            }
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_diagonal_is_identity_pattern() {
+        let m = ideal_diagonal(100);
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 100);
+        for r in 0..100 {
+            assert_eq!(m.row_cols(r), &[r as u32]);
+        }
+    }
+
+    #[test]
+    fn banded_within_band() {
+        let mut rng = Prng::new(5);
+        let bw = 4;
+        let m = banded(200, bw, 0.5, &mut rng);
+        m.validate().unwrap();
+        for r in 0..200usize {
+            for &c in m.row_cols(r) {
+                assert!((r as i64 - c as i64).unsigned_abs() as usize <= bw);
+            }
+        }
+    }
+
+    #[test]
+    fn banded_density_close_to_expected() {
+        let mut rng = Prng::new(6);
+        let m = banded(4000, 8, 0.25, &mut rng);
+        let want = 1.0 + 2.0 * 8.0 * 0.25;
+        assert!((m.avg_row_len() - want).abs() < 0.4, "avg {}", m.avg_row_len());
+    }
+
+    #[test]
+    fn diagonal_always_present() {
+        let mut rng = Prng::new(7);
+        let m = banded(300, 2, 0.0, &mut rng);
+        assert_eq!(m.nnz(), 300);
+    }
+}

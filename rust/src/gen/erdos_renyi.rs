@@ -1,0 +1,96 @@
+//! Erdős–Rényi G(n, p) generator — the paper's "uniform random"
+//! class (`er_22_1`, `er_22_10`, `er_22_20`).
+
+use crate::gen::Prng;
+use crate::sparse::{Coo, Csr};
+
+/// Generate an `nrows × ncols` Erdős–Rényi matrix with an *expected*
+/// `avg_deg` nonzeros per row (i.e. `p = avg_deg / ncols`), values
+/// uniform in `[-1, 1)`.
+///
+/// Uses geometric skip-sampling over the flattened index space, so the
+/// cost is O(nnz), independent of `n²`.
+pub fn erdos_renyi(nrows: usize, ncols: usize, avg_deg: f64, rng: &mut Prng) -> Csr {
+    assert!(nrows > 0 && ncols > 0);
+    let p = (avg_deg / ncols as f64).clamp(0.0, 1.0);
+    let expected = (nrows as f64 * avg_deg) as usize;
+    let mut coo = Coo::with_capacity(nrows, ncols, expected + expected / 8 + 16);
+    if p <= 0.0 {
+        return Csr::from_coo(coo);
+    }
+    let total = (nrows as u64) * (ncols as u64);
+    let ln_q = (1.0 - p).ln();
+    // degenerate p == 1.0 (dense) — only reachable in tests
+    if !ln_q.is_finite() {
+        for r in 0..nrows {
+            for c in 0..ncols {
+                coo.push(r, c, rng.range_f64(-1.0, 1.0));
+            }
+        }
+        return Csr::from_coo(coo);
+    }
+    let mut idx: u64 = 0;
+    loop {
+        // skip ~ Geometric(p): floor(ln(U)/ln(1-p))
+        let u = rng.f64().max(f64::MIN_POSITIVE);
+        let skip = (u.ln() / ln_q).floor() as u64;
+        idx = match idx.checked_add(skip) {
+            Some(v) => v,
+            None => break,
+        };
+        if idx >= total {
+            break;
+        }
+        let r = (idx / ncols as u64) as usize;
+        let c = (idx % ncols as u64) as usize;
+        coo.push(r, c, rng.range_f64(-1.0, 1.0));
+        idx += 1;
+        if idx >= total {
+            break;
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_density() {
+        let mut rng = Prng::new(1);
+        let m = erdos_renyi(2000, 2000, 10.0, &mut rng);
+        m.validate().unwrap();
+        let avg = m.avg_row_len();
+        assert!((avg - 10.0).abs() < 0.5, "avg row len {avg}");
+    }
+
+    #[test]
+    fn rows_are_roughly_uniform() {
+        let mut rng = Prng::new(2);
+        let m = erdos_renyi(1000, 1000, 8.0, &mut rng);
+        // no row should be wildly hub-like under ER
+        assert!(m.max_row_len() < 30, "max {}", m.max_row_len());
+    }
+
+    #[test]
+    fn zero_degree_gives_empty() {
+        let mut rng = Prng::new(3);
+        let m = erdos_renyi(100, 100, 0.0, &mut rng);
+        assert_eq!(m.nnz(), 0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = erdos_renyi(500, 500, 5.0, &mut Prng::new(42));
+        let b = erdos_renyi(500, 500, 5.0, &mut Prng::new(42));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dense_limit() {
+        let mut rng = Prng::new(4);
+        let m = erdos_renyi(8, 8, 8.0, &mut rng);
+        assert_eq!(m.nnz(), 64);
+    }
+}

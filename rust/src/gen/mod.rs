@@ -1,0 +1,24 @@
+//! Structural matrix generators.
+//!
+//! The paper's dataset (Table III) comes from SuiteSparse, which is not
+//! available offline. The roofline models depend only on *structural
+//! statistics* — nonzeros per row, bandwidth, block density `D`, block
+//! occupancy `z`, power-law exponent `α` — so each generator here
+//! controls exactly those statistics, and [`suite`] assembles a scaled
+//! proxy of every Table III matrix (see DESIGN.md §6).
+
+mod banded;
+mod blocked;
+mod erdos_renyi;
+mod prng;
+mod rmat;
+mod scalefree;
+pub mod suite;
+
+pub use banded::{banded, ideal_diagonal};
+pub use blocked::{mesh2d, MeshKind};
+pub use erdos_renyi::erdos_renyi;
+pub use prng::Prng;
+pub use rmat::rmat;
+pub use scalefree::{chung_lu, ChungLuParams};
+pub use suite::{proxy_suite, representative_suite, ProxyMatrix, SparsityClass};

@@ -1,0 +1,281 @@
+//! The proxy dataset — a scaled reproduction of the paper's Table III.
+//!
+//! Every SuiteSparse matrix in the paper is replaced by a generated
+//! proxy from the same structural class with matching nonzeros-per-row
+//! and locality statistics (see DESIGN.md §2/§6 for the substitution
+//! argument). `scale = 1.0` produces matrices large enough to exceed
+//! on-chip caches on this machine while keeping single-core benchmark
+//! runtimes tractable; `--scale` grows or shrinks everything.
+
+use crate::gen::{banded, chung_lu, erdos_renyi, ideal_diagonal, mesh2d, ChungLuParams, MeshKind, Prng};
+use crate::sparse::Csr;
+
+/// The paper's four structural regimes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SparsityClass {
+    Blocked,
+    ScaleFree,
+    Diagonal,
+    Random,
+}
+
+impl std::fmt::Display for SparsityClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            SparsityClass::Blocked => "Blocking",
+            SparsityClass::ScaleFree => "Scale-free",
+            SparsityClass::Diagonal => "Diagonal",
+            SparsityClass::Random => "Uniform Random",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A proxy-dataset entry: the paper matrix it stands in for plus the
+/// recipe that generates the stand-in.
+pub struct ProxyMatrix {
+    /// Proxy name (paper name + `_p`, or `er_N_k` for the synthetic
+    /// randoms, which the paper also generated).
+    pub name: &'static str,
+    /// Paper matrix this proxies.
+    pub paper_name: &'static str,
+    pub class: SparsityClass,
+    /// Rows/nonzeros of the *paper's* matrix (Table III), for reports.
+    pub paper_rows: usize,
+    pub paper_nnz: usize,
+    /// Generator (given global scale and seed).
+    gen: fn(f64, u64) -> Csr,
+}
+
+impl ProxyMatrix {
+    /// Generate the proxy at `scale` (1.0 = default size) with a fixed
+    /// per-matrix seed, so every experiment sees identical matrices.
+    pub fn generate(&self, scale: f64) -> Csr {
+        (self.gen)(scale, seed_of(self.name))
+    }
+}
+
+fn seed_of(name: &str) -> u64 {
+    // FNV-1a over the name — stable across runs/platforms.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn scaled(base: usize, scale: f64) -> usize {
+    ((base as f64 * scale) as usize).max(64)
+}
+
+fn scaled_side(base_side: usize, scale: f64) -> usize {
+    ((base_side as f64 * scale.sqrt()) as usize).max(8)
+}
+
+/// The full 12-matrix proxy suite in Table III order.
+pub fn proxy_suite() -> Vec<ProxyMatrix> {
+    vec![
+        ProxyMatrix {
+            name: "road_usa_p",
+            paper_name: "road_usa",
+            class: SparsityClass::Blocked,
+            paper_rows: 23_947_347,
+            paper_nnz: 57_708_624,
+            gen: |s, seed| mesh2d(scaled_side(512, s), MeshKind::Road, 0.62, &mut Prng::new(seed)),
+        },
+        ProxyMatrix {
+            name: "hugebubbles_p",
+            paper_name: "hugebubbles-00010",
+            class: SparsityClass::Blocked,
+            paper_rows: 19_458_087,
+            paper_nnz: 58_359_528,
+            gen: |s, seed| {
+                mesh2d(scaled_side(512, s), MeshKind::Triangular, 0.50, &mut Prng::new(seed))
+            },
+        },
+        ProxyMatrix {
+            name: "asia_osm_p",
+            paper_name: "asia_osm",
+            class: SparsityClass::Blocked,
+            paper_rows: 11_950_757,
+            paper_nnz: 25_423_206,
+            gen: |s, seed| mesh2d(scaled_side(448, s), MeshKind::Path, 0.5, &mut Prng::new(seed)),
+        },
+        ProxyMatrix {
+            name: "333sp_p",
+            paper_name: "333SP",
+            class: SparsityClass::Blocked,
+            paper_rows: 3_712_815,
+            paper_nnz: 22_217_266,
+            gen: |s, seed| {
+                mesh2d(scaled_side(360, s), MeshKind::Triangular, 1.0, &mut Prng::new(seed))
+            },
+        },
+        ProxyMatrix {
+            name: "com_orkut_p",
+            paper_name: "com-Orkut",
+            class: SparsityClass::ScaleFree,
+            paper_rows: 3_072_441,
+            paper_nnz: 234_370_166,
+            gen: |s, seed| {
+                chung_lu(
+                    ChungLuParams {
+                        n: scaled(32_768, s),
+                        alpha: 2.2,
+                        avg_deg: 76.0,
+                        k_min: 16.0,
+                    },
+                    &mut Prng::new(seed),
+                )
+            },
+        },
+        ProxyMatrix {
+            name: "com_lj_p",
+            paper_name: "com-LiveJournal",
+            class: SparsityClass::ScaleFree,
+            paper_rows: 3_997_962,
+            paper_nnz: 69_362_378,
+            gen: |s, seed| {
+                chung_lu(
+                    ChungLuParams { n: scaled(65_536, s), alpha: 2.3, avg_deg: 17.4, k_min: 4.0 },
+                    &mut Prng::new(seed),
+                )
+            },
+        },
+        ProxyMatrix {
+            name: "uk2002_p",
+            paper_name: "uk-2002",
+            class: SparsityClass::ScaleFree,
+            paper_rows: 18_520_486,
+            paper_nnz: 298_113_762,
+            gen: |s, seed| {
+                chung_lu(
+                    ChungLuParams { n: scaled(98_304, s), alpha: 2.1, avg_deg: 16.1, k_min: 4.0 },
+                    &mut Prng::new(seed),
+                )
+            },
+        },
+        ProxyMatrix {
+            name: "rajat31_p",
+            paper_name: "rajat31",
+            class: SparsityClass::Diagonal,
+            paper_rows: 4_690_002,
+            paper_nnz: 20_316_253,
+            gen: |s, seed| banded(scaled(262_144, s), 8, 0.21, &mut Prng::new(seed)),
+        },
+        ProxyMatrix {
+            name: "ideal_diag_p",
+            paper_name: "ideal_diagonal_22",
+            class: SparsityClass::Diagonal,
+            paper_rows: 4_194_304,
+            paper_nnz: 4_194_304,
+            gen: |s, _seed| ideal_diagonal(scaled(262_144, s)),
+        },
+        ProxyMatrix {
+            name: "er_18_1",
+            paper_name: "er_22_1",
+            class: SparsityClass::Random,
+            paper_rows: 4_194_304,
+            paper_nnz: 4_194_304,
+            gen: |s, seed| {
+                let n = scaled(262_144, s);
+                erdos_renyi(n, n, 1.0, &mut Prng::new(seed))
+            },
+        },
+        ProxyMatrix {
+            name: "er_18_10",
+            paper_name: "er_22_10",
+            class: SparsityClass::Random,
+            paper_rows: 4_194_304,
+            paper_nnz: 41_942_990,
+            gen: |s, seed| {
+                let n = scaled(131_072, s);
+                erdos_renyi(n, n, 10.0, &mut Prng::new(seed))
+            },
+        },
+        ProxyMatrix {
+            name: "er_18_20",
+            paper_name: "er_22_20",
+            class: SparsityClass::Random,
+            paper_rows: 4_194_304,
+            paper_nnz: 83_885_880,
+            gen: |s, seed| {
+                let n = scaled(131_072, s);
+                erdos_renyi(n, n, 20.0, &mut Prng::new(seed))
+            },
+        },
+    ]
+}
+
+/// The four representative matrices of Fig. 1 / Fig. 2 (one per class):
+/// er_22_1, rajat31, road_usa, com-LiveJournal — proxied.
+pub fn representative_suite() -> Vec<ProxyMatrix> {
+    proxy_suite()
+        .into_iter()
+        .filter(|m| matches!(m.name, "er_18_1" | "rajat31_p" | "road_usa_p" | "com_lj_p"))
+        .collect()
+}
+
+/// Find one entry by proxy name.
+pub fn find(name: &str) -> Option<ProxyMatrix> {
+    proxy_suite().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_twelve_entries_in_four_classes() {
+        let s = proxy_suite();
+        assert_eq!(s.len(), 12);
+        for class in [
+            SparsityClass::Blocked,
+            SparsityClass::ScaleFree,
+            SparsityClass::Diagonal,
+            SparsityClass::Random,
+        ] {
+            assert!(s.iter().any(|m| m.class == class));
+        }
+    }
+
+    #[test]
+    fn representative_has_one_per_class() {
+        let s = representative_suite();
+        assert_eq!(s.len(), 4);
+        let mut classes: Vec<_> = s.iter().map(|m| m.class).collect();
+        classes.dedup();
+        assert_eq!(classes.len(), 4);
+    }
+
+    #[test]
+    fn tiny_scale_generates_valid_matrices() {
+        for m in proxy_suite() {
+            let csr = m.generate(0.02);
+            csr.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            assert!(csr.nnz() > 0, "{} empty", m.name);
+        }
+    }
+
+    #[test]
+    fn density_tracks_paper() {
+        // nnz/row of each proxy should be within 2x of the paper's
+        for m in proxy_suite() {
+            let csr = m.generate(0.05);
+            let got = csr.avg_row_len();
+            let want = m.paper_nnz as f64 / m.paper_rows as f64;
+            assert!(
+                got > want * 0.45 && got < want * 2.2,
+                "{}: proxy {got:.2} vs paper {want:.2}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let m = find("er_18_10").unwrap();
+        assert_eq!(m.generate(0.02), m.generate(0.02));
+    }
+}

@@ -1,0 +1,64 @@
+//! Shared measurement plumbing for the harness.
+
+use once_cell::sync::OnceCell;
+
+use crate::gen::Prng;
+use crate::membench;
+use crate::metrics::{bench_adaptive, gflops, spmm_flops};
+use crate::model::MachineParams;
+use crate::spmm::{DenseMatrix, Spmm};
+
+/// One measured (kernel, d) cell.
+#[derive(Debug, Clone, Copy)]
+pub struct CellMeasurement {
+    pub d: usize,
+    pub secs: f64,
+    pub gflops: f64,
+    /// Number of timed iterations behind the median.
+    pub iters: usize,
+}
+
+/// Measure a prepared kernel at dense width `d`: median of an adaptive
+/// benchmark loop (≥ `iters` iterations and ≥ 0.25 s of samples,
+/// capped at 4×iters). B is seeded deterministically so every kernel
+/// sees identical inputs.
+pub fn measure_kernel(kernel: &dyn Spmm, d: usize, iters: usize, warmup: usize) -> CellMeasurement {
+    let mut rng = Prng::new(0xB0B + d as u64);
+    let b = DenseMatrix::random(kernel.ncols(), d, &mut rng);
+    let mut c = DenseMatrix::zeros(kernel.nrows(), d);
+    let r = bench_adaptive(warmup, iters, iters * 4, 0.25, |_| {
+        kernel.execute(&b, &mut c).expect("kernel failed during measurement");
+    });
+    let secs = r.median_secs();
+    CellMeasurement {
+        d,
+        secs,
+        gflops: gflops(spmm_flops(kernel.nnz(), d), secs),
+        iters: r.samples.len(),
+    }
+}
+
+static MACHINE: OnceCell<MachineParams> = OnceCell::new();
+
+/// Machine calibration (STREAM β + FMA π), measured once per process.
+pub fn machine_params_cached(threads: usize) -> MachineParams {
+    *MACHINE.get_or_init(|| membench::measure_machine(threads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, Prng};
+    use crate::spmm::CsrSpmm;
+
+    #[test]
+    fn measure_kernel_positive() {
+        let a = erdos_renyi(300, 300, 5.0, &mut Prng::new(190));
+        let k = CsrSpmm::new(a, 1);
+        let m = measure_kernel(&k, 8, 2, 0);
+        assert!(m.gflops > 0.0);
+        assert!(m.secs > 0.0);
+        assert!(m.iters >= 2);
+        assert_eq!(m.d, 8);
+    }
+}

@@ -1,0 +1,144 @@
+//! Fig. 1: GFLOP/s vs dense width `d` for one representative matrix
+//! per sparsity class.
+
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::gen::{representative_suite, SparsityClass};
+use crate::harness::common::measure_kernel;
+use crate::report::{write_csv, Series, SvgPlot, Table, PALETTE};
+use crate::spmm::{build_native, Impl};
+
+/// Measured curves for one matrix: per impl, (d, gflops) points.
+#[derive(Debug, Clone)]
+pub struct Fig1Data {
+    pub matrices: Vec<(String, SparsityClass, Vec<(Impl, Vec<(usize, f64)>)>)>,
+    pub d_values: Vec<usize>,
+}
+
+/// Run the Fig. 1 sweep over the four representative proxies.
+pub fn run_fig1(cfg: &ExperimentConfig) -> Result<Fig1Data> {
+    let mut matrices = Vec::new();
+    for proxy in representative_suite() {
+        let csr = proxy.generate(cfg.scale);
+        let mut series = Vec::new();
+        for &im in &cfg.impls {
+            if im == Impl::Xla {
+                continue;
+            }
+            let kernel = build_native(im, &csr, cfg.threads)?;
+            let pts: Vec<(usize, f64)> = cfg
+                .d_values
+                .iter()
+                .map(|&d| {
+                    let m = measure_kernel(kernel.as_ref(), d, cfg.iters, cfg.warmup);
+                    (d, m.gflops)
+                })
+                .collect();
+            series.push((im, pts));
+        }
+        matrices.push((proxy.name.to_string(), proxy.class, series));
+    }
+    Ok(Fig1Data { matrices, d_values: cfg.d_values.clone() })
+}
+
+impl Fig1Data {
+    /// One SVG per matrix, named `fig1_<matrix>.svg`, in `out_dir`.
+    pub fn save_svgs(&self, out_dir: &str) -> Result<Vec<String>> {
+        let mut paths = Vec::new();
+        for (name, class, series) in &self.matrices {
+            let mut plot = SvgPlot::new(
+                format!("Fig.1 — {name} ({class})"),
+                "columns d (log2)",
+                "GFLOP/s",
+            )
+            .log_axes(true, false);
+            for (i, (im, pts)) in series.iter().enumerate() {
+                let fp: Vec<(f64, f64)> = pts.iter().map(|&(d, g)| (d as f64, g)).collect();
+                plot.add_series(Series::line(im.to_string(), PALETTE[i % PALETTE.len()], fp));
+            }
+            let path = format!("{out_dir}/fig1_{name}.svg");
+            plot.save(&path)?;
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+
+    /// CSV of every point.
+    pub fn save_csv(&self, path: &str) -> Result<()> {
+        let mut rows = Vec::new();
+        for (name, class, series) in &self.matrices {
+            for (im, pts) in series {
+                for &(d, g) in pts {
+                    rows.push(vec![
+                        name.clone(),
+                        class.to_string(),
+                        im.to_string(),
+                        d.to_string(),
+                        format!("{g:.4}"),
+                    ]);
+                }
+            }
+        }
+        write_csv(path, &["matrix", "class", "impl", "d", "gflops"], &rows)
+    }
+
+    /// Text summary table.
+    pub fn render(&self) -> Table {
+        let mut headers: Vec<String> = vec!["Matrix".into(), "Impl".into()];
+        headers.extend(self.d_values.iter().map(|d| format!("d={d}")));
+        let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new("Fig.1 — GFLOP/s vs d (representative matrices)", &hdr);
+        for (name, _class, series) in &self.matrices {
+            for (im, pts) in series {
+                let mut row = vec![name.clone(), im.to_string()];
+                for &d in &self.d_values {
+                    let g = pts.iter().find(|p| p.0 == d).map(|p| p.1).unwrap_or(0.0);
+                    row.push(format!("{g:.2}"));
+                }
+                t.row(row);
+            }
+        }
+        t
+    }
+
+    /// ASCII scatter markers kept out; the SVG is the figure. This
+    /// helper exposes the per-class best-d for shape checks.
+    pub fn best_d(&self, matrix: &str, im: Impl) -> Option<usize> {
+        self.matrices
+            .iter()
+            .find(|(n, _, _)| n == matrix)?
+            .2
+            .iter()
+            .find(|(i, _)| *i == im)?
+            .1
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|&(d, _)| d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_fig1_runs() {
+        let cfg = ExperimentConfig {
+            scale: 0.02,
+            d_values: vec![1, 8],
+            threads: 1,
+            iters: 1,
+            warmup: 0,
+            ..Default::default()
+        };
+        let data = run_fig1(&cfg).unwrap();
+        assert_eq!(data.matrices.len(), 4);
+        let t = data.render();
+        assert_eq!(t.rows.len(), 4 * 3);
+        let dir = std::env::temp_dir().join("spmm_fig1_test");
+        let paths = data.save_svgs(dir.to_str().unwrap()).unwrap();
+        assert_eq!(paths.len(), 4);
+        assert!(std::path::Path::new(&paths[0]).exists());
+        assert!(data.best_d("er_18_1", Impl::Csr).is_some());
+    }
+}

@@ -1,0 +1,277 @@
+//! Fig. 2: measured performance vs the sparsity-aware roofline, one
+//! panel per structural class.
+//!
+//! Each panel shows the bandwidth roof `P = β·AI` (the memory-bound
+//! region only — SpMM never reaches the ridge), vertical lines at the
+//! class model's AI for each `d`, and the measured (AI, GFLOP/s)
+//! points for every implementation.
+
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::gen::{representative_suite, SparsityClass};
+use crate::harness::common::{machine_params_cached, measure_kernel};
+use crate::model::{AiParams, MachineParams, Roofline, SparsityModel};
+use crate::pattern::classify;
+use crate::report::{write_csv, Marker, Series, SvgPlot, Table, VLine, PALETTE};
+use crate::spmm::{build_native, Impl};
+
+/// One measured point in roofline space.
+#[derive(Debug, Clone)]
+pub struct Fig2Point {
+    pub matrix: String,
+    pub class: SparsityClass,
+    pub d: usize,
+    pub im: Impl,
+    /// Model AI for (matrix, d) under the class model.
+    pub ai: f64,
+    /// Bandwidth roof at that AI.
+    pub roof_gflops: f64,
+    pub measured_gflops: f64,
+}
+
+impl Fig2Point {
+    /// measured / roof — Fig. 2's "closeness to the roofline".
+    pub fn efficiency(&self) -> f64 {
+        if self.roof_gflops > 0.0 {
+            self.measured_gflops / self.roof_gflops
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The full Fig. 2 dataset.
+#[derive(Debug, Clone)]
+pub struct Fig2Data {
+    pub machine: MachineParams,
+    pub points: Vec<Fig2Point>,
+    /// Per matrix: the parameterised model used (for annotation).
+    pub models: Vec<(String, SparsityModel)>,
+}
+
+/// Run the Fig. 2 experiment: measure all impls × d on the four
+/// representative matrices and place them against their class
+/// rooflines.
+pub fn run_fig2(cfg: &ExperimentConfig, machine: Option<MachineParams>) -> Result<Fig2Data> {
+    let machine = machine.unwrap_or_else(|| machine_params_cached(cfg.threads));
+    let roofline = Roofline::new(machine);
+    let mut points = Vec::new();
+    let mut models = Vec::new();
+    for proxy in representative_suite() {
+        let csr = proxy.generate(cfg.scale);
+        // classify — rather than trusting provenance — so Fig. 2 also
+        // exercises the engine's model-selection path
+        let cls = classify(&csr);
+        models.push((proxy.name.to_string(), cls.model));
+        for &im in &cfg.impls {
+            if im == Impl::Xla {
+                continue;
+            }
+            let kernel = build_native(im, &csr, cfg.threads)?;
+            for &d in &cfg.d_values {
+                let ai = cls.model.ai(AiParams::new(csr.nrows, d, csr.nnz()));
+                let m = measure_kernel(kernel.as_ref(), d, cfg.iters, cfg.warmup);
+                points.push(Fig2Point {
+                    matrix: proxy.name.to_string(),
+                    class: proxy.class,
+                    d,
+                    im,
+                    ai,
+                    roof_gflops: roofline.attainable_gflops(ai),
+                    measured_gflops: m.gflops,
+                });
+            }
+        }
+    }
+    Ok(Fig2Data { machine, points, models })
+}
+
+impl Fig2Data {
+    /// One SVG per matrix (`fig2_<matrix>.svg`): roof line, AI
+    /// verticals, measured points.
+    pub fn save_svgs(&self, out_dir: &str) -> Result<Vec<String>> {
+        let mut paths = Vec::new();
+        let matrices: Vec<String> = self.models.iter().map(|(n, _)| n.clone()).collect();
+        for name in matrices {
+            let pts: Vec<&Fig2Point> = self.points.iter().filter(|p| p.matrix == name).collect();
+            if pts.is_empty() {
+                continue;
+            }
+            let class = pts[0].class;
+            let mut plot = SvgPlot::new(
+                format!("Fig.2 — {name} ({class}) roofline"),
+                "arithmetic intensity (FLOP/byte)",
+                "GFLOP/s",
+            )
+            .log_axes(true, true);
+            // bandwidth roof across the AI range
+            let (ai_lo, ai_hi) = pts.iter().fold((f64::INFINITY, 0.0f64), |(l, h), p| {
+                (l.min(p.ai), h.max(p.ai))
+            });
+            let lo = ai_lo * 0.5;
+            let hi = ai_hi * 2.0;
+            plot.add_series(Series {
+                label: format!("roof β·AI (β={:.1} GB/s)", self.machine.beta_gbs),
+                points: vec![
+                    (lo, self.machine.beta_gbs * lo),
+                    (hi, self.machine.beta_gbs * hi),
+                ],
+                color: "#333333".into(),
+                marker: Marker::None,
+                line: true,
+            });
+            // vertical model-AI lines per d
+            let mut ds: Vec<usize> = pts.iter().map(|p| p.d).collect();
+            ds.sort_unstable();
+            ds.dedup();
+            for &d in &ds {
+                if let Some(p) = pts.iter().find(|p| p.d == d) {
+                    plot.add_vline(VLine {
+                        x: p.ai,
+                        label: format!("AI d={d}"),
+                        color: "#999999".into(),
+                    });
+                }
+            }
+            // measured points per impl
+            let mut impls: Vec<Impl> = pts.iter().map(|p| p.im).collect();
+            impls.sort_by_key(|im| im.to_string());
+            impls.dedup();
+            let markers = [Marker::Circle, Marker::Square, Marker::Triangle, Marker::Diamond];
+            for (i, im) in impls.iter().enumerate() {
+                let series_pts: Vec<(f64, f64)> = pts
+                    .iter()
+                    .filter(|p| p.im == *im)
+                    .map(|p| (p.ai, p.measured_gflops))
+                    .collect();
+                plot.add_series(Series::scatter(
+                    im.to_string(),
+                    PALETTE[i % PALETTE.len()],
+                    markers[i % markers.len()],
+                    series_pts,
+                ));
+            }
+            let path = format!("{out_dir}/fig2_{name}.svg");
+            plot.save(&path)?;
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+
+    /// CSV of every point.
+    pub fn save_csv(&self, path: &str) -> Result<()> {
+        let rows: Vec<Vec<String>> = self
+            .points
+            .iter()
+            .map(|p| {
+                vec![
+                    p.matrix.clone(),
+                    p.class.to_string(),
+                    p.d.to_string(),
+                    p.im.to_string(),
+                    format!("{:.6}", p.ai),
+                    format!("{:.4}", p.roof_gflops),
+                    format!("{:.4}", p.measured_gflops),
+                    format!("{:.4}", p.efficiency()),
+                ]
+            })
+            .collect();
+        write_csv(
+            path,
+            &["matrix", "class", "d", "impl", "ai_model", "roof_gflops", "measured_gflops", "efficiency"],
+            &rows,
+        )
+    }
+
+    /// Text table: AI, roof, measured, efficiency per point.
+    pub fn render(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Fig.2 — model AI vs measured (β={:.1} GB/s, π={:.0} GFLOP/s)",
+                self.machine.beta_gbs, self.machine.pi_gflops
+            ),
+            &["Matrix", "d", "Impl", "AI model", "Roof GF/s", "Meas GF/s", "Meas/Roof"],
+        );
+        for p in &self.points {
+            t.row(vec![
+                p.matrix.clone(),
+                p.d.to_string(),
+                p.im.to_string(),
+                format!("{:.4}", p.ai),
+                format!("{:.2}", p.roof_gflops),
+                format!("{:.2}", p.measured_gflops),
+                format!("{:.2}", p.efficiency()),
+            ]);
+        }
+        t
+    }
+
+    /// The paper's §IV-D shape claims, as checkable predicates.
+    pub fn shape_checks(&self) -> Vec<(String, bool)> {
+        let mut checks = Vec::new();
+        let eff = |class: SparsityClass, im: Impl| -> Vec<f64> {
+            self.points
+                .iter()
+                .filter(|p| p.class == class && p.im == im)
+                .map(|p| p.efficiency())
+                .collect()
+        };
+        let mean = |xs: &[f64]| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        // (1) random: everything well below the roof (lower-bound AI
+        //     model + latency effects)
+        for im in [Impl::Csr, Impl::Opt, Impl::Csb] {
+            let e = mean(&eff(SparsityClass::Random, im));
+            checks.push((format!("random/{im}: efficiency {e:.2} < 1"), e < 1.0));
+        }
+        // (2) diagonal: the model is an upper bound
+        for im in [Impl::Csr, Impl::Opt, Impl::Csb] {
+            let e = mean(&eff(SparsityClass::Diagonal, im));
+            checks.push((format!("diagonal/{im}: efficiency {e:.2} < 1"), e < 1.0));
+        }
+        // (3) CSB is the closest to the roof on blocked matrices
+        let csb = mean(&eff(SparsityClass::Blocked, Impl::Csb));
+        let csr = mean(&eff(SparsityClass::Blocked, Impl::Csr));
+        checks.push((
+            format!("blocked: CSB efficiency ({csb:.2}) > CSR ({csr:.2})"),
+            csb > csr,
+        ));
+        checks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_fig2_runs() {
+        let cfg = ExperimentConfig {
+            scale: 0.02,
+            d_values: vec![1, 16],
+            threads: 1,
+            iters: 1,
+            warmup: 0,
+            ..Default::default()
+        };
+        let machine = MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 };
+        let data = run_fig2(&cfg, Some(machine)).unwrap();
+        assert_eq!(data.points.len(), 4 * 3 * 2);
+        assert!(data.points.iter().all(|p| p.ai > 0.0 && p.roof_gflops > 0.0));
+        let dir = std::env::temp_dir().join("spmm_fig2_test");
+        let paths = data.save_svgs(dir.to_str().unwrap()).unwrap();
+        assert_eq!(paths.len(), 4);
+        assert!(!data.shape_checks().is_empty());
+        // AI ordering: diagonal model AI must exceed random model AI
+        // at the same d (compare across the two matrices)
+        let ai_of = |m: &str, d: usize| {
+            data.points.iter().find(|p| p.matrix == m && p.d == d).unwrap().ai
+        };
+        assert!(ai_of("rajat31_p", 16) > ai_of("er_18_1", 16));
+    }
+}

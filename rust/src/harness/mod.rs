@@ -1,0 +1,24 @@
+//! The experiment harness: one function per paper table/figure, plus
+//! the model-validation and ablation studies (DESIGN.md §5 experiment
+//! index).
+//!
+//! Every experiment returns structured data *and* renders itself
+//! (text table, CSV, SVG where the paper has a figure), so the CLI,
+//! the bench binaries and the examples all share one code path.
+
+mod ablations;
+mod common;
+mod fig1;
+mod fig2;
+mod table_v;
+pub mod validate;
+
+pub use ablations::{
+    ablate_block_size, ablate_reorder, ablate_reuse_factor, ablate_threads, traffic_vs_d,
+    z_model_grid,
+};
+pub use common::{machine_params_cached, measure_kernel, CellMeasurement};
+pub use fig1::{run_fig1, Fig1Data};
+pub use fig2::{run_fig2, Fig2Data, Fig2Point};
+pub use table_v::{paper_table_v, run_table_v, TableVData, TableVRow};
+pub use validate::{run_validate_ai, ValidationRow};

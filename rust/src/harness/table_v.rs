@@ -1,0 +1,231 @@
+//! Table V: SpMM GFLOP/s for every proxy matrix × implementation ×
+//! dense width.
+
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::gen::{proxy_suite, SparsityClass};
+use crate::harness::common::measure_kernel;
+use crate::report::{fmt3, write_csv, Table};
+use crate::spmm::{build_native, Impl};
+
+/// One measured cell.
+#[derive(Debug, Clone)]
+pub struct TableVRow {
+    pub name: String,
+    pub paper_name: String,
+    pub class: SparsityClass,
+    pub n: usize,
+    pub nnz: usize,
+    pub d: usize,
+    pub im: Impl,
+    pub gflops: f64,
+}
+
+/// The full grid.
+#[derive(Debug, Clone, Default)]
+pub struct TableVData {
+    pub rows: Vec<TableVRow>,
+}
+
+/// The paper's Table V (GFLOP/s on one EPYC-7763 socket) for shape
+/// comparison: `(paper_name, d, impl_paper_name) -> gflops`.
+pub fn paper_table_v() -> Vec<(&'static str, usize, &'static str, f64)> {
+    // transcribed from the paper (CSR, MKL, CSB per d)
+    let data: [(&str, [[f64; 3]; 4]); 12] = [
+        ("road_usa", [[9.468, 11.0924, 14.240], [17.528, 17.289, 25.423], [32.768, 32.652, 36.234], [41.316, 38.567, 43.006]]),
+        ("hugebubbles-00010", [[5.875, 7.146, 9.696], [14.358, 13.490, 15.853], [21.743, 22.975, 28.322], [21.743, 22.975, 28.322]]),
+        ("asia_osm", [[7.301, 10.078, 10.668], [20.455, 21.481, 14.027], [33.975, 34.568, 35.093], [38.345, 38.450, 33.479]]),
+        ("333SP", [[5.284, 8.692, 13.057], [12.258, 23.625, 24.875], [28.784, 28.893, 35.227], [29.729, 30.106, 39.596]]),
+        ("com-Orkut", [[8.402, 18.340, 26.894], [14.505, 30.560, 38.501], [21.037, 29.053, 34.403], [12.256, 22.460, 32.017]]),
+        ("com-LiveJournal", [[11.536, 15.010, 26.984], [35.687, 44.851, 72.008], [66.266, 76.981, 92.091], [41.683, 53.544, 61.322]]),
+        ("uk-2002", [[16.701, 24.139, 16.204], [55.851, 78.538, 67.526], [146.583, 167.960, 148.299], [226.757, 205.945, 164.359]]),
+        ("ideal_diagonal_22", [[1.988, 1.167, 5.886], [23.546, 10.558, 6.840], [8.5888, 9.039, 14.202], [10.902, 11.023, 17.294]]),
+        ("rajat31", [[7.266, 9.565, 9.390], [26.944, 29.348, 22.601], [56.978, 59.644, 39.275], [74.064, 69.266, 53.911]]),
+        ("er_22_1", [[1.586, 1.634, 3.998], [4.957, 5.446, 6.226], [7.841, 8.194, 10.216], [8.547, 5.320, 11.509]]),
+        ("er_22_10", [[6.194, 7.833, 12.832], [13.921, 15.225, 12.373], [12.284, 12.374, 13.456], [10.0322, 11.185, 17.036]]),
+        ("er_22_20", [[8.091, 10.906, 16.283], [14.979, 16.249, 15.453], [13.575, 14.169, 13.483], [11.564, 10.429, 17.001]]),
+    ];
+    let ds = [1usize, 4, 16, 64];
+    let impls = ["CSR", "MKL", "CSB"];
+    let mut out = Vec::new();
+    for (name, grid) in data {
+        for (di, &d) in ds.iter().enumerate() {
+            for (ii, &im) in impls.iter().enumerate() {
+                out.push((name, d, im, grid[di][ii]));
+            }
+        }
+    }
+    out
+}
+
+/// Run the Table V sweep with the configured scale/impls/widths.
+pub fn run_table_v(cfg: &ExperimentConfig) -> Result<TableVData> {
+    let mut data = TableVData::default();
+    for proxy in proxy_suite() {
+        let csr = proxy.generate(cfg.scale);
+        for &im in &cfg.impls {
+            if im == Impl::Xla {
+                continue; // XLA is measured in bench_xla (fixed shapes)
+            }
+            let kernel = build_native(im, &csr, cfg.threads)?;
+            for &d in &cfg.d_values {
+                let m = measure_kernel(kernel.as_ref(), d, cfg.iters, cfg.warmup);
+                data.rows.push(TableVRow {
+                    name: proxy.name.to_string(),
+                    paper_name: proxy.paper_name.to_string(),
+                    class: proxy.class,
+                    n: csr.nrows,
+                    nnz: csr.nnz(),
+                    d,
+                    im,
+                    gflops: m.gflops,
+                });
+            }
+        }
+    }
+    Ok(data)
+}
+
+impl TableVData {
+    /// Lookup one cell.
+    pub fn get(&self, name: &str, d: usize, im: Impl) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.name == name && r.d == d && r.im == im)
+            .map(|r| r.gflops)
+    }
+
+    /// Render in the paper's layout: one row per matrix, columns
+    /// grouped by d then impl.
+    pub fn render(&self, cfg: &ExperimentConfig) -> Table {
+        let impls: Vec<Impl> = cfg.impls.iter().copied().filter(|&i| i != Impl::Xla).collect();
+        let mut headers: Vec<String> = vec!["Pattern".into(), "Matrix".into()];
+        for &d in &cfg.d_values {
+            for im in &impls {
+                headers.push(format!("d={d} {im}"));
+            }
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            "Table V — SpMM performance (GFLOP/s) across formats (proxy dataset)",
+            &hdr_refs,
+        );
+        let mut names: Vec<(SparsityClass, String)> = Vec::new();
+        for r in &self.rows {
+            if !names.iter().any(|(_, n)| n == &r.name) {
+                names.push((r.class, r.name.clone()));
+            }
+        }
+        for (class, name) in names {
+            let mut cells = vec![class.to_string(), name.clone()];
+            for &d in &cfg.d_values {
+                for &im in &impls {
+                    cells.push(self.get(&name, d, im).map(fmt3).unwrap_or_else(|| "-".into()));
+                }
+            }
+            t.row(cells);
+        }
+        t
+    }
+
+    /// Write the raw grid as CSV.
+    pub fn save_csv(&self, path: &str) -> Result<()> {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.name.clone(),
+                    r.paper_name.clone(),
+                    r.class.to_string(),
+                    r.n.to_string(),
+                    r.nnz.to_string(),
+                    r.d.to_string(),
+                    r.im.to_string(),
+                    format!("{:.4}", r.gflops),
+                ]
+            })
+            .collect();
+        write_csv(path, &["name", "paper_name", "class", "n", "nnz", "d", "impl", "gflops"], &rows)
+    }
+
+    /// Shape checks against the paper's claims (§IV-C): returns
+    /// human-readable pass/fail lines. Used by EXPERIMENTS.md and the
+    /// integration tests.
+    pub fn shape_checks(&self, cfg: &ExperimentConfig) -> Vec<(String, bool)> {
+        let mut checks = Vec::new();
+        let class_mean = |class: SparsityClass, d: usize| -> f64 {
+            let xs: Vec<f64> = self
+                .rows
+                .iter()
+                .filter(|r| r.class == class && r.d == d)
+                .map(|r| r.gflops)
+                .collect();
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        // 1. random lowest, scale-free highest (paper §IV-C) at d=16
+        let d_mid = *cfg.d_values.get(2).unwrap_or(&16);
+        let rand = class_mean(SparsityClass::Random, d_mid);
+        let sf = class_mean(SparsityClass::ScaleFree, d_mid);
+        let blocked = class_mean(SparsityClass::Blocked, d_mid);
+        checks.push((
+            format!("scale-free ({sf:.2}) > random ({rand:.2}) at d={d_mid}"),
+            sf > rand,
+        ));
+        checks.push((
+            format!("blocked ({blocked:.2}) > random ({rand:.2}) at d={d_mid}"),
+            blocked > rand,
+        ));
+        // 2. performance improves from d=1 to d=16 for every class
+        if cfg.d_values.contains(&1) && cfg.d_values.contains(&16) {
+            for class in [
+                SparsityClass::Blocked,
+                SparsityClass::ScaleFree,
+                SparsityClass::Diagonal,
+                SparsityClass::Random,
+            ] {
+                let lo = class_mean(class, 1);
+                let hi = class_mean(class, 16);
+                checks.push((format!("{class}: d=16 ({hi:.2}) > d=1 ({lo:.2})"), hi > lo));
+            }
+        }
+        checks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table_has_all_cells() {
+        let p = paper_table_v();
+        assert_eq!(p.len(), 12 * 4 * 3);
+        // spot check against the published table
+        assert!(p.contains(&("road_usa", 1, "CSR", 9.468)));
+        assert!(p.contains(&("er_22_20", 64, "CSB", 17.001)));
+    }
+
+    #[test]
+    fn tiny_sweep_produces_grid() {
+        let cfg = ExperimentConfig {
+            scale: 0.02,
+            d_values: vec![1, 4],
+            threads: 1,
+            iters: 1,
+            warmup: 0,
+            ..Default::default()
+        };
+        let data = run_table_v(&cfg).unwrap();
+        assert_eq!(data.rows.len(), 12 * 3 * 2);
+        assert!(data.rows.iter().all(|r| r.gflops > 0.0));
+        let t = data.render(&cfg);
+        assert_eq!(t.rows.len(), 12);
+        let checks = data.shape_checks(&cfg);
+        assert!(!checks.is_empty());
+    }
+}

@@ -1,0 +1,157 @@
+//! V1 (ours): validate the analytic AI models against *simulated*
+//! memory traffic.
+//!
+//! For each representative matrix, the exact CSR and CSB access
+//! streams are replayed through the cache-hierarchy simulator; the
+//! resulting DRAM byte count is compared with the class model's byte
+//! denominator (Eqs. 2/3/4/6). This separates "model error" from
+//! "implementation inefficiency" — the confound the paper's
+//! limitations section (§V) concedes it cannot untangle from timing
+//! alone.
+
+use crate::cachesim::{trace_csb_spmm, trace_csr_spmm, Hierarchy, HierarchyConfig};
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::gen::{representative_suite, SparsityClass};
+use crate::model::AiParams;
+use crate::pattern::classify;
+use crate::report::{write_csv, Table};
+use crate::sparse::Csb;
+
+/// One validation row: modeled vs simulated bytes.
+#[derive(Debug, Clone)]
+pub struct ValidationRow {
+    pub matrix: String,
+    pub class: SparsityClass,
+    pub d: usize,
+    pub n: usize,
+    pub nnz: usize,
+    /// Class-model byte denominator.
+    pub model_bytes: f64,
+    /// Simulated DRAM bytes of the CSR kernel's stream.
+    pub sim_csr_bytes: u64,
+    /// Simulated DRAM bytes of the CSB kernel's stream.
+    pub sim_csb_bytes: u64,
+}
+
+impl ValidationRow {
+    /// simulated / modeled for CSR — 1.0 means the analytic model
+    /// matches the simulated hierarchy exactly.
+    pub fn csr_ratio(&self) -> f64 {
+        self.sim_csr_bytes as f64 / self.model_bytes
+    }
+    pub fn csb_ratio(&self) -> f64 {
+        self.sim_csb_bytes as f64 / self.model_bytes
+    }
+}
+
+/// Run the validation at a reduced scale (the simulator replays every
+/// access; keep `cfg.scale` small — the CLI defaults this experiment
+/// to scale/8). The hierarchy is the `tiny` config so that `B` exceeds
+/// the simulated L3 at the reduced matrix sizes — the same
+/// "matrices exceed on-chip cache" regime the paper enforces (§IV-A)
+/// at full scale.
+pub fn run_validate_ai(cfg: &ExperimentConfig) -> Result<Vec<ValidationRow>> {
+    let mut rows = Vec::new();
+    for proxy in representative_suite() {
+        let csr = proxy.generate(cfg.scale);
+        let cls = classify(&csr);
+        let csb = Csb::from_csr(&csr);
+        for &d in &cfg.d_values {
+            let p = AiParams::new(csr.nrows, d, csr.nnz());
+            let model_bytes = cls.model.bytes(p);
+            let mut h1 = Hierarchy::new(HierarchyConfig::tiny());
+            trace_csr_spmm(&csr, d, &mut h1);
+            let mut h2 = Hierarchy::new(HierarchyConfig::tiny());
+            trace_csb_spmm(&csb, d, &mut h2);
+            rows.push(ValidationRow {
+                matrix: proxy.name.to_string(),
+                class: proxy.class,
+                d,
+                n: csr.nrows,
+                nnz: csr.nnz(),
+                model_bytes,
+                sim_csr_bytes: h1.report().dram_bytes,
+                sim_csb_bytes: h2.report().dram_bytes,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render validation rows.
+pub fn render(rows: &[ValidationRow]) -> Table {
+    let mut t = Table::new(
+        "V1 — analytic model bytes vs simulated DRAM bytes (LRU L1/L2/L3)",
+        &["Matrix", "Class", "d", "Model MB", "Sim CSR MB", "Sim CSB MB", "CSR/Model", "CSB/Model"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.matrix.clone(),
+            r.class.to_string(),
+            r.d.to_string(),
+            format!("{:.2}", r.model_bytes / 1e6),
+            format!("{:.2}", r.sim_csr_bytes as f64 / 1e6),
+            format!("{:.2}", r.sim_csb_bytes as f64 / 1e6),
+            format!("{:.2}", r.csr_ratio()),
+            format!("{:.2}", r.csb_ratio()),
+        ]);
+    }
+    t
+}
+
+/// CSV output.
+pub fn save_csv(rows: &[ValidationRow], path: &str) -> Result<()> {
+    let data: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.matrix.clone(),
+                r.class.to_string(),
+                r.d.to_string(),
+                r.n.to_string(),
+                r.nnz.to_string(),
+                format!("{:.0}", r.model_bytes),
+                r.sim_csr_bytes.to_string(),
+                r.sim_csb_bytes.to_string(),
+                format!("{:.4}", r.csr_ratio()),
+                format!("{:.4}", r.csb_ratio()),
+            ]
+        })
+        .collect();
+    write_csv(
+        path,
+        &["matrix", "class", "d", "n", "nnz", "model_bytes", "sim_csr_bytes", "sim_csb_bytes", "csr_ratio", "csb_ratio"],
+        &data,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_orders_hold() {
+        let cfg = ExperimentConfig {
+            scale: 0.02,
+            d_values: vec![16],
+            threads: 1,
+            iters: 1,
+            warmup: 0,
+            ..Default::default()
+        };
+        let rows = run_validate_ai(&cfg).unwrap();
+        assert_eq!(rows.len(), 4);
+        let by_name = |n: &str| rows.iter().find(|r| r.matrix == n).unwrap();
+        let er = by_name("er_18_1");
+        let diag = by_name("rajat31_p");
+        // the random model is a worst case: simulated traffic must not
+        // exceed it by much (allow simulator conflict-miss slack)
+        assert!(er.csr_ratio() < 1.4, "er ratio {}", er.csr_ratio());
+        // diagonal: the model is an optimistic lower bound on traffic —
+        // simulation can only exceed it
+        assert!(diag.csr_ratio() > 0.8, "diag ratio {}", diag.csr_ratio());
+        let t = render(&rows);
+        assert_eq!(t.rows.len(), 4);
+    }
+}

@@ -1,0 +1,63 @@
+//! # spmm-roofline
+//!
+//! Reproduction of *"Sparsity-Aware Roofline Models for Sparse
+//! Matrix-Matrix Multiplication"* (Qian, Ramadan, Anubha, Azad — CS.DC
+//! 2026) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The library provides:
+//!
+//! * **Sparse substrate** ([`sparse`], [`gen`]): COO/CSR/CSC/CSB/ELL
+//!   formats, conversions, MatrixMarket IO, and structural generators
+//!   (Erdős–Rényi, banded, mesh/blocked, scale-free) that reproduce the
+//!   paper's Table III dataset at configurable scale.
+//! * **SpMM kernels** ([`spmm`]): row-parallel CSR, a register-blocked
+//!   d-specialised "OPT" kernel (the MKL stand-in), block-parallel CSB,
+//!   and padded ELL — all multithreaded over scoped threads.
+//! * **Sparsity-aware roofline models** ([`model`]): the paper's four
+//!   arithmetic-intensity formulas (Eqs. 2, 3, 4, 6), the blocked-column
+//!   occupancy model `z = t(1-e^{-D/t})`, and the scale-free hub-mass
+//!   derivation from the appendix.
+//! * **Pattern classification** ([`pattern`]): structural statistics
+//!   (bandwidth profile, power-law MLE, block fill) that map a matrix to
+//!   the roofline model that governs it.
+//! * **Cache simulation** ([`cachesim`]): a set-associative LRU
+//!   L1/L2/L3+DRAM hierarchy that replays exact SpMM access streams to
+//!   *measure* memory traffic against the analytic models.
+//! * **A roofline-guided execution engine** ([`coordinator`]): classify →
+//!   predict → route each SpMM job to the predicted-best kernel, with
+//!   prediction-vs-measurement bookkeeping.
+//! * **XLA/PJRT runtime** ([`runtime`]): loads AOT artifacts produced by
+//!   the JAX/Pallas compile path (`python/compile/`) and exposes them as
+//!   a fourth SpMM implementation.
+//! * **Experiment harness** ([`harness`], [`report`]): regenerates every
+//!   table and figure in the paper's evaluation (Table V, Fig. 1, Fig. 2)
+//!   plus model-validation and ablation studies.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod cachesim;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod gen;
+pub mod harness;
+pub mod membench;
+pub mod metrics;
+pub mod model;
+pub mod pattern;
+pub mod report;
+pub mod runtime;
+pub mod sparse;
+pub mod spmm;
+pub mod testutil;
+pub mod workloads;
+
+pub use error::{Error, Result};
+
+/// Bytes per double-precision value (the paper stores all matrix values
+/// as f64).
+pub const BYTES_VAL: usize = 8;
+/// Bytes per sparse index (the paper stores indices as 32-bit integers).
+pub const BYTES_IDX: usize = 4;

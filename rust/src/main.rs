@@ -1,0 +1,9 @@
+//! `repro` — CLI entry point for the spmm-roofline reproduction.
+//! See `repro --help` (or `cli::usage`) for commands.
+
+fn main() {
+    if let Err(e) = spmm_roofline::cli::run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,14 @@
+//! Machine calibration: a STREAM port for `β` and an FMA peak loop for
+//! `π`.
+//!
+//! The paper measured `β = 122.6 GB/s` with McCalpin's STREAM on one
+//! EPYC-7763 socket (§IV-B) and used it as the roofline's bandwidth
+//! ceiling. This module reimplements the four STREAM kernels (Copy,
+//! Scale, Add, Triad) plus a peak-FLOP microbenchmark so the roofline
+//! is calibrated to *this* testbed.
+
+mod stream;
+
+pub use stream::{
+    bandwidth_ladder, measure_machine, peak_flops_gflops, stream_benchmark, StreamResult,
+};

@@ -1,0 +1,236 @@
+//! STREAM (Copy/Scale/Add/Triad) and peak-FLOP microbenchmarks.
+
+use crate::metrics::Timer;
+use crate::model::MachineParams;
+use crate::spmm::pool::parallel_ranges;
+
+/// Per-kernel best bandwidth in GB/s, STREAM-style (best of `reps`).
+#[derive(Debug, Clone, Copy)]
+pub struct StreamResult {
+    pub copy_gbs: f64,
+    pub scale_gbs: f64,
+    pub add_gbs: f64,
+    pub triad_gbs: f64,
+    /// Array length used (elements per array).
+    pub len: usize,
+}
+
+impl StreamResult {
+    /// The bandwidth the roofline uses — STREAM convention is to quote
+    /// Triad; we follow the paper and take the peak across kernels.
+    pub fn beta_gbs(&self) -> f64 {
+        self.copy_gbs.max(self.scale_gbs).max(self.add_gbs).max(self.triad_gbs)
+    }
+}
+
+fn touch(x: f64) {
+    // prevent the optimizer from deleting benchmark loops
+    unsafe { std::ptr::read_volatile(&x) };
+}
+
+/// Run the four STREAM kernels over arrays of `len` f64s with
+/// `threads` workers, `reps` timed repetitions each (best-of).
+/// STREAM's rule of thumb: `len` ≥ 4× the largest cache.
+pub fn stream_benchmark(len: usize, threads: usize, reps: usize) -> StreamResult {
+    let mut a = vec![1.0f64; len];
+    let mut b = vec![2.0f64; len];
+    let mut c = vec![0.0f64; len];
+    let scalar = 3.0f64;
+
+    // RawParts lets scoped threads write disjoint ranges.
+    struct Raw(*mut f64);
+    unsafe impl Send for Raw {}
+    unsafe impl Sync for Raw {}
+
+    let mut best = [f64::INFINITY; 4];
+    for _ in 0..reps.max(1) {
+        // Copy: c = a          (2 arrays moved)
+        let t = Timer::start();
+        {
+            let (ap, cp) = (Raw(a.as_mut_ptr()), Raw(c.as_mut_ptr()));
+            parallel_ranges(len, threads, |r| {
+                let (ap, cp) = (&ap, &cp);
+                unsafe {
+                    for i in r {
+                        *cp.0.add(i) = *ap.0.add(i);
+                    }
+                }
+            });
+        }
+        best[0] = best[0].min(t.elapsed_secs());
+
+        // Scale: b = s*c       (2 arrays)
+        let t = Timer::start();
+        {
+            let (bp, cp) = (Raw(b.as_mut_ptr()), Raw(c.as_mut_ptr()));
+            parallel_ranges(len, threads, |r| {
+                let (bp, cp) = (&bp, &cp);
+                unsafe {
+                    for i in r {
+                        *bp.0.add(i) = scalar * *cp.0.add(i);
+                    }
+                }
+            });
+        }
+        best[1] = best[1].min(t.elapsed_secs());
+
+        // Add: c = a + b       (3 arrays)
+        let t = Timer::start();
+        {
+            let (ap, bp, cp) = (Raw(a.as_mut_ptr()), Raw(b.as_mut_ptr()), Raw(c.as_mut_ptr()));
+            parallel_ranges(len, threads, |r| {
+                let (ap, bp, cp) = (&ap, &bp, &cp);
+                unsafe {
+                    for i in r {
+                        *cp.0.add(i) = *ap.0.add(i) + *bp.0.add(i);
+                    }
+                }
+            });
+        }
+        best[2] = best[2].min(t.elapsed_secs());
+
+        // Triad: a = b + s*c   (3 arrays)
+        let t = Timer::start();
+        {
+            let (ap, bp, cp) = (Raw(a.as_mut_ptr()), Raw(b.as_mut_ptr()), Raw(c.as_mut_ptr()));
+            parallel_ranges(len, threads, |r| {
+                let (ap, bp, cp) = (&ap, &bp, &cp);
+                unsafe {
+                    for i in r {
+                        *ap.0.add(i) = *bp.0.add(i) + scalar * *cp.0.add(i);
+                    }
+                }
+            });
+        }
+        best[3] = best[3].min(t.elapsed_secs());
+    }
+    touch(a[len / 2] + b[len / 3] + c[len / 7]);
+
+    let gb = |arrays: f64, secs: f64| arrays * len as f64 * 8.0 / secs / 1e9;
+    StreamResult {
+        copy_gbs: gb(2.0, best[0]),
+        scale_gbs: gb(2.0, best[1]),
+        add_gbs: gb(3.0, best[2]),
+        triad_gbs: gb(3.0, best[3]),
+        len,
+    }
+}
+
+/// Peak FP64 GFLOP/s estimate: independent FMA chains over registers,
+/// fully unrolled, `threads` workers. This measures the *practical*
+/// compute roof the roofline's `π` needs (SpMM never gets near it —
+/// the point of measuring is to place the ridge).
+pub fn peak_flops_gflops(threads: usize) -> f64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    const ITERS: usize = 4_000_000;
+    const CHAINS: usize = 8;
+    let nanos = AtomicU64::new(0);
+    parallel_ranges(threads.max(1), threads.max(1), |_| {
+        let mut acc = [1.000001f64; CHAINS];
+        let x = 1.0000001f64;
+        let y = 0.9999999f64;
+        let t = Timer::start();
+        for _ in 0..ITERS {
+            for a in acc.iter_mut() {
+                *a = a.mul_add(x, y);
+            }
+        }
+        let dt = (t.elapsed_secs() * 1e9) as u64;
+        nanos.fetch_max(dt, Ordering::Relaxed);
+        touch(acc.iter().sum());
+    });
+    let secs = nanos.load(Ordering::Relaxed) as f64 / 1e9;
+    let flops = (threads.max(1) * ITERS * CHAINS * 2) as f64;
+    flops / secs / 1e9
+}
+
+/// Calibrate the roofline's machine parameters on this host:
+/// `β` from STREAM (best kernel), `π` from the FMA loop.
+pub fn measure_machine(threads: usize) -> MachineParams {
+    // 32 MiB arrays — beyond any cache on this box, quick to run
+    let s = stream_benchmark(4 << 20, threads, 3);
+    MachineParams { beta_gbs: s.beta_gbs(), pi_gflops: peak_flops_gflops(threads) }
+}
+
+/// Measure the bandwidth *ladder* for the cache-aware roofline
+/// (`model::CacheAwareRoofline`): STREAM triad at working sets sized
+/// for each cache level reported by the OS, plus a beyond-cache DRAM
+/// point. Returns ceilings ordered by capacity.
+pub fn bandwidth_ladder(threads: usize) -> Vec<crate::model::BandwidthCeiling> {
+    use crate::model::BandwidthCeiling;
+    let read_kb = |path: &str| -> Option<usize> {
+        let s = std::fs::read_to_string(path).ok()?;
+        s.trim().trim_end_matches('K').parse::<usize>().ok()
+    };
+    let base = "/sys/devices/system/cpu/cpu0/cache";
+    let mut levels: Vec<(String, usize)> = Vec::new();
+    for idx in 0..5 {
+        let level = std::fs::read_to_string(format!("{base}/index{idx}/level"))
+            .map(|s| s.trim().to_string())
+            .unwrap_or_default();
+        let typ = std::fs::read_to_string(format!("{base}/index{idx}/type"))
+            .map(|s| s.trim().to_string())
+            .unwrap_or_default();
+        if typ == "Instruction" || level.is_empty() {
+            continue;
+        }
+        if let Some(kb) = read_kb(&format!("{base}/index{idx}/size")) {
+            levels.push((format!("L{level}"), kb << 10));
+        }
+    }
+    if levels.is_empty() {
+        // sensible defaults when /sys is absent
+        levels = vec![("L1".into(), 32 << 10), ("L2".into(), 1 << 20), ("L3".into(), 16 << 20)];
+    }
+    levels.sort_by_key(|&(_, cap)| cap);
+    levels.dedup_by_key(|(_, cap)| *cap);
+
+    let mut out = Vec::new();
+    for (name, cap) in &levels {
+        // three arrays must fit in the level: len = cap / (3 arrays × 8B) / 2 headroom
+        let len = (cap / (3 * 8 * 2)).max(1 << 10);
+        let s = stream_benchmark(len, threads, 5);
+        out.push(BandwidthCeiling {
+            level: name.clone(),
+            capacity_bytes: *cap,
+            beta_gbs: s.triad_gbs,
+        });
+    }
+    // DRAM: 4× the largest cache
+    let dram_len = (levels.last().unwrap().1 * 4 / 8).max(4 << 20);
+    let s = stream_benchmark(dram_len.min(64 << 20), threads, 2);
+    out.push(BandwidthCeiling {
+        level: "DRAM".into(),
+        capacity_bytes: usize::MAX,
+        beta_gbs: s.triad_gbs,
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_produces_positive_bandwidth() {
+        let r = stream_benchmark(1 << 18, 1, 1);
+        for g in [r.copy_gbs, r.scale_gbs, r.add_gbs, r.triad_gbs] {
+            assert!(g > 0.1 && g < 10_000.0, "{g}");
+        }
+        assert!(r.beta_gbs() >= r.triad_gbs);
+    }
+
+    #[test]
+    fn peak_flops_positive() {
+        let p = peak_flops_gflops(1);
+        assert!(p > 0.1 && p < 10_000.0, "{p}");
+    }
+
+    #[test]
+    fn measure_machine_fields() {
+        let m = measure_machine(1);
+        assert!(m.beta_gbs > 0.0);
+        assert!(m.pi_gflops > 0.0);
+        assert!(m.ridge_ai() > 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Measurement utilities: timers, summary statistics, GFLOP/s
+//! computation, and a tiny benchmark loop used by the harness and the
+//! `rust/benches/*` binaries (criterion is unavailable offline; this is
+//! the stand-in).
+
+mod stats;
+mod timer;
+
+pub use stats::{Summary, ci95_halfwidth, mean, median, stddev};
+pub use timer::Timer;
+
+/// FLOP count of an SpMM `C = A·B`: one multiply + one add per stored
+/// nonzero per dense column (paper Eq. 1, `FLOP = 2·d·nnz`).
+pub fn spmm_flops(nnz: usize, d: usize) -> f64 {
+    2.0 * nnz as f64 * d as f64
+}
+
+/// Convert a FLOP count and elapsed seconds to GFLOP/s.
+pub fn gflops(flops: f64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    flops / secs / 1e9
+}
+
+/// Result of [`bench_loop`]: per-iteration seconds plus the derived
+/// summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Raw per-iteration wall-clock seconds (after warmup).
+    pub samples: Vec<f64>,
+    /// Summary statistics over `samples`.
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// Median seconds per iteration — the robust statistic every report
+    /// uses.
+    pub fn median_secs(&self) -> f64 {
+        self.summary.median
+    }
+    /// Minimum ("best") seconds per iteration.
+    pub fn min_secs(&self) -> f64 {
+        self.summary.min
+    }
+}
+
+/// Run `f` for `warmup` untimed iterations then `iters` timed
+/// iterations, returning per-iteration timings.
+///
+/// The closure receives the (0-based) timed-iteration index so callers
+/// can rotate buffers if needed.
+pub fn bench_loop<F: FnMut(usize)>(warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for i in 0..warmup {
+        f(i);
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t = Timer::start();
+        f(i);
+        samples.push(t.elapsed_secs());
+    }
+    let summary = Summary::of(&samples);
+    BenchResult { samples, summary }
+}
+
+/// Adaptive variant: keeps iterating until at least `min_iters`
+/// iterations *and* `min_secs` of cumulative measured time have
+/// accumulated (capped at `max_iters`). Mirrors what criterion does,
+/// cheaply.
+pub fn bench_adaptive<F: FnMut(usize)>(
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    min_secs: f64,
+    mut f: F,
+) -> BenchResult {
+    for i in 0..warmup {
+        f(i);
+    }
+    let mut samples = Vec::new();
+    let mut total = 0.0;
+    let mut i = 0;
+    while i < max_iters && (i < min_iters || total < min_secs) {
+        let t = Timer::start();
+        f(i);
+        let dt = t.elapsed_secs();
+        samples.push(dt);
+        total += dt;
+        i += 1;
+    }
+    let summary = Summary::of(&samples);
+    BenchResult { samples, summary }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_matches_eq1() {
+        // FLOP = 2 d nnz
+        assert_eq!(spmm_flops(100, 4), 800.0);
+        assert_eq!(spmm_flops(0, 64), 0.0);
+    }
+
+    #[test]
+    fn gflops_basic() {
+        assert!((gflops(2e9, 1.0) - 2.0).abs() < 1e-12);
+        assert_eq!(gflops(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn bench_loop_counts() {
+        let mut calls = 0usize;
+        let r = bench_loop(2, 5, |_| calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.median_secs() >= 0.0);
+    }
+
+    #[test]
+    fn bench_adaptive_bounds() {
+        let mut calls = 0usize;
+        let r = bench_adaptive(0, 3, 10, 0.0, |_| calls += 1);
+        assert_eq!(r.samples.len(), 3);
+        let r = bench_adaptive(0, 1, 4, f64::INFINITY, |_| calls += 1);
+        assert_eq!(r.samples.len(), 4);
+    }
+}

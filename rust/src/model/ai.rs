@@ -1,0 +1,258 @@
+//! Arithmetic-intensity formulas (paper Eqs. 2, 3, 4, 6).
+//!
+//! All byte counts follow the paper's storage model: 8-byte values,
+//! 4-byte indices (§III). `FLOP = 2·d·nnz` (Eq. 1).
+
+use crate::model::blocked::expected_z;
+use crate::model::scalefree::hub_mass_fraction;
+
+/// Shared problem parameters: `A` is `n × n` with `nnz` stored values,
+/// `B` is `n × d`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AiParams {
+    pub n: usize,
+    pub d: usize,
+    pub nnz: usize,
+}
+
+impl AiParams {
+    pub fn new(n: usize, d: usize, nnz: usize) -> Self {
+        AiParams { n, d, nnz }
+    }
+    /// `FLOP = 2·d·nnz` (Eq. 1).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.d as f64 * self.nnz as f64
+    }
+}
+
+/// Which of the paper's four structural regimes a model invocation
+/// refers to, with the regime-specific parameters attached.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SparsityModel {
+    /// Eq. 2 — uniformly random nonzeros, zero reuse of B (lower
+    /// bound).
+    Random,
+    /// Eq. 3 — banded/diagonal, perfect reuse of B (upper bound).
+    Diagonal,
+    /// Eq. 4 — block-structured; `n_blocks` nonzero `t × t` blocks.
+    Blocked { t: usize, n_blocks: usize },
+    /// Eq. 6 — power-law degree distribution with exponent `alpha`;
+    /// hubs are the top `f` fraction of nodes (paper: f = 0.1%).
+    ScaleFree { alpha: f64, f: f64 },
+}
+
+impl SparsityModel {
+    /// Arithmetic intensity (FLOPs/byte) under this model.
+    pub fn ai(&self, p: AiParams) -> f64 {
+        match *self {
+            SparsityModel::Random => ai_random(p),
+            SparsityModel::Diagonal => ai_diagonal(p),
+            SparsityModel::Blocked { t, n_blocks } => ai_blocked(p, t, n_blocks),
+            SparsityModel::ScaleFree { alpha, f } => ai_scalefree(p, alpha, f),
+        }
+    }
+
+    /// Modeled total DRAM bytes (the AI denominator).
+    pub fn bytes(&self, p: AiParams) -> f64 {
+        match *self {
+            SparsityModel::Random => bytes_random(p),
+            SparsityModel::Diagonal => bytes_diagonal(p),
+            SparsityModel::Blocked { t, n_blocks } => bytes_blocked(p, t, n_blocks),
+            SparsityModel::ScaleFree { alpha, f } => bytes_scalefree(p, alpha, f),
+        }
+    }
+
+    /// Human-readable name used in figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SparsityModel::Random => "Random",
+            SparsityModel::Diagonal => "Diagonal",
+            SparsityModel::Blocked { .. } => "Blocked",
+            SparsityModel::ScaleFree { .. } => "Scale-free",
+        }
+    }
+}
+
+/// Eq. 2 denominator: `(12 + 8d)·nnz + 8nd`.
+///
+/// `A` costs ≈12 bytes/nonzero (8 value + 4 column index; the paper
+/// folds the `(n+1)·4` row-pointer bytes into the ≈), every nonzero
+/// re-loads a d-wide row of `B` (no reuse), and `C` is written once.
+pub fn bytes_random(p: AiParams) -> f64 {
+    let (n, d, nnz) = (p.n as f64, p.d as f64, p.nnz as f64);
+    (12.0 + 8.0 * d) * nnz + 8.0 * n * d
+}
+
+/// Eq. 2 — AI under random sparsity (the paper's lower bound).
+pub fn ai_random(p: AiParams) -> f64 {
+    p.flops() / bytes_random(p)
+}
+
+/// Eq. 3 denominator: `12·nnz + 16nd` — `A` streamed once, `B` loaded
+/// into cache exactly once (8nd) and fully reused, `C` written once
+/// (8nd).
+pub fn bytes_diagonal(p: AiParams) -> f64 {
+    let (n, d, nnz) = (p.n as f64, p.d as f64, p.nnz as f64);
+    12.0 * nnz + 16.0 * n * d
+}
+
+/// Eq. 3 — AI under diagonal/banded sparsity (the paper's upper
+/// bound).
+pub fn ai_diagonal(p: AiParams) -> f64 {
+    p.flops() / bytes_diagonal(p)
+}
+
+/// Eq. 4 denominator: `8·nnz + 2·d·N·z + 8nd` with
+/// `z = t(1 − e^{−D/t})`, `D = nnz/N`.
+///
+/// `B` traffic is `8·d·N·z` scaled by the paper's ¼ cache-reuse
+/// heuristic → `2dNz`. Note the published equation charges `8·nnz`
+/// for `A` even though the surrounding text derives `12·nnz`; we
+/// implement the equation as printed (and expose
+/// [`ai_blocked_text_variant`] with the 12-byte A term for the
+/// ablation in EXPERIMENTS.md).
+pub fn bytes_blocked(p: AiParams, t: usize, n_blocks: usize) -> f64 {
+    let (n, d, nnz) = (p.n as f64, p.d as f64, p.nnz as f64);
+    let nb = n_blocks.max(1) as f64;
+    let z = expected_z(t as f64, nnz / nb);
+    8.0 * nnz + 2.0 * d * nb * z + 8.0 * n * d
+}
+
+/// Eq. 4 — AI under block sparsity.
+pub fn ai_blocked(p: AiParams, t: usize, n_blocks: usize) -> f64 {
+    p.flops() / bytes_blocked(p, t, n_blocks)
+}
+
+/// Variant of Eq. 4 with the text's `12·nnz` A-traffic term (the
+/// paper's prose and equation disagree; see EXPERIMENTS.md §Ablations).
+pub fn ai_blocked_text_variant(p: AiParams, t: usize, n_blocks: usize) -> f64 {
+    let (n, d, nnz) = (p.n as f64, p.d as f64, p.nnz as f64);
+    let nb = n_blocks.max(1) as f64;
+    let z = expected_z(t as f64, nnz / nb);
+    p.flops() / (12.0 * nnz + 2.0 * d * nb * z + 8.0 * n * d)
+}
+
+/// Eq. 6 denominator:
+/// `12nnz + 8d(nnz − nnz_hub) + 8d·n_hub + 8nd`, with
+/// `nnz_hub = nnz·f^{(α−2)/(α−1)}` (Eq. 5) and `n_hub = f·n`.
+///
+/// Hub rows of `B` stay cached (paid once, `8d·n_hub`); the non-hub
+/// remainder behaves like the random model.
+pub fn bytes_scalefree(p: AiParams, alpha: f64, f: f64) -> f64 {
+    let (n, d, nnz) = (p.n as f64, p.d as f64, p.nnz as f64);
+    let nnz_hub = nnz * hub_mass_fraction(alpha, f);
+    let n_hub = f * n;
+    12.0 * nnz + 8.0 * d * (nnz - nnz_hub) + 8.0 * d * n_hub + 8.0 * n * d
+}
+
+/// Eq. 6 — AI under scale-free sparsity.
+pub fn ai_scalefree(p: AiParams, alpha: f64, f: f64) -> f64 {
+    p.flops() / bytes_scalefree(p, alpha, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: AiParams = AiParams { n: 1 << 22, d: 16, nnz: 41_942_990 };
+
+    #[test]
+    fn flops_eq1() {
+        assert_eq!(P.flops(), 2.0 * 16.0 * 41_942_990.0);
+    }
+
+    #[test]
+    fn random_matches_closed_form() {
+        // AI(Random) = 2d·nnz / ((12+8d)nnz + 8nd)
+        let ai = ai_random(P);
+        let d = 16.0;
+        let nnz = 41_942_990.0;
+        let n = (1u64 << 22) as f64;
+        let want = 2.0 * d * nnz / ((12.0 + 8.0 * d) * nnz + 8.0 * n * d);
+        assert!((ai - want).abs() < 1e-15);
+        // sanity: random AI is below 2/8 = 0.25 * d/(d+...) — always < 0.25·?
+        assert!(ai < 0.25);
+    }
+
+    #[test]
+    fn diagonal_exceeds_random() {
+        assert!(ai_diagonal(P) > ai_random(P));
+    }
+
+    #[test]
+    fn diagonal_d_scaling_saturates() {
+        // as d → ∞ with nnz fixed, AI(Diagonal) → 2·nnz/(16n)... check monotone in d
+        let lo = ai_diagonal(AiParams { d: 1, ..P });
+        let hi = ai_diagonal(AiParams { d: 64, ..P });
+        assert!(hi > lo);
+        // limit: 2 d nnz/(12nnz + 16nd) -> 2nnz/(16n) as d->inf
+        let limit = 2.0 * P.nnz as f64 / (16.0 * P.n as f64);
+        let big = ai_diagonal(AiParams { d: 1 << 20, ..P });
+        assert!((big - limit).abs() / limit < 0.01);
+    }
+
+    #[test]
+    fn blocked_between_random_and_diagonal() {
+        // dense-ish blocks: D large -> z ~ t -> big reuse
+        let t = 4096usize;
+        let n_blocks = P.nnz / 512; // D = 512
+        let ai = ai_blocked(P, t, n_blocks);
+        assert!(ai > ai_random(P), "blocked {ai} random {}", ai_random(P));
+        assert!(ai < ai_diagonal(P), "blocked {ai} diagonal {}", ai_diagonal(P));
+    }
+
+    #[test]
+    fn blocked_degenerate_single_entry_blocks() {
+        // D = 1: z = t(1-e^{-1/t}) ≈ 1 → B traffic ≈ 2·d·nnz (the ¼ of
+        // random's 8d·nnz); AI approaches (but beats) random
+        let ai = ai_blocked(P, 1024, P.nnz);
+        assert!(ai > ai_random(P));
+        assert!(ai < ai_diagonal(P));
+    }
+
+    #[test]
+    fn scalefree_between_random_and_diagonal() {
+        let ai = ai_scalefree(P, 2.2, 0.001);
+        assert!(ai > ai_random(P));
+        assert!(ai < ai_diagonal(P));
+    }
+
+    #[test]
+    fn scalefree_more_hubs_higher_ai() {
+        let a = ai_scalefree(P, 2.2, 0.001);
+        let b = ai_scalefree(P, 2.2, 0.01);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn scalefree_alpha_near_2_concentrates() {
+        // α→2: hub mass → 1 → less B traffic → higher AI
+        let heavy = ai_scalefree(P, 2.05, 0.001);
+        let light = ai_scalefree(P, 2.9, 0.001);
+        assert!(heavy > light);
+    }
+
+    #[test]
+    fn model_enum_dispatch() {
+        assert_eq!(SparsityModel::Random.ai(P), ai_random(P));
+        assert_eq!(SparsityModel::Diagonal.ai(P), ai_diagonal(P));
+        let m = SparsityModel::Blocked { t: 1024, n_blocks: P.nnz / 64 };
+        assert_eq!(m.ai(P), ai_blocked(P, 1024, P.nnz / 64));
+        let m = SparsityModel::ScaleFree { alpha: 2.2, f: 0.001 };
+        assert_eq!(m.ai(P), ai_scalefree(P, 2.2, 0.001));
+        assert_eq!(m.name(), "Scale-free");
+    }
+
+    #[test]
+    fn bytes_equal_flops_over_ai() {
+        let b = bytes_random(P);
+        assert!((P.flops() / ai_random(P) - b).abs() / b < 1e-12);
+    }
+
+    #[test]
+    fn text_variant_lower_than_printed_eq4() {
+        let ai_eq = ai_blocked(P, 1024, P.nnz / 100);
+        let ai_txt = ai_blocked_text_variant(P, 1024, P.nnz / 100);
+        assert!(ai_txt < ai_eq);
+    }
+}

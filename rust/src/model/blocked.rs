@@ -1,0 +1,104 @@
+//! Blocked-sparsity occupancy model: the expected number of nonempty
+//! columns per `t × t` block (paper §III-C).
+
+/// `z ≈ E[z] = t·(1 − e^{−D/t})` — expected nonempty columns in a
+/// `t`-wide block holding `D` uniformly placed nonzeros (Poisson
+/// approximation of the binomial occupancy problem, Mitzenmacher &
+/// Upfal).
+pub fn expected_z(t: f64, d_per_block: f64) -> f64 {
+    if t <= 0.0 {
+        return 0.0;
+    }
+    t * (1.0 - (-d_per_block / t).exp())
+}
+
+/// Exact finite-t occupancy `t·(1 − (1 − 1/t)^D)` — used in tests to
+/// bound the Poisson approximation error.
+pub fn expected_z_exact(t: f64, d_per_block: f64) -> f64 {
+    if t <= 1.0 {
+        return t.min(d_per_block.min(1.0) * t);
+    }
+    t * (1.0 - (1.0 - 1.0 / t).powf(d_per_block))
+}
+
+/// Block statistics extracted from a concrete CSB matrix, in the form
+/// Eq. 4 consumes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockStats {
+    /// Block dimension `t`.
+    pub t: usize,
+    /// Number of nonzero blocks `N`.
+    pub n_blocks: usize,
+    /// Average nonzeros per nonzero block `D = nnz/N`.
+    pub avg_density: f64,
+    /// Modeled `z = t(1 − e^{−D/t})`.
+    pub z_model: f64,
+    /// Empirical mean occupied columns per block.
+    pub z_measured: f64,
+}
+
+impl BlockStats {
+    /// Extract the stats from a CSB matrix.
+    pub fn of(csb: &crate::sparse::Csb) -> BlockStats {
+        let t = csb.block_dim;
+        let n_blocks = csb.n_nonzero_blocks();
+        let d = csb.avg_block_density();
+        BlockStats {
+            t,
+            n_blocks,
+            avg_density: d,
+            z_model: expected_z(t as f64, d),
+            z_measured: csb.measured_z(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, Prng};
+    use crate::sparse::Csb;
+
+    #[test]
+    fn z_limits() {
+        // D << t: every nonzero lands in its own column -> z ≈ D
+        assert!((expected_z(4096.0, 2.0) - 2.0).abs() < 0.01);
+        // D >> t: all columns occupied -> z -> t
+        assert!((expected_z(64.0, 10_000.0) - 64.0).abs() < 1e-6);
+        // zero density
+        assert_eq!(expected_z(64.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn poisson_approx_close_to_exact() {
+        for t in [16.0, 256.0, 4096.0] {
+            for d in [1.0, 10.0, 100.0, 1000.0] {
+                let a = expected_z(t, d);
+                let e = expected_z_exact(t, d);
+                assert!((a - e).abs() / e.max(1.0) < 0.05, "t={t} D={d}: {a} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn z_monotone_in_density() {
+        let mut last = 0.0;
+        for d in [1.0, 2.0, 8.0, 64.0, 512.0] {
+            let z = expected_z(256.0, d);
+            assert!(z > last);
+            last = z;
+        }
+    }
+
+    #[test]
+    fn model_matches_random_matrix_measurement() {
+        // ER nonzeros are uniform within blocks, the model's exact
+        // assumption — z_model should track z_measured tightly.
+        let mut rng = Prng::new(100);
+        let csr = erdos_renyi(2048, 2048, 16.0, &mut rng);
+        let csb = Csb::from_csr_with_block(&csr, 256);
+        let st = BlockStats::of(&csb);
+        let rel = (st.z_model - st.z_measured).abs() / st.z_measured;
+        assert!(rel < 0.05, "model {} vs measured {}", st.z_model, st.z_measured);
+    }
+}

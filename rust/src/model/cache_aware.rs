@@ -1,0 +1,187 @@
+//! Cache-aware roofline extensions — the direction the paper's §V
+//! explicitly flags as future work ("our model does not adequately
+//! capture cache behavior and ignores memory latency effects") and its
+//! §II-D cites from Ilic et al.'s cache-aware roofline.
+//!
+//! Two additions over the flat `P = min(β·AI, π)`:
+//!
+//! * [`CacheAwareRoofline`] — multiple bandwidth ceilings, one per
+//!   memory level, each measured by running STREAM at a working-set
+//!   size that fits that level ([`crate::membench::bandwidth_ladder`]).
+//!   Attainable performance for a kernel whose working set lives at
+//!   level L is `min(β_L·AI, π)`.
+//! * [`LatencyModel`] — an effective-bandwidth correction for
+//!   *irregular* access: a random gather of `line` bytes pays
+//!   `latency + line/β` per line instead of `line/β`, so
+//!   `β_eff = line / (latency + line/β)`. This quantifies the gap the
+//!   paper observes between random-sparsity measurements and even the
+//!   conservative Eq. 2 roof (§IV-D-1: "random sparsity incurs high
+//!   memory latency … may further explain the gap").
+
+use crate::model::MachineParams;
+
+/// One bandwidth ceiling: a named memory level with its measured
+/// bandwidth and capacity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BandwidthCeiling {
+    pub level: String,
+    /// Working sets up to this many bytes enjoy this ceiling.
+    pub capacity_bytes: usize,
+    pub beta_gbs: f64,
+}
+
+/// A roofline with per-level bandwidth ceilings (Ilic et al. style).
+#[derive(Debug, Clone)]
+pub struct CacheAwareRoofline {
+    /// Ceilings ordered from smallest (fastest) to largest level.
+    pub ceilings: Vec<BandwidthCeiling>,
+    pub pi_gflops: f64,
+}
+
+impl CacheAwareRoofline {
+    /// Build from measured ceilings (must be non-empty, ordered by
+    /// capacity ascending).
+    pub fn new(mut ceilings: Vec<BandwidthCeiling>, pi_gflops: f64) -> CacheAwareRoofline {
+        assert!(!ceilings.is_empty());
+        ceilings.sort_by_key(|c| c.capacity_bytes);
+        CacheAwareRoofline { ceilings, pi_gflops }
+    }
+
+    /// The ceiling serving a given working-set size: the smallest level
+    /// that fits it (falling back to the last = DRAM).
+    pub fn ceiling_for(&self, working_set_bytes: usize) -> &BandwidthCeiling {
+        self.ceilings
+            .iter()
+            .find(|c| working_set_bytes <= c.capacity_bytes)
+            .unwrap_or_else(|| self.ceilings.last().unwrap())
+    }
+
+    /// Attainable GFLOP/s at intensity `ai` for a kernel whose hot
+    /// working set is `working_set_bytes`.
+    pub fn attainable_gflops(&self, ai: f64, working_set_bytes: usize) -> f64 {
+        (self.ceiling_for(working_set_bytes).beta_gbs * ai).min(self.pi_gflops)
+    }
+
+    /// The flat (DRAM-only) machine this degenerates to — what the
+    /// paper's Fig. 2 used.
+    pub fn flat(&self) -> MachineParams {
+        MachineParams {
+            beta_gbs: self.ceilings.last().unwrap().beta_gbs,
+            pi_gflops: self.pi_gflops,
+        }
+    }
+
+    /// SpMM working set for the B-reuse question: the bytes of `B`
+    /// (`8·n·d`) — the array whose residency decides which ceiling
+    /// applies (A and C stream regardless).
+    pub fn spmm_working_set(n: usize, d: usize) -> usize {
+        8 * n * d
+    }
+}
+
+/// Latency-corrected effective bandwidth for irregular access.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyModel {
+    /// DRAM (or level) streaming bandwidth in GB/s.
+    pub beta_gbs: f64,
+    /// Average miss latency in nanoseconds.
+    pub latency_ns: f64,
+    /// Cache line size in bytes.
+    pub line_bytes: f64,
+    /// Outstanding-miss parallelism (MLP): how many misses the core
+    /// overlaps. 1 = fully serialised pointer chasing; modern cores
+    /// sustain ~8–16 on independent streams.
+    pub mlp: f64,
+}
+
+impl LatencyModel {
+    /// Effective bandwidth of a random-gather stream:
+    /// `β_eff = line / (latency/mlp + line/β)`.
+    pub fn effective_beta_gbs(&self) -> f64 {
+        let per_line_stream = self.line_bytes / (self.beta_gbs * 1e9) * 1e9; // ns
+        let per_line = self.latency_ns / self.mlp.max(1e-9) + per_line_stream;
+        self.line_bytes / per_line // bytes per ns == GB/s
+    }
+
+    /// Attainable GFLOP/s at `ai` when the traffic is gather-dominated.
+    pub fn attainable_gflops(&self, ai: f64, pi_gflops: f64) -> f64 {
+        (self.effective_beta_gbs() * ai).min(pi_gflops)
+    }
+
+    /// Blend: a fraction `irregular` of the traffic pays the latency
+    /// bandwidth, the rest streams. Harmonic (serial-time) blend.
+    pub fn blended_beta_gbs(&self, irregular: f64) -> f64 {
+        let irr = irregular.clamp(0.0, 1.0);
+        let be = self.effective_beta_gbs();
+        1.0 / (irr / be + (1.0 - irr) / self.beta_gbs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder() -> CacheAwareRoofline {
+        CacheAwareRoofline::new(
+            vec![
+                BandwidthCeiling { level: "L1".into(), capacity_bytes: 32 << 10, beta_gbs: 400.0 },
+                BandwidthCeiling { level: "L2".into(), capacity_bytes: 2 << 20, beta_gbs: 150.0 },
+                BandwidthCeiling { level: "DRAM".into(), capacity_bytes: usize::MAX, beta_gbs: 20.0 },
+            ],
+            100.0,
+        )
+    }
+
+    #[test]
+    fn picks_the_right_ceiling() {
+        let r = ladder();
+        assert_eq!(r.ceiling_for(1 << 10).level, "L1");
+        assert_eq!(r.ceiling_for(1 << 20).level, "L2");
+        assert_eq!(r.ceiling_for(1 << 30).level, "DRAM");
+    }
+
+    #[test]
+    fn attainable_uses_level_bandwidth() {
+        let r = ladder();
+        assert_eq!(r.attainable_gflops(0.1, 1 << 10), 40.0);
+        assert_eq!(r.attainable_gflops(0.1, 1 << 30), 2.0);
+        // compute roof still caps
+        assert_eq!(r.attainable_gflops(10.0, 1 << 10), 100.0);
+    }
+
+    #[test]
+    fn flat_is_dram() {
+        let r = ladder();
+        assert_eq!(r.flat().beta_gbs, 20.0);
+    }
+
+    #[test]
+    fn latency_degrades_bandwidth() {
+        let m = LatencyModel { beta_gbs: 20.0, latency_ns: 100.0, line_bytes: 64.0, mlp: 1.0 };
+        let be = m.effective_beta_gbs();
+        // 64B / (100ns + 3.2ns) ≈ 0.62 GB/s — latency-dominated
+        assert!(be < 1.0, "{be}");
+        // with MLP=10 the latency amortises 10×
+        let m10 = LatencyModel { mlp: 10.0, ..m };
+        assert!(m10.effective_beta_gbs() > 5.0 * be);
+        // infinite-ish MLP approaches streaming bandwidth
+        let m_inf = LatencyModel { mlp: 1e9, ..m };
+        assert!((m_inf.effective_beta_gbs() - 20.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn blend_interpolates_harmonically() {
+        let m = LatencyModel { beta_gbs: 20.0, latency_ns: 80.0, line_bytes: 64.0, mlp: 4.0 };
+        let b0 = m.blended_beta_gbs(0.0);
+        let b1 = m.blended_beta_gbs(1.0);
+        let bh = m.blended_beta_gbs(0.5);
+        assert!((b0 - 20.0).abs() < 1e-9);
+        assert!((b1 - m.effective_beta_gbs()).abs() < 1e-9);
+        assert!(bh > b1 && bh < b0);
+    }
+
+    #[test]
+    fn spmm_working_set_is_b() {
+        assert_eq!(CacheAwareRoofline::spmm_working_set(1000, 16), 128_000);
+    }
+}

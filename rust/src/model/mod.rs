@@ -1,0 +1,23 @@
+//! Sparsity-aware roofline models — §III of the paper.
+//!
+//! Everything here is pure math over structural statistics; the
+//! measured side lives in [`crate::metrics`] / [`crate::harness`], and
+//! the memory-traffic *validation* (simulated DRAM bytes vs these
+//! analytic byte counts) lives in [`crate::cachesim`].
+
+mod ai;
+mod blocked;
+mod cache_aware;
+mod roofline;
+mod scalefree;
+
+pub use ai::{AiParams, SparsityModel};
+pub use blocked::{expected_z, expected_z_exact, BlockStats};
+pub use cache_aware::{BandwidthCeiling, CacheAwareRoofline, LatencyModel};
+pub use roofline::{MachineParams, Roofline};
+pub use scalefree::{hub_mass_fraction, measured_hub_mass, HubParams};
+
+pub use ai::{
+    ai_blocked, ai_blocked_text_variant, ai_diagonal, ai_random, ai_scalefree, bytes_blocked,
+    bytes_diagonal, bytes_random, bytes_scalefree,
+};

@@ -1,0 +1,107 @@
+//! The roofline itself: `P = min(β·AI, π)` (§II-C).
+
+/// Machine parameters of the roofline: peak DRAM bandwidth `β` (GB/s)
+/// and peak compute `π` (GFLOP/s).
+///
+/// The paper measured `β = 122.6 GB/s` with STREAM on one EPYC-7763
+/// socket; on this testbed both values come from
+/// [`crate::membench::measure_machine`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MachineParams {
+    /// Peak memory bandwidth in GB/s.
+    pub beta_gbs: f64,
+    /// Peak compute throughput in GFLOP/s.
+    pub pi_gflops: f64,
+}
+
+impl MachineParams {
+    /// The paper's Perlmutter test system (Table IV + §IV-B): measured
+    /// STREAM bandwidth 122.6 GB/s; peak FP64 of one 64-core EPYC 7763
+    /// socket ≈ 64 cores · 2.45 GHz · 16 FLOP/cycle ≈ 2509 GFLOP/s.
+    pub const PAPER_PERLMUTTER: MachineParams =
+        MachineParams { beta_gbs: 122.6, pi_gflops: 2509.0 };
+
+    /// Ridge point: the AI where the bandwidth roof meets the compute
+    /// roof.
+    pub fn ridge_ai(&self) -> f64 {
+        self.pi_gflops / self.beta_gbs
+    }
+}
+
+/// A roofline model for one machine.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    pub machine: MachineParams,
+}
+
+impl Roofline {
+    pub fn new(machine: MachineParams) -> Self {
+        Roofline { machine }
+    }
+
+    /// Attainable performance at arithmetic intensity `ai`:
+    /// `P = min(β·AI, π)` in GFLOP/s.
+    pub fn attainable_gflops(&self, ai: f64) -> f64 {
+        (self.machine.beta_gbs * ai).min(self.machine.pi_gflops)
+    }
+
+    /// Is a kernel with this AI memory-bound on this machine?
+    pub fn memory_bound(&self, ai: f64) -> bool {
+        ai < self.machine.ridge_ai()
+    }
+
+    /// Fraction of the model-predicted roof a measured performance
+    /// achieves (the "closeness to the roofline" the paper's Fig. 2
+    /// reads off visually).
+    pub fn efficiency(&self, ai: f64, measured_gflops: f64) -> f64 {
+        let roof = self.attainable_gflops(ai);
+        if roof <= 0.0 {
+            0.0
+        } else {
+            measured_gflops / roof
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const M: MachineParams = MachineParams { beta_gbs: 100.0, pi_gflops: 1000.0 };
+
+    #[test]
+    fn bandwidth_region_linear() {
+        let r = Roofline::new(M);
+        assert_eq!(r.attainable_gflops(1.0), 100.0);
+        assert_eq!(r.attainable_gflops(5.0), 500.0);
+    }
+
+    #[test]
+    fn compute_region_capped() {
+        let r = Roofline::new(M);
+        assert_eq!(r.attainable_gflops(50.0), 1000.0);
+    }
+
+    #[test]
+    fn ridge() {
+        assert_eq!(M.ridge_ai(), 10.0);
+        let r = Roofline::new(M);
+        assert!(r.memory_bound(9.9));
+        assert!(!r.memory_bound(10.1));
+    }
+
+    #[test]
+    fn spmm_is_memory_bound_on_paper_machine() {
+        // the paper's core premise: SpMM AI (< ~0.25) is far below the
+        // EPYC ridge (~20)
+        let r = Roofline::new(MachineParams::PAPER_PERLMUTTER);
+        assert!(r.memory_bound(0.25));
+    }
+
+    #[test]
+    fn efficiency_fraction() {
+        let r = Roofline::new(M);
+        assert!((r.efficiency(1.0, 50.0) - 0.5).abs() < 1e-12);
+        assert_eq!(r.efficiency(0.0, 10.0), 0.0);
+    }
+}

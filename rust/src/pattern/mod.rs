@@ -1,0 +1,18 @@
+//! Sparsity-pattern analysis: structural statistics and the classifier
+//! that maps a matrix to the roofline model that governs it.
+//!
+//! The paper assigns each matrix to a structural class by provenance
+//! (road network → blocking, social graph → scale-free, ...). The
+//! engine cannot rely on provenance, so this module derives the class
+//! from measurable structure — which also makes the assignment testable
+//! against the generators.
+
+mod classify;
+mod powerlaw;
+mod stats;
+
+pub use classify::{classify, Classification};
+pub use powerlaw::{fit_power_law, PowerLawFit};
+pub use stats::{structural_stats, StructuralStats};
+
+pub use crate::gen::SparsityClass;

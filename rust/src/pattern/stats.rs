@@ -1,0 +1,157 @@
+//! Structural statistics of a sparse matrix — the classifier's and the
+//! models' raw inputs.
+
+use crate::sparse::{Csb, Csr};
+
+/// Structure summary of a square sparse matrix.
+#[derive(Debug, Clone)]
+pub struct StructuralStats {
+    pub n: usize,
+    pub nnz: usize,
+    /// Mean nonzeros per row.
+    pub avg_row_len: f64,
+    /// Max nonzeros per row.
+    pub max_row_len: usize,
+    /// Coefficient of variation of row lengths (σ/μ) — skew indicator.
+    pub row_len_cv: f64,
+    /// Fraction of nonzeros with `|i − j| ≤ diag_band` (band window =
+    /// 2·avg_row_len + 1, min 16).
+    pub diag_fraction: f64,
+    /// The band half-width used for `diag_fraction`.
+    pub diag_band: usize,
+    /// Fraction of nonzeros falling in *diagonal* blocks of the probe
+    /// block size (block-locality indicator).
+    pub block_diag_fraction: f64,
+    /// Probe block size used for block statistics.
+    pub probe_block: usize,
+    /// Average nonzeros per nonzero probe block (`D` of Eq. 4).
+    pub block_density: f64,
+    /// Nonzero probe blocks (`N` of Eq. 4).
+    pub n_blocks: usize,
+    /// Empirical top-0.1%-of-rows share of nonzeros (hub mass at the
+    /// paper's f).
+    pub hub_mass_01pct: f64,
+    /// Hub mass at f = 1% — the classifier's skew evidence (more
+    /// robust than 0.1% on small matrices, where 0.1% of rows is a
+    /// handful of samples).
+    pub hub_mass_1pct: f64,
+}
+
+/// Compute [`StructuralStats`] for a CSR matrix.
+///
+/// `probe_block` is the CSB block size used for block statistics; pass
+/// 0 for the default heuristic.
+pub fn structural_stats(a: &Csr, probe_block: usize) -> StructuralStats {
+    let n = a.nrows;
+    let nnz = a.nnz();
+    let avg = a.avg_row_len();
+    let mut max_len = 0usize;
+    let mut var = 0.0f64;
+    let lens: Vec<usize> = (0..n).map(|r| a.row_len(r)).collect();
+    for &l in &lens {
+        max_len = max_len.max(l);
+        let dl = l as f64 - avg;
+        var += dl * dl;
+    }
+    let sd = if n > 1 { (var / (n - 1) as f64).sqrt() } else { 0.0 };
+    let cv = if avg > 0.0 { sd / avg } else { 0.0 };
+
+    // diagonal band fraction — the band is kept narrow (≥8) so
+    // tile-local mesh edges (|Δid| ≈ tile width) do not masquerade as
+    // banded structure
+    let band = ((2.0 * avg) as usize + 1).max(8);
+    let mut in_band = 0usize;
+    for r in 0..n {
+        for &c in a.row_cols(r) {
+            if (r as i64 - c as i64).unsigned_abs() as usize <= band {
+                in_band += 1;
+            }
+        }
+    }
+    let diag_fraction = if nnz > 0 { in_band as f64 / nnz as f64 } else { 0.0 };
+
+    // block statistics through a CSB probe
+    let probe_block = if probe_block == 0 {
+        Csb::default_block_dim(n.max(a.ncols))
+    } else {
+        probe_block
+    };
+    let csb = Csb::from_csr_with_block(a, probe_block);
+    let mut block_diag = 0usize;
+    for br in 0..csb.n_block_rows {
+        for b in csb.block_row(br) {
+            if b.bcol as usize == br {
+                block_diag += b.len();
+            }
+        }
+    }
+    let block_diag_fraction = if nnz > 0 { block_diag as f64 / nnz as f64 } else { 0.0 };
+
+    // hub mass at the paper's f = 0.1% and at the classifier's 1%
+    let hub_mass_01pct = crate::model::measured_hub_mass(&lens, 0.001);
+    let hub_mass_1pct = crate::model::measured_hub_mass(&lens, 0.01);
+
+    StructuralStats {
+        n,
+        nnz,
+        avg_row_len: avg,
+        max_row_len: max_len,
+        row_len_cv: cv,
+        diag_fraction,
+        diag_band: band,
+        block_diag_fraction,
+        probe_block,
+        block_density: csb.avg_block_density(),
+        n_blocks: csb.n_nonzero_blocks(),
+        hub_mass_01pct,
+        hub_mass_1pct,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{banded, chung_lu, erdos_renyi, ChungLuParams, Prng};
+
+    #[test]
+    fn banded_has_high_diag_fraction() {
+        let mut rng = Prng::new(120);
+        let a = banded(2000, 6, 0.4, &mut rng);
+        let st = structural_stats(&a, 0);
+        assert!(st.diag_fraction > 0.99, "{}", st.diag_fraction);
+        assert!(st.row_len_cv < 0.5);
+    }
+
+    #[test]
+    fn er_low_cv_low_diag() {
+        let mut rng = Prng::new(121);
+        let a = erdos_renyi(4000, 4000, 8.0, &mut rng);
+        let st = structural_stats(&a, 256);
+        assert!(st.diag_fraction < 0.1, "{}", st.diag_fraction);
+        assert!(st.row_len_cv < 0.6, "{}", st.row_len_cv);
+        assert!(st.hub_mass_01pct < 0.02);
+        assert!(st.hub_mass_1pct < 0.04, "{}", st.hub_mass_1pct);
+    }
+
+    #[test]
+    fn scalefree_high_cv_and_hub_mass() {
+        let mut rng = Prng::new(122);
+        let a = chung_lu(
+            ChungLuParams { n: 8000, alpha: 2.2, avg_deg: 12.0, k_min: 2.0 },
+            &mut rng,
+        );
+        let st = structural_stats(&a, 256);
+        assert!(st.row_len_cv > 1.0, "cv {}", st.row_len_cv);
+        assert!(st.hub_mass_01pct > 0.03, "hub {}", st.hub_mass_01pct);
+        assert!(st.hub_mass_1pct > 0.08, "hub1 {}", st.hub_mass_1pct);
+    }
+
+    #[test]
+    fn counts_consistent() {
+        let mut rng = Prng::new(123);
+        let a = erdos_renyi(1000, 1000, 4.0, &mut rng);
+        let st = structural_stats(&a, 128);
+        assert_eq!(st.nnz, a.nnz());
+        assert!(st.block_density * st.n_blocks as f64 > 0.99 * st.nnz as f64);
+    }
+}

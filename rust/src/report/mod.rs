@@ -1,0 +1,12 @@
+//! Report rendering: aligned text/markdown tables, CSV, SVG plots, and
+//! the system-info probe (the paper's Table IV analog).
+
+mod csv;
+mod svg;
+mod sysinfo;
+mod table;
+
+pub use csv::write_csv;
+pub use svg::{Marker, Series, SvgPlot, VLine, PALETTE};
+pub use sysinfo::{probe_system, SystemInfo};
+pub use table::{fmt3, Table};

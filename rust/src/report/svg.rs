@@ -1,0 +1,375 @@
+//! Self-contained SVG plotter — regenerates the paper's Fig. 1 (lines)
+//! and Fig. 2 (roofline + vertical AI markers + measured points)
+//! without any plotting dependency.
+//!
+//! Supports linear or log10 axes, line series with markers, scatter
+//! series, vertical annotation lines, axis labels, and a legend.
+
+use crate::error::Result;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Marker shapes for series points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Marker {
+    Circle,
+    Square,
+    Triangle,
+    Diamond,
+    None,
+}
+
+/// One plotted series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+    pub color: String,
+    pub marker: Marker,
+    /// Draw connecting lines.
+    pub line: bool,
+}
+
+impl Series {
+    pub fn line(label: impl Into<String>, color: &str, points: Vec<(f64, f64)>) -> Series {
+        Series { label: label.into(), points, color: color.into(), marker: Marker::Circle, line: true }
+    }
+    pub fn scatter(label: impl Into<String>, color: &str, marker: Marker, points: Vec<(f64, f64)>) -> Series {
+        Series { label: label.into(), points, color: color.into(), marker, line: false }
+    }
+}
+
+/// A labeled vertical line (the model-AI markers of Fig. 2).
+#[derive(Debug, Clone)]
+pub struct VLine {
+    pub x: f64,
+    pub label: String,
+    pub color: String,
+}
+
+/// Plot builder.
+pub struct SvgPlot {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub log_x: bool,
+    pub log_y: bool,
+    series: Vec<Series>,
+    vlines: Vec<VLine>,
+    width: f64,
+    height: f64,
+}
+
+const MARGIN_L: f64 = 64.0;
+const MARGIN_R: f64 = 150.0;
+const MARGIN_T: f64 = 36.0;
+const MARGIN_B: f64 = 48.0;
+
+/// A readable qualitative palette.
+pub const PALETTE: [&str; 6] = ["#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#ff7f0e", "#17becf"];
+
+impl SvgPlot {
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>, y_label: impl Into<String>) -> SvgPlot {
+        SvgPlot {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            log_x: false,
+            log_y: false,
+            series: Vec::new(),
+            vlines: Vec::new(),
+            width: 640.0,
+            height: 420.0,
+        }
+    }
+
+    pub fn log_axes(mut self, log_x: bool, log_y: bool) -> SvgPlot {
+        self.log_x = log_x;
+        self.log_y = log_y;
+        self
+    }
+
+    pub fn add_series(&mut self, s: Series) -> &mut Self {
+        self.series.push(s);
+        self
+    }
+
+    pub fn add_vline(&mut self, v: VLine) -> &mut Self {
+        self.vlines.push(v);
+        self
+    }
+
+    fn tx(&self, x: f64) -> f64 {
+        if self.log_x {
+            x.max(1e-30).log10()
+        } else {
+            x
+        }
+    }
+    fn ty(&self, y: f64) -> f64 {
+        if self.log_y {
+            y.max(1e-30).log10()
+        } else {
+            y
+        }
+    }
+
+    /// Data ranges across all series and vlines (in transformed
+    /// space).
+    fn ranges(&self) -> ((f64, f64), (f64, f64)) {
+        let mut xs: Vec<f64> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                xs.push(self.tx(x));
+                ys.push(self.ty(y));
+            }
+        }
+        for v in &self.vlines {
+            xs.push(self.tx(v.x));
+        }
+        let pad = |lo: f64, hi: f64| {
+            if lo == hi {
+                (lo - 1.0, hi + 1.0)
+            } else {
+                let p = (hi - lo) * 0.06;
+                (lo - p, hi + p)
+            }
+        };
+        let (xlo, xhi) = xs.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &v| {
+            (l.min(v), h.max(v))
+        });
+        let (ylo, yhi) = ys.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &v| {
+            (l.min(v), h.max(v))
+        });
+        (pad(xlo, xhi), pad(ylo.min(if self.log_y { ylo } else { 0.0 }), yhi))
+    }
+
+    fn render(&self) -> String {
+        let ((xlo, xhi), (ylo, yhi)) = self.ranges();
+        let pw = self.width - MARGIN_L - MARGIN_R;
+        let ph = self.height - MARGIN_T - MARGIN_B;
+        let px = |x: f64| MARGIN_L + (self.tx(x) - xlo) / (xhi - xlo) * pw;
+        let py = |y: f64| MARGIN_T + ph - (self.ty(y) - ylo) / (yhi - ylo) * ph;
+
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            r##"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}" font-family="sans-serif" font-size="11">"##,
+            w = self.width,
+            h = self.height
+        );
+        let _ = write!(s, r##"<rect width="100%" height="100%" fill="white"/>"##);
+        // frame
+        let _ = write!(
+            s,
+            r##"<rect x="{x}" y="{y}" width="{w}" height="{h}" fill="none" stroke="#444"/>"##,
+            x = MARGIN_L,
+            y = MARGIN_T,
+            w = pw,
+            h = ph
+        );
+        // title + axis labels
+        let _ = write!(
+            s,
+            r##"<text x="{x}" y="20" text-anchor="middle" font-size="13" font-weight="bold">{t}</text>"##,
+            x = MARGIN_L + pw / 2.0,
+            t = xml_escape(&self.title)
+        );
+        let _ = write!(
+            s,
+            r##"<text x="{x}" y="{y}" text-anchor="middle">{t}</text>"##,
+            x = MARGIN_L + pw / 2.0,
+            y = self.height - 10.0,
+            t = xml_escape(&self.x_label)
+        );
+        let _ = write!(
+            s,
+            r##"<text x="14" y="{y}" text-anchor="middle" transform="rotate(-90 14 {y})">{t}</text>"##,
+            y = MARGIN_T + ph / 2.0,
+            t = xml_escape(&self.y_label)
+        );
+
+        // ticks (5 per axis, in transformed space, labeled in data space)
+        for i in 0..=4 {
+            let f = i as f64 / 4.0;
+            let tx_v = xlo + f * (xhi - xlo);
+            let ty_v = ylo + f * (yhi - ylo);
+            let xd = if self.log_x { 10f64.powf(tx_v) } else { tx_v };
+            let yd = if self.log_y { 10f64.powf(ty_v) } else { ty_v };
+            let xp = MARGIN_L + f * pw;
+            let yp = MARGIN_T + ph - f * ph;
+            let _ = write!(
+                s,
+                r##"<line x1="{xp}" y1="{y1}" x2="{xp}" y2="{y2}" stroke="#ccc" stroke-dasharray="2,3"/>"##,
+                y1 = MARGIN_T,
+                y2 = MARGIN_T + ph
+            );
+            let _ = write!(
+                s,
+                r##"<text x="{xp}" y="{y}" text-anchor="middle">{v}</text>"##,
+                y = MARGIN_T + ph + 14.0,
+                v = fmt_tick(xd)
+            );
+            let _ = write!(
+                s,
+                r##"<line x1="{x1}" y1="{yp}" x2="{x2}" y2="{yp}" stroke="#ccc" stroke-dasharray="2,3"/>"##,
+                x1 = MARGIN_L,
+                x2 = MARGIN_L + pw
+            );
+            let _ = write!(
+                s,
+                r##"<text x="{x}" y="{yv}" text-anchor="end">{v}</text>"##,
+                x = MARGIN_L - 6.0,
+                yv = yp + 4.0,
+                v = fmt_tick(yd)
+            );
+        }
+
+        // vertical annotation lines
+        for v in &self.vlines {
+            let xp = px(v.x);
+            let _ = write!(
+                s,
+                r##"<line x1="{xp}" y1="{y1}" x2="{xp}" y2="{y2}" stroke="{c}" stroke-dasharray="6,3"/>"##,
+                y1 = MARGIN_T,
+                y2 = MARGIN_T + ph,
+                c = v.color
+            );
+            let _ = write!(
+                s,
+                r##"<text x="{x}" y="{y}" fill="{c}" font-size="10" transform="rotate(-90 {x} {y})">{t}</text>"##,
+                x = xp - 4.0,
+                y = MARGIN_T + 12.0,
+                c = v.color,
+                t = xml_escape(&v.label)
+            );
+        }
+
+        // series
+        for sr in &self.series {
+            if sr.line && sr.points.len() > 1 {
+                let d: Vec<String> = sr
+                    .points
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(x, y))| {
+                        format!("{}{:.2},{:.2}", if i == 0 { "M" } else { "L" }, px(x), py(y))
+                    })
+                    .collect();
+                let _ = write!(
+                    s,
+                    r##"<path d="{d}" fill="none" stroke="{c}" stroke-width="1.8"/>"##,
+                    d = d.join(" "),
+                    c = sr.color
+                );
+            }
+            for &(x, y) in &sr.points {
+                let (cx, cy) = (px(x), py(y));
+                match sr.marker {
+                    Marker::Circle => {
+                        let _ = write!(s, r##"<circle cx="{cx:.2}" cy="{cy:.2}" r="3.4" fill="{c}"/>"##, c = sr.color);
+                    }
+                    Marker::Square => {
+                        let _ = write!(s, r##"<rect x="{x:.2}" y="{y:.2}" width="6.4" height="6.4" fill="{c}"/>"##, x = cx - 3.2, y = cy - 3.2, c = sr.color);
+                    }
+                    Marker::Triangle => {
+                        let _ = write!(s, r##"<path d="M{x1:.2},{y1:.2} L{x2:.2},{y2:.2} L{x3:.2},{y3:.2} Z" fill="{c}"/>"##, x1 = cx, y1 = cy - 4.0, x2 = cx - 3.6, y2 = cy + 3.0, x3 = cx + 3.6, y3 = cy + 3.0, c = sr.color);
+                    }
+                    Marker::Diamond => {
+                        let _ = write!(s, r##"<path d="M{cx:.2},{y1:.2} L{x2:.2},{cy:.2} L{cx:.2},{y3:.2} L{x4:.2},{cy:.2} Z" fill="{c}"/>"##, y1 = cy - 4.2, x2 = cx + 4.2, y3 = cy + 4.2, x4 = cx - 4.2, c = sr.color);
+                    }
+                    Marker::None => {}
+                }
+            }
+        }
+
+        // legend
+        let lx = MARGIN_L + pw + 10.0;
+        let mut ly = MARGIN_T + 8.0;
+        for sr in &self.series {
+            let _ = write!(
+                s,
+                r##"<rect x="{lx}" y="{y}" width="10" height="10" fill="{c}"/><text x="{tx}" y="{ty}">{t}</text>"##,
+                y = ly - 8.0,
+                c = sr.color,
+                tx = lx + 14.0,
+                ty = ly + 1.0,
+                t = xml_escape(&sr.label)
+            );
+            ly += 16.0;
+        }
+        s.push_str("</svg>");
+        s
+    }
+
+    /// Write the SVG to a file (creating parent dirs).
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.render())?;
+        Ok(())
+    }
+
+    /// Rendered SVG text (tests).
+    pub fn to_string(&self) -> String {
+        self.render()
+    }
+}
+
+fn fmt_tick(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 || v.abs() < 0.01 {
+        format!("{v:.1e}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_valid_svg_with_all_elements() {
+        let mut p = SvgPlot::new("T&T", "x", "y").log_axes(true, true);
+        p.add_series(Series::line("roof", PALETTE[0], vec![(0.01, 1.0), (1.0, 100.0)]));
+        p.add_series(Series::scatter("pts", PALETTE[1], Marker::Square, vec![(0.1, 5.0)]));
+        p.add_vline(VLine { x: 0.2, label: "AI".into(), color: "#888".into() });
+        let svg = p.to_string();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert!(svg.contains("T&amp;T"));
+        assert!(svg.contains("stroke-dasharray=\"6,3\"")); // vline
+        assert!(svg.contains("<rect x=")); // square marker/legend
+        assert!(svg.contains("<path d=\"M")); // line path
+    }
+
+    #[test]
+    fn saves_to_disk() {
+        let dir = std::env::temp_dir().join("spmm_svg_test");
+        let path = dir.join("plot.svg");
+        let mut p = SvgPlot::new("t", "x", "y");
+        p.add_series(Series::line("s", PALETTE[2], vec![(0.0, 0.0), (1.0, 1.0)]));
+        p.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("</svg>"));
+    }
+
+    #[test]
+    fn degenerate_single_point() {
+        let mut p = SvgPlot::new("t", "x", "y");
+        p.add_series(Series::scatter("s", PALETTE[0], Marker::Circle, vec![(5.0, 5.0)]));
+        let svg = p.to_string();
+        assert!(svg.contains("circle"));
+    }
+}

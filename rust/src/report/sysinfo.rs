@@ -1,0 +1,120 @@
+//! System probe — regenerates the paper's Table IV for *this* testbed
+//! (CPU model, cores, cache sizes, vector extensions) plus the
+//! measured machine parameters.
+
+use crate::model::MachineParams;
+use crate::report::Table;
+
+/// Hardware summary of the machine the experiments run on.
+#[derive(Debug, Clone, Default)]
+pub struct SystemInfo {
+    pub arch: String,
+    pub cpu_model: String,
+    pub cores: usize,
+    pub l1d: String,
+    pub l2: String,
+    pub l3: String,
+    pub flags: Vec<String>,
+}
+
+fn read_cache(path: &str) -> Option<String> {
+    std::fs::read_to_string(path).ok().map(|s| s.trim().to_string())
+}
+
+/// Probe /proc and /sys. Every field degrades gracefully to
+/// "unknown" on exotic systems.
+pub fn probe_system() -> SystemInfo {
+    let mut info = SystemInfo {
+        arch: std::env::consts::ARCH.to_string(),
+        cpu_model: "unknown".into(),
+        cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        ..Default::default()
+    };
+    if let Ok(cpuinfo) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in cpuinfo.lines() {
+            if let Some(v) = line.strip_prefix("model name") {
+                info.cpu_model = v.trim_start_matches([' ', '\t', ':']).to_string();
+            }
+            if line.starts_with("flags") && info.flags.is_empty() {
+                let interesting = ["avx2", "avx512f", "fma", "sse4_2"];
+                info.flags = line
+                    .split_whitespace()
+                    .filter(|f| interesting.contains(f))
+                    .map(|s| s.to_string())
+                    .collect();
+            }
+        }
+    }
+    let base = "/sys/devices/system/cpu/cpu0/cache";
+    for idx in 0..5 {
+        let level = read_cache(&format!("{base}/index{idx}/level"));
+        let typ = read_cache(&format!("{base}/index{idx}/type"));
+        let size = read_cache(&format!("{base}/index{idx}/size"));
+        if let (Some(level), Some(typ), Some(size)) = (level, typ, size) {
+            match (level.as_str(), typ.as_str()) {
+                ("1", "Data") => info.l1d = size,
+                ("2", _) => info.l2 = size,
+                ("3", _) => info.l3 = size,
+                _ => {}
+            }
+        }
+    }
+    info
+}
+
+impl SystemInfo {
+    /// Render as the paper's Table IV, side-by-side with the paper's
+    /// values.
+    pub fn to_table(&self, machine: Option<MachineParams>) -> Table {
+        let mut t = Table::new(
+            "Table IV — test system (this testbed vs paper's Perlmutter node)",
+            &["Property", "This testbed", "Paper (EPYC 7763)"],
+        );
+        let row = |t: &mut Table, k: &str, a: String, b: &str| {
+            t.row(vec![k.into(), a, b.into()]);
+        };
+        row(&mut t, "Architecture", self.arch.clone(), "x86_64");
+        row(&mut t, "CPU model", self.cpu_model.clone(), "AMD EPYC 7763 (Milan)");
+        row(&mut t, "Cores used", self.cores.to_string(), "64");
+        row(&mut t, "L1d", self.or_unknown(&self.l1d), "32 KiB/core");
+        row(&mut t, "L2", self.or_unknown(&self.l2), "512 KiB/core");
+        row(&mut t, "L3", self.or_unknown(&self.l3), "256 MiB/socket");
+        row(&mut t, "Vector ext", self.flags.join(" "), "AVX2, FMA");
+        if let Some(m) = machine {
+            row(&mut t, "β measured (GB/s)", format!("{:.1}", m.beta_gbs), "122.6 (STREAM)");
+            row(&mut t, "π measured (GFLOP/s)", format!("{:.1}", m.pi_gflops), "≈2509 (peak)");
+            row(&mut t, "ridge AI (FLOP/B)", format!("{:.2}", m.ridge_ai()), "≈20.5");
+        }
+        t
+    }
+
+    fn or_unknown(&self, s: &str) -> String {
+        if s.is_empty() {
+            "unknown".into()
+        } else {
+            s.to_string()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_runs_everywhere() {
+        let info = probe_system();
+        assert!(info.cores >= 1);
+        assert!(!info.arch.is_empty());
+    }
+
+    #[test]
+    fn table_includes_machine_params() {
+        let info = probe_system();
+        let t = info.to_table(Some(MachineParams { beta_gbs: 10.0, pi_gflops: 50.0 }));
+        let text = t.to_text();
+        assert!(text.contains("β measured"));
+        assert!(text.contains("10.0"));
+        assert!(text.contains("122.6"));
+    }
+}

@@ -1,0 +1,185 @@
+//! The artifact manifest: which AOT-compiled modules exist, with the
+//! static shapes they were lowered for.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.toml` in the
+//! TOML-lite dialect `config::toml_lite` parses; each `[section]` is
+//! one artifact.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::TomlLite;
+use crate::error::{Error, Result};
+
+/// What a compiled module computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `(cols s32[n,w], vals f64[n,w], b f64[n,d]) -> (f64[n,d],)`
+    EllSpmm,
+    /// `(cols, vals, b, w f64[d,dout]) -> (f64[n,dout],)`
+    GcnLayer,
+    /// Blocked-ELL: `(bcols s32[nbr,mb], blocks f64[nbr,mb,bs,bs],
+    /// b f64[n,d]) -> (f64[n,d],)` with `n = nbr·bs`; `width` holds
+    /// `mb` and `bs` the tile edge.
+    BellSpmm,
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub n: usize,
+    pub width: usize,
+    pub d: usize,
+    /// Output feature width (GCN only).
+    pub dout: Option<usize>,
+    /// Dense tile edge (blocked-ELL only).
+    pub bs: Option<usize>,
+    /// Absolute path to the HLO text file.
+    pub path: PathBuf,
+}
+
+/// All artifacts found in a directory.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.toml`. A missing directory or manifest is
+    /// an [`Error::MissingArtifact`] — callers treat the XLA backend
+    /// as unavailable rather than failing hard.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<ArtifactManifest> {
+        let dir = dir.as_ref();
+        let mpath = dir.join("manifest.toml");
+        if !mpath.exists() {
+            return Err(Error::MissingArtifact(mpath.display().to_string()));
+        }
+        let text = std::fs::read_to_string(&mpath)?;
+        let t = TomlLite::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for sec in t.sections() {
+            let get_num = |k: &str| -> Result<Option<usize>> {
+                Ok(t.get_f64(&format!("{sec}.{k}"))?.map(|x| x as usize))
+            };
+            let kind = match t.get_str(&format!("{sec}.kind"))? {
+                Some("ell_spmm") => ArtifactKind::EllSpmm,
+                Some("gcn_layer") => ArtifactKind::GcnLayer,
+                Some("bell_spmm") => ArtifactKind::BellSpmm,
+                Some(other) => {
+                    return Err(Error::Parse(format!("{sec}: unknown kind '{other}'")))
+                }
+                None => return Err(Error::Parse(format!("{sec}: missing kind"))),
+            };
+            let rel = t
+                .get_str(&format!("{sec}.path"))?
+                .ok_or_else(|| Error::Parse(format!("{sec}: missing path")))?;
+            let path = dir.join(rel);
+            if !path.exists() {
+                return Err(Error::MissingArtifact(path.display().to_string()));
+            }
+            artifacts.push(ArtifactSpec {
+                name: sec.clone(),
+                kind,
+                n: get_num("n")?.ok_or_else(|| Error::Parse(format!("{sec}: missing n")))?,
+                width: get_num("width")?
+                    .ok_or_else(|| Error::Parse(format!("{sec}: missing width")))?,
+                d: get_num("d")?.ok_or_else(|| Error::Parse(format!("{sec}: missing d")))?,
+                dout: get_num("dout")?,
+                bs: get_num("bs")?,
+                path,
+            });
+        }
+        Ok(ArtifactManifest { artifacts })
+    }
+
+    /// Find the ELL-SpMM artifact for exact `(n, width, d)`.
+    pub fn find_ell(&self, n: usize, width: usize, d: usize) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| {
+            a.kind == ArtifactKind::EllSpmm && a.n == n && a.width == width && a.d == d
+        })
+    }
+
+    /// Smallest ELL artifact that *fits* a problem: `n == a.n`,
+    /// `width <= a.width`, `d == a.d` (rows cannot pad cheaply, slots
+    /// can).
+    pub fn find_ell_fitting(&self, n: usize, width: usize, d: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::EllSpmm && a.n == n && a.width >= width && a.d == d)
+            .min_by_key(|a| a.width)
+    }
+
+    /// All artifacts of one kind.
+    pub fn of_kind(&self, kind: ArtifactKind) -> impl Iterator<Item = &ArtifactSpec> {
+        self.artifacts.iter().filter(move |a| a.kind == kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.toml"), body).unwrap();
+        for f in files {
+            let mut fh = std::fs::File::create(dir.join(f)).unwrap();
+            writeln!(fh, "HloModule fake").unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_entries() {
+        let dir = std::env::temp_dir().join("spmm_manifest_test_a");
+        write_manifest(
+            &dir,
+            "[ell_a]\nkind = \"ell_spmm\"\nn = 64\nwidth = 4\nd = 8\npath = \"a.hlo.txt\"\n\
+             [gcn_b]\nkind = \"gcn_layer\"\nn = 64\nwidth = 4\nd = 8\ndout = 2\npath = \"b.hlo.txt\"\n",
+            &["a.hlo.txt", "b.hlo.txt"],
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert!(m.find_ell(64, 4, 8).is_some());
+        assert!(m.find_ell(64, 4, 9).is_none());
+        assert_eq!(m.of_kind(ArtifactKind::GcnLayer).count(), 1);
+        let g = &m.artifacts[1];
+        assert_eq!(g.dout, Some(2));
+    }
+
+    #[test]
+    fn fitting_prefers_smallest_width() {
+        let dir = std::env::temp_dir().join("spmm_manifest_test_b");
+        write_manifest(
+            &dir,
+            "[w8]\nkind = \"ell_spmm\"\nn = 64\nwidth = 8\nd = 4\npath = \"w8.hlo.txt\"\n\
+             [w16]\nkind = \"ell_spmm\"\nn = 64\nwidth = 16\nd = 4\npath = \"w16.hlo.txt\"\n",
+            &["w8.hlo.txt", "w16.hlo.txt"],
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.find_ell_fitting(64, 5, 4).unwrap().width, 8);
+        assert_eq!(m.find_ell_fitting(64, 12, 4).unwrap().width, 16);
+        assert!(m.find_ell_fitting(64, 20, 4).is_none());
+    }
+
+    #[test]
+    fn missing_dir_is_missing_artifact() {
+        let err = ArtifactManifest::load("/nonexistent/zzz").unwrap_err();
+        assert!(matches!(err, Error::MissingArtifact(_)));
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join("spmm_manifest_test_c");
+        write_manifest(
+            &dir,
+            "[x]\nkind = \"ell_spmm\"\nn = 1\nwidth = 1\nd = 1\npath = \"gone.hlo.txt\"\n",
+            &[],
+        );
+        assert!(matches!(
+            ArtifactManifest::load(&dir).unwrap_err(),
+            Error::MissingArtifact(_)
+        ));
+    }
+}

@@ -1,0 +1,12 @@
+//! XLA/PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client —
+//! the request-path half of the three-layer architecture (Python never
+//! runs here).
+
+mod manifest;
+mod pjrt;
+mod xla_spmm;
+
+pub use manifest::{ArtifactKind, ArtifactManifest, ArtifactSpec};
+pub use pjrt::{CompiledModule, XlaRuntime};
+pub use xla_spmm::XlaSpmm;

@@ -1,0 +1,94 @@
+//! PJRT client wrapper: HLO text → compiled executable → execution.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compiled modules are cached per path
+//! so repeated engine runs pay compilation once.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+/// Process-wide PJRT CPU client plus a compilation cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<CompiledModule>>>,
+}
+
+/// A compiled HLO module ready to execute.
+pub struct CompiledModule {
+    exe: xla::PjRtLoadedExecutable,
+    /// Path the module was loaded from (for diagnostics).
+    pub source: PathBuf,
+}
+
+// The xla crate's raw pointers are not marked Send/Sync, but the PJRT
+// CPU client is thread-safe for compile/execute; the engine serialises
+// executions per module anyway (single-core testbed).
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+unsafe impl Send for CompiledModule {}
+unsafe impl Sync for CompiledModule {}
+
+impl XlaRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaRuntime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform string (e.g. "cpu") — used in reports.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO **text** file (cached per canonical
+    /// path).
+    pub fn compile_hlo_file<P: AsRef<Path>>(&self, path: P) -> Result<Arc<CompiledModule>> {
+        let path = path.as_ref();
+        let key = path.canonicalize().unwrap_or_else(|_| path.to_path_buf());
+        if let Some(m) = self.cache.lock().unwrap().get(&key) {
+            return Ok(m.clone());
+        }
+        if !path.exists() {
+            return Err(Error::MissingArtifact(path.display().to_string()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let module = Arc::new(CompiledModule { exe, source: key.clone() });
+        self.cache.lock().unwrap().insert(key, module.clone());
+        Ok(module)
+    }
+}
+
+impl CompiledModule {
+    /// Execute with literal inputs; returns the unwrapped single
+    /// element of the (1-tuple) result — every aot.py entry point
+    /// lowers with `return_tuple=True`.
+    pub fn execute1(&self, inputs: &[&xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<&xla::Literal>(inputs)?;
+        let buffer = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Xla("empty execution result".into()))?;
+        let tuple = buffer.to_literal_sync()?;
+        Ok(tuple.to_tuple1()?)
+    }
+}
+
+/// Build an `f64` literal of shape `[rows, cols]` from a row-major
+/// slice.
+pub fn literal_f64_2d(data: &[f64], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Build an `s32` literal of shape `[rows, cols]` from a row-major
+/// slice.
+pub fn literal_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}

@@ -1,0 +1,133 @@
+//! The XLA-backed SpMM implementation: the compiled ELL-SpMM artifact
+//! exposed through the same [`Spmm`] trait as the native kernels, so
+//! the engine and every bench can route to it interchangeably.
+//!
+//! Execution cost includes host↔device literal transfers (B in, C
+//! out); on the CPU plugin these are memcpys. The `bench_xla` bench
+//! reports both the end-to-end time (what a request pays) and the
+//! native-ELL time for the same arrays, which isolates the PJRT
+//! overhead.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::runtime::pjrt::{literal_f64_2d, literal_i32_2d};
+use crate::runtime::{ArtifactSpec, CompiledModule, XlaRuntime};
+use crate::sparse::{Csr, Ell};
+use crate::spmm::{check_dims, DenseMatrix, Impl, Spmm};
+
+/// SpMM through a compiled XLA module.
+pub struct XlaSpmm {
+    module: Arc<CompiledModule>,
+    /// Staged A operands (cols, vals) — uploaded once at build time.
+    cols_lit: xla::Literal,
+    vals_lit: xla::Literal,
+    n: usize,
+    d: usize,
+    /// Logical (unpadded) nonzeros, for FLOP accounting.
+    nnz: usize,
+    /// Padded slot count `n × width` — the FLOPs the artifact actually
+    /// executes.
+    padded_len: usize,
+}
+
+// xla::Literal wraps a raw pointer without Send/Sync markers; the
+// engine only executes a given XlaSpmm from one thread at a time.
+unsafe impl Send for XlaSpmm {}
+unsafe impl Sync for XlaSpmm {}
+
+impl XlaSpmm {
+    /// Stage a CSR matrix into the artifact described by `spec`
+    /// (padding the ELL width up to the artifact's static width).
+    ///
+    /// Fails with [`Error::DimensionMismatch`] when the matrix cannot
+    /// fit the artifact's static shape.
+    pub fn from_csr(rt: &XlaRuntime, spec: &ArtifactSpec, csr: &Csr) -> Result<XlaSpmm> {
+        if csr.nrows != spec.n || csr.ncols != spec.n {
+            return Err(Error::DimensionMismatch(format!(
+                "matrix is {}x{} but artifact {} is n={}",
+                csr.nrows, csr.ncols, spec.name, spec.n
+            )));
+        }
+        if csr.max_row_len() > spec.width {
+            return Err(Error::DimensionMismatch(format!(
+                "matrix max row {} exceeds artifact width {}",
+                csr.max_row_len(),
+                spec.width
+            )));
+        }
+        let ell = Ell::from_csr_with_width(csr, spec.width);
+        Self::from_ell(rt, spec, &ell)
+    }
+
+    /// Stage pre-built ELL arrays (must match the artifact exactly).
+    pub fn from_ell(rt: &XlaRuntime, spec: &ArtifactSpec, ell: &Ell) -> Result<XlaSpmm> {
+        if ell.nrows != spec.n || ell.width != spec.width {
+            return Err(Error::DimensionMismatch(format!(
+                "ell is {}x{} (w={}) but artifact {} wants n={} w={}",
+                ell.nrows, ell.ncols, ell.width, spec.name, spec.n, spec.width
+            )));
+        }
+        let module = rt.compile_hlo_file(&spec.path)?;
+        let cols_i32: Vec<i32> = ell.col_idx.iter().map(|&c| c as i32).collect();
+        let cols_lit = literal_i32_2d(&cols_i32, spec.n, spec.width)?;
+        let vals_lit = literal_f64_2d(&ell.vals, spec.n, spec.width)?;
+        Ok(XlaSpmm {
+            module,
+            cols_lit,
+            vals_lit,
+            n: spec.n,
+            d: spec.d,
+            nnz: ell.nnz(),
+            padded_len: ell.padded_len(),
+        })
+    }
+
+    /// The dense width this artifact was compiled for.
+    pub fn artifact_d(&self) -> usize {
+        self.d
+    }
+
+    /// Padded slots (the artifact's true FLOP basis: `2·padded·d`).
+    pub fn padded_len(&self) -> usize {
+        self.padded_len
+    }
+}
+
+impl Spmm for XlaSpmm {
+    fn id(&self) -> Impl {
+        Impl::Xla
+    }
+    fn nrows(&self) -> usize {
+        self.n
+    }
+    fn ncols(&self) -> usize {
+        self.n
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    fn execute(&self, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        check_dims(self.n, self.n, b, c)?;
+        if b.ncols != self.d {
+            return Err(Error::DimensionMismatch(format!(
+                "artifact compiled for d={} but B has d={}",
+                self.d, b.ncols
+            )));
+        }
+        let b_lit = literal_f64_2d(&b.data, b.nrows, b.ncols)?;
+        // operand order matches model.spmm_entry(cols, vals, b)
+        let out = self.module.execute1(&[&self.cols_lit, &self.vals_lit, &b_lit])?;
+        let v = out.to_vec::<f64>()?;
+        if v.len() != c.data.len() {
+            return Err(Error::Xla(format!(
+                "result has {} elements, expected {}",
+                v.len(),
+                c.data.len()
+            )));
+        }
+        c.data.copy_from_slice(&v);
+        Ok(())
+    }
+}

@@ -1,0 +1,235 @@
+//! Block Sparse Row (BSR): dense `bs × bs` blocks, CSR over blocks.
+//!
+//! The format the paper's related work optimises toward (DDB/ICS'22
+//! builds dense blocks for matrix units; the paper's §II-B lists
+//! blocking formats as a key layout axis). BSR trades padding (zeros
+//! inside partially-filled blocks) for perfectly regular inner loops —
+//! on blocked meshes the fill is high and BSR approaches dense-tile
+//! throughput; on random matrices the padding tax is ruinous. The
+//! `spmm::BsrSpmm` kernel and the A1 ablation quantify both sides, and
+//! the Pallas twin (`python/compile/kernels/bsr_spmm.py`) is the MXU
+//! mapping DESIGN.md §Hardware-Adaptation describes.
+
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+
+/// BSR matrix: `block_row_ptr[i]..block_row_ptr[i+1]` indexes the
+/// nonzero blocks of block-row `i`; block `k` covers columns
+/// `block_col[k]*bs ..` and stores a dense row-major `bs × bs` tile at
+/// `blocks[k*bs*bs..]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bsr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Block edge length.
+    pub block_size: usize,
+    pub n_block_rows: usize,
+    pub n_block_cols: usize,
+    pub block_row_ptr: Vec<usize>,
+    pub block_col: Vec<u32>,
+    /// Dense tiles, `block_size²` values each.
+    pub blocks: Vec<f64>,
+}
+
+impl Bsr {
+    /// Convert from CSR with edge length `bs` (rows/cols padded up to
+    /// a multiple of `bs` logically; padding stays implicit).
+    pub fn from_csr(csr: &Csr, bs: usize) -> Bsr {
+        assert!(bs >= 1 && bs <= 1024);
+        let n_block_rows = csr.nrows.div_ceil(bs).max(1);
+        let n_block_cols = csr.ncols.div_ceil(bs).max(1);
+
+        // pass 1: which blocks exist per block row
+        let mut block_row_ptr = vec![0usize; n_block_rows + 1];
+        let mut block_col: Vec<u32> = Vec::new();
+        let mut blocks: Vec<f64> = Vec::new();
+        // scratch: block-col -> slot index for the current block row
+        let mut slot_of = vec![usize::MAX; n_block_cols];
+        for br in 0..n_block_rows {
+            let row_lo = br * bs;
+            let row_hi = ((br + 1) * bs).min(csr.nrows);
+            let start_slot = block_col.len();
+            // discover block columns in ascending order: collect then sort
+            let mut cols_here: Vec<u32> = Vec::new();
+            for r in row_lo..row_hi {
+                for &c in csr.row_cols(r) {
+                    let bc = c / bs as u32;
+                    if slot_of[bc as usize] == usize::MAX {
+                        slot_of[bc as usize] = 0; // mark
+                        cols_here.push(bc);
+                    }
+                }
+            }
+            cols_here.sort_unstable();
+            for (k, &bc) in cols_here.iter().enumerate() {
+                slot_of[bc as usize] = start_slot + k;
+                block_col.push(bc);
+            }
+            blocks.resize(block_col.len() * bs * bs, 0.0);
+            // pass 2 for this block row: scatter values
+            for r in row_lo..row_hi {
+                let rr = r - row_lo;
+                for (&c, &v) in csr.row_cols(r).iter().zip(csr.row_vals(r)) {
+                    let bc = (c / bs as u32) as usize;
+                    let slot = slot_of[bc];
+                    let cc = c as usize % bs;
+                    blocks[slot * bs * bs + rr * bs + cc] = v;
+                }
+            }
+            // reset scratch
+            for &bc in &cols_here {
+                slot_of[bc as usize] = usize::MAX;
+            }
+            block_row_ptr[br + 1] = block_col.len();
+        }
+        Bsr {
+            nrows: csr.nrows,
+            ncols: csr.ncols,
+            block_size: bs,
+            n_block_rows,
+            n_block_cols,
+            block_row_ptr,
+            block_col,
+            blocks,
+        }
+    }
+
+    /// Stored (possibly zero) values: `n_blocks · bs²`.
+    pub fn stored_len(&self) -> usize {
+        self.block_col.len() * self.block_size * self.block_size
+    }
+
+    /// Count of structurally nonzero values inside the tiles.
+    pub fn nnz(&self) -> usize {
+        self.blocks.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Number of nonzero blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.block_col.len()
+    }
+
+    /// Mean fill of a stored tile (1.0 = fully dense tiles).
+    pub fn fill_ratio(&self) -> f64 {
+        if self.stored_len() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.stored_len() as f64
+        }
+    }
+
+    /// Dense tile `k` as a slice.
+    #[inline]
+    pub fn block(&self, k: usize) -> &[f64] {
+        let sq = self.block_size * self.block_size;
+        &self.blocks[k * sq..(k + 1) * sq]
+    }
+
+    /// Structural validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.block_row_ptr.len() != self.n_block_rows + 1
+            || *self.block_row_ptr.last().unwrap() != self.block_col.len()
+            || self.blocks.len() != self.stored_len()
+        {
+            return Err(Error::InvalidStructure("bsr arrays inconsistent".into()));
+        }
+        for br in 0..self.n_block_rows {
+            let slots = &self.block_col[self.block_row_ptr[br]..self.block_row_ptr[br + 1]];
+            for w in slots.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Error::InvalidStructure(format!(
+                        "bsr block row {br} not ascending"
+                    )));
+                }
+            }
+            if let Some(&bc) = slots.last() {
+                if bc as usize >= self.n_block_cols {
+                    return Err(Error::InvalidStructure("bsr block col OOB".into()));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense row-major rendering (tests only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let bs = self.block_size;
+        let mut d = vec![0.0; self.nrows * self.ncols];
+        for br in 0..self.n_block_rows {
+            for k in self.block_row_ptr[br]..self.block_row_ptr[br + 1] {
+                let bc = self.block_col[k] as usize;
+                let tile = self.block(k);
+                for rr in 0..bs {
+                    let r = br * bs + rr;
+                    if r >= self.nrows {
+                        break;
+                    }
+                    for cc in 0..bs {
+                        let c = bc * bs + cc;
+                        if c >= self.ncols {
+                            break;
+                        }
+                        let v = tile[rr * bs + cc];
+                        if v != 0.0 {
+                            d[r * self.ncols + c] = v;
+                        }
+                    }
+                }
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, mesh2d, MeshKind, Prng};
+
+    #[test]
+    fn roundtrip_small() {
+        let csr = Csr::from_dense(5, 5, &[
+            1.0, 2.0, 0.0, 0.0, 0.0, //
+            3.0, 4.0, 0.0, 0.0, 5.0, //
+            0.0, 0.0, 6.0, 0.0, 0.0, //
+            0.0, 0.0, 0.0, 7.0, 0.0, //
+            8.0, 0.0, 0.0, 0.0, 9.0,
+        ]);
+        let bsr = Bsr::from_csr(&csr, 2);
+        bsr.validate().unwrap();
+        assert_eq!(bsr.to_dense(), csr.to_dense());
+        assert_eq!(bsr.nnz(), 9);
+        assert_eq!(bsr.n_block_rows, 3);
+    }
+
+    #[test]
+    fn roundtrip_random_various_bs() {
+        let mut rng = Prng::new(210);
+        let csr = erdos_renyi(150, 150, 5.0, &mut rng);
+        for bs in [1usize, 2, 3, 4, 8, 16] {
+            let bsr = Bsr::from_csr(&csr, bs);
+            bsr.validate().unwrap();
+            assert_eq!(bsr.to_dense(), csr.to_dense(), "bs={bs}");
+            assert_eq!(bsr.nnz(), csr.nnz());
+        }
+    }
+
+    #[test]
+    fn mesh_fills_better_than_random() {
+        let mut rng = Prng::new(211);
+        let mesh = mesh2d(32, MeshKind::Triangular, 0.9, &mut rng);
+        let er = erdos_renyi(mesh.nrows, mesh.ncols, mesh.avg_row_len(), &mut rng);
+        let f_mesh = Bsr::from_csr(&mesh, 4).fill_ratio();
+        let f_er = Bsr::from_csr(&er, 4).fill_ratio();
+        assert!(f_mesh > 1.5 * f_er, "mesh {f_mesh} vs er {f_er}");
+    }
+
+    #[test]
+    fn bs1_is_csr_like() {
+        let mut rng = Prng::new(212);
+        let csr = erdos_renyi(60, 60, 4.0, &mut rng);
+        let bsr = Bsr::from_csr(&csr, 1);
+        assert_eq!(bsr.fill_ratio(), 1.0);
+        assert_eq!(bsr.n_blocks(), csr.nnz());
+    }
+}

@@ -1,0 +1,188 @@
+//! Coordinate (triplet) format — the construction format every
+//! generator emits and every other format converts from.
+
+use crate::error::{Error, Result};
+
+/// A sparse matrix in coordinate form: parallel `(row, col, val)`
+/// arrays. Rows/cols are `u32` (the paper's 4-byte index assumption
+/// bounds n < 2^32, comfortably above anything we generate).
+#[derive(Debug, Clone, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    /// Empty matrix of the given shape.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Empty matrix with reserved capacity.
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Number of stored entries (before dedup this may exceed the
+    /// logical nnz).
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Append one entry. Panics in debug builds on out-of-range
+    /// indices.
+    #[inline]
+    pub fn push(&mut self, row: usize, col: usize, val: f64) {
+        debug_assert!(row < self.nrows && col < self.ncols);
+        self.rows.push(row as u32);
+        self.cols.push(col as u32);
+        self.vals.push(val);
+    }
+
+    /// Validate index ranges and array lengths.
+    pub fn validate(&self) -> Result<()> {
+        if self.rows.len() != self.cols.len() || self.rows.len() != self.vals.len() {
+            return Err(Error::InvalidStructure(format!(
+                "coo arrays disagree: rows={} cols={} vals={}",
+                self.rows.len(),
+                self.cols.len(),
+                self.vals.len()
+            )));
+        }
+        for (i, (&r, &c)) in self.rows.iter().zip(&self.cols).enumerate() {
+            if r as usize >= self.nrows || c as usize >= self.ncols {
+                return Err(Error::InvalidStructure(format!(
+                    "entry {i} ({r},{c}) out of {}x{}",
+                    self.nrows, self.ncols
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Sort entries into row-major order and sum duplicates.
+    /// Returns the deduplicated matrix.
+    pub fn sorted_dedup(mut self) -> Coo {
+        let n = self.nnz();
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        let rows = &self.rows;
+        let cols = &self.cols;
+        perm.sort_unstable_by_key(|&i| {
+            ((rows[i as usize] as u64) << 32) | cols[i as usize] as u64
+        });
+        let mut out = Coo::with_capacity(self.nrows, self.ncols, n);
+        for &pi in &perm {
+            let i = pi as usize;
+            let (r, c, v) = (self.rows[i], self.cols[i], self.vals[i]);
+            if let (Some(&lr), Some(&lc)) = (out.rows.last(), out.cols.last()) {
+                if lr == r && lc == c {
+                    *out.vals.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            out.rows.push(r);
+            out.cols.push(c);
+            out.vals.push(v);
+        }
+        self.rows = out.rows;
+        self.cols = out.cols;
+        self.vals = out.vals;
+        self
+    }
+
+    /// Transpose in place (swaps row/col arrays and the shape).
+    pub fn transpose(mut self) -> Coo {
+        std::mem::swap(&mut self.rows, &mut self.cols);
+        std::mem::swap(&mut self.nrows, &mut self.ncols);
+        self
+    }
+
+    /// Make the pattern symmetric by adding the transpose of every
+    /// off-diagonal entry (values mirrored), then deduplicating.
+    /// Used by the graph generators, whose adjacency matrices are
+    /// symmetric.
+    pub fn symmetrize(mut self) -> Coo {
+        let n = self.nnz();
+        for i in 0..n {
+            let (r, c) = (self.rows[i], self.cols[i]);
+            if r != c {
+                self.rows.push(c);
+                self.cols.push(r);
+                self.vals.push(self.vals[i]);
+            }
+        }
+        self.sorted_dedup()
+    }
+
+    /// Dense row-major rendering (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.nrows * self.ncols];
+        for i in 0..self.nnz() {
+            d[self.rows[i] as usize * self.ncols + self.cols[i] as usize] += self.vals[i];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_nnz() {
+        let mut m = Coo::new(3, 3);
+        m.push(0, 1, 2.0);
+        m.push(2, 2, -1.0);
+        assert_eq!(m.nnz(), 2);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn dedup_sums_duplicates() {
+        let mut m = Coo::new(2, 2);
+        m.push(1, 0, 1.0);
+        m.push(0, 0, 2.0);
+        m.push(1, 0, 3.0);
+        let m = m.sorted_dedup();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.rows, vec![0, 1]);
+        assert_eq!(m.cols, vec![0, 0]);
+        assert_eq!(m.vals, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn symmetrize_mirrors() {
+        let mut m = Coo::new(3, 3);
+        m.push(0, 1, 5.0);
+        m.push(1, 1, 7.0);
+        let m = m.symmetrize();
+        let d = m.to_dense();
+        assert_eq!(d[0 * 3 + 1], 5.0);
+        assert_eq!(d[1 * 3 + 0], 5.0);
+        assert_eq!(d[1 * 3 + 1], 7.0);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let m = Coo { nrows: 2, ncols: 2, rows: vec![5], cols: vec![0], vals: vec![1.0] };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn transpose_swaps() {
+        let mut m = Coo::new(2, 3);
+        m.push(0, 2, 1.0);
+        let t = m.transpose();
+        assert_eq!((t.nrows, t.ncols), (3, 2));
+        assert_eq!((t.rows[0], t.cols[0]), (2, 0));
+    }
+}

@@ -1,0 +1,122 @@
+//! Compressed Sparse Column. Used for column-driven analyses and as the
+//! transpose machinery for CSR.
+
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+
+/// CSC matrix: `col_ptr[c]..col_ptr[c+1]` indexes the (row-sorted)
+/// entries of column `c` in `row_idx` / `vals`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csc {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub col_ptr: Vec<usize>,
+    pub row_idx: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Csc {
+    /// Counting-sort conversion from CSR — O(nnz + n).
+    pub fn from_csr(csr: &Csr) -> Csc {
+        let mut col_ptr = vec![0usize; csr.ncols + 1];
+        for &c in &csr.col_idx {
+            col_ptr[c as usize + 1] += 1;
+        }
+        for c in 0..csr.ncols {
+            col_ptr[c + 1] += col_ptr[c];
+        }
+        let mut next = col_ptr.clone();
+        let mut row_idx = vec![0u32; csr.nnz()];
+        let mut vals = vec![0.0f64; csr.nnz()];
+        for r in 0..csr.nrows {
+            for (c, v) in csr.row_cols(r).iter().zip(csr.row_vals(r)) {
+                let slot = next[*c as usize];
+                row_idx[slot] = r as u32;
+                vals[slot] = *v;
+                next[*c as usize] += 1;
+            }
+        }
+        Csc { nrows: csr.nrows, ncols: csr.ncols, col_ptr, row_idx, vals }
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Row indices of column `c`.
+    #[inline]
+    pub fn col_rows(&self, c: usize) -> &[u32] {
+        &self.row_idx[self.col_ptr[c]..self.col_ptr[c + 1]]
+    }
+
+    /// Values of column `c`.
+    #[inline]
+    pub fn col_vals(&self, c: usize) -> &[f64] {
+        &self.vals[self.col_ptr[c]..self.col_ptr[c + 1]]
+    }
+
+    /// Structural validation (mirror of [`Csr::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.col_ptr.len() != self.ncols + 1
+            || self.col_ptr[0] != 0
+            || *self.col_ptr.last().unwrap() != self.nnz()
+        {
+            return Err(Error::InvalidStructure("csc col_ptr malformed".into()));
+        }
+        for c in 0..self.ncols {
+            let rows = self.col_rows(c);
+            for w in rows.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Error::InvalidStructure(format!(
+                        "col {c} rows not strictly ascending"
+                    )));
+                }
+            }
+            if let Some(&r) = rows.last() {
+                if r as usize >= self.nrows {
+                    return Err(Error::InvalidStructure(format!("col {c} row {r} OOB")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense row-major rendering (tests only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.nrows * self.ncols];
+        for c in 0..self.ncols {
+            for (r, v) in self.col_rows(c).iter().zip(self.col_vals(c)) {
+                d[*r as usize * self.ncols + c] = *v;
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_to_csc_same_dense() {
+        let csr = Csr::from_dense(3, 4, &[
+            1.0, 0.0, 2.0, 0.0, //
+            0.0, 3.0, 0.0, 0.0, //
+            4.0, 0.0, 0.0, 5.0,
+        ]);
+        let csc = Csc::from_csr(&csr);
+        csc.validate().unwrap();
+        assert_eq!(csc.to_dense(), csr.to_dense());
+        assert_eq!(csc.col_rows(0), &[0, 2]);
+        assert_eq!(csc.col_vals(3), &[5.0]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let csr = Csr::from_dense(2, 2, &[0.0; 4]);
+        let csc = Csc::from_csr(&csr);
+        csc.validate().unwrap();
+        assert_eq!(csc.nnz(), 0);
+    }
+}

@@ -1,0 +1,236 @@
+//! Compressed Sparse Row — the baseline format of the paper's CSR and
+//! MKL-analog kernels, and the canonical in-memory representation the
+//! engine converts everything else from.
+
+use crate::error::{Error, Result};
+use crate::sparse::{Coo, Csc};
+use crate::{BYTES_IDX, BYTES_VAL};
+
+/// CSR matrix: `row_ptr[r]..row_ptr[r+1]` indexes the (column-sorted)
+/// entries of row `r` in `col_idx` / `vals`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from COO (sorts + deduplicates first).
+    pub fn from_coo(coo: Coo) -> Csr {
+        let coo = coo.sorted_dedup();
+        let mut row_ptr = vec![0usize; coo.nrows + 1];
+        for &r in &coo.rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..coo.nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Csr {
+            nrows: coo.nrows,
+            ncols: coo.ncols,
+            row_ptr,
+            col_idx: coo.cols,
+            vals: coo.vals,
+        }
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row_cols(&self, r: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[r]..self.row_ptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    #[inline]
+    pub fn row_vals(&self, r: usize) -> &[f64] {
+        &self.vals[self.row_ptr[r]..self.row_ptr[r + 1]]
+    }
+
+    /// Number of nonzeros in row `r`.
+    #[inline]
+    pub fn row_len(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Mean nonzeros per row.
+    pub fn avg_row_len(&self) -> f64 {
+        if self.nrows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.nrows as f64
+        }
+    }
+
+    /// Maximum row length (the ELL width).
+    pub fn max_row_len(&self) -> usize {
+        (0..self.nrows).map(|r| self.row_len(r)).max().unwrap_or(0)
+    }
+
+    /// Structural validation: monotone row pointers, in-range and
+    /// strictly ascending column indices per row.
+    pub fn validate(&self) -> Result<()> {
+        if self.row_ptr.len() != self.nrows + 1 {
+            return Err(Error::InvalidStructure(format!(
+                "row_ptr len {} != nrows+1 {}",
+                self.row_ptr.len(),
+                self.nrows + 1
+            )));
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() != self.nnz() {
+            return Err(Error::InvalidStructure("row_ptr endpoints wrong".into()));
+        }
+        if self.col_idx.len() != self.vals.len() {
+            return Err(Error::InvalidStructure("col_idx/vals length mismatch".into()));
+        }
+        for r in 0..self.nrows {
+            if self.row_ptr[r] > self.row_ptr[r + 1] {
+                return Err(Error::InvalidStructure(format!("row_ptr not monotone at {r}")));
+            }
+            let cols = self.row_cols(r);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Error::InvalidStructure(format!(
+                        "row {r} columns not strictly ascending"
+                    )));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c as usize >= self.ncols {
+                    return Err(Error::InvalidStructure(format!(
+                        "row {r} col {c} >= ncols {}",
+                        self.ncols
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes this structure occupies under the paper's model:
+    /// `nnz·8 (vals) + nnz·4 (col idx) + (n+1)·4 (row ptr)` ≈ `12·nnz`.
+    pub fn model_bytes(&self) -> usize {
+        self.nnz() * (BYTES_VAL + BYTES_IDX) + (self.nrows + 1) * BYTES_IDX
+    }
+
+    /// Convert back to COO (row-major ordered).
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz());
+        for r in 0..self.nrows {
+            for (c, v) in self.row_cols(r).iter().zip(self.row_vals(r)) {
+                coo.rows.push(r as u32);
+                coo.cols.push(*c);
+                coo.vals.push(*v);
+            }
+        }
+        coo
+    }
+
+    /// Transpose via CSC view: CSR of Aᵀ has identical arrays to CSC of
+    /// A.
+    pub fn transpose(&self) -> Csr {
+        let csc = Csc::from_csr(self);
+        Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            row_ptr: csc.col_ptr,
+            col_idx: csc.row_idx,
+            vals: csc.vals,
+        }
+    }
+
+    /// Dense row-major rendering (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.nrows * self.ncols];
+        for r in 0..self.nrows {
+            for (c, v) in self.row_cols(r).iter().zip(self.row_vals(r)) {
+                d[r * self.ncols + *c as usize] = *v;
+            }
+        }
+        d
+    }
+
+    /// Build a small CSR directly from a dense row-major slice
+    /// (tests only).
+    pub fn from_dense(nrows: usize, ncols: usize, dense: &[f64]) -> Csr {
+        assert_eq!(dense.len(), nrows * ncols);
+        let mut coo = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                let v = dense[r * ncols + c];
+                if v != 0.0 {
+                    coo.push(r, c, v);
+                }
+            }
+        }
+        Csr::from_coo(coo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [1 0 2]
+        // [0 0 0]
+        // [3 4 0]
+        Csr::from_dense(3, 3, &[1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0, 0.0])
+    }
+
+    #[test]
+    fn from_coo_roundtrip() {
+        let m = sample();
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row_ptr, vec![0, 2, 2, 4]);
+        assert_eq!(m.row_cols(0), &[0, 2]);
+        assert_eq!(m.row_vals(2), &[3.0, 4.0]);
+        let d = m.to_dense();
+        assert_eq!(d, vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn coo_csr_coo_identity() {
+        let m = sample();
+        let m2 = Csr::from_coo(m.to_coo());
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn transpose_correct() {
+        let m = sample();
+        let t = m.transpose();
+        t.validate().unwrap();
+        let d = t.to_dense();
+        assert_eq!(d, vec![1.0, 0.0, 3.0, 0.0, 0.0, 4.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn model_bytes_is_12nnz_plus_rowptr() {
+        let m = sample();
+        assert_eq!(m.model_bytes(), 4 * 12 + 4 * 4);
+    }
+
+    #[test]
+    fn validate_catches_descending_cols() {
+        let mut m = sample();
+        m.col_idx.swap(0, 1);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn row_stats() {
+        let m = sample();
+        assert_eq!(m.max_row_len(), 2);
+        assert!((m.avg_row_len() - 4.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,147 @@
+//! ELLPACK (padded fixed-width) format.
+//!
+//! Every row stores exactly `width` (column, value) slots; short rows
+//! are padded with `col = row, val = 0.0` (an always-in-range index so
+//! gathers stay valid). ELL is the format the JAX/Pallas layers use:
+//! its static shape is what XLA AOT compilation and TPU tiling require
+//! (see DESIGN.md §Hardware-Adaptation), and the Rust ELL kernel gives
+//! a native apples-to-apples comparison point for the XLA artifact.
+
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+
+/// ELL matrix in row-major slot order: slot `k` of row `r` lives at
+/// `r * width + k`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ell {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Slots per row (≥ the longest CSR row it was built from).
+    pub width: usize,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Ell {
+    /// Convert from CSR using `width = max_row_len` (panics if the
+    /// matrix is empty-width; use [`Ell::from_csr_with_width`] to pad
+    /// wider).
+    pub fn from_csr(csr: &Csr) -> Ell {
+        Self::from_csr_with_width(csr, csr.max_row_len().max(1))
+    }
+
+    /// Convert from CSR with an explicit width ≥ `max_row_len`.
+    pub fn from_csr_with_width(csr: &Csr, width: usize) -> Ell {
+        assert!(width >= csr.max_row_len().max(1), "width too small");
+        let mut col_idx = vec![0u32; csr.nrows * width];
+        let mut vals = vec![0.0f64; csr.nrows * width];
+        for r in 0..csr.nrows {
+            let cols = csr.row_cols(r);
+            let vs = csr.row_vals(r);
+            let base = r * width;
+            for k in 0..width {
+                if k < cols.len() {
+                    col_idx[base + k] = cols[k];
+                    vals[base + k] = vs[k];
+                } else {
+                    // pad with a safe in-range column and a zero value
+                    col_idx[base + k] = (r % csr.ncols.max(1)) as u32;
+                    vals[base + k] = 0.0;
+                }
+            }
+        }
+        Ell { nrows: csr.nrows, ncols: csr.ncols, width, col_idx, vals }
+    }
+
+    /// Logical nonzeros (excludes padding).
+    pub fn nnz(&self) -> usize {
+        self.vals.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Total stored slots including padding.
+    pub fn padded_len(&self) -> usize {
+        self.nrows * self.width
+    }
+
+    /// Padding overhead ratio `padded / nnz` (∞-safe: returns 0 for an
+    /// all-zero matrix).
+    pub fn padding_ratio(&self) -> f64 {
+        let nnz = self.nnz();
+        if nnz == 0 {
+            0.0
+        } else {
+            self.padded_len() as f64 / nnz as f64
+        }
+    }
+
+    /// Structural validation: in-range column indices, consistent array
+    /// lengths.
+    pub fn validate(&self) -> Result<()> {
+        if self.col_idx.len() != self.padded_len() || self.vals.len() != self.padded_len() {
+            return Err(Error::InvalidStructure("ell array lengths".into()));
+        }
+        for (i, &c) in self.col_idx.iter().enumerate() {
+            if c as usize >= self.ncols {
+                return Err(Error::InvalidStructure(format!("ell slot {i} col {c} OOB")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense row-major rendering (tests only; sums slots so padded
+    /// zeros are harmless).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.nrows * self.ncols];
+        for r in 0..self.nrows {
+            for k in 0..self.width {
+                let i = r * self.width + k;
+                d[r * self.ncols + self.col_idx[i] as usize] += self.vals[i];
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        Csr::from_dense(3, 3, &[1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0, 0.0])
+    }
+
+    #[test]
+    fn ell_roundtrip() {
+        let csr = sample();
+        let ell = Ell::from_csr(&csr);
+        ell.validate().unwrap();
+        assert_eq!(ell.width, 2);
+        assert_eq!(ell.to_dense(), csr.to_dense());
+        assert_eq!(ell.nnz(), 4);
+    }
+
+    #[test]
+    fn explicit_width_pads() {
+        let csr = sample();
+        let ell = Ell::from_csr_with_width(&csr, 5);
+        ell.validate().unwrap();
+        assert_eq!(ell.padded_len(), 15);
+        assert_eq!(ell.to_dense(), csr.to_dense());
+        assert!((ell.padding_ratio() - 15.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_too_small_panics() {
+        let csr = sample();
+        let _ = Ell::from_csr_with_width(&csr, 1);
+    }
+
+    #[test]
+    fn empty_matrix_padding_ratio() {
+        let csr = Csr::from_dense(2, 2, &[0.0; 4]);
+        let ell = Ell::from_csr(&csr);
+        assert_eq!(ell.padding_ratio(), 0.0);
+        assert_eq!(ell.width, 1);
+    }
+}

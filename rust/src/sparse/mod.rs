@@ -1,0 +1,48 @@
+//! Sparse matrix substrate: storage formats, conversions, and
+//! MatrixMarket IO.
+//!
+//! All formats store `f64` values and 32-bit column indices, matching
+//! the paper's traffic model assumptions (§III: "matrix values are
+//! stored in double-precision floating-point format, while indices in
+//! the sparse matrix are stored as 32-bit integers").
+
+mod bsr;
+mod coo;
+mod csb;
+mod csc;
+mod csr;
+mod ell;
+pub mod mm_io;
+pub mod reorder;
+
+pub use bsr::Bsr;
+pub use coo::Coo;
+pub use csb::{Csb, CsbBlock};
+pub use csc::Csc;
+pub use csr::Csr;
+pub use ell::Ell;
+
+/// The storage formats the engine can route between.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    Coo,
+    Csr,
+    Csc,
+    Csb,
+    Ell,
+    Bsr,
+}
+
+impl std::fmt::Display for Format {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Format::Coo => "COO",
+            Format::Csr => "CSR",
+            Format::Csc => "CSC",
+            Format::Csb => "CSB",
+            Format::Ell => "ELL",
+            Format::Bsr => "BSR",
+        };
+        write!(f, "{s}")
+    }
+}

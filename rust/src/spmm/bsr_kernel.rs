@@ -1,0 +1,152 @@
+//! BSR SpMM — dense-tile kernel: each nonzero `bs × bs` block does a
+//! small dense `bs × bs · bs × d` multiply-accumulate.
+//!
+//! The regular tiles make the inner loops branch-free and fully
+//! vectorisable (this is the CPU shadow of mapping CSB onto a matrix
+//! unit — MXU/AMX — see DESIGN.md §Hardware-Adaptation and the Pallas
+//! twin `bsr_spmm.py`). The cost is the padding FLOPs on zeros inside
+//! tiles: throughput in *useful* GFLOP/s is `fill_ratio ×` the dense
+//! rate, which the A1 ablation quantifies per structure.
+
+use crate::error::Result;
+use crate::sparse::{Bsr, Csr};
+use crate::spmm::csr_kernel::RawRows;
+use crate::spmm::pool::parallel_chunks_dynamic;
+use crate::spmm::{check_dims, DenseMatrix, Impl, Spmm};
+
+/// Block-row-parallel BSR SpMM kernel.
+pub struct BsrSpmm {
+    a: Bsr,
+    threads: usize,
+}
+
+impl BsrSpmm {
+    /// Convert from CSR with tile edge `bs` (4 or 8 are the sweet
+    /// spots on AVX-512).
+    pub fn from_csr(csr: &Csr, bs: usize, threads: usize) -> Self {
+        BsrSpmm { a: Bsr::from_csr(csr, bs), threads: threads.max(1) }
+    }
+
+    /// Wrap an existing BSR matrix.
+    pub fn new(a: Bsr, threads: usize) -> Self {
+        BsrSpmm { a, threads: threads.max(1) }
+    }
+
+    /// The underlying structure (fill statistics for reports).
+    pub fn matrix(&self) -> &Bsr {
+        &self.a
+    }
+}
+
+impl Spmm for BsrSpmm {
+    fn id(&self) -> Impl {
+        Impl::Bsr
+    }
+    fn nrows(&self) -> usize {
+        self.a.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.a.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.a.nnz()
+    }
+
+    fn execute(&self, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        check_dims(self.a.nrows, self.a.ncols, b, c)?;
+        let rows = RawRows::new(c);
+        let a = &self.a;
+        let bs = a.block_size;
+        let d = b.ncols;
+        parallel_chunks_dynamic(a.n_block_rows, self.threads, 1, |brange| {
+            for br in brange {
+                let row_lo = br * bs;
+                let row_hi = ((br + 1) * bs).min(a.nrows);
+                for r in row_lo..row_hi {
+                    // SAFETY: block rows own disjoint C windows.
+                    unsafe { rows.row(r) }.iter_mut().for_each(|x| *x = 0.0);
+                }
+                for k in a.block_row_ptr[br]..a.block_row_ptr[br + 1] {
+                    let col_lo = a.block_col[k] as usize * bs;
+                    let tile = a.block(k);
+                    // dense (bs×bs)·(bs×d): for each tile row, FMA over
+                    // tile cols into the C row
+                    for rr in 0..(row_hi - row_lo) {
+                        // SAFETY: in this block row's window.
+                        let crow = unsafe { rows.row(row_lo + rr) };
+                        for cc in 0..bs {
+                            let v = tile[rr * bs + cc];
+                            if v == 0.0 {
+                                continue; // skip padding FLOPs on very sparse tiles
+                            }
+                            let bcol = col_lo + cc;
+                            if bcol >= a.ncols {
+                                break;
+                            }
+                            let brow = b.row(bcol);
+                            for x in 0..d {
+                                crow[x] += v * brow[x];
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, mesh2d, MeshKind, Prng};
+    use crate::spmm::reference_spmm;
+
+    #[test]
+    fn matches_reference() {
+        let mut rng = Prng::new(220);
+        let a = erdos_renyi(300, 300, 6.0, &mut rng);
+        for bs in [2usize, 4, 8] {
+            for d in [1usize, 4, 16] {
+                let b = DenseMatrix::random(300, d, &mut rng);
+                let want = reference_spmm(&a, &b);
+                let k = BsrSpmm::from_csr(&a, bs, 2);
+                let mut c = DenseMatrix::zeros(300, d);
+                k.execute(&b, &mut c).unwrap();
+                assert!(c.max_abs_diff(&want) < 1e-12, "bs={bs} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_matrix_correct() {
+        let mut rng = Prng::new(221);
+        let a = mesh2d(20, MeshKind::Triangular, 0.9, &mut rng);
+        let b = DenseMatrix::random(a.ncols, 8, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let k = BsrSpmm::from_csr(&a, 4, 3);
+        let mut c = DenseMatrix::zeros(a.nrows, 8);
+        k.execute(&b, &mut c).unwrap();
+        assert!(c.max_abs_diff(&want) < 1e-12);
+        assert!(k.matrix().fill_ratio() > 0.1);
+    }
+
+    #[test]
+    fn nonmultiple_dims() {
+        // nrows/ncols not a multiple of bs
+        let a = Csr::from_dense(5, 7, &{
+            let mut d = vec![0.0; 35];
+            d[0] = 1.0;
+            d[6] = 2.0;
+            d[34] = 3.0;
+            d
+        });
+        let mut rng = Prng::new(222);
+        let b = DenseMatrix::random(7, 3, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let k = BsrSpmm::from_csr(&a, 4, 1);
+        let mut c = DenseMatrix::zeros(5, 3);
+        k.execute(&b, &mut c).unwrap();
+        assert!(c.max_abs_diff(&want) < 1e-12);
+    }
+}

@@ -1,0 +1,117 @@
+//! Row-major dense matrix — `B` and `C` in every SpMM.
+//!
+//! Row-major is the layout the paper's traffic models assume: "a row of
+//! B" (the d values a nonzero of A touches) is one contiguous cache-line
+//! run.
+
+use crate::gen::Prng;
+
+/// Row-major `nrows × ncols` dense matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// All-zero matrix.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        DenseMatrix { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    /// Uniform-random matrix in `[-1, 1)`.
+    pub fn random(nrows: usize, ncols: usize, rng: &mut Prng) -> Self {
+        let data = (0..nrows * ncols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        DenseMatrix { nrows, ncols, data }
+    }
+
+    /// Build from an explicit row-major buffer.
+    pub fn from_vec(nrows: usize, ncols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), nrows * ncols);
+        DenseMatrix { nrows, ncols, data }
+    }
+
+    /// Row `r` as a slice of length `ncols`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.ncols..(r + 1) * self.ncols]
+    }
+
+    /// Mutable row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.ncols..(r + 1) * self.ncols]
+    }
+
+    /// Element accessor (tests / reports).
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.ncols + c]
+    }
+
+    /// Set one element.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.ncols + c] = v;
+    }
+
+    /// Zero the buffer in place (hot-loop friendly: keeps the
+    /// allocation).
+    pub fn fill_zero(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Max absolute elementwise difference against another matrix.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f64 {
+        assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Relative max-abs error vs a reference (guards against zero
+    /// reference with an absolute floor).
+    pub fn rel_err(&self, reference: &DenseMatrix) -> f64 {
+        let scale = reference.frob_norm().max(1e-30);
+        self.max_abs_diff(reference) / scale * (reference.data.len() as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_contiguous() {
+        let mut m = DenseMatrix::zeros(3, 4);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0, 0.0]);
+        m.row_mut(2)[0] = 1.0;
+        assert_eq!(m.get(2, 0), 1.0);
+    }
+
+    #[test]
+    fn diff_and_norm() {
+        let a = DenseMatrix::from_vec(1, 3, vec![3.0, 0.0, 4.0]);
+        let b = DenseMatrix::from_vec(1, 3, vec![3.0, 1.0, 4.0]);
+        assert_eq!(a.frob_norm(), 5.0);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[test]
+    fn fill_zero_keeps_capacity() {
+        let mut m = DenseMatrix::random(5, 5, &mut Prng::new(1));
+        let ptr = m.data.as_ptr();
+        m.fill_zero();
+        assert_eq!(m.data.as_ptr(), ptr);
+        assert!(m.data.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,181 @@
+//! "OPT" — the register-blocked, d-specialised CSR kernel standing in
+//! for Intel MKL (DESIGN.md §2).
+//!
+//! MKL's edge over textbook CSR in the paper's Table V comes from
+//! (a) keeping the C row in registers across a row's nonzeros instead
+//! of streaming through memory, (b) specialised code paths per dense
+//! width, and (c) 2-way nonzero unrolling to hide load latency. This
+//! kernel implements the same three techniques:
+//!
+//! * `d ∈ {1, 2, 4, 8}`: fixed-size register accumulator arrays, fully
+//!   unrolled (monomorphised through `const D: usize`).
+//! * larger `d`: column panels of 16 with a register-resident
+//!   accumulator tile per panel (A row values re-read from L1, B rows
+//!   re-gathered per panel — the classic MKL/`mkl_sparse_d_mm` column
+//!   blocking).
+
+use crate::error::Result;
+use crate::sparse::Csr;
+use crate::spmm::csr_kernel::RawRows;
+use crate::spmm::pool::{default_chunk, parallel_chunks_dynamic};
+use crate::spmm::{check_dims, DenseMatrix, Impl, Spmm};
+
+/// Register-blocked CSR SpMM (the MKL stand-in).
+pub struct OptSpmm {
+    a: Csr,
+    threads: usize,
+}
+
+impl OptSpmm {
+    /// Wrap a CSR matrix.
+    pub fn new(a: Csr, threads: usize) -> Self {
+        OptSpmm { a, threads: threads.max(1) }
+    }
+}
+
+/// Fully unrolled row kernel for a compile-time width `D`: the C row
+/// lives in `D` registers for the whole row.
+#[inline(always)]
+fn row_kernel_const<const D: usize>(a: &Csr, r: usize, b: &DenseMatrix, crow: &mut [f64]) {
+    let mut acc = [0.0f64; D];
+    let cols = a.row_cols(r);
+    let vals = a.row_vals(r);
+    let mut i = 0;
+    // 2-way unroll over nonzeros to overlap the two B-row gathers
+    while i + 2 <= cols.len() {
+        let v0 = vals[i];
+        let v1 = vals[i + 1];
+        let b0 = b.row(cols[i] as usize);
+        let b1 = b.row(cols[i + 1] as usize);
+        for k in 0..D {
+            acc[k] += v0 * b0[k] + v1 * b1[k];
+        }
+        i += 2;
+    }
+    if i < cols.len() {
+        let v = vals[i];
+        let brow = b.row(cols[i] as usize);
+        for k in 0..D {
+            acc[k] += v * brow[k];
+        }
+    }
+    crow[..D].copy_from_slice(&acc);
+}
+
+/// Panelled kernel for arbitrary d: process `PANEL`-wide column panels
+/// with a register accumulator tile; A's row entries replay from L1.
+#[inline(always)]
+fn row_kernel_panel(a: &Csr, r: usize, b: &DenseMatrix, crow: &mut [f64]) {
+    const PANEL: usize = 16;
+    let d = crow.len();
+    let cols = a.row_cols(r);
+    let vals = a.row_vals(r);
+    let mut p = 0;
+    while p < d {
+        let w = PANEL.min(d - p);
+        if w == PANEL {
+            let mut acc = [0.0f64; PANEL];
+            for (ci, v) in cols.iter().zip(vals) {
+                let brow = &b.row(*ci as usize)[p..p + PANEL];
+                for k in 0..PANEL {
+                    acc[k] += v * brow[k];
+                }
+            }
+            crow[p..p + PANEL].copy_from_slice(&acc);
+        } else {
+            // ragged tail panel
+            let mut acc = [0.0f64; PANEL];
+            for (ci, v) in cols.iter().zip(vals) {
+                let brow = &b.row(*ci as usize)[p..p + w];
+                for (k, bv) in brow.iter().enumerate() {
+                    acc[k] += v * bv;
+                }
+            }
+            crow[p..p + w].copy_from_slice(&acc[..w]);
+        }
+        p += w;
+    }
+}
+
+impl Spmm for OptSpmm {
+    fn id(&self) -> Impl {
+        Impl::Opt
+    }
+    fn nrows(&self) -> usize {
+        self.a.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.a.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.a.nnz()
+    }
+
+    fn execute(&self, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        check_dims(self.a.nrows, self.a.ncols, b, c)?;
+        let d = b.ncols;
+        let rows = RawRows::new(c);
+        let a = &self.a;
+        let chunk = default_chunk(a.nrows, self.threads);
+        parallel_chunks_dynamic(a.nrows, self.threads, chunk, |range| {
+            for r in range {
+                // SAFETY: disjoint row ownership per chunk (see RawRows).
+                let crow = unsafe { rows.row(r) };
+                match d {
+                    1 => row_kernel_const::<1>(a, r, b, crow),
+                    2 => row_kernel_const::<2>(a, r, b, crow),
+                    4 => row_kernel_const::<4>(a, r, b, crow),
+                    8 => row_kernel_const::<8>(a, r, b, crow),
+                    _ => row_kernel_panel(a, r, b, crow),
+                }
+            }
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{chung_lu, erdos_renyi, ChungLuParams, Prng};
+    use crate::spmm::reference_spmm;
+
+    #[test]
+    fn matches_reference_all_widths() {
+        let mut rng = Prng::new(70);
+        let a = erdos_renyi(257, 257, 6.0, &mut rng);
+        for d in [1usize, 2, 3, 4, 5, 8, 15, 16, 17, 33, 64] {
+            let b = DenseMatrix::random(257, d, &mut rng);
+            let want = reference_spmm(&a, &b);
+            let k = OptSpmm::new(a.clone(), 2);
+            let mut c = DenseMatrix::zeros(257, d);
+            k.execute(&b, &mut c).unwrap();
+            assert!(c.max_abs_diff(&want) < 1e-12, "d={d}");
+        }
+    }
+
+    #[test]
+    fn skewed_matrix_balanced_correctly() {
+        let mut rng = Prng::new(71);
+        let a = chung_lu(ChungLuParams { n: 500, alpha: 2.1, avg_deg: 10.0, k_min: 2.0 }, &mut rng);
+        let b = DenseMatrix::random(500, 16, &mut rng);
+        let want = reference_spmm(&a, &b);
+        for threads in [1usize, 4] {
+            let k = OptSpmm::new(a.clone(), threads);
+            let mut c = DenseMatrix::zeros(500, 16);
+            k.execute(&b, &mut c).unwrap();
+            assert!(c.max_abs_diff(&want) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_rows_zeroed() {
+        // row 1 empty; stale C must still be overwritten
+        let a = Csr::from_dense(3, 3, &[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 2.0, 0.0]);
+        let b = DenseMatrix::random(3, 4, &mut Prng::new(72));
+        let k = OptSpmm::new(a, 1);
+        let mut c = DenseMatrix::from_vec(3, 4, vec![9.0; 12]);
+        k.execute(&b, &mut c).unwrap();
+        assert!(c.row(1).iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,151 @@
+//! Minimal data-parallel helpers over `crossbeam_utils::thread::scope`.
+//!
+//! The paper parallelises SpMM with OpenMP over 64 threads; rayon is
+//! unavailable offline, so this module provides the two primitives the
+//! kernels need: a static row-range split (`parallel_ranges`) and a
+//! dynamically load-balanced chunk queue (`parallel_chunks_dynamic`)
+//! for skewed matrices where static splits starve.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Split `[0, n)` into `parts` near-equal contiguous ranges (the last
+/// ranges absorb the remainder; empty ranges are skipped).
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        if len > 0 {
+            out.push(start..start + len);
+            start += len;
+        }
+    }
+    out
+}
+
+/// Run `f(range)` over a static split of `[0, n)` on `threads` scoped
+/// threads. `f` must be safe to run concurrently on disjoint ranges.
+pub fn parallel_ranges<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let ranges = split_ranges(n, threads);
+    if ranges.len() <= 1 {
+        for r in ranges {
+            f(r);
+        }
+        return;
+    }
+    crossbeam_utils::thread::scope(|s| {
+        for r in ranges {
+            let f = &f;
+            s.spawn(move |_| f(r));
+        }
+    })
+    .expect("worker thread panicked");
+}
+
+/// Dynamically scheduled: workers repeatedly claim `chunk`-sized ranges
+/// of `[0, n)` from a shared atomic counter until exhausted. Use for
+/// skewed row distributions (scale-free matrices) where a static split
+/// leaves one thread holding every hub row.
+pub fn parallel_chunks_dynamic<F>(n: usize, threads: usize, chunk: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1);
+    let chunk = chunk.max(1);
+    if threads == 1 {
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            f(start..end);
+            start = end;
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    crossbeam_utils::thread::scope(|s| {
+        for _ in 0..threads {
+            let f = &f;
+            let next = &next;
+            s.spawn(move |_| loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                f(start..end);
+            });
+        }
+    })
+    .expect("worker thread panicked");
+}
+
+/// Heuristic chunk size: ~8 chunks per thread, at least 64 rows, so the
+/// atomic counter stays cold.
+pub fn default_chunk(n: usize, threads: usize) -> usize {
+    (n / (threads.max(1) * 8)).max(64).min(n.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn split_covers_everything() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for p in [1usize, 2, 3, 8, 200] {
+                let rs = split_ranges(n, p);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n, "n={n} p={p}");
+                // contiguous and ordered
+                let mut expect = 0;
+                for r in &rs {
+                    assert_eq!(r.start, expect);
+                    expect = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_ranges_visits_all() {
+        let sum = AtomicU64::new(0);
+        parallel_ranges(1000, 4, |r| {
+            let local: u64 = r.map(|i| i as u64).sum();
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn dynamic_visits_all_once() {
+        let hits: Vec<AtomicU64> = (0..500).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks_dynamic(500, 3, 17, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let sum = AtomicU64::new(0);
+        parallel_chunks_dynamic(100, 1, 7, |r| {
+            sum.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn default_chunk_reasonable() {
+        assert!(default_chunk(1_000_000, 8) >= 64);
+        assert!(default_chunk(10, 8) <= 10_usize.max(64));
+    }
+}

@@ -1,0 +1,86 @@
+//! `proptest_lite` — a miniature property-testing harness.
+//!
+//! `proptest` cannot be vendored offline, so this module provides the
+//! slice of it the test suite needs: seeded random case generation, a
+//! configurable case count, and on-failure reporting of the failing
+//! seed so a case can be replayed deterministically. (No shrinking —
+//! cases are kept small instead.)
+
+use crate::gen::Prng;
+
+/// Number of cases per property (override with env
+/// `PROPTEST_LITE_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROPTEST_LITE_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32)
+}
+
+/// Run `prop` on `cases` seeded PRNGs derived from `seed`. The closure
+/// returns `Err(msg)` (or panics) to fail; the harness reports the
+/// failing case seed for replay.
+pub fn check<F>(seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Prng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed (case {case}, replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Like [`check`] with [`default_cases`].
+pub fn check_default<F>(seed: u64, prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    check(seed, default_cases(), prop)
+}
+
+/// Assert two f64s agree to `tol`, returning a property-style error.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        check(1, 16, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_seed_report() {
+        check(2, 8, |rng| {
+            if rng.f64() < 2.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-9, "x").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Application workloads — the Table II rows, as library APIs.
+//!
+//! The paper motivates SpMM through GNNs, FEM/DFT block solvers, and
+//! batched PageRank. Each workload here drives the [`crate::spmm`]
+//! kernels (or an engine-routed kernel) through the access pattern the
+//! application actually produces, so the examples and benches exercise
+//! SpMM the way downstream users would.
+
+mod gnn;
+mod krylov;
+mod pagerank;
+
+pub use gnn::{gcn_forward, GcnLayer};
+pub use krylov::{block_power_iteration, KrylovStats};
+pub use pagerank::{batched_pagerank, PageRankResult};

@@ -1,0 +1,82 @@
+//! Integration: the roofline-guided engine end to end (classify →
+//! predict → route → measure → learn), without XLA (see
+//! integration_runtime for the artifact path).
+
+use spmm_roofline::coordinator::{Engine, EngineConfig, JobSpec};
+use spmm_roofline::gen::{representative_suite, SparsityClass};
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::spmm::Impl;
+
+fn engine() -> Engine {
+    Engine::new(EngineConfig {
+        threads: 1,
+        machine: Some(MachineParams { beta_gbs: 8.0, pi_gflops: 60.0 }),
+        iters: 1,
+        warmup: 0,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+        artifacts_dir: None,
+    })
+    .unwrap()
+}
+
+#[test]
+fn engine_runs_the_representative_suite() {
+    let mut e = engine();
+    for proxy in representative_suite() {
+        e.register(proxy.name, proxy.generate(0.03)).unwrap();
+    }
+    let mut jobs = Vec::new();
+    for name in e.registry().names() {
+        for d in [1usize, 16] {
+            jobs.push(JobSpec::new(name.to_string(), d));
+        }
+    }
+    let records = e.run_batch(&jobs).unwrap();
+    assert_eq!(records.len(), 8);
+    for r in &records {
+        assert!(r.measured_gflops > 0.0, "{}: no throughput", r.matrix);
+        assert!(r.predicted_gflops > 0.0);
+        assert!(r.ai > 0.0);
+    }
+    // classes must match the suite's provenance
+    for proxy in representative_suite() {
+        let cls = &e.registry().get(proxy.name).unwrap().classification;
+        assert_eq!(cls.class, proxy.class, "{}", proxy.name);
+    }
+}
+
+#[test]
+fn routing_sends_blocked_to_csb_and_learns() {
+    let mut e = engine();
+    let road = representative_suite()
+        .into_iter()
+        .find(|p| p.class == SparsityClass::Blocked)
+        .unwrap();
+    e.register("road", road.generate(0.03)).unwrap();
+    let rec = e.submit(&JobSpec::new("road", 16)).unwrap();
+    assert_eq!(rec.chosen, Impl::Csb, "blocked matrix should route to CSB initially");
+
+    // measure every impl so the report can score routing
+    for im in [Impl::Csr, Impl::Opt, Impl::Csb] {
+        e.submit(&JobSpec::new("road", 16).with_impl(im)).unwrap();
+    }
+    let rep = e.prediction_report();
+    assert_eq!(rep.n_jobs, 4);
+    assert!(rep.geomean_ratio > 0.0);
+    assert!(rep.routing_hit_rate.is_some());
+}
+
+#[test]
+fn engine_survives_many_widths_and_reuses_kernels() {
+    let mut e = engine();
+    let er = representative_suite()
+        .into_iter()
+        .find(|p| p.class == SparsityClass::Random)
+        .unwrap();
+    e.register("er", er.generate(0.03)).unwrap();
+    for d in [1usize, 2, 3, 5, 8, 13, 21, 34] {
+        let rec = e.submit(&JobSpec::new("er", d)).unwrap();
+        assert_eq!(rec.d, d);
+    }
+    assert_eq!(e.history().len(), 8);
+}

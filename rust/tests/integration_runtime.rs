@@ -1,0 +1,215 @@
+//! Integration: the XLA/PJRT request path against the native kernels.
+//!
+//! These tests need `make artifacts` to have run (the Makefile's
+//! `test` target guarantees it); they skip gracefully when the
+//! artifacts are absent so `cargo test` alone stays green.
+
+use spmm_roofline::gen::{erdos_renyi, Prng};
+use spmm_roofline::runtime::{ArtifactKind, ArtifactManifest, XlaRuntime, XlaSpmm};
+use spmm_roofline::sparse::{Coo, Csr};
+use spmm_roofline::spmm::{reference_spmm, DenseMatrix, Impl, Spmm};
+
+fn manifest() -> Option<ArtifactManifest> {
+    ArtifactManifest::load("artifacts").ok()
+}
+
+fn truncate_rows(a: &Csr, width: usize) -> Csr {
+    let mut coo = Coo::with_capacity(a.nrows, a.ncols, a.nnz());
+    for r in 0..a.nrows {
+        for (k, (c, v)) in a.row_cols(r).iter().zip(a.row_vals(r)).enumerate() {
+            if k >= width {
+                break;
+            }
+            coo.push(r, *c as usize, *v);
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+#[test]
+fn xla_spmm_matches_reference() {
+    let Some(manifest) = manifest() else {
+        eprintln!("skipped: artifacts/ missing (run `make artifacts`)");
+        return;
+    };
+    let spec = manifest
+        .find_ell(4096, 8, 16)
+        .expect("small artifact missing from manifest");
+    let rt = XlaRuntime::cpu().unwrap();
+    let mut rng = Prng::new(0x7E57);
+    let a = truncate_rows(&erdos_renyi(4096, 4096, 5.0, &mut rng), 8);
+    let xla = XlaSpmm::from_csr(&rt, spec, &a).unwrap();
+    assert_eq!(xla.id(), Impl::Xla);
+    assert_eq!(xla.nnz(), a.nnz());
+
+    let b = DenseMatrix::random(4096, 16, &mut rng);
+    let want = reference_spmm(&a, &b);
+    let mut c = DenseMatrix::zeros(4096, 16);
+    xla.execute(&b, &mut c).unwrap();
+    let diff = c.max_abs_diff(&want);
+    assert!(diff < 1e-11, "XLA result off by {diff}");
+
+    // idempotent across calls (PJRT buffers not aliased)
+    let mut c2 = DenseMatrix::zeros(4096, 16);
+    xla.execute(&b, &mut c2).unwrap();
+    assert_eq!(c.data, c2.data);
+}
+
+#[test]
+fn xla_rejects_shape_mismatches() {
+    let Some(manifest) = manifest() else {
+        eprintln!("skipped: artifacts/ missing");
+        return;
+    };
+    let spec = manifest.find_ell(4096, 8, 16).unwrap();
+    let rt = XlaRuntime::cpu().unwrap();
+    let mut rng = Prng::new(1);
+    // wrong n
+    let a = erdos_renyi(100, 100, 2.0, &mut rng);
+    assert!(XlaSpmm::from_csr(&rt, spec, &a).is_err());
+    // too-wide rows
+    let a = erdos_renyi(4096, 4096, 40.0, &mut rng);
+    if a.max_row_len() > 8 {
+        assert!(XlaSpmm::from_csr(&rt, spec, &a).is_err());
+    }
+    // wrong d at execute time
+    let a = truncate_rows(&erdos_renyi(4096, 4096, 4.0, &mut rng), 8);
+    let xla = XlaSpmm::from_csr(&rt, spec, &a).unwrap();
+    let b = DenseMatrix::zeros(4096, 8); // artifact wants d=16
+    let mut c = DenseMatrix::zeros(4096, 8);
+    assert!(xla.execute(&b, &mut c).is_err());
+}
+
+#[test]
+fn manifest_lists_full_artifact_set() {
+    let Some(manifest) = manifest() else {
+        eprintln!("skipped: artifacts/ missing");
+        return;
+    };
+    // the aot.py "full" set: 5 ELL + 1 GCN
+    assert!(manifest.of_kind(ArtifactKind::EllSpmm).count() >= 5);
+    assert!(manifest.of_kind(ArtifactKind::GcnLayer).count() >= 1);
+    for d in [1usize, 4, 16, 64] {
+        assert!(
+            manifest.find_ell(16384, 16, d).is_some(),
+            "missing ell_spmm_n16384_w16_d{d}"
+        );
+    }
+}
+
+#[test]
+fn gcn_artifact_executes_and_matches_native_composition() {
+    let Some(manifest) = manifest() else {
+        eprintln!("skipped: artifacts/ missing");
+        return;
+    };
+    let Some(spec) = manifest
+        .of_kind(ArtifactKind::GcnLayer)
+        .find(|a| a.n == 4096)
+    else {
+        eprintln!("skipped: no gcn artifact");
+        return;
+    };
+    let rt = XlaRuntime::cpu().unwrap();
+    let module = rt.compile_hlo_file(&spec.path).unwrap();
+
+    let mut rng = Prng::new(0x6C9);
+    let a = truncate_rows(&erdos_renyi(4096, 4096, 5.0, &mut rng), spec.width);
+    let ell = spmm_roofline::sparse::Ell::from_csr_with_width(&a, spec.width);
+    let b = DenseMatrix::random(4096, spec.d, &mut rng);
+    let dout = spec.dout.unwrap();
+    let w = DenseMatrix::random(spec.d, dout, &mut rng);
+
+    // literals
+    let cols: Vec<i32> = ell.col_idx.iter().map(|&c| c as i32).collect();
+    let cols_lit = xla::Literal::vec1(&cols).reshape(&[4096, spec.width as i64]).unwrap();
+    let vals_lit = xla::Literal::vec1(&ell.vals).reshape(&[4096, spec.width as i64]).unwrap();
+    let b_lit = xla::Literal::vec1(&b.data).reshape(&[4096, spec.d as i64]).unwrap();
+    let w_lit = xla::Literal::vec1(&w.data).reshape(&[spec.d as i64, dout as i64]).unwrap();
+    let out = module.execute1(&[&cols_lit, &vals_lit, &b_lit, &w_lit]).unwrap();
+    let got = out.to_vec::<f64>().unwrap();
+
+    // native composition: relu((A·B)·W)
+    let spmm = reference_spmm(&a, &b);
+    let mut want = vec![0.0f64; 4096 * dout];
+    for r in 0..4096 {
+        for k in 0..dout {
+            let mut acc = 0.0;
+            for j in 0..spec.d {
+                acc += spmm.get(r, j) * w.get(j, k);
+            }
+            want[r * dout + k] = acc.max(0.0);
+        }
+    }
+    let max_diff = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_diff < 1e-10, "gcn artifact off by {max_diff}");
+}
+
+#[test]
+fn bell_artifact_matches_native_bsr_composition() {
+    let Some(manifest) = manifest() else {
+        eprintln!("skipped: artifacts/ missing");
+        return;
+    };
+    let Some(spec) = manifest.of_kind(ArtifactKind::BellSpmm).next() else {
+        eprintln!("skipped: no bell artifact (run `make artifacts`)");
+        return;
+    };
+    let bs = spec.bs.expect("bell spec carries bs");
+    let (nbr, mb, n, d) = (spec.n / bs, spec.width, spec.n, spec.d);
+
+    // build a block-structured matrix that fits (nbr, mb, bs): place
+    // up to mb random dense tiles per block row
+    let mut rng = Prng::new(0xBE11);
+    let mut bcols = vec![0i32; nbr * mb];
+    let mut blocks = vec![0.0f64; nbr * mb * bs * bs];
+    let mut dense_a = spmm_roofline::spmm::DenseMatrix::zeros(n, n);
+    for i in 0..nbr {
+        let n_here = 1 + rng.below_usize(mb);
+        let mut used = std::collections::HashSet::new();
+        for k in 0..n_here {
+            let mut j = rng.below_usize(nbr);
+            while !used.insert(j) {
+                j = rng.below_usize(nbr);
+            }
+            bcols[i * mb + k] = j as i32;
+            for rr in 0..bs {
+                for cc in 0..bs {
+                    let v = rng.range_f64(-1.0, 1.0);
+                    blocks[((i * mb + k) * bs + rr) * bs + cc] = v;
+                    dense_a.set(i * bs + rr, j * bs + cc, v);
+                }
+            }
+        }
+    }
+
+    let rt = XlaRuntime::cpu().unwrap();
+    let module = rt.compile_hlo_file(&spec.path).unwrap();
+    let b = DenseMatrix::random(n, d, &mut rng);
+    let bcols_lit = xla::Literal::vec1(&bcols).reshape(&[nbr as i64, mb as i64]).unwrap();
+    let blocks_lit = xla::Literal::vec1(&blocks)
+        .reshape(&[nbr as i64, mb as i64, bs as i64, bs as i64])
+        .unwrap();
+    let b_lit = xla::Literal::vec1(&b.data).reshape(&[n as i64, d as i64]).unwrap();
+    let out = module.execute1(&[&bcols_lit, &blocks_lit, &b_lit]).unwrap();
+    let got = out.to_vec::<f64>().unwrap();
+
+    // reference: dense matmul over the scattered tiles
+    for r in 0..n {
+        for j in 0..d {
+            let mut want = 0.0;
+            for k in 0..n {
+                let av = dense_a.get(r, k);
+                if av != 0.0 {
+                    want += av * b.get(k, j);
+                }
+            }
+            let g = got[r * d + j];
+            assert!((g - want).abs() < 1e-9, "bell mismatch at ({r},{j}): {g} vs {want}");
+        }
+    }
+}

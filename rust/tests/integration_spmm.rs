@@ -1,0 +1,92 @@
+//! Integration: every SpMM implementation × every generator × every
+//! paper d agrees with the serial reference.
+
+use spmm_roofline::gen::{
+    banded, chung_lu, erdos_renyi, ideal_diagonal, mesh2d, rmat, ChungLuParams, MeshKind, Prng,
+};
+use spmm_roofline::sparse::Csr;
+use spmm_roofline::spmm::{build_native, reference_spmm, DenseMatrix, Impl};
+
+fn generators() -> Vec<(&'static str, Csr)> {
+    let mut rng = Prng::new(0xF00D);
+    vec![
+        ("er", erdos_renyi(600, 600, 7.0, &mut rng)),
+        ("banded", banded(600, 6, 0.4, &mut rng)),
+        ("ideal_diag", ideal_diagonal(600)),
+        ("mesh_road", mesh2d(25, MeshKind::Road, 0.62, &mut rng)),
+        ("mesh_tri", mesh2d(25, MeshKind::Triangular, 0.9, &mut rng)),
+        (
+            "chung_lu",
+            chung_lu(ChungLuParams { n: 600, alpha: 2.2, avg_deg: 10.0, k_min: 2.0 }, &mut rng),
+        ),
+        ("rmat", rmat(9, 8.0, 0.57, 0.19, 0.19, &mut rng)),
+        ("empty", Csr::from_dense(64, 64, &[0.0; 4096])),
+    ]
+}
+
+#[test]
+fn all_impls_match_reference_on_all_structures() {
+    let mut rng = Prng::new(0xBEEF);
+    for (name, a) in generators() {
+        a.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        for d in [1usize, 4, 16, 64] {
+            let b = DenseMatrix::random(a.ncols, d, &mut rng);
+            let want = reference_spmm(&a, &b);
+            for im in Impl::NATIVE {
+                let k = build_native(im, &a, 2).unwrap();
+                let mut c = DenseMatrix::zeros(a.nrows, d);
+                k.execute(&b, &mut c).unwrap();
+                let diff = c.max_abs_diff(&want);
+                assert!(diff < 1e-11, "{name}/{im}/d={d}: max|Δ|={diff}");
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_counts_do_not_change_results() {
+    let mut rng = Prng::new(0xCAFE);
+    let a = chung_lu(ChungLuParams { n: 900, alpha: 2.1, avg_deg: 14.0, k_min: 2.0 }, &mut rng);
+    let b = DenseMatrix::random(900, 8, &mut rng);
+    let want = reference_spmm(&a, &b);
+    for im in Impl::NATIVE {
+        for threads in [1usize, 2, 3, 7] {
+            let k = build_native(im, &a, threads).unwrap();
+            let mut c = DenseMatrix::zeros(900, 8);
+            k.execute(&b, &mut c).unwrap();
+            assert!(
+                c.max_abs_diff(&want) < 1e-11,
+                "{im} with {threads} threads diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn repeated_execution_is_idempotent() {
+    let mut rng = Prng::new(0xD00D);
+    let a = erdos_renyi(400, 400, 6.0, &mut rng);
+    let b = DenseMatrix::random(400, 16, &mut rng);
+    for im in Impl::NATIVE {
+        let k = build_native(im, &a, 2).unwrap();
+        let mut c1 = DenseMatrix::zeros(400, 16);
+        let mut c2 = DenseMatrix::random(400, 16, &mut rng); // stale garbage
+        k.execute(&b, &mut c1).unwrap();
+        k.execute(&b, &mut c2).unwrap();
+        assert_eq!(c1.data, c2.data, "{im} not idempotent over stale C");
+    }
+}
+
+#[test]
+fn mismatched_shapes_error_not_panic() {
+    let a = erdos_renyi(100, 100, 3.0, &mut Prng::new(5));
+    for im in Impl::NATIVE {
+        let k = build_native(im, &a, 1).unwrap();
+        let b_bad = DenseMatrix::zeros(99, 4);
+        let mut c = DenseMatrix::zeros(100, 4);
+        assert!(k.execute(&b_bad, &mut c).is_err(), "{im} accepted bad B");
+        let b = DenseMatrix::zeros(100, 4);
+        let mut c_bad = DenseMatrix::zeros(100, 3);
+        assert!(k.execute(&b, &mut c_bad).is_err(), "{im} accepted bad C");
+    }
+}

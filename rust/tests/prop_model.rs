@@ -1,0 +1,157 @@
+//! Property tests over the analytic models: bounds, monotonicity and
+//! dimensional sanity of Eqs. 2/3/4/6 across random parameter draws.
+
+use spmm_roofline::gen::Prng;
+use spmm_roofline::model::{
+    ai_blocked, ai_diagonal, ai_random, ai_scalefree, expected_z, expected_z_exact,
+    hub_mass_fraction, AiParams, MachineParams, Roofline,
+};
+use spmm_roofline::testutil::check_default;
+
+fn arb_params(rng: &mut Prng) -> AiParams {
+    let n = 1usize << (10 + rng.below(12) as u32); // 2^10..2^21
+    let deg = 1.0 + rng.range_f64(0.0, 100.0);
+    let d = 1 + rng.below_usize(128);
+    AiParams::new(n, d, (n as f64 * deg) as usize)
+}
+
+#[test]
+fn prop_random_model_is_the_floor() {
+    // The universal invariant (§III): random = worst case. Cross-
+    // structure orderings are NOT universal (Eq. 4 charges 8 B/nnz for
+    // A vs Eq. 3's 12, so blocked can exceed diagonal at low density).
+    check_default(0x300, |rng| {
+        let p = arb_params(rng);
+        let r = ai_random(p);
+        let di = ai_diagonal(p);
+        let t = 1usize << (4 + rng.below(10) as u32);
+        let n_blocks = (p.nnz / (1 + rng.below_usize(64))).max(1);
+        let bl = ai_blocked(p, t, n_blocks);
+        let alpha = rng.range_f64(2.01, 2.99);
+        let f = rng.range_f64(0.0001, 0.05);
+        let sf = ai_scalefree(p, alpha, f);
+        if !(r > 0.0 && di > 0.0 && bl > 0.0 && sf > 0.0) {
+            return Err("non-positive AI".into());
+        }
+        if r > di * 1.001 {
+            return Err(format!("random {r} > diagonal {di}"));
+        }
+        if bl < r * 0.999 {
+            return Err(format!("blocked {bl} below random floor {r}"));
+        }
+        if sf < r * 0.999 {
+            return Err(format!("scale-free {sf} below random floor {r}"));
+        }
+        // absolute ceiling: no model beats "A values+idx once, C once"
+        let ceiling = p.flops() / (8.0 * p.nnz as f64 + 8.0 * (p.n * p.d) as f64);
+        for (name, ai) in [("blocked", bl), ("scale-free", sf), ("diagonal", di)] {
+            if ai > ceiling * 1.001 {
+                return Err(format!("{name} AI {ai} above physical ceiling {ceiling}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ai_random_increases_with_d_saturating() {
+    check_default(0x301, |rng| {
+        let p = arb_params(rng);
+        let mut last = 0.0;
+        for d in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+            let ai = ai_random(AiParams { d, ..p });
+            if ai < last {
+                return Err(format!("AI(random) not monotone at d={d}"));
+            }
+            last = ai;
+        }
+        // saturation: AI(random) < 2/8 = 0.25 always (B re-read per nnz)
+        if last >= 0.25 {
+            return Err(format!("AI(random) {last} above the 1/4 asymptote"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hub_mass_bounds_and_monotonicity() {
+    check_default(0x302, |rng| {
+        let alpha = rng.range_f64(2.01, 3.5);
+        let f = rng.range_f64(1e-5, 1.0);
+        let m = hub_mass_fraction(alpha, f);
+        if !(0.0..=1.0).contains(&m) {
+            return Err(format!("hub mass {m} out of [0,1]"));
+        }
+        if m < f * 0.999 {
+            return Err(format!("hubs hold less ({m}) than their node share ({f})"));
+        }
+        let m2 = hub_mass_fraction(alpha, (f * 2.0).min(1.0));
+        if m2 < m * 0.999 {
+            return Err("hub mass not monotone in f".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_z_bounds_and_poisson_error() {
+    check_default(0x303, |rng| {
+        let t = 2.0 + rng.range_f64(0.0, 8192.0);
+        let d = rng.range_f64(0.0, 10_000.0);
+        let z = expected_z(t, d);
+        if z < 0.0 || z > t + 1e-9 {
+            return Err(format!("z={z} outside [0, t={t}]"));
+        }
+        if z > d + 1e-9 && d < t {
+            // can't occupy more columns than nonzeros
+            return Err(format!("z={z} > D={d}"));
+        }
+        let exact = expected_z_exact(t, d);
+        if (z - exact).abs() > 0.08 * exact.max(1.0) {
+            return Err(format!("Poisson approx off: {z} vs {exact} (t={t}, D={d})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_roofline_min_semantics() {
+    check_default(0x304, |rng| {
+        let beta = rng.range_f64(1.0, 500.0);
+        let pi = rng.range_f64(10.0, 5000.0);
+        let m = MachineParams { beta_gbs: beta, pi_gflops: pi };
+        let roofline = Roofline::new(m);
+        let ai = rng.range_f64(0.001, 100.0);
+        let p = roofline.attainable_gflops(ai);
+        if p > pi + 1e-9 || p > beta * ai + 1e-9 {
+            return Err("P exceeds a roof".into());
+        }
+        if (p - (beta * ai).min(pi)).abs() > 1e-9 {
+            return Err("P ≠ min(β·AI, π)".into());
+        }
+        if roofline.memory_bound(ai) != (ai < m.ridge_ai()) {
+            return Err("memory_bound inconsistent with ridge".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bytes_positive_and_flops_consistent() {
+    check_default(0x305, |rng| {
+        let p = arb_params(rng);
+        use spmm_roofline::model::{bytes_diagonal, bytes_random};
+        for (ai, bytes) in [
+            (ai_random(p), bytes_random(p)),
+            (ai_diagonal(p), bytes_diagonal(p)),
+        ] {
+            if bytes <= 0.0 {
+                return Err("non-positive bytes".into());
+            }
+            if ((p.flops() / bytes) - ai).abs() > 1e-12 * ai {
+                return Err("AI ≠ FLOPs/bytes".into());
+            }
+        }
+        Ok(())
+    });
+}

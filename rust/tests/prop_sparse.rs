@@ -1,0 +1,134 @@
+//! Property tests (proptest_lite) over the sparse-format substrate:
+//! conversion round-trips, structural invariants, and IO.
+
+use spmm_roofline::gen::{erdos_renyi, Prng};
+use spmm_roofline::sparse::{mm_io, Coo, Csb, Csc, Csr, Ell};
+use spmm_roofline::testutil::check_default;
+
+/// A random small matrix with random shape/density per case.
+fn arb_matrix(rng: &mut Prng) -> Csr {
+    let nrows = 1 + rng.below_usize(80);
+    let ncols = 1 + rng.below_usize(80);
+    let deg = rng.range_f64(0.0, 8.0);
+    erdos_renyi(nrows, ncols, deg, rng)
+}
+
+#[test]
+fn prop_coo_csr_roundtrip() {
+    check_default(0x100, |rng| {
+        let a = arb_matrix(rng);
+        let back = Csr::from_coo(a.to_coo());
+        if back != a {
+            return Err("COO→CSR→COO not identity".into());
+        }
+        back.validate().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_csc_preserves_dense() {
+    check_default(0x101, |rng| {
+        let a = arb_matrix(rng);
+        let csc = Csc::from_csr(&a);
+        csc.validate().map_err(|e| e.to_string())?;
+        if csc.to_dense() != a.to_dense() {
+            return Err("CSC dense mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csb_preserves_dense_any_block() {
+    check_default(0x102, |rng| {
+        let a = arb_matrix(rng);
+        let block = 1usize << (rng.below(7) as u32); // 1..64
+        let csb = Csb::from_csr_with_block(&a, block);
+        csb.validate().map_err(|e| e.to_string())?;
+        if csb.to_dense() != a.to_dense() {
+            return Err(format!("CSB(block={block}) dense mismatch"));
+        }
+        if csb.nnz() != a.nnz() {
+            return Err("CSB nnz mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ell_preserves_dense_and_counts_padding() {
+    check_default(0x103, |rng| {
+        let a = arb_matrix(rng);
+        let extra = rng.below_usize(4);
+        let width = a.max_row_len().max(1) + extra;
+        let ell = Ell::from_csr_with_width(&a, width);
+        ell.validate().map_err(|e| e.to_string())?;
+        if ell.to_dense() != a.to_dense() {
+            return Err("ELL dense mismatch".into());
+        }
+        if ell.padded_len() != a.nrows * width {
+            return Err("ELL padded_len wrong".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transpose_involution() {
+    check_default(0x104, |rng| {
+        let a = arb_matrix(rng);
+        let tt = a.transpose().transpose();
+        if tt != a {
+            return Err("transpose∘transpose ≠ id".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matrixmarket_roundtrip() {
+    let dir = std::env::temp_dir().join("spmm_prop_mmio");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.mtx");
+    check_default(0x105, |rng| {
+        let a = arb_matrix(rng);
+        mm_io::write_csr(&path, &a).map_err(|e| e.to_string())?;
+        let back = Csr::from_coo(mm_io::read_coo(&path).map_err(|e| e.to_string())?);
+        // values survive to 17 significant digits
+        if back.nrows != a.nrows || back.ncols != a.ncols || back.nnz() != a.nnz() {
+            return Err("shape/nnz changed over MatrixMarket".into());
+        }
+        let (da, db) = (a.to_dense(), back.to_dense());
+        for (x, y) in da.iter().zip(&db) {
+            if (x - y).abs() > 1e-15 * x.abs().max(1.0) {
+                return Err(format!("value drift {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_symmetrize_is_symmetric_and_idempotent_on_pattern() {
+    check_default(0x106, |rng| {
+        let a = arb_matrix(rng);
+        let n = a.nrows.max(a.ncols);
+        // embed in square shape first
+        let mut coo = Coo::new(n, n);
+        for r in 0..a.nrows {
+            for (c, v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+                coo.push(r, *c as usize, *v);
+            }
+        }
+        let sym = Csr::from_coo(coo.symmetrize());
+        let d = sym.to_dense();
+        for r in 0..n {
+            for c in 0..n {
+                if (d[r * n + c] != 0.0) != (d[c * n + r] != 0.0) {
+                    return Err(format!("pattern asymmetric at ({r},{c})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}

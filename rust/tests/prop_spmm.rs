@@ -1,0 +1,126 @@
+//! Property tests over the SpMM kernels: algebraic identities that
+//! must hold for every implementation on every random structure.
+
+use spmm_roofline::gen::{erdos_renyi, Prng};
+use spmm_roofline::sparse::Csr;
+use spmm_roofline::spmm::{build_native, reference_spmm, DenseMatrix, Impl};
+use spmm_roofline::testutil::check_default;
+
+fn arb_square(rng: &mut Prng) -> Csr {
+    let n = 8 + rng.below_usize(120);
+    let deg = rng.range_f64(0.0, 10.0);
+    erdos_renyi(n, n, deg, rng)
+}
+
+#[test]
+fn prop_all_impls_agree_with_reference() {
+    check_default(0x200, |rng| {
+        let a = arb_square(rng);
+        let d = 1 + rng.below_usize(20);
+        let threads = 1 + rng.below_usize(3);
+        let b = DenseMatrix::random(a.ncols, d, rng);
+        let want = reference_spmm(&a, &b);
+        for im in Impl::NATIVE {
+            let k = build_native(im, &a, threads).map_err(|e| e.to_string())?;
+            let mut c = DenseMatrix::zeros(a.nrows, d);
+            k.execute(&b, &mut c).map_err(|e| e.to_string())?;
+            let diff = c.max_abs_diff(&want);
+            if diff > 1e-11 {
+                return Err(format!("{im} (threads={threads}, d={d}): |Δ|={diff}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_linearity_in_b() {
+    // A·(αB₁ + B₂) == α(A·B₁) + A·B₂
+    check_default(0x201, |rng| {
+        let a = arb_square(rng);
+        let d = 1 + rng.below_usize(8);
+        let alpha = rng.range_f64(-2.0, 2.0);
+        let b1 = DenseMatrix::random(a.ncols, d, rng);
+        let b2 = DenseMatrix::random(a.ncols, d, rng);
+        let mut combo = DenseMatrix::zeros(a.ncols, d);
+        for i in 0..combo.data.len() {
+            combo.data[i] = alpha * b1.data[i] + b2.data[i];
+        }
+        let k = build_native(Impl::Opt, &a, 1).map_err(|e| e.to_string())?;
+        let mut c_combo = DenseMatrix::zeros(a.nrows, d);
+        k.execute(&combo, &mut c_combo).map_err(|e| e.to_string())?;
+        let c1 = reference_spmm(&a, &b1);
+        let c2 = reference_spmm(&a, &b2);
+        for i in 0..c_combo.data.len() {
+            let want = alpha * c1.data[i] + c2.data[i];
+            if (c_combo.data[i] - want).abs() > 1e-9 {
+                return Err(format!("linearity broken at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_identity_matrix_is_noop() {
+    check_default(0x202, |rng| {
+        let n = 8 + rng.below_usize(100);
+        let a = spmm_roofline::gen::ideal_diagonal(n);
+        let d = 1 + rng.below_usize(8);
+        let b = DenseMatrix::random(n, d, rng);
+        for im in Impl::NATIVE {
+            let k = build_native(im, &a, 1).map_err(|e| e.to_string())?;
+            let mut c = DenseMatrix::zeros(n, d);
+            k.execute(&b, &mut c).map_err(|e| e.to_string())?;
+            if c.max_abs_diff(&b) > 1e-12 {
+                return Err(format!("{im}: I·B ≠ B"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_matrix_gives_zero() {
+    check_default(0x203, |rng| {
+        let n = 4 + rng.below_usize(64);
+        let a = Csr::from_dense(n, n, &vec![0.0; n * n]);
+        let d = 1 + rng.below_usize(6);
+        let b = DenseMatrix::random(n, d, rng);
+        for im in Impl::NATIVE {
+            let k = build_native(im, &a, 2).map_err(|e| e.to_string())?;
+            let mut c = DenseMatrix::random(n, d, rng); // stale
+            k.execute(&b, &mut c).map_err(|e| e.to_string())?;
+            if c.data.iter().any(|&x| x != 0.0) {
+                return Err(format!("{im}: 0·B ≠ 0"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmv_equals_spmm_column() {
+    // d=1 SpMV must equal each column of a d>1 SpMM
+    check_default(0x204, |rng| {
+        let a = arb_square(rng);
+        let d = 2 + rng.below_usize(6);
+        let b = DenseMatrix::random(a.ncols, d, rng);
+        let full = reference_spmm(&a, &b);
+        let k = build_native(Impl::Csr, &a, 1).map_err(|e| e.to_string())?;
+        for col in 0..d {
+            let mut bcol = DenseMatrix::zeros(a.ncols, 1);
+            for r in 0..a.ncols {
+                bcol.data[r] = b.get(r, col);
+            }
+            let mut c = DenseMatrix::zeros(a.nrows, 1);
+            k.execute(&bcol, &mut c).map_err(|e| e.to_string())?;
+            for r in 0..a.nrows {
+                if (c.data[r] - full.get(r, col)).abs() > 1e-11 {
+                    return Err(format!("spmv col {col} row {r} mismatch"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
