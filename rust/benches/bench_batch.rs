@@ -1,0 +1,101 @@
+//! Bench: the batched engine path — a (matrix × d) job queue routed
+//! through `Engine::submit_batch`, with the persistent worker pool and
+//! the recycled dense buffers staying warm across the whole queue.
+//!
+//! Reports the per-job routing table, then the batch aggregate:
+//! throughput over kernel-execution time, model-prediction error,
+//! buffer-pool hit rate, and the dispatch-overhead fraction
+//! (wall time not spent inside kernels). A second identical batch runs
+//! fully warm, so the printed delta isolates what batching amortises.
+//!
+//! `REPRO_SCALE` (default 0.25) and `REPRO_ITERS` (default 3) tune
+//! runtime. Machine β/π are measured (STREAM + FMA) unless
+//! `REPRO_FAST=1` injects nominal parameters to skip calibration.
+
+use spmm_roofline::coordinator::{Engine, EngineConfig, JobSpec};
+use spmm_roofline::gen::representative_suite;
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::spmm::{pool, Impl};
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = envf("REPRO_SCALE", 0.25);
+    let iters = envf("REPRO_ITERS", 3.0) as usize;
+    let fast = std::env::var("REPRO_FAST").map(|v| v == "1").unwrap_or(false);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let machine = if fast {
+        // nominal parameters: predictions are indicative only, but the
+        // measured aggregate numbers are unaffected
+        Some(MachineParams { beta_gbs: 25.0, pi_gflops: 100.0 })
+    } else {
+        None // calibrate via STREAM + FMA loop
+    };
+    let mut engine = Engine::new(EngineConfig {
+        threads,
+        machine,
+        iters,
+        warmup: 1,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+        artifacts_dir: Some("artifacts".into()),
+    })
+    .expect("engine construction");
+    println!(
+        "engine: β={:.1} GB/s π={:.0} GFLOP/s, {} threads, pool: {} persistent workers, xla={}",
+        engine.machine().beta_gbs,
+        engine.machine().pi_gflops,
+        threads,
+        pool::global().workers(),
+        engine.has_xla()
+    );
+
+    for proxy in representative_suite() {
+        let m = proxy.generate(scale);
+        println!("registered {} ({} rows, {} nnz)", proxy.name, m.nrows, m.nnz());
+        engine.register(proxy.name, m).expect("register");
+    }
+
+    let names: Vec<String> = engine.registry().names().iter().map(|s| s.to_string()).collect();
+    let mut jobs = Vec::new();
+    for name in &names {
+        for d in [1usize, 4, 16, 64] {
+            jobs.push(JobSpec::new(name.clone(), d));
+        }
+    }
+
+    println!("\n— batch 1 (cold buffers) —");
+    let cold = engine.submit_batch(&jobs).expect("batch");
+    for r in &cold.records {
+        let chosen = r.chosen.to_string();
+        println!(
+            "  {:<12} d={:<3} → {chosen:<4} pred {:>7.2}  meas {:>7.2} GFLOP/s  ratio {:.2}",
+            r.matrix, r.d, r.predicted_gflops, r.measured_gflops,
+            r.prediction_ratio()
+        );
+    }
+    println!("  {}", cold.summary_line());
+    println!(
+        "  exec {:.1} ms of {:.1} ms wall → dispatch overhead {:.1}%",
+        cold.exec_secs * 1e3,
+        cold.wall_secs * 1e3,
+        100.0 * cold.dispatch_overhead()
+    );
+
+    println!("\n— batch 2 (warm: buffers + priors reused) —");
+    let warm = engine.submit_batch(&jobs).expect("batch");
+    println!("  {}", warm.summary_line());
+    println!(
+        "  buffer misses cold {} → warm {}; aggregate {:.2} → {:.2} GFLOP/s",
+        cold.buffer_misses, warm.buffer_misses,
+        cold.aggregate_gflops(),
+        warm.aggregate_gflops()
+    );
+    let rep = engine.prediction_report();
+    println!(
+        "\nprediction over both batches: n={} geomean(meas/pred)={:.2} mean|log err|={:.2}",
+        rep.n_jobs, rep.geomean_ratio, rep.mean_abs_log_err
+    );
+}

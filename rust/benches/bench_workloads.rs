@@ -5,9 +5,9 @@
 //! visible in context.
 
 use spmm_roofline::config::ExperimentConfig;
-use spmm_roofline::gen::{chung_lu, mesh2d, ChungLuParams, MeshKind, Prng};
+use spmm_roofline::gen::{chung_lu, erdos_renyi, mesh2d, ChungLuParams, MeshKind, Prng};
 use spmm_roofline::metrics::{gflops, spmm_flops, Timer};
-use spmm_roofline::spmm::{build_native, DenseMatrix, Impl};
+use spmm_roofline::spmm::{build_native, pool, DenseMatrix, Impl};
 use spmm_roofline::workloads::{batched_pagerank, block_power_iteration, gcn_forward, GcnLayer};
 
 fn envf(key: &str, default: f64) -> f64 {
@@ -56,6 +56,37 @@ fn main() {
             gflops(20.0 * spmm_flops(mesh.nnz(), 8), dt),
             stats.lambda_max,
             stats.residual
+        );
+    }
+
+    // Per-call dispatch overhead: thousands of tiny SpMMs. This is the
+    // regime the persistent worker pool exists for — with spawn-per-call
+    // scoped threads (the pre-pool implementation), OS thread churn
+    // dominated these calls; with parked workers the per-call cost is a
+    // condvar wake. Tiny matrix → the kernel itself is microseconds, so
+    // the printed µs/call is almost pure dispatch overhead.
+    let tiny = erdos_renyi(256, 256, 4.0, &mut rng);
+    let bt = DenseMatrix::random(256, 8, &mut rng);
+    let mut ct = DenseMatrix::zeros(256, 8);
+    const CALLS: usize = 2000;
+    println!(
+        "\nPer-call dispatch overhead (n=256, nnz={}, d=8, {CALLS} calls, pool: {} workers):",
+        tiny.nnz(),
+        pool::global().workers()
+    );
+    for im in [Impl::Csr, Impl::Opt, Impl::Csb] {
+        let k = build_native(im, &tiny, cfg.threads).unwrap();
+        k.execute(&bt, &mut ct).unwrap(); // warm the pool + caches
+        let t = Timer::start();
+        for _ in 0..CALLS {
+            k.execute(&bt, &mut ct).unwrap();
+        }
+        let dt = t.elapsed_secs();
+        println!(
+            "  {im}: {:.1} ms total, {:.2} µs/call  ({:.2} GFLOP/s sustained)",
+            dt * 1e3,
+            dt / CALLS as f64 * 1e6,
+            gflops(CALLS as f64 * spmm_flops(tiny.nnz(), 8), dt)
         );
     }
 

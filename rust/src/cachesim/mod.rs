@@ -14,4 +14,4 @@ mod trace;
 
 pub use cache::{Cache, CacheConfig, CacheStats};
 pub use hierarchy::{Hierarchy, HierarchyConfig, TrafficReport};
-pub use trace::{trace_csb_spmm, trace_csr_spmm, SpmmLayout};
+pub use trace::{trace_csb_spmm, trace_csr_spmm, trace_spmm_batch, SpmmLayout, TraceJob};

@@ -9,8 +9,11 @@
 //!   window is live); the final write-back is charged once at the end
 //!   as `8·n·d` DRAM bytes (the paper's "C is written once").
 
-use crate::cachesim::Hierarchy;
+use std::sync::Mutex;
+
+use crate::cachesim::{Hierarchy, HierarchyConfig, TrafficReport};
 use crate::sparse::{Csb, Csr};
+use crate::spmm::pool;
 
 /// Virtual address map for one SpMM invocation. Arrays are laid out
 /// back-to-back at 4 KiB alignment, mirroring contiguous allocations.
@@ -82,12 +85,46 @@ pub fn trace_csb_spmm(a: &Csb, d: usize, h: &mut Hierarchy) {
     h.charge_dram(a.nrows as u64 * d as u64 * 8);
 }
 
+/// One replay request for [`trace_spmm_batch`].
+#[derive(Debug, Clone, Copy)]
+pub enum TraceJob<'a> {
+    /// Replay the CSR kernel's stream over matrix `.0` at width `.1`.
+    Csr(&'a Csr, usize),
+    /// Replay the CSB kernel's stream over matrix `.0` at width `.1`.
+    Csb(&'a Csb, usize),
+}
+
+/// Replay many SpMM access streams concurrently on the shared worker
+/// pool — each job gets a private simulated hierarchy (config `cfg`),
+/// so replays are independent and the output order matches the input
+/// order exactly.
+///
+/// The simulator walks every memory access, which makes single-stream
+/// replay the slowest experiment in the harness; fanning the
+/// (matrix, d) grid across the persistent pool recovers most of a
+/// machine-width speedup without touching the simulator itself.
+pub fn trace_spmm_batch(jobs: &[TraceJob<'_>], cfg: HierarchyConfig) -> Vec<TrafficReport> {
+    let slots: Vec<Mutex<Option<TrafficReport>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    pool::parallel_chunks_dynamic(jobs.len(), pool::global_threads(), 1, |range| {
+        for i in range {
+            let mut h = Hierarchy::new(cfg);
+            match jobs[i] {
+                TraceJob::Csr(a, d) => trace_csr_spmm(a, d, &mut h),
+                TraceJob::Csb(a, d) => trace_csb_spmm(a, d, &mut h),
+            }
+            *slots[i].lock().unwrap() = Some(h.report());
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every trace slot is filled exactly once"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cachesim::HierarchyConfig;
     use crate::gen::{banded, erdos_renyi, Prng};
-    use crate::sparse::Csb;
 
     #[test]
     fn layout_is_disjoint_and_ordered() {
@@ -132,6 +169,34 @@ mod tests {
         // logical bytes: per entry 4 + 8 + 2·(4·8) loads
         let per_entry = 4 + 8 + 2 * 32;
         assert_eq!(r.logical_bytes, a.nnz() as u64 * per_entry as u64);
+    }
+
+    #[test]
+    fn batch_matches_sequential_replay() {
+        let mut rng = Prng::new(153);
+        let a = erdos_renyi(512, 512, 5.0, &mut rng);
+        let b = banded(512, 3, 1.0, &mut rng);
+        let csb = Csb::from_csr_with_block(&a, 128);
+        let cfg = HierarchyConfig::tiny();
+        let jobs = vec![
+            TraceJob::Csr(&a, 4),
+            TraceJob::Csr(&b, 8),
+            TraceJob::Csb(&csb, 4),
+            TraceJob::Csr(&a, 16),
+        ];
+        let batch = trace_spmm_batch(&jobs, cfg);
+        assert_eq!(batch.len(), 4);
+        // replays are deterministic: pooled results must equal serial
+        for (i, job) in jobs.iter().enumerate() {
+            let mut h = Hierarchy::new(cfg);
+            match *job {
+                TraceJob::Csr(m, d) => trace_csr_spmm(m, d, &mut h),
+                TraceJob::Csb(m, d) => trace_csb_spmm(m, d, &mut h),
+            }
+            let want = h.report();
+            assert_eq!(batch[i].dram_bytes, want.dram_bytes, "job {i}");
+            assert_eq!(batch[i].logical_bytes, want.logical_bytes, "job {i}");
+        }
     }
 
     #[test]

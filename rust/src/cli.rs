@@ -374,22 +374,29 @@ fn cmd_engine(cfg: &ExperimentConfig) -> Result<()> {
         "engine — routed jobs (classify → predict → route → measure)",
         &["Matrix", "Class", "d", "Routed to", "Pred GF/s", "Meas GF/s", "Meas/Pred"],
     );
+    // the whole (matrix × d) sweep goes through the batched path: one
+    // queue, pooled buffers, persistent workers
     let names: Vec<String> = engine.registry().names().iter().map(|s| s.to_string()).collect();
-    for name in names {
+    let mut jobs = Vec::new();
+    for name in &names {
         for &d in &cfg.d_values {
-            let rec = engine.submit(&JobSpec::new(name.clone(), d))?;
-            t.row(vec![
-                rec.matrix.clone(),
-                rec.class.to_string(),
-                d.to_string(),
-                rec.chosen.to_string(),
-                format!("{:.2}", rec.predicted_gflops),
-                format!("{:.2}", rec.measured_gflops),
-                format!("{:.2}", rec.prediction_ratio()),
-            ]);
+            jobs.push(JobSpec::new(name.clone(), d));
         }
     }
+    let batch = engine.submit_batch(&jobs)?;
+    for rec in &batch.records {
+        t.row(vec![
+            rec.matrix.clone(),
+            rec.class.to_string(),
+            rec.d.to_string(),
+            rec.chosen.to_string(),
+            format!("{:.2}", rec.predicted_gflops),
+            format!("{:.2}", rec.measured_gflops),
+            format!("{:.2}", rec.prediction_ratio()),
+        ]);
+    }
     println!("{}", t.to_text());
+    println!("{}", batch.summary_line());
     let rep = engine.prediction_report();
     println!(
         "prediction: n={} geomean(meas/pred)={:.2} mean|log err|={:.2}",

@@ -2,15 +2,16 @@
 
 use crate::error::{Error, Result};
 use crate::membench;
-use crate::metrics::{bench_adaptive, gflops, spmm_flops};
+use crate::metrics::{bench_adaptive, gflops, spmm_flops, Timer};
 use crate::model::{MachineParams, Roofline};
+use crate::coordinator::batch::{BatchReport, BufferPool};
 use crate::coordinator::job::{JobRecord, JobSpec, PredictionReport};
 use crate::coordinator::planner::Planner;
 use crate::coordinator::registry::MatrixRegistry;
 use crate::gen::Prng;
 use crate::runtime::{ArtifactManifest, XlaRuntime};
 use crate::sparse::Csr;
-use crate::spmm::{DenseMatrix, Impl};
+use crate::spmm::Impl;
 
 /// Engine construction options.
 #[derive(Debug, Clone)]
@@ -51,6 +52,8 @@ pub struct Engine {
     xla: Option<(XlaRuntime, ArtifactManifest)>,
     history: Vec<JobRecord>,
     rng: Prng,
+    /// Recycled dense `B`/`C` operands, shared by every submission.
+    buffers: BufferPool,
 }
 
 impl Engine {
@@ -80,6 +83,7 @@ impl Engine {
             xla,
             history: Vec::new(),
             rng: Prng::new(0x5eed),
+            buffers: BufferPool::new(),
         })
     }
 
@@ -146,13 +150,23 @@ impl Engine {
 
         let kernel = entry.kernel(chosen.im, job.d).expect("available impl must have kernel");
         let n = kernel.ncols();
-        let b = DenseMatrix::random(n, job.d, &mut self.rng);
-        let mut c = DenseMatrix::zeros(kernel.nrows(), job.d);
-        // surface kernel errors before timing
-        kernel.execute(&b, &mut c)?;
+        // dense operands come from the recycled buffer pool: across a
+        // batch (or any repeated submission) each distinct size is
+        // allocated once and reused
+        let b = self.buffers.acquire_random(n, job.d, &mut self.rng);
+        let mut c = self.buffers.acquire(kernel.nrows(), job.d);
+        // surface kernel errors before timing (returning the buffers —
+        // a failed job must not bleed the pool's largest allocations)
+        if let Err(e) = kernel.execute(&b, &mut c) {
+            self.buffers.release(b);
+            self.buffers.release(c);
+            return Err(e);
+        }
         let r = bench_adaptive(self.config.warmup, self.config.iters, self.config.iters * 4, 0.2, |_| {
             kernel.execute(&b, &mut c).expect("kernel failed mid-benchmark");
         });
+        self.buffers.release(b);
+        self.buffers.release(c);
         let secs = r.median_secs();
         let flops = spmm_flops(kernel.nnz(), job.d);
         let measured = gflops(flops, secs);
@@ -175,6 +189,30 @@ impl Engine {
     /// Run a batch of jobs in order, stopping at the first hard error.
     pub fn run_batch(&mut self, jobs: &[JobSpec]) -> Result<Vec<JobRecord>> {
         jobs.iter().map(|j| self.submit(j)).collect()
+    }
+
+    /// Execute a queue of jobs as one batch: classify → predict →
+    /// route each job exactly as [`Engine::submit`] does, but with the
+    /// persistent worker pool and the recycled dense buffers staying
+    /// warm across the whole queue. Returns the per-batch aggregate
+    /// report (throughput, model error, buffer reuse); per-job records
+    /// are also appended to [`Engine::history`] as usual. Stops at the
+    /// first hard error.
+    pub fn submit_batch(&mut self, jobs: &[JobSpec]) -> Result<BatchReport> {
+        let t = Timer::start();
+        let (hits0, misses0) = (self.buffers.hits, self.buffers.misses);
+        let records = self.run_batch(jobs)?;
+        Ok(BatchReport::of(
+            records,
+            t.elapsed_secs(),
+            self.buffers.hits - hits0,
+            self.buffers.misses - misses0,
+        ))
+    }
+
+    /// The engine's dense-operand buffer pool (reuse statistics).
+    pub fn buffer_pool(&self) -> &BufferPool {
+        &self.buffers
     }
 
     /// Every record executed so far.
@@ -270,6 +308,37 @@ mod tests {
         let a = erdos_renyi(100, 100, 3.0, &mut Prng::new(182));
         e.register("m", a).unwrap();
         assert!(e.submit(&JobSpec::new("m", 4).with_impl(Impl::Xla)).is_err());
+    }
+
+    #[test]
+    fn submit_batch_aggregates_and_reuses_buffers() {
+        let mut e = test_engine();
+        let a = erdos_renyi(400, 400, 5.0, &mut Prng::new(184));
+        e.register("m", a).unwrap();
+        let jobs: Vec<JobSpec> = (0..4).map(|_| JobSpec::new("m", 8)).collect();
+        let rep = e.submit_batch(&jobs).unwrap();
+        assert_eq!(rep.n_jobs(), 4);
+        assert_eq!(e.history().len(), 4);
+        assert!(rep.aggregate_gflops() > 0.0);
+        assert!(rep.wall_secs >= rep.exec_secs);
+        // job 1 allocates B and C; jobs 2–4 recycle both
+        assert_eq!(rep.buffer_misses, 2);
+        assert_eq!(rep.buffer_hits, 6);
+        assert!(e.buffer_pool().hit_rate() > 0.7);
+        // a second batch starts fully warm
+        let rep2 = e.submit_batch(&jobs[..2]).unwrap();
+        assert_eq!(rep2.buffer_misses, 0);
+    }
+
+    #[test]
+    fn batch_error_stops_at_first_bad_job() {
+        let mut e = test_engine();
+        let a = erdos_renyi(100, 100, 3.0, &mut Prng::new(185));
+        e.register("m", a).unwrap();
+        let jobs = vec![JobSpec::new("m", 4), JobSpec::new("ghost", 4), JobSpec::new("m", 4)];
+        assert!(e.submit_batch(&jobs).is_err());
+        // the job before the failure still landed in history
+        assert_eq!(e.history().len(), 1);
     }
 
     #[test]

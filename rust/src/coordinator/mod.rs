@@ -14,14 +14,23 @@
 //! 4. **records** prediction vs measurement, so the planner's accuracy
 //!    is itself a measurable output (`prediction_report`).
 //!
+//! Execution is batched by default: [`Engine::submit_batch`] runs a
+//! queue of jobs over the persistent worker pool with dense operands
+//! recycled through a [`BufferPool`], and reports per-batch aggregate
+//! throughput and model error ([`BatchReport`]). [`Engine::submit`] is
+//! the single-job special case and shares the same pooled buffers.
+//!
 //! The XLA/PJRT artifact slots in as one more backend when an artifact
-//! matching the job's static shape exists.
+//! matching the job's static shape exists (and the crate was built
+//! with the `xla` feature).
 
+mod batch;
 mod engine;
 mod job;
 mod planner;
 mod registry;
 
+pub use batch::{BatchReport, BufferPool};
 pub use engine::{Engine, EngineConfig};
 pub use job::{JobRecord, JobSpec, PredictionReport};
 pub use planner::{Planner, Prediction};

@@ -1,46 +1,71 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! crate builds offline with no proc-macro dependencies).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the spmm-roofline library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Dimension mismatch between operands (e.g. `A.cols != B.rows`).
-    #[error("dimension mismatch: {0}")]
     DimensionMismatch(String),
 
     /// A sparse structure failed validation (unsorted/out-of-range
     /// indices, broken row pointers, ...).
-    #[error("invalid sparse structure: {0}")]
     InvalidStructure(String),
 
     /// Error parsing an external format (MatrixMarket, TOML-lite,
     /// manifest JSON).
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// Invalid configuration value.
-    #[error("config error: {0}")]
     Config(String),
 
     /// The requested artifact is missing from `artifacts/` — run
     /// `make artifacts` first.
-    #[error("missing artifact: {0} (run `make artifacts`)")]
     MissingArtifact(String),
 
-    /// An error surfaced by the XLA/PJRT runtime.
-    #[error("xla runtime error: {0}")]
+    /// An error surfaced by the XLA/PJRT runtime (or its stub when the
+    /// `xla` feature is off).
     Xla(String),
 
     /// Unknown CLI command / bad CLI usage.
-    #[error("usage error: {0}")]
     Usage(String),
 
     /// Underlying IO error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::DimensionMismatch(s) => write!(f, "dimension mismatch: {s}"),
+            Error::InvalidStructure(s) => write!(f, "invalid sparse structure: {s}"),
+            Error::Parse(s) => write!(f, "parse error: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::MissingArtifact(s) => write!(f, "missing artifact: {s} (run `make artifacts`)"),
+            Error::Xla(s) => write!(f, "xla runtime error: {s}"),
+            Error::Usage(s) => write!(f, "usage error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -49,3 +74,25 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(
+            Error::DimensionMismatch("a".into()).to_string(),
+            "dimension mismatch: a"
+        );
+        assert_eq!(Error::Xla("x".into()).to_string(), "xla runtime error: x");
+        assert!(Error::MissingArtifact("f".into()).to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

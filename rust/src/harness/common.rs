@@ -1,6 +1,6 @@
 //! Shared measurement plumbing for the harness.
 
-use once_cell::sync::OnceCell;
+use std::sync::OnceLock;
 
 use crate::gen::Prng;
 use crate::membench;
@@ -38,7 +38,7 @@ pub fn measure_kernel(kernel: &dyn Spmm, d: usize, iters: usize, warmup: usize) 
     }
 }
 
-static MACHINE: OnceCell<MachineParams> = OnceCell::new();
+static MACHINE: OnceLock<MachineParams> = OnceLock::new();
 
 /// Machine calibration (STREAM β + FMA π), measured once per process.
 pub fn machine_params_cached(threads: usize) -> MachineParams {

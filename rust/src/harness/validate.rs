@@ -9,7 +9,7 @@
 //! limitations section (§V) concedes it cannot untangle from timing
 //! alone.
 
-use crate::cachesim::{trace_csb_spmm, trace_csr_spmm, Hierarchy, HierarchyConfig};
+use crate::cachesim::{trace_spmm_batch, HierarchyConfig, TraceJob};
 use crate::config::ExperimentConfig;
 use crate::error::Result;
 use crate::gen::{representative_suite, SparsityClass};
@@ -53,26 +53,29 @@ impl ValidationRow {
 /// at full scale.
 pub fn run_validate_ai(cfg: &ExperimentConfig) -> Result<Vec<ValidationRow>> {
     let mut rows = Vec::new();
+    // one matrix live at a time (full-scale proxies are large); its
+    // 2·|d| replay jobs still fan out across the persistent pool
     for proxy in representative_suite() {
         let csr = proxy.generate(cfg.scale);
         let cls = classify(&csr);
         let csb = Csb::from_csr(&csr);
+        let mut jobs = Vec::new();
         for &d in &cfg.d_values {
+            jobs.push(TraceJob::Csr(&csr, d));
+            jobs.push(TraceJob::Csb(&csb, d));
+        }
+        let reports = trace_spmm_batch(&jobs, HierarchyConfig::tiny());
+        for (i, &d) in cfg.d_values.iter().enumerate() {
             let p = AiParams::new(csr.nrows, d, csr.nnz());
-            let model_bytes = cls.model.bytes(p);
-            let mut h1 = Hierarchy::new(HierarchyConfig::tiny());
-            trace_csr_spmm(&csr, d, &mut h1);
-            let mut h2 = Hierarchy::new(HierarchyConfig::tiny());
-            trace_csb_spmm(&csb, d, &mut h2);
             rows.push(ValidationRow {
                 matrix: proxy.name.to_string(),
                 class: proxy.class,
                 d,
                 n: csr.nrows,
                 nnz: csr.nnz(),
-                model_bytes,
-                sim_csr_bytes: h1.report().dram_bytes,
-                sim_csb_bytes: h2.report().dram_bytes,
+                model_bytes: cls.model.bytes(p),
+                sim_csr_bytes: reports[2 * i].dram_bytes,
+                sim_csb_bytes: reports[2 * i + 1].dram_bytes,
             });
         }
     }

@@ -12,7 +12,8 @@
 //!   paper's Table III dataset at configurable scale.
 //! * **SpMM kernels** ([`spmm`]): row-parallel CSR, a register-blocked
 //!   d-specialised "OPT" kernel (the MKL stand-in), block-parallel CSB,
-//!   and padded ELL — all multithreaded over scoped threads.
+//!   and padded ELL — all multithreaded over the persistent worker
+//!   pool (below).
 //! * **Sparsity-aware roofline models** ([`model`]): the paper's four
 //!   arithmetic-intensity formulas (Eqs. 2, 3, 4, 6), the blocked-column
 //!   occupancy model `z = t(1-e^{-D/t})`, and the scale-free hub-mass
@@ -25,13 +26,36 @@
 //!   *measure* memory traffic against the analytic models.
 //! * **A roofline-guided execution engine** ([`coordinator`]): classify →
 //!   predict → route each SpMM job to the predicted-best kernel, with
-//!   prediction-vs-measurement bookkeeping.
+//!   prediction-vs-measurement bookkeeping — including a batched
+//!   submission path ([`coordinator::Engine::submit_batch`]) with
+//!   recycled dense operands and per-batch aggregate reporting.
 //! * **XLA/PJRT runtime** ([`runtime`]): loads AOT artifacts produced by
 //!   the JAX/Pallas compile path (`python/compile/`) and exposes them as
 //!   a fourth SpMM implementation.
 //! * **Experiment harness** ([`harness`], [`report`]): regenerates every
 //!   table and figure in the paper's evaluation (Table V, Fig. 1, Fig. 2)
 //!   plus model-validation and ablation studies.
+//!
+//! # Execution model
+//!
+//! All parallelism runs on one **persistent worker pool**
+//! ([`spmm::pool`]): worker threads are spawned lazily on first use,
+//! parked on a condvar between jobs, and shared by every kernel, the
+//! STREAM calibration loops, and the cache-simulator batch replay.
+//! Steady state spawns zero threads — per-call dispatch wakes only as
+//! many workers as the call requests, which keeps high-rate small-SpMM
+//! measurements (the regime the engine serves) free of thread-churn
+//! noise. Requests beyond the pool size grow it once to that
+//! high-water mark (oversubscription stays meaningful). Size it with
+//! the `SPMM_POOL_THREADS` env var (`0` forces inline serial
+//! execution).
+//!
+//! # Features
+//!
+//! The crate is dependency-free and builds offline. The optional `xla`
+//! cargo feature compiles the real PJRT client (requires the
+//! unvendored `xla` crate); without it a stub reports the backend
+//! unavailable and everything runs native-only.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.

@@ -117,30 +117,34 @@ pub fn stream_benchmark(len: usize, threads: usize, reps: usize) -> StreamResult
 }
 
 /// Peak FP64 GFLOP/s estimate: independent FMA chains over registers,
-/// fully unrolled, `threads` workers. This measures the *practical*
-/// compute roof the roofline's `π` needs (SpMM never gets near it —
-/// the point of measuring is to place the ridge).
+/// fully unrolled, one work item per requested thread. This measures
+/// the *practical* compute roof the roofline's `π` needs (SpMM never
+/// gets near it — the point of measuring is to place the ridge).
+///
+/// Timed as wall clock around the whole parallel loop: every work
+/// item executes exactly once regardless of how many pool
+/// participants the job gets, so if the pool is smaller than
+/// `threads` the serialised items lengthen the wall time and `π`
+/// stays honest (a per-item timer would see uncontended solo runs and
+/// inflate it).
 pub fn peak_flops_gflops(threads: usize) -> f64 {
-    use std::sync::atomic::{AtomicU64, Ordering};
     const ITERS: usize = 4_000_000;
     const CHAINS: usize = 8;
-    let nanos = AtomicU64::new(0);
-    parallel_ranges(threads.max(1), threads.max(1), |_| {
+    let threads = threads.max(1);
+    let t = Timer::start();
+    parallel_ranges(threads, threads, |_| {
         let mut acc = [1.000001f64; CHAINS];
         let x = 1.0000001f64;
         let y = 0.9999999f64;
-        let t = Timer::start();
         for _ in 0..ITERS {
             for a in acc.iter_mut() {
                 *a = a.mul_add(x, y);
             }
         }
-        let dt = (t.elapsed_secs() * 1e9) as u64;
-        nanos.fetch_max(dt, Ordering::Relaxed);
         touch(acc.iter().sum());
     });
-    let secs = nanos.load(Ordering::Relaxed) as f64 / 1e9;
-    let flops = (threads.max(1) * ITERS * CHAINS * 2) as f64;
+    let secs = t.elapsed_secs();
+    let flops = (threads * ITERS * CHAINS * 2) as f64;
     flops / secs / 1e9
 }
 

@@ -2,11 +2,26 @@
 //! `python/compile/aot.py` and executes them on the PJRT CPU client —
 //! the request-path half of the three-layer architecture (Python never
 //! runs here).
+//!
+//! The real client needs the `xla` crate, which is not vendored in the
+//! offline image; it compiles only under `--features xla`. Without the
+//! feature, a stub with the same surface compiles in:
+//! [`XlaRuntime::cpu`] returns [`crate::Error::Xla`], so the engine and
+//! every bench degrade gracefully to native-only mode (the same path
+//! they take when no artifacts were built).
 
 mod manifest;
+#[cfg(feature = "xla")]
 mod pjrt;
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(feature = "xla")]
 mod xla_spmm;
 
 pub use manifest::{ArtifactKind, ArtifactManifest, ArtifactSpec};
+#[cfg(feature = "xla")]
 pub use pjrt::{CompiledModule, XlaRuntime};
+#[cfg(not(feature = "xla"))]
+pub use stub::{CompiledModule, XlaRuntime, XlaSpmm};
+#[cfg(feature = "xla")]
 pub use xla_spmm::XlaSpmm;

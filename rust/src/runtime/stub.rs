@@ -1,0 +1,106 @@
+//! Offline stand-ins for the PJRT runtime (compiled when the `xla`
+//! feature is off).
+//!
+//! Same public surface as `pjrt.rs` + `xla_spmm.rs`, but every
+//! constructor reports the backend as unavailable. Call sites
+//! (engine, registry, `bench_xla`) already treat a failed
+//! [`XlaRuntime::cpu`] as "run native-only", so no caller needs a
+//! cfg of its own.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::runtime::ArtifactSpec;
+use crate::sparse::{Csr, Ell};
+use crate::spmm::{DenseMatrix, Impl, Spmm};
+
+fn unavailable() -> Error {
+    Error::Xla("built without the `xla` feature — PJRT runtime unavailable".into())
+}
+
+/// Stub PJRT client: construction always fails, so no instance can
+/// exist at runtime.
+pub struct XlaRuntime {
+    _private: (),
+}
+
+/// Stub compiled module (never constructed).
+pub struct CompiledModule {
+    /// Path the module would have been loaded from.
+    pub source: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Always fails: the crate was built without the `xla` feature.
+    pub fn cpu() -> Result<XlaRuntime> {
+        Err(unavailable())
+    }
+
+    /// Platform string — used in reports.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Stub compile: always fails.
+    pub fn compile_hlo_file<P: AsRef<Path>>(&self, _path: P) -> Result<Arc<CompiledModule>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub XLA-backed SpMM (never constructed).
+pub struct XlaSpmm {
+    _private: (),
+}
+
+impl XlaSpmm {
+    /// Always fails: the crate was built without the `xla` feature.
+    pub fn from_csr(_rt: &XlaRuntime, _spec: &ArtifactSpec, _csr: &Csr) -> Result<XlaSpmm> {
+        Err(unavailable())
+    }
+
+    /// Always fails: the crate was built without the `xla` feature.
+    pub fn from_ell(_rt: &XlaRuntime, _spec: &ArtifactSpec, _ell: &Ell) -> Result<XlaSpmm> {
+        Err(unavailable())
+    }
+
+    /// The dense width this artifact was compiled for.
+    pub fn artifact_d(&self) -> usize {
+        0
+    }
+
+    /// Padded slots (the artifact's true FLOP basis).
+    pub fn padded_len(&self) -> usize {
+        0
+    }
+}
+
+impl Spmm for XlaSpmm {
+    fn id(&self) -> Impl {
+        Impl::Xla
+    }
+    fn nrows(&self) -> usize {
+        0
+    }
+    fn ncols(&self) -> usize {
+        0
+    }
+    fn nnz(&self) -> usize {
+        0
+    }
+    fn execute(&self, _b: &DenseMatrix, _c: &mut DenseMatrix) -> Result<()> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_reports_unavailable() {
+        let err = XlaRuntime::cpu().unwrap_err();
+        assert!(matches!(err, Error::Xla(_)));
+        assert!(err.to_string().contains("xla"));
+    }
+}

@@ -11,6 +11,11 @@
 //! | [`EllSpmm`]  | —     | padded ELL (native twin of the XLA artifact) |
 //! | [`BsrSpmm`]  | —     | dense-tile block sparse row (the matrix-unit mapping) |
 //!
+//! All native kernels parallelise over the persistent, process-wide
+//! worker pool ([`pool`]): threads are spawned once and parked between
+//! calls, so the hot path pays no spawn/join churn (see `DESIGN.md`
+//! §Execution-Model).
+//!
 //! A sixth implementation, `runtime::XlaSpmm`, executes the AOT-compiled
 //! JAX/Pallas artifact through PJRT and plugs into the same [`Spmm`]
 //! trait via the coordinator.

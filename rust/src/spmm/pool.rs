@@ -1,99 +1,472 @@
-//! Minimal data-parallel helpers over `crossbeam_utils::thread::scope`.
+//! Persistent worker pool — every parallel loop in the crate runs here.
 //!
-//! The paper parallelises SpMM with OpenMP over 64 threads; rayon is
-//! unavailable offline, so this module provides the two primitives the
-//! kernels need: a static row-range split (`parallel_ranges`) and a
-//! dynamically load-balanced chunk queue (`parallel_chunks_dynamic`)
-//! for skewed matrices where static splits starve.
+//! The paper parallelises SpMM with OpenMP over 64 threads. Earlier
+//! revisions of this crate spawned and joined fresh OS threads per
+//! kernel call (`crossbeam_utils::thread::scope`); at the call rates the
+//! engine and benches sustain, that per-call thread churn polluted
+//! exactly the bandwidth-bound measurements the roofline models try to
+//! predict. This module replaces it with a [`WorkerPool`]: long-lived
+//! workers parked on a condvar, woken per submitted job, with two
+//! scheduling disciplines —
+//!
+//! * **static ranges** ([`WorkerPool::ranges`]): `[0, n)` split into
+//!   `parts` near-equal contiguous ranges, each executed exactly once
+//!   (OpenMP `schedule(static)`), and
+//! * **dynamic chunks** ([`WorkerPool::chunks_dynamic`]): workers
+//!   repeatedly claim `chunk`-sized ranges from a shared atomic cursor
+//!   (OpenMP `schedule(dynamic, chunk)`), for skewed row distributions
+//!   where a static split leaves one thread holding every hub row.
+//!
+//! A process-wide pool ([`global`]) is created lazily on first use and
+//! sized to `available_parallelism` (override with the
+//! `SPMM_POOL_THREADS` env var; `0` pins it to inline serial
+//! execution). All SpMM kernels, the STREAM microbenchmarks, and the
+//! cache-simulator batch replay route through it via the free
+//! functions [`parallel_ranges`] and [`parallel_chunks_dynamic`], so
+//! steady state spawns **zero** threads.
+//!
+//! Submissions are serialised: concurrent submitters queue on an
+//! internal lock, and a parallel call made *from inside* a pool job
+//! (nested parallelism) runs inline on the calling worker rather than
+//! deadlocking. The submitting thread participates in every job and
+//! only as many workers as the job requests are woken (per-call
+//! dispatch cost scales with the requested thread count, not the pool
+//! size). A job requesting more parallelism than `workers + 1` grows
+//! the pool once to that high-water mark — deliberate oversubscription
+//! (thread-scaling ablations) behaves like the old spawn-per-call
+//! implementation, but the grown workers persist.
+//!
+//! ```
+//! use std::sync::atomic::{AtomicUsize, Ordering};
+//! use spmm_roofline::spmm::pool;
+//!
+//! // Sum 0..1000 over 4-way static ranges on the shared pool.
+//! let sum = AtomicUsize::new(0);
+//! pool::parallel_ranges(1000, 4, |r| {
+//!     sum.fetch_add(r.sum::<usize>(), Ordering::Relaxed);
+//! });
+//! assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+//!
+//! // Same total via dynamically claimed chunks of 64 rows.
+//! let sum = AtomicUsize::new(0);
+//! pool::parallel_chunks_dynamic(1000, 4, 64, |r| {
+//!     sum.fetch_add(r.sum::<usize>(), Ordering::Relaxed);
+//! });
+//! assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+//! ```
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
-/// Split `[0, n)` into `parts` near-equal contiguous ranges (the last
-/// ranges absorb the remainder; empty ranges are skipped).
-pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
-    let parts = parts.max(1);
+thread_local! {
+    // True while this thread is executing a pool job (worker or
+    // participating submitter); nested parallel calls check it and run
+    // inline instead of re-submitting.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// One submitted parallel loop, type-erased so persistent workers can
+/// run borrowed closures. `func` points at the submitter's closure;
+/// the submitter blocks until every worker has checked out of the job,
+/// which keeps the borrow alive for every call made through it.
+#[derive(Clone, Copy)]
+struct JobDesc {
+    func: *const (dyn Fn(Range<usize>) + Sync + 'static),
+    n: usize,
+    /// Static split count (`chunk == 0` selects static scheduling).
+    parts: usize,
+    /// Dynamic chunk size (`0` selects static scheduling).
+    chunk: usize,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced while the
+// submitting thread is blocked in `execute`, which outlives all use.
+unsafe impl Send for JobDesc {}
+
+struct PoolState {
+    /// Bumped once per published job; workers track the last epoch they
+    /// examined so each considers every job exactly once.
+    epoch: u64,
+    job: Option<JobDesc>,
+    /// Worker check-in slots still open for the current job. Only
+    /// workers that claim a slot participate; the rest note the epoch
+    /// and keep sleeping, so per-job cost scales with the *requested*
+    /// parallelism, not the pool size.
+    pending: usize,
+    /// Participating workers that have not yet checked out.
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work_ready: Condvar,
+    /// The submitter parks here until `active == 0`.
+    work_done: Condvar,
+    /// Work-claim cursor: range index (static) or row start (dynamic).
+    cursor: AtomicUsize,
+    /// Set when any participant's closure panicked; the submitter
+    /// re-raises after the job drains.
+    panicked: AtomicBool,
+}
+
+/// A persistent pool of parked worker threads executing data-parallel
+/// loops (see module docs for the scheduling disciplines and the
+/// nesting/concurrency rules).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serialises submissions; held for the full lifetime of a job.
+    submit_lock: Mutex<()>,
+    /// Worker threads; grows on demand (under `submit_lock`) up to the
+    /// high-water requested parallelism.
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Cached `handles.len()` for lock-free reads.
+    n_workers: AtomicUsize,
+    /// A pool constructed with zero workers never grows: every call
+    /// runs inline on the submitter (`SPMM_POOL_THREADS=0`).
+    inline_only: bool,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` parked background threads. The
+    /// submitting thread also executes work, and the pool grows on
+    /// demand when a job requests more parallelism than `workers + 1`
+    /// (grown workers persist — steady state never re-spawns).
+    /// `workers == 0` pins the pool to inline serial execution.
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                pending: 0,
+                active: 0,
+                shutdown: false,
+            }),
+            work_ready: Condvar::new(),
+            work_done: Condvar::new(),
+            cursor: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        let handles = (0..workers).map(|i| spawn_worker(&shared, i)).collect();
+        WorkerPool {
+            shared,
+            submit_lock: Mutex::new(()),
+            handles: Mutex::new(handles),
+            n_workers: AtomicUsize::new(workers),
+            inline_only: workers == 0,
+        }
+    }
+
+    /// Number of background worker threads (excluding submitters).
+    pub fn workers(&self) -> usize {
+        self.n_workers.load(Ordering::Relaxed)
+    }
+
+    /// Run `f(range)` over a static split of `[0, n)` into `parts`
+    /// near-equal contiguous ranges, each executed exactly once. `f`
+    /// must be safe to run concurrently on disjoint ranges.
+    pub fn ranges<F>(&self, n: usize, parts: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        let parts = parts.max(1);
+        if n == 0 {
+            return;
+        }
+        if parts == 1 || self.inline_only || IN_POOL.with(|c| c.get()) {
+            for r in split_ranges(n, parts) {
+                f(r);
+            }
+            return;
+        }
+        self.execute(n, parts, 0, parts, &f);
+    }
+
+    /// Dynamically scheduled: participants repeatedly claim
+    /// `chunk`-sized ranges of `[0, n)` from a shared cursor until
+    /// exhausted, with at most `threads` claiming concurrently.
+    pub fn chunks_dynamic<F>(&self, n: usize, threads: usize, chunk: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        let threads = threads.max(1);
+        let chunk = chunk.max(1);
+        if n == 0 {
+            return;
+        }
+        if threads == 1 || self.inline_only || IN_POOL.with(|c| c.get()) {
+            let mut start = 0;
+            while start < n {
+                let end = (start + chunk).min(n);
+                f(start..end);
+                start = end;
+            }
+            return;
+        }
+        self.execute(n, 0, chunk, threads, &f);
+    }
+
+    /// Publish one job to the parked workers, participate in it, and
+    /// block until every worker has checked out. Re-raises any
+    /// participant panic as "worker thread panicked" (the contract the
+    /// scoped-thread implementation had).
+    fn execute(
+        &self,
+        n: usize,
+        parts: usize,
+        chunk: usize,
+        max_participants: usize,
+        f: &(dyn Fn(Range<usize>) + Sync),
+    ) {
+        let guard = self.submit_lock.lock().unwrap();
+        // the submitter takes one participant seat; grow the pool so
+        // the remaining seats have a worker each (old scoped-thread
+        // semantics: oversubscription beyond the core count is the
+        // caller's explicit choice, e.g. thread-scaling ablations)
+        let wanted = max_participants - 1;
+        let have = self.n_workers.load(Ordering::Relaxed);
+        if wanted > have {
+            let mut handles = self.handles.lock().unwrap();
+            for i in have..wanted {
+                handles.push(spawn_worker(&self.shared, i));
+            }
+            self.n_workers.store(wanted, Ordering::Relaxed);
+        }
+        let desc = JobDesc { func: erase(f), n, parts, chunk };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            self.shared.cursor.store(0, Ordering::SeqCst);
+            self.shared.panicked.store(false, Ordering::SeqCst);
+            st.job = Some(desc);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.pending = wanted;
+            st.active = wanted;
+        }
+        // wake only as many workers as the job has seats for; a woken
+        // worker that finds the seats gone just notes the epoch and
+        // parks again
+        for _ in 0..wanted {
+            self.shared.work_ready.notify_one();
+        }
+
+        // The submitter claims work like any worker.
+        IN_POOL.with(|c| c.set(true));
+        let r = catch_unwind(AssertUnwindSafe(|| run_job(&self.shared, &desc)));
+        IN_POOL.with(|c| c.set(false));
+        if r.is_err() {
+            self.shared.panicked.store(true, Ordering::SeqCst);
+        }
+
+        let mut st = self.shared.state.lock().unwrap();
+        // Cancel seats nobody claimed: the submitter's own claim loop
+        // exhausted the cursor, so an unclaimed seat just means that
+        // worker wasn't needed (or its wakeup raced a faster sibling
+        // that re-parked and absorbed the notify). Without this the
+        // wait below could hang on a worker that never saw the job.
+        st.active -= st.pending;
+        st.pending = 0;
+        while st.active > 0 {
+            st = self.shared.work_done.wait(st).unwrap();
+        }
+        st.job = None;
+        drop(st);
+        drop(guard);
+        if self.shared.panicked.load(Ordering::SeqCst) {
+            panic!("worker thread panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_ready.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn spawn_worker(shared: &Arc<Shared>, i: usize) -> JoinHandle<()> {
+    let shared = shared.clone();
+    std::thread::Builder::new()
+        .name(format!("spmm-worker-{i}"))
+        .spawn(move || worker_loop(&shared))
+        .expect("failed to spawn pool worker")
+}
+
+/// Erase the closure's borrow lifetime so it can cross into persistent
+/// workers. SAFETY: callers (only [`WorkerPool::execute`]) must not
+/// return until no worker can still call through the pointer.
+fn erase<'a>(
+    f: &'a (dyn Fn(Range<usize>) + Sync + 'a),
+) -> *const (dyn Fn(Range<usize>) + Sync + 'static) {
+    // A fat-pointer lifetime transmute, the same erasure every scoped
+    // thread-pool performs.
+    unsafe {
+        std::mem::transmute::<
+            &'a (dyn Fn(Range<usize>) + Sync + 'a),
+            *const (dyn Fn(Range<usize>) + Sync + 'static),
+        >(f)
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    // claim a participant seat if any remain; a fully
+                    // staffed (or already completed) job is just noted
+                    if st.pending > 0 {
+                        if let Some(job) = st.job {
+                            st.pending -= 1;
+                            break job;
+                        }
+                    }
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        IN_POOL.with(|c| c.set(true));
+        let r = catch_unwind(AssertUnwindSafe(|| run_job(shared, &job)));
+        IN_POOL.with(|c| c.set(false));
+        if r.is_err() {
+            shared.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.work_done.notify_all();
+        }
+    }
+}
+
+/// Claim and execute work items for `job` until the cursor is
+/// exhausted. Callers hold a participant seat (workers claim one in
+/// `worker_loop`; the submitter implicitly owns the extra seat), so at
+/// most `max_participants` threads run here concurrently.
+fn run_job(shared: &Shared, job: &JobDesc) {
+    // SAFETY: the submitting thread blocks in `execute` until every
+    // participant has checked out of this job, so the borrow behind
+    // `func` is alive for every call made here.
+    let f = unsafe { &*job.func };
+    if job.chunk == 0 {
+        loop {
+            let i = shared.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= job.parts {
+                break;
+            }
+            let r = nth_range(job.n, job.parts, i);
+            if !r.is_empty() {
+                f(r);
+            }
+        }
+    } else {
+        loop {
+            let start = shared.cursor.fetch_add(job.chunk, Ordering::Relaxed);
+            if start >= job.n {
+                break;
+            }
+            f(start..(start + job.chunk).min(job.n));
+        }
+    }
+}
+
+/// The `i`-th range of the static split of `[0, n)` into `parts`
+/// pieces — consistent with [`split_ranges`] (the first `n % parts`
+/// pieces absorb the remainder).
+fn nth_range(n: usize, parts: usize, i: usize) -> Range<usize> {
     let base = n / parts;
     let rem = n % parts;
+    let start = i * base + i.min(rem);
+    let len = base + usize::from(i < rem);
+    start..start + len
+}
+
+/// Split `[0, n)` into `parts` near-equal contiguous ranges (the first
+/// ranges absorb the remainder; empty ranges are skipped).
+pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.max(1);
     let mut out = Vec::with_capacity(parts);
-    let mut start = 0;
     for i in 0..parts {
-        let len = base + usize::from(i < rem);
-        if len > 0 {
-            out.push(start..start + len);
-            start += len;
+        let r = nth_range(n, parts, i);
+        if !r.is_empty() {
+            out.push(r);
         }
     }
     out
 }
 
-/// Run `f(range)` over a static split of `[0, n)` on `threads` scoped
-/// threads. `f` must be safe to run concurrently on disjoint ranges.
-pub fn parallel_ranges<F>(n: usize, threads: usize, f: F)
-where
-    F: Fn(std::ops::Range<usize>) + Sync,
-{
-    let ranges = split_ranges(n, threads);
-    if ranges.len() <= 1 {
-        for r in ranges {
-            f(r);
-        }
-        return;
-    }
-    crossbeam_utils::thread::scope(|s| {
-        for r in ranges {
-            let f = &f;
-            s.spawn(move |_| f(r));
-        }
-    })
-    .expect("worker thread panicked");
+/// Heuristic chunk size: ~8 chunks per thread, at least 64 rows, so the
+/// claim cursor stays cold.
+pub fn default_chunk(n: usize, threads: usize) -> usize {
+    (n / (threads.max(1) * 8)).max(64).min(n.max(1))
 }
 
-/// Dynamically scheduled: workers repeatedly claim `chunk`-sized ranges
-/// of `[0, n)` from a shared atomic counter until exhausted. Use for
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide shared pool, created on first use. Sized to
+/// `available_parallelism` background workers unless the
+/// `SPMM_POOL_THREADS` env var overrides it (`0` forces everything
+/// inline — useful when profiling single-threaded).
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| {
+        let workers = std::env::var("SPMM_POOL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        WorkerPool::new(workers)
+    })
+}
+
+/// Maximum useful parallelism of the shared pool (workers + the
+/// submitting thread).
+pub fn global_threads() -> usize {
+    global().workers() + 1
+}
+
+/// Run `f(range)` over a static split of `[0, n)` on up to `threads`
+/// participants of the shared pool. `f` must be safe to run
+/// concurrently on disjoint ranges.
+pub fn parallel_ranges<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    global().ranges(n, threads, f);
+}
+
+/// Dynamically scheduled on the shared pool: participants repeatedly
+/// claim `chunk`-sized ranges of `[0, n)` until exhausted. Use for
 /// skewed row distributions (scale-free matrices) where a static split
 /// leaves one thread holding every hub row.
 pub fn parallel_chunks_dynamic<F>(n: usize, threads: usize, chunk: usize, f: F)
 where
-    F: Fn(std::ops::Range<usize>) + Sync,
+    F: Fn(Range<usize>) + Sync,
 {
-    let threads = threads.max(1);
-    let chunk = chunk.max(1);
-    if threads == 1 {
-        let mut start = 0;
-        while start < n {
-            let end = (start + chunk).min(n);
-            f(start..end);
-            start = end;
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    crossbeam_utils::thread::scope(|s| {
-        for _ in 0..threads {
-            let f = &f;
-            let next = &next;
-            s.spawn(move |_| loop {
-                let start = next.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + chunk).min(n);
-                f(start..end);
-            });
-        }
-    })
-    .expect("worker thread panicked");
-}
-
-/// Heuristic chunk size: ~8 chunks per thread, at least 64 rows, so the
-/// atomic counter stays cold.
-pub fn default_chunk(n: usize, threads: usize) -> usize {
-    (n / (threads.max(1) * 8)).max(64).min(n.max(1))
+    global().chunks_dynamic(n, threads, chunk, f);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
     use std::sync::atomic::AtomicU64;
 
     #[test]
@@ -109,6 +482,18 @@ mod tests {
                     assert_eq!(r.start, expect);
                     expect = r.end;
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn nth_range_matches_split() {
+        for n in [0usize, 1, 10, 97] {
+            for p in [1usize, 3, 8] {
+                let whole = split_ranges(n, p);
+                let by_index: Vec<_> =
+                    (0..p).map(|i| nth_range(n, p, i)).filter(|r| !r.is_empty()).collect();
+                assert_eq!(whole, by_index, "n={n} p={p}");
             }
         }
     }
@@ -147,5 +532,97 @@ mod tests {
     fn default_chunk_reasonable() {
         assert!(default_chunk(1_000_000, 8) >= 64);
         assert!(default_chunk(10, 8) <= 10_usize.max(64));
+    }
+
+    #[test]
+    fn dedicated_pool_reuses_threads_across_jobs() {
+        let pool = WorkerPool::new(3);
+        let ids = Mutex::new(HashSet::new());
+        for _ in 0..25 {
+            pool.ranges(64, 4, |_r| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        // every job ran on the same small persistent set: at most the 3
+        // workers plus the submitting test thread
+        assert!(ids.lock().unwrap().len() <= 4);
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let sum = AtomicU64::new(0);
+        pool.chunks_dynamic(100, 8, 9, |r| {
+            sum.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 100);
+        assert_eq!(pool.workers(), 0);
+    }
+
+    #[test]
+    fn nested_submission_runs_inline() {
+        let pool = WorkerPool::new(2);
+        let sum = AtomicU64::new(0);
+        pool.ranges(8, 4, |outer| {
+            for _ in outer {
+                // nested parallel call from inside a pool job: must not
+                // deadlock, must still cover everything
+                pool.ranges(10, 4, |inner| {
+                    sum.fetch_add(inner.len() as u64, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 80);
+    }
+
+    #[test]
+    fn participant_cap_respected() {
+        let pool = WorkerPool::new(3);
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        pool.chunks_dynamic(64, 2, 1, |_r| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn pool_grows_to_requested_parallelism() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.workers(), 1);
+        let hits: Vec<AtomicU64> = (0..60).map(|_| AtomicU64::new(0)).collect();
+        pool.ranges(60, 6, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        // grown once to the high-water request (5 workers + submitter)
+        assert_eq!(pool.workers(), 5);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // a smaller follow-up job doesn't shrink it
+        pool.ranges(10, 2, |_r| {});
+        assert_eq!(pool.workers(), 5);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.ranges(16, 4, |r| {
+                if r.contains(&9) {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the submitter");
+        // the pool is still usable afterwards
+        let sum = AtomicU64::new(0);
+        pool.ranges(100, 4, |r| {
+            sum.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 100);
     }
 }

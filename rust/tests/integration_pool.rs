@@ -1,0 +1,162 @@
+//! Integration tests for the persistent worker pool and the batched
+//! engine path: pool reuse across calls, nested and concurrent
+//! submission safety, kernel-output equivalence through the shared
+//! pool, and batch-path determinism + buffer reuse.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use spmm_roofline::coordinator::{Engine, EngineConfig, JobSpec};
+use spmm_roofline::gen::{banded, chung_lu, erdos_renyi, ChungLuParams, Prng};
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::spmm::{build_native, pool, reference_spmm, DenseMatrix, Impl};
+
+/// Every native kernel must match the serial reference when its row
+/// loops run across the shared persistent pool.
+#[test]
+fn kernels_match_reference_through_shared_pool() {
+    let mut rng = Prng::new(0xA11);
+    let cases = vec![
+        ("er", erdos_renyi(400, 400, 6.0, &mut rng)),
+        ("banded", banded(400, 5, 1.0, &mut rng)),
+        (
+            "skewed",
+            chung_lu(ChungLuParams { n: 400, alpha: 2.1, avg_deg: 8.0, k_min: 2.0 }, &mut rng),
+        ),
+    ];
+    for (name, a) in cases {
+        for d in [1usize, 4, 16] {
+            let b = DenseMatrix::random(400, d, &mut rng);
+            let want = reference_spmm(&a, &b);
+            for im in Impl::NATIVE {
+                let k = build_native(im, &a, 4).unwrap();
+                let mut c = DenseMatrix::from_vec(400, d, vec![7.0; 400 * d]);
+                k.execute(&b, &mut c).unwrap();
+                assert!(
+                    c.max_abs_diff(&want) < 1e-10,
+                    "{im} diverged on {name} at d={d}"
+                );
+            }
+        }
+    }
+}
+
+/// Sequential calls must keep running on the same small persistent
+/// thread set — no per-call spawning.
+#[test]
+fn global_pool_reuses_threads_across_calls() {
+    let ids = Mutex::new(HashSet::new());
+    for _ in 0..100 {
+        pool::parallel_ranges(256, 8, |_r| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+    }
+    let distinct = ids.lock().unwrap().len();
+    // at most: every pool worker + this (submitting) test thread
+    assert!(
+        distinct <= pool::global().workers() + 1,
+        "{distinct} distinct threads for 100 calls — pool is spawning"
+    );
+}
+
+/// A parallel loop issued from inside a pool job must run inline (no
+/// deadlock) and still cover every index.
+#[test]
+fn nested_submission_is_safe() {
+    let sum = AtomicU64::new(0);
+    pool::parallel_ranges(6, 3, |outer| {
+        for _ in outer {
+            pool::parallel_chunks_dynamic(50, 4, 8, |inner| {
+                sum.fetch_add(inner.len() as u64, Ordering::Relaxed);
+            });
+        }
+    });
+    assert_eq!(sum.load(Ordering::Relaxed), 6 * 50);
+}
+
+/// Independent threads submitting to the shared pool at the same time
+/// must each see a complete, exactly-once traversal.
+#[test]
+fn concurrent_submissions_are_serialised_safely() {
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            s.spawn(move || {
+                for round in 0..20 {
+                    let n = 300 + 31 * t + round;
+                    let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                    pool::parallel_chunks_dynamic(n, 3, 13, |r| {
+                        for i in r {
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                    assert!(
+                        hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                        "thread {t} round {round}: lost or duplicated work"
+                    );
+                }
+            });
+        }
+    });
+}
+
+fn test_engine() -> Engine {
+    Engine::new(EngineConfig {
+        threads: 2,
+        machine: Some(MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 }),
+        iters: 1,
+        warmup: 0,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+        artifacts_dir: None,
+    })
+    .unwrap()
+}
+
+/// The batched path must be deterministic in everything the planner
+/// controls: classification, model AI, and (forced) routing — across
+/// two engines built from the same seeds.
+#[test]
+fn batch_path_is_deterministic() {
+    let jobs: Vec<JobSpec> = [4usize, 16]
+        .iter()
+        .flat_map(|&d| {
+            [Impl::Csr, Impl::Opt, Impl::Csb]
+                .into_iter()
+                .map(move |im| JobSpec::new("m", d).with_impl(im))
+        })
+        .collect();
+    let run = || {
+        let mut e = test_engine();
+        let a = erdos_renyi(500, 500, 6.0, &mut Prng::new(0xDE7));
+        e.register("m", a).unwrap();
+        e.submit_batch(&jobs).unwrap()
+    };
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1.n_jobs(), 6);
+    assert_eq!(r1.n_jobs(), r2.n_jobs());
+    for (a, b) in r1.records.iter().zip(&r2.records) {
+        assert_eq!(a.matrix, b.matrix);
+        assert_eq!(a.d, b.d);
+        assert_eq!(a.chosen, b.chosen);
+        assert_eq!(a.class, b.class);
+        assert_eq!(a.ai, b.ai, "model AI must not depend on timing or buffer reuse");
+    }
+}
+
+/// Across batches the engine's buffer pool must go fully warm: the
+/// second identical batch allocates nothing.
+#[test]
+fn second_batch_runs_on_recycled_buffers() {
+    let mut e = test_engine();
+    let a = erdos_renyi(300, 300, 5.0, &mut Prng::new(0xB1F));
+    e.register("m", a).unwrap();
+    let jobs = vec![JobSpec::new("m", 8), JobSpec::new("m", 8), JobSpec::new("m", 8)];
+    let cold = e.submit_batch(&jobs).unwrap();
+    assert!(cold.buffer_hits > 0, "within-batch reuse expected");
+    let warm = e.submit_batch(&jobs).unwrap();
+    assert_eq!(warm.buffer_misses, 0, "second batch must be fully recycled");
+    assert!(warm.buffer_hit_rate() > 0.99);
+    // measurements stay sane through recycled buffers
+    assert!(warm.aggregate_gflops() > 0.0);
+}

@@ -2,7 +2,10 @@
 //!
 //! These tests need `make artifacts` to have run (the Makefile's
 //! `test` target guarantees it); they skip gracefully when the
-//! artifacts are absent so `cargo test` alone stays green.
+//! artifacts are absent so `cargo test` alone stays green. The whole
+//! file needs the real PJRT client (and the `xla` crate), so it only
+//! compiles under `--features xla`.
+#![cfg(feature = "xla")]
 
 use spmm_roofline::gen::{erdos_renyi, Prng};
 use spmm_roofline::runtime::{ArtifactKind, ArtifactManifest, XlaRuntime, XlaSpmm};
