@@ -15,6 +15,7 @@
 use spmm_roofline::coordinator::{Engine, EngineConfig, JobSpec};
 use spmm_roofline::gen::representative_suite;
 use spmm_roofline::model::MachineParams;
+use spmm_roofline::report::{PerfLog, PerfRecord};
 use spmm_roofline::spmm::{pool, Impl};
 
 fn envf(key: &str, default: f64) -> f64 {
@@ -84,12 +85,16 @@ fn main() {
         100.0 * cold.dispatch_overhead()
     );
 
-    println!("\n— batch 2 (warm: buffers + priors reused) —");
+    println!("\n— batch 2 (warm: buffers + schedules + priors reused) —");
     let warm = engine.submit_batch(&jobs).expect("batch");
     println!("  {}", warm.summary_line());
     println!(
-        "  buffer misses cold {} → warm {}; aggregate {:.2} → {:.2} GFLOP/s",
-        cold.buffer_misses, warm.buffer_misses,
+        "  buffer misses cold {} → warm {}; schedule misses cold {} → warm {}; \
+         aggregate {:.2} → {:.2} GFLOP/s",
+        cold.buffer_misses,
+        warm.buffer_misses,
+        cold.schedule_misses,
+        warm.schedule_misses,
         cold.aggregate_gflops(),
         warm.aggregate_gflops()
     );
@@ -98,4 +103,20 @@ fn main() {
         "\nprediction over both batches: n={} geomean(meas/pred)={:.2} mean|log err|={:.2}",
         rep.n_jobs, rep.geomean_ratio, rep.mean_abs_log_err
     );
+
+    // machine-readable perf artifact: the warm batch's per-job cells
+    let mut log = PerfLog::new();
+    for r in &warm.records {
+        log.push(PerfRecord {
+            bench: "bench_batch".into(),
+            matrix: r.matrix.clone(),
+            class: r.class.to_string(),
+            impl_name: r.chosen.to_string(),
+            d: r.d,
+            dt: r.dt.min(r.d),
+            gflops: r.measured_gflops,
+        });
+    }
+    log.merge_save("BENCH_schedule.json").expect("write BENCH_schedule.json");
+    println!("wrote BENCH_schedule.json ({} bench_batch records)", log.records.len());
 }

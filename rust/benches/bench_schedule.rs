@@ -1,0 +1,113 @@
+//! Bench: the tile sweep — model-chosen column tiling vs untiled
+//! execution, per sparsity class × implementation × dense width.
+//!
+//! This is the schedule layer's acceptance gauge (mirrors the paper's
+//! varying-`d` experiments, Fig. 1): for one small matrix per sparsity
+//! class it plans a schedule with the planner's model-chosen tile
+//! width and executes it against the untiled (`dt = d`) schedule on
+//! the same kernel. The model-chosen tile must never lose to untiled
+//! by more than noise — and should win on blocked/banded workloads at
+//! `d ≥ 64`, where the full `B` working set falls out of cache.
+//!
+//! Writes per-cell records (both tile widths) into
+//! `BENCH_schedule.json` via the merging perf log, so the repo's perf
+//! trajectory is tracked across PRs.
+//!
+//! `REPRO_SCALE` (default 0.25) and `REPRO_ITERS` (default 3) tune
+//! runtime; `REPRO_FAST=1` injects nominal machine parameters instead
+//! of running STREAM (CI smoke mode).
+
+use spmm_roofline::coordinator::Planner;
+use spmm_roofline::gen::representative_suite;
+use spmm_roofline::membench;
+use spmm_roofline::metrics::{bench_adaptive, gflops, spmm_flops};
+use spmm_roofline::model::{MachineParams, Roofline};
+use spmm_roofline::pattern::classify;
+use spmm_roofline::report::{PerfLog, PerfRecord, Table};
+use spmm_roofline::spmm::{build_native, DenseMatrix, Impl};
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = envf("REPRO_SCALE", 0.25);
+    let iters = envf("REPRO_ITERS", 3.0) as usize;
+    let fast = std::env::var("REPRO_FAST").map(|v| v == "1").unwrap_or(false);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let machine = if fast {
+        MachineParams { beta_gbs: 25.0, pi_gflops: 100.0 }
+    } else {
+        membench::measure_machine(threads)
+    };
+    let planner = Planner::new(Roofline::new(machine));
+    println!(
+        "tile sweep: scale={scale}, {threads} threads, β={:.1} GB/s π={:.0} GFLOP/s",
+        machine.beta_gbs, machine.pi_gflops
+    );
+
+    let mut t = Table::new(
+        "tile sweep — model-chosen dt vs untiled (GFLOP/s)",
+        &["Matrix", "Class", "Impl", "d", "dt", "tiled", "untiled", "speedup"],
+    );
+    let mut log = PerfLog::new();
+    let mut rng = spmm_roofline::gen::Prng::new(0x5c4ed);
+
+    for proxy in representative_suite() {
+        let a = proxy.generate(scale);
+        let cls = classify(&a);
+        for im in Impl::NATIVE {
+            let kernel = build_native(im, &a, threads).expect("native kernel");
+            for d in [16usize, 64, 128] {
+                let pred = planner.predict(&cls, d, im);
+                let b = DenseMatrix::random(a.ncols, d, &mut rng);
+                let mut c = DenseMatrix::zeros(a.nrows, d);
+                let tiled_plan = kernel.plan(Some(pred.dt).filter(|&dt| dt < d));
+                let untiled_plan = kernel.plan(None);
+                let flops = spmm_flops(kernel.nnz(), d);
+
+                let rt = bench_adaptive(1, iters, iters * 4, 0.1, |_| {
+                    kernel.execute_with(&b, &mut c, &tiled_plan).expect("tiled exec");
+                });
+                let gf_tiled = gflops(flops, rt.median_secs());
+                let ru = bench_adaptive(1, iters, iters * 4, 0.1, |_| {
+                    kernel.execute_with(&b, &mut c, &untiled_plan).expect("untiled exec");
+                });
+                let gf_untiled = gflops(flops, ru.median_secs());
+
+                t.row(vec![
+                    proxy.name.into(),
+                    cls.class.to_string(),
+                    im.to_string(),
+                    d.to_string(),
+                    if pred.dt >= d { "—".into() } else { pred.dt.to_string() },
+                    format!("{gf_tiled:.2}"),
+                    format!("{gf_untiled:.2}"),
+                    format!("{:.2}×", gf_tiled / gf_untiled.max(1e-12)),
+                ]);
+                log.push(PerfRecord {
+                    bench: "bench_schedule".into(),
+                    matrix: proxy.name.into(),
+                    class: cls.class.to_string(),
+                    impl_name: im.to_string(),
+                    d,
+                    dt: pred.dt.min(d),
+                    gflops: gf_tiled,
+                });
+                log.push(PerfRecord {
+                    bench: "bench_schedule".into(),
+                    matrix: proxy.name.into(),
+                    class: cls.class.to_string(),
+                    impl_name: im.to_string(),
+                    d,
+                    dt: d,
+                    gflops: gf_untiled,
+                });
+            }
+        }
+    }
+    println!("{}", t.to_text());
+    log.merge_save("BENCH_schedule.json").expect("write BENCH_schedule.json");
+    println!("wrote BENCH_schedule.json ({} records)", log.records.len());
+}

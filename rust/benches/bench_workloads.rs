@@ -7,6 +7,7 @@
 use spmm_roofline::config::ExperimentConfig;
 use spmm_roofline::gen::{chung_lu, erdos_renyi, mesh2d, ChungLuParams, MeshKind, Prng};
 use spmm_roofline::metrics::{gflops, spmm_flops, Timer};
+use spmm_roofline::report::{PerfLog, PerfRecord};
 use spmm_roofline::spmm::{build_native, pool, DenseMatrix, Impl};
 use spmm_roofline::workloads::{batched_pagerank, block_power_iteration, gcn_forward, GcnLayer};
 
@@ -14,10 +15,26 @@ fn envf(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// A `bench_workloads` record: workload name doubles as the matrix
+/// column, `d` is the workload's dense width (untiled: the workloads
+/// drive kernels through the plain `execute` path).
+fn wl_record(workload: &str, class: &str, im: Impl, d: usize, gf: f64) -> PerfRecord {
+    PerfRecord {
+        bench: "bench_workloads".into(),
+        matrix: workload.into(),
+        class: class.into(),
+        impl_name: im.to_string(),
+        d,
+        dt: d,
+        gflops: gf,
+    }
+}
+
 fn main() {
     let scale = envf("REPRO_SCALE", 0.25);
     let cfg = ExperimentConfig { scale, ..Default::default() };
     let mut rng = Prng::new(0x307);
+    let mut log = PerfLog::new();
 
     // GCN: 2-layer forward over a scale-free graph (d = 32 features)
     let n = (32768.0 * scale) as usize;
@@ -39,6 +56,7 @@ fn main() {
             gflops(spmm_part, dt),
             out.frob_norm()
         );
+        log.push(wl_record("gcn_forward", "ScaleFree", im, 32, gflops(spmm_part, dt)));
     }
 
     // Block power iteration over an FE-mesh proxy (d = 8 vectors)
@@ -50,13 +68,15 @@ fn main() {
         let t = Timer::start();
         let (_, stats) = block_power_iteration(k.as_ref(), &x0, 20).unwrap();
         let dt = t.elapsed_secs();
+        let gf = gflops(20.0 * spmm_flops(mesh.nnz(), 8), dt);
         println!(
             "  {im}: {:.1} ms  ({:.2} GFLOP/s, λ̂={:.3}, resid={:.1e})",
             dt * 1e3,
-            gflops(20.0 * spmm_flops(mesh.nnz(), 8), dt),
+            gf,
             stats.lambda_max,
             stats.residual
         );
+        log.push(wl_record("block_power", "Blocked", im, 8, gf));
     }
 
     // Per-call dispatch overhead: thousands of tiny SpMMs. This is the
@@ -82,12 +102,14 @@ fn main() {
             k.execute(&bt, &mut ct).unwrap();
         }
         let dt = t.elapsed_secs();
+        let gf = gflops(CALLS as f64 * spmm_flops(tiny.nnz(), 8), dt);
         println!(
             "  {im}: {:.1} ms total, {:.2} µs/call  ({:.2} GFLOP/s sustained)",
             dt * 1e3,
             dt / CALLS as f64 * 1e6,
-            gflops(CALLS as f64 * spmm_flops(tiny.nnz(), 8), dt)
+            gf
         );
+        log.push(wl_record("dispatch_tiny", "Random", im, 8, gf));
     }
 
     // Batched PageRank on the scale-free graph (8 seeds)
@@ -97,12 +119,17 @@ fn main() {
         let r = batched_pagerank(&g, &[1, 2, 3, 4, 5, 6, 7, 8], 0.85, 1e-8, 100, im, cfg.threads)
             .unwrap();
         let dt = t.elapsed_secs();
+        let gf = gflops(r.iterations as f64 * spmm_flops(g.nnz(), 8), dt);
         println!(
             "  {im}: {:.1} ms  ({} iters, {:.2} GFLOP/s, δ={:.1e})",
             dt * 1e3,
             r.iterations,
-            gflops(r.iterations as f64 * spmm_flops(g.nnz(), 8), dt),
+            gf,
             r.delta
         );
+        log.push(wl_record("batched_pagerank", "ScaleFree", im, 8, gf));
     }
+
+    log.merge_save("BENCH_schedule.json").expect("write BENCH_schedule.json");
+    println!("\nwrote BENCH_schedule.json ({} bench_workloads records)", log.records.len());
 }

@@ -75,10 +75,17 @@ pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
                     .collect::<Result<_>>()?;
             }
             "impls" => {
-                cfg.impls = v
-                    .split(',')
-                    .map(|s| parse_impl(s.trim()))
-                    .collect::<Result<_>>()?;
+                // `--impls all` opts into every native kernel
+                // (CSR,OPT,CSB,ELL,BSR); the default stays the paper
+                // trio
+                if v.trim().eq_ignore_ascii_case("all") {
+                    cfg.impls = Impl::NATIVE.to_vec();
+                } else {
+                    cfg.impls = v
+                        .split(',')
+                        .map(|s| parse_impl(s.trim()))
+                        .collect::<Result<_>>()?;
+                }
             }
             other => return Err(Error::Usage(format!("unknown flag --{other}\n\n{}", usage()))),
         }
@@ -97,7 +104,10 @@ pub fn usage() -> String {
      table-v fig1 fig2 validate-ai ablate-block ablate-reuse ablate-threads \
      ablate-reorder ladder hubs engine\n\
      flags: --scale X --threads N --iters N --warmup N --d 1,4,16,64 \
-     --impls CSR,MKL,CSB --out DIR --artifacts DIR --config FILE"
+     --impls CSR,MKL,CSB --out DIR --artifacts DIR --config FILE\n\
+     --impls accepts any of CSR,MKL/OPT,CSB,ELL,BSR,XLA or the shorthand \
+     `all` (= the five native kernels); `engine` prepares exactly the \
+     requested set, so ELL/BSR are opt-in there"
         .to_string()
 }
 
@@ -372,7 +382,7 @@ fn cmd_engine(cfg: &ExperimentConfig) -> Result<()> {
     }
     let mut t = crate::report::Table::new(
         "engine — routed jobs (classify → predict → route → measure)",
-        &["Matrix", "Class", "d", "Routed to", "Pred GF/s", "Meas GF/s", "Meas/Pred"],
+        &["Matrix", "Class", "d", "Routed to", "Tile", "Pred GF/s", "Meas GF/s", "Meas/Pred"],
     );
     // the whole (matrix × d) sweep goes through the batched path: one
     // queue, pooled buffers, persistent workers
@@ -385,11 +395,13 @@ fn cmd_engine(cfg: &ExperimentConfig) -> Result<()> {
     }
     let batch = engine.submit_batch(&jobs)?;
     for rec in &batch.records {
+        let tile = if rec.dt >= rec.d { "—".to_string() } else { rec.dt.to_string() };
         t.row(vec![
             rec.matrix.clone(),
             rec.class.to_string(),
             rec.d.to_string(),
             rec.chosen.to_string(),
+            tile,
             format!("{:.2}", rec.predicted_gflops),
             format!("{:.2}", rec.measured_gflops),
             format!("{:.2}", rec.prediction_ratio()),
@@ -397,6 +409,13 @@ fn cmd_engine(cfg: &ExperimentConfig) -> Result<()> {
     }
     println!("{}", t.to_text());
     println!("{}", batch.summary_line());
+    let (shits, smisses) = engine.registry().schedule_cache_stats();
+    println!(
+        "schedules: {} planned, {} served from cache ({:.0}% hit rate)",
+        smisses,
+        shits,
+        100.0 * engine.registry().schedule_hit_rate()
+    );
     let rep = engine.prediction_report();
     println!(
         "prediction: n={} geomean(meas/pred)={:.2} mean|log err|={:.2}",
@@ -421,6 +440,14 @@ mod tests {
         assert_eq!(cli.cfg.d_values, vec![1, 8]);
         assert_eq!(cli.cfg.impls, vec![Impl::Csr, Impl::Opt]);
         assert_eq!(cli.cfg.iters, 2);
+    }
+
+    #[test]
+    fn impls_all_expands_to_native_set() {
+        let cli = parse_args(args("engine --impls all --scale 0.1")).unwrap();
+        assert_eq!(cli.cfg.impls, Impl::NATIVE.to_vec());
+        let cli = parse_args(args("engine --impls ELL,BSR --scale 0.1")).unwrap();
+        assert_eq!(cli.cfg.impls, vec![Impl::Ell, Impl::Bsr]);
     }
 
     #[test]

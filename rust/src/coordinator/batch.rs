@@ -155,15 +155,23 @@ pub struct BatchReport {
     pub buffer_hits: usize,
     /// Dense-buffer allocations during the batch.
     pub buffer_misses: usize,
+    /// Execution schedules served from the per-(matrix, impl, threads,
+    /// d) cache during the batch.
+    pub schedule_hits: usize,
+    /// Execution schedules that had to be planned during the batch.
+    pub schedule_misses: usize,
 }
 
 impl BatchReport {
-    /// Summarise `records` (wall/buffer stats supplied by the engine).
+    /// Summarise `records` (wall/buffer/schedule stats supplied by the
+    /// engine).
     pub fn of(
         records: Vec<JobRecord>,
         wall_secs: f64,
         buffer_hits: usize,
         buffer_misses: usize,
+        schedule_hits: usize,
+        schedule_misses: usize,
     ) -> BatchReport {
         let exec_secs = records.iter().map(|r| r.secs).sum();
         // per-iteration FLOPs recovered exactly from GFLOP/s × seconds
@@ -177,6 +185,8 @@ impl BatchReport {
             prediction,
             buffer_hits,
             buffer_misses,
+            schedule_hits,
+            schedule_misses,
         }
     }
 
@@ -216,15 +226,27 @@ impl BatchReport {
         }
     }
 
+    /// Schedule-cache hit rate during the batch (planning amortised
+    /// across repeated/batched submissions).
+    pub fn schedule_hit_rate(&self) -> f64 {
+        let total = self.schedule_hits + self.schedule_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.schedule_hits as f64 / total as f64
+        }
+    }
+
     /// One-line human summary.
     pub fn summary_line(&self) -> String {
         format!(
             "batch: {} jobs, {:.2} GFLOP/s aggregate, geomean(meas/pred)={:.2}, \
-             buffer hit rate {:.0}%, wall {:.1} ms",
+             buffer hit rate {:.0}%, schedule hit rate {:.0}%, wall {:.1} ms",
             self.n_jobs(),
             self.aggregate_gflops(),
             self.prediction.geomean_ratio,
             100.0 * self.buffer_hit_rate(),
+            100.0 * self.schedule_hit_rate(),
             self.wall_secs * 1e3,
         )
     }
@@ -242,6 +264,7 @@ mod tests {
             class: SparsityClass::Random,
             d,
             chosen: Impl::Csr,
+            dt: d,
             predicted_gflops: gf,
             ai: 0.1,
             secs,
@@ -304,20 +327,23 @@ mod tests {
     fn report_aggregates() {
         // two jobs: 1 GFLOP in 0.5 s + 3 GFLOP in 0.5 s → 4 GFLOP/s over 1 s
         let records = vec![rec(4, 0.5, 2.0), rec(8, 0.5, 6.0)];
-        let rep = BatchReport::of(records, 2.0, 3, 1);
+        let rep = BatchReport::of(records, 2.0, 3, 1, 1, 1);
         assert_eq!(rep.n_jobs(), 2);
         assert!((rep.exec_secs - 1.0).abs() < 1e-12);
         assert!((rep.aggregate_gflops() - 4.0).abs() < 1e-9);
         assert!((rep.dispatch_overhead() - 0.5).abs() < 1e-9);
         assert!((rep.buffer_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((rep.schedule_hit_rate() - 0.5).abs() < 1e-12);
         assert!(rep.summary_line().contains("2 jobs"));
+        assert!(rep.summary_line().contains("schedule hit rate"));
     }
 
     #[test]
     fn empty_report() {
-        let rep = BatchReport::of(Vec::new(), 0.0, 0, 0);
+        let rep = BatchReport::of(Vec::new(), 0.0, 0, 0, 0, 0);
         assert_eq!(rep.n_jobs(), 0);
         assert_eq!(rep.aggregate_gflops(), 0.0);
         assert_eq!(rep.buffer_hit_rate(), 0.0);
+        assert_eq!(rep.schedule_hit_rate(), 0.0);
     }
 }

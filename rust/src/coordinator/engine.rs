@@ -25,7 +25,9 @@ pub struct EngineConfig {
     pub iters: usize,
     /// Warmup iterations per job.
     pub warmup: usize,
-    /// Native implementations prepared at registration.
+    /// Native implementations prepared at registration. Defaults to
+    /// the paper trio (CSR/OPT/CSB); ELL and BSR are opt-in — the CLI
+    /// wires them through `--impls ELL,BSR` or `--impls all`.
     pub impls: Vec<Impl>,
     /// Attach XLA artifacts from this directory when present.
     pub artifacts_dir: Option<String>,
@@ -149,6 +151,13 @@ impl Engine {
         };
 
         let kernel = entry.kernel(chosen.im, job.d).expect("available impl must have kernel");
+        // the execution schedule (nnz-balanced partitions + the
+        // planner's column tile) is cached per (matrix, impl, threads,
+        // d): repeated and batched submissions plan once
+        let sched = self
+            .registry
+            .schedule(&job.matrix, chosen.im, job.d, chosen.dt)
+            .expect("kernel was just resolved");
         let n = kernel.ncols();
         // dense operands come from the recycled buffer pool: across a
         // batch (or any repeated submission) each distinct size is
@@ -157,13 +166,13 @@ impl Engine {
         let mut c = self.buffers.acquire(kernel.nrows(), job.d);
         // surface kernel errors before timing (returning the buffers —
         // a failed job must not bleed the pool's largest allocations)
-        if let Err(e) = kernel.execute(&b, &mut c) {
+        if let Err(e) = kernel.execute_with(&b, &mut c, &sched) {
             self.buffers.release(b);
             self.buffers.release(c);
             return Err(e);
         }
         let r = bench_adaptive(self.config.warmup, self.config.iters, self.config.iters * 4, 0.2, |_| {
-            kernel.execute(&b, &mut c).expect("kernel failed mid-benchmark");
+            kernel.execute_with(&b, &mut c, &sched).expect("kernel failed mid-benchmark");
         });
         self.buffers.release(b);
         self.buffers.release(c);
@@ -171,12 +180,13 @@ impl Engine {
         let flops = spmm_flops(kernel.nnz(), job.d);
         let measured = gflops(flops, secs);
 
-        self.planner.observe(cls.class, chosen.im, chosen.ai, measured);
+        self.planner.observe(cls.class, chosen.im, chosen.roof_gflops, measured);
         let record = JobRecord {
             matrix: job.matrix.clone(),
             class: cls.class,
             d: job.d,
             chosen: chosen.im,
+            dt: chosen.dt,
             predicted_gflops: chosen.predicted_gflops,
             ai: chosen.ai,
             secs,
@@ -201,12 +211,16 @@ impl Engine {
     pub fn submit_batch(&mut self, jobs: &[JobSpec]) -> Result<BatchReport> {
         let t = Timer::start();
         let (hits0, misses0) = (self.buffers.hits, self.buffers.misses);
+        let (shits0, smisses0) = self.registry.schedule_cache_stats();
         let records = self.run_batch(jobs)?;
+        let (shits, smisses) = self.registry.schedule_cache_stats();
         Ok(BatchReport::of(
             records,
             t.elapsed_secs(),
             self.buffers.hits - hits0,
             self.buffers.misses - misses0,
+            shits - shits0,
+            smisses - smisses0,
         ))
     }
 
@@ -325,9 +339,26 @@ mod tests {
         assert_eq!(rep.buffer_misses, 2);
         assert_eq!(rep.buffer_hits, 6);
         assert!(e.buffer_pool().hit_rate() > 0.7);
+        // job 1 plans the schedule; jobs 2–4 reuse it
+        assert_eq!(rep.schedule_misses, 1);
+        assert_eq!(rep.schedule_hits, 3);
         // a second batch starts fully warm
         let rep2 = e.submit_batch(&jobs[..2]).unwrap();
         assert_eq!(rep2.buffer_misses, 0);
+        assert_eq!(rep2.schedule_misses, 0);
+        assert_eq!(rep2.schedule_hits, 2);
+        assert!(e.registry().schedule_hit_rate() > 0.7);
+    }
+
+    #[test]
+    fn records_carry_the_planned_tile() {
+        let mut e = test_engine();
+        let a = erdos_renyi(300, 300, 5.0, &mut Prng::new(186));
+        e.register("m", a).unwrap();
+        for d in [1usize, 8, 64] {
+            let rec = e.submit(&JobSpec::new("m", d)).unwrap();
+            assert!(rec.dt >= 1 && rec.dt <= d, "d={d} dt={}", rec.dt);
+        }
     }
 
     #[test]

@@ -35,6 +35,9 @@ pub struct JobRecord {
     pub d: usize,
     /// Implementation the job ran on.
     pub chosen: Impl,
+    /// Column-tile width the schedule executed with (`dt == d` means
+    /// untiled).
+    pub dt: usize,
     /// Planner's predicted GFLOP/s for the chosen implementation.
     pub predicted_gflops: f64,
     /// Model arithmetic intensity used for the prediction.
@@ -109,6 +112,7 @@ mod tests {
             class: SparsityClass::Random,
             d: 4,
             chosen: Impl::Csr,
+            dt: 4,
             predicted_gflops: pred,
             ai: 0.1,
             secs: 0.01,

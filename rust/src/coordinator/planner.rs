@@ -1,20 +1,31 @@
-//! The planner: sparsity-aware roofline prediction per implementation.
+//! The planner: sparsity-aware roofline prediction per implementation,
+//! including the model-driven column-tile width.
 //!
-//! Prediction = `roofline(model AI) × prior(class, impl)`. The prior
-//! encodes the paper's Table V / Fig. 2 findings as fractions of the
-//! per-pattern roof each implementation historically reaches — e.g.
-//! CSB sits nearest the roof on blocked matrices, CSR/MKL lead on
-//! banded ones, everything lands far under the roof on random
-//! matrices (the model is a lower bound on AI, not on achieved
-//! fraction). Priors start from the paper's measured ratios and are
-//! refined online: after each job the engine updates the prior with an
-//! exponential moving average of measured/roof.
+//! Prediction = `roof(model AI at the chosen tile) × prior(class,
+//! impl)`. The roof comes from the cache-aware ladder: for each
+//! candidate tile width `dt` the model's tile-aware AI
+//! ([`SparsityModel::ai_tiled`]) pays the extra `A` streams tiling
+//! costs, while the `B` panel working set (`8·n·dt`) selects the
+//! bandwidth ceiling it earns; the planner picks the `dt` maximizing
+//! predicted GFLOP/s (preferring wider tiles on ties — fewer passes,
+//! less scheduling overhead). `dt = d` reproduces the flat untiled
+//! prediction.
+//!
+//! The prior encodes the paper's Table V / Fig. 2 findings as fractions
+//! of the per-pattern roof each implementation historically reaches —
+//! e.g. CSB sits nearest the roof on blocked matrices, CSR/MKL lead on
+//! banded ones, everything lands far under the roof on random matrices
+//! (the model is a lower bound on AI, not on achieved fraction). Priors
+//! start from the paper's measured ratios and are refined online: after
+//! each job the engine updates the prior with an exponential moving
+//! average of measured/roof.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::gen::SparsityClass;
-use crate::model::{AiParams, Roofline, SparsityModel};
+use crate::membench;
+use crate::model::{AiParams, CacheAwareRoofline, Roofline, SparsityModel};
 use crate::pattern::Classification;
 use crate::spmm::Impl;
 
@@ -22,19 +33,23 @@ use crate::spmm::Impl;
 #[derive(Debug, Clone, Copy)]
 pub struct Prediction {
     pub im: Impl,
-    /// Model arithmetic intensity (FLOPs/byte).
+    /// Model arithmetic intensity (FLOPs/byte) at the chosen tile.
     pub ai: f64,
-    /// Bandwidth-roof performance at that AI.
+    /// Ladder-roof performance at that AI and tile working set.
     pub roof_gflops: f64,
     /// Prior efficiency fraction applied.
     pub prior: f64,
     /// Predicted GFLOP/s = roof × prior.
     pub predicted_gflops: f64,
+    /// Chosen column-tile width (`dt == d` means untiled).
+    pub dt: usize,
 }
 
 /// Roofline-guided planner with online prior refinement.
 pub struct Planner {
     roofline: Roofline,
+    /// Per-level bandwidth ceilings used for tile-width selection.
+    ladder: CacheAwareRoofline,
     /// (class, impl) → efficiency prior (fraction of roof).
     priors: Mutex<HashMap<(SparsityClass, Impl), f64>>,
     /// EMA weight for online updates.
@@ -77,15 +92,46 @@ fn seed_prior(class: SparsityClass, im: Impl) -> f64 {
     }
 }
 
+/// Candidate tile widths at dense width `d`, widest first: the
+/// untiled `d` itself, then powers of two below it down to 8. Widths
+/// below 8 never pay — the extra `A` streams always beat one ceiling
+/// hop at that index overhead. Descending order makes the planner's
+/// strictly-greater comparison keep the *widest* tile on roof ties
+/// (fewer passes, fewer barriers).
+fn tile_candidates(d: usize) -> Vec<usize> {
+    let mut v = vec![d];
+    let mut t = 8usize;
+    while t < d {
+        v.push(t);
+        t *= 2;
+    }
+    v[1..].reverse();
+    v
+}
+
 impl Planner {
-    /// Planner over a calibrated roofline.
+    /// Planner over a calibrated flat roofline; tile selection uses the
+    /// calibration-free nominal ladder over this host's cache levels
+    /// ([`CacheAwareRoofline::nominal`]).
     pub fn new(roofline: Roofline) -> Planner {
-        Planner { roofline, priors: Mutex::new(HashMap::new()), ema: 0.3 }
+        let ladder = CacheAwareRoofline::nominal(roofline.machine, &membench::cache_levels());
+        Planner::with_ladder(roofline, ladder)
     }
 
-    /// The roofline used for predictions.
+    /// Planner over an explicit bandwidth ladder (e.g. a measured
+    /// `membench::bandwidth_ladder`).
+    pub fn with_ladder(roofline: Roofline, ladder: CacheAwareRoofline) -> Planner {
+        Planner { roofline, ladder, priors: Mutex::new(HashMap::new()), ema: 0.3 }
+    }
+
+    /// The flat roofline used for reports.
     pub fn roofline(&self) -> &Roofline {
         &self.roofline
+    }
+
+    /// The bandwidth ladder used for tile selection.
+    pub fn ladder(&self) -> &CacheAwareRoofline {
+        &self.ladder
     }
 
     /// Current prior for (class, impl).
@@ -98,14 +144,39 @@ impl Planner {
             .or_insert_with(|| seed_prior(class, im))
     }
 
+    /// The tile width maximizing roof performance for this matrix at
+    /// width `d`, with the AI and roof it earns. Ties go to the wider
+    /// tile.
+    fn best_tile(&self, model: SparsityModel, p: AiParams) -> (usize, f64, f64) {
+        let mut best = (p.d, 0.0, f64::MIN);
+        for dt in tile_candidates(p.d) {
+            let ai = model.ai_tiled(p, dt);
+            let ws = CacheAwareRoofline::spmm_working_set(p.n, dt);
+            let roof = self.ladder.attainable_gflops(ai, ws);
+            // candidates are widest-first and the comparison is
+            // strictly-greater, so roof ties keep the widest tile
+            if roof > best.2 {
+                best = (dt, ai, roof);
+            }
+        }
+        best
+    }
+
     /// Predict attainable GFLOP/s for one implementation on a
-    /// classified matrix.
+    /// classified matrix, including the model-chosen tile width.
     pub fn predict(&self, cls: &Classification, d: usize, im: Impl) -> Prediction {
         let p = AiParams::new(cls.stats.n, d, cls.stats.nnz);
-        let ai = cls.model.ai(p);
-        let roof = self.roofline.attainable_gflops(ai);
+        let (dt, ai, roof) = if im == Impl::Xla {
+            // the AOT artifact executes its own static loop nest —
+            // column tiling does not apply
+            let ai = cls.model.ai(p);
+            let ws = CacheAwareRoofline::spmm_working_set(p.n, d);
+            (d, ai, self.ladder.attainable_gflops(ai, ws))
+        } else {
+            self.best_tile(cls.model, p)
+        };
         let prior = self.prior(cls.class, im);
-        Prediction { im, ai, roof_gflops: roof, prior, predicted_gflops: roof * prior }
+        Prediction { im, ai, roof_gflops: roof, prior, predicted_gflops: roof * prior, dt }
     }
 
     /// Rank the candidate implementations, best predicted first.
@@ -117,20 +188,21 @@ impl Planner {
     }
 
     /// Online refinement: fold a measured efficiency (measured /
-    /// roof) into the prior with an EMA.
-    pub fn observe(&self, class: SparsityClass, im: Impl, ai: f64, measured_gflops: f64) {
-        let roof = self.roofline.attainable_gflops(ai);
-        if roof <= 0.0 {
+    /// roof) into the prior with an EMA. `roof_gflops` is the roof the
+    /// prediction used ([`Prediction::roof_gflops`]), so the learned
+    /// fraction matches what `predict` multiplies by.
+    pub fn observe(&self, class: SparsityClass, im: Impl, roof_gflops: f64, measured_gflops: f64) {
+        if roof_gflops <= 0.0 {
             return;
         }
-        let eff = (measured_gflops / roof).clamp(0.0, 2.0);
+        let eff = (measured_gflops / roof_gflops).clamp(0.0, 2.0);
         let mut priors = self.priors.lock().unwrap();
         let slot = priors.entry((class, im)).or_insert_with(|| seed_prior(class, im));
         *slot = (1.0 - self.ema) * *slot + self.ema * eff;
     }
 
-    /// The model AI the planner would use for a classified matrix at
-    /// width `d` (exposed for reports).
+    /// The untiled model AI the planner would use for a classified
+    /// matrix at width `d` (exposed for reports).
     pub fn model_ai(&self, cls: &Classification, d: usize) -> f64 {
         cls.model.ai(AiParams::new(cls.stats.n, d, cls.stats.nnz))
     }
@@ -172,7 +244,52 @@ mod tests {
         let p1 = p.predict(&cls, 1, Impl::Opt);
         let p16 = p.predict(&cls, 16, Impl::Opt);
         assert!(p16.ai > p1.ai);
-        assert!(p16.predicted_gflops > p1.predicted_gflops);
+        assert_eq!(p1.dt, 1);
+        assert!(p16.dt >= 8, "candidates are d and powers of two ≥ 8: {}", p16.dt);
+    }
+
+    #[test]
+    fn chosen_tile_never_loses_to_untiled_on_its_own_model() {
+        // by construction: dt=d is always a candidate, so the chosen
+        // tile's predicted roof ≥ the untiled roof
+        let a = mesh2d(80, MeshKind::Road, 0.62, &mut Prng::new(164));
+        let cls = classify(&a);
+        let p = planner();
+        for d in [4usize, 16, 64, 256] {
+            let pred = p.predict(&cls, d, Impl::Csb);
+            let params = AiParams::new(cls.stats.n, d, cls.stats.nnz);
+            let ai_untiled = cls.model.ai(params);
+            let ws = CacheAwareRoofline::spmm_working_set(cls.stats.n, d);
+            let roof_untiled = p.ladder().attainable_gflops(ai_untiled, ws);
+            assert!(pred.roof_gflops >= roof_untiled - 1e-12, "d={d}");
+            assert!(pred.dt >= 1 && pred.dt <= d);
+        }
+    }
+
+    #[test]
+    fn large_d_small_cache_prefers_tiling() {
+        // a ladder with a tiny fast level and slow DRAM: at large d the
+        // B panel only fits when tiled, so the planner must tile
+        let machine = MachineParams { beta_gbs: 10.0, pi_gflops: 10_000.0 };
+        let levels = vec![("L2".to_string(), 8 << 20)];
+        let ladder = CacheAwareRoofline::nominal(machine, &levels);
+        let p = Planner::with_ladder(Roofline::new(machine), ladder);
+        let a = mesh2d(64, MeshKind::Road, 0.62, &mut Prng::new(165));
+        let cls = classify(&a);
+        // n ≈ 4096 rows: the full B at d=4096 is 128 MiB (DRAM-bound)
+        // but a dt=128 panel is 4 MiB — exactly the halved L2
+        // threshold — so the planner must tile to earn the 2β ceiling
+        let n = cls.stats.n;
+        let d = 4096;
+        let pred = p.predict(&cls, d, Impl::Csb);
+        assert!(pred.dt < d, "tiled width expected, got dt={}", pred.dt);
+        assert!(CacheAwareRoofline::spmm_working_set(n, pred.dt) <= (8 << 20) / 2);
+        // and the tiled prediction beats the untiled roof outright
+        let params = AiParams::new(n, d, cls.stats.nnz);
+        let untiled = p
+            .ladder()
+            .attainable_gflops(cls.model.ai(params), CacheAwareRoofline::spmm_working_set(n, d));
+        assert!(pred.roof_gflops > untiled);
     }
 
     #[test]
@@ -183,7 +300,7 @@ mod tests {
         let before = p.predict(&cls, 4, Impl::Csr);
         // report a measurement far above the prediction
         for _ in 0..10 {
-            p.observe(cls.class, Impl::Csr, before.ai, before.roof_gflops);
+            p.observe(cls.class, Impl::Csr, before.roof_gflops, before.roof_gflops);
         }
         let after = p.predict(&cls, 4, Impl::Csr);
         assert!(after.predicted_gflops > before.predicted_gflops);
@@ -199,5 +316,27 @@ mod tests {
         for w in ranked.windows(2) {
             assert!(w[0].predicted_gflops >= w[1].predicted_gflops);
         }
+    }
+
+    #[test]
+    fn tile_candidates_cover_d_and_powers_widest_first() {
+        assert_eq!(tile_candidates(1), vec![1]);
+        assert_eq!(tile_candidates(8), vec![8]);
+        assert_eq!(tile_candidates(64), vec![64, 32, 16, 8]);
+        assert_eq!(tile_candidates(100), vec![100, 64, 32, 16, 8]);
+    }
+
+    #[test]
+    fn roof_ties_keep_the_widest_tile() {
+        // compute-roof regime: every fitting tile hits π, so roofs tie
+        // and the planner must keep the widest candidate
+        let machine = MachineParams { beta_gbs: 1000.0, pi_gflops: 1.0 };
+        let levels = vec![("L2".to_string(), 1 << 30)];
+        let ladder = CacheAwareRoofline::nominal(machine, &levels);
+        let p = Planner::with_ladder(Roofline::new(machine), ladder);
+        let a = mesh2d(40, MeshKind::Road, 0.62, &mut Prng::new(166));
+        let cls = classify(&a);
+        let pred = p.predict(&cls, 64, Impl::Csb);
+        assert_eq!(pred.dt, 64, "π-capped roofs tie → widest (untiled) wins");
     }
 }

@@ -1,18 +1,24 @@
-//! The matrix registry: prepared kernels + classification per
-//! registered matrix.
+//! The matrix registry: prepared kernels, classification, and cached
+//! execution schedules per registered matrix.
 //!
 //! Preparation (format conversion, classification, artifact staging)
 //! happens once at registration — mirroring the paper's methodology,
 //! which excludes loading and data-structure construction from the
-//! timed region.
+//! timed region. Execution *schedules* (nnz-balanced partitions +
+//! column tiles, `spmm::Schedule`) are built lazily on first use and
+//! cached per `(matrix, impl, threads, d)`, so repeated and batched
+//! submissions pay planning cost once; hit/miss counters make the
+//! reuse observable in batch reports.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::pattern::{classify, Classification};
 use crate::runtime::{ArtifactManifest, XlaRuntime, XlaSpmm};
 use crate::sparse::Csr;
-use crate::spmm::{build_native, Impl, Spmm};
+use crate::spmm::{build_native, Impl, Schedule, Spmm};
 
 /// One registered matrix with its prepared kernels.
 pub struct MatrixEntry {
@@ -63,11 +69,23 @@ impl MatrixEntry {
 pub struct MatrixRegistry {
     entries: HashMap<String, MatrixEntry>,
     threads: usize,
+    /// Execution schedules keyed by `(matrix, impl, threads, d)`.
+    /// Interior-mutable so lookups work through `&self` while kernels
+    /// are borrowed.
+    schedules: Mutex<HashMap<(String, Impl, usize, usize), Arc<Schedule>>>,
+    sched_hits: AtomicUsize,
+    sched_misses: AtomicUsize,
 }
 
 impl MatrixRegistry {
     pub fn new(threads: usize) -> MatrixRegistry {
-        MatrixRegistry { entries: HashMap::new(), threads: threads.max(1) }
+        MatrixRegistry {
+            entries: HashMap::new(),
+            threads: threads.max(1),
+            schedules: Mutex::new(HashMap::new()),
+            sched_hits: AtomicUsize::new(0),
+            sched_misses: AtomicUsize::new(0),
+        }
     }
 
     /// Register a matrix: classify it and prepare the requested native
@@ -82,11 +100,54 @@ impl MatrixRegistry {
             }
             kernels.insert((im, 0), build_native(im, &csr, self.threads)?);
         }
+        // re-registering a name invalidates its cached schedules
+        self.schedules.lock().unwrap().retain(|k, _| k.0 != name);
         self.entries.insert(
             name.clone(),
             MatrixEntry { name, classification, kernels, csr, threads: self.threads },
         );
         Ok(())
+    }
+
+    /// The cached execution schedule for `(name, im, threads, d)`,
+    /// building it (with column-tile width `dt`) on first use. `dt ≥ d`
+    /// plans untiled. Returns `None` when the matrix or kernel is
+    /// unknown. The cache key deliberately excludes `dt` — the
+    /// planner's tile choice is a pure function of `(matrix, d)` — but
+    /// a cached entry whose tile disagrees with the request (a caller
+    /// violating that purity, or a planner whose ladder changed) is
+    /// replanned and replaced rather than silently served stale.
+    pub fn schedule(&self, name: &str, im: Impl, d: usize, dt: usize) -> Option<Arc<Schedule>> {
+        let entry = self.entries.get(name)?;
+        let kernel = entry.kernel(im, d)?;
+        let tile = if dt >= d { None } else { Some(dt) };
+        let key = (name.to_string(), im, self.threads, d);
+        let mut map = self.schedules.lock().unwrap();
+        if let Some(s) = map.get(&key) {
+            if s.tile == tile {
+                self.sched_hits.fetch_add(1, Ordering::Relaxed);
+                return Some(s.clone());
+            }
+        }
+        self.sched_misses.fetch_add(1, Ordering::Relaxed);
+        let s = Arc::new(kernel.plan(tile));
+        map.insert(key, s.clone());
+        Some(s)
+    }
+
+    /// Schedule-cache counters: `(hits, misses)` since construction.
+    pub fn schedule_cache_stats(&self) -> (usize, usize) {
+        (self.sched_hits.load(Ordering::Relaxed), self.sched_misses.load(Ordering::Relaxed))
+    }
+
+    /// Fraction of schedule lookups served from the cache.
+    pub fn schedule_hit_rate(&self) -> f64 {
+        let (h, m) = self.schedule_cache_stats();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
     }
 
     /// Stage XLA kernels for every artifact in the manifest whose
@@ -154,6 +215,37 @@ mod tests {
         assert!(e.kernel(Impl::Opt, 4).is_none());
         assert_eq!(e.available(4), vec![Impl::Csb, Impl::Csr]);
         assert_eq!(reg.names(), vec!["er"]);
+    }
+
+    #[test]
+    fn schedule_cache_hits_on_reuse() {
+        let mut reg = MatrixRegistry::new(2);
+        let a = erdos_renyi(300, 300, 5.0, &mut Prng::new(172));
+        reg.register("m", a, &[Impl::Csr, Impl::Csb]).unwrap();
+        assert_eq!(reg.schedule_cache_stats(), (0, 0));
+        let s1 = reg.schedule("m", Impl::Csr, 16, 8).unwrap();
+        assert_eq!(reg.schedule_cache_stats(), (0, 1));
+        let s2 = reg.schedule("m", Impl::Csr, 16, 8).unwrap();
+        assert_eq!(reg.schedule_cache_stats(), (1, 1));
+        assert!(Arc::ptr_eq(&s1, &s2), "cache must hand out the same schedule");
+        assert_eq!(s1.tile, Some(8));
+        // a different (impl, d) is its own entry; dt ≥ d plans untiled
+        let s3 = reg.schedule("m", Impl::Csb, 4, 4).unwrap();
+        assert_eq!(s3.tile, None);
+        assert_eq!(reg.schedule_cache_stats(), (1, 2));
+        // unknown matrix / unprepared kernel
+        assert!(reg.schedule("ghost", Impl::Csr, 4, 4).is_none());
+        assert!(reg.schedule("m", Impl::Opt, 4, 4).is_none());
+        // a conflicting tile request replans instead of serving stale
+        let s4 = reg.schedule("m", Impl::Csr, 16, 4).unwrap();
+        assert_eq!(s4.tile, Some(4));
+        assert_eq!(reg.schedule_cache_stats(), (1, 3));
+        // re-registration invalidates
+        let a2 = erdos_renyi(300, 300, 5.0, &mut Prng::new(173));
+        reg.register("m", a2, &[Impl::Csr]).unwrap();
+        reg.schedule("m", Impl::Csr, 16, 8).unwrap();
+        assert_eq!(reg.schedule_cache_stats(), (1, 4));
+        assert!(reg.schedule_hit_rate() > 0.15);
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //!   paper's Table III dataset at configurable scale.
 //! * **SpMM kernels** ([`spmm`]): row-parallel CSR, a register-blocked
 //!   d-specialised "OPT" kernel (the MKL stand-in), block-parallel CSB,
-//!   and padded ELL — all multithreaded over the persistent worker
-//!   pool (below).
+//!   padded ELL, and dense-tile BSR — all multithreaded over the
+//!   persistent worker pool (below) and all executing through a
+//!   precomputed [`spmm::Schedule`] (nnz-balanced partitions +
+//!   model-chosen column tiles, `spmm/schedule.rs`).
 //! * **Sparsity-aware roofline models** ([`model`]): the paper's four
 //!   arithmetic-intensity formulas (Eqs. 2, 3, 4, 6), the blocked-column
 //!   occupancy model `z = t(1-e^{-D/t})`, and the scale-free hub-mass

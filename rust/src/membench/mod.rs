@@ -10,5 +10,6 @@
 mod stream;
 
 pub use stream::{
-    bandwidth_ladder, measure_machine, peak_flops_gflops, stream_benchmark, StreamResult,
+    bandwidth_ladder, cache_levels, measure_machine, peak_flops_gflops, stream_benchmark,
+    StreamResult,
 };

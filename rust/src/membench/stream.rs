@@ -156,12 +156,12 @@ pub fn measure_machine(threads: usize) -> MachineParams {
     MachineParams { beta_gbs: s.beta_gbs(), pi_gflops: peak_flops_gflops(threads) }
 }
 
-/// Measure the bandwidth *ladder* for the cache-aware roofline
-/// (`model::CacheAwareRoofline`): STREAM triad at working sets sized
-/// for each cache level reported by the OS, plus a beyond-cache DRAM
-/// point. Returns ceilings ordered by capacity.
-pub fn bandwidth_ladder(threads: usize) -> Vec<crate::model::BandwidthCeiling> {
-    use crate::model::BandwidthCeiling;
+/// The data-cache levels of this host as `(name, capacity_bytes)`
+/// pairs, ordered by capacity ascending — read from `/sys` (cpu0)
+/// with typical defaults when that's absent. Cheap (no measurement):
+/// shared by the measured [`bandwidth_ladder`] and the calibration-free
+/// `model::CacheAwareRoofline::nominal`.
+pub fn cache_levels() -> Vec<(String, usize)> {
     let read_kb = |path: &str| -> Option<usize> {
         let s = std::fs::read_to_string(path).ok()?;
         s.trim().trim_end_matches('K').parse::<usize>().ok()
@@ -188,6 +188,16 @@ pub fn bandwidth_ladder(threads: usize) -> Vec<crate::model::BandwidthCeiling> {
     }
     levels.sort_by_key(|&(_, cap)| cap);
     levels.dedup_by_key(|(_, cap)| *cap);
+    levels
+}
+
+/// Measure the bandwidth *ladder* for the cache-aware roofline
+/// (`model::CacheAwareRoofline`): STREAM triad at working sets sized
+/// for each cache level reported by the OS, plus a beyond-cache DRAM
+/// point. Returns ceilings ordered by capacity.
+pub fn bandwidth_ladder(threads: usize) -> Vec<crate::model::BandwidthCeiling> {
+    use crate::model::BandwidthCeiling;
+    let levels = cache_levels();
 
     let mut out = Vec::new();
     for (name, cap) in &levels {

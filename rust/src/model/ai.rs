@@ -62,6 +62,53 @@ impl SparsityModel {
         }
     }
 
+    /// The byte count split into `(A traffic, B traffic)` — `C` is
+    /// always `8·n·d` on top. The split is what the tile-aware model
+    /// below re-scales: tiling multiplies the A term (one pass per
+    /// tile) and leaves B and C invariant (every model's B term is
+    /// linear in the dense width, so per-tile traffic at width `dt`
+    /// summed over `⌈d/dt⌉` tiles telescopes back to the full-width
+    /// term).
+    fn traffic_split(&self, p: AiParams) -> (f64, f64) {
+        let (n, d, nnz) = (p.n as f64, p.d as f64, p.nnz as f64);
+        match *self {
+            SparsityModel::Random => (12.0 * nnz, 8.0 * d * nnz),
+            SparsityModel::Diagonal => (12.0 * nnz, 8.0 * n * d),
+            SparsityModel::Blocked { t, n_blocks } => {
+                let nb = n_blocks.max(1) as f64;
+                let z = expected_z(t as f64, nnz / nb);
+                (8.0 * nnz, 2.0 * d * nb * z)
+            }
+            SparsityModel::ScaleFree { alpha, f } => {
+                let nnz_hub = nnz * hub_mass_fraction(alpha, f);
+                (12.0 * nnz, 8.0 * d * (nnz - nnz_hub) + 8.0 * d * f * n)
+            }
+        }
+    }
+
+    /// Modeled DRAM bytes when `B`/`C` are processed in `dt`-wide
+    /// column tiles: `A` is re-streamed once per tile
+    /// (`⌈d/dt⌉ ×` its term), `B` traffic is width-linear so tiling
+    /// leaves it unchanged, and `C` is still written once. `dt = d`
+    /// reproduces [`SparsityModel::bytes`] exactly. What tiling *buys*
+    /// is not fewer modeled bytes but a smaller working set
+    /// (`8·n·dt`), which the cache-aware roofline rewards with a
+    /// faster bandwidth ceiling — see
+    /// [`crate::model::CacheAwareRoofline`].
+    pub fn bytes_tiled(&self, p: AiParams, dt: usize) -> f64 {
+        let dt = dt.clamp(1, p.d.max(1));
+        let tiles = p.d.div_ceil(dt).max(1) as f64;
+        let (a_bytes, b_bytes) = self.traffic_split(p);
+        tiles * a_bytes + b_bytes + 8.0 * p.n as f64 * p.d as f64
+    }
+
+    /// Arithmetic intensity at tile width `dt`
+    /// (`ai_tiled(p, d) == ai(p)`). Monotone non-increasing as `dt`
+    /// shrinks: narrower tiles re-stream `A` more often.
+    pub fn ai_tiled(&self, p: AiParams, dt: usize) -> f64 {
+        p.flops() / self.bytes_tiled(p, dt)
+    }
+
     /// Human-readable name used in figures.
     pub fn name(&self) -> &'static str {
         match self {
@@ -247,6 +294,43 @@ mod tests {
     fn bytes_equal_flops_over_ai() {
         let b = bytes_random(P);
         assert!((P.flops() / ai_random(P) - b).abs() / b < 1e-12);
+    }
+
+    #[test]
+    fn tiled_at_full_width_reproduces_flat_formulas() {
+        let models = [
+            SparsityModel::Random,
+            SparsityModel::Diagonal,
+            SparsityModel::Blocked { t: 1024, n_blocks: P.nnz / 64 },
+            SparsityModel::ScaleFree { alpha: 2.2, f: 0.001 },
+        ];
+        for m in models {
+            let flat = m.bytes(P);
+            let tiled = m.bytes_tiled(P, P.d);
+            assert!((flat - tiled).abs() / flat < 1e-12, "{:?}", m);
+            assert!((m.ai(P) - m.ai_tiled(P, P.d)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn narrower_tiles_cost_more_a_traffic() {
+        let m = SparsityModel::Random;
+        let mut last = m.ai_tiled(P, P.d);
+        for dt in [8usize, 4, 2, 1] {
+            let ai = m.ai_tiled(P, dt);
+            assert!(ai <= last + 1e-15, "AI must not rise as tiles shrink (dt={dt})");
+            last = ai;
+        }
+        // the extra traffic is exactly the repeated A streams
+        let two_pass = m.bytes_tiled(P, P.d.div_ceil(2));
+        assert!((two_pass - (m.bytes(P) + 12.0 * P.nnz as f64)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tile_width_clamps_to_valid_range() {
+        let m = SparsityModel::Diagonal;
+        assert_eq!(m.bytes_tiled(P, 0), m.bytes_tiled(P, 1));
+        assert_eq!(m.bytes_tiled(P, P.d * 10), m.bytes(P));
     }
 
     #[test]

@@ -62,6 +62,37 @@ impl CacheAwareRoofline {
         (self.ceiling_for(working_set_bytes).beta_gbs * ai).min(self.pi_gflops)
     }
 
+    /// A calibration-free ladder from flat machine parameters plus the
+    /// host's cache capacities: per-level bandwidths are the DRAM `β`
+    /// scaled by conventional multipliers (`2×` per level inward —
+    /// L3 `2β`, L2 `4β`, L1 `8β` on a three-level hierarchy). This is
+    /// a *prior*, not a measurement — it exists so tile-width selection
+    /// can run without the multi-second per-level STREAM sweep
+    /// (`membench::bandwidth_ladder` measures the real ladder). The
+    /// capacity per level is halved as the effective residency
+    /// threshold: a working set at exactly the nominal capacity
+    /// thrashes against the kernel's other streams.
+    ///
+    /// `levels` are `(name, capacity_bytes)` ascending, e.g. from
+    /// `membench::cache_levels()`.
+    pub fn nominal(machine: MachineParams, levels: &[(String, usize)]) -> CacheAwareRoofline {
+        let mut ceilings: Vec<BandwidthCeiling> = levels
+            .iter()
+            .enumerate()
+            .map(|(i, (name, cap))| BandwidthCeiling {
+                level: name.clone(),
+                capacity_bytes: (cap / 2).max(1),
+                beta_gbs: machine.beta_gbs * (1u64 << (levels.len() - i)) as f64,
+            })
+            .collect();
+        ceilings.push(BandwidthCeiling {
+            level: "DRAM".into(),
+            capacity_bytes: usize::MAX,
+            beta_gbs: machine.beta_gbs,
+        });
+        CacheAwareRoofline::new(ceilings, machine.pi_gflops)
+    }
+
     /// The flat (DRAM-only) machine this degenerates to — what the
     /// paper's Fig. 2 used.
     pub fn flat(&self) -> MachineParams {
@@ -183,5 +214,27 @@ mod tests {
     #[test]
     fn spmm_working_set_is_b() {
         assert_eq!(CacheAwareRoofline::spmm_working_set(1000, 16), 128_000);
+    }
+
+    #[test]
+    fn nominal_ladder_scales_from_flat_beta() {
+        let machine = MachineParams { beta_gbs: 20.0, pi_gflops: 100.0 };
+        let levels = vec![
+            ("L1".to_string(), 32 << 10),
+            ("L2".to_string(), 1 << 20),
+            ("L3".to_string(), 16 << 20),
+        ];
+        let r = CacheAwareRoofline::nominal(machine, &levels);
+        assert_eq!(r.ceilings.len(), 4);
+        // 2× per level inward over DRAM β, DRAM last at β itself
+        assert_eq!(r.ceilings[0].beta_gbs, 160.0);
+        assert_eq!(r.ceilings[1].beta_gbs, 80.0);
+        assert_eq!(r.ceilings[2].beta_gbs, 40.0);
+        assert_eq!(r.ceilings[3].beta_gbs, 20.0);
+        assert_eq!(r.ceilings[3].capacity_bytes, usize::MAX);
+        // residency threshold is half the nominal capacity
+        assert_eq!(r.ceilings[0].capacity_bytes, 16 << 10);
+        assert_eq!(r.flat().beta_gbs, 20.0);
+        assert_eq!(r.pi_gflops, 100.0);
     }
 }

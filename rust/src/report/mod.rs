@@ -1,12 +1,15 @@
-//! Report rendering: aligned text/markdown tables, CSV, SVG plots, and
-//! the system-info probe (the paper's Table IV analog).
+//! Report rendering: aligned text/markdown tables, CSV, SVG plots,
+//! machine-readable perf artifacts (`BENCH_schedule.json`), and the
+//! system-info probe (the paper's Table IV analog).
 
 mod csv;
+mod perf;
 mod svg;
 mod sysinfo;
 mod table;
 
 pub use csv::write_csv;
+pub use perf::{PerfLog, PerfRecord};
 pub use svg::{Marker, Series, SvgPlot, VLine, PALETTE};
 pub use sysinfo::{probe_system, SystemInfo};
 pub use table::{fmt3, Table};

@@ -1,0 +1,251 @@
+//! Machine-readable perf artifacts: `BENCH_schedule.json`.
+//!
+//! The benches (`bench_schedule`, `bench_batch`, `bench_workloads`)
+//! used to report throughput as prose only, so the repo's perf
+//! trajectory across PRs lived in commit messages. This module gives
+//! them a shared flat record schema and a merge-on-save JSON file: each
+//! bench replaces *its own* records and leaves the other benches'
+//! latest numbers in place, so one artifact accumulates the current
+//! state of every bench.
+//!
+//! The format is a single top-level object
+//! `{"records": [ {...}, ... ]}` with flat records (no nesting), so the
+//! hand-rolled parser below — the crate builds offline, serde is
+//! unavailable — stays trivial and total. Tiled-vs-untiled comparisons
+//! are encoded as record pairs sharing (bench, matrix, impl, d) and
+//! differing in `dt` (`dt == d` is the untiled run).
+
+use crate::error::{Error, Result};
+
+/// One measured cell: a bench × matrix × implementation × dense-width
+/// point at a specific column-tile width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfRecord {
+    /// Which bench produced the record (e.g. `bench_schedule`).
+    pub bench: String,
+    /// Matrix / workload name.
+    pub matrix: String,
+    /// Sparsity class (or workload kind).
+    pub class: String,
+    /// Implementation name (`CSR`, `OPT`, ...).
+    pub impl_name: String,
+    /// Dense width.
+    pub d: usize,
+    /// Column-tile width the run executed with (`dt == d` = untiled).
+    pub dt: usize,
+    /// Measured GFLOP/s.
+    pub gflops: f64,
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl PerfRecord {
+    fn to_json(&self) -> String {
+        // non-finite throughput (a degenerate zero-length timing)
+        // would serialise as `inf`/`NaN`, which is not JSON and would
+        // poison the whole artifact on the next parse — record 0
+        let gf = if self.gflops.is_finite() { self.gflops } else { 0.0 };
+        format!(
+            "{{\"bench\": \"{}\", \"matrix\": \"{}\", \"class\": \"{}\", \
+             \"impl\": \"{}\", \"d\": {}, \"dt\": {}, \"gflops\": {:.4}}}",
+            esc(&self.bench),
+            esc(&self.matrix),
+            esc(&self.class),
+            esc(&self.impl_name),
+            self.d,
+            self.dt,
+            gf
+        )
+    }
+}
+
+/// A collection of perf records with JSON round-tripping and
+/// per-bench merge semantics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PerfLog {
+    pub records: Vec<PerfRecord>,
+}
+
+impl PerfLog {
+    pub fn new() -> PerfLog {
+        PerfLog::default()
+    }
+
+    /// Append one record.
+    pub fn push(&mut self, rec: PerfRecord) {
+        self.records.push(rec);
+    }
+
+    /// Serialise to the artifact format.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"records\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str("  ");
+            out.push_str(&r.to_json());
+            if i + 1 < self.records.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    /// Parse the artifact format back (tolerant of whitespace; strict
+    /// about the flat schema).
+    pub fn parse(text: &str) -> Result<PerfLog> {
+        let mut records = Vec::new();
+        let mut rest = text;
+        while let Some(start) = rest.find('{') {
+            rest = &rest[start + 1..];
+            // skip the top-level wrapper: objects without a "bench" key
+            let end = match rest.find('}') {
+                Some(e) => e,
+                None => break,
+            };
+            let body = &rest[..end];
+            if !body.contains("\"bench\"") {
+                continue;
+            }
+            records.push(parse_record(body)?);
+            rest = &rest[end + 1..];
+        }
+        Ok(PerfLog { records })
+    }
+
+    /// Write `path`, replacing any previous records from the same
+    /// benches while keeping other benches' records. A missing or
+    /// unparsable existing file is treated as empty (the artifact is a
+    /// build product, not a source of truth).
+    pub fn merge_save(&self, path: &str) -> Result<()> {
+        let mut merged = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|t| PerfLog::parse(&t).ok())
+            .unwrap_or_default();
+        merged.records.retain(|r| !self.records.iter().any(|n| n.bench == r.bench));
+        merged.records.extend(self.records.iter().cloned());
+        std::fs::write(path, merged.to_json())?;
+        Ok(())
+    }
+}
+
+fn field<'a>(body: &'a str, key: &str) -> Result<&'a str> {
+    let pat = format!("\"{key}\"");
+    let at = body
+        .find(&pat)
+        .ok_or_else(|| Error::Parse(format!("perf record missing key '{key}'")))?;
+    let after = &body[at + pat.len()..];
+    let colon = after
+        .find(':')
+        .ok_or_else(|| Error::Parse(format!("perf record key '{key}' has no value")))?;
+    Ok(after[colon + 1..].trim_start())
+}
+
+fn field_str(body: &str, key: &str) -> Result<String> {
+    let v = field(body, key)?;
+    let v = v
+        .strip_prefix('"')
+        .ok_or_else(|| Error::Parse(format!("'{key}' is not a string")))?;
+    let end = v
+        .find('"')
+        .ok_or_else(|| Error::Parse(format!("'{key}' string unterminated")))?;
+    Ok(v[..end].to_string())
+}
+
+fn field_num(body: &str, key: &str) -> Result<f64> {
+    let v = field(body, key)?;
+    let end = v
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == '+'))
+        .unwrap_or(v.len());
+    v[..end]
+        .parse::<f64>()
+        .map_err(|_| Error::Parse(format!("'{key}' is not a number: '{}'", &v[..end])))
+}
+
+fn parse_record(body: &str) -> Result<PerfRecord> {
+    Ok(PerfRecord {
+        bench: field_str(body, "bench")?,
+        matrix: field_str(body, "matrix")?,
+        class: field_str(body, "class")?,
+        impl_name: field_str(body, "impl")?,
+        d: field_num(body, "d")? as usize,
+        dt: field_num(body, "dt")? as usize,
+        gflops: field_num(body, "gflops")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(bench: &str, im: &str, d: usize, dt: usize, gf: f64) -> PerfRecord {
+        PerfRecord {
+            bench: bench.into(),
+            matrix: "er_18_10".into(),
+            class: "Random".into(),
+            impl_name: im.into(),
+            d,
+            dt,
+            gflops: gf,
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let mut log = PerfLog::new();
+        log.push(rec("bench_schedule", "CSR", 64, 16, 3.25));
+        log.push(rec("bench_schedule", "CSR", 64, 64, 2.75));
+        let text = log.to_json();
+        let back = PerfLog::parse(&text).unwrap();
+        assert_eq!(back, log);
+    }
+
+    #[test]
+    fn non_finite_gflops_serialises_as_zero() {
+        let mut log = PerfLog::new();
+        log.push(rec("bench_batch", "CSR", 4, 4, f64::INFINITY));
+        log.push(rec("bench_batch", "OPT", 4, 4, f64::NAN));
+        let back = PerfLog::parse(&log.to_json()).unwrap();
+        assert!(back.records.iter().all(|r| r.gflops == 0.0));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_records() {
+        assert!(PerfLog::parse("{\"records\": [{\"bench\": \"x\"}]}").is_err());
+        // no records at all is fine (empty artifact)
+        assert!(PerfLog::parse("{\"records\": []}").unwrap().records.is_empty());
+        assert!(PerfLog::parse("").unwrap().records.is_empty());
+    }
+
+    #[test]
+    fn merge_save_replaces_own_bench_only() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("perf_merge_test.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+
+        let mut a = PerfLog::new();
+        a.push(rec("bench_batch", "CSB", 16, 16, 5.0));
+        a.merge_save(path).unwrap();
+
+        let mut b = PerfLog::new();
+        b.push(rec("bench_schedule", "CSR", 64, 8, 4.0));
+        b.merge_save(path).unwrap();
+
+        // re-run bench_batch with a new number: replaces only its own
+        let mut a2 = PerfLog::new();
+        a2.push(rec("bench_batch", "CSB", 16, 16, 6.0));
+        a2.merge_save(path).unwrap();
+
+        let on_disk = PerfLog::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(on_disk.records.len(), 2);
+        let batch: Vec<_> =
+            on_disk.records.iter().filter(|r| r.bench == "bench_batch").collect();
+        assert_eq!(batch.len(), 1);
+        assert!((batch[0].gflops - 6.0).abs() < 1e-9);
+        assert!(on_disk.records.iter().any(|r| r.bench == "bench_schedule"));
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -6,30 +6,35 @@
 //! unit — MXU/AMX — see DESIGN.md §Hardware-Adaptation and the Pallas
 //! twin `bsr_spmm.py`). The cost is the padding FLOPs on zeros inside
 //! tiles: throughput in *useful* GFLOP/s is `fill_ratio ×` the dense
-//! rate, which the A1 ablation quantifies per structure.
+//! rate, which the A1 ablation quantifies per structure. The schedule
+//! balances block rows by stored-block count (the per-block work is
+//! constant) and applies the dense column tiles as everywhere else.
 
 use crate::error::Result;
 use crate::sparse::{Bsr, Csr};
 use crate::spmm::csr_kernel::RawRows;
-use crate::spmm::pool::parallel_chunks_dynamic;
-use crate::spmm::{check_dims, DenseMatrix, Impl, Spmm};
+use crate::spmm::schedule::{for_each_part, Schedule};
+use crate::spmm::{check_dims, check_schedule, DenseMatrix, Impl, Spmm};
 
 /// Block-row-parallel BSR SpMM kernel.
 pub struct BsrSpmm {
     a: Bsr,
-    threads: usize,
+    base: Schedule,
 }
 
 impl BsrSpmm {
     /// Convert from CSR with tile edge `bs` (4 or 8 are the sweet
     /// spots on AVX-512).
     pub fn from_csr(csr: &Csr, bs: usize, threads: usize) -> Self {
-        BsrSpmm { a: Bsr::from_csr(csr, bs), threads: threads.max(1) }
+        Self::new(Bsr::from_csr(csr, bs), threads)
     }
 
     /// Wrap an existing BSR matrix.
     pub fn new(a: Bsr, threads: usize) -> Self {
-        BsrSpmm { a, threads: threads.max(1) }
+        // block_row_ptr is already the work prefix sum: every stored
+        // block costs the same bs×bs×d multiply-accumulate
+        let base = Schedule::nnz_balanced(&a.block_row_ptr, threads.max(1));
+        BsrSpmm { a, base }
     }
 
     /// The underlying structure (fill statistics for reports).
@@ -53,24 +58,33 @@ impl Spmm for BsrSpmm {
     }
 
     fn execute(&self, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        self.execute_with(b, c, &self.base)
+    }
+
+    fn plan(&self, tile: Option<usize>) -> Schedule {
+        self.base.clone().with_tile(tile)
+    }
+
+    fn execute_with(&self, b: &DenseMatrix, c: &mut DenseMatrix, s: &Schedule) -> Result<()> {
         check_dims(self.a.nrows, self.a.ncols, b, c)?;
+        check_schedule(self.a.n_block_rows, s)?;
         let rows = RawRows::new(c);
         let a = &self.a;
         let bs = a.block_size;
-        let d = b.ncols;
-        parallel_chunks_dynamic(a.n_block_rows, self.threads, 1, |brange| {
+        for_each_part(s, b.ncols, |brange, cols| {
             for br in brange {
                 let row_lo = br * bs;
                 let row_hi = ((br + 1) * bs).min(a.nrows);
                 for r in row_lo..row_hi {
-                    // SAFETY: block rows own disjoint C windows.
-                    unsafe { rows.row(r) }.iter_mut().for_each(|x| *x = 0.0);
+                    // SAFETY: block rows own disjoint C windows, and
+                    // tiles are barrier-separated.
+                    unsafe { rows.row(r) }[cols.clone()].fill(0.0);
                 }
                 for k in a.block_row_ptr[br]..a.block_row_ptr[br + 1] {
                     let col_lo = a.block_col[k] as usize * bs;
                     let tile = a.block(k);
-                    // dense (bs×bs)·(bs×d): for each tile row, FMA over
-                    // tile cols into the C row
+                    // dense (bs×bs)·(bs×dt): for each tile row, FMA over
+                    // tile cols into the C row's column tile
                     for rr in 0..(row_hi - row_lo) {
                         // SAFETY: in this block row's window.
                         let crow = unsafe { rows.row(row_lo + rr) };
@@ -84,7 +98,7 @@ impl Spmm for BsrSpmm {
                                 break;
                             }
                             let brow = b.row(bcol);
-                            for x in 0..d {
+                            for x in cols.clone() {
                                 crow[x] += v * brow[x];
                             }
                         }
@@ -115,6 +129,22 @@ mod tests {
                 k.execute(&b, &mut c).unwrap();
                 assert!(c.max_abs_diff(&want) < 1e-12, "bs={bs} d={d}");
             }
+        }
+    }
+
+    #[test]
+    fn tiled_schedule_matches_reference() {
+        let mut rng = Prng::new(223);
+        let a = mesh2d(16, MeshKind::Triangular, 0.9, &mut rng);
+        let d = 18;
+        let b = DenseMatrix::random(a.ncols, d, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let k = BsrSpmm::from_csr(&a, 4, 2);
+        for dt in [1usize, 3, 8, 17, 18] {
+            let s = k.plan(Some(dt));
+            let mut c = DenseMatrix::from_vec(a.nrows, d, vec![-1.0; a.nrows * d]);
+            k.execute_with(&b, &mut c, &s).unwrap();
+            assert!(c.max_abs_diff(&want) < 1e-12, "dt={dt}");
         }
     }
 

@@ -5,34 +5,49 @@
 //! reads a `t`-row window of `B` (the cache tile the paper's blocked
 //! model charges `z` accesses for) and accumulates into the same
 //! `t`-row window of `C`, which stays hot in L2 across the whole block
-//! row. No atomics: block rows own disjoint `C` windows.
+//! row. No atomics: block rows own disjoint `C` windows. The schedule
+//! partitions block rows by their nnz (a prefix sum over the block-row
+//! structure), so a dense block row no longer weighs the same as an
+//! empty one, and column tiles bound the dense working set per pass.
 
 use crate::error::Result;
 use crate::sparse::{Csb, Csr};
 use crate::spmm::csr_kernel::{axpy_row, RawRows};
-use crate::spmm::pool::parallel_chunks_dynamic;
-use crate::spmm::{check_dims, DenseMatrix, Impl, Spmm};
+use crate::spmm::schedule::{for_each_part, Schedule};
+use crate::spmm::{check_dims, check_schedule, DenseMatrix, Impl, Spmm};
 
 /// Block-parallel CSB SpMM kernel.
 pub struct CsbSpmm {
     a: Csb,
-    threads: usize,
+    base: Schedule,
+}
+
+/// nnz prefix sum over block rows — the balance weights for the
+/// schedule.
+fn block_row_nnz_prefix(a: &Csb) -> Vec<usize> {
+    let mut prefix = vec![0usize; a.n_block_rows + 1];
+    for br in 0..a.n_block_rows {
+        let blk_nnz: usize = a.block_row(br).iter().map(|b| b.len()).sum();
+        prefix[br + 1] = prefix[br] + blk_nnz;
+    }
+    prefix
 }
 
 impl CsbSpmm {
     /// Convert from CSR with the default block size heuristic.
     pub fn from_csr(csr: &Csr, threads: usize) -> Self {
-        CsbSpmm { a: Csb::from_csr(csr), threads: threads.max(1) }
+        Self::new(Csb::from_csr(csr), threads)
     }
 
     /// Convert with an explicit block dimension (ablation hook).
     pub fn from_csr_with_block(csr: &Csr, block_dim: usize, threads: usize) -> Self {
-        CsbSpmm { a: Csb::from_csr_with_block(csr, block_dim), threads: threads.max(1) }
+        Self::new(Csb::from_csr_with_block(csr, block_dim), threads)
     }
 
     /// Wrap an existing CSB matrix.
     pub fn new(a: Csb, threads: usize) -> Self {
-        CsbSpmm { a, threads: threads.max(1) }
+        let base = Schedule::nnz_balanced(&block_row_nnz_prefix(&a), threads.max(1));
+        CsbSpmm { a, base }
     }
 
     /// The underlying CSB structure (planner / model hooks: `D`, `z`,
@@ -57,33 +72,45 @@ impl Spmm for CsbSpmm {
     }
 
     fn execute(&self, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        self.execute_with(b, c, &self.base)
+    }
+
+    fn plan(&self, tile: Option<usize>) -> Schedule {
+        self.base.clone().with_tile(tile)
+    }
+
+    fn execute_with(&self, b: &DenseMatrix, c: &mut DenseMatrix, s: &Schedule) -> Result<()> {
         check_dims(self.a.nrows, self.a.ncols, b, c)?;
+        check_schedule(self.a.n_block_rows, s)?;
         let rows = RawRows::new(c);
         let a = &self.a;
         let t = a.block_dim;
-        let d = b.ncols;
-        // one block row per claim: a block row is already t rows of C
-        parallel_chunks_dynamic(a.n_block_rows, self.threads, 1, |brange| {
+        // schedule units are block rows: a block row is already t rows
+        // of C, and its tile slice is owned by exactly one cell
+        for_each_part(s, b.ncols, |brange, cols| {
+            let w = cols.len();
+            let p = cols.start;
             for br in brange {
                 let row_base = br * t;
                 let row_end = ((br + 1) * t).min(a.nrows);
-                // zero this block row of C
+                // zero this block row's slice of C
                 for r in row_base..row_end {
-                    // SAFETY: block rows own disjoint C row windows.
-                    unsafe { rows.row(r) }.iter_mut().for_each(|x| *x = 0.0);
+                    // SAFETY: block rows own disjoint C row windows,
+                    // and tiles are barrier-separated.
+                    unsafe { rows.row(r) }[cols.clone()].fill(0.0);
                 }
                 for blk in a.block_row(br) {
                     let col_base = blk.bcol as usize * t;
                     // Entries are (rel_row, rel_col)-sorted: process runs
                     // of equal rel_row with register accumulators (the
-                    // same trick as OPT), monomorphised per small d.
-                    match d {
-                        1 => block_kernel_const::<1>(a, blk, row_base, col_base, b, &rows),
-                        2 => block_kernel_const::<2>(a, blk, row_base, col_base, b, &rows),
-                        4 => block_kernel_const::<4>(a, blk, row_base, col_base, b, &rows),
-                        8 => block_kernel_const::<8>(a, blk, row_base, col_base, b, &rows),
-                        16 => block_kernel_const::<16>(a, blk, row_base, col_base, b, &rows),
-                        _ => block_kernel_general(a, blk, row_base, col_base, b, &rows),
+                    // same trick as OPT), monomorphised per small tile.
+                    match w {
+                        1 => block_kernel_const::<1>(a, blk, row_base, col_base, b, &rows, p),
+                        2 => block_kernel_const::<2>(a, blk, row_base, col_base, b, &rows, p),
+                        4 => block_kernel_const::<4>(a, blk, row_base, col_base, b, &rows, p),
+                        8 => block_kernel_const::<8>(a, blk, row_base, col_base, b, &rows, p),
+                        16 => block_kernel_const::<16>(a, blk, row_base, col_base, b, &rows, p),
+                        _ => block_kernel_general(a, blk, row_base, col_base, b, &rows, &cols),
                     }
                 }
             }
@@ -92,9 +119,9 @@ impl Spmm for CsbSpmm {
     }
 }
 
-/// Run-accumulating block kernel for compile-time width `D`: C's row
-/// stays in `D` registers across a run of same-row entries and is
-/// flushed once per run.
+/// Run-accumulating block kernel for a compile-time tile width `D`
+/// starting at dense column `p`: C's row tile stays in `D` registers
+/// across a run of same-row entries and is flushed once per run.
 #[inline(always)]
 fn block_kernel_const<const D: usize>(
     a: &Csb,
@@ -103,6 +130,7 @@ fn block_kernel_const<const D: usize>(
     col_base: usize,
     b: &DenseMatrix,
     rows: &RawRows,
+    p: usize,
 ) {
     let mut i = blk.start;
     while i < blk.end {
@@ -110,7 +138,7 @@ fn block_kernel_const<const D: usize>(
         let mut acc = [0.0f64; D];
         while i < blk.end && a.rel_row[i] == r {
             let v = a.vals[i];
-            let brow = b.row(col_base + a.rel_col[i] as usize);
+            let brow = &b.row(col_base + a.rel_col[i] as usize)[p..p + D];
             for k in 0..D {
                 acc[k] += v * brow[k];
             }
@@ -119,13 +147,13 @@ fn block_kernel_const<const D: usize>(
         // SAFETY: r is inside this block row's window.
         let crow = unsafe { rows.row(row_base + r as usize) };
         for k in 0..D {
-            crow[k] += acc[k];
+            crow[p + k] += acc[k];
         }
     }
 }
 
-/// General-d fallback: same run detection, accumulate through the
-/// (cache-resident) C row directly.
+/// General-width fallback: same run detection, panel accumulators over
+/// the tile's column range.
 #[inline(always)]
 fn block_kernel_general(
     a: &Csb,
@@ -134,9 +162,9 @@ fn block_kernel_general(
     col_base: usize,
     b: &DenseMatrix,
     rows: &RawRows,
+    cols: &std::ops::Range<usize>,
 ) {
     const PANEL: usize = 16;
-    let d = b.ncols;
     let mut i = blk.start;
     while i < blk.end {
         let r = a.rel_row[i];
@@ -146,9 +174,9 @@ fn block_kernel_general(
         }
         // SAFETY: r is inside this block row's window.
         let crow = unsafe { rows.row(row_base + r as usize) };
-        let mut p = 0;
-        while p < d {
-            let w = PANEL.min(d - p);
+        let mut p = cols.start;
+        while p < cols.end {
+            let w = PANEL.min(cols.end - p);
             if w == PANEL {
                 let mut acc = [0.0f64; PANEL];
                 for j in run_start..i {
@@ -207,6 +235,22 @@ mod tests {
             let mut c = DenseMatrix::zeros(a.nrows, d);
             k.execute(&b, &mut c).unwrap();
             assert!(c.max_abs_diff(&want) < 1e-12, "d={d}");
+        }
+    }
+
+    #[test]
+    fn tiled_schedule_matches_reference() {
+        let mut rng = Prng::new(84);
+        let a = mesh2d(20, MeshKind::Triangular, 0.9, &mut rng);
+        let d = 33;
+        let b = DenseMatrix::random(a.ncols, d, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let k = CsbSpmm::from_csr_with_block(&a, 64, 3);
+        for dt in [1usize, 2, 5, 8, 16, 32, 33] {
+            let s = k.plan(Some(dt));
+            let mut c = DenseMatrix::from_vec(a.nrows, d, vec![11.0; a.nrows * d]);
+            k.execute_with(&b, &mut c, &s).unwrap();
+            assert!(c.max_abs_diff(&want) < 1e-12, "dt={dt}");
         }
     }
 

@@ -1,38 +1,42 @@
 //! Textbook row-parallel CSR SpMM — the paper's "CSR" column.
 //!
 //! One pass over the rows; each nonzero `(r, c, v)` does
-//! `C[r, :] += v * B[c, :]`. Rows are distributed over threads in
-//! dynamically claimed chunks so skewed matrices stay balanced.
+//! `C[r, :] += v * B[c, :]`. Execution consumes a precomputed
+//! [`Schedule`]: partitions are nnz-balanced over `row_ptr` and claimed
+//! dynamically, so skewed matrices stay balanced, and the dense
+//! operands are processed in column tiles when the schedule carries
+//! one.
 
 use crate::error::Result;
 use crate::sparse::Csr;
-use crate::spmm::pool::{default_chunk, parallel_chunks_dynamic};
-use crate::spmm::{check_dims, DenseMatrix, Impl, Spmm};
+use crate::spmm::schedule::{for_each_part, Schedule};
+use crate::spmm::{check_dims, check_schedule, DenseMatrix, Impl, Spmm};
 
-/// `C[r,:] += v * B[c,:]` over a d-wide row. Manual 4-way unroll; LLVM
-/// vectorises the remainder-free body with AVX2 on this target.
+/// `C[r,:] += v * B[c,:]` over a d-wide row (or row tile). 4-wide
+/// chunks with a scalar remainder; LLVM vectorises the chunked body
+/// with AVX2 on this target.
 #[inline(always)]
 pub(crate) fn axpy_row(c: &mut [f64], b: &[f64], v: f64) {
-    let d = c.len();
-    debug_assert_eq!(d, b.len());
-    let mut k = 0;
-    while k + 4 <= d {
-        c[k] += v * b[k];
-        c[k + 1] += v * b[k + 1];
-        c[k + 2] += v * b[k + 2];
-        c[k + 3] += v * b[k + 3];
-        k += 4;
+    debug_assert_eq!(c.len(), b.len());
+    let mut cq = c.chunks_exact_mut(4);
+    let mut bq = b.chunks_exact(4);
+    for (cc, bb) in (&mut cq).zip(&mut bq) {
+        cc[0] += v * bb[0];
+        cc[1] += v * bb[1];
+        cc[2] += v * bb[2];
+        cc[3] += v * bb[3];
     }
-    while k < d {
-        c[k] += v * b[k];
-        k += 1;
+    for (cc, bb) in cq.into_remainder().iter_mut().zip(bq.remainder()) {
+        *cc += v * bb;
     }
 }
 
-/// Shared-pointer shim: lets scoped worker threads write *disjoint* row
-/// ranges of `C` without locks. Soundness argument: every scheduling
-/// primitive in [`crate::spmm::pool`] hands each index range to exactly
-/// one worker, and kernels only write `C` rows inside their range.
+/// Shared-pointer shim: lets scoped worker threads write *disjoint*
+/// regions of `C` without locks. Soundness argument: the schedule
+/// executor ([`for_each_part`]) hands each (partition × column tile)
+/// cell to exactly one worker, with a barrier between tiles, and
+/// kernels only write `C` rows inside their partition (and, when
+/// tiled, only the tile's column range).
 #[derive(Clone, Copy)]
 pub(crate) struct RawRows {
     ptr: *mut f64,
@@ -46,7 +50,7 @@ impl RawRows {
         RawRows { ptr: c.data.as_mut_ptr(), ncols: c.ncols }
     }
     /// Mutable view of row `r`. Caller must hold exclusive logical
-    /// ownership of row `r`.
+    /// ownership of row `r` (or of the slice of it it writes).
     #[inline(always)]
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn row(&self, r: usize) -> &mut [f64] {
@@ -57,13 +61,16 @@ impl RawRows {
 /// Row-parallel CSR SpMM kernel.
 pub struct CsrSpmm {
     a: Csr,
-    threads: usize,
+    /// Untiled nnz-balanced base schedule, precomputed at construction
+    /// (carries the thread count).
+    base: Schedule,
 }
 
 impl CsrSpmm {
     /// Wrap a CSR matrix; `threads` worker threads at execute time.
     pub fn new(a: Csr, threads: usize) -> Self {
-        CsrSpmm { a, threads: threads.max(1) }
+        let base = Schedule::nnz_balanced(&a.row_ptr, threads.max(1));
+        CsrSpmm { a, base }
     }
 
     /// Borrow the underlying matrix (used by the planner for stats).
@@ -87,17 +94,26 @@ impl Spmm for CsrSpmm {
     }
 
     fn execute(&self, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        self.execute_with(b, c, &self.base)
+    }
+
+    fn plan(&self, tile: Option<usize>) -> Schedule {
+        self.base.clone().with_tile(tile)
+    }
+
+    fn execute_with(&self, b: &DenseMatrix, c: &mut DenseMatrix, s: &Schedule) -> Result<()> {
         check_dims(self.a.nrows, self.a.ncols, b, c)?;
+        check_schedule(self.a.nrows, s)?;
         let rows = RawRows::new(c);
         let a = &self.a;
-        let chunk = default_chunk(a.nrows, self.threads);
-        parallel_chunks_dynamic(a.nrows, self.threads, chunk, |range| {
+        for_each_part(s, b.ncols, |range, cols| {
             for r in range {
-                // SAFETY: each row index is claimed by exactly one chunk.
+                // SAFETY: each (row, tile) cell is claimed exactly once.
                 let crow = unsafe { rows.row(r) };
-                crow.iter_mut().for_each(|x| *x = 0.0);
+                let ct = &mut crow[cols.clone()];
+                ct.fill(0.0);
                 for (ci, v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
-                    axpy_row(crow, b.row(*ci as usize), *v);
+                    axpy_row(ct, &b.row(*ci as usize)[cols.clone()], *v);
                 }
             }
         });
@@ -128,6 +144,22 @@ mod tests {
     }
 
     #[test]
+    fn tiled_schedule_matches_reference() {
+        let mut rng = Prng::new(63);
+        let a = erdos_renyi(200, 200, 5.0, &mut rng);
+        let d = 13;
+        let b = DenseMatrix::random(200, d, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let k = CsrSpmm::new(a, 2);
+        for dt in [1usize, 3, 4, 12, 13, 64] {
+            let s = k.plan(Some(dt));
+            let mut c = DenseMatrix::from_vec(200, d, vec![7.0; 200 * d]);
+            k.execute_with(&b, &mut c, &s).unwrap();
+            assert!(c.max_abs_diff(&want) < 1e-12, "dt={dt}");
+        }
+    }
+
+    #[test]
     fn overwrites_stale_c() {
         let mut rng = Prng::new(61);
         let a = erdos_renyi(50, 50, 3.0, &mut rng);
@@ -149,6 +181,16 @@ mod tests {
         let b = DenseMatrix::zeros(10, 4);
         let mut c = DenseMatrix::zeros(10, 5);
         assert!(k.execute(&b, &mut c).is_err());
+    }
+
+    #[test]
+    fn mismatched_schedule_rejected() {
+        let a = erdos_renyi(10, 10, 2.0, &mut Prng::new(64));
+        let k = CsrSpmm::new(a, 1);
+        let b = DenseMatrix::zeros(10, 4);
+        let mut c = DenseMatrix::zeros(10, 4);
+        let foreign = Schedule::uniform(11, 1);
+        assert!(k.execute_with(&b, &mut c, &foreign).is_err());
     }
 
     #[test]

@@ -6,29 +6,34 @@
 //! exists (a) to sanity-check the PJRT path against a native
 //! implementation with the same memory behaviour and (b) to quantify
 //! the padding tax the static-shape AOT route pays on skewed matrices.
+//!
+//! The schedule's partitions are uniform over rows — for padded ELL
+//! every row does exactly `width` slots of work, so the uniform split
+//! *is* the nnz-balanced one — and column tiles apply as in CSR.
 
 use crate::error::Result;
 use crate::sparse::{Csr, Ell};
 use crate::spmm::csr_kernel::{axpy_row, RawRows};
-use crate::spmm::pool::{default_chunk, parallel_chunks_dynamic};
-use crate::spmm::{check_dims, DenseMatrix, Impl, Spmm};
+use crate::spmm::schedule::{for_each_part, Schedule};
+use crate::spmm::{check_dims, check_schedule, DenseMatrix, Impl, Spmm};
 
 /// Row-parallel padded-ELL SpMM kernel.
 pub struct EllSpmm {
     a: Ell,
-    threads: usize,
+    base: Schedule,
 }
 
 impl EllSpmm {
     /// Convert from CSR at the minimum padding width.
     pub fn from_csr(csr: &Csr, threads: usize) -> Self {
-        EllSpmm { a: Ell::from_csr(csr), threads: threads.max(1) }
+        Self::new(Ell::from_csr(csr), threads)
     }
 
     /// Wrap an existing ELL matrix (e.g. the exact array set shipped to
     /// the XLA artifact).
     pub fn new(a: Ell, threads: usize) -> Self {
-        EllSpmm { a, threads: threads.max(1) }
+        let base = Schedule::uniform(a.nrows, threads.max(1));
+        EllSpmm { a, base }
     }
 
     /// Underlying ELL structure (padding statistics for reports).
@@ -52,22 +57,32 @@ impl Spmm for EllSpmm {
     }
 
     fn execute(&self, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        self.execute_with(b, c, &self.base)
+    }
+
+    fn plan(&self, tile: Option<usize>) -> Schedule {
+        self.base.clone().with_tile(tile)
+    }
+
+    fn execute_with(&self, b: &DenseMatrix, c: &mut DenseMatrix, s: &Schedule) -> Result<()> {
         check_dims(self.a.nrows, self.a.ncols, b, c)?;
+        check_schedule(self.a.nrows, s)?;
         let rows = RawRows::new(c);
         let a = &self.a;
         let w = a.width;
-        let chunk = default_chunk(a.nrows, self.threads);
-        parallel_chunks_dynamic(a.nrows, self.threads, chunk, |range| {
+        for_each_part(s, b.ncols, |range, cols| {
             for r in range {
-                // SAFETY: disjoint row ownership per chunk.
+                // SAFETY: disjoint (row, tile) ownership per cell.
                 let crow = unsafe { rows.row(r) };
-                crow.iter_mut().for_each(|x| *x = 0.0);
+                let ct = &mut crow[cols.clone()];
+                ct.fill(0.0);
                 let base = r * w;
                 for k in 0..w {
                     let v = a.vals[base + k];
                     // padding slots have v == 0.0; branch-free axpy is
                     // cheaper than a branch at ELL's typical widths
-                    axpy_row(crow, b.row(a.col_idx[base + k] as usize), v);
+                    let brow = &b.row(a.col_idx[base + k] as usize)[cols.clone()];
+                    axpy_row(ct, brow, v);
                 }
             }
         });
@@ -92,6 +107,22 @@ mod tests {
             let mut c = DenseMatrix::zeros(200, d);
             k.execute(&b, &mut c).unwrap();
             assert!(c.max_abs_diff(&want) < 1e-12, "d={d}");
+        }
+    }
+
+    #[test]
+    fn tiled_schedule_matches_reference() {
+        let mut rng = Prng::new(92);
+        let a = erdos_renyi(150, 150, 4.0, &mut rng);
+        let d = 10;
+        let b = DenseMatrix::random(150, d, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let k = EllSpmm::from_csr(&a, 2);
+        for dt in [1usize, 3, 9, 10] {
+            let s = k.plan(Some(dt));
+            let mut c = DenseMatrix::from_vec(150, d, vec![2.5; 150 * d]);
+            k.execute_with(&b, &mut c, &s).unwrap();
+            assert!(c.max_abs_diff(&want) < 1e-12, "dt={dt}");
         }
     }
 

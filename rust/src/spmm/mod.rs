@@ -14,7 +14,9 @@
 //! All native kernels parallelise over the persistent, process-wide
 //! worker pool ([`pool`]): threads are spawned once and parked between
 //! calls, so the hot path pays no spawn/join churn (see `DESIGN.md`
-//! §Execution-Model).
+//! §Execution-Model). Execution is plan/execute split: kernels consume
+//! a precomputed [`Schedule`] (nnz-balanced partitions + model-chosen
+//! column tiles, see [`schedule`]) instead of chunking ad hoc.
 //!
 //! A sixth implementation, `runtime::XlaSpmm`, executes the AOT-compiled
 //! JAX/Pallas artifact through PJRT and plugs into the same [`Spmm`]
@@ -27,6 +29,7 @@ mod dense;
 mod ell_kernel;
 mod opt_kernel;
 pub mod pool;
+pub mod schedule;
 
 pub use bsr_kernel::BsrSpmm;
 pub use csb_kernel::CsbSpmm;
@@ -34,6 +37,7 @@ pub use csr_kernel::CsrSpmm;
 pub use dense::DenseMatrix;
 pub use ell_kernel::EllSpmm;
 pub use opt_kernel::OptSpmm;
+pub use schedule::Schedule;
 
 use crate::error::{Error, Result};
 use crate::sparse::Csr;
@@ -84,7 +88,12 @@ impl std::fmt::Display for Impl {
 ///
 /// `prepare` is the one-time format conversion (outside the timed
 /// region, as in the paper, which excludes loading and initialization);
-/// `execute` is the hot path.
+/// `execute` is the hot path. Execution is split plan/execute: native
+/// kernels precompute an nnz-balanced [`Schedule`] at construction and
+/// consume a `&Schedule` at execute time ([`Spmm::execute_with`]);
+/// `execute` runs over the kernel's own base (untiled) schedule. The
+/// coordinator caches tiled schedules per `(matrix, impl, threads, d)`
+/// and calls `execute_with` directly.
 pub trait Spmm: Send + Sync {
     /// Which implementation this is.
     fn id(&self) -> Impl;
@@ -96,6 +105,39 @@ pub trait Spmm: Send + Sync {
     fn nnz(&self) -> usize;
     /// Compute `C = A·B`. `B.nrows == self.ncols`, `C` is overwritten.
     fn execute(&self, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()>;
+
+    /// Build an execution schedule for this kernel with an optional
+    /// forced column-tile width (`None` = untiled). Native kernels
+    /// return their precomputed nnz-balanced partitions; the default
+    /// (backends that manage their own execution, e.g. XLA) is a
+    /// serial untiled row schedule.
+    fn plan(&self, tile: Option<usize>) -> Schedule {
+        Schedule::uniform(self.nrows(), 1).with_tile(tile)
+    }
+
+    /// Compute `C = A·B` over a precomputed schedule. The default
+    /// ignores the schedule and defers to [`Spmm::execute`] (backends
+    /// whose execution is opaque, e.g. XLA artifacts).
+    fn execute_with(
+        &self,
+        b: &DenseMatrix,
+        c: &mut DenseMatrix,
+        _schedule: &Schedule,
+    ) -> Result<()> {
+        self.execute(b, c)
+    }
+}
+
+/// Shared guard for schedule-consuming kernels: the schedule must
+/// partition exactly this kernel's parallel units.
+pub(crate) fn check_schedule(units: usize, s: &Schedule) -> Result<()> {
+    if s.units() != units {
+        return Err(Error::DimensionMismatch(format!(
+            "schedule covers {} units but kernel has {units}",
+            s.units()
+        )));
+    }
+    Ok(())
 }
 
 /// Shape-check shared by all kernels.

@@ -7,36 +7,48 @@
 //! width, and (c) 2-way nonzero unrolling to hide load latency. This
 //! kernel implements the same three techniques:
 //!
-//! * `d ∈ {1, 2, 4, 8}`: fixed-size register accumulator arrays, fully
-//!   unrolled (monomorphised through `const D: usize`).
-//! * larger `d`: column panels of 16 with a register-resident
+//! * tile width `∈ {1, 2, 4, 8}`: fixed-size register accumulator
+//!   arrays, fully unrolled (monomorphised through `const D: usize`).
+//! * larger widths: column panels of 16 with a register-resident
 //!   accumulator tile per panel (A row values re-read from L1, B rows
 //!   re-gathered per panel — the classic MKL/`mkl_sparse_d_mm` column
 //!   blocking).
+//!
+//! Execution consumes a precomputed [`Schedule`]: the register kernels
+//! are dispatched on the *tile* width, so a schedule whose tile is 4 or
+//! 8 wide runs the fully unrolled path even at large `d`.
 
 use crate::error::Result;
 use crate::sparse::Csr;
 use crate::spmm::csr_kernel::RawRows;
-use crate::spmm::pool::{default_chunk, parallel_chunks_dynamic};
-use crate::spmm::{check_dims, DenseMatrix, Impl, Spmm};
+use crate::spmm::schedule::{for_each_part, Schedule};
+use crate::spmm::{check_dims, check_schedule, DenseMatrix, Impl, Spmm};
 
 /// Register-blocked CSR SpMM (the MKL stand-in).
 pub struct OptSpmm {
     a: Csr,
-    threads: usize,
+    base: Schedule,
 }
 
 impl OptSpmm {
     /// Wrap a CSR matrix.
     pub fn new(a: Csr, threads: usize) -> Self {
-        OptSpmm { a, threads: threads.max(1) }
+        let base = Schedule::nnz_balanced(&a.row_ptr, threads.max(1));
+        OptSpmm { a, base }
     }
 }
 
-/// Fully unrolled row kernel for a compile-time width `D`: the C row
-/// lives in `D` registers for the whole row.
+/// Fully unrolled row kernel for a compile-time width `D`: the
+/// `D`-wide tile of the C row (starting at dense column `p`) lives in
+/// `D` registers for the whole row.
 #[inline(always)]
-fn row_kernel_const<const D: usize>(a: &Csr, r: usize, b: &DenseMatrix, crow: &mut [f64]) {
+fn row_kernel_const<const D: usize>(
+    a: &Csr,
+    r: usize,
+    b: &DenseMatrix,
+    ct: &mut [f64],
+    p: usize,
+) {
     let mut acc = [0.0f64; D];
     let cols = a.row_cols(r);
     let vals = a.row_vals(r);
@@ -45,8 +57,8 @@ fn row_kernel_const<const D: usize>(a: &Csr, r: usize, b: &DenseMatrix, crow: &m
     while i + 2 <= cols.len() {
         let v0 = vals[i];
         let v1 = vals[i + 1];
-        let b0 = b.row(cols[i] as usize);
-        let b1 = b.row(cols[i + 1] as usize);
+        let b0 = &b.row(cols[i] as usize)[p..p + D];
+        let b1 = &b.row(cols[i + 1] as usize)[p..p + D];
         for k in 0..D {
             acc[k] += v0 * b0[k] + v1 * b1[k];
         }
@@ -54,46 +66,43 @@ fn row_kernel_const<const D: usize>(a: &Csr, r: usize, b: &DenseMatrix, crow: &m
     }
     if i < cols.len() {
         let v = vals[i];
-        let brow = b.row(cols[i] as usize);
+        let brow = &b.row(cols[i] as usize)[p..p + D];
         for k in 0..D {
             acc[k] += v * brow[k];
         }
     }
-    crow[..D].copy_from_slice(&acc);
+    ct[..D].copy_from_slice(&acc);
 }
 
-/// Panelled kernel for arbitrary d: process `PANEL`-wide column panels
-/// with a register accumulator tile; A's row entries replay from L1.
+/// Panelled kernel for an arbitrary-width tile: process `PANEL`-wide
+/// column panels with a register accumulator tile; A's row entries
+/// replay from L1. `ct` is the tile of the C row starting at dense
+/// column `p`.
 #[inline(always)]
-fn row_kernel_panel(a: &Csr, r: usize, b: &DenseMatrix, crow: &mut [f64]) {
+fn row_kernel_panel(a: &Csr, r: usize, b: &DenseMatrix, ct: &mut [f64], p: usize) {
     const PANEL: usize = 16;
-    let d = crow.len();
+    let w_total = ct.len();
     let cols = a.row_cols(r);
     let vals = a.row_vals(r);
-    let mut p = 0;
-    while p < d {
-        let w = PANEL.min(d - p);
-        if w == PANEL {
-            let mut acc = [0.0f64; PANEL];
-            for (ci, v) in cols.iter().zip(vals) {
-                let brow = &b.row(*ci as usize)[p..p + PANEL];
+    let mut q = 0;
+    while q < w_total {
+        let w = PANEL.min(w_total - q);
+        let mut acc = [0.0f64; PANEL];
+        for (ci, v) in cols.iter().zip(vals) {
+            let brow = &b.row(*ci as usize)[p + q..p + q + w];
+            if w == PANEL {
                 for k in 0..PANEL {
                     acc[k] += v * brow[k];
                 }
-            }
-            crow[p..p + PANEL].copy_from_slice(&acc);
-        } else {
-            // ragged tail panel
-            let mut acc = [0.0f64; PANEL];
-            for (ci, v) in cols.iter().zip(vals) {
-                let brow = &b.row(*ci as usize)[p..p + w];
+            } else {
+                // ragged tail panel
                 for (k, bv) in brow.iter().enumerate() {
                     acc[k] += v * bv;
                 }
             }
-            crow[p..p + w].copy_from_slice(&acc[..w]);
         }
-        p += w;
+        ct[q..q + w].copy_from_slice(&acc[..w]);
+        q += w;
     }
 }
 
@@ -112,21 +121,30 @@ impl Spmm for OptSpmm {
     }
 
     fn execute(&self, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        self.execute_with(b, c, &self.base)
+    }
+
+    fn plan(&self, tile: Option<usize>) -> Schedule {
+        self.base.clone().with_tile(tile)
+    }
+
+    fn execute_with(&self, b: &DenseMatrix, c: &mut DenseMatrix, s: &Schedule) -> Result<()> {
         check_dims(self.a.nrows, self.a.ncols, b, c)?;
-        let d = b.ncols;
+        check_schedule(self.a.nrows, s)?;
         let rows = RawRows::new(c);
         let a = &self.a;
-        let chunk = default_chunk(a.nrows, self.threads);
-        parallel_chunks_dynamic(a.nrows, self.threads, chunk, |range| {
+        for_each_part(s, b.ncols, |range, cols| {
+            let w = cols.len();
             for r in range {
-                // SAFETY: disjoint row ownership per chunk (see RawRows).
+                // SAFETY: disjoint (row, tile) ownership per cell.
                 let crow = unsafe { rows.row(r) };
-                match d {
-                    1 => row_kernel_const::<1>(a, r, b, crow),
-                    2 => row_kernel_const::<2>(a, r, b, crow),
-                    4 => row_kernel_const::<4>(a, r, b, crow),
-                    8 => row_kernel_const::<8>(a, r, b, crow),
-                    _ => row_kernel_panel(a, r, b, crow),
+                let ct = &mut crow[cols.clone()];
+                match w {
+                    1 => row_kernel_const::<1>(a, r, b, ct, cols.start),
+                    2 => row_kernel_const::<2>(a, r, b, ct, cols.start),
+                    4 => row_kernel_const::<4>(a, r, b, ct, cols.start),
+                    8 => row_kernel_const::<8>(a, r, b, ct, cols.start),
+                    _ => row_kernel_panel(a, r, b, ct, cols.start),
                 }
             }
         });
@@ -151,6 +169,23 @@ mod tests {
             let mut c = DenseMatrix::zeros(257, d);
             k.execute(&b, &mut c).unwrap();
             assert!(c.max_abs_diff(&want) < 1e-12, "d={d}");
+        }
+    }
+
+    #[test]
+    fn tiled_register_paths_match_reference() {
+        // tile widths hit every dispatch arm: const 1/2/4/8 and panel
+        let mut rng = Prng::new(73);
+        let a = erdos_renyi(150, 150, 6.0, &mut rng);
+        let d = 21;
+        let b = DenseMatrix::random(150, d, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let k = OptSpmm::new(a, 2);
+        for dt in [1usize, 2, 4, 8, 16, 20, 21] {
+            let s = k.plan(Some(dt));
+            let mut c = DenseMatrix::from_vec(150, d, vec![-3.0; 150 * d]);
+            k.execute_with(&b, &mut c, &s).unwrap();
+            assert!(c.max_abs_diff(&want) < 1e-12, "dt={dt}");
         }
     }
 

@@ -1,0 +1,298 @@
+//! The schedule layer: plan/execute split for every native SpMM
+//! kernel.
+//!
+//! The paper's core claim is that blocking and data layout change the
+//! *effective* arithmetic intensity of SpMM — so execution, not just
+//! analysis, must be structure-aware. Before this layer existed every
+//! kernel re-derived a uniform row chunking per call
+//! (`pool::default_chunk`) and streamed the full `n × d` dense `B`,
+//! falling off the cache cliff the cache-aware model predicts at large
+//! `d`. A [`Schedule`] precomputes the two decisions that matter:
+//!
+//! * **Row partitions balanced by nnz** — a prefix-sum split over
+//!   `row_ptr` (or the block-row equivalent), not row count, so one hub
+//!   row of a scale-free matrix can no longer serialise a thread while
+//!   its siblings finish early. Partitions are claimed dynamically, so
+//!   the balance target is per-claim granularity, not per-thread
+//!   totals.
+//! * **Column tiles of `B`/`C`** — the dense operands are processed in
+//!   `dt`-wide column panels so each panel's `B` working set
+//!   (`8·n·dt` bytes) fits the calibrated cache level. `dt` is chosen
+//!   by the planner from the tile-aware AI model
+//!   ([`crate::model::SparsityModel::ai_tiled`]); `dt = d` (untiled)
+//!   reproduces the pre-schedule behaviour exactly.
+//!
+//! Kernels *consume* a `&Schedule` ([`crate::spmm::Spmm::execute_with`])
+//! instead of chunking ad hoc; `Spmm::execute` runs over a base
+//! schedule precomputed at kernel construction (untiled, nnz-balanced),
+//! and the coordinator caches tiled schedules per
+//! `(matrix, impl, threads, d)` so repeated and batched submissions pay
+//! planning cost once (see `coordinator/registry.rs`).
+
+use std::ops::Range;
+
+use crate::spmm::pool::{parallel_chunks_dynamic, split_ranges};
+
+/// Target partitions per thread: matches the ~8-chunks-per-thread
+/// granularity `pool::default_chunk` used, but with nnz-balanced
+/// boundaries instead of uniform row counts.
+const PARTS_PER_THREAD: usize = 8;
+
+/// A precomputed SpMM execution schedule: nnz-balanced partitions over
+/// the kernel's parallel units (rows, or block rows for CSB/BSR) plus
+/// an optional column-tile width for the dense operands.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    /// Partition boundaries: partition `i` covers units
+    /// `parts[i]..parts[i+1]`. Always `parts[0] == 0` and
+    /// `parts.last() == units`; empty partitions are legal (a hub unit
+    /// heavier than the balance target leaves its neighbours empty) and
+    /// are skipped at execute time.
+    parts: Vec<usize>,
+    /// Column-tile width `dt` for `B`/`C`; `None` executes the full
+    /// dense width in one pass (the pre-schedule behaviour).
+    pub tile: Option<usize>,
+    /// Worker threads the schedule was planned for.
+    pub threads: usize,
+}
+
+impl Schedule {
+    /// Partition `[0, units)` by the work prefix sum `prefix`
+    /// (`prefix.len() == units + 1`, monotone; `row_ptr` is exactly
+    /// this shape): each partition receives ≈ `total / n_parts` work
+    /// units of nnz. Falls back to a uniform split when the matrix has
+    /// no stored work (`total == 0`).
+    pub fn nnz_balanced(prefix: &[usize], threads: usize) -> Schedule {
+        assert!(!prefix.is_empty(), "prefix must have len units+1");
+        let units = prefix.len() - 1;
+        let threads = threads.max(1);
+        let total = prefix[units];
+        if total == 0 {
+            return Schedule::uniform(units, threads);
+        }
+        let n_parts = (threads * PARTS_PER_THREAD).min(units).max(1);
+        let mut parts = Vec::with_capacity(n_parts + 1);
+        parts.push(0usize);
+        for k in 1..n_parts {
+            // smallest boundary whose prefix reaches the k-th work
+            // quantile, clamped monotone so coverage stays exact
+            let target = ((total as u128 * k as u128) / n_parts as u128) as usize;
+            let b = prefix.partition_point(|&x| x < target);
+            let prev = *parts.last().unwrap();
+            parts.push(b.clamp(prev, units));
+        }
+        parts.push(units);
+        Schedule { parts, tile: None, threads }
+    }
+
+    /// Uniform partition of `[0, units)` — the right "nnz balance" for
+    /// formats whose per-unit work is constant by construction (padded
+    /// ELL rows). Boundaries come from the pool's canonical near-equal
+    /// split ([`split_ranges`]), so the two conventions cannot diverge.
+    pub fn uniform(units: usize, threads: usize) -> Schedule {
+        let threads = threads.max(1);
+        let n_parts = (threads * PARTS_PER_THREAD).min(units).max(1);
+        let mut parts = Vec::with_capacity(n_parts + 1);
+        parts.push(0usize);
+        // n_parts ≤ units, so every range is non-empty and contiguous
+        for r in split_ranges(units, n_parts) {
+            parts.push(r.end);
+        }
+        if parts.len() == 1 {
+            parts.push(units); // units == 0: keep the [0, 0] shape
+        }
+        Schedule { parts, tile: None, threads }
+    }
+
+    /// Attach (or clear) a column-tile width. Widths ≥ the dense width
+    /// at execute time behave as untiled.
+    pub fn with_tile(mut self, tile: Option<usize>) -> Schedule {
+        self.tile = tile.filter(|&t| t > 0);
+        self
+    }
+
+    /// Number of partitions.
+    pub fn n_parts(&self) -> usize {
+        self.parts.len() - 1
+    }
+
+    /// Unit range of partition `i`.
+    pub fn part(&self, i: usize) -> Range<usize> {
+        self.parts[i]..self.parts[i + 1]
+    }
+
+    /// Total units covered (`nrows` for row kernels, `n_block_rows`
+    /// for block kernels).
+    pub fn units(&self) -> usize {
+        *self.parts.last().unwrap()
+    }
+
+    /// Effective column-tile width at dense width `d`.
+    pub fn tile_width(&self, d: usize) -> usize {
+        self.tile.unwrap_or(d).clamp(1, d.max(1))
+    }
+
+    /// Number of column tiles at dense width `d`.
+    pub fn n_tiles(&self, d: usize) -> usize {
+        if d == 0 {
+            0
+        } else {
+            d.div_ceil(self.tile_width(d))
+        }
+    }
+
+    /// The column ranges the tiles cover at dense width `d`.
+    pub fn col_tiles(&self, d: usize) -> Vec<Range<usize>> {
+        let tw = self.tile_width(d);
+        let mut out = Vec::with_capacity(self.n_tiles(d));
+        let mut p = 0;
+        while p < d {
+            let end = (p + tw).min(d);
+            out.push(p..end);
+            p = end;
+        }
+        out
+    }
+}
+
+/// Execute `f(unit_range, col_range)` over every (partition × column
+/// tile) cell of the schedule at dense width `d`.
+///
+/// Tiles run serially with a full barrier between them (each tile is
+/// one pool job); partitions within a tile are claimed dynamically by
+/// up to `schedule.threads` workers. Consequently two concurrent `f`
+/// calls always carry the *same* `col_range` and **disjoint**
+/// `unit_range`s — the disjointness contract kernels rely on to write
+/// `C` without synchronisation. Empty partitions are skipped.
+pub fn for_each_part<F>(schedule: &Schedule, d: usize, f: F)
+where
+    F: Fn(Range<usize>, Range<usize>) + Sync,
+{
+    let n_parts = schedule.n_parts();
+    for cols in schedule.col_tiles(d) {
+        parallel_chunks_dynamic(n_parts, schedule.threads, 1, |claimed| {
+            for pi in claimed {
+                let units = schedule.part(pi);
+                if !units.is_empty() {
+                    f(units, cols.clone());
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_covers(s: &Schedule, units: usize) {
+        assert_eq!(s.units(), units);
+        let mut expect = 0;
+        for i in 0..s.n_parts() {
+            let r = s.part(i);
+            assert_eq!(r.start, expect, "partitions must be contiguous");
+            assert!(r.end >= r.start);
+            expect = r.end;
+        }
+        assert_eq!(expect, units, "partitions must cover every unit");
+    }
+
+    #[test]
+    fn uniform_covers_and_balances() {
+        for units in [0usize, 1, 7, 100, 1001] {
+            for threads in [1usize, 3, 8] {
+                let s = Schedule::uniform(units, threads);
+                assert_covers(&s, units);
+                if units >= threads * PARTS_PER_THREAD {
+                    let lens: Vec<usize> = (0..s.n_parts()).map(|i| s.part(i).len()).collect();
+                    let (min, max) =
+                        (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                    assert!(max - min <= 1, "uniform split must be near-equal");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nnz_balanced_even_prefix_matches_uniform() {
+        // constant row length → boundaries land on the uniform split
+        let prefix: Vec<usize> = (0..=64).map(|i| i * 5).collect();
+        let s = Schedule::nnz_balanced(&prefix, 2);
+        assert_covers(&s, 64);
+        for i in 0..s.n_parts() {
+            assert_eq!(s.part(i).len(), 4);
+        }
+    }
+
+    #[test]
+    fn nnz_balanced_hub_isolates_heavy_row() {
+        // row 10 holds 90% of the nnz; it must sit alone in a partition
+        let mut prefix = vec![0usize; 101];
+        let mut acc = 0;
+        for r in 0..100 {
+            acc += if r == 10 { 900 } else { 1 };
+            prefix[r + 1] = acc;
+        }
+        let s = Schedule::nnz_balanced(&prefix, 4);
+        assert_covers(&s, 100);
+        let nnz_of = |r: Range<usize>| prefix[r.end] - prefix[r.start];
+        let hub_part = (0..s.n_parts()).find(|&i| s.part(i).contains(&10)).unwrap();
+        // the hub's partition carries the hub and (at most) the light
+        // rows before it — never a big share of the remaining mass
+        assert!(s.part(hub_part).len() <= 11, "{:?}", s.part(hub_part));
+        // every other partition stays near the per-claim balance target
+        for i in 0..s.n_parts() {
+            if i != hub_part {
+                assert!(nnz_of(s.part(i)) <= 64, "part {i} overloaded");
+            }
+        }
+        // the light mass is spread over several claimable partitions
+        let nonempty = (0..s.n_parts()).filter(|&i| !s.part(i).is_empty()).count();
+        assert!(nonempty >= 4, "light rows must stay claimable: {nonempty}");
+    }
+
+    #[test]
+    fn nnz_balanced_zero_work_falls_back_to_uniform() {
+        let prefix = vec![0usize; 33];
+        let s = Schedule::nnz_balanced(&prefix, 2);
+        assert_covers(&s, 32);
+        assert_eq!(s, Schedule::uniform(32, 2));
+    }
+
+    #[test]
+    fn tile_width_clamps() {
+        let s = Schedule::uniform(10, 1).with_tile(Some(4));
+        assert_eq!(s.tile_width(16), 4);
+        assert_eq!(s.tile_width(3), 3); // wider-than-d tiles collapse
+        assert_eq!(s.n_tiles(16), 4);
+        assert_eq!(s.n_tiles(0), 0);
+        let untiled = Schedule::uniform(10, 1);
+        assert_eq!(untiled.tile_width(16), 16);
+        assert_eq!(untiled.n_tiles(16), 1);
+        // zero-width tile request behaves as untiled
+        assert_eq!(Schedule::uniform(10, 1).with_tile(Some(0)).tile, None);
+    }
+
+    #[test]
+    fn col_tiles_partition_the_width() {
+        let s = Schedule::uniform(4, 1).with_tile(Some(5));
+        let tiles = s.col_tiles(12);
+        assert_eq!(tiles, vec![0..5, 5..10, 10..12]);
+    }
+
+    #[test]
+    fn for_each_part_visits_every_cell_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let s = Schedule::uniform(50, 3).with_tile(Some(3));
+        let d = 8;
+        let hits: Vec<AtomicUsize> = (0..50 * d).map(|_| AtomicUsize::new(0)).collect();
+        for_each_part(&s, d, |units, cols| {
+            for u in units {
+                for c in cols.clone() {
+                    hits[u * d + c].fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}

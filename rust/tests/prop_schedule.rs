@@ -1,0 +1,186 @@
+//! Property tests over the schedule layer: partition coverage under
+//! adversarial row distributions, and kernel equivalence at forced
+//! column-tile widths.
+
+use spmm_roofline::coordinator::{Engine, EngineConfig, JobSpec};
+use spmm_roofline::gen::{erdos_renyi, Prng};
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::sparse::{Coo, Csr};
+use spmm_roofline::spmm::{build_native, reference_spmm, DenseMatrix, Impl, Schedule};
+use spmm_roofline::testutil::check_default;
+
+/// Coverage invariant: partitions are contiguous, ordered, and cover
+/// `[0, units)` exactly once.
+fn assert_covers(s: &Schedule, units: usize) -> Result<(), String> {
+    if s.units() != units {
+        return Err(format!("schedule covers {} units, want {units}", s.units()));
+    }
+    let mut expect = 0;
+    for i in 0..s.n_parts() {
+        let r = s.part(i);
+        if r.start != expect {
+            return Err(format!("part {i} starts at {} but {expect} uncovered", r.start));
+        }
+        if r.end < r.start {
+            return Err(format!("part {i} is inverted: {r:?}"));
+        }
+        expect = r.end;
+    }
+    if expect != units {
+        return Err(format!("partitions end at {expect}, want {units}"));
+    }
+    Ok(())
+}
+
+/// An adversarial CSR: `n` rows where a fraction are empty and one hub
+/// row holds ~90% of the nnz.
+fn hub_matrix(n: usize, rng: &mut Prng) -> Csr {
+    let hub = rng.below_usize(n);
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    // hub row: 9 entries per light row's 1, spread over the columns
+    for c in 0..(9 * n / 10).max(1).min(n) {
+        rows.push(hub as u32);
+        cols.push(c as u32);
+        vals.push(1.0 + c as f64);
+    }
+    for r in 0..n {
+        if r == hub || rng.below_usize(3) == 0 {
+            continue; // empty row
+        }
+        rows.push(r as u32);
+        cols.push(rng.below_usize(n) as u32);
+        vals.push(-(r as f64) - 1.0);
+    }
+    Csr::from_coo(Coo { nrows: n, ncols: n, rows, cols, vals })
+}
+
+#[test]
+fn prop_nnz_partitions_cover_adversarial_prefixes() {
+    check_default(0x300, |rng| {
+        let units = 1 + rng.below_usize(300);
+        let threads = 1 + rng.below_usize(8);
+        // random prefix with empty rows and occasional huge rows
+        let mut prefix = vec![0usize; units + 1];
+        for i in 0..units {
+            let w = match rng.below_usize(10) {
+                0 => 0,                          // empty row
+                1 => 1000 + rng.below_usize(9000), // hub row
+                _ => rng.below_usize(8),
+            };
+            prefix[i + 1] = prefix[i] + w;
+        }
+        let s = Schedule::nnz_balanced(&prefix, threads);
+        assert_covers(&s, units)
+    });
+}
+
+#[test]
+fn prop_hub_matrix_partitions_cover_and_kernels_agree() {
+    check_default(0x301, |rng| {
+        let n = 20 + rng.below_usize(200);
+        let a = hub_matrix(n, rng);
+        let threads = 1 + rng.below_usize(4);
+        let d = 1 + rng.below_usize(12);
+        let b = DenseMatrix::random(n, d, rng);
+        let want = reference_spmm(&a, &b);
+        for im in Impl::NATIVE {
+            let k = build_native(im, &a, threads).map_err(|e| e.to_string())?;
+            let s = k.plan(None);
+            assert_covers(&s, s.units())?;
+            let mut c = DenseMatrix::zeros(n, d);
+            k.execute_with(&b, &mut c, &s).map_err(|e| e.to_string())?;
+            let diff = c.max_abs_diff(&want);
+            if diff > 1e-11 {
+                return Err(format!("{im} hub matrix (threads={threads}, d={d}): |Δ|={diff}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn forced_tile_widths_match_reference_for_all_kernels() {
+    // the acceptance grid: dt ∈ {1, 3, d-1, d} for every native kernel
+    let mut rng = Prng::new(0x302);
+    let a = erdos_renyi(180, 180, 6.0, &mut rng);
+    for d in [2usize, 7, 16, 64] {
+        let b = DenseMatrix::random(180, d, &mut rng);
+        let want = reference_spmm(&a, &b);
+        for im in Impl::NATIVE {
+            let k = build_native(im, &a, 3).unwrap();
+            for dt in [1, 3, d - 1, d] {
+                let s = k.plan(Some(dt));
+                // stale C: tiled execution must still fully overwrite
+                let mut c = DenseMatrix::from_vec(180, d, vec![99.0; 180 * d]);
+                k.execute_with(&b, &mut c, &s).unwrap();
+                let diff = c.max_abs_diff(&want);
+                assert!(diff < 1e-11, "{im} d={d} dt={dt}: |Δ|={diff}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_random_tiles_match_reference() {
+    check_default(0x303, |rng| {
+        let n = 8 + rng.below_usize(120);
+        let a = erdos_renyi(n, n, rng.range_f64(0.0, 8.0), rng);
+        let d = 1 + rng.below_usize(20);
+        let dt = 1 + rng.below_usize(d + 4); // sometimes > d (untiled)
+        let threads = 1 + rng.below_usize(3);
+        let b = DenseMatrix::random(n, d, rng);
+        let want = reference_spmm(&a, &b);
+        for im in Impl::NATIVE {
+            let k = build_native(im, &a, threads).map_err(|e| e.to_string())?;
+            let mut c = DenseMatrix::zeros(n, d);
+            k.execute_with(&b, &mut c, &k.plan(Some(dt))).map_err(|e| e.to_string())?;
+            let diff = c.max_abs_diff(&want);
+            if diff > 1e-11 {
+                return Err(format!("{im} (n={n}, d={d}, dt={dt}): |Δ|={diff}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn schedule_cache_reuses_across_repeated_and_batched_submissions() {
+    let mut e = Engine::new(EngineConfig {
+        threads: 2,
+        machine: Some(MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 }),
+        iters: 1,
+        warmup: 0,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+        artifacts_dir: None,
+    })
+    .unwrap();
+    let a = erdos_renyi(400, 400, 5.0, &mut Prng::new(0x304));
+    e.register("m", a).unwrap();
+
+    // repeated single submissions: one plan, then cache hits
+    e.submit(&JobSpec::new("m", 8).with_impl(Impl::Csr)).unwrap();
+    let (h0, m0) = e.registry().schedule_cache_stats();
+    assert_eq!((h0, m0), (0, 1));
+    for _ in 0..3 {
+        e.submit(&JobSpec::new("m", 8).with_impl(Impl::Csr)).unwrap();
+    }
+    let (h1, m1) = e.registry().schedule_cache_stats();
+    assert_eq!((h1, m1), (3, 1), "repeated submissions must reuse the schedule");
+
+    // batched: distinct (impl, d) cells plan once, repeats hit
+    let jobs: Vec<JobSpec> = [4usize, 16, 4, 16, 4]
+        .iter()
+        .map(|&d| JobSpec::new("m", d).with_impl(Impl::Csb))
+        .collect();
+    let rep = e.submit_batch(&jobs).unwrap();
+    assert_eq!(rep.schedule_misses, 2, "two distinct (impl, d) cells");
+    assert_eq!(rep.schedule_hits, 3);
+    assert!(rep.schedule_hit_rate() > 0.5);
+
+    // every record carries the tile the schedule executed with
+    for r in e.history() {
+        assert!(r.dt >= 1 && r.dt <= r.d);
+    }
+}
