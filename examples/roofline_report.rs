@@ -98,6 +98,7 @@ fn main() -> spmm_roofline::Result<()> {
         warmup: cfg.warmup,
         impls: vec![Impl::Csr, Impl::Opt, Impl::Csb, Impl::Ell],
         artifacts_dir: Some(cfg.artifacts_dir.clone()),
+        ..EngineConfig::default()
     })?;
     println!("xla backend: {}", if engine.has_xla() { "loaded" } else { "absent (run `make artifacts`)" });
     for proxy in representative_suite() {

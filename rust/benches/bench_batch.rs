@@ -42,6 +42,7 @@ fn main() {
         warmup: 1,
         impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
         artifacts_dir: Some("artifacts".into()),
+        ..EngineConfig::default()
     })
     .expect("engine construction");
     println!(
@@ -108,13 +109,17 @@ fn main() {
     let mut log = PerfLog::new();
     for r in &warm.records {
         log.push(PerfRecord {
-            bench: "bench_batch".into(),
-            matrix: r.matrix.clone(),
-            class: r.class.to_string(),
-            impl_name: r.chosen.to_string(),
-            d: r.d,
-            dt: r.dt.min(r.d),
-            gflops: r.measured_gflops,
+            reorder: r.reorder.to_string(),
+            predicted_gflops: r.predicted_gflops,
+            ..PerfRecord::basic(
+                "bench_batch",
+                r.matrix.clone(),
+                r.class.to_string(),
+                r.chosen.to_string(),
+                r.d,
+                r.dt.min(r.d),
+                r.measured_gflops,
+            )
         });
     }
     log.merge_save("BENCH_schedule.json").expect("write BENCH_schedule.json");

@@ -1,0 +1,171 @@
+//! Bench: the structure-adaptive autotuning router end to end.
+//!
+//! Registers a generated suite spanning all four sparsity classes plus
+//! a scrambled mesh (the case where reordering — not just format —
+//! decides performance), then:
+//!
+//! 1. **tuning batch** — first submission per (matrix, d) explores the
+//!    top-k predicted (impl × reordering) candidates, feeds every
+//!    measurement into the planner's priors, and pins the winner
+//!    (converting the stored matrix where a reordering won);
+//! 2. **pinned batch** — the identical queue re-submitted: zero
+//!    exploration, schedules served from cache (both are printed and
+//!    checked);
+//! 3. **always-CSR baseline** — the same jobs forced to CSR on a
+//!    *separate* engine holding the matrices as registered (no pinned
+//!    permutations — otherwise the baseline would silently inherit the
+//!    router's reordering wins), for the batch-total comparison the
+//!    router must not lose.
+//!
+//! Writes one `BENCH_route.json` record per pinned decision (chosen
+//! impl, reordering, predicted vs measured GFLOP/s) via the merging
+//! perf log.
+//!
+//! `REPRO_SCALE` (default 0.25) and `REPRO_ITERS` (default 3) tune
+//! runtime; `REPRO_FAST=1` injects nominal machine parameters instead
+//! of running STREAM (CI smoke mode). `REPRO_STRICT=1` exits nonzero
+//! if the routed batch total falls below the always-CSR baseline
+//! (kept opt-in: CI runners are too noisy for a hard perf gate).
+
+use spmm_roofline::coordinator::{AutotunePolicy, Engine, EngineConfig, JobSpec};
+use spmm_roofline::gen::{representative_suite, suite, Prng};
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::report::{PerfLog, PerfRecord};
+use spmm_roofline::sparse::reorder::{permute_symmetric, random_permutation};
+use spmm_roofline::spmm::Impl;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env1(key: &str) -> bool {
+    std::env::var(key).map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    let scale = envf("REPRO_SCALE", 0.25);
+    let iters = envf("REPRO_ITERS", 3.0) as usize;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let machine = if env1("REPRO_FAST") {
+        Some(MachineParams { beta_gbs: 25.0, pi_gflops: 100.0 })
+    } else {
+        None
+    };
+    let mut engine = Engine::new(EngineConfig {
+        threads,
+        machine,
+        iters,
+        warmup: 1,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+        artifacts_dir: Some("artifacts".into()),
+        autotune: AutotunePolicy::enabled(),
+    })
+    .expect("engine construction");
+    println!(
+        "router: β={:.1} GB/s π={:.0} GFLOP/s, {} threads",
+        engine.machine().beta_gbs,
+        engine.machine().pi_gflops,
+        threads
+    );
+
+    for proxy in representative_suite() {
+        let m = proxy.generate(scale);
+        println!("registered {} ({} rows, {} nnz)", proxy.name, m.nrows, m.nnz());
+        engine.register(proxy.name, m).expect("register");
+    }
+    // the reordering showcase: a mesh whose structure was destroyed by
+    // a random permutation — RCM can win it back
+    let mut rng = Prng::new(0x0de7);
+    let mesh = suite::find("road_usa_p").expect("suite entry").generate(scale);
+    let scrambled = permute_symmetric(&mesh, &random_permutation(mesh.nrows, &mut rng));
+    println!("registered road_scrambled ({} rows, {} nnz)", scrambled.nrows, scrambled.nnz());
+    engine.register("road_scrambled", scrambled).expect("register");
+
+    let names: Vec<String> = engine.registry().names().iter().map(|s| s.to_string()).collect();
+    let mut jobs = Vec::new();
+    for name in &names {
+        for d in [4usize, 16, 64] {
+            jobs.push(JobSpec::new(name.clone(), d));
+        }
+    }
+
+    println!("\n— batch 1: tuning (explore top-k per matrix × d) —");
+    let tuned = engine.submit_batch(&jobs).expect("tuning batch");
+    println!("  {}", tuned.summary_line());
+    for dec in engine.autotuner().decisions() {
+        println!("  {}", dec.summary());
+    }
+
+    println!("\n— batch 2: pinned (same queue, decisions cached) —");
+    let routed = engine.submit_batch(&jobs).expect("pinned batch");
+    println!("  {}", routed.summary_line());
+    println!(
+        "  explored: {} → {} (pinned), schedule hit rate {:.0}%",
+        tuned.explore_measurements,
+        routed.explore_measurements,
+        100.0 * routed.schedule_hit_rate()
+    );
+    assert_eq!(
+        routed.explore_measurements, 0,
+        "re-submitting the same batch must not re-measure candidates"
+    );
+
+    // The baseline runs on a fresh engine: the tuned engine's matrices
+    // were permuted in place where a reordering won, and CSR-on-the-
+    // pinned-layout would inherit exactly the benefit being measured.
+    // Same generators + seeds → identical original matrices; the tuned
+    // engine's measured machine parameters avoid a second STREAM run.
+    println!("\n— batch 3: always-CSR baseline (original layouts, fresh engine) —");
+    let mut base_engine = Engine::new(EngineConfig {
+        threads,
+        machine: Some(engine.machine()),
+        iters,
+        warmup: 1,
+        impls: vec![Impl::Csr],
+        artifacts_dir: None,
+        autotune: AutotunePolicy::default(),
+    })
+    .expect("baseline engine");
+    for proxy in representative_suite() {
+        base_engine.register(proxy.name, proxy.generate(scale)).expect("register");
+    }
+    let mut rng = Prng::new(0x0de7);
+    let mesh = suite::find("road_usa_p").expect("suite entry").generate(scale);
+    let scrambled = permute_symmetric(&mesh, &random_permutation(mesh.nrows, &mut rng));
+    base_engine.register("road_scrambled", scrambled).expect("register");
+    let csr_jobs: Vec<JobSpec> = jobs.iter().map(|j| j.clone().with_impl(Impl::Csr)).collect();
+    base_engine.submit_batch(&csr_jobs).expect("baseline warmup"); // warm buffers + schedules
+    let baseline = base_engine.submit_batch(&csr_jobs).expect("baseline batch");
+    println!("  {}", baseline.summary_line());
+
+    let routed_gf = routed.aggregate_gflops();
+    let baseline_gf = baseline.aggregate_gflops();
+    println!(
+        "\nrouted {routed_gf:.2} GFLOP/s vs always-CSR {baseline_gf:.2} GFLOP/s → {:.2}× \
+         on the batch total",
+        routed_gf / baseline_gf.max(1e-12)
+    );
+    if env1("REPRO_STRICT") && routed_gf < baseline_gf {
+        eprintln!("STRICT: router lost to the always-CSR baseline");
+        std::process::exit(1);
+    }
+
+    let mut log = PerfLog::new();
+    for dec in engine.autotuner().decisions() {
+        log.push(PerfRecord {
+            reorder: dec.reorder.to_string(),
+            predicted_gflops: dec.predicted_gflops,
+            ..PerfRecord::basic(
+                "bench_route",
+                dec.matrix.clone(),
+                dec.class.to_string(),
+                dec.im.to_string(),
+                dec.d,
+                dec.dt.min(dec.d),
+                dec.measured_gflops,
+            )
+        });
+    }
+    log.merge_save("BENCH_route.json").expect("write BENCH_route.json");
+    println!("wrote BENCH_route.json ({} routing records)", log.records.len());
+}

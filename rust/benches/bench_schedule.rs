@@ -86,24 +86,24 @@ fn main() {
                     format!("{gf_untiled:.2}"),
                     format!("{:.2}×", gf_tiled / gf_untiled.max(1e-12)),
                 ]);
-                log.push(PerfRecord {
-                    bench: "bench_schedule".into(),
-                    matrix: proxy.name.into(),
-                    class: cls.class.to_string(),
-                    impl_name: im.to_string(),
+                log.push(PerfRecord::basic(
+                    "bench_schedule",
+                    proxy.name,
+                    cls.class.to_string(),
+                    im.to_string(),
                     d,
-                    dt: pred.dt.min(d),
-                    gflops: gf_tiled,
-                });
-                log.push(PerfRecord {
-                    bench: "bench_schedule".into(),
-                    matrix: proxy.name.into(),
-                    class: cls.class.to_string(),
-                    impl_name: im.to_string(),
+                    pred.dt.min(d),
+                    gf_tiled,
+                ));
+                log.push(PerfRecord::basic(
+                    "bench_schedule",
+                    proxy.name,
+                    cls.class.to_string(),
+                    im.to_string(),
                     d,
-                    dt: d,
-                    gflops: gf_untiled,
-                });
+                    d,
+                    gf_untiled,
+                ));
             }
         }
     }

@@ -19,15 +19,7 @@ fn envf(key: &str, default: f64) -> f64 {
 /// column, `d` is the workload's dense width (untiled: the workloads
 /// drive kernels through the plain `execute` path).
 fn wl_record(workload: &str, class: &str, im: Impl, d: usize, gf: f64) -> PerfRecord {
-    PerfRecord {
-        bench: "bench_workloads".into(),
-        matrix: workload.into(),
-        class: class.into(),
-        impl_name: im.to_string(),
-        d,
-        dt: d,
-        gflops: gf,
-    }
+    PerfRecord::basic("bench_workloads", workload, class, im.to_string(), d, d, gf)
 }
 
 fn main() {

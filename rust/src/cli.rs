@@ -21,6 +21,11 @@
 //!   ladder         cache-aware roofline: per-level bandwidth ceilings
 //!   hubs           appendix: hub mass, model vs generated graphs
 //!   engine         route a job mix through the roofline-guided engine
+//!                  (--autotune turns on the adaptive router)
+//!   route          structure-adaptive routing demo: tune a suite
+//!                  spanning all four classes, pin per-matrix
+//!                  (format, reordering), compare vs always-CSR,
+//!                  write BENCH_route.json
 //! ```
 
 use crate::config::{parse_impl, ExperimentConfig};
@@ -68,6 +73,7 @@ pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
             "out" => cfg.out_dir = v.clone(),
             "artifacts" => cfg.artifacts_dir = v.clone(),
             "xla" => cfg.use_xla = v == "true",
+            "autotune" => cfg.autotune = v == "true",
             "d" => {
                 cfg.d_values = v
                     .split(',')
@@ -102,12 +108,15 @@ fn bad(k: &str, v: &str) -> Error {
 pub fn usage() -> String {
     "usage: repro <command> [flags] — commands: sysinfo stream suite classify \
      table-v fig1 fig2 validate-ai ablate-block ablate-reuse ablate-threads \
-     ablate-reorder ladder hubs engine\n\
+     ablate-reorder ladder hubs engine route\n\
      flags: --scale X --threads N --iters N --warmup N --d 1,4,16,64 \
-     --impls CSR,MKL,CSB --out DIR --artifacts DIR --config FILE\n\
+     --impls CSR,MKL,CSB --out DIR --artifacts DIR --config FILE --autotune\n\
      --impls accepts any of CSR,MKL/OPT,CSB,ELL,BSR,XLA or the shorthand \
      `all` (= the five native kernels); `engine` prepares exactly the \
-     requested set, so ELL/BSR are opt-in there"
+     requested set, so ELL/BSR are opt-in there\n\
+     --autotune turns on the structure-adaptive router for `engine` \
+     (the `route` command always autotunes: it explores impl × \
+     reordering per matrix, pins the winner, and writes BENCH_route.json)"
         .to_string()
 }
 
@@ -141,6 +150,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
         "ladder" => cmd_ladder(cfg),
         "hubs" => cmd_hubs(),
         "engine" => cmd_engine(cfg),
+        "route" => cmd_route(cfg),
         other => Err(Error::Usage(format!("unknown command '{other}'\n\n{}", usage()))),
     }
 }
@@ -362,7 +372,7 @@ fn cmd_hubs() -> Result<()> {
 }
 
 fn cmd_engine(cfg: &ExperimentConfig) -> Result<()> {
-    use crate::coordinator::{Engine, EngineConfig, JobSpec};
+    use crate::coordinator::{AutotunePolicy, Engine, EngineConfig, JobSpec};
     let mut engine = Engine::new(EngineConfig {
         threads: cfg.threads,
         machine: None,
@@ -370,6 +380,11 @@ fn cmd_engine(cfg: &ExperimentConfig) -> Result<()> {
         warmup: cfg.warmup,
         impls: cfg.impls.iter().copied().filter(|&i| i != Impl::Xla).collect(),
         artifacts_dir: Some(cfg.artifacts_dir.clone()),
+        autotune: if cfg.autotune {
+            AutotunePolicy::enabled()
+        } else {
+            AutotunePolicy::default()
+        },
     })?;
     println!(
         "engine up: β={:.1} GB/s π={:.0} GFLOP/s xla={}",
@@ -409,6 +424,11 @@ fn cmd_engine(cfg: &ExperimentConfig) -> Result<()> {
     }
     println!("{}", t.to_text());
     println!("{}", batch.summary_line());
+    if cfg.autotune {
+        for dec in &batch.routes {
+            println!("  route: {}", dec.summary());
+        }
+    }
     let (shits, smisses) = engine.registry().schedule_cache_stats();
     println!(
         "schedules: {} planned, {} served from cache ({:.0}% hit rate)",
@@ -421,6 +441,157 @@ fn cmd_engine(cfg: &ExperimentConfig) -> Result<()> {
         "prediction: n={} geomean(meas/pred)={:.2} mean|log err|={:.2}",
         rep.n_jobs, rep.geomean_ratio, rep.mean_abs_log_err
     );
+    Ok(())
+}
+
+/// The `route` command: register a generated suite spanning all four
+/// sparsity classes (plus a scrambled mesh, so the RCM lever has
+/// something to recover), autotune every (matrix, d), print the pinned
+/// decisions, compare the routed batch against an always-CSR baseline,
+/// and write the `BENCH_route.json` artifact.
+fn cmd_route(cfg: &ExperimentConfig) -> Result<()> {
+    use crate::coordinator::{AutotunePolicy, Engine, EngineConfig, JobSpec};
+    use crate::report::{PerfLog, PerfRecord};
+    use crate::sparse::reorder::{permute_symmetric, random_permutation};
+
+    let mut engine = Engine::new(EngineConfig {
+        threads: cfg.threads,
+        machine: None,
+        iters: cfg.iters,
+        warmup: cfg.warmup,
+        impls: cfg.impls.iter().copied().filter(|&i| i != Impl::Xla).collect(),
+        artifacts_dir: Some(cfg.artifacts_dir.clone()),
+        autotune: AutotunePolicy::enabled(),
+    })?;
+    println!(
+        "router up: β={:.1} GB/s π={:.0} GFLOP/s, exploring impl × {{none, rcm, degree}}",
+        engine.machine().beta_gbs,
+        engine.machine().pi_gflops,
+    );
+    for proxy in crate::gen::representative_suite() {
+        engine.register(proxy.name, proxy.generate(cfg.scale))?;
+    }
+    // a scrambled mesh: registered as "random-looking", recoverable by
+    // RCM — the router should treat it differently from a true random
+    let mut rng = crate::gen::Prng::new(0x0de7);
+    let mesh = crate::gen::suite::find("road_usa_p")
+        .expect("road_usa_p is in the suite")
+        .generate(cfg.scale);
+    let scrambled = permute_symmetric(&mesh, &random_permutation(mesh.nrows, &mut rng));
+    engine.register("road_scrambled", scrambled)?;
+
+    for name in engine.registry().names() {
+        let e = engine.registry().get(name).unwrap();
+        println!("  registered {name}: {}", e.classification.summary());
+    }
+
+    let names: Vec<String> = engine.registry().names().iter().map(|s| s.to_string()).collect();
+    let jobs: Vec<JobSpec> = names
+        .iter()
+        .flat_map(|n| cfg.d_values.iter().map(|&d| JobSpec::new(n.clone(), d)))
+        .collect();
+
+    println!("\n— tuning batch (explores top-k candidates per matrix × d) —");
+    let tuned = engine.submit_batch(&jobs)?;
+    println!("  {}", tuned.summary_line());
+    let mut t = crate::report::Table::new(
+        "route — pinned decisions (format × reordering per matrix × d)",
+        &["Matrix", "Class", "d", "Impl", "Reorder", "dt", "Pred GF/s", "Meas GF/s", "Regret"],
+    );
+    for dec in engine.autotuner().decisions() {
+        t.row(vec![
+            dec.matrix.clone(),
+            dec.class.to_string(),
+            dec.d.to_string(),
+            dec.im.to_string(),
+            dec.reorder.to_string(),
+            if dec.dt >= dec.d { "—".into() } else { dec.dt.to_string() },
+            format!("{:.2}", dec.predicted_gflops),
+            format!("{:.2}", dec.measured_gflops),
+            format!("{:.2}", dec.regret_gflops),
+        ]);
+    }
+    println!("{}", t.to_text());
+
+    println!("— pinned re-submission (decisions cached, nothing re-measured) —");
+    let routed = engine.submit_batch(&jobs)?;
+    println!("  {}", routed.summary_line());
+    println!(
+        "  explored this batch: {} (0 proves pinning), schedule hit rate {:.0}%",
+        routed.explore_measurements,
+        100.0 * routed.schedule_hit_rate()
+    );
+
+    // Baseline on a fresh engine holding the *original* layouts — the
+    // tuned engine's matrices were permuted in place where a
+    // reordering won, and a baseline on those would silently inherit
+    // the router's gains. CSR when configured, else the first
+    // configured impl (`--impls OPT,CSB` must not error after a full
+    // tuning run).
+    let impls: Vec<Impl> = cfg.impls.iter().copied().filter(|&i| i != Impl::Xla).collect();
+    let base_im =
+        if impls.contains(&Impl::Csr) { Impl::Csr } else { impls.first().copied().unwrap_or(Impl::Csr) };
+    println!("— always-{base_im} baseline on the same jobs (original layouts) —");
+    let mut base_engine = Engine::new(EngineConfig {
+        threads: cfg.threads,
+        machine: Some(engine.machine()), // reuse calibration
+        iters: cfg.iters,
+        warmup: cfg.warmup,
+        impls: vec![base_im],
+        artifacts_dir: None,
+        autotune: AutotunePolicy::default(),
+    })?;
+    for proxy in crate::gen::representative_suite() {
+        base_engine.register(proxy.name, proxy.generate(cfg.scale))?;
+    }
+    let mut rng2 = crate::gen::Prng::new(0x0de7);
+    let mesh2 = crate::gen::suite::find("road_usa_p")
+        .expect("road_usa_p is in the suite")
+        .generate(cfg.scale);
+    base_engine
+        .register("road_scrambled", permute_symmetric(&mesh2, &random_permutation(mesh2.nrows, &mut rng2)))?;
+    let base_jobs: Vec<JobSpec> =
+        jobs.iter().map(|j| j.clone().with_impl(base_im)).collect();
+    base_engine.submit_batch(&base_jobs)?; // warm buffers + schedules
+    let baseline = base_engine.submit_batch(&base_jobs)?;
+    println!("  {}", baseline.summary_line());
+    let speedup = routed.aggregate_gflops() / baseline.aggregate_gflops().max(1e-12);
+    println!(
+        "\nrouted {:.2} GFLOP/s vs always-{base_im} {:.2} GFLOP/s → {:.2}× on the batch total",
+        routed.aggregate_gflops(),
+        baseline.aggregate_gflops(),
+        speedup
+    );
+
+    let mut pt = crate::report::Table::new(
+        "learned priors after exploration (fraction of roof)",
+        &["Class", "Impl", "Prior"],
+    );
+    for (class, im, prior) in engine.planner().priors_snapshot() {
+        pt.row(vec![class.to_string(), im.to_string(), format!("{prior:.3}")]);
+    }
+    println!("{}", pt.to_text());
+
+    // machine-readable artifact: one record per pinned decision, with
+    // predicted vs measured (regret analysis across PRs)
+    let mut log = PerfLog::new();
+    for dec in engine.autotuner().decisions() {
+        log.push(PerfRecord {
+            reorder: dec.reorder.to_string(),
+            predicted_gflops: dec.predicted_gflops,
+            ..PerfRecord::basic(
+                "bench_route",
+                dec.matrix.clone(),
+                dec.class.to_string(),
+                dec.im.to_string(),
+                dec.d,
+                dec.dt.min(dec.d),
+                dec.measured_gflops,
+            )
+        });
+    }
+    log.merge_save("BENCH_route.json")?;
+    println!("wrote BENCH_route.json ({} routing records)", log.records.len());
     Ok(())
 }
 
@@ -448,6 +619,15 @@ mod tests {
         assert_eq!(cli.cfg.impls, Impl::NATIVE.to_vec());
         let cli = parse_args(args("engine --impls ELL,BSR --scale 0.1")).unwrap();
         assert_eq!(cli.cfg.impls, vec![Impl::Ell, Impl::Bsr]);
+    }
+
+    #[test]
+    fn autotune_flag_parses() {
+        let cli = parse_args(args("engine --autotune --scale 0.1")).unwrap();
+        assert!(cli.cfg.autotune);
+        // default off; the `route` command enables it internally
+        let cli = parse_args(args("route --scale 0.1")).unwrap();
+        assert!(!cli.cfg.autotune);
     }
 
     #[test]

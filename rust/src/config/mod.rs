@@ -33,6 +33,9 @@ pub struct ExperimentConfig {
     pub use_xla: bool,
     /// Artifacts directory (HLO text + manifest).
     pub artifacts_dir: String,
+    /// Enable the structure-adaptive autotuning router on the engine
+    /// path (`engine --autotune`; the `route` command forces it on).
+    pub autotune: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -47,6 +50,7 @@ impl Default for ExperimentConfig {
             out_dir: "results".into(),
             use_xla: false,
             artifacts_dir: "artifacts".into(),
+            autotune: false,
         }
     }
 }
@@ -85,6 +89,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = t.get_bool("use_xla")? {
             cfg.use_xla = v;
+        }
+        if let Some(v) = t.get_bool("autotune")? {
+            cfg.autotune = v;
         }
         if let Some(list) = t.get_str_array("impls")? {
             cfg.impls = list

@@ -1,0 +1,476 @@
+//! The structure-adaptive autotuning router: close the
+//! classify → predict → **measure** loop.
+//!
+//! The planner (PR 2) predicts; this module makes the engine *act* on
+//! the prediction and *learn* from the measurement. For each
+//! `(matrix, d)` the tuner
+//!
+//! 1. **enumerates** candidate plans = {prepared implementation ×
+//!    reordering strategy} — reordering ([`Reordering`]) is the
+//!    paper's "structure decides performance" lever: RCM can turn a
+//!    scrambled mesh back into a banded matrix, degree-sort
+//!    concentrates scale-free hubs into a dense corner,
+//! 2. **scores** every candidate with the tile-aware planner, where a
+//!    candidate's prediction uses the classification of its *reordered*
+//!    matrix (the whole point: the class can change under `P·A·Pᵀ`),
+//! 3. **explores**: measures the top-`k` predicted candidates once
+//!    each, feeding every measurement back through
+//!    [`Planner::observe`] so the priors sharpen for future
+//!    predictions, and
+//! 4. **exploits**: pins the measured-best candidate as a
+//!    [`RouteDecision`]. Pinning converts the stored matrix in the
+//!    [`MatrixRegistry`] (permute + rebuild kernels + invalidate
+//!    cached schedules) so every later submission executes the winning
+//!    layout straight from cache — re-submitting the same batch
+//!    explores nothing.
+//!
+//! The decision records predicted and measured GFLOP/s plus the
+//! *regret* of trusting the prediction alone (how much the measured
+//! winner beat the predictor's top pick), so the router's value over
+//! pure model-driven routing is itself a reported quantity
+//! (`BENCH_route.json`).
+
+use std::collections::HashMap;
+
+use crate::coordinator::batch::BufferPool;
+use crate::coordinator::planner::{Planner, Prediction};
+use crate::coordinator::registry::MatrixRegistry;
+use crate::error::{Error, Result};
+use crate::gen::{Prng, SparsityClass};
+use crate::metrics::{bench_adaptive, gflops, spmm_flops};
+use crate::pattern::{classify, Classification};
+use crate::sparse::{reorder::permute_symmetric, Csr, Reordering};
+use crate::spmm::{build_native, Impl, Schedule, Spmm};
+
+/// Knobs for the explore/exploit policy.
+#[derive(Debug, Clone)]
+pub struct AutotunePolicy {
+    /// Master switch: when off, the engine routes purely on
+    /// predictions (PR 2 behaviour).
+    pub enabled: bool,
+    /// Candidates measured per `(matrix, d)` decision, best-predicted
+    /// first. 1 = trust the prediction outright (pure exploit).
+    pub top_k: usize,
+    /// Reordering strategies enumerated per matrix.
+    pub reorderings: Vec<Reordering>,
+    /// Timed iterations per exploration measurement (kept low — the
+    /// point of exploring is a cheap ranking, not a publication
+    /// number).
+    pub explore_iters: usize,
+    /// Minimum cumulative measured seconds per exploration sample.
+    pub explore_min_secs: f64,
+}
+
+impl Default for AutotunePolicy {
+    fn default() -> Self {
+        AutotunePolicy {
+            enabled: false,
+            top_k: 3,
+            reorderings: Reordering::ALL.to_vec(),
+            explore_iters: 2,
+            explore_min_secs: 0.05,
+        }
+    }
+}
+
+impl AutotunePolicy {
+    /// The default policy with the master switch on.
+    pub fn enabled() -> AutotunePolicy {
+        AutotunePolicy { enabled: true, ..AutotunePolicy::default() }
+    }
+}
+
+/// One scored (and possibly measured) candidate plan.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub im: Impl,
+    pub reorder: Reordering,
+    /// Class of the matrix *under this candidate's reordering*.
+    pub class: SparsityClass,
+    /// Planner prediction on the reordered classification.
+    pub prediction: Prediction,
+    /// Exploration measurement, when this candidate made the top-k.
+    pub measured_gflops: Option<f64>,
+}
+
+/// A pinned routing decision for one `(matrix, d)`.
+#[derive(Debug, Clone)]
+pub struct RouteDecision {
+    pub matrix: String,
+    pub d: usize,
+    /// Winning implementation.
+    pub im: Impl,
+    /// Winning reordering (pinned into the registry).
+    pub reorder: Reordering,
+    /// Column-tile width of the winning plan.
+    pub dt: usize,
+    /// Class of the winning layout.
+    pub class: SparsityClass,
+    /// Planner prediction for the winner at decision time.
+    pub predicted_gflops: f64,
+    /// Exploration measurement of the winner.
+    pub measured_gflops: f64,
+    /// Candidates enumerated (scored) for this decision.
+    pub enumerated: usize,
+    /// Candidates measured for this decision (≤ `top_k`).
+    pub explored: usize,
+    /// Measured winner minus the measured throughput of the
+    /// predictor's top-ranked candidate — what measuring top-k bought
+    /// over predict-and-commit (0 when the prediction was already
+    /// right).
+    pub regret_gflops: f64,
+}
+
+impl RouteDecision {
+    /// One-line human rendering for tables and logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} d={} → {} / {} (dt={}, class {}, pred {:.2} meas {:.2} GFLOP/s, \
+             regret {:.2}, {}/{} measured)",
+            self.matrix,
+            self.d,
+            self.im,
+            self.reorder,
+            self.dt,
+            self.class,
+            self.predicted_gflops,
+            self.measured_gflops,
+            self.regret_gflops,
+            self.explored,
+            self.enumerated,
+        )
+    }
+}
+
+/// The router: pinned decisions plus the explore bookkeeping.
+///
+/// Owned by the engine; all heavyweight collaborators (registry,
+/// planner, buffer pool, RNG) are passed in per call so the borrow
+/// structure stays flat.
+pub struct Autotuner {
+    policy: AutotunePolicy,
+    decisions: HashMap<(String, usize), RouteDecision>,
+    /// Total exploration measurements ever run (observability: batch
+    /// reports diff this to prove re-submission measures nothing).
+    measurements: usize,
+}
+
+impl Autotuner {
+    pub fn new(policy: AutotunePolicy) -> Autotuner {
+        Autotuner { policy, decisions: HashMap::new(), measurements: 0 }
+    }
+
+    pub fn policy(&self) -> &AutotunePolicy {
+        &self.policy
+    }
+
+    /// The pinned decision for `(matrix, d)`, if one exists.
+    pub fn decision(&self, matrix: &str, d: usize) -> Option<&RouteDecision> {
+        self.decisions.get(&(matrix.to_string(), d))
+    }
+
+    /// Every pinned decision, sorted by (matrix, d).
+    pub fn decisions(&self) -> Vec<&RouteDecision> {
+        let mut v: Vec<&RouteDecision> = self.decisions.values().collect();
+        v.sort_by(|a, b| (a.matrix.as_str(), a.d).cmp(&(b.matrix.as_str(), b.d)));
+        v
+    }
+
+    /// Exploration measurements run so far.
+    pub fn measurements(&self) -> usize {
+        self.measurements
+    }
+
+    /// Drop every decision for `matrix` (the matrix was re-registered;
+    /// its structure may have changed).
+    pub fn forget(&mut self, matrix: &str) {
+        self.decisions.retain(|k, _| k.0 != matrix);
+    }
+
+    /// Resolve the decision for `(matrix, d)`, running the
+    /// explore/exploit policy if none is pinned yet. On a fresh
+    /// decision this measures up to `top_k` candidates, feeds each
+    /// measurement into the planner's priors, and converts the
+    /// registry entry to the winning reordering.
+    #[allow(clippy::too_many_arguments)]
+    pub fn tune(
+        &mut self,
+        matrix: &str,
+        d: usize,
+        registry: &mut MatrixRegistry,
+        planner: &Planner,
+        buffers: &mut BufferPool,
+        rng: &mut Prng,
+    ) -> Result<RouteDecision> {
+        if let Some(dec) = self.decision(matrix, d) {
+            return Ok(dec.clone());
+        }
+        let entry = registry
+            .get(matrix)
+            .ok_or_else(|| Error::Usage(format!("matrix '{matrix}' not registered")))?;
+        let impls = entry.native_impls().to_vec();
+        if impls.is_empty() {
+            return Err(Error::Usage(format!("no native kernels prepared for '{matrix}'")));
+        }
+        let active = entry.reordering();
+        let base = entry.base_csr();
+        let square = base.nrows == base.ncols;
+
+        // the physical layout is per-*matrix* while decisions are
+        // per-(matrix, d): once any decision pinned a layout, later
+        // tunes for other widths explore formats only, on that layout —
+        // otherwise a d=64 tune could permute the matrix out from
+        // under the d=4 decision (and invalidate its cached schedules)
+        let layout_pinned = self.decisions.keys().any(|(m, _)| m == matrix);
+        let reorder_candidates: Vec<Reordering> =
+            if layout_pinned { vec![active] } else { self.policy.reorderings.clone() };
+
+        // one layout per reordering strategy: its classification, and
+        // the permuted matrix itself for non-active layouts (the
+        // active one is served straight from the registry)
+        let mut layouts: Vec<(Reordering, Classification, Option<Csr>)> = Vec::new();
+        for &r in &reorder_candidates {
+            if r != Reordering::None && !square {
+                continue;
+            }
+            if layouts.iter().any(|(lr, _, _)| *lr == r) {
+                continue;
+            }
+            if r == active {
+                layouts.push((r, entry.classification.clone(), None));
+            } else {
+                let permuted = match r.permutation(base) {
+                    Some(p) => permute_symmetric(base, &p),
+                    None => base.clone(),
+                };
+                let cls = classify(&permuted);
+                layouts.push((r, cls, Some(permuted)));
+            }
+        }
+        if layouts.is_empty() {
+            // policy listed no applicable reordering — fall back to the
+            // active layout so format choice still gets tuned
+            layouts.push((active, entry.classification.clone(), None));
+        }
+
+        // score the full candidate cross-product with the planner
+        let mut scored: Vec<(usize, Candidate)> = Vec::new();
+        for (li, (r, cls, _)) in layouts.iter().enumerate() {
+            for &im in &impls {
+                let prediction = planner.predict(cls, d, im);
+                scored.push((
+                    li,
+                    Candidate {
+                        im,
+                        reorder: *r,
+                        class: cls.class,
+                        prediction,
+                        measured_gflops: None,
+                    },
+                ));
+            }
+        }
+        let enumerated = scored.len();
+        scored.sort_by(|a, b| {
+            b.1.prediction.predicted_gflops.total_cmp(&a.1.prediction.predicted_gflops)
+        });
+
+        // explore: measure the top-k predicted candidates once each
+        let k = self.policy.top_k.clamp(1, scored.len());
+        let mut measured: Vec<Candidate> = Vec::new();
+        for (li, mut cand) in scored.into_iter().take(k) {
+            let dt = cand.prediction.dt;
+            let gf = match &layouts[li].2 {
+                None => {
+                    // active layout: prepared kernel + cached schedule
+                    let entry = registry.get(matrix).expect("entry resolved above");
+                    let kernel = entry
+                        .kernel(cand.im, d)
+                        .ok_or_else(|| Error::Usage(format!("kernel {} vanished", cand.im)))?;
+                    let sched =
+                        registry.schedule(matrix, cand.im, d, dt).expect("kernel exists");
+                    measure(kernel, &sched, d, buffers, rng, &self.policy)?
+                }
+                Some(csr) => {
+                    // candidate layout: throwaway kernel on the
+                    // permuted matrix (pinning rebuilds it for keeps)
+                    let kernel = build_native(cand.im, csr, registry.threads())?;
+                    let sched = kernel.plan(Some(dt).filter(|&dt| dt < d));
+                    measure(kernel.as_ref(), &sched, d, buffers, rng, &self.policy)?
+                }
+            };
+            planner.observe(cand.class, cand.im, cand.prediction.roof_gflops, gf);
+            self.measurements += 1;
+            cand.measured_gflops = Some(gf);
+            measured.push(cand);
+        }
+
+        // exploit: pin the measured-best candidate
+        let best = measured
+            .iter()
+            .max_by(|a, b| {
+                a.measured_gflops
+                    .unwrap_or(f64::NEG_INFINITY)
+                    .total_cmp(&b.measured_gflops.unwrap_or(f64::NEG_INFINITY))
+            })
+            .expect("k ≥ 1")
+            .clone();
+        // `measured` is in predicted order, so [0] is the predictor's pick
+        let predictor_pick_gf = measured[0].measured_gflops.unwrap_or(0.0);
+        let best_gf = best.measured_gflops.unwrap_or(0.0);
+        if best.reorder != active {
+            registry.apply_reordering(matrix, best.reorder)?;
+        }
+        let decision = RouteDecision {
+            matrix: matrix.to_string(),
+            d,
+            im: best.im,
+            reorder: best.reorder,
+            dt: best.prediction.dt,
+            class: best.class,
+            predicted_gflops: best.prediction.predicted_gflops,
+            measured_gflops: best_gf,
+            enumerated,
+            explored: measured.len(),
+            regret_gflops: (best_gf - predictor_pick_gf).max(0.0),
+        };
+        self.decisions.insert((matrix.to_string(), d), decision.clone());
+        Ok(decision)
+    }
+}
+
+/// One exploration measurement: run the kernel over its schedule with
+/// pooled operands and return GFLOP/s. Kernel errors surface before the
+/// timing loop so a broken candidate fails the tune cleanly instead of
+/// panicking mid-benchmark.
+fn measure(
+    kernel: &dyn Spmm,
+    sched: &Schedule,
+    d: usize,
+    buffers: &mut BufferPool,
+    rng: &mut Prng,
+    policy: &AutotunePolicy,
+) -> Result<f64> {
+    let b = buffers.acquire_random(kernel.ncols(), d, rng);
+    let mut c = buffers.acquire(kernel.nrows(), d);
+    if let Err(e) = kernel.execute_with(&b, &mut c, sched) {
+        buffers.release(b);
+        buffers.release(c);
+        return Err(e);
+    }
+    let iters = policy.explore_iters.max(1);
+    let r = bench_adaptive(0, iters, iters * 4, policy.explore_min_secs, |_| {
+        kernel.execute_with(&b, &mut c, sched).expect("kernel failed mid-exploration");
+    });
+    buffers.release(b);
+    buffers.release(c);
+    Ok(gflops(spmm_flops(kernel.nnz(), d), r.median_secs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, mesh2d, MeshKind, Prng};
+    use crate::model::{MachineParams, Roofline};
+    use crate::sparse::reorder::random_permutation;
+
+    fn fixture() -> (MatrixRegistry, Planner, BufferPool, Prng) {
+        let reg = MatrixRegistry::new(2);
+        let planner =
+            Planner::new(Roofline::new(MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 }));
+        (reg, planner, BufferPool::new(), Prng::new(0x7e57))
+    }
+
+    fn quick_policy() -> AutotunePolicy {
+        AutotunePolicy {
+            explore_iters: 1,
+            explore_min_secs: 0.0,
+            ..AutotunePolicy::enabled()
+        }
+    }
+
+    #[test]
+    fn tune_pins_a_decision_and_reuses_it() {
+        let (mut reg, planner, mut buf, mut rng) = fixture();
+        let a = erdos_renyi(250, 250, 5.0, &mut Prng::new(0xF00));
+        reg.register("er", a, &[Impl::Csr, Impl::Csb]).unwrap();
+        let mut tuner = Autotuner::new(quick_policy());
+        let dec = tuner.tune("er", 8, &mut reg, &planner, &mut buf, &mut rng).unwrap();
+        assert_eq!(dec.matrix, "er");
+        assert!(dec.measured_gflops > 0.0);
+        assert!(dec.explored >= 1 && dec.explored <= 3);
+        assert!(dec.enumerated >= 2, "impls × reorderings must be enumerated");
+        assert!(dec.regret_gflops >= 0.0);
+        let n = tuner.measurements();
+        assert_eq!(n, dec.explored);
+        // second tune for the same (matrix, d): pinned, no re-measure
+        let dec2 = tuner.tune("er", 8, &mut reg, &planner, &mut buf, &mut rng).unwrap();
+        assert_eq!(tuner.measurements(), n);
+        assert_eq!(dec2.im, dec.im);
+        assert_eq!(dec2.reorder, dec.reorder);
+        // and the decision is listed
+        assert_eq!(tuner.decisions().len(), 1);
+        assert!(tuner.decision("er", 8).is_some());
+        assert!(tuner.decision("er", 16).is_none());
+    }
+
+    #[test]
+    fn winner_is_measured_best_and_registry_follows_the_reorder() {
+        let (mut reg, planner, mut buf, mut rng) = fixture();
+        // a scrambled mesh — RCM is a live candidate here
+        let mut g = Prng::new(0xF01);
+        let a = mesh2d(14, MeshKind::Triangular, 0.9, &mut g);
+        let scrambled =
+            permute_symmetric(&a, &random_permutation(a.nrows, &mut g));
+        reg.register("mesh", scrambled, &[Impl::Csr, Impl::Csb]).unwrap();
+        let mut tuner = Autotuner::new(quick_policy());
+        let dec = tuner.tune("mesh", 8, &mut reg, &planner, &mut buf, &mut rng).unwrap();
+        let e = reg.get("mesh").unwrap();
+        assert_eq!(e.reordering(), dec.reorder, "registry must pin the winner's layout");
+        assert_eq!(e.classification.class, dec.class);
+        if dec.reorder != Reordering::None {
+            assert!(e.permutation().is_some());
+        }
+        // the pinned impl is servable right now
+        assert!(e.kernel(dec.im, 8).is_some());
+    }
+
+    #[test]
+    fn later_widths_explore_formats_on_the_frozen_layout() {
+        let (mut reg, planner, mut buf, mut rng) = fixture();
+        let a = erdos_renyi(200, 200, 5.0, &mut Prng::new(0xF04));
+        reg.register("m", a, &[Impl::Csr, Impl::Opt, Impl::Csb]).unwrap();
+        let mut tuner = Autotuner::new(quick_policy());
+        let d1 = tuner.tune("m", 4, &mut reg, &planner, &mut buf, &mut rng).unwrap();
+        assert_eq!(d1.enumerated, 9, "first tune: 3 impls × 3 reorderings");
+        let d2 = tuner.tune("m", 16, &mut reg, &planner, &mut buf, &mut rng).unwrap();
+        assert_eq!(d2.reorder, d1.reorder, "layout is frozen after the first decision");
+        assert_eq!(d2.enumerated, 3, "later widths explore formats only");
+        assert_eq!(reg.get("m").unwrap().reordering(), d1.reorder);
+    }
+
+    #[test]
+    fn forget_unpins_and_unknown_matrix_errors() {
+        let (mut reg, planner, mut buf, mut rng) = fixture();
+        let a = erdos_renyi(150, 150, 4.0, &mut Prng::new(0xF02));
+        reg.register("m", a, &[Impl::Csr]).unwrap();
+        let mut tuner = Autotuner::new(quick_policy());
+        tuner.tune("m", 4, &mut reg, &planner, &mut buf, &mut rng).unwrap();
+        assert!(tuner.decision("m", 4).is_some());
+        tuner.forget("m");
+        assert!(tuner.decision("m", 4).is_none());
+        assert!(tuner.tune("ghost", 4, &mut reg, &planner, &mut buf, &mut rng).is_err());
+    }
+
+    #[test]
+    fn top_k_one_is_pure_predict_and_commit() {
+        let (mut reg, planner, mut buf, mut rng) = fixture();
+        let a = erdos_renyi(150, 150, 4.0, &mut Prng::new(0xF03));
+        reg.register("m", a, &[Impl::Csr, Impl::Opt, Impl::Csb]).unwrap();
+        let mut tuner = Autotuner::new(AutotunePolicy { top_k: 1, ..quick_policy() });
+        let dec = tuner.tune("m", 8, &mut reg, &planner, &mut buf, &mut rng).unwrap();
+        assert_eq!(dec.explored, 1);
+        assert_eq!(dec.regret_gflops, 0.0, "nothing to regret with one sample");
+        assert_eq!(tuner.measurements(), 1);
+    }
+}

@@ -29,6 +29,7 @@
 //! assert_eq!((c.nrows, c.ncols), (4, 4));
 //! ```
 
+use crate::coordinator::autotune::RouteDecision;
 use crate::coordinator::job::{JobRecord, PredictionReport};
 use crate::gen::Prng;
 use crate::spmm::DenseMatrix;
@@ -156,10 +157,18 @@ pub struct BatchReport {
     /// Dense-buffer allocations during the batch.
     pub buffer_misses: usize,
     /// Execution schedules served from the per-(matrix, impl, threads,
-    /// d) cache during the batch.
+    /// d, dt) cache during the batch.
     pub schedule_hits: usize,
     /// Execution schedules that had to be planned during the batch.
     pub schedule_misses: usize,
+    /// Routing decisions in force for this batch's (matrix, d) pairs
+    /// (empty when autotuning is off). Filled by the engine after
+    /// aggregation.
+    pub routes: Vec<RouteDecision>,
+    /// Exploration measurements the autotuner ran *during* this batch
+    /// — 0 proves a re-submitted batch was served entirely from pinned
+    /// decisions.
+    pub explore_measurements: usize,
 }
 
 impl BatchReport {
@@ -187,7 +196,20 @@ impl BatchReport {
             buffer_misses,
             schedule_hits,
             schedule_misses,
+            routes: Vec::new(),
+            explore_measurements: 0,
         }
+    }
+
+    /// Attach the routing context (builder-style; used by the engine).
+    pub fn with_routing(
+        mut self,
+        routes: Vec<RouteDecision>,
+        explore_measurements: usize,
+    ) -> BatchReport {
+        self.routes = routes;
+        self.explore_measurements = explore_measurements;
+        self
     }
 
     /// Jobs in the batch.
@@ -239,9 +261,18 @@ impl BatchReport {
 
     /// One-line human summary.
     pub fn summary_line(&self) -> String {
+        let routing = if self.routes.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", {} routed decisions ({} explored this batch)",
+                self.routes.len(),
+                self.explore_measurements
+            )
+        };
         format!(
             "batch: {} jobs, {:.2} GFLOP/s aggregate, geomean(meas/pred)={:.2}, \
-             buffer hit rate {:.0}%, schedule hit rate {:.0}%, wall {:.1} ms",
+             buffer hit rate {:.0}%, schedule hit rate {:.0}%, wall {:.1} ms{routing}",
             self.n_jobs(),
             self.aggregate_gflops(),
             self.prediction.geomean_ratio,
@@ -264,6 +295,7 @@ mod tests {
             class: SparsityClass::Random,
             d,
             chosen: Impl::Csr,
+            reorder: crate::sparse::Reordering::None,
             dt: d,
             predicted_gflops: gf,
             ai: 0.1,

@@ -1,14 +1,15 @@
 //! The engine: classify → predict → route → execute → learn.
 
-use crate::error::{Error, Result};
-use crate::membench;
-use crate::metrics::{bench_adaptive, gflops, spmm_flops, Timer};
-use crate::model::{MachineParams, Roofline};
+use crate::coordinator::autotune::{Autotuner, AutotunePolicy, RouteDecision};
 use crate::coordinator::batch::{BatchReport, BufferPool};
 use crate::coordinator::job::{JobRecord, JobSpec, PredictionReport};
 use crate::coordinator::planner::Planner;
 use crate::coordinator::registry::MatrixRegistry;
+use crate::error::{Error, Result};
 use crate::gen::Prng;
+use crate::membench;
+use crate::metrics::{bench_adaptive, gflops, spmm_flops, Timer};
+use crate::model::{MachineParams, Roofline};
 use crate::runtime::{ArtifactManifest, XlaRuntime};
 use crate::sparse::Csr;
 use crate::spmm::Impl;
@@ -31,6 +32,12 @@ pub struct EngineConfig {
     pub impls: Vec<Impl>,
     /// Attach XLA artifacts from this directory when present.
     pub artifacts_dir: Option<String>,
+    /// Structure-adaptive routing policy. Disabled by default: jobs
+    /// route on predictions alone (and `force_impl` always wins).
+    /// When enabled, the first submission per `(matrix, d)` explores
+    /// the candidate space (impl × reordering), pins the measured-best
+    /// plan, and may permute the registered matrix in place.
+    pub autotune: AutotunePolicy,
 }
 
 impl Default for EngineConfig {
@@ -42,6 +49,7 @@ impl Default for EngineConfig {
             warmup: 1,
             impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
             artifacts_dir: Some("artifacts".into()),
+            autotune: AutotunePolicy::default(),
         }
     }
 }
@@ -56,6 +64,8 @@ pub struct Engine {
     rng: Prng,
     /// Recycled dense `B`/`C` operands, shared by every submission.
     buffers: BufferPool,
+    /// The adaptive router (pinned per-(matrix, d) decisions).
+    tuner: Autotuner,
 }
 
 impl Engine {
@@ -78,6 +88,7 @@ impl Engine {
             },
             None => None,
         };
+        let tuner = Autotuner::new(config.autotune.clone());
         Ok(Engine {
             registry: MatrixRegistry::new(config.threads),
             planner,
@@ -86,6 +97,7 @@ impl Engine {
             history: Vec::new(),
             rng: Prng::new(0x5eed),
             buffers: BufferPool::new(),
+            tuner,
         })
     }
 
@@ -104,6 +116,9 @@ impl Engine {
     pub fn register(&mut self, name: &str, csr: Csr) -> Result<()> {
         let impls = self.config.impls.clone();
         self.registry.register(name, csr, &impls)?;
+        // a re-registered matrix invalidates its routing decisions —
+        // its structure may be entirely different
+        self.tuner.forget(name);
         if let Some((rt, manifest)) = &self.xla {
             // staging failure (no fitting artifact) is not an error
             let _ = self.registry.attach_xla(name, rt, manifest);
@@ -121,15 +136,35 @@ impl Engine {
         &self.registry
     }
 
-    /// Execute a job: route to the predicted-best implementation (or
-    /// the forced one), measure, and fold the measurement back into
-    /// the planner's priors.
+    /// Execute a job: route to the pinned autotune decision (when
+    /// enabled), the predicted-best implementation, or the forced one;
+    /// measure; and fold the measurement back into the planner's
+    /// priors.
     pub fn submit(&mut self, job: &JobSpec) -> Result<JobRecord> {
+        // adaptive routing first: tuning may permute the stored matrix
+        // and rebuild kernels, so it must run before the entry borrow
+        let routed: Option<RouteDecision> =
+            if self.config.autotune.enabled && job.force_impl.is_none() {
+                Some(match self.tuner.decision(&job.matrix, job.d) {
+                    Some(dec) => dec.clone(),
+                    None => self.tuner.tune(
+                        &job.matrix,
+                        job.d,
+                        &mut self.registry,
+                        &self.planner,
+                        &mut self.buffers,
+                        &mut self.rng,
+                    )?,
+                })
+            } else {
+                None
+            };
         let entry = self
             .registry
             .get(&job.matrix)
             .ok_or_else(|| Error::Usage(format!("matrix '{}' not registered", job.matrix)))?;
         let cls = entry.classification.clone();
+        let reorder = entry.reordering();
         let available = entry.available(job.d);
         if available.is_empty() {
             return Err(Error::Usage(format!(
@@ -137,8 +172,8 @@ impl Engine {
                 job.matrix, job.d
             )));
         }
-        let chosen = match job.force_impl {
-            Some(im) => {
+        let chosen = match (job.force_impl, &routed) {
+            (Some(im), _) => {
                 if !available.contains(&im) {
                     return Err(Error::Usage(format!(
                         "impl {im} not prepared for '{}' at d={} (have {:?})",
@@ -147,13 +182,25 @@ impl Engine {
                 }
                 self.planner.predict(&cls, job.d, im)
             }
-            None => self.planner.rank(&cls, job.d, &available)[0],
+            (None, Some(dec)) => {
+                // pinned decision: the registry already stores the
+                // winning layout, so predicting the decided impl on the
+                // current classification reflects the refined priors
+                if !available.contains(&dec.im) {
+                    return Err(Error::Usage(format!(
+                        "pinned impl {} not prepared for '{}' at d={}",
+                        dec.im, job.matrix, job.d
+                    )));
+                }
+                self.planner.predict(&cls, job.d, dec.im)
+            }
+            (None, None) => self.planner.rank(&cls, job.d, &available)[0],
         };
 
         let kernel = entry.kernel(chosen.im, job.d).expect("available impl must have kernel");
         // the execution schedule (nnz-balanced partitions + the
         // planner's column tile) is cached per (matrix, impl, threads,
-        // d): repeated and batched submissions plan once
+        // d, dt): repeated and batched submissions plan once
         let sched = self
             .registry
             .schedule(&job.matrix, chosen.im, job.d, chosen.dt)
@@ -186,6 +233,7 @@ impl Engine {
             class: cls.class,
             d: job.d,
             chosen: chosen.im,
+            reorder,
             dt: chosen.dt,
             predicted_gflops: chosen.predicted_gflops,
             ai: chosen.ai,
@@ -212,8 +260,20 @@ impl Engine {
         let t = Timer::start();
         let (hits0, misses0) = (self.buffers.hits, self.buffers.misses);
         let (shits0, smisses0) = self.registry.schedule_cache_stats();
+        let explore0 = self.tuner.measurements();
         let records = self.run_batch(jobs)?;
         let (shits, smisses) = self.registry.schedule_cache_stats();
+        // routing context: the decision in force for each distinct
+        // (matrix, d) the batch actually routed — forced-impl jobs
+        // bypass the router and must not claim its decisions
+        let mut routes: Vec<RouteDecision> = Vec::new();
+        for job in jobs.iter().filter(|j| j.force_impl.is_none()) {
+            if let Some(dec) = self.tuner.decision(&job.matrix, job.d) {
+                if !routes.iter().any(|r| r.matrix == dec.matrix && r.d == dec.d) {
+                    routes.push(dec.clone());
+                }
+            }
+        }
         Ok(BatchReport::of(
             records,
             t.elapsed_secs(),
@@ -221,12 +281,31 @@ impl Engine {
             self.buffers.misses - misses0,
             shits - shits0,
             smisses - smisses0,
-        ))
+        )
+        .with_routing(routes, self.tuner.measurements() - explore0))
     }
 
     /// The engine's dense-operand buffer pool (reuse statistics).
     pub fn buffer_pool(&self) -> &BufferPool {
         &self.buffers
+    }
+
+    /// The adaptive router (pinned decisions, exploration counters).
+    pub fn autotuner(&self) -> &Autotuner {
+        &self.tuner
+    }
+
+    /// Eagerly tune one `(matrix, d)` (normally tuning happens lazily
+    /// on first submission). Returns the pinned decision.
+    pub fn tune(&mut self, matrix: &str, d: usize) -> Result<RouteDecision> {
+        self.tuner.tune(
+            matrix,
+            d,
+            &mut self.registry,
+            &self.planner,
+            &mut self.buffers,
+            &mut self.rng,
+        )
     }
 
     /// Every record executed so far.
@@ -253,7 +332,7 @@ impl Engine {
             }
             let best = rs
                 .iter()
-                .max_by(|a, b| a.measured_gflops.partial_cmp(&b.measured_gflops).unwrap())
+                .max_by(|a, b| a.measured_gflops.total_cmp(&b.measured_gflops))
                 .unwrap();
             // what would the planner pick now?
             let impls: Vec<Impl> = rs.iter().map(|r| r.chosen).collect();
@@ -278,6 +357,10 @@ mod tests {
     use crate::gen::{erdos_renyi, mesh2d, MeshKind, Prng};
 
     fn test_engine() -> Engine {
+        test_engine_with(AutotunePolicy::default())
+    }
+
+    fn test_engine_with(autotune: AutotunePolicy) -> Engine {
         Engine::new(EngineConfig {
             threads: 2,
             machine: Some(MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 }),
@@ -285,8 +368,13 @@ mod tests {
             warmup: 0,
             impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
             artifacts_dir: None,
+            autotune,
         })
         .unwrap()
+    }
+
+    fn quick_autotune() -> AutotunePolicy {
+        AutotunePolicy { explore_iters: 1, explore_min_secs: 0.0, ..AutotunePolicy::enabled() }
     }
 
     #[test]
@@ -370,6 +458,50 @@ mod tests {
         assert!(e.submit_batch(&jobs).is_err());
         // the job before the failure still landed in history
         assert_eq!(e.history().len(), 1);
+    }
+
+    #[test]
+    fn autotuned_submit_pins_then_serves_from_cache() {
+        let mut e = test_engine_with(quick_autotune());
+        let a = erdos_renyi(300, 300, 5.0, &mut Prng::new(187));
+        e.register("m", a).unwrap();
+        let jobs: Vec<JobSpec> = (0..3).map(|_| JobSpec::new("m", 8)).collect();
+        let cold = e.submit_batch(&jobs).unwrap();
+        assert_eq!(cold.routes.len(), 1, "one (matrix, d) → one decision");
+        assert!(cold.explore_measurements >= 1, "first batch must explore");
+        let dec = cold.routes[0].clone();
+        assert_eq!((dec.matrix.as_str(), dec.d), ("m", 8));
+        // every job in the batch ran on the pinned impl
+        assert!(cold.records.iter().all(|r| r.chosen == dec.im));
+        // re-submitting measures nothing new and reuses schedules
+        let warm = e.submit_batch(&jobs).unwrap();
+        assert_eq!(warm.explore_measurements, 0, "decisions are pinned");
+        assert_eq!(warm.schedule_misses, 0);
+        assert!(warm.records.iter().all(|r| r.chosen == dec.im));
+        // forced jobs bypass the router
+        let rec = e.submit(&JobSpec::new("m", 8).with_impl(Impl::Opt)).unwrap();
+        assert_eq!(rec.chosen, Impl::Opt);
+    }
+
+    #[test]
+    fn autotune_reorders_registry_and_records_follow() {
+        use crate::sparse::reorder::{permute_symmetric, random_permutation};
+        let mut e = test_engine_with(quick_autotune());
+        let mut g = Prng::new(188);
+        let mesh = mesh2d(14, MeshKind::Triangular, 0.9, &mut g);
+        let scrambled = permute_symmetric(&mesh, &random_permutation(mesh.nrows, &mut g));
+        e.register("mesh", scrambled).unwrap();
+        let rec = e.submit(&JobSpec::new("mesh", 8)).unwrap();
+        let dec = e.autotuner().decision("mesh", 8).unwrap().clone();
+        // the record reports the layout it actually executed under
+        assert_eq!(rec.reorder, dec.reorder);
+        assert_eq!(e.registry().get("mesh").unwrap().reordering(), dec.reorder);
+        assert_eq!(rec.chosen, dec.im);
+        assert!(dec.measured_gflops > 0.0 && dec.enumerated >= 6);
+        // re-registration forgets the decision
+        let a2 = erdos_renyi(100, 100, 3.0, &mut Prng::new(189));
+        e.register("mesh", a2).unwrap();
+        assert!(e.autotuner().decision("mesh", 8).is_none());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Job and result types for the engine.
 
 use crate::gen::SparsityClass;
+use crate::sparse::Reordering;
 use crate::spmm::Impl;
 
 /// A unit of work: multiply registered matrix `matrix` by a dense
@@ -35,6 +36,9 @@ pub struct JobRecord {
     pub d: usize,
     /// Implementation the job ran on.
     pub chosen: Impl,
+    /// Matrix ordering the job executed under (non-identity only when
+    /// the autotuner pinned a reordering).
+    pub reorder: Reordering,
     /// Column-tile width the schedule executed with (`dt == d` means
     /// untiled).
     pub dt: usize,
@@ -112,6 +116,7 @@ mod tests {
             class: SparsityClass::Random,
             d: 4,
             chosen: Impl::Csr,
+            reorder: Reordering::None,
             dt: 4,
             predicted_gflops: pred,
             ai: 0.1,

@@ -23,13 +23,23 @@
 //! The XLA/PJRT artifact slots in as one more backend when an artifact
 //! matching the job's static shape exists (and the crate was built
 //! with the `xla` feature).
+//!
+//! With autotuning enabled ([`AutotunePolicy`]), step 3 becomes a full
+//! explore/exploit loop: the first submission per `(matrix, d)`
+//! *measures* the top predicted candidates across formats **and**
+//! reorderings (RCM / degree-sort / as-registered), feeds every
+//! measurement back into the priors, and pins the measured winner —
+//! converting the stored matrix in the registry so later submissions
+//! execute the winning layout from cache (see [`Autotuner`]).
 
+mod autotune;
 mod batch;
 mod engine;
 mod job;
 mod planner;
 mod registry;
 
+pub use autotune::{Autotuner, AutotunePolicy, Candidate, RouteDecision};
 pub use batch::{BatchReport, BufferPool};
 pub use engine::{Engine, EngineConfig};
 pub use job::{JobRecord, JobSpec, PredictionReport};

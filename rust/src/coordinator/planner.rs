@@ -183,7 +183,7 @@ impl Planner {
     pub fn rank(&self, cls: &Classification, d: usize, candidates: &[Impl]) -> Vec<Prediction> {
         let mut preds: Vec<Prediction> =
             candidates.iter().map(|&im| self.predict(cls, d, im)).collect();
-        preds.sort_by(|a, b| b.predicted_gflops.partial_cmp(&a.predicted_gflops).unwrap());
+        preds.sort_by(|a, b| b.predicted_gflops.total_cmp(&a.predicted_gflops));
         preds
     }
 
@@ -199,6 +199,17 @@ impl Planner {
         let mut priors = self.priors.lock().unwrap();
         let slot = priors.entry((class, im)).or_insert_with(|| seed_prior(class, im));
         *slot = (1.0 - self.ema) * *slot + self.ema * eff;
+    }
+
+    /// Snapshot of every materialised `(class, impl)` prior, sorted
+    /// for stable rendering — the `route` report prints this so the
+    /// effect of autotune feedback on the priors is visible.
+    pub fn priors_snapshot(&self) -> Vec<(SparsityClass, Impl, f64)> {
+        let priors = self.priors.lock().unwrap();
+        let mut v: Vec<(SparsityClass, Impl, f64)> =
+            priors.iter().map(|(&(c, i), &p)| (c, i, p)).collect();
+        v.sort_by_key(|(c, i, _)| (format!("{c}"), format!("{i}")));
+        v
     }
 
     /// The untiled model AI the planner would use for a classified

@@ -6,9 +6,9 @@
 //! which excludes loading and data-structure construction from the
 //! timed region. Execution *schedules* (nnz-balanced partitions +
 //! column tiles, `spmm::Schedule`) are built lazily on first use and
-//! cached per `(matrix, impl, threads, d)`, so repeated and batched
-//! submissions pay planning cost once; hit/miss counters make the
-//! reuse observable in batch reports.
+//! cached per `(matrix, impl, threads, d, dt)`, so repeated and
+//! batched submissions pay planning cost once; hit/miss counters make
+//! the reuse observable in batch reports.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -17,18 +17,37 @@ use std::sync::{Arc, Mutex};
 use crate::error::{Error, Result};
 use crate::pattern::{classify, Classification};
 use crate::runtime::{ArtifactManifest, XlaRuntime, XlaSpmm};
-use crate::sparse::Csr;
+use crate::sparse::{reorder::permute_symmetric, Csr, Reordering};
 use crate::spmm::{build_native, Impl, Schedule, Spmm};
 
 /// One registered matrix with its prepared kernels.
+///
+/// Storage is permutation-aware: the autotuner may pin a reordering
+/// (`P·A·Pᵀ`), in which case `csr` holds the *active* permuted matrix
+/// (all kernels and schedules are built from it), `base` keeps the
+/// matrix as registered, and `perm` records the row/column map
+/// (`perm[old] = new`) so callers can translate between the registered
+/// and the served row space.
 pub struct MatrixEntry {
     pub name: String,
+    /// Classification of the **active** (possibly permuted) matrix —
+    /// reordering can legitimately move a matrix between classes;
+    /// that is the router's whole lever.
     pub classification: Classification,
     /// Prepared kernels by implementation. XLA kernels are per-d, so
     /// they key on (impl, d); native kernels use d = 0 (any width).
     kernels: HashMap<(Impl, usize), Box<dyn Spmm>>,
-    /// The CSR source (kept for late kernel construction).
+    /// The active CSR (kept for late kernel construction).
     csr: Csr,
+    /// The matrix as registered; populated on first conversion.
+    base: Option<Csr>,
+    /// Active reordering strategy.
+    reorder: Reordering,
+    /// Active permutation (`perm[old] = new`); `None` for identity.
+    perm: Option<Vec<u32>>,
+    /// Native implementations prepared at registration (rebuilt on
+    /// conversion).
+    impls: Vec<Impl>,
     threads: usize,
 }
 
@@ -63,16 +82,43 @@ impl MatrixEntry {
     pub fn nnz(&self) -> usize {
         self.csr.nnz()
     }
+
+    /// The active (possibly permuted) matrix kernels execute on.
+    pub fn csr(&self) -> &Csr {
+        &self.csr
+    }
+
+    /// The matrix as registered, before any pinned reordering.
+    pub fn base_csr(&self) -> &Csr {
+        self.base.as_ref().unwrap_or(&self.csr)
+    }
+
+    /// The active reordering strategy.
+    pub fn reordering(&self) -> Reordering {
+        self.reorder
+    }
+
+    /// The active permutation (`perm[old] = new`), if any. Callers
+    /// serving results back in the registered row order apply the
+    /// inverse ([`crate::sparse::reorder::invert_permutation`]).
+    pub fn permutation(&self) -> Option<&[u32]> {
+        self.perm.as_deref()
+    }
+
+    /// Native implementations prepared for this entry.
+    pub fn native_impls(&self) -> &[Impl] {
+        &self.impls
+    }
 }
 
 /// Registry of prepared matrices.
 pub struct MatrixRegistry {
     entries: HashMap<String, MatrixEntry>,
     threads: usize,
-    /// Execution schedules keyed by `(matrix, impl, threads, d)`.
-    /// Interior-mutable so lookups work through `&self` while kernels
-    /// are borrowed.
-    schedules: Mutex<HashMap<(String, Impl, usize, usize), Arc<Schedule>>>,
+    /// Execution schedules keyed by `(matrix, impl, threads, d, dt)`
+    /// (`dt` normalised: untiled stores `d`). Interior-mutable so
+    /// lookups work through `&self` while kernels are borrowed.
+    schedules: Mutex<HashMap<(String, Impl, usize, usize, usize), Arc<Schedule>>>,
     sched_hits: AtomicUsize,
     sched_misses: AtomicUsize,
 }
@@ -93,41 +139,100 @@ impl MatrixRegistry {
     pub fn register(&mut self, name: impl Into<String>, csr: Csr, impls: &[Impl]) -> Result<()> {
         let name = name.into();
         let classification = classify(&csr);
+        let native: Vec<Impl> = impls.iter().copied().filter(|&im| im != Impl::Xla).collect();
         let mut kernels: HashMap<(Impl, usize), Box<dyn Spmm>> = HashMap::new();
-        for &im in impls {
-            if im == Impl::Xla {
-                continue; // staged separately via attach_xla
-            }
+        for &im in &native {
             kernels.insert((im, 0), build_native(im, &csr, self.threads)?);
         }
         // re-registering a name invalidates its cached schedules
         self.schedules.lock().unwrap().retain(|k, _| k.0 != name);
         self.entries.insert(
             name.clone(),
-            MatrixEntry { name, classification, kernels, csr, threads: self.threads },
+            MatrixEntry {
+                name,
+                classification,
+                kernels,
+                csr,
+                base: None,
+                reorder: Reordering::None,
+                perm: None,
+                impls: native,
+                threads: self.threads,
+            },
         );
         Ok(())
     }
 
-    /// The cached execution schedule for `(name, im, threads, d)`,
+    /// Worker threads kernels are prepared with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Convert the stored matrix to a reordering: permute `P·A·Pᵀ`
+    /// from the *registered* matrix, rebuild every native kernel on the
+    /// permuted layout, reclassify, and invalidate the entry's cached
+    /// schedules (they partition the old row order). Staged XLA
+    /// kernels are dropped — the AOT artifact embeds the old structure
+    /// — and must be re-attached if wanted. `Reordering::None` restores
+    /// the registered ordering. Returns `false` when the requested
+    /// reordering was already active (nothing rebuilt).
+    pub fn apply_reordering(&mut self, name: &str, r: Reordering) -> Result<bool> {
+        let threads = self.threads;
+        let entry = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| Error::Usage(format!("matrix '{name}' not registered")))?;
+        if entry.reorder == r {
+            return Ok(false);
+        }
+        if r != Reordering::None && entry.csr.nrows != entry.csr.ncols {
+            return Err(Error::Usage(format!(
+                "reordering {r} needs a square matrix; '{name}' is {}x{}",
+                entry.csr.nrows, entry.csr.ncols
+            )));
+        }
+        let base = entry.base.take().unwrap_or_else(|| entry.csr.clone());
+        let perm = r.permutation(&base);
+        let csr = match &perm {
+            Some(p) => permute_symmetric(&base, p),
+            None => base.clone(),
+        };
+        let mut kernels: HashMap<(Impl, usize), Box<dyn Spmm>> = HashMap::new();
+        for &im in &entry.impls {
+            kernels.insert((im, 0), build_native(im, &csr, threads)?);
+        }
+        entry.classification = classify(&csr);
+        entry.kernels = kernels;
+        entry.csr = csr;
+        entry.base = if r == Reordering::None { None } else { Some(base) };
+        entry.reorder = r;
+        entry.perm = perm;
+        // cached schedules partition the old ordering — drop them
+        self.schedules.lock().unwrap().retain(|k, _| k.0 != name);
+        Ok(true)
+    }
+
+    /// The cached execution schedule for `(name, im, threads, d, dt)`,
     /// building it (with column-tile width `dt`) on first use. `dt ≥ d`
-    /// plans untiled. Returns `None` when the matrix or kernel is
-    /// unknown. The cache key deliberately excludes `dt` — the
-    /// planner's tile choice is a pure function of `(matrix, d)` — but
-    /// a cached entry whose tile disagrees with the request (a caller
-    /// violating that purity, or a planner whose ladder changed) is
-    /// replanned and replaced rather than silently served stale.
+    /// plans untiled and is normalised to `d` in the key, so every
+    /// untiled spelling shares one entry. Returns `None` when the
+    /// matrix or kernel is unknown.
+    ///
+    /// The key includes the tile width: two plans for the same
+    /// `(matrix, impl, d)` with different `dt` (the autotuner measures
+    /// exactly such pairs) are distinct cache entries — an earlier
+    /// revision keyed on `(matrix, impl, threads, d)` only, so the
+    /// second tile width evicted the first and alternating requests
+    /// replanned every time.
     pub fn schedule(&self, name: &str, im: Impl, d: usize, dt: usize) -> Option<Arc<Schedule>> {
         let entry = self.entries.get(name)?;
         let kernel = entry.kernel(im, d)?;
         let tile = if dt >= d { None } else { Some(dt) };
-        let key = (name.to_string(), im, self.threads, d);
+        let key = (name.to_string(), im, self.threads, d, tile.unwrap_or(d));
         let mut map = self.schedules.lock().unwrap();
         if let Some(s) = map.get(&key) {
-            if s.tile == tile {
-                self.sched_hits.fetch_add(1, Ordering::Relaxed);
-                return Some(s.clone());
-            }
+            self.sched_hits.fetch_add(1, Ordering::Relaxed);
+            return Some(s.clone());
         }
         self.sched_misses.fetch_add(1, Ordering::Relaxed);
         let s = Arc::new(kernel.plan(tile));
@@ -183,6 +288,10 @@ impl MatrixRegistry {
             .ok_or_else(|| Error::Usage(format!("matrix '{name}' not registered")))?;
         let k = build_native(im, &entry.csr, entry.threads)?;
         entry.kernels.insert((im, 0), k);
+        // conversions rebuild from `impls` — keep it in sync
+        if !entry.impls.contains(&im) {
+            entry.impls.push(im);
+        }
         Ok(())
     }
 
@@ -236,16 +345,80 @@ mod tests {
         // unknown matrix / unprepared kernel
         assert!(reg.schedule("ghost", Impl::Csr, 4, 4).is_none());
         assert!(reg.schedule("m", Impl::Opt, 4, 4).is_none());
-        // a conflicting tile request replans instead of serving stale
-        let s4 = reg.schedule("m", Impl::Csr, 16, 4).unwrap();
-        assert_eq!(s4.tile, Some(4));
-        assert_eq!(reg.schedule_cache_stats(), (1, 3));
         // re-registration invalidates
         let a2 = erdos_renyi(300, 300, 5.0, &mut Prng::new(173));
         reg.register("m", a2, &[Impl::Csr]).unwrap();
         reg.schedule("m", Impl::Csr, 16, 8).unwrap();
-        assert_eq!(reg.schedule_cache_stats(), (1, 4));
+        assert_eq!(reg.schedule_cache_stats(), (1, 3));
         assert!(reg.schedule_hit_rate() > 0.15);
+    }
+
+    #[test]
+    fn two_tile_widths_for_one_impl_and_d_coexist() {
+        // regression: the cache key used to omit dt, so these two plans
+        // collided — the second evicted the first and alternating
+        // requests replanned (and, before the tile check, one silently
+        // executed with the other's tiling)
+        let mut reg = MatrixRegistry::new(2);
+        let a = erdos_renyi(300, 300, 5.0, &mut Prng::new(174));
+        reg.register("m", a, &[Impl::Csr]).unwrap();
+        let s8 = reg.schedule("m", Impl::Csr, 16, 8).unwrap();
+        let s4 = reg.schedule("m", Impl::Csr, 16, 4).unwrap();
+        assert_eq!(s8.tile, Some(8));
+        assert_eq!(s4.tile, Some(4));
+        assert_eq!(reg.schedule_cache_stats(), (0, 2));
+        // both entries live: re-requesting either is a hit on its own plan
+        let s8b = reg.schedule("m", Impl::Csr, 16, 8).unwrap();
+        let s4b = reg.schedule("m", Impl::Csr, 16, 4).unwrap();
+        assert!(Arc::ptr_eq(&s8, &s8b));
+        assert!(Arc::ptr_eq(&s4, &s4b));
+        assert_eq!(reg.schedule_cache_stats(), (2, 2));
+        // every untiled spelling (dt ≥ d) normalises to one entry
+        let u1 = reg.schedule("m", Impl::Csr, 16, 16).unwrap();
+        let u2 = reg.schedule("m", Impl::Csr, 16, 999).unwrap();
+        assert!(Arc::ptr_eq(&u1, &u2));
+        assert_eq!(u1.tile, None);
+        assert_eq!(reg.schedule_cache_stats(), (3, 3));
+    }
+
+    #[test]
+    fn apply_reordering_converts_reclassifies_and_invalidates() {
+        use crate::gen::{mesh2d, MeshKind};
+        use crate::sparse::reorder::{bandwidth, permute_symmetric, random_permutation};
+        use crate::sparse::Reordering;
+        let mut reg = MatrixRegistry::new(2);
+        let mut rng = Prng::new(175);
+        let a = mesh2d(16, MeshKind::Triangular, 0.9, &mut rng);
+        let p = random_permutation(a.nrows, &mut rng);
+        let scrambled = permute_symmetric(&a, &p);
+        reg.register("m", scrambled.clone(), &[Impl::Csr, Impl::Csb]).unwrap();
+        reg.schedule("m", Impl::Csr, 8, 8).unwrap();
+        assert_eq!(reg.schedule_cache_stats().1, 1);
+
+        assert!(reg.apply_reordering("m", Reordering::Rcm).unwrap());
+        let e = reg.get("m").unwrap();
+        assert_eq!(e.reordering(), Reordering::Rcm);
+        assert!(e.permutation().is_some());
+        assert_eq!(e.nnz(), scrambled.nnz());
+        assert_eq!(e.base_csr().to_dense(), scrambled.to_dense());
+        assert!(bandwidth(e.csr()) < bandwidth(&scrambled), "RCM must tighten the band");
+        // kernels rebuilt on the permuted layout for every prepared impl
+        assert!(e.kernel(Impl::Csr, 4).is_some());
+        assert!(e.kernel(Impl::Csb, 4).is_some());
+        // schedules were invalidated: the same request plans again
+        reg.schedule("m", Impl::Csr, 8, 8).unwrap();
+        assert_eq!(reg.schedule_cache_stats().1, 2);
+
+        // re-applying the active reordering is a no-op
+        assert!(!reg.apply_reordering("m", Reordering::Rcm).unwrap());
+        // None restores the registered ordering exactly
+        assert!(reg.apply_reordering("m", Reordering::None).unwrap());
+        let e = reg.get("m").unwrap();
+        assert_eq!(e.reordering(), Reordering::None);
+        assert!(e.permutation().is_none());
+        assert_eq!(e.csr().to_dense(), scrambled.to_dense());
+
+        assert!(reg.apply_reordering("ghost", Reordering::Rcm).is_err());
     }
 
     #[test]

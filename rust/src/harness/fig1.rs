@@ -112,7 +112,7 @@ impl Fig1Data {
             .find(|(i, _)| *i == im)?
             .1
             .iter()
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
             .map(|&(d, _)| d)
     }
 }

@@ -1,4 +1,11 @@
 //! Summary statistics over benchmark samples.
+//!
+//! All entry points tolerate non-finite samples: a zero-elapsed timer
+//! or a failed run can yield `NaN`/`inf` GFLOP/s, and a single such
+//! sample must degrade one cell of a report, not kill a whole batch.
+//! Sorting uses `f64::total_cmp` (never panics), and [`Summary::of`]
+//! computes its statistics over the finite samples only, flagging how
+//! many were dropped in [`Summary::n_nonfinite`].
 
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
@@ -19,13 +26,16 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Median (0.0 for empty input). Uses the midpoint convention for even
-/// lengths.
+/// lengths. Sorts with the IEEE total order, so `NaN` samples sort to
+/// the ends instead of panicking the comparator; callers who need
+/// NaN-free statistics should go through [`Summary::of`], which
+/// filters them.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -46,6 +56,7 @@ pub fn ci95_halfwidth(xs: &[f64]) -> f64 {
 /// Five-number-ish summary of a sample set.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Samples provided (finite and not).
     pub n: usize,
     pub mean: f64,
     pub median: f64,
@@ -54,28 +65,34 @@ pub struct Summary {
     pub max: f64,
     /// 95% CI half-width on the mean.
     pub ci95: f64,
+    /// Samples dropped for being `NaN`/`inf` — nonzero flags a
+    /// degenerate measurement (zero-elapsed timer, failed run).
+    pub n_nonfinite: usize,
 }
 
 impl Summary {
-    /// Compute the summary of `xs`.
+    /// Compute the summary of `xs`. Non-finite samples are excluded
+    /// from every statistic and counted in `n_nonfinite`.
     pub fn of(xs: &[f64]) -> Self {
+        let finite: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
         let (mut mn, mut mx) = (f64::INFINITY, f64::NEG_INFINITY);
-        for &x in xs {
+        for &x in &finite {
             mn = mn.min(x);
             mx = mx.max(x);
         }
-        if xs.is_empty() {
+        if finite.is_empty() {
             mn = 0.0;
             mx = 0.0;
         }
         Summary {
             n: xs.len(),
-            mean: mean(xs),
-            median: median(xs),
-            stddev: stddev(xs),
+            mean: mean(&finite),
+            median: median(&finite),
+            stddev: stddev(&finite),
             min: mn,
             max: mx,
-            ci95: ci95_halfwidth(xs),
+            ci95: ci95_halfwidth(&finite),
+            n_nonfinite: xs.len() - finite.len(),
         }
     }
 }
@@ -105,6 +122,7 @@ mod tests {
         assert_eq!(s.min, -2.0);
         assert_eq!(s.max, 3.0);
         assert_eq!(s.n, 3);
+        assert_eq!(s.n_nonfinite, 0);
     }
 
     #[test]
@@ -114,5 +132,33 @@ mod tests {
         assert_eq!(s.mean, 0.0);
         assert_eq!(stddev(&[1.0]), 0.0);
         assert_eq!(ci95_halfwidth(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn median_tolerates_nan_without_panicking() {
+        // regression: partial_cmp().unwrap() panicked here
+        let m = median(&[2.0, f64::NAN, 1.0, 3.0]);
+        assert!(m.is_finite() || m.is_nan()); // no panic is the contract
+        // total order puts NaN last, so the finite median survives odd n
+        assert_eq!(median(&[2.0, 1.0, f64::NAN, 3.0, 0.0]), 2.0);
+    }
+
+    #[test]
+    fn summary_filters_and_flags_nonfinite() {
+        let s = Summary::of(&[1.0, f64::NAN, 3.0, f64::INFINITY, 2.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.n_nonfinite, 2);
+        assert_eq!(s.median, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!((s.min, s.max), (1.0, 3.0));
+        assert!(s.stddev.is_finite() && s.ci95.is_finite());
+    }
+
+    #[test]
+    fn summary_of_all_nonfinite_is_zeroed() {
+        let s = Summary::of(&[f64::NAN, f64::NEG_INFINITY]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.n_nonfinite, 2);
+        assert_eq!((s.mean, s.median, s.min, s.max), (0.0, 0.0, 0.0, 0.0));
     }
 }

@@ -23,6 +23,16 @@ pub struct Classification {
     pub rationale: String,
 }
 
+impl Classification {
+    /// `"<class> — <rationale>"`, for routing tables and logs. The
+    /// autotuner classifies each *reordered* layout of a matrix, so
+    /// reports print this per candidate to show the class moving under
+    /// permutation.
+    pub fn summary(&self) -> String {
+        format!("{} — {}", self.class, self.rationale)
+    }
+}
+
 /// Decision thresholds (documented constants rather than magic
 /// numbers; the integration tests pin the classifier's behaviour on
 /// every generator).

@@ -42,7 +42,7 @@ pub fn fit_power_law(degrees: &[usize], k_min: usize) -> Option<PowerLawFit> {
     // CDF is evaluated at the bucket boundary k + 0.5 (each integer k
     // collects the continuous mass of [k − 0.5, k + 0.5)).
     let mut sorted = tail.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let n = sorted.len() as f64;
     let mut ks: f64 = 0.0;
     let mut i = 0usize;

@@ -1,4 +1,5 @@
-//! Machine-readable perf artifacts: `BENCH_schedule.json`.
+//! Machine-readable perf artifacts: `BENCH_schedule.json`,
+//! `BENCH_route.json`.
 //!
 //! The benches (`bench_schedule`, `bench_batch`, `bench_workloads`)
 //! used to report throughput as prose only, so the repo's perf
@@ -18,7 +19,7 @@
 use crate::error::{Error, Result};
 
 /// One measured cell: a bench × matrix × implementation × dense-width
-/// point at a specific column-tile width.
+/// point at a specific column-tile width and matrix ordering.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PerfRecord {
     /// Which bench produced the record (e.g. `bench_schedule`).
@@ -33,8 +34,41 @@ pub struct PerfRecord {
     pub d: usize,
     /// Column-tile width the run executed with (`dt == d` = untiled).
     pub dt: usize,
+    /// Matrix ordering the run executed under (`none`, `rcm`,
+    /// `degree`). Routing records carry the router's pinned choice;
+    /// older artifacts without the key parse as `none`.
+    pub reorder: String,
+    /// Model-predicted GFLOP/s for this cell (0 when the bench does
+    /// not predict; optional in the artifact for back-compat).
+    pub predicted_gflops: f64,
     /// Measured GFLOP/s.
     pub gflops: f64,
+}
+
+impl PerfRecord {
+    /// A record with the routing extras defaulted (`reorder = "none"`,
+    /// no prediction) — what the pre-routing benches emit.
+    pub fn basic(
+        bench: impl Into<String>,
+        matrix: impl Into<String>,
+        class: impl Into<String>,
+        impl_name: impl Into<String>,
+        d: usize,
+        dt: usize,
+        gflops: f64,
+    ) -> PerfRecord {
+        PerfRecord {
+            bench: bench.into(),
+            matrix: matrix.into(),
+            class: class.into(),
+            impl_name: impl_name.into(),
+            d,
+            dt,
+            reorder: "none".into(),
+            predicted_gflops: 0.0,
+            gflops,
+        }
+    }
 }
 
 fn esc(s: &str) -> String {
@@ -47,15 +81,19 @@ impl PerfRecord {
         // would serialise as `inf`/`NaN`, which is not JSON and would
         // poison the whole artifact on the next parse — record 0
         let gf = if self.gflops.is_finite() { self.gflops } else { 0.0 };
+        let pred = if self.predicted_gflops.is_finite() { self.predicted_gflops } else { 0.0 };
         format!(
             "{{\"bench\": \"{}\", \"matrix\": \"{}\", \"class\": \"{}\", \
-             \"impl\": \"{}\", \"d\": {}, \"dt\": {}, \"gflops\": {:.4}}}",
+             \"impl\": \"{}\", \"d\": {}, \"dt\": {}, \"reorder\": \"{}\", \
+             \"predicted\": {:.4}, \"gflops\": {:.4}}}",
             esc(&self.bench),
             esc(&self.matrix),
             esc(&self.class),
             esc(&self.impl_name),
             self.d,
             self.dt,
+            esc(&self.reorder),
+            pred,
             gf
         )
     }
@@ -172,6 +210,10 @@ fn parse_record(body: &str) -> Result<PerfRecord> {
         impl_name: field_str(body, "impl")?,
         d: field_num(body, "d")? as usize,
         dt: field_num(body, "dt")? as usize,
+        // routing extras are optional: artifacts written before the
+        // router existed parse with the defaults
+        reorder: field_str(body, "reorder").unwrap_or_else(|_| "none".into()),
+        predicted_gflops: field_num(body, "predicted").unwrap_or(0.0),
         gflops: field_num(body, "gflops")?,
     })
 }
@@ -181,15 +223,7 @@ mod tests {
     use super::*;
 
     fn rec(bench: &str, im: &str, d: usize, dt: usize, gf: f64) -> PerfRecord {
-        PerfRecord {
-            bench: bench.into(),
-            matrix: "er_18_10".into(),
-            class: "Random".into(),
-            impl_name: im.into(),
-            d,
-            dt,
-            gflops: gf,
-        }
+        PerfRecord::basic(bench, "er_18_10", "Random", im, d, dt, gf)
     }
 
     #[test]
@@ -197,9 +231,30 @@ mod tests {
         let mut log = PerfLog::new();
         log.push(rec("bench_schedule", "CSR", 64, 16, 3.25));
         log.push(rec("bench_schedule", "CSR", 64, 64, 2.75));
+        // a routing record with the extras populated
+        log.push(PerfRecord {
+            reorder: "rcm".into(),
+            predicted_gflops: 4.5,
+            ..rec("bench_route", "CSB", 16, 8, 5.25)
+        });
         let text = log.to_json();
         let back = PerfLog::parse(&text).unwrap();
         assert_eq!(back, log);
+        assert_eq!(back.records[2].reorder, "rcm");
+        assert!((back.records[2].predicted_gflops - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pre_routing_artifacts_parse_with_defaults() {
+        // an artifact written before the reorder/predicted keys existed
+        let text = "{\"records\": [\n  {\"bench\": \"bench_batch\", \"matrix\": \"m\", \
+                    \"class\": \"Random\", \"impl\": \"CSR\", \"d\": 4, \"dt\": 4, \
+                    \"gflops\": 1.2500}\n]}\n";
+        let log = PerfLog::parse(text).unwrap();
+        assert_eq!(log.records.len(), 1);
+        assert_eq!(log.records[0].reorder, "none");
+        assert_eq!(log.records[0].predicted_gflops, 0.0);
+        assert!((log.records[0].gflops - 1.25).abs() < 1e-9);
     }
 
     #[test]

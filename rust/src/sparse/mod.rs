@@ -21,6 +21,7 @@ pub use csb::{Csb, CsbBlock};
 pub use csc::Csc;
 pub use csr::Csr;
 pub use ell::Ell;
+pub use reorder::Reordering;
 
 /// The storage formats the engine can route between.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -21,6 +21,66 @@
 use crate::gen::Prng;
 use crate::sparse::{Coo, Csr};
 
+/// A named reordering strategy — the unit the adaptive router
+/// enumerates over (`coordinator::autotune`). Each variant maps to one
+/// of this module's permutation builders; [`Reordering::None`] is the
+/// identity (keep the ordering the matrix arrived in).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Reordering {
+    /// Keep the registered ordering.
+    None,
+    /// Reverse Cuthill–McKee bandwidth reduction
+    /// ([`reverse_cuthill_mckee`]).
+    Rcm,
+    /// Hubs-first degree sort ([`degree_sort`]).
+    DegreeSort,
+}
+
+impl Reordering {
+    /// Every strategy, identity first (candidate enumeration order).
+    pub const ALL: [Reordering; 3] = [Reordering::None, Reordering::Rcm, Reordering::DegreeSort];
+
+    /// The permutation this strategy produces for `a` (`perm[old] =
+    /// new`), or `None` for the identity.
+    pub fn permutation(&self, a: &Csr) -> Option<Vec<u32>> {
+        match self {
+            Reordering::None => None,
+            Reordering::Rcm => Some(reverse_cuthill_mckee(a)),
+            Reordering::DegreeSort => Some(degree_sort(a)),
+        }
+    }
+
+    /// Apply the strategy: `P·A·Pᵀ` for a real permutation, a plain
+    /// clone for the identity.
+    pub fn apply(&self, a: &Csr) -> Csr {
+        match self.permutation(a) {
+            Some(p) => permute_symmetric(a, &p),
+            None => a.clone(),
+        }
+    }
+}
+
+impl std::fmt::Display for Reordering {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Reordering::None => "none",
+            Reordering::Rcm => "rcm",
+            Reordering::DegreeSort => "degree",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Invert a permutation: `inv[perm[i]] = i`.
+pub fn invert_permutation(perm: &[u32]) -> Vec<u32> {
+    debug_assert!(is_permutation(perm));
+    let mut inv = vec![0u32; perm.len()];
+    for (old, &new) in perm.iter().enumerate() {
+        inv[new as usize] = old as u32;
+    }
+    inv
+}
+
 /// Apply a symmetric permutation `P·A·Pᵀ`: entry `(r, c)` moves to
 /// `(perm[r], perm[c])`. `perm` must be a permutation of `0..n`.
 pub fn permute_symmetric(a: &Csr, perm: &[u32]) -> Csr {
@@ -192,12 +252,22 @@ mod tests {
         let mut rng = Prng::new(233);
         let a = mesh2d(10, MeshKind::Road, 0.8, &mut rng);
         let perm = random_permutation(a.nrows, &mut rng);
-        // inverse permutation
-        let mut inv = vec![0u32; perm.len()];
-        for (old, &new) in perm.iter().enumerate() {
-            inv[new as usize] = old as u32;
-        }
+        let inv = invert_permutation(&perm);
         let back = permute_symmetric(&permute_symmetric(&a, &perm), &inv);
         assert_eq!(a.to_dense(), back.to_dense());
+    }
+
+    #[test]
+    fn reordering_enum_applies_its_permutation() {
+        let mut rng = Prng::new(234);
+        let a = mesh2d(12, MeshKind::Triangular, 0.9, &mut rng);
+        assert_eq!(Reordering::None.apply(&a).to_dense(), a.to_dense());
+        assert!(Reordering::None.permutation(&a).is_none());
+        for r in [Reordering::Rcm, Reordering::DegreeSort] {
+            let p = r.permutation(&a).unwrap();
+            assert!(is_permutation(&p), "{r}");
+            assert_eq!(r.apply(&a).to_dense(), permute_symmetric(&a, &p).to_dense());
+        }
+        assert_eq!(Reordering::Rcm.to_string(), "rcm");
     }
 }

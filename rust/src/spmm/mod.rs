@@ -92,8 +92,8 @@ impl std::fmt::Display for Impl {
 /// kernels precompute an nnz-balanced [`Schedule`] at construction and
 /// consume a `&Schedule` at execute time ([`Spmm::execute_with`]);
 /// `execute` runs over the kernel's own base (untiled) schedule. The
-/// coordinator caches tiled schedules per `(matrix, impl, threads, d)`
-/// and calls `execute_with` directly.
+/// coordinator caches tiled schedules per `(matrix, impl, threads, d,
+/// dt)` and calls `execute_with` directly.
 pub trait Spmm: Send + Sync {
     /// Which implementation this is.
     fn id(&self) -> Impl;

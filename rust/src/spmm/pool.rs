@@ -28,7 +28,15 @@
 //! Submissions are serialised: concurrent submitters queue on an
 //! internal lock, and a parallel call made *from inside* a pool job
 //! (nested parallelism) runs inline on the calling worker rather than
-//! deadlocking. The submitting thread participates in every job and
+//! deadlocking.
+//!
+//! **Panic containment:** a participant whose closure panics checks
+//! out of the job (the submitter never hangs), the panic is re-raised
+//! on the submitting thread with the original message, and the worker
+//! retires. Every submission first reaps retired workers and respawns
+//! replacements ([`WorkerPool::reap`]), so the process-global pool
+//! survives a bad kernel indefinitely instead of poisoning every later
+//! submit. The submitting thread participates in every job and
 //! only as many workers as the job requests are woken (per-call
 //! dispatch cost scales with the requested thread count, not the pool
 //! size). A job requesting more parallelism than `workers + 1` grows
@@ -59,8 +67,17 @@ use std::cell::Cell;
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
+
+/// Lock that shrugs off poisoning: every mutex in this module guards
+/// plain bookkeeping (counters, the job slot, join handles), which
+/// stays consistent even if a thread panicked while holding it. A
+/// poisoned lock must not cascade into killing the process-global pool
+/// — a long-lived engine has to survive one bad kernel.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 thread_local! {
     // True while this thread is executing a pool job (worker or
@@ -113,6 +130,9 @@ struct Shared {
     /// Set when any participant's closure panicked; the submitter
     /// re-raises after the job drains.
     panicked: AtomicBool,
+    /// First panic payload of the current job (when stringlike), so the
+    /// submitter's re-raise carries the original message.
+    panic_msg: Mutex<Option<String>>,
 }
 
 /// A persistent pool of parked worker threads executing data-parallel
@@ -127,6 +147,9 @@ pub struct WorkerPool {
     handles: Mutex<Vec<JoinHandle<()>>>,
     /// Cached `handles.len()` for lock-free reads.
     n_workers: AtomicUsize,
+    /// Workers respawned after dying on a panicked job (observability;
+    /// see [`WorkerPool::reap`]).
+    n_respawned: AtomicUsize,
     /// A pool constructed with zero workers never grows: every call
     /// runs inline on the submitter (`SPMM_POOL_THREADS=0`).
     inline_only: bool,
@@ -151,6 +174,7 @@ impl WorkerPool {
             work_done: Condvar::new(),
             cursor: AtomicUsize::new(0),
             panicked: AtomicBool::new(false),
+            panic_msg: Mutex::new(None),
         });
         let handles = (0..workers).map(|i| spawn_worker(&shared, i)).collect();
         WorkerPool {
@@ -158,6 +182,7 @@ impl WorkerPool {
             submit_lock: Mutex::new(()),
             handles: Mutex::new(handles),
             n_workers: AtomicUsize::new(workers),
+            n_respawned: AtomicUsize::new(0),
             inline_only: workers == 0,
         }
     }
@@ -165,6 +190,44 @@ impl WorkerPool {
     /// Number of background worker threads (excluding submitters).
     pub fn workers(&self) -> usize {
         self.n_workers.load(Ordering::Relaxed)
+    }
+
+    /// Workers respawned so far after dying on a panicked job.
+    pub fn respawned(&self) -> usize {
+        self.n_respawned.load(Ordering::Relaxed)
+    }
+
+    /// Detect and replace dead workers. A worker that ran a panicking
+    /// closure checks out of its job (so the submitter never hangs) and
+    /// then retires rather than trusting its own state; every
+    /// submission calls this before publishing, so a long-lived engine
+    /// survives a bad kernel at full strength. Public so callers can
+    /// also heal the pool eagerly (tests, health checks). Returns how
+    /// many workers were respawned by this call.
+    pub fn reap(&self) -> usize {
+        let _guard = plock(&self.submit_lock);
+        self.reap_locked()
+    }
+
+    /// [`WorkerPool::reap`] body; caller must hold `submit_lock` so no
+    /// job is in flight while handles are swapped.
+    fn reap_locked(&self) -> usize {
+        if self.inline_only {
+            return 0;
+        }
+        let mut handles = plock(&self.handles);
+        let mut respawned = 0;
+        for (i, h) in handles.iter_mut().enumerate() {
+            if h.is_finished() {
+                let dead = std::mem::replace(h, spawn_worker(&self.shared, i));
+                // the panic already surfaced to that job's submitter;
+                // the join result is just the corpse
+                let _ = dead.join();
+                respawned += 1;
+            }
+        }
+        self.n_respawned.fetch_add(respawned, Ordering::Relaxed);
+        respawned
     }
 
     /// Run `f(range)` over a static split of `[0, n)` into `parts`
@@ -223,7 +286,10 @@ impl WorkerPool {
         max_participants: usize,
         f: &(dyn Fn(Range<usize>) + Sync),
     ) {
-        let guard = self.submit_lock.lock().unwrap();
+        let guard = plock(&self.submit_lock);
+        // heal before publishing: workers that died on a previous
+        // panicked job are replaced so this job runs at full strength
+        self.reap_locked();
         // the submitter takes one participant seat; grow the pool so
         // the remaining seats have a worker each (old scoped-thread
         // semantics: oversubscription beyond the core count is the
@@ -231,7 +297,7 @@ impl WorkerPool {
         let wanted = max_participants - 1;
         let have = self.n_workers.load(Ordering::Relaxed);
         if wanted > have {
-            let mut handles = self.handles.lock().unwrap();
+            let mut handles = plock(&self.handles);
             for i in have..wanted {
                 handles.push(spawn_worker(&self.shared, i));
             }
@@ -239,9 +305,10 @@ impl WorkerPool {
         }
         let desc = JobDesc { func: erase(f), n, parts, chunk };
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = plock(&self.shared.state);
             self.shared.cursor.store(0, Ordering::SeqCst);
             self.shared.panicked.store(false, Ordering::SeqCst);
+            *plock(&self.shared.panic_msg) = None;
             st.job = Some(desc);
             st.epoch = st.epoch.wrapping_add(1);
             st.pending = wanted;
@@ -258,26 +325,33 @@ impl WorkerPool {
         IN_POOL.with(|c| c.set(true));
         let r = catch_unwind(AssertUnwindSafe(|| run_job(&self.shared, &desc)));
         IN_POOL.with(|c| c.set(false));
-        if r.is_err() {
-            self.shared.panicked.store(true, Ordering::SeqCst);
+        if let Err(payload) = r {
+            note_panic(&self.shared, payload.as_ref());
         }
 
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = plock(&self.shared.state);
         // Cancel seats nobody claimed: the submitter's own claim loop
         // exhausted the cursor, so an unclaimed seat just means that
         // worker wasn't needed (or its wakeup raced a faster sibling
         // that re-parked and absorbed the notify). Without this the
         // wait below could hang on a worker that never saw the job.
-        st.active -= st.pending;
+        st.active = st.active.saturating_sub(st.pending);
         st.pending = 0;
         while st.active > 0 {
-            st = self.shared.work_done.wait(st).unwrap();
+            st = self
+                .shared
+                .work_done
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
         }
         st.job = None;
         drop(st);
         drop(guard);
         if self.shared.panicked.load(Ordering::SeqCst) {
-            panic!("worker thread panicked");
+            match plock(&self.shared.panic_msg).take() {
+                Some(msg) => panic!("worker thread panicked: {msg}"),
+                None => panic!("worker thread panicked"),
+            }
         }
     }
 }
@@ -285,13 +359,26 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = plock(&self.shared.state);
             st.shutdown = true;
         }
         self.shared.work_ready.notify_all();
-        for h in self.handles.lock().unwrap().drain(..) {
+        for h in plock(&self.handles).drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// Record a participant panic: set the sticky flag and keep the first
+/// stringlike payload so the submitter's re-raise names the cause.
+fn note_panic(shared: &Shared, payload: &(dyn std::any::Any + Send)) {
+    shared.panicked.store(true, Ordering::SeqCst);
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()));
+    if let Some(msg) = msg {
+        plock(&shared.panic_msg).get_or_insert(msg);
     }
 }
 
@@ -323,7 +410,7 @@ fn worker_loop(shared: &Arc<Shared>) {
     let mut seen = 0u64;
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = plock(&shared.state);
             loop {
                 if st.shutdown {
                     return;
@@ -339,19 +426,32 @@ fn worker_loop(shared: &Arc<Shared>) {
                         }
                     }
                 }
-                st = shared.work_ready.wait(st).unwrap();
+                st = shared.work_ready.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         };
         IN_POOL.with(|c| c.set(true));
         let r = catch_unwind(AssertUnwindSafe(|| run_job(shared, &job)));
         IN_POOL.with(|c| c.set(false));
-        if r.is_err() {
-            shared.panicked.store(true, Ordering::SeqCst);
+        if let Err(payload) = &r {
+            note_panic(shared, payload.as_ref());
         }
-        let mut st = shared.state.lock().unwrap();
-        st.active -= 1;
+        // check out BEFORE retiring — the submitter is blocked on
+        // `active` draining to zero and must never hang on a dead worker
+        let mut st = plock(&shared.state);
+        st.active = st.active.saturating_sub(1);
         if st.active == 0 {
             shared.work_done.notify_all();
+        }
+        drop(st);
+        if r.is_err() {
+            // a panicking closure may have left this thread's stack in
+            // a state the kernel authors never reasoned about (the
+            // closure is not unwind-safe by contract) — retire and let
+            // the next submission respawn a clean replacement.
+            // Pre-respawn revisions kept looping here, and a poisoned
+            // shared mutex then turned one bad kernel into
+            // `panic!("worker thread panicked")` on every later submit.
+            return;
         }
     }
 }
@@ -618,11 +718,59 @@ mod tests {
             });
         }));
         assert!(r.is_err(), "panic must propagate to the submitter");
+        // the original message survives the re-raise
+        let msg = r.unwrap_err();
+        let msg = msg.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("boom"), "payload was '{msg}'");
         // the pool is still usable afterwards
         let sum = AtomicU64::new(0);
         pool.ranges(100, 4, |r| {
             sum.fetch_add(r.len() as u64, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn dead_workers_are_respawned_and_submissions_keep_working() {
+        let pool = WorkerPool::new(2);
+        // Induce worker deaths: the closure panics only on pool worker
+        // threads; the submitting test thread paces itself so the
+        // workers get a chance to claim chunks before the cursor drains.
+        let on_worker = || {
+            std::thread::current().name().is_some_and(|n| n.starts_with("spmm-worker"))
+        };
+        let mut killed_some = false;
+        for _ in 0..5 {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.chunks_dynamic(40, 3, 1, |_r| {
+                    if on_worker() {
+                        panic!("induced worker panic");
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                });
+            }));
+            if r.is_err() {
+                killed_some = true;
+                break;
+            }
+        }
+        assert!(killed_some, "no worker ever claimed a chunk (scheduling fluke ×5)");
+        // the dead worker is detected and replaced — poll reap() until
+        // the OS reports the thread finished
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while pool.respawned() == 0 && std::time::Instant::now() < deadline {
+            pool.reap();
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(pool.respawned() >= 1, "dead worker never respawned");
+        assert_eq!(pool.workers(), 2, "pool strength must be restored");
+        // and the healed pool still computes correct full coverage
+        let hits: Vec<AtomicU64> = (0..200).map(|_| AtomicU64::new(0)).collect();
+        pool.ranges(200, 3, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 }

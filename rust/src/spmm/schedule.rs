@@ -26,7 +26,7 @@
 //! instead of chunking ad hoc; `Spmm::execute` runs over a base
 //! schedule precomputed at kernel construction (untiled, nnz-balanced),
 //! and the coordinator caches tiled schedules per
-//! `(matrix, impl, threads, d)` so repeated and batched submissions pay
+//! `(matrix, impl, threads, d, dt)` so repeated and batched submissions pay
 //! planning cost once (see `coordinator/registry.rs`).
 
 use std::ops::Range;

@@ -15,6 +15,7 @@ fn engine() -> Engine {
         warmup: 0,
         impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
         artifacts_dir: None,
+        ..EngineConfig::default()
     })
     .unwrap()
 }

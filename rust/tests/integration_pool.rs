@@ -108,6 +108,7 @@ fn test_engine() -> Engine {
         warmup: 0,
         impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
         artifacts_dir: None,
+        ..EngineConfig::default()
     })
     .unwrap()
 }

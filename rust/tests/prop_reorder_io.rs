@@ -1,0 +1,128 @@
+//! Round-trip properties for MatrixMarket IO and symmetric
+//! reordering: write → read must preserve CSR exactly (general and
+//! symmetric files), and `P·A·Pᵀ` must preserve nonzeros, symmetry,
+//! and SpMM results against a permuted dense reference — the
+//! invariants the adaptive router's conversions lean on.
+
+use spmm_roofline::gen::{chung_lu, erdos_renyi, mesh2d, ChungLuParams, MeshKind, Prng};
+use spmm_roofline::sparse::mm_io::{read_coo, write_csr, write_csr_symmetric};
+use spmm_roofline::sparse::reorder::{
+    degree_sort, permute_symmetric, random_permutation, reverse_cuthill_mckee,
+};
+use spmm_roofline::sparse::Csr;
+use spmm_roofline::spmm::{build_native, reference_spmm, DenseMatrix, Impl};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("spmm_roofline_prop_reorder_io");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn general_write_read_preserves_csr_exactly() {
+    let mut rng = Prng::new(0x10A);
+    // ER graphs are not symmetric in general — the general path must
+    // not care
+    let a = erdos_renyi(120, 90, 4.0, &mut rng);
+    let path = tmp("general.mtx");
+    write_csr(&path, &a).unwrap();
+    let back = Csr::from_coo(read_coo(&path).unwrap());
+    // exact: same structure AND bit-identical values ({:.17e} survives
+    // the f64 round-trip)
+    assert_eq!(a, back);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn symmetric_write_read_preserves_csr_exactly() {
+    let mut rng = Prng::new(0x10B);
+    let a = mesh2d(12, MeshKind::Triangular, 0.9, &mut rng);
+    assert_eq!(a.transpose(), a, "generator must hand us a symmetric mesh");
+    let path = tmp("symmetric.mtx");
+    write_csr_symmetric(&path, &a).unwrap();
+    // the file stores only the lower triangle
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with("%%MatrixMarket matrix coordinate real symmetric"));
+    let back = Csr::from_coo(read_coo(&path).unwrap());
+    assert_eq!(a, back);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn symmetric_writer_rejects_asymmetric_input() {
+    let mut rng = Prng::new(0x10C);
+    let a = erdos_renyi(50, 50, 3.0, &mut rng);
+    if a.transpose() == a {
+        return; // astronomically unlikely; nothing to assert then
+    }
+    assert!(write_csr_symmetric(tmp("bad.mtx"), &a).is_err());
+    // rectangular input is rejected outright
+    let r = erdos_renyi(8, 10, 2.0, &mut rng);
+    assert!(write_csr_symmetric(tmp("rect.mtx"), &r).is_err());
+}
+
+/// `expected[perm[r]][k] = Σ_j A[r][j] · B[perm[j]][k]` — the permuted
+/// dense reference for `C = (P·A·Pᵀ)·B`.
+fn permuted_dense_spmm(a: &Csr, perm: &[u32], b: &DenseMatrix) -> DenseMatrix {
+    let (n, d) = (a.nrows, b.ncols);
+    let ad = a.to_dense();
+    let mut c = DenseMatrix::zeros(n, d);
+    for r in 0..n {
+        for j in 0..n {
+            let v = ad[r * n + j];
+            if v == 0.0 {
+                continue;
+            }
+            for k in 0..d {
+                let add = v * b.get(perm[j] as usize, k);
+                let cur = c.get(perm[r] as usize, k);
+                c.set(perm[r] as usize, k, cur + add);
+            }
+        }
+    }
+    c
+}
+
+#[test]
+fn permutations_preserve_nnz_symmetry_and_spmm_results() {
+    let mut rng = Prng::new(0x10D);
+    let cases: Vec<(&str, Csr)> = vec![
+        ("mesh", mesh2d(10, MeshKind::Triangular, 0.9, &mut rng)),
+        (
+            "scalefree",
+            chung_lu(ChungLuParams { n: 90, alpha: 2.2, avg_deg: 6.0, k_min: 2.0 }, &mut rng),
+        ),
+    ];
+    for (name, a) in cases {
+        let symmetric = a.transpose() == a;
+        let perms: Vec<(&str, Vec<u32>)> = vec![
+            ("rcm", reverse_cuthill_mckee(&a)),
+            ("degree", degree_sort(&a)),
+            ("random", random_permutation(a.nrows, &mut rng)),
+        ];
+        for (pname, perm) in perms {
+            let p = permute_symmetric(&a, &perm);
+            assert_eq!(p.nnz(), a.nnz(), "{name}/{pname}: nnz must be preserved");
+            if symmetric {
+                assert_eq!(p.transpose(), p, "{name}/{pname}: symmetry must be preserved");
+            }
+            // SpMM through the permuted matrix matches the permuted
+            // dense reference — first with the serial oracle, then
+            // through a real parallel kernel
+            let b = DenseMatrix::random(a.nrows, 4, &mut rng);
+            let want = permuted_dense_spmm(&a, &perm, &b);
+            let got = reference_spmm(&p, &b);
+            assert!(
+                got.max_abs_diff(&want) < 1e-10,
+                "{name}/{pname}: reference SpMM diverged"
+            );
+            let kernel = build_native(Impl::Csr, &p, 2).unwrap();
+            let mut c = DenseMatrix::zeros(a.nrows, 4);
+            kernel.execute(&b, &mut c).unwrap();
+            assert!(
+                c.max_abs_diff(&want) < 1e-10,
+                "{name}/{pname}: CSR kernel SpMM diverged"
+            );
+        }
+    }
+}

@@ -154,6 +154,7 @@ fn schedule_cache_reuses_across_repeated_and_batched_submissions() {
         warmup: 0,
         impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
         artifacts_dir: None,
+        ..EngineConfig::default()
     })
     .unwrap();
     let a = erdos_renyi(400, 400, 5.0, &mut Prng::new(0x304));
