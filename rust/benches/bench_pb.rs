@@ -1,0 +1,219 @@
+//! Bench: the propagation-blocking kernel through the adaptive router.
+//!
+//! PB is the first kernel whose predicted win/loss flips with
+//! structure: its traffic model (`model/pb.rs`) is
+//! structure-independent, so it ranks inside the router's explored
+//! top-k on random/scale-free matrices (where the gathering kernels'
+//! priors collapse) and far outside it on banded/blocked ones. This
+//! bench drives that flip end to end:
+//!
+//! 1. registers a **showcase random matrix** sized so `B` is
+//!    DRAM-resident even in smoke mode (`n` floored at 2¹⁸ — PB's win
+//!    condition cannot exist on a cache-resident `B`), plus an R-MAT
+//!    (scale-free-ish), a banded and a mesh proxy at the configured
+//!    scale for contrast;
+//! 2. autotunes every `(matrix, d)` with reordering fixed to `none`
+//!    and `top_k` covering the whole format space, so PB is *measured*
+//!    everywhere its prediction earns a look;
+//! 3. prints the pinned decisions and whether any random/scale-free
+//!    matrix routed to PB (`REPRO_STRICT=1` turns that expectation
+//!    into a hard exit code — kept opt-in, because on hosts with very
+//!    large L3 the showcase `B` may still be cache-resident and PB
+//!    honestly loses);
+//! 4. appends one `BENCH_route.json` record per pinned decision plus
+//!    one forced-PB record per `(matrix, d)` (bench = `bench_pb`), so
+//!    PB's predicted-vs-measured line is tracked across PRs whether or
+//!    not it wins, and asserts the merge preserved every other
+//!    bench's records.
+//!
+//! `REPRO_SCALE` (default 0.25) and `REPRO_ITERS` (default 3) tune
+//! runtime; `REPRO_FAST=1` injects nominal machine parameters instead
+//! of running STREAM (CI smoke mode).
+
+use spmm_roofline::coordinator::{AutotunePolicy, Engine, EngineConfig, JobSpec};
+use spmm_roofline::gen::{banded, erdos_renyi, mesh2d, rmat, MeshKind, Prng};
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::report::{PerfLog, PerfRecord};
+use spmm_roofline::sparse::Reordering;
+use spmm_roofline::spmm::Impl;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env1(key: &str) -> bool {
+    std::env::var(key).map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    let scale = envf("REPRO_SCALE", 0.25);
+    let iters = envf("REPRO_ITERS", 3.0) as usize;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let machine = if env1("REPRO_FAST") {
+        Some(MachineParams { beta_gbs: 25.0, pi_gflops: 100.0 })
+    } else {
+        None
+    };
+    let mut engine = Engine::new(EngineConfig {
+        threads,
+        machine,
+        iters,
+        warmup: 1,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb, Impl::Pb],
+        artifacts_dir: None,
+        autotune: AutotunePolicy {
+            enabled: true,
+            // measure every format candidate: the question is whether
+            // PB's measurement confirms its structure-independent
+            // prediction, not whether it squeaked into a top-3
+            top_k: 16,
+            // format choice is PB's axis; reordering exploration would
+            // only add noise (and RCM on the showcase sizes, time)
+            reorderings: vec![Reordering::None],
+            explore_iters: iters.max(1),
+            explore_min_secs: 0.02,
+        },
+    })
+    .expect("engine construction");
+    println!(
+        "PB bench: β={:.1} GB/s π={:.0} GFLOP/s, {} threads, scale={scale}",
+        engine.machine().beta_gbs,
+        engine.machine().pi_gflops,
+        threads
+    );
+
+    let mut rng = Prng::new(0x9b9b);
+    // The showcase: a uniform-random matrix whose dense operand is
+    // DRAM-resident. 8·n·d at n = 2¹⁸, d = 4 is 8 MiB — beyond the
+    // halved-L2 residency threshold everywhere and beyond L3 on most
+    // hosts. Floored, not scaled: PB's win condition does not exist at
+    // cache-resident smoke sizes.
+    let n_random = (((1u64 << 20) as f64 * scale) as usize).max(1 << 18);
+    let er = erdos_renyi(n_random, n_random, 16.0, &mut rng);
+    println!("registered er_pb ({} rows, {} nnz)", er.nrows, er.nnz());
+    engine.register("er_pb", er).expect("register");
+    let rm = rmat(14, 12.0, 0.57, 0.19, 0.19, &mut rng);
+    println!("registered rmat_pb ({} rows, {} nnz)", rm.nrows, rm.nnz());
+    engine.register("rmat_pb", rm).expect("register");
+    // contrast set: structures whose models keep PB out of the top-k
+    let scaled = |base: usize| ((base as f64 * scale) as usize).max(256);
+    let band = banded(scaled(1 << 16), 8, 0.4, &mut rng);
+    println!("registered banded_pb ({} rows, {} nnz)", band.nrows, band.nnz());
+    engine.register("banded_pb", band).expect("register");
+    let mesh_side = ((scaled(1 << 14) as f64).sqrt() as usize).max(16);
+    let mesh = mesh2d(mesh_side, MeshKind::Road, 0.62, &mut rng);
+    println!("registered mesh_pb ({} rows, {} nnz)", mesh.nrows, mesh.nnz());
+    engine.register("mesh_pb", mesh).expect("register");
+
+    // small d is PB's regime: random 8d-byte gathers waste most of
+    // each cache line, while PB's spill traffic stays width-linear
+    let mut jobs = Vec::new();
+    for name in ["er_pb", "rmat_pb", "banded_pb", "mesh_pb"] {
+        for d in [2usize, 4, 8] {
+            jobs.push(JobSpec::new(name, d));
+        }
+    }
+
+    println!("\n— tuning batch (all format candidates measured per matrix × d) —");
+    let tuned = engine.submit_batch(&jobs).expect("tuning batch");
+    println!("  {}", tuned.summary_line());
+    for dec in engine.autotuner().decisions() {
+        println!("  {}", dec.summary());
+    }
+
+    // every registered matrix must have enumerated PB as a candidate
+    for name in ["er_pb", "rmat_pb", "banded_pb", "mesh_pb"] {
+        let entry = engine.registry().get(name).expect("registered");
+        assert!(
+            entry.native_impls().contains(&Impl::Pb),
+            "{name}: PB must be a prepared routing candidate"
+        );
+    }
+
+    let pb_wins: Vec<String> = engine
+        .autotuner()
+        .decisions()
+        .iter()
+        .filter(|dec| dec.im == Impl::Pb)
+        .map(|dec| format!("{} d={}", dec.matrix, dec.d))
+        .collect();
+    if pb_wins.is_empty() {
+        println!(
+            "\nNOTE: no (matrix, d) routed to PB on this host — expected when the \
+             showcase B still fits in cache (large L3). Predictions are recorded either way."
+        );
+    } else {
+        println!("\nrouted to PB: {}", pb_wins.join(", "));
+    }
+    if env1("REPRO_STRICT") && pb_wins.is_empty() {
+        eprintln!("STRICT: no random/scale-free matrix routed to PB");
+        std::process::exit(1);
+    }
+
+    // Artifact: pinned decisions + a forced-PB measurement per cell,
+    // so BENCH_route.json carries PB's predicted-vs-measured line even
+    // where it lost the routing. Count foreign records before/after to
+    // prove the merge preserves them (the CI smoke gate).
+    let prior = std::fs::read_to_string("BENCH_route.json")
+        .ok()
+        .and_then(|t| PerfLog::parse(&t).ok())
+        .unwrap_or_default();
+    let foreign_before = prior.records.iter().filter(|r| r.bench != "bench_pb").count();
+
+    let mut log = PerfLog::new();
+    for dec in engine.autotuner().decisions() {
+        log.push(PerfRecord {
+            reorder: dec.reorder.to_string(),
+            predicted_gflops: dec.predicted_gflops,
+            ..PerfRecord::basic(
+                "bench_pb",
+                dec.matrix.clone(),
+                dec.class.to_string(),
+                dec.im.to_string(),
+                dec.d,
+                dec.dt.min(dec.d),
+                dec.measured_gflops,
+            )
+        });
+    }
+    println!("\n— forced-PB line (predicted vs measured per matrix × d) —");
+    for job in &jobs {
+        let forced = job.clone().with_impl(Impl::Pb);
+        let rec = engine.submit(&forced).expect("forced PB job");
+        println!(
+            "  {} d={}: pred {:.2} meas {:.2} GFLOP/s (ratio {:.2})",
+            rec.matrix,
+            rec.d,
+            rec.predicted_gflops,
+            rec.measured_gflops,
+            rec.prediction_ratio()
+        );
+        log.push(PerfRecord {
+            predicted_gflops: rec.predicted_gflops,
+            ..PerfRecord::basic(
+                "bench_pb",
+                format!("{}+forced", rec.matrix),
+                rec.class.to_string(),
+                Impl::Pb.to_string(),
+                rec.d,
+                rec.dt.min(rec.d),
+                rec.measured_gflops,
+            )
+        });
+    }
+    log.merge_save("BENCH_route.json").expect("write BENCH_route.json");
+
+    let merged = PerfLog::parse(&std::fs::read_to_string("BENCH_route.json").unwrap())
+        .expect("re-parse artifact");
+    let foreign_after = merged.records.iter().filter(|r| r.bench != "bench_pb").count();
+    assert_eq!(
+        foreign_before, foreign_after,
+        "merge_save must preserve other benches' records"
+    );
+    let own = merged.records.iter().filter(|r| r.bench == "bench_pb").count();
+    assert_eq!(own, log.records.len(), "all bench_pb records must land");
+    println!(
+        "wrote BENCH_route.json ({} bench_pb records, {} foreign records preserved)",
+        own, foreign_after
+    );
+}

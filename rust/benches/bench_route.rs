@@ -56,7 +56,9 @@ fn main() {
         machine,
         iters,
         warmup: 1,
-        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+        // the paper trio plus the propagation-blocking kernel — the
+        // structure-adversarial candidate the router must arbitrate
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb, Impl::Pb],
         artifacts_dir: Some("artifacts".into()),
         autotune: AutotunePolicy::enabled(),
     })

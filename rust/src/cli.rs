@@ -111,12 +111,14 @@ pub fn usage() -> String {
      ablate-reorder ladder hubs engine route\n\
      flags: --scale X --threads N --iters N --warmup N --d 1,4,16,64 \
      --impls CSR,MKL,CSB --out DIR --artifacts DIR --config FILE --autotune\n\
-     --impls accepts any of CSR,MKL/OPT,CSB,ELL,BSR,XLA or the shorthand \
-     `all` (= the five native kernels); `engine` prepares exactly the \
-     requested set, so ELL/BSR are opt-in there\n\
+     --impls accepts any of CSR,MKL/OPT,CSB,ELL,BSR,PB,XLA or the shorthand \
+     `all` (= the six native kernels); `engine` prepares exactly the \
+     requested set, so ELL/BSR/PB are opt-in there\n\
      --autotune turns on the structure-adaptive router for `engine` \
-     (the `route` command always autotunes: it explores impl × \
-     reordering per matrix, pins the winner, and writes BENCH_route.json)"
+     and adds the propagation-blocking kernel (PB) to the candidate \
+     set; the `route` command always autotunes: it explores impl × \
+     reordering (PB included) per matrix, pins the winner, and writes \
+     BENCH_route.json"
         .to_string()
 }
 
@@ -373,12 +375,19 @@ fn cmd_hubs() -> Result<()> {
 
 fn cmd_engine(cfg: &ExperimentConfig) -> Result<()> {
     use crate::coordinator::{AutotunePolicy, Engine, EngineConfig, JobSpec};
+    let mut impls: Vec<Impl> = cfg.impls.iter().copied().filter(|&i| i != Impl::Xla).collect();
+    // the adaptive router always enumerates the propagation-blocking
+    // kernel — the candidate whose predicted win/loss flips with
+    // structure is exactly what the explore/exploit loop is for
+    if cfg.autotune && !impls.contains(&Impl::Pb) {
+        impls.push(Impl::Pb);
+    }
     let mut engine = Engine::new(EngineConfig {
         threads: cfg.threads,
         machine: None,
         iters: cfg.iters,
         warmup: cfg.warmup,
-        impls: cfg.impls.iter().copied().filter(|&i| i != Impl::Xla).collect(),
+        impls,
         artifacts_dir: Some(cfg.artifacts_dir.clone()),
         autotune: if cfg.autotune {
             AutotunePolicy::enabled()
@@ -454,12 +463,20 @@ fn cmd_route(cfg: &ExperimentConfig) -> Result<()> {
     use crate::report::{PerfLog, PerfRecord};
     use crate::sparse::reorder::{permute_symmetric, random_permutation};
 
+    let mut route_impls: Vec<Impl> =
+        cfg.impls.iter().copied().filter(|&i| i != Impl::Xla).collect();
+    // PB rides along as the structure-adversarial candidate (see
+    // cmd_engine); `--impls` can still force a narrower set apart
+    // from it
+    if !route_impls.contains(&Impl::Pb) {
+        route_impls.push(Impl::Pb);
+    }
     let mut engine = Engine::new(EngineConfig {
         threads: cfg.threads,
         machine: None,
         iters: cfg.iters,
         warmup: cfg.warmup,
-        impls: cfg.impls.iter().copied().filter(|&i| i != Impl::Xla).collect(),
+        impls: route_impls,
         artifacts_dir: Some(cfg.artifacts_dir.clone()),
         autotune: AutotunePolicy::enabled(),
     })?;

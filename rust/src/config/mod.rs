@@ -126,6 +126,7 @@ pub fn parse_impl(s: &str) -> Result<Impl> {
         "CSB" => Ok(Impl::Csb),
         "ELL" => Ok(Impl::Ell),
         "BSR" => Ok(Impl::Bsr),
+        "PB" => Ok(Impl::Pb),
         "XLA" => Ok(Impl::Xla),
         other => Err(Error::Config(format!("unknown impl '{other}'"))),
     }

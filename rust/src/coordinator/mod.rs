@@ -30,7 +30,20 @@
 //! reorderings (RCM / degree-sort / as-registered), feeds every
 //! measurement back into the priors, and pins the measured winner —
 //! converting the stored matrix in the registry so later submissions
-//! execute the winning layout from cache (see [`Autotuner`]).
+//! execute the winning layout from cache (see [`Autotuner`]). The
+//! propagation-blocking kernel ([`crate::spmm::PbSpmm`]) is the
+//! router's structure-adversarial candidate: its predicted line
+//! ([`crate::model::ai_pb`]) ignores structure entirely, so it enters
+//! the explored top-k exactly where the structural models collapse to
+//! the random floor.
+//!
+//! **Hand-off** (classify → predict → schedule → route → execute):
+//! this module owns the three middle stages and the loop around them.
+//! [`MatrixRegistry`] caches the *classify* output and the planned
+//! [`crate::spmm::Schedule`]s; [`Planner`] is *predict*;
+//! [`Engine::submit`]/[`Engine::submit_batch`] perform *route* and
+//! drive *execute* on the kernels ([`crate::spmm`]), then feed the
+//! measurement back into the priors.
 
 mod autotune;
 mod batch;

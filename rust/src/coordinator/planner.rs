@@ -25,7 +25,8 @@ use std::sync::Mutex;
 
 use crate::gen::SparsityClass;
 use crate::membench;
-use crate::model::{AiParams, CacheAwareRoofline, Roofline, SparsityModel};
+use crate::model::{ai_pb_tiled, AiParams, CacheAwareRoofline, Roofline, SparsityModel};
+use crate::spmm::pb_spill_tile;
 use crate::pattern::Classification;
 use crate::spmm::Impl;
 
@@ -85,6 +86,14 @@ fn seed_prior(class: SparsityClass, im: Impl) -> f64 {
         // BSR: dense tiles pay off only where blocks fill (meshes)
         (Blocked, Bsr) => 0.7,
         (_, Bsr) => 0.25,
+        // PB: both phases stream sequentially, so it runs a STREAM-like
+        // fraction of its (flat) roof on every structure — the whole
+        // point of propagation blocking. Its AI is the lowest of any
+        // kernel (model/pb.rs: the spill round trip costs 16·d bytes
+        // per nonzero vs random's 8·d re-load), so this high prior
+        // only wins where the structural models collapse to the random
+        // lower bound and the gathering kernels' priors are low.
+        (_, Pb) => 0.85,
         // ELL ~ CSR minus padding tax (charged separately);
         // XLA ~ ELL minus transfer overhead
         (_, Ell) => 0.9 * seed_prior(class, Csr),
@@ -172,6 +181,19 @@ impl Planner {
             let ai = cls.model.ai(p);
             let ws = CacheAwareRoofline::spmm_working_set(p.n, d);
             (d, ai, self.ladder.attainable_gflops(ai, ws))
+        } else if im == Impl::Pb {
+            // propagation blocking: traffic is structure-independent
+            // (model/pb.rs) and every byte streams, so the roof is the
+            // flat DRAM line regardless of the B working set — the
+            // band/bucket panels are cache-resident by construction.
+            // Tiling buys PB no ceiling hop, but the kernel's spill
+            // arena caps the pass width (`pb_spill_tile`), so the
+            // traffic is charged at exactly the width the execution
+            // will run with — predicted and executed pass counts
+            // agree.
+            let dt = pb_spill_tile(p.nnz, d);
+            let ai = ai_pb_tiled(p, dt);
+            (dt, ai, self.roofline.attainable_gflops(ai))
         } else {
             self.best_tile(cls.model, p)
         };
@@ -327,6 +349,70 @@ mod tests {
         for w in ranked.windows(2) {
             assert!(w[0].predicted_gflops >= w[1].predicted_gflops);
         }
+    }
+
+    #[test]
+    fn pb_prediction_is_structure_independent_and_untiled() {
+        use crate::model::ai_pb;
+        let a = erdos_renyi(2000, 2000, 6.0, &mut Prng::new(167));
+        let cls = classify(&a);
+        let p = planner();
+        let d = 16;
+        let pred = p.predict(&cls, d, Impl::Pb);
+        let params = AiParams::new(cls.stats.n, d, cls.stats.nnz);
+        // small nnz: the spill arena admits the full width, so the
+        // charged tile is the untiled d (pb_spill_tile caps it only
+        // when 8·nnz·d outgrows the arena budget)
+        assert_eq!(pred.dt, d, "arena budget admits the full width here");
+        assert_eq!(pred.dt, pb_spill_tile(cls.stats.nnz, d));
+        assert!((pred.ai - ai_pb(params)).abs() < 1e-15);
+        // the same stats under any other classification predict the
+        // same AI and roof — PB's traffic model ignores structure
+        let mut relabeled = cls.clone();
+        relabeled.class = SparsityClass::Diagonal;
+        relabeled.model = SparsityModel::Diagonal;
+        let pred2 = p.predict(&relabeled, d, Impl::Pb);
+        assert_eq!(pred.ai, pred2.ai);
+        assert_eq!(pred.roof_gflops, pred2.roof_gflops);
+    }
+
+    #[test]
+    fn pb_rank_flips_with_structure() {
+        use crate::model::BandwidthCeiling;
+        // A DRAM-only ladder models the serving regime the router
+        // cares about: B too large for any cache, so every gathering
+        // kernel sits on the flat roof where its low random-class
+        // prior bites. There PB must land in the explored top-3
+        // (beating the gathering CSR/OPT outright; CSB's paper prior
+        // keeps it the predicted leader — measurement arbitrates), and
+        // on a banded matrix it must fall out of the top-3 entirely:
+        // the adversarial candidate whose predicted win/loss flips
+        // with structure.
+        let machine = MachineParams { beta_gbs: 10.0, pi_gflops: 10_000.0 };
+        let dram = vec![BandwidthCeiling {
+            level: "DRAM".into(),
+            capacity_bytes: usize::MAX,
+            beta_gbs: machine.beta_gbs,
+        }];
+        let ladder = CacheAwareRoofline::new(dram, machine.pi_gflops);
+        let p = Planner::with_ladder(Roofline::new(machine), ladder);
+        let a = erdos_renyi(3000, 3000, 8.0, &mut Prng::new(168));
+        let cls = classify(&a);
+        assert_eq!(cls.class, SparsityClass::Random, "{}", cls.rationale);
+        let ranked = p.rank(&cls, 16, &Impl::NATIVE);
+        let pb_at = ranked.iter().position(|r| r.im == Impl::Pb).unwrap();
+        assert!(pb_at < 3, "PB must be explored on random structure: {ranked:?}");
+        let of = |im: Impl| ranked.iter().find(|r| r.im == im).unwrap().predicted_gflops;
+        assert!(of(Impl::Pb) > of(Impl::Csr));
+        assert!(of(Impl::Pb) > of(Impl::Opt));
+        // a banded matrix keeps its structure-sensitive winners: the
+        // diagonal model's AI dwarfs PB's structure-independent line
+        let banded = crate::gen::banded(3000, 8, 0.3, &mut Prng::new(169));
+        let bcls = classify(&banded);
+        assert_eq!(bcls.class, SparsityClass::Diagonal, "{}", bcls.rationale);
+        let branked = p.rank(&bcls, 16, &Impl::NATIVE);
+        let pb_banded = branked.iter().position(|r| r.im == Impl::Pb).unwrap();
+        assert!(pb_banded >= 3, "PB must not be explored on banded structure: {branked:?}");
     }
 
     #[test]

@@ -12,14 +12,17 @@
 //!   paper's Table III dataset at configurable scale.
 //! * **SpMM kernels** ([`spmm`]): row-parallel CSR, a register-blocked
 //!   d-specialised "OPT" kernel (the MKL stand-in), block-parallel CSB,
-//!   padded ELL, and dense-tile BSR — all multithreaded over the
-//!   persistent worker pool (below) and all executing through a
-//!   precomputed [`spmm::Schedule`] (nnz-balanced partitions +
-//!   model-chosen column tiles, `spmm/schedule.rs`).
+//!   padded ELL, dense-tile BSR, and two-phase propagation-blocking PB
+//!   ([`spmm::PbSpmm`]) — all multithreaded over the persistent worker
+//!   pool (below) and all executing through a precomputed
+//!   [`spmm::Schedule`] (nnz-balanced partitions + model-chosen column
+//!   tiles, `spmm/schedule.rs`).
 //! * **Sparsity-aware roofline models** ([`model`]): the paper's four
 //!   arithmetic-intensity formulas (Eqs. 2, 3, 4, 6), the blocked-column
-//!   occupancy model `z = t(1-e^{-D/t})`, and the scale-free hub-mass
-//!   derivation from the appendix.
+//!   occupancy model `z = t(1-e^{-D/t})`, the scale-free hub-mass
+//!   derivation from the appendix, and the structure-*independent*
+//!   propagation-blocking traffic model ([`model::bytes_pb`]). Every
+//!   formula is derived in prose, with worked examples, in `MODELS.md`.
 //! * **Pattern classification** ([`pattern`]): structural statistics
 //!   (bandwidth profile, power-law MLE, block fill) that map a matrix to
 //!   the roofline model that governs it.
@@ -37,6 +40,33 @@
 //! * **Experiment harness** ([`harness`], [`report`]): regenerates every
 //!   table and figure in the paper's evaluation (Table V, Fig. 1, Fig. 2)
 //!   plus model-validation and ablation studies.
+//!
+//! # How the layers hand off
+//!
+//! One request flows **classify → predict → schedule → route →
+//! execute**, each arrow a module boundary:
+//!
+//! 1. **classify** — [`MatrixRegistry`](coordinator::MatrixRegistry)
+//!    registration runs [`pattern::classify()`] once per matrix:
+//!    structural statistics pick the sparsity regime and its
+//!    parameterised model ([`model::SparsityModel`]).
+//! 2. **predict** — the [`Planner`](coordinator::Planner) turns the
+//!    classification into per-implementation GFLOP/s predictions:
+//!    model AI × bandwidth roof × learned `(class, impl)` prior. The
+//!    PB kernel's line is structure-independent ([`model::ai_pb`]), so
+//!    it rises and falls *relative to* the structural lines.
+//! 3. **schedule** — the prediction's tile width `dt` selects (or
+//!    builds, then caches) a [`spmm::Schedule`]: nnz-balanced
+//!    partitions plus column tiles, planned once per
+//!    `(matrix, impl, threads, d, dt)`.
+//! 4. **route** — the [`Engine`](coordinator::Engine) picks the
+//!    implementation: predicted-best, or, with autotuning on, the
+//!    pinned measured-best across formats × reorderings
+//!    ([`coordinator::Autotuner`]).
+//! 5. **execute** — the chosen kernel consumes the schedule on the
+//!    shared worker pool ([`spmm::Spmm::execute_with`]); the
+//!    measurement feeds back into the planner's priors
+//!    (`Planner::observe`), closing the loop.
 //!
 //! # Execution model
 //!

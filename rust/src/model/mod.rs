@@ -1,19 +1,35 @@
-//! Sparsity-aware roofline models — §III of the paper.
+//! Sparsity-aware roofline models — §III of the paper, plus this
+//! repo's extensions (tile-aware traffic, the cache-aware ladder, the
+//! propagation-blocking model).
 //!
 //! Everything here is pure math over structural statistics; the
 //! measured side lives in [`crate::metrics`] / [`crate::harness`], and
 //! the memory-traffic *validation* (simulated DRAM bytes vs these
-//! analytic byte counts) lives in [`crate::cachesim`].
+//! analytic byte counts) lives in [`crate::cachesim`]. Every formula
+//! is derived in prose, with symbol names matching these identifiers
+//! and worked examples, in `MODELS.md`.
+//!
+//! **Hand-off** (classify → predict → schedule → route → execute):
+//! this module is the vocabulary of the *predict* stage. The
+//! classifier ([`crate::pattern`]) selects a [`SparsityModel`]; the
+//! planner ([`crate::coordinator::Planner`]) evaluates its AI — flat
+//! ([`SparsityModel::ai`]), tiled ([`SparsityModel::ai_tiled`]), or
+//! the structure-independent propagation-blocking line ([`ai_pb`]) —
+//! against a roofline ([`Roofline`], [`CacheAwareRoofline`]) to rank
+//! implementations and choose the column-tile width the schedule
+//! layer executes with.
 
 mod ai;
 mod blocked;
 mod cache_aware;
+mod pb;
 mod roofline;
 mod scalefree;
 
 pub use ai::{AiParams, SparsityModel};
 pub use blocked::{expected_z, expected_z_exact, BlockStats};
 pub use cache_aware::{BandwidthCeiling, CacheAwareRoofline, LatencyModel};
+pub use pb::{ai_pb, ai_pb_tiled, bytes_pb, bytes_pb_tiled, PB_STRUCT_BYTES_PER_NNZ};
 pub use roofline::{MachineParams, Roofline};
 pub use scalefree::{hub_mass_fraction, measured_hub_mass, HubParams};
 

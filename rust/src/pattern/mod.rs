@@ -6,6 +6,17 @@
 //! engine cannot rely on provenance, so this module derives the class
 //! from measurable structure — which also makes the assignment testable
 //! against the generators.
+//!
+//! **Hand-off** (classify → predict → schedule → route → execute):
+//! this module is the *classify* stage. [`classify()`] runs once per
+//! registered matrix (and once per candidate reordered layout during
+//! autotuning) and produces a [`Classification`] — the
+//! [`crate::model::SparsityModel`] with fitted parameters plus the
+//! structural statistics ([`StructuralStats`]) the planner's
+//! predictions consume. Everything downstream
+//! ([`crate::coordinator::Planner`], the router, the schedule layer)
+//! keys off this output; nothing downstream re-reads the matrix
+//! structure. Formula derivations live in `MODELS.md`.
 
 mod classify;
 mod powerlaw;

@@ -1,7 +1,8 @@
 //! SpMM kernels: `C = A · B` with sparse `A (n×n)` and dense
 //! tall-and-skinny `B (n×d)`.
 //!
-//! Four native implementations mirror the paper's comparison set:
+//! Six native implementations; the first three mirror the paper's
+//! comparison set:
 //!
 //! | Kernel | Paper counterpart | Strategy |
 //! |---|---|---|
@@ -10,6 +11,7 @@
 //! | [`CsbSpmm`]  | "CSB" | block-row-parallel compressed sparse blocks |
 //! | [`EllSpmm`]  | —     | padded ELL (native twin of the XLA artifact) |
 //! | [`BsrSpmm`]  | —     | dense-tile block sparse row (the matrix-unit mapping) |
+//! | [`PbSpmm`]   | —     | propagation blocking: two-phase spill/gather, random access traded for sequential bucket traffic |
 //!
 //! All native kernels parallelise over the persistent, process-wide
 //! worker pool ([`pool`]): threads are spawned once and parked between
@@ -18,9 +20,18 @@
 //! a precomputed [`Schedule`] (nnz-balanced partitions + model-chosen
 //! column tiles, see [`schedule`]) instead of chunking ad hoc.
 //!
-//! A sixth implementation, `runtime::XlaSpmm`, executes the AOT-compiled
-//! JAX/Pallas artifact through PJRT and plugs into the same [`Spmm`]
-//! trait via the coordinator.
+//! **Hand-off** (classify → predict → schedule → route → execute):
+//! this module is the *execute* stage (and, via [`Spmm::plan`], the
+//! mechanical half of *schedule*). Upstream, the coordinator
+//! ([`crate::coordinator`]) has already classified the matrix,
+//! predicted per-implementation performance from the traffic models
+//! ([`crate::model`], derived in `MODELS.md`), chosen a kernel and a
+//! tile width; what arrives here is a prepared kernel, a dense
+//! operand pair, and a [`Schedule`] to run them over.
+//!
+//! One more implementation, `runtime::XlaSpmm`, executes the
+//! AOT-compiled JAX/Pallas artifact through PJRT and plugs into the
+//! same [`Spmm`] trait via the coordinator.
 
 mod bsr_kernel;
 mod csb_kernel;
@@ -28,6 +39,7 @@ mod csr_kernel;
 mod dense;
 mod ell_kernel;
 mod opt_kernel;
+mod pb_kernel;
 pub mod pool;
 pub mod schedule;
 
@@ -37,6 +49,7 @@ pub use csr_kernel::CsrSpmm;
 pub use dense::DenseMatrix;
 pub use ell_kernel::EllSpmm;
 pub use opt_kernel::OptSpmm;
+pub use pb_kernel::{pb_spill_tile, PbSpmm, PB_DEFAULT_COL_BAND, PB_DEFAULT_ROW_BAND};
 pub use schedule::Schedule;
 
 use crate::error::{Error, Result};
@@ -50,12 +63,16 @@ pub enum Impl {
     Csb,
     Ell,
     Bsr,
+    /// Propagation blocking ([`PbSpmm`]): the only kernel whose
+    /// predicted traffic is structure-*independent*.
+    Pb,
     Xla,
 }
 
 impl Impl {
     /// All native (always-available) implementations.
-    pub const NATIVE: [Impl; 5] = [Impl::Csr, Impl::Opt, Impl::Csb, Impl::Ell, Impl::Bsr];
+    pub const NATIVE: [Impl; 6] =
+        [Impl::Csr, Impl::Opt, Impl::Csb, Impl::Ell, Impl::Bsr, Impl::Pb];
 
     /// Paper column name this implementation corresponds to.
     pub fn paper_name(&self) -> &'static str {
@@ -65,6 +82,7 @@ impl Impl {
             Impl::Csb => "CSB",
             Impl::Ell => "ELL",
             Impl::Bsr => "BSR",
+            Impl::Pb => "PB",
             Impl::Xla => "XLA",
         }
     }
@@ -78,6 +96,7 @@ impl std::fmt::Display for Impl {
             Impl::Csb => "CSB",
             Impl::Ell => "ELL",
             Impl::Bsr => "BSR",
+            Impl::Pb => "PB",
             Impl::Xla => "XLA",
         };
         write!(f, "{s}")
@@ -172,6 +191,7 @@ pub fn build_native(im: Impl, csr: &Csr, threads: usize) -> Result<Box<dyn Spmm>
         Impl::Ell => Box::new(EllSpmm::from_csr(csr, threads)),
         // bs=4: good AVX fill/padding balance; ablations sweep it
         Impl::Bsr => Box::new(BsrSpmm::from_csr(csr, 4, threads)),
+        Impl::Pb => Box::new(PbSpmm::from_csr(csr, threads)),
         Impl::Xla => {
             return Err(Error::Usage("XLA kernel is built through runtime::XlaSpmm".into()))
         }

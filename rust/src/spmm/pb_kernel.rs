@@ -1,0 +1,539 @@
+//! Propagation-blocking SpMM — the sixth native implementation, after
+//! Gu et al.'s propagation blocking (PAPERS.md, arXiv:2002.11302)
+//! adapted from SpMV to the tall-and-skinny SpMM this crate serves.
+//!
+//! Every other native kernel streams `A` and *gathers* rows of `B` in
+//! whatever order `A`'s column indices dictate — the random access the
+//! sparsity-aware models charge for. PB eliminates the random access
+//! entirely by trading it for extra **sequential** traffic, in two
+//! phases per column tile of the dense operands:
+//!
+//! 1. **Spill** ([`PbSpmm`] phase A): the nonzeros, re-binned at
+//!    construction into *column bands* of [`PbSpmm::col_band`]
+//!    consecutive `A`-columns, are streamed band by band. Within one
+//!    band every `B` access lands in an `8·col_band·dt`-byte panel
+//!    that stays cache-resident, so the partial products
+//!    `v·B[c, tile]` read `B` from DRAM exactly once overall. Each
+//!    product is appended to the *bucket* (a `row_band`-row window of
+//!    destination rows) owning its `C` row — sequential writes into a
+//!    precomputed arena slot.
+//! 2. **Gather** (phase B): each bucket's slots are streamed back in
+//!    order and accumulated into `C`; the random writes are confined
+//!    to the bucket's `8·row_band·dt`-byte window of `C`, which is
+//!    cache-resident by construction.
+//!
+//! The traffic is therefore **structure-independent** — see
+//! [`crate::model::bytes_pb`] for the byte model the planner compares
+//! against the structure-sensitive CSR/CSB lines: PB wins exactly
+//! where the structure models collapse to the random lower bound
+//! (uniform/scale-free patterns, DRAM-resident `B`) and loses where
+//! structure already makes `B` cache-resident (banded, blocked).
+//!
+//! Parallelism runs on the shared worker pool and consumes a
+//! [`Schedule`] like every other kernel: the schedule's units are
+//! rows (the same nnz-balanced `row_ptr` split CSR uses), its column
+//! tiles bound the spill width, and phase B maps schedule partitions
+//! onto buckets by *first-row ownership* — bucket `j` (rows
+//! `[j·row_band, (j+1)·row_band)`) is processed by the one partition
+//! containing row `j·row_band`, i.e. partition `[lo, hi)` owns buckets
+//! `⌈lo/row_band⌉ ≤ j < ⌈hi/row_band⌉`. Both bounds round *up*: a
+//! plain `hi / row_band` upper bound would hand a bucket straddling
+//! the boundary to both neighbouring partitions and double-count its
+//! contributions (regression-tested with a one-row-per-partition
+//! schedule below).
+//!
+//! Accumulation order per `C` element is globally column-ascending
+//! (bands partition the columns in ascending ranges and entries are
+//! row-stable within a band), i.e. the exact floating-point sequence
+//! of [`crate::spmm::CsrSpmm`] — the two kernels agree bit for bit,
+//! which `tests/prop_pb.rs` pins across every generator.
+
+use std::ops::Range;
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::sparse::Csr;
+use crate::spmm::csr_kernel::RawRows;
+use crate::spmm::pool::parallel_chunks_dynamic;
+use crate::spmm::schedule::Schedule;
+use crate::spmm::{check_dims, check_schedule, DenseMatrix, Impl, Spmm};
+
+/// Default column-band width: the phase-A `B` panel is
+/// `8 · 2048 · dt` bytes (1 MiB at `dt = 64`) — sized to stay inside
+/// a conventional L2 slice.
+pub const PB_DEFAULT_COL_BAND: usize = 2048;
+
+/// Default bucket height: the phase-B `C` window is
+/// `8 · 2048 · dt` bytes, the same L2 budget as the spill panel.
+pub const PB_DEFAULT_ROW_BAND: usize = 2048;
+
+/// Spill-arena budget. A full-width pass needs `8 · nnz · dt` bytes of
+/// scratch; wider tiles are processed in internal sub-tiles of at most
+/// [`pb_spill_tile`] columns so the arena stays bounded. Each extra
+/// sub-pass re-streams only the binned structure (`20` bytes per
+/// nonzero — see [`crate::model::bytes_pb_tiled`]).
+pub const PB_MAX_SPILL_BYTES: usize = 1 << 26;
+
+/// The widest spill tile the arena budget admits for a matrix with
+/// `nnz` stored values at dense width `d` — the effective column-tile
+/// width a PB execution runs with, whatever the schedule requests
+/// wider. The planner charges PB's traffic at exactly this width
+/// ([`crate::model::ai_pb_tiled`]), so predicted and executed pass
+/// counts agree.
+pub fn pb_spill_tile(nnz: usize, d: usize) -> usize {
+    (PB_MAX_SPILL_BYTES / (8 * nnz.max(1))).clamp(1, d.max(1))
+}
+
+/// Shared-pointer shim over the spill arena: phase-A workers write
+/// *disjoint* slots without locks. Soundness: `PbSpmm::pos` assigns
+/// every binned entry a unique arena slot, and each entry is processed
+/// by exactly one worker (its column band is claimed exactly once).
+#[derive(Clone, Copy)]
+struct RawSlots {
+    ptr: *mut f64,
+    width: usize,
+}
+unsafe impl Send for RawSlots {}
+unsafe impl Sync for RawSlots {}
+
+impl RawSlots {
+    /// Mutable view of slot `k`. Caller must hold exclusive logical
+    /// ownership of the slot.
+    #[inline(always)]
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slot(&self, k: usize) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.ptr.add(k * self.width), self.width)
+    }
+}
+
+/// Propagation-blocking SpMM kernel (see module docs).
+pub struct PbSpmm {
+    nrows: usize,
+    ncols: usize,
+    /// Column-band width (bins `A`'s columns / `B`'s rows).
+    col_band: usize,
+    /// Bucket height (bins `C`'s rows).
+    row_band: usize,
+    /// Binned entries, column-band-major and row-stable within a band:
+    /// absolute `A` column (= `B` row) per entry.
+    col: Vec<u32>,
+    /// Value per binned entry.
+    val: Vec<f64>,
+    /// Arena slot per binned entry (phase A's scatter destination).
+    pos: Vec<u32>,
+    /// Entry range per column band (`band_ptr[β]..band_ptr[β+1]`).
+    band_ptr: Vec<usize>,
+    /// Destination `C` row per arena slot, in bucket-major order
+    /// (phase B's stream).
+    arena_row: Vec<u32>,
+    /// Arena-slot range per bucket (`bucket_ptr[j]..bucket_ptr[j+1]`).
+    bucket_ptr: Vec<usize>,
+    /// Untiled nnz-balanced base schedule over rows (same split CSR
+    /// uses).
+    base: Schedule,
+    /// Recycled spill arena (grow-only). A concurrent execute on the
+    /// same kernel finds it taken and allocates its own.
+    scratch: Mutex<Vec<f64>>,
+}
+
+impl PbSpmm {
+    /// Bin a CSR matrix with the default band geometry, shrunk where
+    /// the matrix is small: phase A's parallelism is band-granular and
+    /// phase B's is bucket-granular, so both bins are capped at
+    /// `⌈units/(8·threads)⌉` — ≈8 claimable bins per worker, the same
+    /// granularity the schedule layer targets — and at the
+    /// cache-sized [`PB_DEFAULT_COL_BAND`]/[`PB_DEFAULT_ROW_BAND`]
+    /// otherwise. (A 2048-row matrix with one 2048-row bucket would
+    /// run its entire gather phase on one worker.)
+    pub fn from_csr(csr: &Csr, threads: usize) -> Self {
+        let t = threads.max(1);
+        let col_band = PB_DEFAULT_COL_BAND.min(csr.ncols.div_ceil(8 * t).max(1));
+        let row_band = PB_DEFAULT_ROW_BAND.min(csr.nrows.div_ceil(8 * t).max(1));
+        Self::from_csr_with_bands(csr, col_band, row_band, threads)
+    }
+
+    /// Bin with explicit band geometry (ablation / adversarial-test
+    /// hook): `col_band` columns per spill bin, `row_band` rows per
+    /// gather bucket.
+    pub fn from_csr_with_bands(
+        csr: &Csr,
+        col_band: usize,
+        row_band: usize,
+        threads: usize,
+    ) -> Self {
+        let col_band = col_band.max(1);
+        let row_band = row_band.max(1);
+        let (nrows, ncols) = (csr.nrows, csr.ncols);
+        let nnz = csr.nnz();
+        assert!(nnz <= u32::MAX as usize, "PB arena slots are u32-indexed");
+        let nb = ncols.div_ceil(col_band);
+        let n_buckets = nrows.div_ceil(row_band);
+
+        // 1) counting-sort entries by column band, row-stable — the
+        //    spill stream (structural, done once here so execution
+        //    never touches the CSR again)
+        let mut band_ptr = vec![0usize; nb + 1];
+        for &c in &csr.col_idx {
+            band_ptr[c as usize / col_band + 1] += 1;
+        }
+        for i in 0..nb {
+            band_ptr[i + 1] += band_ptr[i];
+        }
+        let mut cursor: Vec<usize> = band_ptr[..nb].to_vec();
+        let mut col = vec![0u32; nnz];
+        let mut val = vec![0.0f64; nnz];
+        let mut src = vec![0u32; nnz];
+        for r in 0..nrows {
+            for (&c, &v) in csr.row_cols(r).iter().zip(csr.row_vals(r)) {
+                let b = c as usize / col_band;
+                let k = cursor[b];
+                cursor[b] += 1;
+                col[k] = c;
+                val[k] = v;
+                src[k] = r as u32;
+            }
+        }
+
+        // 2) per-(bucket, band) segment sizes, laid out bucket-major so
+        //    each bucket's slots are one contiguous arena run
+        let mut seg = vec![0usize; n_buckets * nb + 1];
+        for beta in 0..nb {
+            for k in band_ptr[beta]..band_ptr[beta + 1] {
+                seg[(src[k] as usize / row_band) * nb + beta + 1] += 1;
+            }
+        }
+        for i in 0..n_buckets * nb {
+            seg[i + 1] += seg[i];
+        }
+
+        // 3) arena slot per entry + destination row per slot. Within a
+        //    (bucket, band) segment slots follow band order (row-major,
+        //    columns ascending); across bands a row's contributions are
+        //    column-ascending overall — the CSR accumulation order.
+        let mut segcur: Vec<usize> = seg[..n_buckets * nb].to_vec();
+        let mut pos = vec![0u32; nnz];
+        let mut arena_row = vec![0u32; nnz];
+        for beta in 0..nb {
+            for k in band_ptr[beta]..band_ptr[beta + 1] {
+                let cell = (src[k] as usize / row_band) * nb + beta;
+                let s = segcur[cell];
+                segcur[cell] += 1;
+                pos[k] = s as u32;
+                arena_row[s] = src[k];
+            }
+        }
+
+        let bucket_ptr: Vec<usize> = (0..=n_buckets).map(|j| seg[j * nb]).collect();
+        let base = Schedule::nnz_balanced(&csr.row_ptr, threads.max(1));
+        PbSpmm {
+            nrows,
+            ncols,
+            col_band,
+            row_band,
+            col,
+            val,
+            pos,
+            band_ptr,
+            arena_row,
+            bucket_ptr,
+            base,
+            scratch: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The column-band width entries were binned with.
+    pub fn col_band(&self) -> usize {
+        self.col_band
+    }
+
+    /// The bucket height (destination-row bin size).
+    pub fn row_band(&self) -> usize {
+        self.row_band
+    }
+
+    /// Phase A: stream the binned entries band by band, writing each
+    /// partial product `val·B[col, sub]` into its precomputed arena
+    /// slot. Bands are claimed dynamically; slot disjointness makes the
+    /// raw writes sound.
+    fn spill(&self, b: &DenseMatrix, sub: &Range<usize>, arena: &mut [f64], threads: usize) {
+        let nb = self.band_ptr.len() - 1;
+        if nb == 0 {
+            return;
+        }
+        let slots = RawSlots { ptr: arena.as_mut_ptr(), width: sub.len() };
+        parallel_chunks_dynamic(nb, threads, 1, |bands| {
+            for beta in bands {
+                for k in self.band_ptr[beta]..self.band_ptr[beta + 1] {
+                    let brow = &b.row(self.col[k] as usize)[sub.clone()];
+                    let v = self.val[k];
+                    // SAFETY: pos maps entries to unique slots, and
+                    // band β is claimed by exactly one worker.
+                    let slot = unsafe { slots.slot(self.pos[k] as usize) };
+                    for (out, &x) in slot.iter_mut().zip(brow) {
+                        *out = v * x;
+                    }
+                }
+            }
+        });
+    }
+
+    /// Phase B: each schedule partition accumulates the buckets it
+    /// owns (first-row ownership — see module docs) from the arena
+    /// into `C`, zeroing each bucket's `C` window first.
+    fn gather(&self, rows: &RawRows, sub: &Range<usize>, arena: &[f64], s: &Schedule) {
+        let w = sub.len();
+        let rb = self.row_band;
+        let n_buckets = self.bucket_ptr.len() - 1;
+        parallel_chunks_dynamic(s.n_parts(), s.threads, 1, |parts| {
+            for pi in parts {
+                let part = s.part(pi);
+                if part.is_empty() {
+                    continue;
+                }
+                // both bounds round up: bucket j belongs to the
+                // partition containing row j·rb, never to the one a
+                // straddling boundary merely clips
+                let j_lo = part.start.div_ceil(rb);
+                let j_hi = part.end.div_ceil(rb).min(n_buckets);
+                for j in j_lo..j_hi {
+                    let r_hi = ((j + 1) * rb).min(self.nrows);
+                    for r in j * rb..r_hi {
+                        // SAFETY: bucket j has exactly one owner.
+                        unsafe { rows.row(r) }[sub.clone()].fill(0.0);
+                    }
+                    for k in self.bucket_ptr[j]..self.bucket_ptr[j + 1] {
+                        let slot = &arena[k * w..k * w + w];
+                        // SAFETY: arena_row[k] is inside bucket j.
+                        let crow = unsafe { rows.row(self.arena_row[k] as usize) };
+                        for (cc, &x) in crow[sub.clone()].iter_mut().zip(slot) {
+                            *cc += x;
+                        }
+                    }
+                }
+            }
+        });
+    }
+}
+
+impl Spmm for PbSpmm {
+    fn id(&self) -> Impl {
+        Impl::Pb
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.col.len()
+    }
+
+    fn execute(&self, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        self.execute_with(b, c, &self.base)
+    }
+
+    fn plan(&self, tile: Option<usize>) -> Schedule {
+        self.base.clone().with_tile(tile)
+    }
+
+    fn execute_with(&self, b: &DenseMatrix, c: &mut DenseMatrix, s: &Schedule) -> Result<()> {
+        check_dims(self.nrows, self.ncols, b, c)?;
+        check_schedule(self.nrows, s)?;
+        let d = b.ncols;
+        if d == 0 {
+            return Ok(());
+        }
+        let nnz = self.col.len();
+        let mut arena =
+            std::mem::take(&mut *self.scratch.lock().unwrap_or_else(|e| e.into_inner()));
+        let cap_w = pb_spill_tile(nnz, d);
+        let rows = RawRows::new(c);
+        for cols in s.col_tiles(d) {
+            // internal sub-tiling keeps the arena under the scratch
+            // budget; a sub-pass is a full spill+gather pair, so the
+            // schedule's tile semantics (serial tiles, full barrier)
+            // are preserved
+            let mut p = cols.start;
+            while p < cols.end {
+                let sub = p..(p + cap_w).min(cols.end);
+                let need = nnz * sub.len();
+                if arena.len() < need {
+                    arena.resize(need, 0.0);
+                }
+                self.spill(b, &sub, &mut arena, s.threads);
+                self.gather(&rows, &sub, &arena, s);
+                p = sub.end;
+            }
+        }
+        *self.scratch.lock().unwrap_or_else(|e| e.into_inner()) = arena;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{banded, chung_lu, erdos_renyi, ChungLuParams, Prng};
+    use crate::spmm::{reference_spmm, CsrSpmm};
+
+    #[test]
+    fn matches_reference_various_d_and_threads() {
+        let mut rng = Prng::new(90);
+        let a = erdos_renyi(300, 300, 7.0, &mut rng);
+        for d in [1usize, 2, 3, 4, 7, 16, 64] {
+            let b = DenseMatrix::random(300, d, &mut rng);
+            let want = reference_spmm(&a, &b);
+            for threads in [1usize, 3] {
+                let k = PbSpmm::from_csr(&a, threads);
+                let mut c = DenseMatrix::zeros(300, d);
+                k.execute(&b, &mut c).unwrap();
+                assert!(c.max_abs_diff(&want) < 1e-12, "d={d} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitwise_identical_to_csr_kernel() {
+        let mut rng = Prng::new(91);
+        let a = erdos_renyi(200, 200, 6.0, &mut rng);
+        let d = 9;
+        let b = DenseMatrix::random(200, d, &mut rng);
+        let csr = CsrSpmm::new(a.clone(), 2);
+        let mut c_csr = DenseMatrix::zeros(200, d);
+        csr.execute(&b, &mut c_csr).unwrap();
+        // adversarially small bands: accumulation order must still be
+        // globally column-ascending per row
+        for (cb, rb) in [(2048usize, 2048usize), (7, 5), (1, 1)] {
+            let pb = PbSpmm::from_csr_with_bands(&a, cb, rb, 3);
+            let mut c_pb = DenseMatrix::zeros(200, d);
+            pb.execute(&b, &mut c_pb).unwrap();
+            assert_eq!(c_pb.data, c_csr.data, "cb={cb} rb={rb}");
+        }
+    }
+
+    #[test]
+    fn tiled_schedule_matches_reference() {
+        let mut rng = Prng::new(92);
+        let a = banded(150, 6, 0.4, &mut rng);
+        let d = 13;
+        let b = DenseMatrix::random(150, d, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let k = PbSpmm::from_csr_with_bands(&a, 16, 16, 2);
+        for dt in [1usize, 3, 4, 12, 13, 64] {
+            let s = k.plan(Some(dt));
+            let mut c = DenseMatrix::from_vec(150, d, vec![7.0; 150 * d]);
+            k.execute_with(&b, &mut c, &s).unwrap();
+            assert!(c.max_abs_diff(&want) < 1e-12, "dt={dt}");
+        }
+    }
+
+    #[test]
+    fn one_row_per_partition_schedule_does_not_double_count() {
+        // Regression: bucket ownership under a schedule whose partition
+        // boundaries split every bucket. With 1-row partitions and
+        // 3-row buckets, a `hi / rb` upper bound would assign bucket j
+        // to several partitions and double-accumulate its entries.
+        let mut rng = Prng::new(93);
+        let a = erdos_renyi(16, 16, 4.0, &mut rng);
+        let b = DenseMatrix::random(16, 5, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let k = PbSpmm::from_csr_with_bands(&a, 4, 3, 2);
+        // uniform(16, 2) → min(2·8, 16) = 16 partitions of one row each
+        let s = Schedule::uniform(16, 2);
+        assert_eq!(s.n_parts(), 16);
+        for i in 0..s.n_parts() {
+            assert_eq!(s.part(i).len(), 1);
+        }
+        let mut c = DenseMatrix::from_vec(16, 5, vec![42.0; 80]);
+        k.execute_with(&b, &mut c, &s).unwrap();
+        assert!(c.max_abs_diff(&want) < 1e-12);
+        // and with a column tile, so every (sub-pass × bucket) pair is
+        // exercised under the adversarial partitioning too
+        let st = Schedule::uniform(16, 2).with_tile(Some(2));
+        let mut c2 = DenseMatrix::from_vec(16, 5, vec![-3.0; 80]);
+        k.execute_with(&b, &mut c2, &st).unwrap();
+        assert!(c2.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn rectangular_and_degenerate_shapes() {
+        let mut rng = Prng::new(94);
+        for (nr, nc) in [(1usize, 1usize), (1, 40), (40, 1), (30, 70), (70, 30)] {
+            let a = erdos_renyi(nr, nc, 3.0, &mut rng);
+            let b = DenseMatrix::random(nc, 3, &mut rng);
+            let want = reference_spmm(&a, &b);
+            let k = PbSpmm::from_csr_with_bands(&a, 8, 8, 2);
+            let mut c = DenseMatrix::zeros(nr, 3);
+            k.execute(&b, &mut c).unwrap();
+            assert!(c.max_abs_diff(&want) < 1e-12, "{nr}x{nc}");
+        }
+    }
+
+    #[test]
+    fn zero_matrix_overwrites_stale_c() {
+        let a = Csr::from_dense(12, 12, &[0.0; 144]);
+        let b = DenseMatrix::random(12, 4, &mut Prng::new(95));
+        let k = PbSpmm::from_csr_with_bands(&a, 5, 5, 2);
+        let mut c = DenseMatrix::from_vec(12, 4, vec![9.0; 48]);
+        k.execute(&b, &mut c).unwrap();
+        assert!(c.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scale_free_hubs_correct() {
+        let mut rng = Prng::new(96);
+        let a =
+            chung_lu(ChungLuParams { n: 500, alpha: 2.2, avg_deg: 10.0, k_min: 2.0 }, &mut rng);
+        let b = DenseMatrix::random(500, 16, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let k = PbSpmm::from_csr_with_bands(&a, 64, 64, 4);
+        let mut c = DenseMatrix::zeros(500, 16);
+        k.execute(&b, &mut c).unwrap();
+        assert!(c.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn dimension_and_schedule_errors() {
+        let a = erdos_renyi(10, 10, 2.0, &mut Prng::new(97));
+        let k = PbSpmm::from_csr(&a, 1);
+        let b = DenseMatrix::zeros(11, 4);
+        let mut c = DenseMatrix::zeros(10, 4);
+        assert!(k.execute(&b, &mut c).is_err());
+        let b = DenseMatrix::zeros(10, 4);
+        let mut c = DenseMatrix::zeros(10, 5);
+        assert!(k.execute(&b, &mut c).is_err());
+        let mut c = DenseMatrix::zeros(10, 4);
+        let foreign = Schedule::uniform(11, 1);
+        assert!(k.execute_with(&b, &mut c, &foreign).is_err());
+    }
+
+    #[test]
+    fn spill_tile_caps_at_the_arena_budget() {
+        // small matrices: the budget admits any width
+        assert_eq!(pb_spill_tile(1000, 16), 16);
+        assert_eq!(pb_spill_tile(0, 4), 4);
+        // 4M nonzeros: 8·nnz bytes per column → 2 columns fit 64 MiB
+        let nnz = 4 << 20;
+        assert_eq!(pb_spill_tile(nnz, 64), PB_MAX_SPILL_BYTES / (8 * nnz));
+        assert_eq!(pb_spill_tile(nnz, 64), 2);
+        // never zero, never wider than d
+        assert_eq!(pb_spill_tile(usize::MAX / 16, 8), 1);
+        assert_eq!(pb_spill_tile(nnz, 1), 1);
+    }
+
+    #[test]
+    fn scratch_arena_is_recycled() {
+        let mut rng = Prng::new(98);
+        let a = erdos_renyi(100, 100, 5.0, &mut rng);
+        let b = DenseMatrix::random(100, 8, &mut rng);
+        let k = PbSpmm::from_csr(&a, 2);
+        let mut c = DenseMatrix::zeros(100, 8);
+        k.execute(&b, &mut c).unwrap();
+        let len_after_first = k.scratch.lock().unwrap().len();
+        assert!(len_after_first >= k.nnz() * 8);
+        let ptr = k.scratch.lock().unwrap().as_ptr();
+        k.execute(&b, &mut c).unwrap();
+        assert_eq!(k.scratch.lock().unwrap().as_ptr(), ptr, "arena must be reused");
+    }
+}

@@ -1,0 +1,161 @@
+//! Property tests over the propagation-blocking kernel: PB must match
+//! the dense reference within tolerance AND the CSR kernel **bit for
+//! bit** — both kernels accumulate each `C` element in globally
+//! column-ascending order, so their floating-point sequences are
+//! identical — across every structural generator, forced column-tile
+//! widths, thread counts, and adversarial band geometry.
+
+use spmm_roofline::gen::{
+    banded, chung_lu, erdos_renyi, mesh2d, rmat, ChungLuParams, MeshKind, Prng,
+};
+use spmm_roofline::sparse::Csr;
+use spmm_roofline::spmm::{reference_spmm, CsrSpmm, DenseMatrix, PbSpmm, Schedule, Spmm};
+use spmm_roofline::testutil::check_default;
+
+/// One matrix per structural regime (plus R-MAT as the second skewed
+/// generator), sized for test speed.
+fn generator_suite(rng: &mut Prng) -> Vec<(&'static str, Csr)> {
+    vec![
+        ("banded", banded(180, 6, 0.4, rng)),
+        ("blocked", mesh2d(14, MeshKind::Triangular, 0.9, rng)),
+        ("er", erdos_renyi(200, 200, 6.0, rng)),
+        ("rmat", rmat(8, 6.0, 0.57, 0.19, 0.19, rng)),
+        (
+            "scalefree",
+            chung_lu(ChungLuParams { n: 250, alpha: 2.2, avg_deg: 8.0, k_min: 2.0 }, rng),
+        ),
+    ]
+}
+
+/// The acceptance grid: every generator × dt ∈ {1, 3, d−1, d} ×
+/// threads ∈ {1, 4}, PB vs dense reference and vs CSR bit for bit.
+#[test]
+fn pb_matches_reference_and_csr_bitwise_across_generators() {
+    let mut rng = Prng::new(0x9b0);
+    for (name, a) in generator_suite(&mut rng) {
+        for d in [3usize, 8, 16] {
+            let b = DenseMatrix::random(a.ncols, d, &mut rng);
+            let want = reference_spmm(&a, &b);
+            for threads in [1usize, 4] {
+                let csr = CsrSpmm::new(a.clone(), threads);
+                let pb = PbSpmm::from_csr(&a, threads);
+                for dt in [1usize, 3, d - 1, d] {
+                    let s_csr = csr.plan(Some(dt));
+                    let s_pb = pb.plan(Some(dt));
+                    // stale C: execution must fully overwrite
+                    let mut c_csr =
+                        DenseMatrix::from_vec(a.nrows, d, vec![13.0; a.nrows * d]);
+                    let mut c_pb =
+                        DenseMatrix::from_vec(a.nrows, d, vec![-7.0; a.nrows * d]);
+                    csr.execute_with(&b, &mut c_csr, &s_csr).unwrap();
+                    pb.execute_with(&b, &mut c_pb, &s_pb).unwrap();
+                    let diff = c_pb.max_abs_diff(&want);
+                    assert!(
+                        diff < 1e-11,
+                        "{name}: PB vs reference d={d} dt={dt} threads={threads}: |Δ|={diff}"
+                    );
+                    assert_eq!(
+                        c_pb.data, c_csr.data,
+                        "{name}: PB vs CSR not bit-for-bit (d={d} dt={dt} threads={threads})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pb_random_shapes_bands_and_tiles() {
+    check_default(0x9b1, |rng| {
+        let nr = 8 + rng.below_usize(120);
+        let nc = 8 + rng.below_usize(120);
+        let a = erdos_renyi(nr, nc, rng.range_f64(0.0, 8.0), rng);
+        let d = 1 + rng.below_usize(18);
+        let dt = 1 + rng.below_usize(d + 4); // sometimes > d (untiled)
+        let threads = 1 + rng.below_usize(4);
+        let col_band = 1 + rng.below_usize(40);
+        let row_band = 1 + rng.below_usize(40);
+        let b = DenseMatrix::random(nc, d, rng);
+        let want = reference_spmm(&a, &b);
+        let pb = PbSpmm::from_csr_with_bands(&a, col_band, row_band, threads);
+        let mut c = DenseMatrix::zeros(nr, d);
+        pb.execute_with(&b, &mut c, &pb.plan(Some(dt))).map_err(|e| e.to_string())?;
+        let diff = c.max_abs_diff(&want);
+        if diff > 1e-11 {
+            return Err(format!(
+                "PB ({nr}x{nc}, d={d}, dt={dt}, bands={col_band}/{row_band}): |Δ|={diff}"
+            ));
+        }
+        // bitwise agreement with CSR holds for every band geometry
+        let csr = CsrSpmm::new(a.clone(), threads);
+        let mut c_csr = DenseMatrix::zeros(nr, d);
+        csr.execute_with(&b, &mut c_csr, &csr.plan(Some(dt))).map_err(|e| e.to_string())?;
+        if c.data != c_csr.data {
+            return Err(format!(
+                "PB vs CSR bitwise mismatch ({nr}x{nc}, d={d}, dt={dt}, \
+                 bands={col_band}/{row_band})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The partition-boundary regression at the integration level: a
+/// schedule whose partitions are single rows (every bucket straddles
+/// partition boundaries) must neither drop nor double-count bucket
+/// contributions, for every generator.
+#[test]
+fn prop_pb_one_row_partitions_never_double_count() {
+    // small instances of every generator, so Schedule::uniform(n,
+    // ⌈n/8⌉) degenerates to one row per partition and every 3-row
+    // bucket straddles partition boundaries
+    let mut rng = Prng::new(0x9b2);
+    let suite: Vec<(&'static str, Csr)> = vec![
+        ("banded", banded(24, 3, 0.5, &mut rng)),
+        ("blocked", mesh2d(5, MeshKind::Triangular, 0.9, &mut rng)),
+        ("er", erdos_renyi(30, 30, 4.0, &mut rng)),
+        ("rmat", rmat(5, 4.0, 0.57, 0.19, 0.19, &mut rng)),
+        (
+            "scalefree",
+            chung_lu(ChungLuParams { n: 40, alpha: 2.2, avg_deg: 5.0, k_min: 1.5 }, &mut rng),
+        ),
+    ];
+    for (name, a) in suite {
+        let d = 5;
+        let b = DenseMatrix::random(a.ncols, d, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let pb = PbSpmm::from_csr_with_bands(&a, 4, 3, 2);
+        let s = Schedule::uniform(a.nrows, a.nrows.div_ceil(8)).with_tile(Some(2));
+        assert_eq!(s.n_parts(), a.nrows, "{name}: schedule must be one row per partition");
+        let mut c = DenseMatrix::from_vec(a.nrows, d, vec![99.0; a.nrows * d]);
+        pb.execute_with(&b, &mut c, &s).unwrap();
+        let diff = c.max_abs_diff(&want);
+        assert!(diff < 1e-11, "{name}: adversarial schedule |Δ|={diff}");
+    }
+}
+
+#[test]
+fn prop_pb_one_row_partitions_small_matrices() {
+    check_default(0x9b3, |rng| {
+        // n ≤ 8·threads so Schedule::uniform degenerates to one row
+        // per partition — the adversarial case for bucket ownership
+        let n = 4 + rng.below_usize(28);
+        let threads = n.div_ceil(8).max(1) + rng.below_usize(3);
+        let a = erdos_renyi(n, n, rng.range_f64(1.0, 6.0), rng);
+        let d = 1 + rng.below_usize(6);
+        let row_band = 1 + rng.below_usize(7);
+        let b = DenseMatrix::random(n, d, rng);
+        let want = reference_spmm(&a, &b);
+        let pb = PbSpmm::from_csr_with_bands(&a, 5, row_band, 2);
+        let s = Schedule::uniform(n, threads);
+        let mut c = DenseMatrix::from_vec(n, d, vec![3.5; n * d]);
+        pb.execute_with(&b, &mut c, &s).map_err(|e| e.to_string())?;
+        let diff = c.max_abs_diff(&want);
+        if diff > 1e-11 {
+            return Err(format!(
+                "n={n} threads={threads} rb={row_band} d={d}: |Δ|={diff}"
+            ));
+        }
+        Ok(())
+    });
+}
