@@ -36,7 +36,7 @@ fn main() -> spmm_roofline::Result<()> {
         let (roof_d, roof_r) =
             (roofline.attainable_gflops(ai_d), roofline.attainable_gflops(ai_r));
         let kernel = OptSpmm::new(a.clone(), 1);
-        let m = measure_kernel(&kernel, d, 3, 1);
+        let m = measure_kernel(&kernel, d, 3, 1)?;
         // where the measurement falls between the random (0) and
         // diagonal (1) bounds
         let pos = (m.gflops - roof_r) / (roof_d - roof_r);

@@ -42,7 +42,7 @@ fn main() -> spmm_roofline::Result<()> {
     // 5. measure every native kernel against that roof
     for im in Impl::NATIVE {
         let kernel = build_native(im, &a, 1)?;
-        let m = measure_kernel(kernel.as_ref(), d, 3, 1);
+        let m = measure_kernel(kernel.as_ref(), d, 3, 1)?;
         println!(
             "  {im}: {:.2} GFLOP/s  ({:.0}% of the {} roof)",
             m.gflops,

@@ -1,0 +1,160 @@
+//! Bench: the SpGEMM workload through the adaptive router.
+//!
+//! SpGEMM is the crate's second workload: for each registered matrix
+//! the router multiplies the self-product `A·A` (the classic SpGEMM
+//! benchmark — squaring a graph's adjacency matrix), measuring **both**
+//! candidate kernels (hash accumulator vs PB merge) and pinning the
+//! winner with the pair's measured compression factor
+//! `cf = flops / nnz(C)`. The structural contrast mirrors `bench_pb`:
+//! the hash kernel's gathers collapse on random structure, the PB
+//! merge streams on every structure.
+//!
+//! Artifact: one `BENCH_route.json` record per measured candidate per
+//! pair (bench = `bench_spgemm`, `d = dt = 0` marks the sparse
+//! operand), so the SpGEMM predicted-vs-measured line is tracked
+//! across PRs whichever kernel wins; the bench asserts the merge
+//! preserved every other bench's records (the CI smoke gate).
+//!
+//! `REPRO_SCALE` (default 0.25) and `REPRO_ITERS` (default 3) tune
+//! runtime; `REPRO_FAST=1` injects nominal machine parameters instead
+//! of running STREAM (CI smoke mode).
+
+use spmm_roofline::coordinator::{AutotunePolicy, Engine, EngineConfig, SpGemmSpec};
+use spmm_roofline::gen::{banded, erdos_renyi, mesh2d, rmat, MeshKind, Prng};
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::report::{PerfLog, PerfRecord};
+use spmm_roofline::sparse::Reordering;
+use spmm_roofline::spmm::Impl;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env1(key: &str) -> bool {
+    std::env::var(key).map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    let scale = envf("REPRO_SCALE", 0.25);
+    let iters = envf("REPRO_ITERS", 3.0) as usize;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let machine = if env1("REPRO_FAST") {
+        Some(MachineParams { beta_gbs: 25.0, pi_gflops: 100.0 })
+    } else {
+        None
+    };
+    let mut engine = Engine::new(EngineConfig {
+        threads,
+        machine,
+        iters,
+        warmup: 1,
+        impls: vec![Impl::Csr], // SpMM kernels are not the subject here
+        artifacts_dir: None,
+        autotune: AutotunePolicy {
+            enabled: true,
+            top_k: 16, // measure every SpGEMM candidate
+            reorderings: vec![Reordering::None],
+            explore_iters: iters.max(1),
+            explore_min_secs: 0.02,
+        },
+    })
+    .expect("engine construction");
+    println!(
+        "SpGEMM bench: β={:.1} GB/s π={:.0} GFLOP/s, {} threads, scale={scale}",
+        engine.machine().beta_gbs,
+        engine.machine().pi_gflops,
+        threads
+    );
+
+    let mut rng = Prng::new(0xa9a9);
+    let scaled = |base: usize| ((base as f64 * scale) as usize).max(256);
+    let er = erdos_renyi(scaled(1 << 16), scaled(1 << 16), 8.0, &mut rng);
+    println!("registered er_gemm ({} rows, {} nnz)", er.nrows, er.nnz());
+    engine.register("er_gemm", er).expect("register");
+    let rm = rmat(12, 8.0, 0.57, 0.19, 0.19, &mut rng);
+    println!("registered rmat_gemm ({} rows, {} nnz)", rm.nrows, rm.nnz());
+    engine.register("rmat_gemm", rm).expect("register");
+    let band = banded(scaled(1 << 16), 6, 0.4, &mut rng);
+    println!("registered banded_gemm ({} rows, {} nnz)", band.nrows, band.nnz());
+    engine.register("banded_gemm", band).expect("register");
+    let mesh_side = ((scaled(1 << 14) as f64).sqrt() as usize).max(16);
+    let mesh = mesh2d(mesh_side, MeshKind::Road, 0.62, &mut rng);
+    println!("registered mesh_gemm ({} rows, {} nnz)", mesh.nrows, mesh.nnz());
+    engine.register("mesh_gemm", mesh).expect("register");
+
+    let names = ["er_gemm", "rmat_gemm", "banded_gemm", "mesh_gemm"];
+    println!("\n— routing A·A per matrix (both kernels measured) —");
+    for name in names {
+        let rec = engine
+            .submit_spgemm(&SpGemmSpec::new(name, name))
+            .expect("spgemm job");
+        println!(
+            "  {name}·{name}: → {} (cf {:.1}, nnz(C) {}, pred {:.2} meas {:.2} GFLOP/s, ratio {:.2})",
+            rec.chosen,
+            rec.cf,
+            rec.nnz_c,
+            rec.predicted_gflops,
+            rec.measured_gflops,
+            rec.prediction_ratio()
+        );
+    }
+    for dec in engine.autotuner().spgemm_decisions() {
+        println!("  decision: {}", dec.summary());
+        assert_eq!(dec.explored, 2, "both SpGEMM kernels must be measured");
+    }
+
+    // re-submission serves pinned decisions: no new exploration
+    let n_explore = engine.autotuner().measurements();
+    for name in names {
+        engine.submit_spgemm(&SpGemmSpec::new(name, name)).expect("warm spgemm job");
+    }
+    assert_eq!(
+        engine.autotuner().measurements(),
+        n_explore,
+        "re-submission must explore nothing (decisions pinned)"
+    );
+
+    // Artifact: per-candidate predicted-vs-measured records; count
+    // foreign records before/after to prove the merge preserves them.
+    let prior = std::fs::read_to_string("BENCH_route.json")
+        .ok()
+        .and_then(|t| PerfLog::parse(&t).ok())
+        .unwrap_or_default();
+    let foreign_before =
+        prior.records.iter().filter(|r| r.bench != "bench_spgemm").count();
+
+    let mut log = PerfLog::new();
+    for dec in engine.autotuner().spgemm_decisions() {
+        for cand in &dec.candidates {
+            log.push(PerfRecord {
+                predicted_gflops: cand.predicted_gflops,
+                ..PerfRecord::basic(
+                    "bench_spgemm",
+                    format!("{}x{}", dec.a, dec.b),
+                    dec.class.to_string(),
+                    cand.im.to_string(),
+                    0,
+                    0,
+                    cand.measured_gflops,
+                )
+            });
+        }
+    }
+    log.merge_save("BENCH_route.json").expect("write BENCH_route.json");
+
+    let merged = PerfLog::parse(&std::fs::read_to_string("BENCH_route.json").unwrap())
+        .expect("re-parse artifact");
+    let foreign_after =
+        merged.records.iter().filter(|r| r.bench != "bench_spgemm").count();
+    assert_eq!(
+        foreign_before, foreign_after,
+        "merge_save must preserve other benches' records"
+    );
+    let own = merged.records.iter().filter(|r| r.bench == "bench_spgemm").count();
+    assert_eq!(own, log.records.len(), "all bench_spgemm records must land");
+    assert!(own >= 2 * names.len(), "≥ 2 candidate records per pair");
+    println!(
+        "wrote BENCH_route.json ({} bench_spgemm records, {} foreign records preserved)",
+        own, foreign_after
+    );
+}

@@ -67,9 +67,9 @@ fn main() {
         let xla = XlaSpmm::from_csr(&rt, spec, &a).expect("stage artifact");
         let ell = EllSpmm::from_csr(&a, 1);
         let csr = CsrSpmm::new(a.clone(), 1);
-        let mx = measure_kernel(&xla, d, 3, 1);
-        let me = measure_kernel(&ell, d, 3, 1);
-        let mc = measure_kernel(&csr, d, 3, 1);
+        let mx = measure_kernel(&xla, d, 3, 1).expect("measure XLA kernel");
+        let me = measure_kernel(&ell, d, 3, 1).expect("measure ELL kernel");
+        let mc = measure_kernel(&csr, d, 3, 1).expect("measure CSR kernel");
         println!(
             "{d:>4}  {:>10.3} {:>10.3} {:>10.3}  {:>8.2}",
             mx.gflops,

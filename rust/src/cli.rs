@@ -25,7 +25,12 @@
 //!   route          structure-adaptive routing demo: tune a suite
 //!                  spanning all four classes, pin per-matrix
 //!                  (format, reordering), compare vs always-CSR,
-//!                  write BENCH_route.json
+//!                  write BENCH_route.json (includes an SpGEMM leg:
+//!                  hash vs PB-merge per pair)
+//!   spgemm         sparse×sparse routing demo: route C = A·A over the
+//!                  hash and PB-merge SpGEMM kernels per matrix, pin
+//!                  the measured winner with its compression factor,
+//!                  write BENCH_route.json records
 //! ```
 
 use crate::config::{parse_impl, ExperimentConfig};
@@ -108,7 +113,7 @@ fn bad(k: &str, v: &str) -> Error {
 pub fn usage() -> String {
     "usage: repro <command> [flags] — commands: sysinfo stream suite classify \
      table-v fig1 fig2 validate-ai ablate-block ablate-reuse ablate-threads \
-     ablate-reorder ladder hubs engine route\n\
+     ablate-reorder ladder hubs engine route spgemm\n\
      flags: --scale X --threads N --iters N --warmup N --d 1,4,16,64 \
      --impls CSR,MKL,CSB --out DIR --artifacts DIR --config FILE --autotune\n\
      --impls accepts any of CSR,MKL/OPT,CSB,ELL,BSR,PB,XLA or the shorthand \
@@ -118,7 +123,10 @@ pub fn usage() -> String {
      and adds the propagation-blocking kernel (PB) to the candidate \
      set; the `route` command always autotunes: it explores impl × \
      reordering (PB included) per matrix, pins the winner, and writes \
-     BENCH_route.json"
+     BENCH_route.json\n\
+     `spgemm` routes the sparse×sparse workload: both SpGEMM kernels \
+     (HASH, PBMERGE) are measured per matrix pair and the winner is \
+     pinned with the pair's measured compression factor"
         .to_string()
 }
 
@@ -153,6 +161,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
         "hubs" => cmd_hubs(),
         "engine" => cmd_engine(cfg),
         "route" => cmd_route(cfg),
+        "spgemm" => cmd_spgemm(cfg),
         other => Err(Error::Usage(format!("unknown command '{other}'\n\n{}", usage()))),
     }
 }
@@ -589,6 +598,17 @@ fn cmd_route(cfg: &ExperimentConfig) -> Result<()> {
     }
     println!("{}", pt.to_text());
 
+    // SpGEMM leg — the router's second workload: tune two
+    // self-products spanning the structural contrast (random + mesh).
+    // Each tune measures *both* candidate kernels, so the artifact
+    // below carries predicted-vs-measured GFLOP/s for ≥ 2 candidates
+    // per SpGEMM job.
+    println!("— SpGEMM routing (HASH vs PBMERGE per pair) —");
+    for name in ["er_18_1", "road_usa_p"] {
+        let dec = engine.tune_spgemm(name, name)?;
+        println!("  spgemm route: {}", dec.summary());
+    }
+
     // machine-readable artifact: one record per pinned decision, with
     // predicted vs measured (regret analysis across PRs)
     let mut log = PerfLog::new();
@@ -607,8 +627,95 @@ fn cmd_route(cfg: &ExperimentConfig) -> Result<()> {
             )
         });
     }
+    // SpGEMM rows: one record per measured candidate per pair
+    // (impl ∈ {HASH, PBMERGE}; d = dt = 0 marks the sparse operand)
+    for dec in engine.autotuner().spgemm_decisions() {
+        for cand in &dec.candidates {
+            log.push(PerfRecord {
+                predicted_gflops: cand.predicted_gflops,
+                ..PerfRecord::basic(
+                    "bench_route",
+                    format!("{}x{}", dec.a, dec.b),
+                    dec.class.to_string(),
+                    cand.im.to_string(),
+                    0,
+                    0,
+                    cand.measured_gflops,
+                )
+            });
+        }
+    }
     log.merge_save("BENCH_route.json")?;
     println!("wrote BENCH_route.json ({} routing records)", log.records.len());
+    Ok(())
+}
+
+/// The `spgemm` command: sparse×sparse routing demo. Registers the
+/// representative suite, routes the self-product `A·A` of every
+/// matrix across the hash and PB-merge kernels (autotuned: both
+/// measured, winner pinned per pair with its measured compression
+/// factor), prints predicted vs measured, and writes per-candidate
+/// records into `BENCH_route.json` (bench = `spgemm`, merge preserving
+/// every other bench's records).
+fn cmd_spgemm(cfg: &ExperimentConfig) -> Result<()> {
+    use crate::coordinator::{AutotunePolicy, Engine, EngineConfig, SpGemmSpec};
+    use crate::report::{PerfLog, PerfRecord};
+    let mut engine = Engine::new(EngineConfig {
+        threads: cfg.threads,
+        machine: None,
+        iters: cfg.iters,
+        warmup: cfg.warmup,
+        impls: vec![Impl::Csr], // SpMM kernels are not exercised here
+        artifacts_dir: None,
+        autotune: AutotunePolicy::enabled(),
+    })?;
+    println!(
+        "spgemm router up: β={:.1} GB/s π={:.0} GFLOP/s, candidates HASH × PBMERGE",
+        engine.machine().beta_gbs,
+        engine.machine().pi_gflops,
+    );
+    for proxy in crate::gen::representative_suite() {
+        engine.register(proxy.name, proxy.generate(cfg.scale))?;
+    }
+    let names: Vec<String> = engine.registry().names().iter().map(|s| s.to_string()).collect();
+    let mut t = crate::report::Table::new(
+        "spgemm — routed pairs (A·A per representative matrix)",
+        &["Pair", "Class", "Impl", "cf", "nnz(C)", "Pred GF/s", "Meas GF/s", "Meas/Pred"],
+    );
+    for name in &names {
+        let rec = engine.submit_spgemm(&SpGemmSpec::new(name.clone(), name.clone()))?;
+        t.row(vec![
+            format!("{name}×{name}"),
+            rec.class.to_string(),
+            rec.chosen.to_string(),
+            format!("{:.1}", rec.cf),
+            rec.nnz_c.to_string(),
+            format!("{:.2}", rec.predicted_gflops),
+            format!("{:.2}", rec.measured_gflops),
+            format!("{:.2}", rec.prediction_ratio()),
+        ]);
+    }
+    println!("{}", t.to_text());
+    let mut log = PerfLog::new();
+    for dec in engine.autotuner().spgemm_decisions() {
+        println!("  {}", dec.summary());
+        for cand in &dec.candidates {
+            log.push(PerfRecord {
+                predicted_gflops: cand.predicted_gflops,
+                ..PerfRecord::basic(
+                    "spgemm",
+                    format!("{}x{}", dec.a, dec.b),
+                    dec.class.to_string(),
+                    cand.im.to_string(),
+                    0,
+                    0,
+                    cand.measured_gflops,
+                )
+            });
+        }
+    }
+    log.merge_save("BENCH_route.json")?;
+    println!("wrote BENCH_route.json ({} spgemm records)", log.records.len());
     Ok(())
 }
 

@@ -37,9 +37,11 @@ use crate::coordinator::planner::{Planner, Prediction};
 use crate::coordinator::registry::MatrixRegistry;
 use crate::error::{Error, Result};
 use crate::gen::{Prng, SparsityClass};
-use crate::metrics::{bench_adaptive, gflops, spmm_flops};
+use crate::metrics::{bench_adaptive_checked, gflops, spmm_flops};
+use crate::model::SpGemmParams;
 use crate::pattern::{classify, Classification};
 use crate::sparse::{reorder::permute_symmetric, Csr, Reordering};
+use crate::spgemm::{compression_factor, spgemm_flops, SpGemm, SpGemmImpl};
 use crate::spmm::{build_native, Impl, Schedule, Spmm};
 
 /// Knobs for the explore/exploit policy.
@@ -142,6 +144,69 @@ impl RouteDecision {
     }
 }
 
+/// One measured SpGEMM candidate, kept on the decision so reports and
+/// `BENCH_route.json` can render the full predicted-vs-measured line
+/// (≥ 2 candidates per tuned pair).
+#[derive(Debug, Clone)]
+pub struct SpGemmCandidate {
+    pub im: SpGemmImpl,
+    /// Planner prediction (at the conservative pre-execution cf).
+    pub predicted_gflops: f64,
+    /// Exploration measurement.
+    pub measured_gflops: f64,
+    /// Model AI the prediction used.
+    pub ai: f64,
+}
+
+/// A pinned SpGEMM routing decision for one `(left, right)` matrix
+/// pair — the `Workload::SpGemm` dimension of the router
+/// ([`crate::coordinator::Workload`]).
+#[derive(Debug, Clone)]
+pub struct SpGemmDecision {
+    /// Left operand (registered name).
+    pub a: String,
+    /// Right operand (registered name).
+    pub b: String,
+    /// Winning kernel.
+    pub im: SpGemmImpl,
+    /// Class of the left operand's active layout.
+    pub class: SparsityClass,
+    /// Measured compression factor `flops / nnz(C)` of the pair —
+    /// cached here so later submissions predict at the measured cf
+    /// instead of the conservative floor.
+    pub cf: f64,
+    /// Planner prediction for the winner at decision time.
+    pub predicted_gflops: f64,
+    /// Exploration measurement of the winner.
+    pub measured_gflops: f64,
+    /// Candidates measured for this decision.
+    pub explored: usize,
+    /// Measured winner minus the predictor's top pick (0 when the
+    /// prediction was already right).
+    pub regret_gflops: f64,
+    /// Every measured candidate, predicted order.
+    pub candidates: Vec<SpGemmCandidate>,
+}
+
+impl SpGemmDecision {
+    /// One-line human rendering for tables and logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}×{} → {} (class {}, cf {:.1}, pred {:.2} meas {:.2} GFLOP/s, \
+             regret {:.2}, {} measured)",
+            self.a,
+            self.b,
+            self.im,
+            self.class,
+            self.cf,
+            self.predicted_gflops,
+            self.measured_gflops,
+            self.regret_gflops,
+            self.explored,
+        )
+    }
+}
+
 /// The router: pinned decisions plus the explore bookkeeping.
 ///
 /// Owned by the engine; all heavyweight collaborators (registry,
@@ -150,6 +215,8 @@ impl RouteDecision {
 pub struct Autotuner {
     policy: AutotunePolicy,
     decisions: HashMap<(String, usize), RouteDecision>,
+    /// Pinned SpGEMM decisions, keyed by (left, right) operand names.
+    spgemm_decisions: HashMap<(String, String), SpGemmDecision>,
     /// Total exploration measurements ever run (observability: batch
     /// reports diff this to prove re-submission measures nothing).
     measurements: usize,
@@ -157,7 +224,12 @@ pub struct Autotuner {
 
 impl Autotuner {
     pub fn new(policy: AutotunePolicy) -> Autotuner {
-        Autotuner { policy, decisions: HashMap::new(), measurements: 0 }
+        Autotuner {
+            policy,
+            decisions: HashMap::new(),
+            spgemm_decisions: HashMap::new(),
+            measurements: 0,
+        }
     }
 
     pub fn policy(&self) -> &AutotunePolicy {
@@ -181,10 +253,34 @@ impl Autotuner {
         self.measurements
     }
 
+    /// The pinned SpGEMM decision for the `(a, b)` pair, if one
+    /// exists.
+    pub fn spgemm_decision(&self, a: &str, b: &str) -> Option<&SpGemmDecision> {
+        self.spgemm_decisions.get(&(a.to_string(), b.to_string()))
+    }
+
+    /// Every pinned SpGEMM decision, sorted by (a, b).
+    pub fn spgemm_decisions(&self) -> Vec<&SpGemmDecision> {
+        let mut v: Vec<&SpGemmDecision> = self.spgemm_decisions.values().collect();
+        v.sort_by(|x, y| (x.a.as_str(), x.b.as_str()).cmp(&(y.a.as_str(), y.b.as_str())));
+        v
+    }
+
     /// Drop every decision for `matrix` (the matrix was re-registered;
-    /// its structure may have changed).
+    /// its structure may have changed). SpGEMM decisions go whether the
+    /// matrix was the left or the right operand.
     pub fn forget(&mut self, matrix: &str) {
         self.decisions.retain(|k, _| k.0 != matrix);
+        self.invalidate_spgemm(matrix);
+    }
+
+    /// Drop every SpGEMM pair decision involving `matrix` as either
+    /// operand. Called when the matrix's active layout changes
+    /// (re-registration, or an SpMM tune pinning a reordering): the
+    /// permuted matrix yields a *different product*, so a pin measured
+    /// on the old layout — its winner and its cached cf — is stale.
+    fn invalidate_spgemm(&mut self, matrix: &str) {
+        self.spgemm_decisions.retain(|k, _| k.0 != matrix && k.1 != matrix);
     }
 
     /// Resolve the decision for `(matrix, d)`, running the
@@ -320,6 +416,10 @@ impl Autotuner {
         let best_gf = best.measured_gflops.unwrap_or(0.0);
         if best.reorder != active {
             registry.apply_reordering(matrix, best.reorder)?;
+            // the permuted layout computes a *different* product —
+            // any pinned SpGEMM decision involving this matrix was
+            // measured (winner, cf) on the old layout and must go
+            self.invalidate_spgemm(matrix);
         }
         let decision = RouteDecision {
             matrix: matrix.to_string(),
@@ -337,12 +437,99 @@ impl Autotuner {
         self.decisions.insert((matrix.to_string(), d), decision.clone());
         Ok(decision)
     }
+
+    /// Resolve the SpGEMM decision for the `(a, b)` pair, running the
+    /// explore/exploit policy if none is pinned yet: prepare both
+    /// kernels over `a`'s active layout, rank them with the
+    /// cf-parameterized planner (at the conservative pre-execution
+    /// floor — `nnz(C)` is unknown until the first run), measure up to
+    /// `top_k` candidates, feed every measurement into the SpGEMM
+    /// priors, and pin the measured best along with the pair's
+    /// measured compression factor. Reorderings are not enumerated:
+    /// `P·A·Pᵀ·B` is a different product, not a different layout of
+    /// the same one.
+    pub fn tune_spgemm(
+        &mut self,
+        a: &str,
+        b: &str,
+        registry: &mut MatrixRegistry,
+        planner: &Planner,
+    ) -> Result<SpGemmDecision> {
+        if let Some(dec) = self.spgemm_decision(a, b) {
+            return Ok(dec.clone());
+        }
+        // validate the pair before building any kernel: a mismatched
+        // pair must not pay (and retain) the binning of either
+        registry.spgemm_pair(a, b)?;
+        for im in SpGemmImpl::ALL {
+            registry.ensure_spgemm(a, im)?;
+        }
+        let (entry_a, entry_b) = registry.spgemm_pair(a, b).expect("validated above");
+        let (acsr, bcsr) = (entry_a.csr(), entry_b.csr());
+        let flops = spgemm_flops(acsr, bcsr);
+        let params =
+            SpGemmParams::new(acsr.nrows, bcsr.nrows, acsr.nnz(), bcsr.nnz(), flops);
+        let cls = entry_a.classification.clone();
+        let ranked = planner.rank_spgemm(&cls, params);
+        let k = self.policy.top_k.clamp(1, ranked.len());
+
+        let mut measured: Vec<SpGemmCandidate> = Vec::new();
+        let mut cf_measured: Option<f64> = None;
+        for pred in ranked.into_iter().take(k) {
+            let kernel = entry_a.spgemm_kernel(pred.im).expect("ensured above");
+            let sched = kernel.plan();
+            // first execution surfaces kernel errors before the timing
+            // loop and yields nnz(C) for the measured cf
+            let c = kernel.execute_with(bcsr, &sched)?;
+            cf_measured = Some(compression_factor(flops, c.nnz()));
+            drop(c);
+            let iters = self.policy.explore_iters.max(1);
+            let r =
+                bench_adaptive_checked(0, iters, iters * 4, self.policy.explore_min_secs, |_| {
+                    kernel.execute_with(bcsr, &sched).map(|_| ())
+                })?;
+            let gf = gflops(flops, r.median_secs());
+            planner.observe_spgemm(cls.class, pred.im, pred.roof_gflops, gf);
+            self.measurements += 1;
+            measured.push(SpGemmCandidate {
+                im: pred.im,
+                predicted_gflops: pred.predicted_gflops,
+                measured_gflops: gf,
+                ai: pred.ai,
+            });
+        }
+
+        let best = measured
+            .iter()
+            .max_by(|x, y| x.measured_gflops.total_cmp(&y.measured_gflops))
+            .expect("k ≥ 1")
+            .clone();
+        // `measured` is in predicted order, so [0] is the predictor's pick
+        let predictor_pick = measured[0].measured_gflops;
+        let decision = SpGemmDecision {
+            a: a.to_string(),
+            b: b.to_string(),
+            im: best.im,
+            class: cls.class,
+            cf: cf_measured.unwrap_or(params.cf),
+            predicted_gflops: best.predicted_gflops,
+            measured_gflops: best.measured_gflops,
+            explored: measured.len(),
+            regret_gflops: (best.measured_gflops - predictor_pick).max(0.0),
+            candidates: measured,
+        };
+        self.spgemm_decisions
+            .insert((a.to_string(), b.to_string()), decision.clone());
+        Ok(decision)
+    }
 }
 
 /// One exploration measurement: run the kernel over its schedule with
-/// pooled operands and return GFLOP/s. Kernel errors surface before the
-/// timing loop so a broken candidate fails the tune cleanly instead of
-/// panicking mid-benchmark.
+/// pooled operands and return GFLOP/s. Kernel errors — before *or*
+/// mid-way through the timing loop — surface as `Err`, so a broken
+/// candidate fails the tune cleanly instead of panicking through the
+/// worker pool (an earlier revision `expect`ed mid-loop and a flaky
+/// kernel poisoned the whole tune; regression-tested below).
 fn measure(
     kernel: &dyn Spmm,
     sched: &Schedule,
@@ -359,11 +546,12 @@ fn measure(
         return Err(e);
     }
     let iters = policy.explore_iters.max(1);
-    let r = bench_adaptive(0, iters, iters * 4, policy.explore_min_secs, |_| {
-        kernel.execute_with(&b, &mut c, sched).expect("kernel failed mid-exploration");
+    let r = bench_adaptive_checked(0, iters, iters * 4, policy.explore_min_secs, |_| {
+        kernel.execute_with(&b, &mut c, sched)
     });
     buffers.release(b);
     buffers.release(c);
+    let r = r?;
     Ok(gflops(spmm_flops(kernel.nnz(), d), r.median_secs()))
 }
 
@@ -460,6 +648,91 @@ mod tests {
         tuner.forget("m");
         assert!(tuner.decision("m", 4).is_none());
         assert!(tuner.tune("ghost", 4, &mut reg, &planner, &mut buf, &mut rng).is_err());
+    }
+
+    #[test]
+    fn tune_spgemm_pins_both_kernels_and_reuses() {
+        let (mut reg, planner, _buf, _rng) = fixture();
+        let a = erdos_renyi(150, 150, 4.0, &mut Prng::new(0xF10));
+        let b = erdos_renyi(150, 150, 4.0, &mut Prng::new(0xF11));
+        reg.register("a", a, &[Impl::Csr]).unwrap();
+        reg.register("b", b, &[Impl::Csr]).unwrap();
+        let mut tuner = Autotuner::new(quick_policy());
+        let dec = tuner.tune_spgemm("a", "b", &mut reg, &planner).unwrap();
+        assert_eq!((dec.a.as_str(), dec.b.as_str()), ("a", "b"));
+        assert!(dec.measured_gflops > 0.0);
+        assert_eq!(dec.explored, 2, "both SpGEMM kernels must be measured");
+        assert_eq!(dec.candidates.len(), 2);
+        assert!(dec.cf >= 2.0, "cf={}", dec.cf);
+        assert!(dec.regret_gflops >= 0.0);
+        let n = tuner.measurements();
+        // second tune for the same pair: pinned, no re-measure
+        let dec2 = tuner.tune_spgemm("a", "b", &mut reg, &planner).unwrap();
+        assert_eq!(tuner.measurements(), n);
+        assert_eq!(dec2.im, dec.im);
+        assert_eq!(tuner.spgemm_decisions().len(), 1);
+        // forgetting the *right* operand unpins the pair too
+        tuner.forget("b");
+        assert!(tuner.spgemm_decision("a", "b").is_none());
+        // a layout conversion invalidates pins involving the matrix as
+        // either operand — the permuted matrix is a different product
+        tuner.tune_spgemm("a", "b", &mut reg, &planner).unwrap();
+        assert!(tuner.spgemm_decision("a", "b").is_some());
+        tuner.invalidate_spgemm("b");
+        assert!(tuner.spgemm_decision("a", "b").is_none());
+        // unknown operands error
+        assert!(tuner.tune_spgemm("ghost", "b", &mut reg, &planner).is_err());
+        assert!(tuner.tune_spgemm("a", "ghost", &mut reg, &planner).is_err());
+        // dimension mismatch caught before any measurement
+        let rect = erdos_renyi(150, 80, 3.0, &mut Prng::new(0xF12));
+        reg.register("rect", rect, &[Impl::Csr]).unwrap();
+        assert!(tuner.tune_spgemm("rect", "b", &mut reg, &planner).is_err());
+    }
+
+    #[test]
+    fn measure_surfaces_midloop_kernel_errors_as_err() {
+        use crate::spmm::{CsrSpmm, DenseMatrix};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // fails on every call after the first — the pre-check passes,
+        // so only the in-loop capture can catch it (the old `expect`
+        // panicked here and poisoned the tune through the pool)
+        struct Flaky {
+            calls: AtomicUsize,
+        }
+        impl Spmm for Flaky {
+            fn id(&self) -> Impl {
+                Impl::Csr
+            }
+            fn nrows(&self) -> usize {
+                4
+            }
+            fn ncols(&self) -> usize {
+                4
+            }
+            fn nnz(&self) -> usize {
+                4
+            }
+            fn execute(&self, _b: &DenseMatrix, _c: &mut DenseMatrix) -> crate::error::Result<()> {
+                if self.calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                    Ok(())
+                } else {
+                    Err(Error::InvalidStructure("flaky kernel".into()))
+                }
+            }
+        }
+        let k = Flaky { calls: AtomicUsize::new(0) };
+        let sched = k.plan(None);
+        let mut buffers = BufferPool::new();
+        let mut rng = Prng::new(0xF13);
+        let policy = quick_policy();
+        let r = measure(&k, &sched, 4, &mut buffers, &mut rng, &policy);
+        assert!(r.is_err(), "mid-loop kernel failure must surface as Err");
+        // the pool is not poisoned: a healthy measurement still works
+        let a = erdos_renyi(60, 60, 3.0, &mut Prng::new(0xF14));
+        let real = CsrSpmm::new(a, 2);
+        let sched = real.plan(None);
+        let gf = measure(&real, &sched, 4, &mut buffers, &mut rng, &policy).unwrap();
+        assert!(gf > 0.0);
     }
 
     #[test]

@@ -1,17 +1,20 @@
 //! The engine: classify → predict → route → execute → learn.
 
-use crate::coordinator::autotune::{Autotuner, AutotunePolicy, RouteDecision};
+use crate::coordinator::autotune::{Autotuner, AutotunePolicy, RouteDecision, SpGemmDecision};
 use crate::coordinator::batch::{BatchReport, BufferPool};
-use crate::coordinator::job::{JobRecord, JobSpec, PredictionReport};
+use crate::coordinator::job::{
+    JobRecord, JobSpec, PredictionReport, SpGemmRecord, SpGemmSpec, Workload,
+};
 use crate::coordinator::planner::Planner;
 use crate::coordinator::registry::MatrixRegistry;
 use crate::error::{Error, Result};
 use crate::gen::Prng;
 use crate::membench;
-use crate::metrics::{bench_adaptive, gflops, spmm_flops, Timer};
-use crate::model::{MachineParams, Roofline};
+use crate::metrics::{bench_adaptive_checked, gflops, spmm_flops, Timer};
+use crate::model::{MachineParams, Roofline, SpGemmParams};
 use crate::runtime::{ArtifactManifest, XlaRuntime};
 use crate::sparse::Csr;
+use crate::spgemm::{compression_factor, spgemm_flops};
 use crate::spmm::Impl;
 
 /// Engine construction options.
@@ -54,6 +57,14 @@ impl Default for EngineConfig {
     }
 }
 
+/// Outcome of a workload-dispatched submission
+/// ([`Engine::submit_workload`]).
+#[derive(Debug, Clone)]
+pub enum WorkloadOutcome {
+    SpMM(JobRecord),
+    SpGemm(SpGemmRecord),
+}
+
 /// The roofline-guided SpMM engine (see module docs).
 pub struct Engine {
     registry: MatrixRegistry,
@@ -61,6 +72,9 @@ pub struct Engine {
     config: EngineConfig,
     xla: Option<(XlaRuntime, ArtifactManifest)>,
     history: Vec<JobRecord>,
+    /// SpGEMM records, kept separately — their axes (pair, cf) do not
+    /// fit the SpMM record shape.
+    spgemm_history: Vec<SpGemmRecord>,
     rng: Prng,
     /// Recycled dense `B`/`C` operands, shared by every submission.
     buffers: BufferPool,
@@ -95,6 +109,7 @@ impl Engine {
             config,
             xla,
             history: Vec::new(),
+            spgemm_history: Vec::new(),
             rng: Prng::new(0x5eed),
             buffers: BufferPool::new(),
             tuner,
@@ -218,11 +233,18 @@ impl Engine {
             self.buffers.release(c);
             return Err(e);
         }
-        let r = bench_adaptive(self.config.warmup, self.config.iters, self.config.iters * 4, 0.2, |_| {
-            kernel.execute_with(&b, &mut c, &sched).expect("kernel failed mid-benchmark");
-        });
+        // mid-benchmark failures surface as Err too (the buffers still
+        // return to the pool, and nothing panics through the workers)
+        let r = bench_adaptive_checked(
+            self.config.warmup,
+            self.config.iters,
+            self.config.iters * 4,
+            0.2,
+            |_| kernel.execute_with(&b, &mut c, &sched),
+        );
         self.buffers.release(b);
         self.buffers.release(c);
+        let r = r?;
         let secs = r.median_secs();
         let flops = spmm_flops(kernel.nnz(), job.d);
         let measured = gflops(flops, secs);
@@ -242,6 +264,125 @@ impl Engine {
         };
         self.history.push(record.clone());
         Ok(record)
+    }
+
+    /// Execute an SpGEMM job — the `Workload::SpGemm` arm of the
+    /// router ([`crate::coordinator::Workload`]): `C = A·B` with both
+    /// operands registered. Routing mirrors [`Engine::submit`]: the
+    /// pinned autotune decision per (a, b) pair when enabled, the
+    /// predicted-best kernel otherwise, or the forced one; the
+    /// measurement feeds the planner's SpGEMM priors, and the record
+    /// carries the measured compression factor.
+    ///
+    /// Both operands execute in their *active* layouts. A reordering
+    /// pinned by SpMM tuning changes the product (`P·A·Pᵀ·B` is a
+    /// different matrix than `P·(A·B)`), which is why SpGEMM tuning
+    /// never enumerates reorderings.
+    pub fn submit_spgemm(&mut self, spec: &SpGemmSpec) -> Result<SpGemmRecord> {
+        // adaptive routing first: tuning lazily builds kernels through
+        // a mutable registry borrow, so it must precede the entry reads
+        let routed: Option<SpGemmDecision> =
+            if self.config.autotune.enabled && spec.force_impl.is_none() {
+                Some(match self.tuner.spgemm_decision(&spec.a, &spec.b) {
+                    Some(dec) => dec.clone(),
+                    None => self.tuner.tune_spgemm(
+                        &spec.a,
+                        &spec.b,
+                        &mut self.registry,
+                        &self.planner,
+                    )?,
+                })
+            } else {
+                None
+            };
+        // resolve the pair and pick the kernel *before* building any:
+        // predictions need no kernels, so only the chosen
+        // implementation is ever constructed (a forced or pinned job
+        // never pays the other kernel's binning time or memory)
+        let (cls, params, chosen_im) = {
+            let (entry_a, entry_b) = self.registry.spgemm_pair(&spec.a, &spec.b)?;
+            let (acsr, bcsr) = (entry_a.csr(), entry_b.csr());
+            let cls = entry_a.classification.clone();
+            let flops = spgemm_flops(acsr, bcsr);
+            let mut params =
+                SpGemmParams::new(acsr.nrows, bcsr.nrows, acsr.nnz(), bcsr.nnz(), flops);
+            if let Some(dec) = &routed {
+                // the pinned decision carries the pair's measured cf —
+                // predict at it rather than the conservative floor
+                params = params.with_cf(dec.cf);
+            }
+            let chosen_im = match (spec.force_impl, &routed) {
+                (Some(im), _) => im,
+                (None, Some(dec)) => dec.im,
+                (None, None) => self.planner.rank_spgemm(&cls, params)[0].im,
+            };
+            (cls, params, chosen_im)
+        };
+        self.registry.ensure_spgemm(&spec.a, chosen_im)?;
+        let entry_a = self.registry.get(&spec.a).expect("resolved above");
+        let bcsr = self.registry.get(&spec.b).expect("resolved above").csr();
+        let pred = self.planner.predict_spgemm(&cls, params, chosen_im);
+        let kernel = entry_a.spgemm_kernel(chosen_im).expect("ensured above");
+        let sched = kernel.plan();
+        // first execution surfaces kernel errors before the timing
+        // loop and yields nnz(C) for the measured compression factor
+        let c = kernel.execute_with(bcsr, &sched)?;
+        let nnz_c = c.nnz();
+        drop(c);
+        // the timed region includes output allocation — SpGEMM's
+        // output is data-dependent, so allocation is part of the work
+        let r = bench_adaptive_checked(
+            self.config.warmup,
+            self.config.iters,
+            self.config.iters * 4,
+            0.2,
+            |_| kernel.execute_with(bcsr, &sched).map(|_| ()),
+        )?;
+        let secs = r.median_secs();
+        let measured = gflops(params.flops, secs);
+        self.planner.observe_spgemm(cls.class, chosen_im, pred.roof_gflops, measured);
+        let record = SpGemmRecord {
+            a: spec.a.clone(),
+            b: spec.b.clone(),
+            class: cls.class,
+            chosen: chosen_im,
+            flops: params.flops,
+            nnz_c,
+            cf: compression_factor(params.flops, nnz_c),
+            predicted_gflops: pred.predicted_gflops,
+            ai: pred.ai,
+            secs,
+            measured_gflops: measured,
+        };
+        self.spgemm_history.push(record.clone());
+        Ok(record)
+    }
+
+    /// Dispatch on the [`Workload`] dimension: `SpMM` jobs go through
+    /// [`Engine::submit`], `SpGemm` jobs through
+    /// [`Engine::submit_spgemm`] — the single entry point for callers
+    /// holding a `(matrix, workload)` pair rather than a concrete
+    /// spec.
+    pub fn submit_workload(&mut self, matrix: &str, w: &Workload) -> Result<WorkloadOutcome> {
+        match w {
+            Workload::SpMM { d } => {
+                Ok(WorkloadOutcome::SpMM(self.submit(&JobSpec::new(matrix, *d))?))
+            }
+            Workload::SpGemm { b } => Ok(WorkloadOutcome::SpGemm(
+                self.submit_spgemm(&SpGemmSpec::new(matrix, b.clone()))?,
+            )),
+        }
+    }
+
+    /// Eagerly tune one SpGEMM pair (normally tuning happens lazily on
+    /// first submission). Returns the pinned decision.
+    pub fn tune_spgemm(&mut self, a: &str, b: &str) -> Result<SpGemmDecision> {
+        self.tuner.tune_spgemm(a, b, &mut self.registry, &self.planner)
+    }
+
+    /// Every SpGEMM record executed so far.
+    pub fn spgemm_history(&self) -> &[SpGemmRecord] {
+        &self.spgemm_history
     }
 
     /// Run a batch of jobs in order, stopping at the first hard error.
@@ -355,6 +496,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::gen::{erdos_renyi, mesh2d, MeshKind, Prng};
+    use crate::spgemm::SpGemmImpl;
 
     fn test_engine() -> Engine {
         test_engine_with(AutotunePolicy::default())
@@ -502,6 +644,73 @@ mod tests {
         let a2 = erdos_renyi(100, 100, 3.0, &mut Prng::new(189));
         e.register("mesh", a2).unwrap();
         assert!(e.autotuner().decision("mesh", 8).is_none());
+    }
+
+    #[test]
+    fn spgemm_submit_routes_and_measures() {
+        let mut e = test_engine();
+        let a = erdos_renyi(200, 200, 4.0, &mut Prng::new(190));
+        let b = erdos_renyi(200, 200, 4.0, &mut Prng::new(191));
+        e.register("a", a).unwrap();
+        e.register("b", b).unwrap();
+        let rec = e.submit_spgemm(&SpGemmSpec::new("a", "b")).unwrap();
+        assert!(rec.measured_gflops > 0.0);
+        assert!(rec.cf >= 2.0);
+        assert!(rec.nnz_c > 0);
+        assert!(rec.flops >= 2.0 * rec.nnz_c as f64);
+        assert_eq!(e.spgemm_history().len(), 1);
+        // forced kernel respected for both candidates
+        for im in SpGemmImpl::ALL {
+            let rec = e.submit_spgemm(&SpGemmSpec::new("a", "b").with_impl(im)).unwrap();
+            assert_eq!(rec.chosen, im);
+        }
+        // unknown operands error
+        assert!(e.submit_spgemm(&SpGemmSpec::new("ghost", "b")).is_err());
+        assert!(e.submit_spgemm(&SpGemmSpec::new("a", "ghost")).is_err());
+    }
+
+    #[test]
+    fn workload_dispatch_covers_both_arms() {
+        let mut e = test_engine();
+        let a = erdos_renyi(150, 150, 4.0, &mut Prng::new(194));
+        e.register("m", a).unwrap();
+        match e.submit_workload("m", &Workload::SpMM { d: 8 }).unwrap() {
+            WorkloadOutcome::SpMM(rec) => {
+                assert_eq!(rec.d, 8);
+                assert!(rec.measured_gflops > 0.0);
+            }
+            other => panic!("SpMM workload dispatched wrong: {other:?}"),
+        }
+        match e.submit_workload("m", &Workload::SpGemm { b: "m".into() }).unwrap() {
+            WorkloadOutcome::SpGemm(rec) => {
+                assert_eq!((rec.a.as_str(), rec.b.as_str()), ("m", "m"));
+                assert!(rec.cf >= 2.0);
+            }
+            other => panic!("SpGemm workload dispatched wrong: {other:?}"),
+        }
+        assert_eq!(e.history().len(), 1);
+        assert_eq!(e.spgemm_history().len(), 1);
+    }
+
+    #[test]
+    fn autotuned_spgemm_pins_then_serves_from_cache() {
+        let mut e = test_engine_with(quick_autotune());
+        let a = erdos_renyi(150, 150, 4.0, &mut Prng::new(192));
+        e.register("m", a).unwrap();
+        // A·A: the classic SpGEMM self-product
+        let r1 = e.submit_spgemm(&SpGemmSpec::new("m", "m")).unwrap();
+        let dec = e.autotuner().spgemm_decision("m", "m").unwrap().clone();
+        assert_eq!(r1.chosen, dec.im);
+        assert_eq!(dec.explored, 2, "both kernels explored");
+        assert_eq!(dec.candidates.len(), 2);
+        let n = e.autotuner().measurements();
+        let r2 = e.submit_spgemm(&SpGemmSpec::new("m", "m")).unwrap();
+        assert_eq!(e.autotuner().measurements(), n, "decision is pinned");
+        assert_eq!(r2.chosen, dec.im);
+        // re-registration forgets the pair decision
+        let a2 = erdos_renyi(150, 150, 3.0, &mut Prng::new(193));
+        e.register("m", a2).unwrap();
+        assert!(e.autotuner().spgemm_decision("m", "m").is_none());
     }
 
     #[test]

@@ -2,7 +2,30 @@
 
 use crate::gen::SparsityClass;
 use crate::sparse::Reordering;
+use crate::spgemm::SpGemmImpl;
 use crate::spmm::Impl;
+
+/// Which multiply a job performs — the routing dimension the planner
+/// and autotuner branch on. SpMM jobs multiply by a dense `n × d`
+/// operand ([`JobSpec`]); SpGEMM jobs multiply by another *registered
+/// sparse matrix* ([`SpGemmSpec`]), where output fill-in and the
+/// compression factor — not a dense width — drive the traffic models.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Workload {
+    /// Multiply by a dense operand of width `d`.
+    SpMM { d: usize },
+    /// Multiply by the sparse matrix registered under this name.
+    SpGemm { b: String },
+}
+
+impl std::fmt::Display for Workload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Workload::SpMM { d } => write!(f, "SpMM(d={d})"),
+            Workload::SpGemm { b } => write!(f, "SpGEMM(×{b})"),
+        }
+    }
+}
 
 /// A unit of work: multiply registered matrix `matrix` by a dense
 /// matrix with `d` columns.
@@ -25,6 +48,75 @@ impl JobSpec {
     pub fn with_impl(mut self, im: Impl) -> JobSpec {
         self.force_impl = Some(im);
         self
+    }
+
+    /// This job's workload dimension.
+    pub fn workload(&self) -> Workload {
+        Workload::SpMM { d: self.d }
+    }
+}
+
+/// A unit of SpGEMM work: `C = A·B` over two registered matrices.
+#[derive(Debug, Clone)]
+pub struct SpGemmSpec {
+    /// Left operand (registered name).
+    pub a: String,
+    /// Right operand (registered name).
+    pub b: String,
+    /// Force a specific kernel (None = let the router decide).
+    pub force_impl: Option<SpGemmImpl>,
+}
+
+impl SpGemmSpec {
+    pub fn new(a: impl Into<String>, b: impl Into<String>) -> SpGemmSpec {
+        SpGemmSpec { a: a.into(), b: b.into(), force_impl: None }
+    }
+
+    pub fn with_impl(mut self, im: SpGemmImpl) -> SpGemmSpec {
+        self.force_impl = Some(im);
+        self
+    }
+
+    /// This job's workload dimension.
+    pub fn workload(&self) -> Workload {
+        Workload::SpGemm { b: self.b.clone() }
+    }
+}
+
+/// Outcome of one executed SpGEMM job.
+#[derive(Debug, Clone)]
+pub struct SpGemmRecord {
+    pub a: String,
+    pub b: String,
+    /// Class of the left operand's active layout.
+    pub class: SparsityClass,
+    /// Kernel the job ran on.
+    pub chosen: SpGemmImpl,
+    /// Exact FLOP count ([`crate::spgemm::spgemm_flops`]).
+    pub flops: f64,
+    /// Stored nonzeros of the product.
+    pub nnz_c: usize,
+    /// Measured compression factor `flops / nnz(C)`.
+    pub cf: f64,
+    /// Planner's predicted GFLOP/s for the chosen kernel (at the cf
+    /// the router predicted with).
+    pub predicted_gflops: f64,
+    /// Model arithmetic intensity used for the prediction.
+    pub ai: f64,
+    /// Measured wall-clock seconds (median).
+    pub secs: f64,
+    /// Measured GFLOP/s.
+    pub measured_gflops: f64,
+}
+
+impl SpGemmRecord {
+    /// measured / predicted — 1.0 is a perfect prediction.
+    pub fn prediction_ratio(&self) -> f64 {
+        if self.predicted_gflops <= 0.0 {
+            0.0
+        } else {
+            self.measured_gflops / self.predicted_gflops
+        }
     }
 }
 
@@ -145,5 +237,28 @@ mod tests {
         let j = JobSpec::new("x", 16).with_impl(Impl::Csb);
         assert_eq!(j.force_impl, Some(Impl::Csb));
         assert_eq!(j.d, 16);
+        assert_eq!(j.workload(), Workload::SpMM { d: 16 });
+    }
+
+    #[test]
+    fn spgemm_spec_and_record() {
+        let s = SpGemmSpec::new("a", "b").with_impl(SpGemmImpl::PbMerge);
+        assert_eq!(s.force_impl, Some(SpGemmImpl::PbMerge));
+        assert_eq!(s.workload(), Workload::SpGemm { b: "b".into() });
+        assert_eq!(format!("{}", s.workload()), "SpGEMM(×b)");
+        let r = SpGemmRecord {
+            a: "a".into(),
+            b: "b".into(),
+            class: SparsityClass::Random,
+            chosen: SpGemmImpl::Hash,
+            flops: 100.0,
+            nnz_c: 10,
+            cf: 10.0,
+            predicted_gflops: 2.0,
+            ai: 0.1,
+            secs: 0.01,
+            measured_gflops: 1.0,
+        };
+        assert_eq!(r.prediction_ratio(), 0.5);
     }
 }

@@ -37,6 +37,16 @@
 //! the explored top-k exactly where the structural models collapse to
 //! the random floor.
 //!
+//! The engine is **workload-aware**: [`Workload`] names the two
+//! multiply dimensions and [`Engine::submit_workload`] dispatches on
+//! it. SpMM jobs ([`JobSpec`]) route across the dense-operand kernel
+//! family; SpGEMM jobs ([`SpGemmSpec`], [`Engine::submit_spgemm`])
+//! route across the sparse×sparse pair ([`crate::spgemm`]) —
+//! predicted from the compression-factor-parameterized models,
+//! explored and pinned per (left, right) matrix pair
+//! ([`Autotuner::tune_spgemm`]), with the measured `cf` cached on the
+//! decision so later predictions tighten past the conservative floor.
+//!
 //! **Hand-off** (classify → predict → schedule → route → execute):
 //! this module owns the three middle stages and the loop around them.
 //! [`MatrixRegistry`] caches the *classify* output and the planned
@@ -52,9 +62,11 @@ mod job;
 mod planner;
 mod registry;
 
-pub use autotune::{Autotuner, AutotunePolicy, Candidate, RouteDecision};
+pub use autotune::{
+    Autotuner, AutotunePolicy, Candidate, RouteDecision, SpGemmCandidate, SpGemmDecision,
+};
 pub use batch::{BatchReport, BufferPool};
-pub use engine::{Engine, EngineConfig};
-pub use job::{JobRecord, JobSpec, PredictionReport};
-pub use planner::{Planner, Prediction};
+pub use engine::{Engine, EngineConfig, WorkloadOutcome};
+pub use job::{JobRecord, JobSpec, PredictionReport, SpGemmRecord, SpGemmSpec, Workload};
+pub use planner::{Planner, Prediction, SpGemmPrediction};
 pub use registry::{MatrixEntry, MatrixRegistry};

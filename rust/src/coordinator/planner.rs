@@ -25,7 +25,11 @@ use std::sync::Mutex;
 
 use crate::gen::SparsityClass;
 use crate::membench;
-use crate::model::{ai_pb_tiled, AiParams, CacheAwareRoofline, Roofline, SparsityModel};
+use crate::model::{
+    ai_pb_tiled, ai_spgemm, csr_bytes, AiParams, CacheAwareRoofline, Roofline, SparsityModel,
+    SpGemmParams,
+};
+use crate::spgemm::SpGemmImpl;
 use crate::spmm::pb_spill_tile;
 use crate::pattern::Classification;
 use crate::spmm::Impl;
@@ -46,6 +50,24 @@ pub struct Prediction {
     pub dt: usize,
 }
 
+/// A prediction for one SpGEMM implementation — the planner's
+/// `Workload::SpGemm` dimension ([`crate::coordinator::Workload`]).
+#[derive(Debug, Clone, Copy)]
+pub struct SpGemmPrediction {
+    pub im: SpGemmImpl,
+    /// Model arithmetic intensity (FLOPs/byte) at the given `cf`.
+    pub ai: f64,
+    /// Roof performance at that AI.
+    pub roof_gflops: f64,
+    /// Prior efficiency fraction applied.
+    pub prior: f64,
+    /// Predicted GFLOP/s = roof × prior.
+    pub predicted_gflops: f64,
+    /// Compression factor the prediction used
+    /// ([`crate::model::SpGemmParams::cf`]).
+    pub cf: f64,
+}
+
 /// Roofline-guided planner with online prior refinement.
 pub struct Planner {
     roofline: Roofline,
@@ -53,6 +75,9 @@ pub struct Planner {
     ladder: CacheAwareRoofline,
     /// (class, impl) → efficiency prior (fraction of roof).
     priors: Mutex<HashMap<(SparsityClass, Impl), f64>>,
+    /// (class, SpGEMM impl) → efficiency prior — the same learning
+    /// loop, keyed on the SpGEMM candidate set.
+    spgemm_priors: Mutex<HashMap<(SparsityClass, SpGemmImpl), f64>>,
     /// EMA weight for online updates.
     ema: f64,
 }
@@ -101,6 +126,26 @@ fn seed_prior(class: SparsityClass, im: Impl) -> f64 {
     }
 }
 
+/// Initial SpGEMM efficiency priors. The hash kernel is the
+/// *gathering* implementation: its achieved fraction collapses on
+/// random structure exactly like CSR's SpMM line (Fig. 2(a)) and
+/// recovers where structure keeps the gathered `B` rows resident. The
+/// PB merge streams every byte, so — like the SpMM PB prior — it runs
+/// a STREAM-like fraction of its (lower-AI) roof on every structure;
+/// it wins exactly where the hash kernel's prior collapses.
+fn seed_spgemm_prior(class: SparsityClass, im: SpGemmImpl) -> f64 {
+    use SparsityClass::*;
+    match im {
+        SpGemmImpl::Hash => match class {
+            Random => 0.35,
+            Diagonal => 0.60,
+            Blocked => 0.55,
+            ScaleFree => 0.45,
+        },
+        SpGemmImpl::PbMerge => 0.80,
+    }
+}
+
 /// Candidate tile widths at dense width `d`, widest first: the
 /// untiled `d` itself, then powers of two below it down to 8. Widths
 /// below 8 never pay — the extra `A` streams always beat one ceiling
@@ -130,7 +175,13 @@ impl Planner {
     /// Planner over an explicit bandwidth ladder (e.g. a measured
     /// `membench::bandwidth_ladder`).
     pub fn with_ladder(roofline: Roofline, ladder: CacheAwareRoofline) -> Planner {
-        Planner { roofline, ladder, priors: Mutex::new(HashMap::new()), ema: 0.3 }
+        Planner {
+            roofline,
+            ladder,
+            priors: Mutex::new(HashMap::new()),
+            spgemm_priors: Mutex::new(HashMap::new()),
+            ema: 0.3,
+        }
     }
 
     /// The flat roofline used for reports.
@@ -207,6 +258,75 @@ impl Planner {
             candidates.iter().map(|&im| self.predict(cls, d, im)).collect();
         preds.sort_by(|a, b| b.predicted_gflops.total_cmp(&a.predicted_gflops));
         preds
+    }
+
+    /// Current SpGEMM prior for (class, impl).
+    pub fn spgemm_prior(&self, class: SparsityClass, im: SpGemmImpl) -> f64 {
+        *self
+            .spgemm_priors
+            .lock()
+            .unwrap()
+            .entry((class, im))
+            .or_insert_with(|| seed_spgemm_prior(class, im))
+    }
+
+    /// Predict attainable GFLOP/s for one SpGEMM implementation on a
+    /// classified left operand — the `Workload::SpGemm` arm of the
+    /// predict stage. The hash kernel's gathered working set is `B`
+    /// itself, so it earns the cache-aware ceiling of `B`'s resident
+    /// bytes; the PB merge streams everything and sits on the flat
+    /// DRAM roof (the same gathering/streaming split as SpMM's
+    /// [`Impl::Pb`] special case).
+    pub fn predict_spgemm(
+        &self,
+        cls: &Classification,
+        p: SpGemmParams,
+        im: SpGemmImpl,
+    ) -> SpGemmPrediction {
+        let ai = ai_spgemm(p, im);
+        let roof = match im {
+            SpGemmImpl::Hash => {
+                let ws = csr_bytes(p.nnz_b as f64, p.p) as usize;
+                self.ladder.attainable_gflops(ai, ws)
+            }
+            SpGemmImpl::PbMerge => self.roofline.attainable_gflops(ai),
+        };
+        let prior = self.spgemm_prior(cls.class, im);
+        SpGemmPrediction {
+            im,
+            ai,
+            roof_gflops: roof,
+            prior,
+            predicted_gflops: roof * prior,
+            cf: p.cf,
+        }
+    }
+
+    /// Rank the SpGEMM candidate set, best predicted first.
+    pub fn rank_spgemm(&self, cls: &Classification, p: SpGemmParams) -> Vec<SpGemmPrediction> {
+        let mut preds: Vec<SpGemmPrediction> =
+            SpGemmImpl::ALL.iter().map(|&im| self.predict_spgemm(cls, p, im)).collect();
+        preds.sort_by(|a, b| b.predicted_gflops.total_cmp(&a.predicted_gflops));
+        preds
+    }
+
+    /// Online refinement for the SpGEMM priors — the same EMA loop as
+    /// [`Planner::observe`], keyed on the SpGEMM candidate set.
+    pub fn observe_spgemm(
+        &self,
+        class: SparsityClass,
+        im: SpGemmImpl,
+        roof_gflops: f64,
+        measured_gflops: f64,
+    ) {
+        if roof_gflops <= 0.0 {
+            return;
+        }
+        let eff = (measured_gflops / roof_gflops).clamp(0.0, 2.0);
+        let mut priors = self.spgemm_priors.lock().unwrap();
+        let slot =
+            priors.entry((class, im)).or_insert_with(|| seed_spgemm_prior(class, im));
+        *slot = (1.0 - self.ema) * *slot + self.ema * eff;
     }
 
     /// Online refinement: fold a measured efficiency (measured /
@@ -413,6 +533,61 @@ mod tests {
         let branked = p.rank(&bcls, 16, &Impl::NATIVE);
         let pb_banded = branked.iter().position(|r| r.im == Impl::Pb).unwrap();
         assert!(pb_banded >= 3, "PB must not be explored on banded structure: {branked:?}");
+    }
+
+    #[test]
+    fn spgemm_prediction_flips_with_structure() {
+        use crate::model::BandwidthCeiling;
+        use crate::spgemm::SpGemmImpl;
+        // DRAM-only ladder: B too large for any cache, so the hash
+        // kernel sits on the flat roof where its low random-class
+        // prior bites — the SpGEMM analog of pb_rank_flips_with_structure
+        let machine = MachineParams { beta_gbs: 10.0, pi_gflops: 10_000.0 };
+        let dram = vec![BandwidthCeiling {
+            level: "DRAM".into(),
+            capacity_bytes: usize::MAX,
+            beta_gbs: machine.beta_gbs,
+        }];
+        let ladder = CacheAwareRoofline::new(dram, machine.pi_gflops);
+        let p = Planner::with_ladder(Roofline::new(machine), ladder);
+        let a = erdos_renyi(3000, 3000, 8.0, &mut Prng::new(0x5d0));
+        let cls = classify(&a);
+        assert_eq!(cls.class, SparsityClass::Random, "{}", cls.rationale);
+        let nnz = cls.stats.nnz;
+        // square self-product shape: flops ≈ 2 · avg_row(B) · nnz(A)
+        let params = SpGemmParams::new(3000, 3000, nnz, nnz, 2.0 * 8.0 * nnz as f64);
+        let ranked = p.rank_spgemm(&cls, params);
+        assert_eq!(ranked[0].im, SpGemmImpl::PbMerge, "{ranked:?}");
+        assert!(ranked[0].predicted_gflops >= ranked[1].predicted_gflops);
+        // the merge kernel's AI is lower by design; its win is the prior
+        assert!(ranked[0].ai < ranked[1].ai);
+        // a banded operand keeps the gathering kernel on top
+        let banded_m = crate::gen::banded(3000, 8, 0.3, &mut Prng::new(0x5d1));
+        let bcls = classify(&banded_m);
+        assert_eq!(bcls.class, SparsityClass::Diagonal, "{}", bcls.rationale);
+        let branked = p.rank_spgemm(&bcls, params);
+        assert_eq!(branked[0].im, SpGemmImpl::Hash, "{branked:?}");
+    }
+
+    #[test]
+    fn observe_spgemm_moves_prior_toward_measurement() {
+        use crate::spgemm::SpGemmImpl;
+        let a = erdos_renyi(2000, 2000, 6.0, &mut Prng::new(0x5d2));
+        let cls = classify(&a);
+        let p = planner();
+        let nnz = cls.stats.nnz;
+        let params = SpGemmParams::new(2000, 2000, nnz, nnz, 2.0 * 6.0 * nnz as f64);
+        let before = p.predict_spgemm(&cls, params, SpGemmImpl::Hash);
+        for _ in 0..10 {
+            p.observe_spgemm(cls.class, SpGemmImpl::Hash, before.roof_gflops, before.roof_gflops);
+        }
+        let after = p.predict_spgemm(&cls, params, SpGemmImpl::Hash);
+        assert!(after.prior > before.prior);
+        assert!(after.predicted_gflops > before.predicted_gflops);
+        // a measured cf above the floor raises the predicted AI
+        let tighter = p.predict_spgemm(&cls, params.with_cf(16.0), SpGemmImpl::Hash);
+        assert!(tighter.ai > after.ai);
+        assert_eq!(tighter.cf, 16.0);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::error::{Error, Result};
 use crate::pattern::{classify, Classification};
 use crate::runtime::{ArtifactManifest, XlaRuntime, XlaSpmm};
 use crate::sparse::{reorder::permute_symmetric, Csr, Reordering};
+use crate::spgemm::{build_spgemm, SpGemm, SpGemmImpl};
 use crate::spmm::{build_native, Impl, Schedule, Spmm};
 
 /// One registered matrix with its prepared kernels.
@@ -37,6 +38,11 @@ pub struct MatrixEntry {
     /// Prepared kernels by implementation. XLA kernels are per-d, so
     /// they key on (impl, d); native kernels use d = 0 (any width).
     kernels: HashMap<(Impl, usize), Box<dyn Spmm>>,
+    /// Prepared SpGEMM kernels over this matrix as the *left* operand.
+    /// Built lazily on first SpGEMM submission
+    /// ([`MatrixRegistry::ensure_spgemm`]) so SpMM-only registrations
+    /// pay nothing; dropped (and lazily rebuilt) on conversion.
+    spgemm_kernels: HashMap<SpGemmImpl, Box<dyn SpGemm>>,
     /// The active CSR (kept for late kernel construction).
     csr: Csr,
     /// The matrix as registered; populated on first conversion.
@@ -57,6 +63,11 @@ impl MatrixEntry {
     pub fn kernel(&self, im: Impl, d: usize) -> Option<&dyn Spmm> {
         let key = if im == Impl::Xla { (im, d) } else { (im, 0) };
         self.kernels.get(&key).map(|b| b.as_ref())
+    }
+
+    /// Prepared SpGEMM kernel lookup (left operand = this matrix).
+    pub fn spgemm_kernel(&self, im: SpGemmImpl) -> Option<&dyn SpGemm> {
+        self.spgemm_kernels.get(&im).map(|b| b.as_ref())
     }
 
     /// Which implementations can serve width `d` right now.
@@ -152,6 +163,7 @@ impl MatrixRegistry {
                 name,
                 classification,
                 kernels,
+                spgemm_kernels: HashMap::new(),
                 csr,
                 base: None,
                 reorder: Reordering::None,
@@ -203,6 +215,9 @@ impl MatrixRegistry {
         }
         entry.classification = classify(&csr);
         entry.kernels = kernels;
+        // SpGEMM kernels embed the old layout's binning — drop them;
+        // the next SpGEMM submission rebuilds from the permuted matrix
+        entry.spgemm_kernels = HashMap::new();
         entry.csr = csr;
         entry.base = if r == Reordering::None { None } else { Some(base) };
         entry.reorder = r;
@@ -278,6 +293,44 @@ impl MatrixRegistry {
             }
         }
         Ok(staged)
+    }
+
+    /// Resolve an SpGEMM operand pair: both names registered and the
+    /// inner dimensions agreeing (`cols(a) == rows(b)`). Shared by the
+    /// router and the engine so the validation — and its error wording
+    /// — lives in one place.
+    pub fn spgemm_pair(&self, a: &str, b: &str) -> Result<(&MatrixEntry, &MatrixEntry)> {
+        let entry_a = self
+            .entries
+            .get(a)
+            .ok_or_else(|| Error::Usage(format!("matrix '{a}' not registered")))?;
+        let entry_b = self
+            .entries
+            .get(b)
+            .ok_or_else(|| Error::Usage(format!("matrix '{b}' not registered")))?;
+        let (acsr, bcsr) = (entry_a.csr(), entry_b.csr());
+        if bcsr.nrows != acsr.ncols {
+            return Err(Error::DimensionMismatch(format!(
+                "'{a}' is {}x{} but '{b}' has {} rows",
+                acsr.nrows, acsr.ncols, bcsr.nrows
+            )));
+        }
+        Ok((entry_a, entry_b))
+    }
+
+    /// Ensure an SpGEMM kernel (left operand = `name`'s active matrix)
+    /// is prepared, building it lazily on first use. Idempotent.
+    pub fn ensure_spgemm(&mut self, name: &str, im: SpGemmImpl) -> Result<()> {
+        let threads = self.threads;
+        let entry = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| Error::Usage(format!("matrix '{name}' not registered")))?;
+        if !entry.spgemm_kernels.contains_key(&im) {
+            let k = build_spgemm(im, &entry.csr, threads);
+            entry.spgemm_kernels.insert(im, k);
+        }
+        Ok(())
     }
 
     /// Prepare one extra native kernel after registration.
@@ -419,6 +472,26 @@ mod tests {
         assert_eq!(e.csr().to_dense(), scrambled.to_dense());
 
         assert!(reg.apply_reordering("ghost", Reordering::Rcm).is_err());
+    }
+
+    #[test]
+    fn spgemm_kernels_build_lazily_and_drop_on_reorder() {
+        use crate::spgemm::SpGemmImpl;
+        let mut reg = MatrixRegistry::new(2);
+        let a = erdos_renyi(100, 100, 3.0, &mut Prng::new(176));
+        reg.register("m", a, &[Impl::Csr]).unwrap();
+        assert!(reg.get("m").unwrap().spgemm_kernel(SpGemmImpl::Hash).is_none());
+        reg.ensure_spgemm("m", SpGemmImpl::Hash).unwrap();
+        reg.ensure_spgemm("m", SpGemmImpl::Hash).unwrap(); // idempotent
+        assert!(reg.get("m").unwrap().spgemm_kernel(SpGemmImpl::Hash).is_some());
+        assert!(reg.get("m").unwrap().spgemm_kernel(SpGemmImpl::PbMerge).is_none());
+        // conversion drops the SpGEMM kernels (the binning embeds the
+        // old layout); the next ensure rebuilds from the permuted matrix
+        reg.apply_reordering("m", crate::sparse::Reordering::DegreeSort).unwrap();
+        assert!(reg.get("m").unwrap().spgemm_kernel(SpGemmImpl::Hash).is_none());
+        reg.ensure_spgemm("m", SpGemmImpl::Hash).unwrap();
+        assert!(reg.get("m").unwrap().spgemm_kernel(SpGemmImpl::Hash).is_some());
+        assert!(reg.ensure_spgemm("ghost", SpGemmImpl::Hash).is_err());
     }
 
     #[test]

@@ -41,7 +41,7 @@ pub fn ablate_block_size(
     for &bd in block_dims {
         let kernel = CsbSpmm::from_csr_with_block(&csr, bd, cfg.threads);
         let st = BlockStats::of(kernel.matrix());
-        let m = measure_kernel(&kernel, d, cfg.iters, cfg.warmup);
+        let m = measure_kernel(&kernel, d, cfg.iters, cfg.warmup)?;
         t.row(vec![
             bd.to_string(),
             st.n_blocks.to_string(),
@@ -106,12 +106,14 @@ pub fn ablate_threads(
         let csr_k = CsrSpmm::new(csr.clone(), p);
         let opt_k = OptSpmm::new(csr.clone(), p);
         let csb_k = CsbSpmm::from_csr(&csr, p);
-        let g = |k: &dyn Spmm| measure_kernel(k, d, cfg.iters, cfg.warmup).gflops;
+        let g = |k: &dyn Spmm| -> Result<f64> {
+            Ok(measure_kernel(k, d, cfg.iters, cfg.warmup)?.gflops)
+        };
         t.row(vec![
             p.to_string(),
-            format!("{:.3}", g(&csr_k)),
-            format!("{:.3}", g(&opt_k)),
-            format!("{:.3}", g(&csb_k)),
+            format!("{:.3}", g(&csr_k)?),
+            format!("{:.3}", g(&opt_k)?),
+            format!("{:.3}", g(&csb_k)?),
         ]);
     }
     Ok(t)
@@ -240,7 +242,7 @@ pub fn ablate_reorder(cfg: &ExperimentConfig, d: usize) -> Result<Table> {
             let cls = crate::pattern::classify(&m);
             let ai = cls.model.ai(crate::model::AiParams::new(m.nrows, d, m.nnz()));
             let kernel = OptSpmm::new(m, cfg.threads);
-            let g = measure_kernel(&kernel, d, cfg.iters, cfg.warmup).gflops;
+            let g = measure_kernel(&kernel, d, cfg.iters, cfg.warmup)?.gflops;
             t.row(vec![
                 name.to_string(),
                 oname.to_string(),

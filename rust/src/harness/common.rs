@@ -2,9 +2,10 @@
 
 use std::sync::OnceLock;
 
+use crate::error::Result;
 use crate::gen::Prng;
 use crate::membench;
-use crate::metrics::{bench_adaptive, gflops, spmm_flops};
+use crate::metrics::{bench_adaptive_checked, gflops, spmm_flops};
 use crate::model::MachineParams;
 use crate::spmm::{DenseMatrix, Spmm};
 
@@ -22,20 +23,31 @@ pub struct CellMeasurement {
 /// benchmark loop (≥ `iters` iterations and ≥ 0.25 s of samples,
 /// capped at 4×iters). B is seeded deterministically so every kernel
 /// sees identical inputs.
-pub fn measure_kernel(kernel: &dyn Spmm, d: usize, iters: usize, warmup: usize) -> CellMeasurement {
+///
+/// A failing kernel surfaces as `Err` — before *and* mid-way through
+/// the timing loop. An earlier revision `expect`ed inside the loop, so
+/// one flaky kernel panicked the measurement through the shared worker
+/// pool instead of failing its own cell (regression-tested below).
+pub fn measure_kernel(
+    kernel: &dyn Spmm,
+    d: usize,
+    iters: usize,
+    warmup: usize,
+) -> Result<CellMeasurement> {
     let mut rng = Prng::new(0xB0B + d as u64);
     let b = DenseMatrix::random(kernel.ncols(), d, &mut rng);
     let mut c = DenseMatrix::zeros(kernel.nrows(), d);
-    let r = bench_adaptive(warmup, iters, iters * 4, 0.25, |_| {
-        kernel.execute(&b, &mut c).expect("kernel failed during measurement");
-    });
+    // surface errors before the timed region
+    kernel.execute(&b, &mut c)?;
+    let r =
+        bench_adaptive_checked(warmup, iters, iters * 4, 0.25, |_| kernel.execute(&b, &mut c))?;
     let secs = r.median_secs();
-    CellMeasurement {
+    Ok(CellMeasurement {
         d,
         secs,
         gflops: gflops(spmm_flops(kernel.nnz(), d), secs),
         iters: r.samples.len(),
-    }
+    })
 }
 
 static MACHINE: OnceLock<MachineParams> = OnceLock::new();
@@ -48,17 +60,63 @@ pub fn machine_params_cached(threads: usize) -> MachineParams {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Error;
     use crate::gen::{erdos_renyi, Prng};
-    use crate::spmm::CsrSpmm;
+    use crate::spmm::{CsrSpmm, Impl};
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn measure_kernel_positive() {
         let a = erdos_renyi(300, 300, 5.0, &mut Prng::new(190));
         let k = CsrSpmm::new(a, 1);
-        let m = measure_kernel(&k, 8, 2, 0);
+        let m = measure_kernel(&k, 8, 2, 0).unwrap();
         assert!(m.gflops > 0.0);
         assert!(m.secs > 0.0);
         assert!(m.iters >= 2);
         assert_eq!(m.d, 8);
+    }
+
+    /// Fails after `ok_calls` successful executions — exercises both
+    /// the pre-loop check and the mid-loop capture.
+    struct Flaky {
+        calls: AtomicUsize,
+        ok_calls: usize,
+    }
+
+    impl Spmm for Flaky {
+        fn id(&self) -> Impl {
+            Impl::Csr
+        }
+        fn nrows(&self) -> usize {
+            4
+        }
+        fn ncols(&self) -> usize {
+            4
+        }
+        fn nnz(&self) -> usize {
+            4
+        }
+        fn execute(&self, _b: &DenseMatrix, _c: &mut DenseMatrix) -> Result<()> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) < self.ok_calls {
+                Ok(())
+            } else {
+                Err(Error::InvalidStructure("flaky kernel".into()))
+            }
+        }
+    }
+
+    #[test]
+    fn failing_kernel_surfaces_err_not_panic() {
+        // fails immediately: caught by the pre-loop check
+        let k = Flaky { calls: AtomicUsize::new(0), ok_calls: 0 };
+        assert!(measure_kernel(&k, 4, 2, 0).is_err());
+        // fails mid-loop: the old `expect` panicked here
+        let k = Flaky { calls: AtomicUsize::new(0), ok_calls: 1 };
+        assert!(measure_kernel(&k, 4, 2, 0).is_err());
+        // and the shared pool is not poisoned: a healthy kernel still
+        // measures fine afterwards
+        let a = erdos_renyi(100, 100, 3.0, &mut Prng::new(191));
+        let real = CsrSpmm::new(a, 2);
+        assert!(measure_kernel(&real, 4, 1, 0).unwrap().gflops > 0.0);
     }
 }

@@ -26,14 +26,11 @@ pub fn run_fig1(cfg: &ExperimentConfig) -> Result<Fig1Data> {
                 continue;
             }
             let kernel = build_native(im, &csr, cfg.threads)?;
-            let pts: Vec<(usize, f64)> = cfg
-                .d_values
-                .iter()
-                .map(|&d| {
-                    let m = measure_kernel(kernel.as_ref(), d, cfg.iters, cfg.warmup);
-                    (d, m.gflops)
-                })
-                .collect();
+            let mut pts: Vec<(usize, f64)> = Vec::with_capacity(cfg.d_values.len());
+            for &d in &cfg.d_values {
+                let m = measure_kernel(kernel.as_ref(), d, cfg.iters, cfg.warmup)?;
+                pts.push((d, m.gflops));
+            }
             series.push((im, pts));
         }
         matrices.push((proxy.name.to_string(), proxy.class, series));

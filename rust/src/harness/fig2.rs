@@ -70,7 +70,7 @@ pub fn run_fig2(cfg: &ExperimentConfig, machine: Option<MachineParams>) -> Resul
             let kernel = build_native(im, &csr, cfg.threads)?;
             for &d in &cfg.d_values {
                 let ai = cls.model.ai(AiParams::new(csr.nrows, d, csr.nnz()));
-                let m = measure_kernel(kernel.as_ref(), d, cfg.iters, cfg.warmup);
+                let m = measure_kernel(kernel.as_ref(), d, cfg.iters, cfg.warmup)?;
                 points.push(Fig2Point {
                     matrix: proxy.name.to_string(),
                     class: proxy.class,

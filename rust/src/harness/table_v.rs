@@ -69,7 +69,7 @@ pub fn run_table_v(cfg: &ExperimentConfig) -> Result<TableVData> {
             }
             let kernel = build_native(im, &csr, cfg.threads)?;
             for &d in &cfg.d_values {
-                let m = measure_kernel(kernel.as_ref(), d, cfg.iters, cfg.warmup);
+                let m = measure_kernel(kernel.as_ref(), d, cfg.iters, cfg.warmup)?;
                 data.rows.push(TableVRow {
                     name: proxy.name.to_string(),
                     paper_name: proxy.paper_name.to_string(),

@@ -10,6 +10,15 @@
 //!   formats, conversions, MatrixMarket IO, and structural generators
 //!   (Erdős–Rényi, banded, mesh/blocked, scale-free) that reproduce the
 //!   paper's Table III dataset at configurable scale.
+//! * **SpGEMM kernels** ([`spgemm`]): sparse×sparse `C = A·B` as a
+//!   second workload — a per-row hash/dense-accumulator kernel
+//!   ([`spgemm::HashSpGemm`], à la Nagasaka) and a
+//!   propagation-blocking merge kernel ([`spgemm::PbMergeSpGemm`], à la
+//!   Gu et al.) that reuses the PB column-band binning; both share the
+//!   worker pool and the [`spmm::Schedule`] layer, emit sorted
+//!   deduplicated CSR, and are routed by the engine per matrix pair
+//!   from compression-factor-parameterized traffic models
+//!   ([`model::bytes_spgemm_hash`], [`model::bytes_spgemm_pb`]).
 //! * **SpMM kernels** ([`spmm`]): row-parallel CSR, a register-blocked
 //!   d-specialised "OPT" kernel (the MKL stand-in), block-parallel CSB,
 //!   padded ELL, dense-tile BSR, and two-phase propagation-blocking PB
@@ -106,6 +115,7 @@ pub mod pattern;
 pub mod report;
 pub mod runtime;
 pub mod sparse;
+pub mod spgemm;
 pub mod spmm;
 pub mod testutil;
 pub mod workloads;

@@ -93,6 +93,37 @@ pub fn bench_adaptive<F: FnMut(usize)>(
     BenchResult { samples, summary }
 }
 
+/// [`bench_adaptive`] over a *fallible* body: the first error stops
+/// further work (remaining iterations no-op while the loop drains)
+/// and is returned instead of the timings. This is the one place the
+/// "capture the first `Err` inside a timing loop" pattern lives —
+/// every measurement path (engine submit, autotune explore, harness
+/// cells) goes through it, so a failing kernel surfaces as `Err`
+/// rather than panicking through the shared worker pool.
+pub fn bench_adaptive_checked<E, F>(
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    min_secs: f64,
+    mut f: F,
+) -> std::result::Result<BenchResult, E>
+where
+    F: FnMut(usize) -> std::result::Result<(), E>,
+{
+    let mut err: Option<E> = None;
+    let r = bench_adaptive(warmup, min_iters, max_iters, min_secs, |i| {
+        if err.is_none() {
+            if let Err(e) = f(i) {
+                err = Some(e);
+            }
+        }
+    });
+    match err {
+        Some(e) => Err(e),
+        None => Ok(r),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +139,26 @@ mod tests {
     fn gflops_basic() {
         assert!((gflops(2e9, 1.0) - 2.0).abs() < 1e-12);
         assert_eq!(gflops(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn bench_adaptive_checked_returns_first_error_and_stops_work() {
+        // succeeds, then fails on the second timed iteration: the
+        // error surfaces and no further body work runs
+        let mut calls = 0usize;
+        let r = bench_adaptive_checked(0, 4, 16, 0.0, |i| {
+            calls += 1;
+            if i >= 1 {
+                Err(format!("boom at {i}"))
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(r.unwrap_err(), "boom at 1");
+        assert_eq!(calls, 2, "after the first error the body must not re-run");
+        // the all-Ok path hands back the timings unchanged
+        let r = bench_adaptive_checked::<String, _>(1, 3, 12, 0.0, |_| Ok(()));
+        assert!(r.unwrap().samples.len() >= 3);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Sparsity-aware roofline models — §III of the paper, plus this
 //! repo's extensions (tile-aware traffic, the cache-aware ladder, the
-//! propagation-blocking model).
+//! propagation-blocking model, and the compression-factor-parameterized
+//! SpGEMM models [`bytes_spgemm_hash`]/[`bytes_spgemm_pb`]).
 //!
 //! Everything here is pure math over structural statistics; the
 //! measured side lives in [`crate::metrics`] / [`crate::harness`], and
@@ -25,6 +26,7 @@ mod cache_aware;
 mod pb;
 mod roofline;
 mod scalefree;
+mod spgemm;
 
 pub use ai::{AiParams, SparsityModel};
 pub use blocked::{expected_z, expected_z_exact, BlockStats};
@@ -32,6 +34,10 @@ pub use cache_aware::{BandwidthCeiling, CacheAwareRoofline, LatencyModel};
 pub use pb::{ai_pb, ai_pb_tiled, bytes_pb, bytes_pb_tiled, PB_STRUCT_BYTES_PER_NNZ};
 pub use roofline::{MachineParams, Roofline};
 pub use scalefree::{hub_mass_fraction, measured_hub_mass, HubParams};
+pub use spgemm::{
+    ai_spgemm, bytes_spgemm, bytes_spgemm_hash, bytes_spgemm_pb, csr_bytes,
+    spgemm_spill_passes, SpGemmParams, CF_FLOOR, SPGEMM_PB_PRODUCT_BYTES,
+};
 
 pub use ai::{
     ai_blocked, ai_blocked_text_variant, ai_diagonal, ai_random, ai_scalefree, bytes_blocked,

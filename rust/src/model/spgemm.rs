@@ -1,0 +1,220 @@
+//! Traffic models for the SpGEMM kernels ([`crate::spgemm`]) —
+//! parameterized by the **compression factor** `cf = flops / nnz(C)`.
+//!
+//! For SpMM the dense width `d` fixes the FLOP count and the output
+//! size; for sparse×sparse multiplication both depend on structure:
+//! the partial-product count is exact and cheap
+//! (`flops = 2·Σ_{(i,k)∈A} |B_k|`, an `O(nnz(A))` scan —
+//! [`crate::spgemm::spgemm_flops`]), but the output size `nnz(C)` is
+//! only known after a symbolic pass. The models therefore take `cf`,
+//! with `nnz(C) = flops / cf`: predictions before the first execution
+//! use the conservative floor [`CF_FLOOR`] (`cf = 2`, no compression —
+//! every partial product survives), and the engine re-predicts with
+//! the measured `cf` once a pair has executed
+//! ([`crate::spgemm::compression_factor`]).
+//!
+//! Byte counts follow the paper's storage model (8-byte values, 4-byte
+//! indices; a CSR structure of `nnz` entries over `rows` rows occupies
+//! `12·nnz + 4·(rows+1)` bytes — [`csr_bytes`]). Derivations with a
+//! worked R-MAT example live in `MODELS.md` §6.
+
+use crate::spgemm::{SpGemmImpl, SPGEMM_MAX_SPILL_BYTES, SPGEMM_PB_PRODUCT_BYTES_USZ};
+
+/// The conservative pre-execution compression factor: `cf = 2` means
+/// zero compression (one stored output per partial product), the
+/// worst case for both kernels' `C`-write term.
+pub const CF_FLOOR: f64 = 2.0;
+
+/// Bytes of one partial product in the PB-merge spill arena:
+/// column (4) + value (8) + destination row (4) — the identifiers are
+/// the `prod_*` arrays of [`crate::spgemm::PbMergeSpGemm`], and the
+/// value is defined by the kernel's own
+/// [`crate::spgemm::SPGEMM_PB_PRODUCT_BYTES_USZ`] so model and kernel
+/// cannot desynchronize.
+pub const SPGEMM_PB_PRODUCT_BYTES: f64 = SPGEMM_PB_PRODUCT_BYTES_USZ as f64;
+
+/// Shared SpGEMM problem parameters: `C = A·B` with `A` an
+/// `m × p` CSR of `nnz_a` entries, `B` a `p × n` CSR of `nnz_b`
+/// entries, `flops` the exact partial-product FLOP count, and `cf`
+/// the (estimated or measured) compression factor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpGemmParams {
+    /// Rows of `A` (= rows of `C`).
+    pub m: usize,
+    /// Rows of `B` (= cols of `A`).
+    pub p: usize,
+    /// Stored nonzeros of `A`.
+    pub nnz_a: usize,
+    /// Stored nonzeros of `B`.
+    pub nnz_b: usize,
+    /// `2 · Σ_{(i,k) ∈ A} |B_k|` ([`crate::spgemm::spgemm_flops`]).
+    pub flops: f64,
+    /// Compression factor `flops / nnz(C)`, clamped to ≥ [`CF_FLOOR`].
+    pub cf: f64,
+}
+
+impl SpGemmParams {
+    /// Parameters with the conservative pre-execution `cf` floor.
+    pub fn new(m: usize, p: usize, nnz_a: usize, nnz_b: usize, flops: f64) -> SpGemmParams {
+        SpGemmParams { m, p, nnz_a, nnz_b, flops, cf: CF_FLOOR }
+    }
+
+    /// The same parameters under a measured compression factor.
+    pub fn with_cf(mut self, cf: f64) -> SpGemmParams {
+        self.cf = cf.max(CF_FLOOR);
+        self
+    }
+
+    /// Modeled output size `nnz(C) = flops / cf`.
+    pub fn nnz_c(&self) -> f64 {
+        self.flops / self.cf.max(CF_FLOOR)
+    }
+}
+
+/// Bytes of a CSR structure: `12·nnz + 4·(rows+1)` (values + column
+/// indices + row pointers).
+pub fn csr_bytes(nnz: f64, rows: usize) -> f64 {
+    12.0 * nnz + 4.0 * (rows as f64 + 1.0)
+}
+
+/// Modeled DRAM bytes for the hash kernel
+/// ([`crate::spgemm::HashSpGemm`]) — the *gathering* line:
+///
+/// * `A` is streamed once: [`csr_bytes`]`(nnz_a, m)`;
+/// * every partial product gathers one `B` entry (8-byte value +
+///   4-byte column) with no modeled reuse — the random lower bound,
+///   exactly as the SpMM random model charges `B`: `12 · flops/2 =
+///   6·flops`;
+/// * `C` is written once: [`csr_bytes`]`(flops/cf, m)`.
+pub fn bytes_spgemm_hash(p: SpGemmParams) -> f64 {
+    csr_bytes(p.nnz_a as f64, p.m) + 6.0 * p.flops + csr_bytes(p.nnz_c(), p.m)
+}
+
+/// Spill passes charged to the PB-merge kernel: the arena is capped
+/// at [`SPGEMM_MAX_SPILL_BYTES`]
+/// ([`crate::spgemm::PbMergeSpGemm::with_spill_cap`]), so product
+/// bytes ([`SPGEMM_PB_PRODUCT_BYTES`] per product, `flops/2`
+/// products) beyond the cap force extra bucket-range passes — each
+/// re-streaming the binned `A` structure and the gathered `B` panels
+/// once. The SpGEMM analog of `⌈d/dt⌉` in
+/// [`crate::model::bytes_pb_tiled`].
+///
+/// This is a *lower bound* on the kernel's actual pass count: the
+/// kernel packs whole buckets greedily into each pass, so bucket
+/// granularity can add passes (a run of ~0.6·cap buckets fits one per
+/// pass). The bound is what the planner can know from `flops` alone,
+/// before any bucket layout exists.
+pub fn spgemm_spill_passes(flops: f64) -> f64 {
+    let product_bytes = (SPGEMM_PB_PRODUCT_BYTES / 2.0) * flops;
+    (product_bytes / SPGEMM_MAX_SPILL_BYTES as f64).ceil().max(1.0)
+}
+
+/// Modeled DRAM bytes for the PB-merge kernel
+/// ([`crate::spgemm::PbMergeSpGemm`]) — the *streaming*,
+/// structure-independent line:
+///
+/// * per spill pass ([`spgemm_spill_passes`]): the binned `A` stream
+///   (`col` 4 + `val` 8 + `src` 4 = `16·nnz_a`, the `ColBandBins`
+///   fields) plus `B` read once ([`csr_bytes`]`(nnz_b, p)` — within a
+///   band every gather lands in a cache-resident row panel, the same
+///   argument as [`crate::model::bytes_pb`]);
+/// * the spill round trip: every partial product
+///   ([`SPGEMM_PB_PRODUCT_BYTES`] = 16 B) is written in the spill
+///   phase and read back in the merge — `2 · 16 · flops/2 =
+///   16·flops` (pass-invariant: passes partition the products);
+/// * `C` is written once: [`csr_bytes`]`(flops/cf, m)`.
+pub fn bytes_spgemm_pb(p: SpGemmParams) -> f64 {
+    spgemm_spill_passes(p.flops)
+        * (16.0 * p.nnz_a as f64 + csr_bytes(p.nnz_b as f64, p.p))
+        + SPGEMM_PB_PRODUCT_BYTES * p.flops
+        + csr_bytes(p.nnz_c(), p.m)
+}
+
+/// Modeled bytes for one SpGEMM implementation.
+pub fn bytes_spgemm(p: SpGemmParams, im: SpGemmImpl) -> f64 {
+    match im {
+        SpGemmImpl::Hash => bytes_spgemm_hash(p),
+        SpGemmImpl::PbMerge => bytes_spgemm_pb(p),
+    }
+}
+
+/// Arithmetic intensity (FLOPs/byte) for one SpGEMM implementation.
+/// Like the SpMM PB line, the merge kernel's AI sits *below* the hash
+/// kernel's (16 vs 6 bytes per product-FLOP-pair): its win comes from
+/// every byte streaming at full bandwidth, credited through the
+/// planner's efficiency prior, not from fewer bytes.
+pub fn ai_spgemm(p: SpGemmParams, im: SpGemmImpl) -> f64 {
+    let bytes = bytes_spgemm(p, im);
+    if bytes <= 0.0 {
+        0.0
+    } else {
+        p.flops / bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> SpGemmParams {
+        // a 2^16-row square pair, ~16 nnz/row, cf measured at 8
+        SpGemmParams::new(1 << 16, 1 << 16, 1 << 20, 1 << 20, 2.0 * (16 << 20) as f64)
+            .with_cf(8.0)
+    }
+
+    #[test]
+    fn closed_forms() {
+        let p = params();
+        let m = p.m as f64;
+        let want_hash =
+            (12.0 * p.nnz_a as f64 + 4.0 * (m + 1.0)) + 6.0 * p.flops
+                + (12.0 * p.nnz_c() + 4.0 * (m + 1.0));
+        assert!((bytes_spgemm_hash(p) - want_hash).abs() < 1e-6);
+        let passes = spgemm_spill_passes(p.flops);
+        assert!(passes >= 1.0);
+        let want_pb = passes
+            * (16.0 * p.nnz_a as f64 + (12.0 * p.nnz_b as f64 + 4.0 * (p.p as f64 + 1.0)))
+            + 16.0 * p.flops
+            + (12.0 * p.nnz_c() + 4.0 * (m + 1.0));
+        assert!((bytes_spgemm_pb(p) - want_pb).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spill_passes_track_the_arena_cap() {
+        use crate::spgemm::SPGEMM_MAX_SPILL_BYTES;
+        // under the cap: one pass
+        let small = (SPGEMM_MAX_SPILL_BYTES / 16) as f64; // products
+        assert_eq!(spgemm_spill_passes(2.0 * small), 1.0);
+        // 4× the cap: four passes
+        assert_eq!(spgemm_spill_passes(2.0 * 4.0 * small), 4.0);
+        assert_eq!(spgemm_spill_passes(0.0), 1.0);
+    }
+
+    #[test]
+    fn pb_ai_below_hash_ai_by_design() {
+        let p = params();
+        assert!(ai_spgemm(p, SpGemmImpl::PbMerge) < ai_spgemm(p, SpGemmImpl::Hash));
+        assert!(bytes_spgemm_pb(p) > bytes_spgemm_hash(p));
+    }
+
+    #[test]
+    fn higher_cf_means_fewer_output_bytes_and_higher_ai() {
+        let lo = params().with_cf(2.0);
+        let hi = params().with_cf(32.0);
+        assert!(hi.nnz_c() < lo.nnz_c());
+        for im in SpGemmImpl::ALL {
+            assert!(bytes_spgemm(hi, im) < bytes_spgemm(lo, im), "{im}");
+            assert!(ai_spgemm(hi, im) > ai_spgemm(lo, im), "{im}");
+        }
+    }
+
+    #[test]
+    fn cf_clamps_to_floor() {
+        let p = params().with_cf(0.5);
+        assert_eq!(p.cf, CF_FLOOR);
+        assert!((p.nnz_c() - p.flops / CF_FLOOR).abs() < 1e-9);
+        // degenerate empty problem: AI defined as 0
+        let empty = SpGemmParams::new(0, 0, 0, 0, 0.0);
+        assert_eq!(ai_spgemm(empty, SpGemmImpl::Hash), 0.0);
+    }
+}

@@ -71,13 +71,24 @@ impl Coo {
 
     /// Sort entries into row-major order and sum duplicates.
     /// Returns the deduplicated matrix.
+    ///
+    /// Duplicate coordinates are summed in **insertion order**: the
+    /// sort key carries the original index as a tiebreak, so equal
+    /// coordinates keep their push order. An earlier revision sorted
+    /// with no tiebreak (`sort_unstable_by_key` on the coordinate
+    /// alone), which let duplicates accumulate in an arbitrary order —
+    /// the sums could then differ in the last ulp from
+    /// [`Coo::to_dense`] (which adds in insertion order), breaking the
+    /// bitwise agreement the SpGEMM construction path and the
+    /// differential tests rely on (regression-tested below with
+    /// magnitude-skewed duplicates).
     pub fn sorted_dedup(mut self) -> Coo {
         let n = self.nnz();
         let mut perm: Vec<u32> = (0..n as u32).collect();
         let rows = &self.rows;
         let cols = &self.cols;
         perm.sort_unstable_by_key(|&i| {
-            ((rows[i as usize] as u64) << 32) | cols[i as usize] as u64
+            (((rows[i as usize] as u64) << 32) | cols[i as usize] as u64, i)
         });
         let mut out = Coo::with_capacity(self.nrows, self.ncols, n);
         for &pi in &perm {
@@ -157,6 +168,48 @@ mod tests {
         assert_eq!(m.rows, vec![0, 1]);
         assert_eq!(m.cols, vec![0, 0]);
         assert_eq!(m.vals, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn dedup_sums_in_insertion_order() {
+        // magnitude-skewed duplicates make the accumulation order
+        // observable: in insertion order 1e16, 1.0, −1e16 the 1.0 is
+        // absorbed ((1e16 + 1.0) = 1e16 in f64) and the sum is 0.0,
+        // while the order 1e16, −1e16, 1.0 yields 1.0 — so summing in
+        // anything but insertion order diverges from Coo::to_dense.
+        let mut m = Coo::new(2, 2);
+        m.push(0, 1, 1e16);
+        m.push(0, 1, 1.0);
+        m.push(0, 1, -1e16);
+        m.push(1, 0, 2.0);
+        let dense_oracle = m.to_dense();
+        let deduped = m.sorted_dedup();
+        assert_eq!(deduped.nnz(), 2);
+        // bitwise: the deduplicated sum must equal the insertion-order
+        // accumulation to_dense performed
+        assert_eq!(deduped.vals[0], dense_oracle[0 * 2 + 1]);
+        assert_eq!(deduped.vals[0], 0.0);
+        assert_eq!(deduped.to_dense(), dense_oracle);
+    }
+
+    #[test]
+    fn explicit_zeros_agree_with_dense_oracle() {
+        // explicit zeros are stored entries; summing them with real
+        // values must match the dense accumulation exactly
+        let mut m = Coo::new(3, 3);
+        m.push(0, 0, 0.0);
+        m.push(0, 0, 3.0);
+        m.push(2, 1, 0.0); // a lone explicit zero survives as stored
+        let dense_oracle = m.to_dense();
+        let d = m.sorted_dedup();
+        assert_eq!(d.nnz(), 2);
+        assert_eq!(d.vals, vec![3.0, 0.0]);
+        assert_eq!(d.to_dense(), dense_oracle);
+        // and the CSR construction path inherits the agreement
+        let csr = crate::sparse::Csr::from_coo(d);
+        csr.validate().unwrap();
+        assert_eq!(csr.to_dense(), dense_oracle);
+        assert_eq!(csr.nnz(), 2, "explicit zeros stay stored, not dropped");
     }
 
     #[test]

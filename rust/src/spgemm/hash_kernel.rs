@@ -1,0 +1,366 @@
+//! Hash-accumulator SpGEMM — the gathering kernel of the SpGEMM pair,
+//! after Nagasaka et al.'s hash SpGEMM (PAPERS.md, arXiv:1804.01698).
+//!
+//! One pass over `A`'s rows: row `i` of `C` is accumulated by
+//! expanding `v · B[k, :]` for every `(k, v)` in row `i` of `A`. The
+//! accumulator is chosen **per row** from the row's *upper-bound fill*
+//! `ub = Σ_{k ∈ row} |B_k|` (the partial-product count, known before
+//! any arithmetic — Nagasaka's symbolic bound):
+//!
+//! * **dense array** when the row is dense enough that an `O(ncols)`
+//!   array beats hashing (`ub ≥ ncols /` [`DENSE_ACCUM_DIVISOR`], or
+//!   tiny outputs, ≤ [`DENSE_ACCUM_MIN_COLS`] columns) — epoch-stamped
+//!   slots, so resetting costs nothing per row;
+//! * **open-addressing hash map** otherwise, sized to the next power
+//!   of two ≥ `2·ub` (load factor ≤ ½, probes terminate).
+//!
+//! Either way each output column's contributions are added in arrival
+//! order — ascending `k` — so the two accumulator paths, the other
+//! SpGEMM kernel, and [`crate::spgemm::reference_spgemm`] all produce
+//! bit-identical values (see the module docs in `spgemm/mod.rs`).
+//!
+//! Parallelism: schedule partitions over `A`'s rows, claimed
+//! dynamically on the shared worker pool. Accumulator scratch is
+//! recycled through a pool so adversarial one-row-per-partition
+//! schedules do not allocate per row; finished partitions push
+//! [`RowSlab`]s that are stitched into the output CSR.
+
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::sparse::Csr;
+use crate::spgemm::{assemble_slabs, check_spgemm_dims, RowSlab, SpGemm, SpGemmImpl};
+use crate::spmm::pool::parallel_chunks_dynamic;
+use crate::spmm::{check_schedule, Schedule};
+
+/// A row switches from the hash map to the dense accumulator when its
+/// upper-bound fill reaches `ncols(C) / DENSE_ACCUM_DIVISOR`: at that
+/// density the `O(touched)` dense bookkeeping beats the hash probe's
+/// constant factor.
+pub const DENSE_ACCUM_DIVISOR: usize = 4;
+
+/// Output widths at or below this always use the dense accumulator —
+/// the whole array is smaller than a useful hash table.
+pub const DENSE_ACCUM_MIN_COLS: usize = 64;
+
+/// Empty-slot sentinel for the hash table. Valid column indices are
+/// `< ncols ≤ u32::MAX` (guarded in `check_spgemm_dims`), so the
+/// sentinel cannot collide with a key.
+const EMPTY: u32 = u32::MAX;
+
+/// Reusable per-worker accumulation scratch (recycled through a pool
+/// across partition claims).
+struct Accum {
+    /// Dense value slots, grown to the widest output seen.
+    dense: Vec<f64>,
+    /// Epoch stamp per dense slot (`stamp[j] == epoch` ⇒ live).
+    stamp: Vec<u32>,
+    epoch: u32,
+    /// Live columns of the current dense row.
+    touched: Vec<u32>,
+    /// Hash keys (columns), [`EMPTY`] when vacant.
+    keys: Vec<u32>,
+    /// Hash values, parallel to `keys`.
+    slot_vals: Vec<f64>,
+    /// (column, value) staging for the per-row sort.
+    pairs: Vec<(u32, f64)>,
+}
+
+impl Accum {
+    fn new() -> Accum {
+        Accum {
+            dense: Vec::new(),
+            stamp: Vec::new(),
+            epoch: 0,
+            touched: Vec::new(),
+            keys: Vec::new(),
+            slot_vals: Vec::new(),
+            pairs: Vec::new(),
+        }
+    }
+
+    /// Accumulate row `i` of `C = A·B`, appending its sorted,
+    /// deduplicated entries to `out_cols`/`out_vals`. Returns the row
+    /// length.
+    fn row(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        ncols: usize,
+        out_cols: &mut Vec<u32>,
+        out_vals: &mut Vec<f64>,
+    ) -> usize {
+        let mut ub = 0usize;
+        for &k in a.row_cols(i) {
+            ub += b.row_len(k as usize);
+        }
+        if ub == 0 {
+            return 0;
+        }
+        if ncols <= DENSE_ACCUM_MIN_COLS || ub >= ncols / DENSE_ACCUM_DIVISOR {
+            self.row_dense(a, b, i, ncols, out_cols, out_vals)
+        } else {
+            self.row_hash(a, b, i, ub, out_cols, out_vals)
+        }
+    }
+
+    fn row_dense(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        ncols: usize,
+        out_cols: &mut Vec<u32>,
+        out_vals: &mut Vec<f64>,
+    ) -> usize {
+        if self.dense.len() < ncols {
+            self.dense.resize(ncols, 0.0);
+            self.stamp.resize(ncols, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // epoch counter wrapped: stale stamps could alias — reset
+            self.stamp.fill(0);
+            self.epoch = 1;
+        }
+        let e = self.epoch;
+        self.touched.clear();
+        for (&k, &v) in a.row_cols(i).iter().zip(a.row_vals(i)) {
+            let kk = k as usize;
+            for (&j, &w) in b.row_cols(kk).iter().zip(b.row_vals(kk)) {
+                let jj = j as usize;
+                if self.stamp[jj] == e {
+                    self.dense[jj] += v * w;
+                } else {
+                    self.stamp[jj] = e;
+                    self.dense[jj] = v * w;
+                    self.touched.push(j);
+                }
+            }
+        }
+        self.touched.sort_unstable();
+        for &j in &self.touched {
+            out_cols.push(j);
+            out_vals.push(self.dense[j as usize]);
+        }
+        self.touched.len()
+    }
+
+    fn row_hash(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        ub: usize,
+        out_cols: &mut Vec<u32>,
+        out_vals: &mut Vec<f64>,
+    ) -> usize {
+        let cap = (2 * ub).next_power_of_two().max(8);
+        if self.keys.len() < cap {
+            self.keys.resize(cap, EMPTY);
+            self.slot_vals.resize(cap, 0.0);
+        }
+        self.keys[..cap].fill(EMPTY);
+        let mask = cap - 1;
+        for (&k, &v) in a.row_cols(i).iter().zip(a.row_vals(i)) {
+            let kk = k as usize;
+            for (&j, &w) in b.row_cols(kk).iter().zip(b.row_vals(kk)) {
+                // Fibonacci mix, then fold the high bits down: the low
+                // bits of j·odd alone cluster for banded columns
+                let h = j.wrapping_mul(0x9E37_79B9);
+                let mut idx = ((h ^ (h >> 16)) as usize) & mask;
+                loop {
+                    let key = self.keys[idx];
+                    if key == j {
+                        self.slot_vals[idx] += v * w;
+                        break;
+                    }
+                    if key == EMPTY {
+                        self.keys[idx] = j;
+                        self.slot_vals[idx] = v * w;
+                        break;
+                    }
+                    idx = (idx + 1) & mask;
+                }
+            }
+        }
+        self.pairs.clear();
+        for (&k, &v) in self.keys[..cap].iter().zip(&self.slot_vals[..cap]) {
+            if k != EMPTY {
+                self.pairs.push((k, v));
+            }
+        }
+        // keys are unique, so the unstable sort is deterministic
+        self.pairs.sort_unstable_by_key(|p| p.0);
+        for &(j, v) in &self.pairs {
+            out_cols.push(j);
+            out_vals.push(v);
+        }
+        self.pairs.len()
+    }
+}
+
+/// Hash-accumulator SpGEMM kernel (see module docs).
+pub struct HashSpGemm {
+    a: Csr,
+    /// Untiled nnz-balanced base schedule over `A`'s rows.
+    base: Schedule,
+}
+
+impl HashSpGemm {
+    /// Wrap a CSR left operand; `threads` workers at execute time.
+    pub fn new(a: Csr, threads: usize) -> Self {
+        let base = Schedule::nnz_balanced(&a.row_ptr, threads.max(1));
+        HashSpGemm { a, base }
+    }
+
+    /// Borrow the underlying left operand.
+    pub fn matrix(&self) -> &Csr {
+        &self.a
+    }
+}
+
+impl SpGemm for HashSpGemm {
+    fn id(&self) -> SpGemmImpl {
+        SpGemmImpl::Hash
+    }
+    fn nrows(&self) -> usize {
+        self.a.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.a.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.a.nnz()
+    }
+    fn plan(&self) -> Schedule {
+        self.base.clone()
+    }
+
+    fn execute(&self, b: &Csr) -> Result<Csr> {
+        self.execute_with(b, &self.base)
+    }
+
+    fn execute_with(&self, b: &Csr, s: &Schedule) -> Result<Csr> {
+        check_spgemm_dims(self.a.nrows, self.a.ncols, b)?;
+        check_schedule(self.a.nrows, s)?;
+        let ncols = b.ncols;
+        let a = &self.a;
+        let slabs: Mutex<Vec<RowSlab>> = Mutex::new(Vec::new());
+        let scratch: Mutex<Vec<Accum>> = Mutex::new(Vec::new());
+        parallel_chunks_dynamic(s.n_parts(), s.threads, 1, |parts| {
+            let mut acc = {
+                let mut pool = scratch.lock().unwrap_or_else(|e| e.into_inner());
+                pool.pop()
+            }
+            .unwrap_or_else(Accum::new);
+            for pi in parts {
+                let rows = s.part(pi);
+                if rows.is_empty() {
+                    continue;
+                }
+                let mut slab = RowSlab {
+                    first_row: rows.start,
+                    row_lens: Vec::with_capacity(rows.len()),
+                    cols: Vec::new(),
+                    vals: Vec::new(),
+                };
+                for i in rows {
+                    let len = acc.row(a, b, i, ncols, &mut slab.cols, &mut slab.vals);
+                    slab.row_lens.push(len as u32);
+                }
+                slabs.lock().unwrap_or_else(|e| e.into_inner()).push(slab);
+            }
+            scratch.lock().unwrap_or_else(|e| e.into_inner()).push(acc);
+        });
+        let slabs = slabs.into_inner().unwrap_or_else(|e| e.into_inner());
+        Ok(assemble_slabs(self.a.nrows, ncols, slabs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, Prng};
+    use crate::spgemm::reference_spgemm;
+
+    #[test]
+    fn matches_reference_bitwise_various_threads() {
+        let mut rng = Prng::new(0x5b0);
+        let a = erdos_renyi(200, 200, 6.0, &mut rng);
+        let b = erdos_renyi(200, 200, 6.0, &mut rng);
+        let want = reference_spgemm(&a, &b);
+        for threads in [1usize, 3] {
+            let k = HashSpGemm::new(a.clone(), threads);
+            let c = k.execute(&b).unwrap();
+            c.validate().unwrap();
+            assert_eq!(c, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn dense_path_matches_hash_path() {
+        // ncols ≤ DENSE_ACCUM_MIN_COLS forces the dense accumulator;
+        // a wide B with sparse rows forces the hash map. Both must
+        // agree with the reference bitwise.
+        let mut rng = Prng::new(0x5b1);
+        let a = erdos_renyi(80, 80, 4.0, &mut rng);
+        let b_narrow = erdos_renyi(80, DENSE_ACCUM_MIN_COLS, 3.0, &mut rng);
+        let b_wide = erdos_renyi(80, 5000, 2.0, &mut rng);
+        for b in [&b_narrow, &b_wide] {
+            let k = HashSpGemm::new(a.clone(), 2);
+            let c = k.execute(b).unwrap();
+            c.validate().unwrap();
+            assert_eq!(c, reference_spgemm(&a, b));
+        }
+    }
+
+    #[test]
+    fn rectangular_and_degenerate_shapes() {
+        let mut rng = Prng::new(0x5b2);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (1, 40, 7), (40, 1, 7), (30, 70, 20)] {
+            let a = erdos_renyi(m, k, 3.0, &mut rng);
+            let b = erdos_renyi(k, n, 3.0, &mut rng);
+            let kern = HashSpGemm::new(a.clone(), 2);
+            let c = kern.execute(&b).unwrap();
+            c.validate().unwrap();
+            assert_eq!(c, reference_spgemm(&a, &b), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn empty_operands_give_empty_product() {
+        let a = Csr::from_dense(8, 8, &[0.0; 64]);
+        let b = Csr::from_dense(8, 8, &[0.0; 64]);
+        let k = HashSpGemm::new(a, 2);
+        let c = k.execute(&b).unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.nnz(), 0);
+        assert_eq!((c.nrows, c.ncols), (8, 8));
+    }
+
+    #[test]
+    fn one_row_per_partition_schedule() {
+        use crate::spmm::Schedule;
+        let mut rng = Prng::new(0x5b3);
+        let a = erdos_renyi(16, 16, 4.0, &mut rng);
+        let b = erdos_renyi(16, 16, 4.0, &mut rng);
+        let k = HashSpGemm::new(a.clone(), 2);
+        let s = Schedule::uniform(16, 2);
+        assert_eq!(s.n_parts(), 16);
+        let c = k.execute_with(&b, &s).unwrap();
+        assert_eq!(c, reference_spgemm(&a, &b));
+    }
+
+    #[test]
+    fn foreign_schedule_rejected() {
+        use crate::spmm::Schedule;
+        let mut rng = Prng::new(0x5b4);
+        let a = erdos_renyi(10, 10, 2.0, &mut rng);
+        let b = erdos_renyi(10, 10, 2.0, &mut rng);
+        let k = HashSpGemm::new(a, 1);
+        let foreign = Schedule::uniform(11, 1);
+        assert!(k.execute_with(&b, &foreign).is_err());
+    }
+}

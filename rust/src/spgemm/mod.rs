@@ -1,0 +1,324 @@
+//! SpGEMM kernels: `C = A · B` with **both** operands sparse CSR.
+//!
+//! The paper's thesis — that roofline analysis must be sparsity-aware
+//! and per-structure — bites even harder for sparse×sparse
+//! multiplication: output fill-in depends on the operands' structure,
+//! and the **compression factor** `cf = flops / nnz(C)` (how many
+//! partial products collapse onto each stored output) drives the
+//! arithmetic intensity. This module opens SpGEMM as the crate's
+//! second workload, with two native kernels that mirror the SpMM
+//! kernel family's central contrast (gathering vs streaming):
+//!
+//! | Kernel | Lineage | Strategy |
+//! |---|---|---|
+//! | [`HashSpGemm`]    | Nagasaka et al. (arXiv:1804.01698) | per-row accumulator, dense array or hash map chosen per row by upper-bound fill |
+//! | [`PbMergeSpGemm`] | Gu et al. (arXiv:2002.11302)       | propagation-blocking merge: spill partial products by column band, merge per destination bucket |
+//!
+//! Both parallelise over the shared worker pool ([`crate::spmm::pool`])
+//! and consume the same nnz-balanced [`Schedule`] the SpMM kernels use
+//! (partitions over `A`'s rows; column tiles do not apply to a sparse
+//! right operand and are ignored). Both emit **sorted, deduplicated**
+//! CSR that passes [`Csr::validate`].
+//!
+//! **Accumulation order.** Every kernel here — and
+//! [`reference_spgemm`] — accumulates each `C[i, j]` in ascending-`k`
+//! order (the order row `i` of `A` stores its entries): the hash and
+//! dense accumulators add contributions on arrival, and the merge
+//! kernel's bucket streams arrive band-ascending with a *stable*
+//! per-row sort, which preserves the same arrival order per output
+//! column. The kernels therefore agree **bit for bit** with each other
+//! and with the reference, which `tests/prop_spgemm.rs` pins across
+//! every structural generator.
+//!
+//! **Hand-off**: the coordinator routes SpGEMM jobs exactly like SpMM
+//! ones — classify `A`, predict per kernel from the cf-parameterized
+//! traffic models ([`crate::model::bytes_spgemm_hash`],
+//! [`crate::model::bytes_spgemm_pb`], derived in `MODELS.md` §6),
+//! explore/measure under autotune, and pin a winner per matrix pair
+//! ([`crate::coordinator::Autotuner::tune_spgemm`]).
+
+mod hash_kernel;
+mod pb_merge;
+
+pub use hash_kernel::{HashSpGemm, DENSE_ACCUM_DIVISOR, DENSE_ACCUM_MIN_COLS};
+pub use pb_merge::{PbMergeSpGemm, SPGEMM_MAX_SPILL_BYTES, SPGEMM_PB_PRODUCT_BYTES_USZ};
+
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+use crate::spmm::Schedule;
+
+/// Identifier for every SpGEMM implementation the engine can route to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpGemmImpl {
+    /// Per-row hash/dense accumulator ([`HashSpGemm`]): gathers rows of
+    /// `B` in whatever order `A`'s columns dictate — structure-
+    /// sensitive traffic, like the gathering SpMM kernels.
+    Hash,
+    /// Propagation-blocking merge ([`PbMergeSpGemm`]): trades the
+    /// random gathers for a sequential spill/merge round trip —
+    /// structure-independent traffic, like [`crate::spmm::PbSpmm`].
+    PbMerge,
+}
+
+impl SpGemmImpl {
+    /// All native SpGEMM implementations (the router's candidate set).
+    pub const ALL: [SpGemmImpl; 2] = [SpGemmImpl::Hash, SpGemmImpl::PbMerge];
+}
+
+impl std::fmt::Display for SpGemmImpl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            SpGemmImpl::Hash => "HASH",
+            SpGemmImpl::PbMerge => "PBMERGE",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// An SpGEMM kernel over a prepared left operand `A`.
+///
+/// Mirrors [`crate::spmm::Spmm`]: construction is the one-time
+/// structural preparation (outside any timed region), `execute` is the
+/// hot path, and execution is plan/execute split — kernels precompute
+/// an nnz-balanced [`Schedule`] over `A`'s rows at construction and
+/// consume a `&Schedule` at execute time. Unlike SpMM, the output is
+/// allocated per call (its size is data-dependent), so `execute`
+/// *returns* the product instead of filling a caller buffer.
+pub trait SpGemm: Send + Sync {
+    /// Which implementation this is.
+    fn id(&self) -> SpGemmImpl;
+    /// Rows of `A` (== rows of `C`).
+    fn nrows(&self) -> usize;
+    /// Cols of `A` (== rows of `B`).
+    fn ncols(&self) -> usize;
+    /// Stored nonzeros of `A`.
+    fn nnz(&self) -> usize;
+    /// The precomputed nnz-balanced base schedule over `A`'s rows.
+    fn plan(&self) -> Schedule;
+    /// Compute `C = A·B` over the base schedule.
+    fn execute(&self, b: &Csr) -> Result<Csr>;
+    /// Compute `C = A·B` over a precomputed schedule
+    /// (`s.units() == nrows`; column tiles are ignored).
+    fn execute_with(&self, b: &Csr, s: &Schedule) -> Result<Csr>;
+}
+
+/// Construct the requested SpGEMM kernel from a CSR left operand with
+/// default tuning. Returns a boxed trait object the coordinator can
+/// route to.
+pub fn build_spgemm(im: SpGemmImpl, csr: &Csr, threads: usize) -> Box<dyn SpGemm> {
+    match im {
+        SpGemmImpl::Hash => Box::new(HashSpGemm::new(csr.clone(), threads)),
+        SpGemmImpl::PbMerge => Box::new(PbMergeSpGemm::from_csr(csr, threads)),
+    }
+}
+
+/// Exact SpGEMM FLOP count: `2 · Σ_{(i,k) ∈ A} |B_k|` (one multiply +
+/// one add per partial product — the SpGEMM analog of the paper's
+/// Eq. 1). An `O(nnz(A))` scan, so the planner computes it exactly
+/// *before* execution; only `nnz(C)` needs estimating.
+pub fn spgemm_flops(a: &Csr, b: &Csr) -> f64 {
+    debug_assert_eq!(a.ncols, b.nrows);
+    let mut prods = 0usize;
+    for &k in &a.col_idx {
+        prods += b.row_len(k as usize);
+    }
+    2.0 * prods as f64
+}
+
+/// Measured compression factor `cf = flops / nnz(C)`. Every stored
+/// output needs at least one partial product, so `cf ≥ 2`; the empty
+/// product conventionally reports the floor.
+pub fn compression_factor(flops: f64, nnz_c: usize) -> f64 {
+    if nnz_c == 0 {
+        2.0
+    } else {
+        (flops / nnz_c as f64).max(2.0)
+    }
+}
+
+/// Shape guard shared by both kernels. Also rejects a right operand
+/// whose width would collide with the `u32::MAX` accumulator sentinel
+/// (column indices are `u32`, so valid columns are `< ncols ≤ 2³²−1`).
+pub(crate) fn check_spgemm_dims(a_nrows: usize, a_ncols: usize, b: &Csr) -> Result<()> {
+    if b.nrows != a_ncols {
+        return Err(Error::DimensionMismatch(format!(
+            "A is {a_nrows}x{a_ncols} but B has {} rows",
+            b.nrows
+        )));
+    }
+    if b.ncols > u32::MAX as usize {
+        return Err(Error::InvalidStructure(format!(
+            "B has {} columns; SpGEMM column indices are u32",
+            b.ncols
+        )));
+    }
+    Ok(())
+}
+
+/// One finished slab of contiguous output rows
+/// (`first_row .. first_row + row_lens.len()`), with the rows'
+/// concatenated column/value runs. Workers push slabs as partitions
+/// (or buckets) complete; [`assemble_slabs`] stitches them into one
+/// CSR.
+pub(crate) struct RowSlab {
+    pub first_row: usize,
+    pub row_lens: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+/// Assemble a CSR from disjoint row slabs. Slabs may arrive in any
+/// order (they are sorted by first row here); rows covered by no slab
+/// are empty. Each slab's rows must be internally sorted and
+/// deduplicated — this function only concatenates.
+pub(crate) fn assemble_slabs(nrows: usize, ncols: usize, mut slabs: Vec<RowSlab>) -> Csr {
+    slabs.sort_by_key(|s| s.first_row);
+    let nnz: usize = slabs.iter().map(|s| s.cols.len()).sum();
+    let mut row_ptr = vec![0usize; nrows + 1];
+    for s in &slabs {
+        for (t, &len) in s.row_lens.iter().enumerate() {
+            row_ptr[s.first_row + t + 1] = len as usize;
+        }
+    }
+    for i in 0..nrows {
+        row_ptr[i + 1] += row_ptr[i];
+    }
+    let mut col_idx = Vec::with_capacity(nnz);
+    let mut vals = Vec::with_capacity(nnz);
+    for s in &slabs {
+        col_idx.extend_from_slice(&s.cols);
+        vals.extend_from_slice(&s.vals);
+    }
+    Csr { nrows, ncols, row_ptr, col_idx, vals }
+}
+
+/// Reference (serial, obviously-correct) SpGEMM used as the oracle in
+/// every kernel test: per-row dense accumulator, contributions added
+/// in ascending-`k` order — the floating-point sequence both native
+/// kernels reproduce bit for bit (see module docs).
+pub fn reference_spgemm(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.ncols, b.nrows);
+    let n = b.ncols;
+    let mut acc = vec![0.0f64; n];
+    let mut live = vec![false; n];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut row_ptr = vec![0usize; a.nrows + 1];
+    let mut cols: Vec<u32> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    for i in 0..a.nrows {
+        touched.clear();
+        for (&k, &v) in a.row_cols(i).iter().zip(a.row_vals(i)) {
+            let kk = k as usize;
+            for (&j, &w) in b.row_cols(kk).iter().zip(b.row_vals(kk)) {
+                let jj = j as usize;
+                if live[jj] {
+                    acc[jj] += v * w;
+                } else {
+                    live[jj] = true;
+                    acc[jj] = v * w;
+                    touched.push(j);
+                }
+            }
+        }
+        touched.sort_unstable();
+        for &j in &touched {
+            cols.push(j);
+            vals.push(acc[j as usize]);
+            live[j as usize] = false;
+        }
+        row_ptr[i + 1] = cols.len();
+    }
+    Csr { nrows: a.nrows, ncols: n, row_ptr, col_idx: cols, vals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, Prng};
+
+    #[test]
+    fn reference_matches_dense_matmul() {
+        let mut rng = Prng::new(0x5a0);
+        let a = erdos_renyi(40, 30, 4.0, &mut rng);
+        let b = erdos_renyi(30, 50, 3.0, &mut rng);
+        let c = reference_spgemm(&a, &b);
+        c.validate().unwrap();
+        let (ad, bd, cd) = (a.to_dense(), b.to_dense(), c.to_dense());
+        for i in 0..40 {
+            for j in 0..50 {
+                let mut want = 0.0;
+                for k in 0..30 {
+                    want += ad[i * 30 + k] * bd[k * 50 + j];
+                }
+                assert!((cd[i * 50 + j] - want).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn flops_and_cf() {
+        let mut rng = Prng::new(0x5a1);
+        let a = erdos_renyi(60, 60, 4.0, &mut rng);
+        let b = erdos_renyi(60, 60, 4.0, &mut rng);
+        let fl = spgemm_flops(&a, &b);
+        let brute: usize =
+            a.col_idx.iter().map(|&k| b.row_len(k as usize)).sum();
+        assert_eq!(fl, 2.0 * brute as f64);
+        let c = reference_spgemm(&a, &b);
+        let cf = compression_factor(fl, c.nnz());
+        assert!(cf >= 2.0, "cf={cf}");
+        // cf · nnz(C) ≈ flops (exact when no row collapsed below 1)
+        assert!((cf * c.nnz() as f64 - fl).abs() < 1e-9 || cf == 2.0);
+        // degenerate: empty product reports the floor
+        assert_eq!(compression_factor(0.0, 0), 2.0);
+    }
+
+    #[test]
+    fn build_both_kernels() {
+        let mut rng = Prng::new(0x5a2);
+        let a = erdos_renyi(50, 50, 3.0, &mut rng);
+        for im in SpGemmImpl::ALL {
+            let k = build_spgemm(im, &a, 2);
+            assert_eq!(k.id(), im);
+            assert_eq!(k.nrows(), 50);
+            assert_eq!(k.nnz(), a.nnz());
+        }
+        assert_eq!(SpGemmImpl::Hash.to_string(), "HASH");
+        assert_eq!(SpGemmImpl::PbMerge.to_string(), "PBMERGE");
+    }
+
+    #[test]
+    fn assemble_handles_gaps_and_order() {
+        // slabs out of order, with an uncovered (empty) row in between
+        let slabs = vec![
+            RowSlab {
+                first_row: 3,
+                row_lens: vec![1],
+                cols: vec![0],
+                vals: vec![5.0],
+            },
+            RowSlab {
+                first_row: 0,
+                row_lens: vec![2, 0],
+                cols: vec![1, 3],
+                vals: vec![1.0, 2.0],
+            },
+        ];
+        let c = assemble_slabs(4, 4, slabs);
+        c.validate().unwrap();
+        assert_eq!(c.row_ptr, vec![0, 2, 2, 2, 3]);
+        assert_eq!(c.col_idx, vec![1, 3, 0]);
+        assert_eq!(c.vals, vec![1.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let mut rng = Prng::new(0x5a3);
+        let a = erdos_renyi(10, 12, 2.0, &mut rng);
+        let b = erdos_renyi(11, 5, 2.0, &mut rng);
+        for im in SpGemmImpl::ALL {
+            let k = build_spgemm(im, &a, 1);
+            assert!(k.execute(&b).is_err(), "{im}");
+        }
+    }
+}

@@ -1,0 +1,460 @@
+//! Propagation-blocking merge SpGEMM — the streaming kernel of the
+//! SpGEMM pair, after Gu et al.'s propagation-blocking SpGEMM
+//! (PAPERS.md, arXiv:2002.11302), reusing the column-band binning
+//! machinery of [`crate::spmm::PbSpmm`] (`spmm/pb_kernel.rs`).
+//!
+//! The hash kernel gathers rows of `B` in whatever order `A`'s column
+//! indices dictate — the random access the sparsity-aware models
+//! charge for. This kernel trades the gathers for sequential traffic,
+//! in two phases:
+//!
+//! 1. **Spill**: `A`'s nonzeros, re-binned at construction into column
+//!    bands of [`PbMergeSpGemm::col_band`] consecutive columns, are
+//!    streamed band by band. Within one band every `B` access lands in
+//!    a narrow row-panel of `B` that stays cache-resident, so `B` is
+//!    read from DRAM once overall. Each entry `(i, k, v)` expands into
+//!    `|B_k|` partial products `(j, v·w, i)` written to a precomputed
+//!    arena range — sequential, race-free writes (the per-entry ranges
+//!    are disjoint by construction).
+//! 2. **Merge**: partial products are laid out bucket-major (buckets =
+//!    [`PbMergeSpGemm::row_band`]-row windows of destination rows);
+//!    each bucket's run is streamed back, grouped per row, stably
+//!    sorted by column, and reduced into sorted deduplicated CSR rows.
+//!
+//! Bucket ownership under a [`Schedule`] uses the same first-row rule
+//! as `PbSpmm::gather` — both bounds round *up*, so a bucket
+//! straddling a partition boundary has exactly one owner (the
+//! one-row-per-partition regression in `tests/prop_spgemm.rs` pins
+//! this).
+//!
+//! **Accumulation order**: arena slots per destination row arrive in
+//! (band-ascending, then `k`-ascending) order, i.e. globally
+//! `k`-ascending; the per-row sort is *stable* by column, so each
+//! output's contributions reduce in exactly the arrival order — the
+//! same floating-point sequence as [`crate::spgemm::HashSpGemm`] and
+//! [`crate::spgemm::reference_spgemm`], bit for bit.
+
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::sparse::Csr;
+use crate::spgemm::{assemble_slabs, check_spgemm_dims, RowSlab, SpGemm, SpGemmImpl};
+use crate::spmm::pool::parallel_chunks_dynamic;
+use crate::spmm::{
+    bin_col_bands, check_schedule, ColBandBins, Schedule, PB_DEFAULT_COL_BAND,
+    PB_DEFAULT_ROW_BAND,
+};
+
+/// Spill-arena budget, the SpGEMM mirror of the SpMM kernel's
+/// `PB_MAX_SPILL_BYTES` (see [`crate::spmm::pb_spill_tile`]): a full
+/// product expansion needs
+/// [`SPGEMM_PB_PRODUCT_BYTES_USZ`] bytes per partial product, so
+/// heavy-tailed operands (Σ deg² products) are processed in multiple
+/// **bucket-range passes** — each pass spills and merges a contiguous
+/// run of destination buckets whose products fit the budget (always
+/// at least one bucket), re-streaming only the binned `A` structure
+/// per pass. The traffic model charges a flops-derived lower bound on
+/// this pass count ([`crate::model::spgemm_spill_passes`]; greedy
+/// whole-bucket packing can run more).
+pub const SPGEMM_MAX_SPILL_BYTES: usize = 1 << 26;
+
+/// Bytes per partial product in the spill arena: column (4) +
+/// value (8) + destination row (4).
+pub const SPGEMM_PB_PRODUCT_BYTES_USZ: usize = 16;
+
+/// Shared-pointer shim over the three product arrays: phase-1 workers
+/// write *disjoint* slot ranges without locks. Soundness: every binned
+/// entry owns a private contiguous slot range (`entry_off`), and each
+/// entry is processed by exactly one worker (its band is claimed
+/// once).
+#[derive(Clone, Copy)]
+struct RawProducts {
+    col: *mut u32,
+    val: *mut f64,
+    row: *mut u32,
+}
+unsafe impl Send for RawProducts {}
+unsafe impl Sync for RawProducts {}
+
+impl RawProducts {
+    /// Write one partial product. Caller must hold exclusive logical
+    /// ownership of `slot`.
+    #[inline(always)]
+    unsafe fn set(&self, slot: usize, col: u32, val: f64, row: u32) {
+        *self.col.add(slot) = col;
+        *self.val.add(slot) = val;
+        *self.row.add(slot) = row;
+    }
+}
+
+/// Reusable per-worker merge scratch: one (column, value) list per row
+/// of the bucket being merged.
+struct MergeScratch {
+    rows: Vec<Vec<(u32, f64)>>,
+}
+
+impl MergeScratch {
+    fn new() -> MergeScratch {
+        MergeScratch { rows: Vec::new() }
+    }
+    fn ensure(&mut self, height: usize) {
+        if self.rows.len() < height {
+            self.rows.resize_with(height, Vec::new);
+        }
+    }
+}
+
+/// Propagation-blocking merge SpGEMM kernel (see module docs).
+pub struct PbMergeSpGemm {
+    nrows: usize,
+    ncols: usize,
+    col_band: usize,
+    row_band: usize,
+    /// `A`'s entries binned by column band (shared machinery with
+    /// `PbSpmm` — see `spmm/pb_kernel.rs::bin_col_bands`).
+    bins: ColBandBins,
+    /// Untiled nnz-balanced base schedule over `A`'s rows.
+    base: Schedule,
+    /// Spill-arena budget in bytes ([`SPGEMM_MAX_SPILL_BYTES`] unless
+    /// overridden for tests/ablation).
+    spill_cap: usize,
+}
+
+impl PbMergeSpGemm {
+    /// Bin a CSR left operand with the default band geometry, shrunk
+    /// where the matrix is small (same rule as `PbSpmm::from_csr`:
+    /// ≈8 claimable bins per worker on both axes).
+    pub fn from_csr(csr: &Csr, threads: usize) -> Self {
+        let t = threads.max(1);
+        let col_band = PB_DEFAULT_COL_BAND.min(csr.ncols.div_ceil(8 * t).max(1));
+        let row_band = PB_DEFAULT_ROW_BAND.min(csr.nrows.div_ceil(8 * t).max(1));
+        Self::from_csr_with_bands(csr, col_band, row_band, threads)
+    }
+
+    /// Bin with explicit band geometry (adversarial-test hook).
+    pub fn from_csr_with_bands(
+        csr: &Csr,
+        col_band: usize,
+        row_band: usize,
+        threads: usize,
+    ) -> Self {
+        let col_band = col_band.max(1);
+        let row_band = row_band.max(1);
+        let bins = bin_col_bands(csr, col_band);
+        let base = Schedule::nnz_balanced(&csr.row_ptr, threads.max(1));
+        PbMergeSpGemm {
+            nrows: csr.nrows,
+            ncols: csr.ncols,
+            col_band,
+            row_band,
+            bins,
+            base,
+            spill_cap: SPGEMM_MAX_SPILL_BYTES,
+        }
+    }
+
+    /// Override the spill-arena budget (adversarial-test / ablation
+    /// hook; the default is [`SPGEMM_MAX_SPILL_BYTES`]).
+    pub fn with_spill_cap(mut self, bytes: usize) -> Self {
+        self.spill_cap = bytes.max(1);
+        self
+    }
+
+    /// The column-band width entries were binned with.
+    pub fn col_band(&self) -> usize {
+        self.col_band
+    }
+
+    /// The bucket height (destination-row bin size).
+    pub fn row_band(&self) -> usize {
+        self.row_band
+    }
+}
+
+impl SpGemm for PbMergeSpGemm {
+    fn id(&self) -> SpGemmImpl {
+        SpGemmImpl::PbMerge
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.bins.col.len()
+    }
+    fn plan(&self) -> Schedule {
+        self.base.clone()
+    }
+
+    fn execute(&self, b: &Csr) -> Result<Csr> {
+        self.execute_with(b, &self.base)
+    }
+
+    fn execute_with(&self, b: &Csr, s: &Schedule) -> Result<Csr> {
+        check_spgemm_dims(self.nrows, self.ncols, b)?;
+        check_schedule(self.nrows, s)?;
+        let rb = self.row_band;
+        let nb = self.bins.band_ptr.len() - 1;
+        let n_buckets = self.nrows.div_ceil(rb);
+        let nnz = self.bins.col.len();
+
+        // Per-(bucket, band) product-segment offsets: entry `e`
+        // expands into `|B_{col[e]}|` partial products, laid out
+        // bucket-major (one contiguous arena run per bucket) and
+        // band-major within a bucket — the same layout PbSpmm's `seg`
+        // computes once per matrix; here it depends on B, so it is
+        // recomputed per execution (an O(nnz) scan).
+        let mut seg = vec![0usize; n_buckets * nb + 1];
+        for beta in 0..nb {
+            for e in self.bins.band_ptr[beta]..self.bins.band_ptr[beta + 1] {
+                let cell = (self.bins.src[e] as usize / rb) * nb + beta;
+                seg[cell + 1] += b.row_len(self.bins.col[e] as usize);
+            }
+        }
+        for i in 0..n_buckets * nb {
+            seg[i + 1] += seg[i];
+        }
+        let bucket_ptr: Vec<usize> = (0..=n_buckets).map(|j| seg[j * nb]).collect();
+        // per-entry *global* slot offset, assigned in band order within
+        // a cell; a pass's arena index is this minus the pass base
+        // (bucket-major layout makes each pass's slots contiguous)
+        let mut segcur: Vec<usize> = seg[..n_buckets * nb].to_vec();
+        let mut entry_off = vec![0usize; nnz];
+        for beta in 0..nb {
+            for e in self.bins.band_ptr[beta]..self.bins.band_ptr[beta + 1] {
+                let cell = (self.bins.src[e] as usize / rb) * nb + beta;
+                entry_off[e] = segcur[cell];
+                segcur[cell] += b.row_len(self.bins.col[e] as usize);
+            }
+        }
+
+        // Bucket-range passes bounded by the spill budget: each pass
+        // spills and merges a contiguous run of buckets whose products
+        // fit the cap (always at least one bucket, so the arena never
+        // exceeds max(cap, largest single bucket)). One pass re-streams
+        // the binned structure once — the per-pass term the traffic
+        // model lower-bounds from flops (`model::spgemm_spill_passes`).
+        let cap_products = (self.spill_cap / SPGEMM_PB_PRODUCT_BYTES_USZ).max(1);
+        let slabs: Mutex<Vec<RowSlab>> = Mutex::new(Vec::new());
+        let scratch: Mutex<Vec<MergeScratch>> = Mutex::new(Vec::new());
+        let mut prod_col: Vec<u32> = Vec::new();
+        let mut prod_val: Vec<f64> = Vec::new();
+        let mut prod_row: Vec<u32> = Vec::new();
+        let mut pass_lo = 0usize;
+        while pass_lo < n_buckets {
+            let mut pass_hi = pass_lo + 1;
+            while pass_hi < n_buckets
+                && bucket_ptr[pass_hi + 1] - bucket_ptr[pass_lo] <= cap_products
+            {
+                pass_hi += 1;
+            }
+            let base = bucket_ptr[pass_lo];
+            let len = bucket_ptr[pass_hi] - base;
+            if prod_col.len() < len {
+                prod_col.resize(len, 0);
+                prod_val.resize(len, 0.0);
+                prod_row.resize(len, 0);
+            }
+
+            // Phase 1 — spill this pass's partial products band by band.
+            let raw = RawProducts {
+                col: prod_col.as_mut_ptr(),
+                val: prod_val.as_mut_ptr(),
+                row: prod_row.as_mut_ptr(),
+            };
+            parallel_chunks_dynamic(nb, s.threads, 1, |bands| {
+                for beta in bands {
+                    for e in self.bins.band_ptr[beta]..self.bins.band_ptr[beta + 1] {
+                        let bucket = self.bins.src[e] as usize / rb;
+                        if bucket < pass_lo || bucket >= pass_hi {
+                            continue;
+                        }
+                        let k = self.bins.col[e] as usize;
+                        let v = self.bins.val[e];
+                        let r = self.bins.src[e];
+                        let mut slot = entry_off[e] - base;
+                        for (&j, &w) in b.row_cols(k).iter().zip(b.row_vals(k)) {
+                            // SAFETY: entry e owns arena slots
+                            // entry_off[e]-base .. +|B_k| exclusively,
+                            // and band β has exactly one claimant.
+                            unsafe { raw.set(slot, j, v * w, r) };
+                            slot += 1;
+                        }
+                    }
+                }
+            });
+
+            // Phase 2 — merge: each schedule partition reduces the
+            // buckets it owns within this pass (first-row ownership,
+            // both bounds rounded up — see module docs).
+            parallel_chunks_dynamic(s.n_parts(), s.threads, 1, |parts| {
+                let mut ms = {
+                    let mut pool = scratch.lock().unwrap_or_else(|e| e.into_inner());
+                    pool.pop()
+                }
+                .unwrap_or_else(MergeScratch::new);
+                for pi in parts {
+                    let part = s.part(pi);
+                    if part.is_empty() {
+                        continue;
+                    }
+                    let j_lo = part.start.div_ceil(rb).max(pass_lo);
+                    let j_hi = part.end.div_ceil(rb).min(pass_hi);
+                    for j in j_lo..j_hi {
+                        let r_lo = j * rb;
+                        let r_hi = ((j + 1) * rb).min(self.nrows);
+                        let height = r_hi - r_lo;
+                        ms.ensure(height);
+                        for t in bucket_ptr[j]..bucket_ptr[j + 1] {
+                            let local = prod_row[t - base] as usize - r_lo;
+                            ms.rows[local].push((prod_col[t - base], prod_val[t - base]));
+                        }
+                        let mut slab = RowSlab {
+                            first_row: r_lo,
+                            row_lens: Vec::with_capacity(height),
+                            cols: Vec::new(),
+                            vals: Vec::new(),
+                        };
+                        for pairs in ms.rows.iter_mut().take(height) {
+                            // stable: preserves the k-ascending arrival
+                            // order per output column
+                            pairs.sort_by_key(|p| p.0);
+                            let mut len = 0u32;
+                            let mut it = pairs.iter();
+                            if let Some(&(c0, v0)) = it.next() {
+                                let mut cur_c = c0;
+                                let mut cur_v = v0;
+                                for &(c, v) in it {
+                                    if c == cur_c {
+                                        cur_v += v;
+                                    } else {
+                                        slab.cols.push(cur_c);
+                                        slab.vals.push(cur_v);
+                                        len += 1;
+                                        cur_c = c;
+                                        cur_v = v;
+                                    }
+                                }
+                                slab.cols.push(cur_c);
+                                slab.vals.push(cur_v);
+                                len += 1;
+                            }
+                            slab.row_lens.push(len);
+                            pairs.clear();
+                        }
+                        slabs.lock().unwrap_or_else(|e| e.into_inner()).push(slab);
+                    }
+                }
+                scratch.lock().unwrap_or_else(|e| e.into_inner()).push(ms);
+            });
+            pass_lo = pass_hi;
+        }
+        let slabs = slabs.into_inner().unwrap_or_else(|e| e.into_inner());
+        Ok(assemble_slabs(self.nrows, b.ncols, slabs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{banded, erdos_renyi, Prng};
+    use crate::spgemm::{reference_spgemm, HashSpGemm};
+
+    #[test]
+    fn matches_reference_bitwise_various_bands_and_threads() {
+        let mut rng = Prng::new(0x5c0);
+        let a = erdos_renyi(150, 150, 5.0, &mut rng);
+        let b = erdos_renyi(150, 150, 5.0, &mut rng);
+        let want = reference_spgemm(&a, &b);
+        for threads in [1usize, 3] {
+            for (cb, rbw) in [(2048usize, 2048usize), (7, 5), (1, 1)] {
+                let k = PbMergeSpGemm::from_csr_with_bands(&a, cb, rbw, threads);
+                let c = k.execute(&b).unwrap();
+                c.validate().unwrap();
+                assert_eq!(c, want, "threads={threads} cb={cb} rb={rbw}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_hash_kernel_bitwise() {
+        let mut rng = Prng::new(0x5c1);
+        let a = banded(120, 5, 0.4, &mut rng);
+        let b = erdos_renyi(120, 120, 4.0, &mut rng);
+        let hash = HashSpGemm::new(a.clone(), 2).execute(&b).unwrap();
+        let pb = PbMergeSpGemm::from_csr_with_bands(&a, 16, 8, 2).execute(&b).unwrap();
+        assert_eq!(pb, hash);
+    }
+
+    #[test]
+    fn one_row_per_partition_schedule_does_not_double_count() {
+        // buckets straddle every partition boundary: 1-row partitions,
+        // 3-row buckets — the same ownership regression PbSpmm pins
+        let mut rng = Prng::new(0x5c2);
+        let a = erdos_renyi(16, 16, 4.0, &mut rng);
+        let b = erdos_renyi(16, 16, 4.0, &mut rng);
+        let want = reference_spgemm(&a, &b);
+        let k = PbMergeSpGemm::from_csr_with_bands(&a, 4, 3, 2);
+        let s = Schedule::uniform(16, 2);
+        assert_eq!(s.n_parts(), 16);
+        let c = k.execute_with(&b, &s).unwrap();
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn rectangular_and_degenerate_shapes() {
+        let mut rng = Prng::new(0x5c3);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (1, 40, 7), (40, 1, 7), (30, 70, 20)] {
+            let a = erdos_renyi(m, k, 3.0, &mut rng);
+            let b = erdos_renyi(k, n, 3.0, &mut rng);
+            let kern = PbMergeSpGemm::from_csr_with_bands(&a, 8, 8, 2);
+            let c = kern.execute(&b).unwrap();
+            c.validate().unwrap();
+            assert_eq!(c, reference_spgemm(&a, &b), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn tiny_spill_cap_forces_passes_and_stays_bitwise() {
+        // a cap far below the product footprint forces many
+        // bucket-range passes; the result must not change by a bit
+        let mut rng = Prng::new(0x5c5);
+        let a = erdos_renyi(120, 120, 5.0, &mut rng);
+        let b = erdos_renyi(120, 120, 5.0, &mut rng);
+        let want = PbMergeSpGemm::from_csr_with_bands(&a, 16, 8, 2).execute(&b).unwrap();
+        for cap in [1usize, 64, 4096] {
+            let k = PbMergeSpGemm::from_csr_with_bands(&a, 16, 8, 2).with_spill_cap(cap);
+            let c = k.execute(&b).unwrap();
+            c.validate().unwrap();
+            assert_eq!(c, want, "cap={cap}");
+        }
+        // and under an adversarial one-row-per-partition schedule
+        let k = PbMergeSpGemm::from_csr_with_bands(&a, 16, 3, 2).with_spill_cap(64);
+        let s = Schedule::uniform(120, 15);
+        assert_eq!(s.n_parts(), 120);
+        let c = k.execute_with(&b, &s).unwrap();
+        assert_eq!(c, reference_spgemm(&a, &b));
+    }
+
+    #[test]
+    fn empty_product_is_empty() {
+        let a = Csr::from_dense(12, 12, &[0.0; 144]);
+        let b = Csr::from_dense(12, 12, &[0.0; 144]);
+        let k = PbMergeSpGemm::from_csr_with_bands(&a, 5, 5, 2);
+        let c = k.execute(&b).unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.nnz(), 0);
+    }
+
+    #[test]
+    fn foreign_schedule_rejected() {
+        let mut rng = Prng::new(0x5c4);
+        let a = erdos_renyi(10, 10, 2.0, &mut rng);
+        let b = erdos_renyi(10, 10, 2.0, &mut rng);
+        let k = PbMergeSpGemm::from_csr(&a, 1);
+        let foreign = Schedule::uniform(11, 1);
+        assert!(k.execute_with(&b, &foreign).is_err());
+    }
+}

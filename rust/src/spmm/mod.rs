@@ -50,6 +50,7 @@ pub use dense::DenseMatrix;
 pub use ell_kernel::EllSpmm;
 pub use opt_kernel::OptSpmm;
 pub use pb_kernel::{pb_spill_tile, PbSpmm, PB_DEFAULT_COL_BAND, PB_DEFAULT_ROW_BAND};
+pub(crate) use pb_kernel::{bin_col_bands, ColBandBins};
 pub use schedule::Schedule;
 
 use crate::error::{Error, Result};

@@ -84,6 +84,55 @@ pub fn pb_spill_tile(nnz: usize, d: usize) -> usize {
     (PB_MAX_SPILL_BYTES / (8 * nnz.max(1))).clamp(1, d.max(1))
 }
 
+/// Column-band binning of a CSR matrix's entries: a counting sort by
+/// `col / col_band`, row-stable within each band. This is the shared
+/// phase-A machinery of [`PbSpmm`] and the propagation-blocking SpGEMM
+/// merge kernel ([`crate::spgemm::PbMergeSpGemm`]):
+/// `band_ptr[β]..band_ptr[β+1]` indexes band β's entries in
+/// `col`/`val`/`src`, ordered by source row (and by column within a
+/// row, since CSR rows are column-sorted).
+pub(crate) struct ColBandBins {
+    /// Entry range per column band.
+    pub band_ptr: Vec<usize>,
+    /// Absolute `A` column (= right-operand row) per binned entry.
+    pub col: Vec<u32>,
+    /// Value per binned entry.
+    pub val: Vec<f64>,
+    /// Source (`A`/`C`) row per binned entry.
+    pub src: Vec<u32>,
+}
+
+/// Bin a CSR matrix's entries into column bands of `col_band`
+/// consecutive columns (see [`ColBandBins`]). Structural work done
+/// once at kernel construction, so execution never re-reads the CSR.
+pub(crate) fn bin_col_bands(csr: &Csr, col_band: usize) -> ColBandBins {
+    let col_band = col_band.max(1);
+    let nnz = csr.nnz();
+    let nb = csr.ncols.div_ceil(col_band);
+    let mut band_ptr = vec![0usize; nb + 1];
+    for &c in &csr.col_idx {
+        band_ptr[c as usize / col_band + 1] += 1;
+    }
+    for i in 0..nb {
+        band_ptr[i + 1] += band_ptr[i];
+    }
+    let mut cursor: Vec<usize> = band_ptr[..nb].to_vec();
+    let mut col = vec![0u32; nnz];
+    let mut val = vec![0.0f64; nnz];
+    let mut src = vec![0u32; nnz];
+    for r in 0..csr.nrows {
+        for (&c, &v) in csr.row_cols(r).iter().zip(csr.row_vals(r)) {
+            let b = c as usize / col_band;
+            let k = cursor[b];
+            cursor[b] += 1;
+            col[k] = c;
+            val[k] = v;
+            src[k] = r as u32;
+        }
+    }
+    ColBandBins { band_ptr, col, val, src }
+}
+
 /// Shared-pointer shim over the spill arena: phase-A workers write
 /// *disjoint* slots without locks. Soundness: `PbSpmm::pos` assigns
 /// every binned entry a unique arena slot, and each entry is processed
@@ -170,29 +219,8 @@ impl PbSpmm {
         let n_buckets = nrows.div_ceil(row_band);
 
         // 1) counting-sort entries by column band, row-stable — the
-        //    spill stream (structural, done once here so execution
-        //    never touches the CSR again)
-        let mut band_ptr = vec![0usize; nb + 1];
-        for &c in &csr.col_idx {
-            band_ptr[c as usize / col_band + 1] += 1;
-        }
-        for i in 0..nb {
-            band_ptr[i + 1] += band_ptr[i];
-        }
-        let mut cursor: Vec<usize> = band_ptr[..nb].to_vec();
-        let mut col = vec![0u32; nnz];
-        let mut val = vec![0.0f64; nnz];
-        let mut src = vec![0u32; nnz];
-        for r in 0..nrows {
-            for (&c, &v) in csr.row_cols(r).iter().zip(csr.row_vals(r)) {
-                let b = c as usize / col_band;
-                let k = cursor[b];
-                cursor[b] += 1;
-                col[k] = c;
-                val[k] = v;
-                src[k] = r as u32;
-            }
-        }
+        //    spill stream (shared with the SpGEMM merge kernel)
+        let ColBandBins { band_ptr, col, val, src } = bin_col_bands(csr, col_band);
 
         // 2) per-(bucket, band) segment sizes, laid out bucket-major so
         //    each bucket's slots are one contiguous arena run

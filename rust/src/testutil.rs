@@ -1,12 +1,24 @@
-//! `proptest_lite` — a miniature property-testing harness.
+//! `proptest_lite` — a miniature property-testing harness, plus the
+//! shared **differential-test oracle** every kernel suite checks
+//! against.
 //!
 //! `proptest` cannot be vendored offline, so this module provides the
 //! slice of it the test suite needs: seeded random case generation, a
 //! configurable case count, and on-failure reporting of the failing
 //! seed so a case can be replayed deterministically. (No shrinking —
 //! cases are kept small instead.)
+//!
+//! The oracle half ([`dense_spmm`], [`dense_spgemm`], [`csr_eq`],
+//! [`close_slice`]) is deliberately *independent* of the kernels under
+//! test: both multiplies render the sparse operands dense and run the
+//! obvious triple loop, so a structural bug shared by every CSR
+//! traversal cannot cancel out of the comparison. `tests/prop_spmm.rs`,
+//! `tests/prop_pb.rs`, and `tests/prop_spgemm.rs` all differentiate
+//! against it.
 
 use crate::gen::Prng;
+use crate::sparse::Csr;
+use crate::spmm::DenseMatrix;
 
 /// Number of cases per property (override with env
 /// `PROPTEST_LITE_CASES`).
@@ -17,13 +29,27 @@ pub fn default_cases() -> usize {
         .unwrap_or(32)
 }
 
-/// Run `prop` on `cases` seeded PRNGs derived from `seed`. The closure
-/// returns `Err(msg)` (or panics) to fail; the harness reports the
-/// failing case seed for replay.
+/// Fleet-wide seed offset: the `PROP_SEED` env var is folded into
+/// every property's base seed, so CI can re-run the suites over a
+/// seed matrix without editing tests. Unset or `0` keeps the
+/// committed seeds.
+fn prop_seed_offset() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0)
+        .wrapping_mul(0xA076_1D64_78BD_642F)
+}
+
+/// Run `prop` on `cases` seeded PRNGs derived from `seed` (and the
+/// `PROP_SEED` offset — see [`prop_seed_offset`]). The closure returns
+/// `Err(msg)` (or panics) to fail; the harness reports the failing
+/// case seed for replay.
 pub fn check<F>(seed: u64, cases: usize, mut prop: F)
 where
     F: FnMut(&mut Prng) -> Result<(), String>,
 {
+    let seed = seed ^ prop_seed_offset();
     for case in 0..cases {
         let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let mut rng = Prng::new(case_seed);
@@ -47,6 +73,100 @@ pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
         Ok(())
     } else {
         Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Dense-reference SpMM oracle: render `A` dense and run the obvious
+/// triple loop (`k` ascending). Independent of every CSR kernel's
+/// traversal, so it differentiates rather than mirrors them.
+pub fn dense_spmm(a: &Csr, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.ncols, b.nrows);
+    let ad = a.to_dense();
+    let mut c = DenseMatrix::zeros(a.nrows, b.ncols);
+    for i in 0..a.nrows {
+        for k in 0..a.ncols {
+            let v = ad[i * a.ncols + k];
+            if v != 0.0 {
+                let brow = b.row(k);
+                let crow = c.row_mut(i);
+                for (cc, &x) in crow.iter_mut().zip(brow) {
+                    *cc += v * x;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Dense-reference SpGEMM oracle: the product `A·B` as a dense
+/// row-major `a.nrows × b.ncols` buffer, accumulated `k`-ascending.
+/// Compare a kernel's CSR output via `to_dense()` + [`close_slice`] —
+/// comparing dense renderings sidesteps structural-zero brittleness
+/// (an exactly-cancelled output is a stored zero for the kernels but
+/// absent from a dense-built CSR).
+pub fn dense_spgemm(a: &Csr, b: &Csr) -> Vec<f64> {
+    assert_eq!(a.ncols, b.nrows);
+    let (ad, bd) = (a.to_dense(), b.to_dense());
+    let (m, p, n) = (a.nrows, a.ncols, b.ncols);
+    let mut c = vec![0.0f64; m * n];
+    for i in 0..m {
+        for k in 0..p {
+            let v = ad[i * p + k];
+            if v != 0.0 {
+                for j in 0..n {
+                    c[i * n + j] += v * bd[k * n + j];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Elementwise slice comparison to `tol`, returning a property-style
+/// error naming the first offending index.
+pub fn close_slice(got: &[f64], want: &[f64], tol: f64, what: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if (g - w).abs() > tol {
+            return Err(format!("{what}: [{i}] {g} vs {w} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Structural + numeric CSR comparison: shapes, row pointers, and
+/// column indices must match exactly; values to `tol`. Use between
+/// kernels (identical structure guaranteed); use [`dense_spgemm`] +
+/// [`close_slice`] against the dense oracle.
+pub fn csr_eq(got: &Csr, want: &Csr, tol: f64, what: &str) -> Result<(), String> {
+    if (got.nrows, got.ncols) != (want.nrows, want.ncols) {
+        return Err(format!(
+            "{what}: shape {}x{} vs {}x{}",
+            got.nrows, got.ncols, want.nrows, want.ncols
+        ));
+    }
+    if got.row_ptr != want.row_ptr {
+        return Err(format!("{what}: row_ptr differs"));
+    }
+    if got.col_idx != want.col_idx {
+        return Err(format!("{what}: col_idx differs"));
+    }
+    close_slice(&got.vals, &want.vals, tol, what)
+}
+
+/// Panicking wrapper over [`csr_eq`] for unit tests.
+pub fn assert_csr_eq(got: &Csr, want: &Csr, tol: f64) {
+    if let Err(msg) = csr_eq(got, want, tol, "csr") {
+        panic!("{msg}");
+    }
+}
+
+/// Panicking wrapper over [`close_slice`] for unit tests.
+pub fn assert_close_slice(got: &[f64], want: &[f64], tol: f64) {
+    if let Err(msg) = close_slice(got, want, tol, "slice") {
+        panic!("{msg}");
     }
 }
 
@@ -82,5 +202,39 @@ mod tests {
     fn close_tolerance() {
         assert!(close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
         assert!(close(1.0, 2.0, 1e-9, "x").is_err());
+    }
+
+    #[test]
+    fn dense_oracles_agree_with_each_other() {
+        use crate::gen::erdos_renyi;
+        let mut rng = Prng::new(7);
+        let a = erdos_renyi(20, 15, 3.0, &mut rng);
+        let b_sparse = erdos_renyi(15, 10, 3.0, &mut rng);
+        // SpGEMM oracle vs SpMM oracle fed the densified B
+        let bd = DenseMatrix::from_vec(15, 10, b_sparse.to_dense());
+        let via_spmm = dense_spmm(&a, &bd);
+        let via_spgemm = dense_spgemm(&a, &b_sparse);
+        assert_close_slice(&via_spmm.data, &via_spgemm, 1e-12);
+    }
+
+    #[test]
+    fn close_slice_reports_index_and_length() {
+        assert!(close_slice(&[1.0, 2.0], &[1.0, 2.0], 1e-12, "x").is_ok());
+        let err = close_slice(&[1.0, 2.0], &[1.0, 3.0], 1e-12, "x").unwrap_err();
+        assert!(err.contains("[1]"), "{err}");
+        assert!(close_slice(&[1.0], &[1.0, 2.0], 1e-12, "x").is_err());
+    }
+
+    #[test]
+    fn csr_eq_checks_structure_then_values() {
+        let a = Csr::from_dense(2, 2, &[1.0, 0.0, 0.0, 2.0]);
+        let mut b = a.clone();
+        assert!(csr_eq(&a, &b, 1e-12, "x").is_ok());
+        assert_csr_eq(&a, &b, 1e-12);
+        b.vals[0] = 1.5;
+        assert!(csr_eq(&a, &b, 1e-12, "x").is_err());
+        let c = Csr::from_dense(2, 2, &[0.0, 1.0, 0.0, 2.0]);
+        let err = csr_eq(&a, &c, 1e-12, "x").unwrap_err();
+        assert!(err.contains("col_idx") || err.contains("row_ptr"), "{err}");
     }
 }

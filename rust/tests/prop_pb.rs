@@ -9,8 +9,8 @@ use spmm_roofline::gen::{
     banded, chung_lu, erdos_renyi, mesh2d, rmat, ChungLuParams, MeshKind, Prng,
 };
 use spmm_roofline::sparse::Csr;
-use spmm_roofline::spmm::{reference_spmm, CsrSpmm, DenseMatrix, PbSpmm, Schedule, Spmm};
-use spmm_roofline::testutil::check_default;
+use spmm_roofline::spmm::{CsrSpmm, DenseMatrix, PbSpmm, Schedule, Spmm};
+use spmm_roofline::testutil::{check_default, dense_spmm};
 
 /// One matrix per structural regime (plus R-MAT as the second skewed
 /// generator), sized for test speed.
@@ -35,7 +35,7 @@ fn pb_matches_reference_and_csr_bitwise_across_generators() {
     for (name, a) in generator_suite(&mut rng) {
         for d in [3usize, 8, 16] {
             let b = DenseMatrix::random(a.ncols, d, &mut rng);
-            let want = reference_spmm(&a, &b);
+            let want = dense_spmm(&a, &b);
             for threads in [1usize, 4] {
                 let csr = CsrSpmm::new(a.clone(), threads);
                 let pb = PbSpmm::from_csr(&a, threads);
@@ -76,7 +76,7 @@ fn prop_pb_random_shapes_bands_and_tiles() {
         let col_band = 1 + rng.below_usize(40);
         let row_band = 1 + rng.below_usize(40);
         let b = DenseMatrix::random(nc, d, rng);
-        let want = reference_spmm(&a, &b);
+        let want = dense_spmm(&a, &b);
         let pb = PbSpmm::from_csr_with_bands(&a, col_band, row_band, threads);
         let mut c = DenseMatrix::zeros(nr, d);
         pb.execute_with(&b, &mut c, &pb.plan(Some(dt))).map_err(|e| e.to_string())?;
@@ -123,7 +123,7 @@ fn prop_pb_one_row_partitions_never_double_count() {
     for (name, a) in suite {
         let d = 5;
         let b = DenseMatrix::random(a.ncols, d, &mut rng);
-        let want = reference_spmm(&a, &b);
+        let want = dense_spmm(&a, &b);
         let pb = PbSpmm::from_csr_with_bands(&a, 4, 3, 2);
         let s = Schedule::uniform(a.nrows, a.nrows.div_ceil(8)).with_tile(Some(2));
         assert_eq!(s.n_parts(), a.nrows, "{name}: schedule must be one row per partition");
@@ -145,7 +145,7 @@ fn prop_pb_one_row_partitions_small_matrices() {
         let d = 1 + rng.below_usize(6);
         let row_band = 1 + rng.below_usize(7);
         let b = DenseMatrix::random(n, d, rng);
-        let want = reference_spmm(&a, &b);
+        let want = dense_spmm(&a, &b);
         let pb = PbSpmm::from_csr_with_bands(&a, 5, row_band, 2);
         let s = Schedule::uniform(n, threads);
         let mut c = DenseMatrix::from_vec(n, d, vec![3.5; n * d]);

@@ -1,0 +1,158 @@
+//! Property tests over the SpGEMM kernels, backed by the shared
+//! differential oracle ([`spmm_roofline::testutil::dense_spgemm`]):
+//!
+//! * both kernels vs the dense oracle (tolerance — the oracle
+//!   accumulates over every `k`, including absent entries, so its
+//!   floating-point sequence legitimately differs), and
+//! * both kernels vs each other **bit for bit** — hash/dense
+//!   accumulators and the PB merge all add each `C[i, j]`'s
+//!   contributions in ascending-`k` order (`spgemm/mod.rs` module
+//!   docs), so their structures and values must be identical —
+//!
+//! across every structural generator (banded, blocked/mesh,
+//! Erdős–Rényi, R-MAT, scale-free) × thread counts {1, 4} ×
+//! adversarial one-row-per-partition schedules, with the output
+//! invariants (sorted, deduplicated, `validate()` passes) checked on
+//! every product.
+
+use spmm_roofline::gen::{
+    banded, chung_lu, erdos_renyi, mesh2d, rmat, ChungLuParams, MeshKind, Prng,
+};
+use spmm_roofline::sparse::Csr;
+use spmm_roofline::spgemm::{HashSpGemm, PbMergeSpGemm, SpGemm};
+use spmm_roofline::spmm::Schedule;
+use spmm_roofline::testutil::{assert_csr_eq, check_default, close_slice, dense_spgemm};
+
+/// One matrix per structural regime, sized for test speed.
+fn generator_suite(rng: &mut Prng) -> Vec<(&'static str, Csr)> {
+    vec![
+        ("banded", banded(140, 6, 0.4, rng)),
+        ("blocked", mesh2d(12, MeshKind::Triangular, 0.9, rng)),
+        ("er", erdos_renyi(150, 150, 5.0, rng)),
+        ("rmat", rmat(7, 5.0, 0.57, 0.19, 0.19, rng)),
+        (
+            "scalefree",
+            chung_lu(ChungLuParams { n: 180, alpha: 2.2, avg_deg: 6.0, k_min: 2.0 }, rng),
+        ),
+    ]
+}
+
+/// Structural invariants every SpGEMM output must satisfy: valid CSR
+/// (which enforces strictly ascending — i.e. sorted *and*
+/// deduplicated — columns per row) with the product shape.
+fn check_invariants(c: &Csr, a: &Csr, b: &Csr, what: &str) {
+    assert_eq!((c.nrows, c.ncols), (a.nrows, b.ncols), "{what}: shape");
+    c.validate().unwrap_or_else(|e| panic!("{what}: invalid product CSR: {e}"));
+}
+
+/// The acceptance grid: every generator × A·A and A·Aᵀ-shaped pairs ×
+/// threads {1, 4}, both kernels vs the dense oracle and vs each other
+/// bitwise.
+#[test]
+fn spgemm_kernels_match_oracle_and_each_other_across_generators() {
+    let mut rng = Prng::new(0xa90);
+    for (name, a) in generator_suite(&mut rng) {
+        // self-product plus a second structurally-distinct right
+        // operand of matching inner dimension
+        let b2 = erdos_renyi(a.ncols, 90, 4.0, &mut rng);
+        let pairs: Vec<(&str, &Csr, &Csr)> =
+            vec![("A·A", &a, &a), ("A·B", &a, &b2)];
+        for (pname, pa, pb) in pairs {
+            let oracle = dense_spgemm(pa, pb);
+            for threads in [1usize, 4] {
+                let hash = HashSpGemm::new((*pa).clone(), threads);
+                let merge = PbMergeSpGemm::from_csr(pa, threads);
+                let c_hash = hash.execute(pb).unwrap();
+                let c_merge = merge.execute(pb).unwrap();
+                let what = format!("{name} {pname} threads={threads}");
+                check_invariants(&c_hash, pa, pb, &format!("{what} HASH"));
+                check_invariants(&c_merge, pa, pb, &format!("{what} PBMERGE"));
+                // vs the dense oracle, via dense rendering (tolerance)
+                close_slice(&c_hash.to_dense(), &oracle, 1e-10, &format!("{what} HASH"))
+                    .unwrap();
+                // vs each other: bitwise (same accumulation order)
+                assert_csr_eq(&c_merge, &c_hash, 0.0);
+            }
+        }
+    }
+}
+
+/// Adversarial schedules: one row per partition, so every PB-merge
+/// bucket straddles partition boundaries and the hash kernel's slab
+/// assembly sees maximal fragmentation — across every generator.
+#[test]
+fn spgemm_one_row_per_partition_schedules() {
+    let mut rng = Prng::new(0xa91);
+    let suite: Vec<(&'static str, Csr)> = vec![
+        ("banded", banded(24, 3, 0.5, &mut rng)),
+        ("blocked", mesh2d(5, MeshKind::Triangular, 0.9, &mut rng)),
+        ("er", erdos_renyi(30, 30, 4.0, &mut rng)),
+        ("rmat", rmat(5, 4.0, 0.57, 0.19, 0.19, &mut rng)),
+        (
+            "scalefree",
+            chung_lu(ChungLuParams { n: 40, alpha: 2.2, avg_deg: 5.0, k_min: 1.5 }, &mut rng),
+        ),
+    ];
+    for (name, a) in suite {
+        let b = erdos_renyi(a.ncols, a.ncols, 4.0, &mut rng);
+        let oracle = dense_spgemm(&a, &b);
+        // uniform(n, ⌈n/8⌉) degenerates to one row per partition
+        let s = Schedule::uniform(a.nrows, a.nrows.div_ceil(8));
+        assert_eq!(s.n_parts(), a.nrows, "{name}: want 1-row partitions");
+        let hash = HashSpGemm::new(a.clone(), 2);
+        let merge = PbMergeSpGemm::from_csr_with_bands(&a, 4, 3, 2);
+        let c_hash = hash.execute_with(&b, &s).unwrap();
+        let c_merge = merge.execute_with(&b, &s).unwrap();
+        check_invariants(&c_hash, &a, &b, name);
+        check_invariants(&c_merge, &a, &b, name);
+        close_slice(&c_hash.to_dense(), &oracle, 1e-10, name).unwrap();
+        assert_csr_eq(&c_merge, &c_hash, 0.0);
+    }
+}
+
+#[test]
+fn prop_spgemm_random_shapes_bands_and_threads() {
+    check_default(0xa92, |rng| {
+        let m = 4 + rng.below_usize(60);
+        let p = 4 + rng.below_usize(60);
+        let n = 4 + rng.below_usize(60);
+        let a = erdos_renyi(m, p, rng.range_f64(0.0, 6.0), rng);
+        let b = erdos_renyi(p, n, rng.range_f64(0.0, 6.0), rng);
+        let threads = 1 + rng.below_usize(4);
+        let col_band = 1 + rng.below_usize(20);
+        let row_band = 1 + rng.below_usize(20);
+        let oracle = dense_spgemm(&a, &b);
+        let hash = HashSpGemm::new(a.clone(), threads);
+        let merge = PbMergeSpGemm::from_csr_with_bands(&a, col_band, row_band, threads);
+        let c_hash = hash.execute(&b).map_err(|e| e.to_string())?;
+        let c_merge = merge.execute(&b).map_err(|e| e.to_string())?;
+        c_hash.validate().map_err(|e| format!("HASH invalid: {e}"))?;
+        c_merge.validate().map_err(|e| format!("PBMERGE invalid: {e}"))?;
+        let what = format!("{m}x{p}x{n} threads={threads} bands={col_band}/{row_band}");
+        close_slice(&c_hash.to_dense(), &oracle, 1e-10, &format!("HASH {what}"))?;
+        spmm_roofline::testutil::csr_eq(&c_merge, &c_hash, 0.0, &format!("PBMERGE {what}"))?;
+        Ok(())
+    });
+}
+
+/// The compression factor measured on real products behaves: ≥ 2, and
+/// `cf · nnz(C) == flops` exactly when the product is nonempty.
+#[test]
+fn prop_spgemm_flops_and_compression_factor() {
+    use spmm_roofline::spgemm::{compression_factor, spgemm_flops};
+    check_default(0xa93, |rng| {
+        let n = 8 + rng.below_usize(80);
+        let a = erdos_renyi(n, n, rng.range_f64(0.5, 6.0), rng);
+        let b = erdos_renyi(n, n, rng.range_f64(0.5, 6.0), rng);
+        let flops = spgemm_flops(&a, &b);
+        let c = HashSpGemm::new(a.clone(), 2).execute(&b).map_err(|e| e.to_string())?;
+        let cf = compression_factor(flops, c.nnz());
+        if cf < 2.0 {
+            return Err(format!("cf {cf} below the floor"));
+        }
+        if c.nnz() > 0 && (cf * c.nnz() as f64 - flops).abs() > 1e-6 {
+            return Err(format!("cf·nnz(C) = {} != flops {flops}", cf * c.nnz() as f64));
+        }
+        Ok(())
+    });
+}
