@@ -1,0 +1,180 @@
+//! Bench: the concurrent serving front-end — N client threads drive a
+//! tenant-scoped SpMM/SpGEMM mix through the bounded queue while the
+//! serving loop drains, coalesces same-matrix jobs into pooled-buffer
+//! engine batches, and answers every ticket.
+//!
+//! Reports jobs/sec, the coalesce rate (fraction of jobs that rode a
+//! merged batch — the front-end's whole reason to exist), peak queue
+//! depth, and admission rejects, then writes the flat record into
+//! `BENCH_serve.json` (CI greps it for `"coalesce_rate"`).
+//!
+//! `REPRO_SCALE` (default 0.25), `REPRO_ITERS` (default 2), and
+//! `REPRO_CLIENTS` (default 4) tune load; `REPRO_FAST=1` injects
+//! nominal machine parameters to skip STREAM/FMA calibration.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use spmm_roofline::coordinator::{
+    Engine, EngineConfig, JobSpec, ServeConfig, ServeRequest, Server, SpGemmSpec, Submit,
+};
+use spmm_roofline::gen::representative_suite;
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::report::atomic_write;
+use spmm_roofline::spmm::Impl;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = envf("REPRO_SCALE", 0.25);
+    let iters = envf("REPRO_ITERS", 2.0) as usize;
+    let clients = (envf("REPRO_CLIENTS", 4.0) as usize).max(1);
+    let fast = std::env::var("REPRO_FAST").map(|v| v == "1").unwrap_or(false);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let machine = if fast {
+        Some(MachineParams { beta_gbs: 25.0, pi_gflops: 100.0 })
+    } else {
+        None // calibrate via STREAM + FMA loop
+    };
+    let mut engine = Engine::new(EngineConfig {
+        threads,
+        machine,
+        iters,
+        warmup: 1,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+        artifacts_dir: None,
+        ..EngineConfig::default()
+    })
+    .expect("engine construction");
+    println!(
+        "serve bench: β={:.1} GB/s π={:.0} GFLOP/s, {} engine threads, {} clients",
+        engine.machine().beta_gbs,
+        engine.machine().pi_gflops,
+        threads,
+        clients
+    );
+
+    // two tenants sharing the suite: clients of different tenants hit
+    // the same *local* names, so coalescing must respect the scoping
+    let tenants = ["acme", "beta"];
+    let mut names: Vec<String> = Vec::new();
+    for proxy in representative_suite() {
+        let m = proxy.generate(scale);
+        println!(
+            "registered {} ({} rows, {} nnz) × {} tenants",
+            proxy.name,
+            m.nrows,
+            m.nnz(),
+            tenants.len()
+        );
+        for t in tenants {
+            engine.register_for(t, proxy.name, m.clone()).expect("register");
+        }
+        names.push(proxy.name.to_string());
+    }
+
+    // a small queue relative to the offered load, so backpressure and
+    // peak-depth numbers are non-trivial
+    let mut server = Server::new(
+        engine,
+        ServeConfig { queue_capacity: 16, max_drain: 8, ..ServeConfig::default() },
+    );
+    let handle = server.handle();
+    let remaining = AtomicUsize::new(clients);
+    let delivered = AtomicUsize::new(0);
+    let retries = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let h = handle.clone();
+            let remaining = &remaining;
+            let delivered = &delivered;
+            let retries = &retries;
+            let names = &names;
+            s.spawn(move || {
+                let tenant = tenants[c % tenants.len()];
+                let mut tickets = Vec::new();
+                let mut tag = (c as u64) << 32;
+                let mut enqueue = |req: ServeRequest, tickets: &mut Vec<_>| loop {
+                    match h.submit(req.clone()) {
+                        Ok(Submit::Accepted(t)) => {
+                            tickets.push(t);
+                            break;
+                        }
+                        Ok(Submit::Rejected { .. }) => {
+                            retries.fetch_add(1, Ordering::Relaxed);
+                            std::thread::yield_now();
+                        }
+                        Err(_) => break, // queue closed underneath us
+                    }
+                };
+                for (i, name) in names.iter().enumerate() {
+                    for d in [4usize, 16] {
+                        let req = ServeRequest::spmm(tenant, JobSpec::new(name.clone(), d), tag)
+                            .with_tag(tag);
+                        tag += 1;
+                        enqueue(req, &mut tickets);
+                    }
+                    if i == 0 {
+                        let req = ServeRequest::spgemm(
+                            tenant,
+                            SpGemmSpec::new(name.clone(), name.clone()),
+                        )
+                        .with_tag(tag);
+                        tag += 1;
+                        enqueue(req, &mut tickets);
+                    }
+                }
+                if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    h.close();
+                }
+                for t in tickets {
+                    if t.wait().is_ok() {
+                        delivered.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+        server.run();
+    });
+
+    let stats = server.stats().clone();
+    println!("\n— serving run —");
+    println!(
+        "  {} jobs done ({} failed), {} delivered to clients, {} serving cycles",
+        stats.jobs_done,
+        stats.jobs_failed,
+        delivered.load(Ordering::Relaxed),
+        stats.batches
+    );
+    println!(
+        "  coalesced {} of {} jobs → coalesce rate {:.2}",
+        stats.coalesced_jobs,
+        stats.jobs_done,
+        stats.coalesce_rate()
+    );
+    println!(
+        "  queue: peak depth {}, {} rejects ({} client retries), {:.1} jobs/sec over {:.2}s",
+        stats.max_queue_depth,
+        stats.rejected,
+        retries.load(Ordering::Relaxed),
+        stats.jobs_per_sec(),
+        stats.wall_secs
+    );
+    assert!(stats.jobs_done > 0, "serving loop must complete jobs");
+    assert_eq!(
+        stats.jobs_done,
+        delivered.load(Ordering::Relaxed),
+        "every done job reaches its ticket"
+    );
+    if clients >= 2 {
+        // with ≥2 clients per tenant-pair hammering the same names,
+        // the drain slices must find same-matrix pairs to merge
+        assert!(stats.coalesced_jobs > 0, "expected some coalescing under concurrent load");
+    }
+
+    atomic_write("BENCH_serve.json", &stats.to_json("bench_serve", clients))
+        .expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

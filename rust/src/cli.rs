@@ -31,6 +31,11 @@
 //!                  hash and PB-merge SpGEMM kernels per matrix, pin
 //!                  the measured winner with its compression factor,
 //!                  write BENCH_route.json records
+//!   serve          concurrent serving front-end: N client threads
+//!                  submit a tenant-scoped job mix through the bounded
+//!                  queue; coalesced batches, admission stats, and
+//!                  (with --state FILE) persisted autotune decisions;
+//!                  writes BENCH_serve.json
 //! ```
 
 use crate::config::{parse_impl, ExperimentConfig};
@@ -79,6 +84,9 @@ pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
             "artifacts" => cfg.artifacts_dir = v.clone(),
             "xla" => cfg.use_xla = v == "true",
             "autotune" => cfg.autotune = v == "true",
+            "clients" => cfg.clients = v.parse().map_err(|_| bad(k, v))?,
+            "queue" => cfg.queue_cap = v.parse().map_err(|_| bad(k, v))?,
+            "state" => cfg.state_path = Some(v.clone()),
             "d" => {
                 cfg.d_values = v
                     .split(',')
@@ -113,9 +121,10 @@ fn bad(k: &str, v: &str) -> Error {
 pub fn usage() -> String {
     "usage: repro <command> [flags] — commands: sysinfo stream suite classify \
      table-v fig1 fig2 validate-ai ablate-block ablate-reuse ablate-threads \
-     ablate-reorder ladder hubs engine route spgemm\n\
+     ablate-reorder ladder hubs engine route spgemm serve\n\
      flags: --scale X --threads N --iters N --warmup N --d 1,4,16,64 \
-     --impls CSR,MKL,CSB --out DIR --artifacts DIR --config FILE --autotune\n\
+     --impls CSR,MKL,CSB --out DIR --artifacts DIR --config FILE --autotune \
+     --clients N --queue N --state FILE\n\
      --impls accepts any of CSR,MKL/OPT,CSB,ELL,BSR,PB,XLA or the shorthand \
      `all` (= the six native kernels); `engine` prepares exactly the \
      requested set, so ELL/BSR/PB are opt-in there\n\
@@ -126,7 +135,12 @@ pub fn usage() -> String {
      BENCH_route.json\n\
      `spgemm` routes the sparse×sparse workload: both SpGEMM kernels \
      (HASH, PBMERGE) are measured per matrix pair and the winner is \
-     pinned with the pair's measured compression factor"
+     pinned with the pair's measured compression factor\n\
+     `serve` drives the concurrent front-end: --clients N client \
+     threads (default 4), --queue N admission capacity (default 64), \
+     --state FILE to load/save the autotune snapshot across runs; \
+     throughput, queue-depth, and coalesce-rate land in \
+     BENCH_serve.json"
         .to_string()
 }
 
@@ -162,6 +176,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
         "engine" => cmd_engine(cfg),
         "route" => cmd_route(cfg),
         "spgemm" => cmd_spgemm(cfg),
+        "serve" => cmd_serve(cfg),
         other => Err(Error::Usage(format!("unknown command '{other}'\n\n{}", usage()))),
     }
 }
@@ -719,6 +734,135 @@ fn cmd_spgemm(cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+/// The `serve` command: stand up the concurrent serving front-end
+/// over the representative suite registered under two tenants, drive
+/// it with `--clients` threads submitting a mixed SpMM/SpGEMM load
+/// through the bounded queue (retrying on backpressure), and report
+/// throughput, queue depth, and the coalesce rate. With `--state FILE`
+/// the autotune snapshot is loaded at startup — a second run pins the
+/// first run's decisions without re-exploring — and saved at shutdown.
+fn cmd_serve(cfg: &ExperimentConfig) -> Result<()> {
+    use crate::coordinator::{
+        AutotunePolicy, Engine, EngineConfig, JobSpec, ServeConfig, ServeRequest, Server,
+        SpGemmSpec, Submit,
+    };
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let impls: Vec<Impl> = cfg.impls.iter().copied().filter(|&i| i != Impl::Xla).collect();
+    let mut engine = Engine::new(EngineConfig {
+        threads: cfg.threads,
+        machine: None,
+        iters: cfg.iters,
+        warmup: cfg.warmup,
+        impls,
+        artifacts_dir: None,
+        autotune: if cfg.autotune { AutotunePolicy::enabled() } else { AutotunePolicy::default() },
+    })?;
+    // two tenants over the same suite: same local names, isolated state
+    let tenants = ["acme", "beta"];
+    let mut names: Vec<String> = Vec::new();
+    for proxy in crate::gen::representative_suite() {
+        for t in tenants {
+            engine.register_for(t, proxy.name, proxy.generate(cfg.scale))?;
+        }
+        names.push(proxy.name.to_string());
+    }
+    let mut server = Server::new(
+        engine,
+        ServeConfig {
+            queue_capacity: cfg.queue_cap,
+            state_path: cfg.state_path.clone(),
+            ..ServeConfig::default()
+        },
+    );
+    println!(
+        "serve up: {} clients, queue {} deep, {} matrices × {} tenants, restored={}",
+        cfg.clients,
+        cfg.queue_cap,
+        names.len(),
+        tenants.len(),
+        server.restored()
+    );
+
+    let handle = server.handle();
+    let remaining = AtomicUsize::new(cfg.clients);
+    let delivered = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for c in 0..cfg.clients {
+            let h = handle.clone();
+            let remaining = &remaining;
+            let delivered = &delivered;
+            let names = &names;
+            s.spawn(move || {
+                let tenant = tenants[c % tenants.len()];
+                let mut tickets = Vec::new();
+                let mut tag = (c as u64) << 32;
+                let mut enqueue = |req: ServeRequest, tickets: &mut Vec<_>| loop {
+                    match h.submit(req.clone()) {
+                        Ok(Submit::Accepted(t)) => {
+                            tickets.push(t);
+                            break;
+                        }
+                        // backpressure: the server is draining
+                        // concurrently, so room opens up — retry
+                        Ok(Submit::Rejected { .. }) => std::thread::yield_now(),
+                        Err(_) => break, // queue closed underneath us
+                    }
+                };
+                for (i, name) in names.iter().enumerate() {
+                    for &d in &cfg.d_values {
+                        let req = ServeRequest::spmm(tenant, JobSpec::new(name.clone(), d), tag)
+                            .with_tag(tag);
+                        tag += 1;
+                        enqueue(req, &mut tickets);
+                    }
+                    if i == 0 {
+                        let req = ServeRequest::spgemm(
+                            tenant,
+                            SpGemmSpec::new(name.clone(), name.clone()),
+                        )
+                        .with_tag(tag);
+                        tag += 1;
+                        enqueue(req, &mut tickets);
+                    }
+                }
+                // the last client done submitting shuts the queue down
+                if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    h.close();
+                }
+                for t in tickets {
+                    if t.wait().is_ok() {
+                        delivered.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+        server.run();
+    });
+
+    let stats = server.stats();
+    let mut t = crate::report::Table::new(
+        "serve — concurrent front-end over the roofline-guided engine",
+        &["Metric", "Value"],
+    );
+    t.row(vec!["jobs done".into(), stats.jobs_done.to_string()]);
+    t.row(vec!["jobs failed".into(), stats.jobs_failed.to_string()]);
+    t.row(vec!["replies delivered".into(), delivered.load(Ordering::Relaxed).to_string()]);
+    t.row(vec!["serving cycles".into(), stats.batches.to_string()]);
+    t.row(vec!["coalesced jobs".into(), stats.coalesced_jobs.to_string()]);
+    t.row(vec!["coalesce rate".into(), format!("{:.2}", stats.coalesce_rate())]);
+    t.row(vec!["rejected (backpressure)".into(), stats.rejected.to_string()]);
+    t.row(vec!["peak queue depth".into(), stats.max_queue_depth.to_string()]);
+    t.row(vec!["jobs/sec".into(), format!("{:.1}", stats.jobs_per_sec())]);
+    println!("{}", t.to_text());
+    if let Some(p) = &cfg.state_path {
+        println!("autotune state persisted to {p} (re-run to serve from pinned decisions)");
+    }
+    crate::report::atomic_write("BENCH_serve.json", &stats.to_json("bench_serve", cfg.clients))?;
+    println!("wrote BENCH_serve.json");
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -752,6 +896,21 @@ mod tests {
         // default off; the `route` command enables it internally
         let cli = parse_args(args("route --scale 0.1")).unwrap();
         assert!(!cli.cfg.autotune);
+    }
+
+    #[test]
+    fn serve_flags_parse() {
+        let cli = parse_args(args("serve --clients 6 --queue 8 --state tuned.json")).unwrap();
+        assert_eq!(cli.cfg.clients, 6);
+        assert_eq!(cli.cfg.queue_cap, 8);
+        assert_eq!(cli.cfg.state_path.as_deref(), Some("tuned.json"));
+        // defaults when unset
+        let cli = parse_args(args("serve")).unwrap();
+        assert_eq!((cli.cfg.clients, cli.cfg.queue_cap), (4, 64));
+        assert!(cli.cfg.state_path.is_none());
+        // validation catches zeros
+        assert!(parse_args(args("serve --clients 0")).is_err());
+        assert!(parse_args(args("serve --queue 0")).is_err());
     }
 
     #[test]

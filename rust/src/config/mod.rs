@@ -36,6 +36,13 @@ pub struct ExperimentConfig {
     /// Enable the structure-adaptive autotuning router on the engine
     /// path (`engine --autotune`; the `route` command forces it on).
     pub autotune: bool,
+    /// Client threads driving the serving front-end (`serve`).
+    pub clients: usize,
+    /// Serving queue capacity (admission control rejects past this).
+    pub queue_cap: usize,
+    /// Autotune snapshot path for the serving front-end: loaded at
+    /// startup, saved at shutdown (`None` = in-memory only).
+    pub state_path: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -51,6 +58,9 @@ impl Default for ExperimentConfig {
             use_xla: false,
             artifacts_dir: "artifacts".into(),
             autotune: false,
+            clients: 4,
+            queue_cap: 64,
+            state_path: None,
         }
     }
 }
@@ -93,6 +103,15 @@ impl ExperimentConfig {
         if let Some(v) = t.get_bool("autotune")? {
             cfg.autotune = v;
         }
+        if let Some(v) = t.get_f64("clients")? {
+            cfg.clients = v as usize;
+        }
+        if let Some(v) = t.get_f64("queue_cap")? {
+            cfg.queue_cap = v as usize;
+        }
+        if let Some(v) = t.get_str("state_path")? {
+            cfg.state_path = Some(v.to_string());
+        }
         if let Some(list) = t.get_str_array("impls")? {
             cfg.impls = list
                 .iter()
@@ -113,6 +132,9 @@ impl ExperimentConfig {
         }
         if self.threads == 0 || self.iters == 0 {
             return Err(Error::Config("threads and iters must be >= 1".into()));
+        }
+        if self.clients == 0 || self.queue_cap == 0 {
+            return Err(Error::Config("clients and queue_cap must be >= 1".into()));
         }
         Ok(())
     }
@@ -167,6 +189,19 @@ use_xla = true
         assert!(ExperimentConfig::from_toml_text("scale = -1").is_err());
         assert!(ExperimentConfig::from_toml_text("d_values = []").is_err());
         assert!(ExperimentConfig::from_toml_text("impls = [\"NOPE\"]").is_err());
+        assert!(ExperimentConfig::from_toml_text("clients = 0").is_err());
+        assert!(ExperimentConfig::from_toml_text("queue_cap = 0").is_err());
+    }
+
+    #[test]
+    fn parses_serve_keys() {
+        let c = ExperimentConfig::default();
+        assert_eq!((c.clients, c.queue_cap), (4, 64));
+        assert!(c.state_path.is_none());
+        let text = "clients = 8\nqueue_cap = 16\nstate_path = \"autotune.json\"\n";
+        let c = ExperimentConfig::from_toml_text(text).unwrap();
+        assert_eq!((c.clients, c.queue_cap), (8, 16));
+        assert_eq!(c.state_path.as_deref(), Some("autotune.json"));
     }
 
     #[test]

@@ -266,6 +266,19 @@ impl Autotuner {
         v
     }
 
+    /// Adopt a decision from a persisted snapshot: it pins exactly
+    /// like one tuned in-process — later submissions serve from it
+    /// with **no** exploration — but the measurement counter is
+    /// untouched (this process did not run those measurements).
+    pub fn adopt(&mut self, dec: RouteDecision) {
+        self.decisions.insert((dec.matrix.clone(), dec.d), dec);
+    }
+
+    /// Adopt a persisted SpGEMM pair decision (see [`Autotuner::adopt`]).
+    pub fn adopt_spgemm(&mut self, dec: SpGemmDecision) {
+        self.spgemm_decisions.insert((dec.a.clone(), dec.b.clone()), dec);
+    }
+
     /// Drop every decision for `matrix` (the matrix was re-registered;
     /// its structure may have changed). SpGEMM decisions go whether the
     /// matrix was the left or the right operand.

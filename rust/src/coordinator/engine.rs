@@ -12,6 +12,7 @@ use crate::gen::Prng;
 use crate::membench;
 use crate::metrics::{bench_adaptive_checked, gflops, spmm_flops, Timer};
 use crate::model::{MachineParams, Roofline, SpGemmParams};
+use crate::report::AutotuneState;
 use crate::runtime::{ArtifactManifest, XlaRuntime};
 use crate::sparse::Csr;
 use crate::spgemm::{compression_factor, spgemm_flops};
@@ -156,6 +157,25 @@ impl Engine {
     /// measure; and fold the measurement back into the planner's
     /// priors.
     pub fn submit(&mut self, job: &JobSpec) -> Result<JobRecord> {
+        self.submit_inner(job, None).map(|(rec, _)| rec)
+    }
+
+    /// [`Engine::submit`] with a deterministic dense operand and the
+    /// product returned: `B` is drawn from a job-local PRNG seeded with
+    /// `seed` (never the engine's shared stream), so the same
+    /// `(matrix, d, seed)` sees the same `B` no matter how jobs
+    /// interleave — the property the serve layer's
+    /// concurrent-vs-sequential differential test is built on.
+    pub fn submit_collect(&mut self, job: &JobSpec, seed: u64) -> Result<(JobRecord, Vec<f64>)> {
+        let (rec, out) = self.submit_inner(job, Some(seed))?;
+        Ok((rec, out.expect("seeded submission always captures its output")))
+    }
+
+    fn submit_inner(
+        &mut self,
+        job: &JobSpec,
+        seed: Option<u64>,
+    ) -> Result<(JobRecord, Option<Vec<f64>>)> {
         // adaptive routing first: tuning may permute the stored matrix
         // and rebuild kernels, so it must run before the entry borrow
         let routed: Option<RouteDecision> =
@@ -224,7 +244,13 @@ impl Engine {
         // dense operands come from the recycled buffer pool: across a
         // batch (or any repeated submission) each distinct size is
         // allocated once and reused
-        let b = self.buffers.acquire_random(n, job.d, &mut self.rng);
+        let b = match seed {
+            // seeded submissions draw B from their own PRNG — identical
+            // content for identical (n, d, seed), independent of every
+            // other job's draws (the pool hands back cleared storage)
+            Some(s) => self.buffers.acquire_random(n, job.d, &mut Prng::new(s)),
+            None => self.buffers.acquire_random(n, job.d, &mut self.rng),
+        };
         let mut c = self.buffers.acquire(kernel.nrows(), job.d);
         // surface kernel errors before timing (returning the buffers —
         // a failed job must not bleed the pool's largest allocations)
@@ -242,6 +268,13 @@ impl Engine {
             0.2,
             |_| kernel.execute_with(&b, &mut c, &sched),
         );
+        // every execution overwrites C in full, so after a successful
+        // benchmark it holds exactly A·B — clone it for seeded callers
+        // before the storage returns to the pool
+        let output = match (&r, seed) {
+            (Ok(_), Some(_)) => Some(c.data.clone()),
+            _ => None,
+        };
         self.buffers.release(b);
         self.buffers.release(c);
         let r = r?;
@@ -263,7 +296,7 @@ impl Engine {
             measured_gflops: measured,
         };
         self.history.push(record.clone());
-        Ok(record)
+        Ok((record, output))
     }
 
     /// Execute an SpGEMM job — the `Workload::SpGemm` arm of the
@@ -279,6 +312,23 @@ impl Engine {
     /// different matrix than `P·(A·B)`), which is why SpGEMM tuning
     /// never enumerates reorderings.
     pub fn submit_spgemm(&mut self, spec: &SpGemmSpec) -> Result<SpGemmRecord> {
+        self.submit_spgemm_inner(spec, false).map(|(rec, _)| rec)
+    }
+
+    /// [`Engine::submit_spgemm`] returning the product `C = A·B`
+    /// alongside the record. SpGEMM has no random operand, so unlike
+    /// [`Engine::submit_collect`] no seed is involved — the product is
+    /// a pure function of the two registered matrices and the kernel.
+    pub fn submit_spgemm_collect(&mut self, spec: &SpGemmSpec) -> Result<(SpGemmRecord, Csr)> {
+        let (rec, out) = self.submit_spgemm_inner(spec, true)?;
+        Ok((rec, out.expect("capture requested")))
+    }
+
+    fn submit_spgemm_inner(
+        &mut self,
+        spec: &SpGemmSpec,
+        capture: bool,
+    ) -> Result<(SpGemmRecord, Option<Csr>)> {
         // adaptive routing first: tuning lazily builds kernels through
         // a mutable registry borrow, so it must precede the entry reads
         let routed: Option<SpGemmDecision> =
@@ -328,7 +378,12 @@ impl Engine {
         // loop and yields nnz(C) for the measured compression factor
         let c = kernel.execute_with(bcsr, &sched)?;
         let nnz_c = c.nnz();
-        drop(c);
+        let captured = if capture {
+            Some(c)
+        } else {
+            drop(c);
+            None
+        };
         // the timed region includes output allocation — SpGEMM's
         // output is data-dependent, so allocation is part of the work
         let r = bench_adaptive_checked(
@@ -355,7 +410,7 @@ impl Engine {
             measured_gflops: measured,
         };
         self.spgemm_history.push(record.clone());
-        Ok(record)
+        Ok((record, captured))
     }
 
     /// Dispatch on the [`Workload`] dimension: `SpMM` jobs go through
@@ -424,6 +479,131 @@ impl Engine {
             smisses - smisses0,
         )
         .with_routing(routes, self.tuner.measurements() - explore0))
+    }
+
+    /// [`Engine::submit_batch`] over seeded jobs, returning each job's
+    /// product alongside the aggregate report — what the serve layer's
+    /// batch coalescing runs, so a coalesced group keeps per-job
+    /// outputs to hand back through the tickets.
+    pub fn submit_batch_collect(
+        &mut self,
+        jobs: &[(JobSpec, u64)],
+    ) -> Result<(BatchReport, Vec<Vec<f64>>)> {
+        let t = Timer::start();
+        let (hits0, misses0) = (self.buffers.hits, self.buffers.misses);
+        let (shits0, smisses0) = self.registry.schedule_cache_stats();
+        let explore0 = self.tuner.measurements();
+        let mut records = Vec::with_capacity(jobs.len());
+        let mut outputs = Vec::with_capacity(jobs.len());
+        for (job, seed) in jobs {
+            let (rec, out) = self.submit_collect(job, *seed)?;
+            records.push(rec);
+            outputs.push(out);
+        }
+        let (shits, smisses) = self.registry.schedule_cache_stats();
+        let mut routes: Vec<RouteDecision> = Vec::new();
+        for (job, _) in jobs.iter().filter(|(j, _)| j.force_impl.is_none()) {
+            if let Some(dec) = self.tuner.decision(&job.matrix, job.d) {
+                if !routes.iter().any(|r| r.matrix == dec.matrix && r.d == dec.d) {
+                    routes.push(dec.clone());
+                }
+            }
+        }
+        let rep = BatchReport::of(
+            records,
+            t.elapsed_secs(),
+            self.buffers.hits - hits0,
+            self.buffers.misses - misses0,
+            shits - shits0,
+            smisses - smisses0,
+        )
+        .with_routing(routes, self.tuner.measurements() - explore0);
+        Ok((rep, outputs))
+    }
+
+    /// Register a matrix inside a tenant's namespace (the serve
+    /// layer's multi-tenant entry point) — equivalent to
+    /// [`Engine::register`] under the scoped key
+    /// [`MatrixRegistry::scoped`]`(tenant, name)`.
+    pub fn register_for(&mut self, tenant: &str, name: &str, csr: Csr) -> Result<()> {
+        self.register(&MatrixRegistry::scoped(tenant, name), csr)
+    }
+
+    /// Install a caller-built kernel for a registered matrix — the
+    /// fault-injection / instrumentation seam
+    /// ([`MatrixRegistry::install_kernel`]).
+    pub fn install_kernel(
+        &mut self,
+        name: &str,
+        im: Impl,
+        k: Box<dyn crate::spmm::Spmm>,
+    ) -> Result<()> {
+        self.registry.install_kernel(name, im, k)
+    }
+
+    /// Snapshot everything the router learned: pinned SpMM/SpGEMM
+    /// decisions and the planner's materialised priors.
+    pub fn export_state(&self) -> AutotuneState {
+        AutotuneState {
+            routes: self.tuner.decisions().into_iter().cloned().collect(),
+            spgemm: self.tuner.spgemm_decisions().into_iter().cloned().collect(),
+            spmm_priors: self.planner.priors_snapshot(),
+            spgemm_priors: self.planner.spgemm_priors_snapshot(),
+        }
+    }
+
+    /// Re-adopt a snapshot: priors are restored wholesale; each pinned
+    /// decision is adopted when its matrices are registered (its
+    /// reordering is re-applied so the stored layout matches what the
+    /// decision measured), and silently skipped otherwise — a snapshot
+    /// may mention matrices this process never registered. Call
+    /// **after** registering (registration forgets a name's
+    /// decisions). Returns how many decisions were adopted; adopted
+    /// decisions serve with zero new exploration measurements.
+    pub fn restore_state(&mut self, state: &AutotuneState) -> usize {
+        for &(c, i, v) in &state.spmm_priors {
+            self.planner.set_prior(c, i, v);
+        }
+        for &(c, i, v) in &state.spgemm_priors {
+            self.planner.set_spgemm_prior(c, i, v);
+        }
+        let mut adopted = 0;
+        for dec in &state.routes {
+            if self.registry.get(&dec.matrix).is_none() {
+                continue;
+            }
+            if self.registry.apply_reordering(&dec.matrix, dec.reorder).is_err() {
+                continue;
+            }
+            self.tuner.adopt(dec.clone());
+            adopted += 1;
+        }
+        for dec in &state.spgemm {
+            if self.registry.get(&dec.a).is_none() || self.registry.get(&dec.b).is_none() {
+                continue;
+            }
+            self.tuner.adopt_spgemm(dec.clone());
+            adopted += 1;
+        }
+        adopted
+    }
+
+    /// Persist the current autotune state atomically
+    /// ([`AutotuneState::save`]).
+    pub fn save_state(&self, path: &str) -> Result<()> {
+        self.export_state().save(path)
+    }
+
+    /// Load and adopt a persisted snapshot; `false` is a cold start
+    /// (missing or — with a warning — corrupted file).
+    pub fn load_state(&mut self, path: &str) -> bool {
+        match AutotuneState::load_or_cold(path) {
+            Some(state) => {
+                self.restore_state(&state);
+                true
+            }
+            None => false,
+        }
     }
 
     /// The engine's dense-operand buffer pool (reuse statistics).
@@ -725,5 +905,132 @@ mod tests {
         }
         let after = e.planner().prior(cls.class, Impl::Csr);
         assert_ne!(before, after);
+    }
+
+    #[test]
+    fn seeded_submissions_are_order_independent() {
+        let a = erdos_renyi(200, 200, 4.0, &mut Prng::new(195));
+        // engine 1: seeds 7 then 8; engine 2: interleaves other work
+        // before replaying seed 8 then 7 — outputs must match bitwise
+        // impl is forced so only the seeding is under test (routing
+        // drift across submissions may legitimately pick another impl)
+        let job = JobSpec::new("m", 8).with_impl(Impl::Csr);
+        let mut e1 = test_engine();
+        e1.register("m", a.clone()).unwrap();
+        let (_, out7) = e1.submit_collect(&job, 7).unwrap();
+        let (_, out8) = e1.submit_collect(&job, 8).unwrap();
+        assert_ne!(out7, out8, "different seeds must draw different B");
+
+        let mut e2 = test_engine();
+        e2.register("m", a).unwrap();
+        e2.submit(&JobSpec::new("m", 4)).unwrap(); // perturb the shared rng + pool
+        let (_, out8b) = e2.submit_collect(&job, 8).unwrap();
+        let (_, out7b) = e2.submit_collect(&job, 7).unwrap();
+        assert_eq!(out7, out7b, "seed 7 output must not depend on submission order");
+        assert_eq!(out8, out8b);
+    }
+
+    #[test]
+    fn batch_collect_returns_per_job_outputs() {
+        let mut e = test_engine();
+        let a = erdos_renyi(150, 150, 4.0, &mut Prng::new(196));
+        e.register("m", a).unwrap();
+        let jobs: Vec<(JobSpec, u64)> = (0..3)
+            .map(|i| (JobSpec::new("m", 8).with_impl(Impl::Csr), 100 + i as u64))
+            .collect();
+        let (rep, outs) = e.submit_batch_collect(&jobs).unwrap();
+        assert_eq!(rep.n_jobs(), 3);
+        assert_eq!(outs.len(), 3);
+        assert!(outs.iter().all(|o| o.len() == 150 * 8));
+        // identical (matrix, d, seed) → identical output via submit_collect
+        let (_, single) = e.submit_collect(&jobs[0].0, 100).unwrap();
+        assert_eq!(single, outs[0]);
+    }
+
+    #[test]
+    fn spgemm_collect_matches_plain_submission() {
+        let mut e = test_engine();
+        let a = erdos_renyi(120, 120, 3.0, &mut Prng::new(197));
+        e.register("m", a).unwrap();
+        // forced kernel: the repeat must reproduce bitwise, which only
+        // holds kernel-for-kernel (routing may drift between runs)
+        let spec = SpGemmSpec::new("m", "m").with_impl(SpGemmImpl::Hash);
+        let (rec, c) = e.submit_spgemm_collect(&spec).unwrap();
+        assert_eq!(c.nnz(), rec.nnz_c);
+        assert_eq!(c.nrows, 120);
+        let (_, c2) = e.submit_spgemm_collect(&spec).unwrap();
+        crate::testutil::assert_csr_eq(&c, &c2, 0.0);
+    }
+
+    #[test]
+    fn register_for_scopes_by_tenant() {
+        let mut e = test_engine();
+        let a = erdos_renyi(100, 100, 3.0, &mut Prng::new(198));
+        e.register_for("acme", "m", a.clone()).unwrap();
+        e.register_for("", "m", a).unwrap();
+        assert!(e.registry().get("acme/m").is_some());
+        assert!(e.registry().get("m").is_some());
+        let rec = e.submit(&JobSpec::new("acme/m", 4)).unwrap();
+        assert_eq!(rec.matrix, "acme/m");
+    }
+
+    #[test]
+    fn state_round_trip_restores_decisions_without_exploring() {
+        let a = erdos_renyi(300, 300, 5.0, &mut Prng::new(199));
+        let b = erdos_renyi(300, 300, 4.0, &mut Prng::new(200));
+        let mut e1 = test_engine_with(quick_autotune());
+        e1.register("m", a.clone()).unwrap();
+        e1.register("n", b.clone()).unwrap();
+        e1.submit(&JobSpec::new("m", 8)).unwrap();
+        e1.submit_spgemm(&SpGemmSpec::new("m", "n")).unwrap();
+        let state = e1.export_state();
+        assert_eq!(state.routes.len(), 1);
+        assert_eq!(state.spgemm.len(), 1);
+        assert!(!state.spmm_priors.is_empty());
+        let dec = state.routes[0].clone();
+
+        // a restarted engine adopts the snapshot and explores nothing
+        let mut e2 = test_engine_with(quick_autotune());
+        e2.register("m", a).unwrap();
+        e2.register("n", b).unwrap();
+        assert_eq!(e2.restore_state(&state), 2);
+        assert_eq!(e2.registry().get("m").unwrap().reordering(), dec.reorder);
+        let jobs = vec![JobSpec::new("m", 8), JobSpec::new("m", 8)];
+        let rep = e2.submit_batch(&jobs).unwrap();
+        assert_eq!(rep.explore_measurements, 0, "restored decisions must not re-explore");
+        assert!(rep.records.iter().all(|r| r.chosen == dec.im));
+        assert_eq!(e2.autotuner().measurements(), 0);
+        let n0 = e2.autotuner().measurements();
+        e2.submit_spgemm(&SpGemmSpec::new("m", "n")).unwrap();
+        assert_eq!(e2.autotuner().measurements(), n0, "spgemm pin restored too");
+
+        // decisions for unregistered matrices are skipped, not errors
+        let mut e3 = test_engine_with(quick_autotune());
+        assert_eq!(e3.restore_state(&state), 0);
+    }
+
+    #[test]
+    fn save_and_load_state_via_disk() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("engine_state_{}.json", std::process::id()));
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+
+        let a = erdos_renyi(250, 250, 4.0, &mut Prng::new(201));
+        let mut e1 = test_engine_with(quick_autotune());
+        e1.register("m", a.clone()).unwrap();
+        e1.submit(&JobSpec::new("m", 8)).unwrap();
+        e1.save_state(path).unwrap();
+
+        let mut e2 = test_engine_with(quick_autotune());
+        e2.register("m", a).unwrap();
+        assert!(e2.load_state(path), "healthy snapshot must load");
+        let rep = e2.submit_batch(&[JobSpec::new("m", 8)]).unwrap();
+        assert_eq!(rep.explore_measurements, 0);
+
+        // missing → cold start, no panic
+        let _ = std::fs::remove_file(path);
+        let mut e3 = test_engine_with(quick_autotune());
+        assert!(!e3.load_state(path));
     }
 }

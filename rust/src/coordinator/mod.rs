@@ -54,6 +54,15 @@
 //! [`Engine::submit`]/[`Engine::submit_batch`] perform *route* and
 //! drive *execute* on the kernels ([`crate::spmm`]), then feed the
 //! measurement back into the priors.
+//!
+//! On top of the engine sits the **serving front-end** ([`Server`]):
+//! a bounded job queue with explicit admission control, concurrent
+//! batch coalescing (queued SpMM jobs sharing a matrix merge into one
+//! pooled-buffer engine batch), per-tenant matrix namespaces, and
+//! autotune state persisted across restarts
+//! ([`crate::report::AutotuneState`]). [`Server::run`] is the serving
+//! loop; client threads talk to it through cloneable [`ServeHandle`]s
+//! and block on per-job [`Ticket`]s.
 
 mod autotune;
 mod batch;
@@ -61,6 +70,7 @@ mod engine;
 mod job;
 mod planner;
 mod registry;
+mod serve;
 
 pub use autotune::{
     Autotuner, AutotunePolicy, Candidate, RouteDecision, SpGemmCandidate, SpGemmDecision,
@@ -70,3 +80,7 @@ pub use engine::{Engine, EngineConfig, WorkloadOutcome};
 pub use job::{JobRecord, JobSpec, PredictionReport, SpGemmRecord, SpGemmSpec, Workload};
 pub use planner::{Planner, Prediction, SpGemmPrediction};
 pub use registry::{MatrixEntry, MatrixRegistry};
+pub use serve::{
+    JobQueue, Server, ServeConfig, ServeHandle, ServeOutput, ServeReply, ServeRequest, ServeStats,
+    ServeWork, Submit, Ticket,
+};

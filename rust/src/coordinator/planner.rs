@@ -354,6 +354,30 @@ impl Planner {
         v
     }
 
+    /// Snapshot of every materialised SpGEMM prior, same sorting as
+    /// [`Planner::priors_snapshot`] — what the autotune snapshot
+    /// persists.
+    pub fn spgemm_priors_snapshot(&self) -> Vec<(SparsityClass, SpGemmImpl, f64)> {
+        let priors = self.spgemm_priors.lock().unwrap();
+        let mut v: Vec<(SparsityClass, SpGemmImpl, f64)> =
+            priors.iter().map(|(&(c, i), &p)| (c, i, p)).collect();
+        v.sort_by_key(|(c, i, _)| (format!("{c}"), format!("{i}")));
+        v
+    }
+
+    /// Overwrite one `(class, impl)` prior — restoring a persisted
+    /// snapshot. Clamped to the same `[0, 2]` band `observe` enforces,
+    /// so a hand-edited snapshot cannot plant an unbounded prior.
+    pub fn set_prior(&self, class: SparsityClass, im: Impl, value: f64) {
+        self.priors.lock().unwrap().insert((class, im), value.clamp(0.0, 2.0));
+    }
+
+    /// Overwrite one SpGEMM prior (snapshot restore; clamped like
+    /// [`Planner::set_prior`]).
+    pub fn set_spgemm_prior(&self, class: SparsityClass, im: SpGemmImpl, value: f64) {
+        self.spgemm_priors.lock().unwrap().insert((class, im), value.clamp(0.0, 2.0));
+    }
+
     /// The untiled model AI the planner would use for a classified
     /// matrix at width `d` (exposed for reports).
     pub fn model_ai(&self, cls: &Classification, d: usize) -> f64 {

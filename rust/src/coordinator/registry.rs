@@ -9,6 +9,18 @@
 //! cached per `(matrix, impl, threads, d, dt)`, so repeated and
 //! batched submissions pay planning cost once; hit/miss counters make
 //! the reuse observable in batch reports.
+//!
+//! # Tenancy
+//!
+//! Registry keys are **tenant-scoped**: `"acme/web"` lives in tenant
+//! `acme`'s namespace, a bare `"web"` in the default (empty) tenant —
+//! [`MatrixRegistry::scoped`] builds such keys. Every method keeps
+//! taking full keys, so single-tenant callers (the CLI, the benches,
+//! the whole pre-serve test suite) are unchanged. Internally each
+//! tenant gets its own shard — entries *and* schedule cache — so one
+//! tenant's reorder (which invalidates its schedules under the shard's
+//! lock) cannot stall another tenant's schedule lookups, and names
+//! can never collide across tenants.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -122,31 +134,72 @@ impl MatrixEntry {
     }
 }
 
-/// Registry of prepared matrices.
-pub struct MatrixRegistry {
+/// One tenant's slice of the registry: its entries plus its own
+/// schedule cache (and the cache's lock), so reorders and schedule
+/// lookups in different tenants never contend.
+#[derive(Default)]
+struct TenantShard {
     entries: HashMap<String, MatrixEntry>,
-    threads: usize,
     /// Execution schedules keyed by `(matrix, impl, threads, d, dt)`
     /// (`dt` normalised: untiled stores `d`). Interior-mutable so
     /// lookups work through `&self` while kernels are borrowed.
     schedules: Mutex<HashMap<(String, Impl, usize, usize, usize), Arc<Schedule>>>,
+}
+
+/// Registry of prepared matrices, sharded by tenant (see the module
+/// docs for the key scheme).
+pub struct MatrixRegistry {
+    shards: HashMap<String, TenantShard>,
+    threads: usize,
     sched_hits: AtomicUsize,
     sched_misses: AtomicUsize,
+}
+
+/// The tenant part of a scoped key (`""` for unscoped names).
+fn tenant_of(name: &str) -> &str {
+    name.split_once('/').map(|(t, _)| t).unwrap_or("")
 }
 
 impl MatrixRegistry {
     pub fn new(threads: usize) -> MatrixRegistry {
         MatrixRegistry {
-            entries: HashMap::new(),
+            shards: HashMap::new(),
             threads: threads.max(1),
-            schedules: Mutex::new(HashMap::new()),
             sched_hits: AtomicUsize::new(0),
             sched_misses: AtomicUsize::new(0),
         }
     }
 
+    /// Build a tenant-scoped registry key: `scoped("acme", "web")` is
+    /// `"acme/web"`; the empty tenant keeps the bare name.
+    pub fn scoped(tenant: &str, name: &str) -> String {
+        if tenant.is_empty() {
+            name.to_string()
+        } else {
+            format!("{tenant}/{name}")
+        }
+    }
+
+    fn shard(&self, name: &str) -> Option<&TenantShard> {
+        self.shards.get(tenant_of(name))
+    }
+
+    fn shard_mut(&mut self, name: &str) -> Option<&mut TenantShard> {
+        self.shards.get_mut(tenant_of(name))
+    }
+
+    fn entry(&self, name: &str) -> Option<&MatrixEntry> {
+        self.shard(name)?.entries.get(name)
+    }
+
+    fn entry_mut(&mut self, name: &str) -> Result<&mut MatrixEntry> {
+        self.shard_mut(name)
+            .and_then(|s| s.entries.get_mut(name))
+            .ok_or_else(|| Error::Usage(format!("matrix '{name}' not registered")))
+    }
+
     /// Register a matrix: classify it and prepare the requested native
-    /// kernels.
+    /// kernels. The name may be tenant-scoped ([`MatrixRegistry::scoped`]).
     pub fn register(&mut self, name: impl Into<String>, csr: Csr, impls: &[Impl]) -> Result<()> {
         let name = name.into();
         let classification = classify(&csr);
@@ -155,9 +208,11 @@ impl MatrixRegistry {
         for &im in &native {
             kernels.insert((im, 0), build_native(im, &csr, self.threads)?);
         }
+        let threads = self.threads;
+        let shard = self.shards.entry(tenant_of(&name).to_string()).or_default();
         // re-registering a name invalidates its cached schedules
-        self.schedules.lock().unwrap().retain(|k, _| k.0 != name);
-        self.entries.insert(
+        shard.schedules.lock().unwrap().retain(|k, _| k.0 != name);
+        shard.entries.insert(
             name.clone(),
             MatrixEntry {
                 name,
@@ -169,7 +224,7 @@ impl MatrixRegistry {
                 reorder: Reordering::None,
                 perm: None,
                 impls: native,
-                threads: self.threads,
+                threads,
             },
         );
         Ok(())
@@ -190,10 +245,7 @@ impl MatrixRegistry {
     /// reordering was already active (nothing rebuilt).
     pub fn apply_reordering(&mut self, name: &str, r: Reordering) -> Result<bool> {
         let threads = self.threads;
-        let entry = self
-            .entries
-            .get_mut(name)
-            .ok_or_else(|| Error::Usage(format!("matrix '{name}' not registered")))?;
+        let entry = self.entry_mut(name)?;
         if entry.reorder == r {
             return Ok(false);
         }
@@ -223,7 +275,10 @@ impl MatrixRegistry {
         entry.reorder = r;
         entry.perm = perm;
         // cached schedules partition the old ordering — drop them
-        self.schedules.lock().unwrap().retain(|k, _| k.0 != name);
+        // (only this tenant's shard locks; other tenants keep serving)
+        if let Some(shard) = self.shard(name) {
+            shard.schedules.lock().unwrap().retain(|k, _| k.0 != name);
+        }
         Ok(true)
     }
 
@@ -240,11 +295,12 @@ impl MatrixRegistry {
     /// second tile width evicted the first and alternating requests
     /// replanned every time.
     pub fn schedule(&self, name: &str, im: Impl, d: usize, dt: usize) -> Option<Arc<Schedule>> {
-        let entry = self.entries.get(name)?;
+        let shard = self.shard(name)?;
+        let entry = shard.entries.get(name)?;
         let kernel = entry.kernel(im, d)?;
         let tile = if dt >= d { None } else { Some(dt) };
         let key = (name.to_string(), im, self.threads, d, tile.unwrap_or(d));
-        let mut map = self.schedules.lock().unwrap();
+        let mut map = shard.schedules.lock().unwrap();
         if let Some(s) = map.get(&key) {
             self.sched_hits.fetch_add(1, Ordering::Relaxed);
             return Some(s.clone());
@@ -279,10 +335,7 @@ impl MatrixRegistry {
         rt: &XlaRuntime,
         manifest: &ArtifactManifest,
     ) -> Result<usize> {
-        let entry = self
-            .entries
-            .get_mut(name)
-            .ok_or_else(|| Error::Usage(format!("matrix '{name}' not registered")))?;
+        let entry = self.entry_mut(name)?;
         let mut staged = 0;
         let width = entry.csr.max_row_len();
         for spec in manifest.of_kind(crate::runtime::ArtifactKind::EllSpmm) {
@@ -301,12 +354,10 @@ impl MatrixRegistry {
     /// — lives in one place.
     pub fn spgemm_pair(&self, a: &str, b: &str) -> Result<(&MatrixEntry, &MatrixEntry)> {
         let entry_a = self
-            .entries
-            .get(a)
+            .entry(a)
             .ok_or_else(|| Error::Usage(format!("matrix '{a}' not registered")))?;
         let entry_b = self
-            .entries
-            .get(b)
+            .entry(b)
             .ok_or_else(|| Error::Usage(format!("matrix '{b}' not registered")))?;
         let (acsr, bcsr) = (entry_a.csr(), entry_b.csr());
         if bcsr.nrows != acsr.ncols {
@@ -322,10 +373,7 @@ impl MatrixRegistry {
     /// is prepared, building it lazily on first use. Idempotent.
     pub fn ensure_spgemm(&mut self, name: &str, im: SpGemmImpl) -> Result<()> {
         let threads = self.threads;
-        let entry = self
-            .entries
-            .get_mut(name)
-            .ok_or_else(|| Error::Usage(format!("matrix '{name}' not registered")))?;
+        let entry = self.entry_mut(name)?;
         if !entry.spgemm_kernels.contains_key(&im) {
             let k = build_spgemm(im, &entry.csr, threads);
             entry.spgemm_kernels.insert(im, k);
@@ -335,10 +383,7 @@ impl MatrixRegistry {
 
     /// Prepare one extra native kernel after registration.
     pub fn add_native(&mut self, name: &str, im: Impl) -> Result<()> {
-        let entry = self
-            .entries
-            .get_mut(name)
-            .ok_or_else(|| Error::Usage(format!("matrix '{name}' not registered")))?;
+        let entry = self.entry_mut(name)?;
         let k = build_native(im, &entry.csr, entry.threads)?;
         entry.kernels.insert((im, 0), k);
         // conversions rebuild from `impls` — keep it in sync
@@ -348,14 +393,63 @@ impl MatrixRegistry {
         Ok(())
     }
 
-    /// Lookup.
-    pub fn get(&self, name: &str) -> Option<&MatrixEntry> {
-        self.entries.get(name)
+    /// Install a caller-built SpMM kernel under `im` for `name` —
+    /// the instrumentation / fault-injection seam the serve tests use
+    /// to plant panicking kernels. The kernel's shape must match the
+    /// entry's active matrix. Its schedules are invalidated (the old
+    /// kernel planned them); a later [`MatrixRegistry::apply_reordering`]
+    /// rebuilds natively and drops the installed kernel.
+    pub fn install_kernel(&mut self, name: &str, im: Impl, k: Box<dyn Spmm>) -> Result<()> {
+        let entry = self.entry_mut(name)?;
+        if k.nrows() != entry.csr.nrows || k.ncols() != entry.csr.ncols {
+            return Err(Error::DimensionMismatch(format!(
+                "installed kernel is {}x{} but '{name}' is {}x{}",
+                k.nrows(),
+                k.ncols(),
+                entry.csr.nrows,
+                entry.csr.ncols
+            )));
+        }
+        entry.kernels.insert((im, 0), k);
+        if let Some(shard) = self.shard(name) {
+            shard.schedules.lock().unwrap().retain(|key, _| key.0 != name);
+        }
+        Ok(())
     }
 
-    /// Registered names (sorted).
+    /// Lookup (full tenant-scoped key).
+    pub fn get(&self, name: &str) -> Option<&MatrixEntry> {
+        self.entry(name)
+    }
+
+    /// Registered names across all tenants (sorted full keys).
     pub fn names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        let mut v: Vec<&str> =
+            self.shards.values().flat_map(|s| s.entries.keys().map(|k| k.as_str())).collect();
+        v.sort();
+        v
+    }
+
+    /// Tenants with at least one registered matrix (sorted; the
+    /// default tenant appears as `""`).
+    pub fn tenants(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .shards
+            .iter()
+            .filter(|(_, s)| !s.entries.is_empty())
+            .map(|(t, _)| t.as_str())
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Registered names (sorted full keys) inside one tenant.
+    pub fn names_in(&self, tenant: &str) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .shards
+            .get(tenant)
+            .map(|s| s.entries.keys().map(|k| k.as_str()).collect())
+            .unwrap_or_default();
         v.sort();
         v
     }
@@ -502,5 +596,87 @@ mod tests {
         reg.add_native("m", Impl::Opt).unwrap();
         assert!(reg.get("m").unwrap().kernel(Impl::Opt, 8).is_some());
         assert!(reg.add_native("missing", Impl::Opt).is_err());
+    }
+
+    #[test]
+    fn scoped_keys_and_tenant_listing() {
+        assert_eq!(MatrixRegistry::scoped("acme", "web"), "acme/web");
+        assert_eq!(MatrixRegistry::scoped("", "web"), "web");
+        let mut reg = MatrixRegistry::new(2);
+        let mut rng = Prng::new(177);
+        reg.register("web", erdos_renyi(60, 60, 3.0, &mut rng), &[Impl::Csr]).unwrap();
+        reg.register("acme/web", erdos_renyi(80, 80, 3.0, &mut rng), &[Impl::Csr]).unwrap();
+        reg.register("beta/road", erdos_renyi(50, 50, 3.0, &mut rng), &[Impl::Csr]).unwrap();
+        // same local name, different tenants, no collision
+        assert_eq!(reg.get("web").unwrap().n(), 60);
+        assert_eq!(reg.get("acme/web").unwrap().n(), 80);
+        assert_eq!(reg.names(), vec!["acme/web", "beta/road", "web"]);
+        assert_eq!(reg.tenants(), vec!["", "acme", "beta"]);
+        assert_eq!(reg.names_in("acme"), vec!["acme/web"]);
+        assert_eq!(reg.names_in(""), vec!["web"]);
+        assert!(reg.names_in("ghost").is_empty());
+    }
+
+    #[test]
+    fn tenant_reorder_does_not_invalidate_other_tenants_schedules() {
+        let mut reg = MatrixRegistry::new(2);
+        let mut rng = Prng::new(178);
+        reg.register("acme/m", erdos_renyi(120, 120, 4.0, &mut rng), &[Impl::Csr]).unwrap();
+        reg.register("beta/m", erdos_renyi(120, 120, 4.0, &mut rng), &[Impl::Csr]).unwrap();
+        let s_beta = reg.schedule("beta/m", Impl::Csr, 8, 8).unwrap();
+        reg.schedule("acme/m", Impl::Csr, 8, 8).unwrap();
+        assert_eq!(reg.schedule_cache_stats(), (0, 2));
+        // acme's reorder only empties acme's shard cache
+        assert!(reg.apply_reordering("acme/m", Reordering::DegreeSort).unwrap());
+        let s_beta2 = reg.schedule("beta/m", Impl::Csr, 8, 8).unwrap();
+        assert!(Arc::ptr_eq(&s_beta, &s_beta2), "beta's schedule must survive acme's reorder");
+        reg.schedule("acme/m", Impl::Csr, 8, 8).unwrap();
+        assert_eq!(reg.schedule_cache_stats(), (1, 3));
+    }
+
+    #[test]
+    fn install_kernel_replaces_and_validates_shape() {
+        struct Fake {
+            n: usize,
+        }
+        impl crate::spmm::Spmm for Fake {
+            fn id(&self) -> Impl {
+                Impl::Csb
+            }
+            fn nrows(&self) -> usize {
+                self.n
+            }
+            fn ncols(&self) -> usize {
+                self.n
+            }
+            fn nnz(&self) -> usize {
+                0
+            }
+            fn execute(
+                &self,
+                _b: &crate::spmm::DenseMatrix,
+                c: &mut crate::spmm::DenseMatrix,
+            ) -> crate::error::Result<()> {
+                c.data.fill(42.0);
+                Ok(())
+            }
+        }
+        let mut reg = MatrixRegistry::new(1);
+        let a = erdos_renyi(30, 30, 2.0, &mut Prng::new(179));
+        reg.register("m", a, &[Impl::Csr]).unwrap();
+        reg.schedule("m", Impl::Csr, 4, 4).unwrap();
+        // wrong shape rejected
+        assert!(reg.install_kernel("m", Impl::Csb, Box::new(Fake { n: 31 })).is_err());
+        assert!(reg.install_kernel("ghost", Impl::Csb, Box::new(Fake { n: 30 })).is_err());
+        // install under a previously-unprepared impl
+        reg.install_kernel("m", Impl::Csb, Box::new(Fake { n: 30 })).unwrap();
+        let e = reg.get("m").unwrap();
+        // the installed fake (nnz 0) serves lookups, not a real CSB build
+        assert_eq!(e.kernel(Impl::Csb, 4).unwrap().nnz(), 0);
+        assert!(e.available(4).contains(&Impl::Csb));
+        // installing invalidated the name's schedules: next lookup replans
+        let (_, misses_before) = reg.schedule_cache_stats();
+        reg.schedule("m", Impl::Csr, 4, 4).unwrap();
+        assert_eq!(reg.schedule_cache_stats().1, misses_before + 1);
     }
 }

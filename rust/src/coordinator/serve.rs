@@ -1,0 +1,785 @@
+//! The concurrent serving front-end: a bounded MPMC job queue over
+//! the engine, with admission control, batch coalescing, per-tenant
+//! namespaces, and persisted autotune state.
+//!
+//! The paper's models pick the *plan*; this layer makes the intake
+//! worthy of the north-star serving scenario. Client threads submit
+//! [`ServeRequest`]s through a cloneable [`ServeHandle`]; each
+//! accepted request yields a [`Ticket`] the client blocks on. A
+//! single serving loop ([`Server::run`]) drains the queue in slices
+//! and, when coalescing is on, merges queued SpMM jobs that share a
+//! matrix into one [`Engine::submit_batch_collect`] call — the pooled
+//! dense buffers and the cached execution schedule stay warm across
+//! the whole group, which is exactly the engine's batch fast path.
+//!
+//! Design decisions, each pinned by a test:
+//!
+//! * **Bounded queue, explicit backpressure.** The ring has fixed
+//!   capacity; a full queue answers [`Submit::Rejected`] with the
+//!   observed depth instead of blocking the producer
+//!   (`tests/integration_serve.rs`). `std`-only: one `Mutex` around
+//!   the ring + a `Condvar` for the consumer — no external crates,
+//!   matching the offline build.
+//! * **Determinism under concurrency.** Every SpMM request carries
+//!   its own operand seed, so results are a pure function of
+//!   `(matrix, d, impl, seed)` no matter how client threads
+//!   interleave or how jobs coalesce. `tests/prop_serve.rs` replays
+//!   every served mix sequentially and demands bitwise equality.
+//! * **Panic containment.** Kernel panics are caught at this layer
+//!   ([`Error::Panic`]); a panicking job inside a coalesced group
+//!   fails alone — the group falls back to per-job isolation — and
+//!   the engine keeps serving (extends the worker pool's
+//!   panic-reaping guarantee up through the front-end).
+//! * **Tenant isolation.** Requests name a tenant; the server scopes
+//!   matrix names with [`MatrixRegistry::scoped`], so tenants cannot
+//!   observe (or collide with) each other's matrices, and the
+//!   registry's per-tenant shards keep one tenant's reorder from
+//!   stalling another's lookups.
+//! * **Restart-cheap.** With a `state_path` configured the server
+//!   loads the persisted [`crate::report::AutotuneState`] at
+//!   construction (after the caller registered its matrices) and
+//!   saves on shutdown — a restarted server pins the same decisions
+//!   with zero new exploration measurements.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::engine::{Engine, WorkloadOutcome};
+use crate::coordinator::job::{JobSpec, SpGemmSpec};
+use crate::coordinator::registry::MatrixRegistry;
+use crate::error::{Error, Result};
+use crate::metrics::Timer;
+use crate::sparse::Csr;
+
+/// Serving-loop options.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Ring capacity; a submission finding the ring full is rejected.
+    pub queue_capacity: usize,
+    /// Most jobs drained per serving cycle (bounds coalesced-batch
+    /// size and keeps admission latency bounded under load).
+    pub max_drain: usize,
+    /// Merge queued SpMM jobs sharing a matrix into one engine batch.
+    pub coalesce: bool,
+    /// Load the autotune snapshot from here at construction and save
+    /// it back on shutdown (`None` = in-memory only).
+    pub state_path: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { queue_capacity: 64, max_drain: 32, coalesce: true, state_path: None }
+    }
+}
+
+/// The work inside a request. SpMM carries the seed its dense operand
+/// is drawn from ([`Engine::submit_collect`]); SpGEMM's operands are
+/// both registered matrices, so it needs none.
+#[derive(Debug, Clone)]
+pub enum ServeWork {
+    /// Dense-operand multiply (`C = A·B`, `B` seeded).
+    SpMM {
+        /// The job, with matrix named *tenant-locally*.
+        spec: JobSpec,
+        /// Seed for the dense operand.
+        seed: u64,
+    },
+    /// Sparse-sparse multiply (`C = A·B`, both registered).
+    SpGemm {
+        /// The pair, named tenant-locally.
+        spec: SpGemmSpec,
+    },
+}
+
+/// One queued unit of work. Matrix names inside are tenant-local; the
+/// server scopes them ([`MatrixRegistry::scoped`]) before touching the
+/// engine.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Namespace the request's matrix names live in (`""` = default).
+    pub tenant: String,
+    /// Caller-chosen correlation id, echoed in the reply.
+    pub tag: u64,
+    /// The work itself.
+    pub work: ServeWork,
+}
+
+impl ServeRequest {
+    /// An SpMM request (tag 0 — see [`ServeRequest::with_tag`]).
+    pub fn spmm(tenant: impl Into<String>, spec: JobSpec, seed: u64) -> ServeRequest {
+        ServeRequest { tenant: tenant.into(), tag: 0, work: ServeWork::SpMM { spec, seed } }
+    }
+
+    /// An SpGEMM request.
+    pub fn spgemm(tenant: impl Into<String>, spec: SpGemmSpec) -> ServeRequest {
+        ServeRequest { tenant: tenant.into(), tag: 0, work: ServeWork::SpGemm { spec } }
+    }
+
+    /// Set the correlation tag.
+    pub fn with_tag(mut self, tag: u64) -> ServeRequest {
+        self.tag = tag;
+        self
+    }
+}
+
+/// A served product: dense row-major `C` for SpMM, CSR `C` for
+/// SpGEMM.
+#[derive(Debug, Clone)]
+pub enum ServeOutput {
+    /// Row-major `nrows × d` product.
+    Dense(Vec<f64>),
+    /// Sparse product.
+    Sparse(Csr),
+}
+
+impl ServeOutput {
+    /// The dense product, if this was an SpMM job.
+    pub fn dense(&self) -> Option<&[f64]> {
+        match self {
+            ServeOutput::Dense(v) => Some(v),
+            ServeOutput::Sparse(_) => None,
+        }
+    }
+
+    /// The sparse product, if this was an SpGEMM job.
+    pub fn sparse(&self) -> Option<&Csr> {
+        match self {
+            ServeOutput::Sparse(c) => Some(c),
+            ServeOutput::Dense(_) => None,
+        }
+    }
+}
+
+/// What a fulfilled ticket carries back to the client.
+#[derive(Debug, Clone)]
+pub struct ServeReply {
+    /// The request's correlation tag.
+    pub tag: u64,
+    /// The engine's measurement record for the job.
+    pub outcome: WorkloadOutcome,
+    /// The product itself.
+    pub output: ServeOutput,
+    /// Whether the job executed inside a coalesced batch.
+    pub coalesced: bool,
+}
+
+struct TicketInner {
+    slot: Mutex<Option<Result<ServeReply>>>,
+    ready: Condvar,
+}
+
+/// A claim on one submitted job's eventual result. Cloneable (the
+/// queue keeps one clone); the result itself is take-once — whichever
+/// caller `wait`s (or `try_take`s) first gets it.
+#[derive(Clone)]
+pub struct Ticket(Arc<TicketInner>);
+
+impl Ticket {
+    fn new() -> Ticket {
+        Ticket(Arc::new(TicketInner { slot: Mutex::new(None), ready: Condvar::new() }))
+    }
+
+    fn fulfill(&self, r: Result<ServeReply>) {
+        let mut slot = self.0.slot.lock().unwrap();
+        *slot = Some(r);
+        self.0.ready.notify_all();
+    }
+
+    /// Block until the job completes and take its result.
+    pub fn wait(&self) -> Result<ServeReply> {
+        let mut slot = self.0.slot.lock().unwrap();
+        loop {
+            match slot.take() {
+                Some(r) => return r,
+                None => slot = self.0.ready.wait(slot).unwrap(),
+            }
+        }
+    }
+
+    /// Non-blocking: the result if the job already completed (and
+    /// nobody took it yet).
+    pub fn try_take(&self) -> Option<Result<ServeReply>> {
+        self.0.slot.lock().unwrap().take()
+    }
+}
+
+/// Admission-control outcome: a ticket, or explicit backpressure.
+pub enum Submit {
+    /// Queued; wait on the ticket.
+    Accepted(Ticket),
+    /// Ring full — retry later (the producer is *not* blocked).
+    Rejected {
+        /// Queue depth observed at rejection (== capacity).
+        queue_depth: usize,
+    },
+}
+
+impl Submit {
+    /// True when the job was queued.
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, Submit::Accepted(_))
+    }
+
+    /// The ticket, if accepted.
+    pub fn ticket(self) -> Option<Ticket> {
+        match self {
+            Submit::Accepted(t) => Some(t),
+            Submit::Rejected { .. } => None,
+        }
+    }
+}
+
+struct QueuedJob {
+    req: ServeRequest,
+    ticket: Ticket,
+}
+
+/// Fixed-capacity ring of queued jobs. `slots` never grows — the
+/// bound is structural, not a checked counter.
+struct Ring {
+    slots: Vec<Option<QueuedJob>>,
+    head: usize,
+    len: usize,
+    closed: bool,
+}
+
+impl Ring {
+    fn push(&mut self, j: QueuedJob) -> bool {
+        if self.len == self.slots.len() {
+            return false;
+        }
+        let tail = (self.head + self.len) % self.slots.len();
+        self.slots[tail] = Some(j);
+        self.len += 1;
+        true
+    }
+
+    fn pop(&mut self) -> Option<QueuedJob> {
+        if self.len == 0 {
+            return None;
+        }
+        let j = self.slots[self.head].take();
+        self.head = (self.head + 1) % self.slots.len();
+        self.len -= 1;
+        j
+    }
+}
+
+/// The bounded MPMC job queue: `Mutex` + `Condvar` over a fixed ring,
+/// `std`-only. Producers ([`ServeHandle`]) never block — a full ring
+/// rejects; the consumer ([`Server::run`]) blocks on the condvar until
+/// jobs arrive or the queue closes.
+pub struct JobQueue {
+    ring: Mutex<Ring>,
+    not_empty: Condvar,
+    submitted: AtomicUsize,
+    rejected: AtomicUsize,
+    peak_depth: AtomicUsize,
+}
+
+impl JobQueue {
+    fn new(capacity: usize) -> JobQueue {
+        let capacity = capacity.max(1);
+        JobQueue {
+            ring: Mutex::new(Ring {
+                slots: (0..capacity).map(|_| None).collect(),
+                head: 0,
+                len: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            submitted: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            peak_depth: AtomicUsize::new(0),
+        }
+    }
+
+    /// Admit a request: a ticket when there is room, explicit
+    /// [`Submit::Rejected`] backpressure when the ring is full, `Err`
+    /// once the queue has closed. Never blocks.
+    pub fn try_submit(&self, req: ServeRequest) -> Result<Submit> {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.closed {
+            return Err(Error::Usage("serve queue is closed".into()));
+        }
+        if ring.len == ring.slots.len() {
+            let depth = ring.len;
+            drop(ring);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Ok(Submit::Rejected { queue_depth: depth });
+        }
+        let ticket = Ticket::new();
+        ring.push(QueuedJob { req, ticket: ticket.clone() });
+        let depth = ring.len;
+        drop(ring);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.peak_depth.fetch_max(depth, Ordering::Relaxed);
+        self.not_empty.notify_one();
+        Ok(Submit::Accepted(ticket))
+    }
+
+    /// Close the queue: new submissions fail, the serving loop drains
+    /// what is already queued and then returns.
+    pub fn close(&self) {
+        self.ring.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Jobs currently queued.
+    pub fn depth(&self) -> usize {
+        self.ring.lock().unwrap().len
+    }
+
+    /// Lifetime counters: `(submitted, rejected, peak_depth)`.
+    pub fn counters(&self) -> (usize, usize, usize) {
+        (
+            self.submitted.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.peak_depth.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Take up to `max` jobs, blocking while the queue is empty and
+    /// open. `None` = closed and fully drained (shutdown).
+    fn drain(&self, max: usize) -> Option<Vec<QueuedJob>> {
+        let mut ring = self.ring.lock().unwrap();
+        loop {
+            if ring.len > 0 {
+                let mut out = Vec::new();
+                while out.len() < max.max(1) {
+                    match ring.pop() {
+                        Some(j) => out.push(j),
+                        None => break,
+                    }
+                }
+                return Some(out);
+            }
+            if ring.closed {
+                return None;
+            }
+            ring = self.not_empty.wait(ring).unwrap();
+        }
+    }
+}
+
+/// A cloneable producer handle onto the server's queue — one per
+/// client thread.
+#[derive(Clone)]
+pub struct ServeHandle {
+    queue: Arc<JobQueue>,
+}
+
+impl ServeHandle {
+    /// Submit a request ([`JobQueue::try_submit`] semantics).
+    pub fn submit(&self, req: ServeRequest) -> Result<Submit> {
+        self.queue.try_submit(req)
+    }
+
+    /// Close the queue (typically: the last client finishing).
+    pub fn close(&self) {
+        self.queue.close()
+    }
+
+    /// Current queue depth.
+    pub fn depth(&self) -> usize {
+        self.queue.depth()
+    }
+}
+
+/// Counters the serving loop accumulates; rendered into
+/// `BENCH_serve.json` by [`ServeStats::to_json`].
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Jobs completed successfully.
+    pub jobs_done: usize,
+    /// Jobs that returned `Err` (including contained panics).
+    pub jobs_failed: usize,
+    /// Serving cycles (queue drains) run.
+    pub batches: usize,
+    /// Jobs that executed inside a coalesced engine batch.
+    pub coalesced_jobs: usize,
+    /// Lifetime submissions accepted by the queue.
+    pub submitted: usize,
+    /// Submissions rejected by backpressure.
+    pub rejected: usize,
+    /// Deepest the queue ever got.
+    pub max_queue_depth: usize,
+    /// Wall time spent inside [`Server::run`].
+    pub wall_secs: f64,
+}
+
+impl ServeStats {
+    /// Fraction of completed jobs that rode a coalesced batch.
+    pub fn coalesce_rate(&self) -> f64 {
+        if self.jobs_done == 0 {
+            0.0
+        } else {
+            self.coalesced_jobs as f64 / self.jobs_done as f64
+        }
+    }
+
+    /// Completed jobs per wall second.
+    pub fn jobs_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.jobs_done as f64 / self.wall_secs
+        }
+    }
+
+    /// One flat `BENCH_serve.json`-style record (same wrapper shape as
+    /// the other perf artifacts, so the CI greps stay uniform).
+    pub fn to_json(&self, bench: &str, clients: usize) -> String {
+        format!(
+            "{{\"records\": [\n  {{\"bench\": \"{}\", \"clients\": {}, \"jobs_done\": {}, \
+             \"jobs_failed\": {}, \"batches\": {}, \"coalesced_jobs\": {}, \
+             \"coalesce_rate\": {:.4}, \"submitted\": {}, \"rejected\": {}, \
+             \"max_queue_depth\": {}, \"wall_secs\": {:.4}, \"jobs_per_sec\": {:.4}}}\n]}}\n",
+            bench,
+            clients,
+            self.jobs_done,
+            self.jobs_failed,
+            self.batches,
+            self.coalesced_jobs,
+            self.coalesce_rate(),
+            self.submitted,
+            self.rejected,
+            self.max_queue_depth,
+            self.wall_secs,
+            self.jobs_per_sec(),
+        )
+    }
+}
+
+/// The serving loop: owns the engine, drains the queue, coalesces,
+/// contains panics, and persists autotune state (module docs).
+pub struct Server {
+    engine: Engine,
+    queue: Arc<JobQueue>,
+    config: ServeConfig,
+    stats: ServeStats,
+    /// Successfully executed requests, in execution order — the
+    /// replay script for the differential property test.
+    log: Vec<ServeRequest>,
+    restored: bool,
+}
+
+impl Server {
+    /// Wrap an engine. Register matrices on the engine *first*: when
+    /// `state_path` is configured the snapshot is adopted here, and
+    /// decisions for unregistered matrices are skipped (registration
+    /// also forgets a name's decisions).
+    pub fn new(mut engine: Engine, config: ServeConfig) -> Server {
+        let restored = match &config.state_path {
+            Some(p) => engine.load_state(p),
+            None => false,
+        };
+        let queue = Arc::new(JobQueue::new(config.queue_capacity));
+        Server { engine, queue, config, stats: ServeStats::default(), log: Vec::new(), restored }
+    }
+
+    /// A producer handle for client threads.
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle { queue: Arc::clone(&self.queue) }
+    }
+
+    /// Whether construction adopted a persisted snapshot.
+    pub fn restored(&self) -> bool {
+        self.restored
+    }
+
+    /// The wrapped engine.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Mutable engine access (registration between runs, tests).
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Successfully executed requests in execution order.
+    pub fn execution_log(&self) -> &[ServeRequest] {
+        &self.log
+    }
+
+    /// Close the queue (equivalent to any handle's `close`).
+    pub fn close(&self) {
+        self.queue.close()
+    }
+
+    /// Scope a request's SpMM spec into its tenant's namespace.
+    pub fn scoped_spmm(tenant: &str, spec: &JobSpec) -> JobSpec {
+        JobSpec { matrix: MatrixRegistry::scoped(tenant, &spec.matrix), ..spec.clone() }
+    }
+
+    /// Scope a request's SpGEMM spec into its tenant's namespace.
+    pub fn scoped_spgemm(tenant: &str, spec: &SpGemmSpec) -> SpGemmSpec {
+        SpGemmSpec {
+            a: MatrixRegistry::scoped(tenant, &spec.a),
+            b: MatrixRegistry::scoped(tenant, &spec.b),
+            force_impl: spec.force_impl,
+        }
+    }
+
+    /// Serve until the queue closes and drains: each cycle takes up to
+    /// `max_drain` queued jobs, coalesces SpMM jobs sharing a (scoped)
+    /// matrix into one engine batch, runs the rest individually, and
+    /// fulfills every ticket. On return (shutdown) the autotune state
+    /// is persisted when configured.
+    pub fn run(&mut self) {
+        let t = Timer::start();
+        while let Some(jobs) = self.queue.drain(self.config.max_drain) {
+            self.cycle(jobs);
+        }
+        self.stats.wall_secs += t.elapsed_secs();
+        let (submitted, rejected, peak) = self.queue.counters();
+        self.stats.submitted = submitted;
+        self.stats.rejected = rejected;
+        self.stats.max_queue_depth = peak;
+        if let Some(p) = &self.config.state_path {
+            if let Err(e) = self.engine.save_state(p) {
+                eprintln!("warning: could not persist autotune state to {p}: {e}");
+            }
+        }
+    }
+
+    fn cycle(&mut self, jobs: Vec<QueuedJob>) {
+        self.stats.batches += 1;
+        let mut singles: Vec<QueuedJob> = Vec::new();
+        // group SpMM jobs by scoped matrix, preserving drain order
+        // within each group; group insertion order is kept too so the
+        // execution log stays deterministic for a deterministic queue
+        let mut keys: Vec<String> = Vec::new();
+        let mut groups: HashMap<String, Vec<QueuedJob>> = HashMap::new();
+        for j in jobs {
+            match &j.req.work {
+                ServeWork::SpMM { spec, .. } if self.config.coalesce => {
+                    let key = MatrixRegistry::scoped(&j.req.tenant, &spec.matrix);
+                    if !groups.contains_key(&key) {
+                        keys.push(key.clone());
+                    }
+                    groups.entry(key).or_default().push(j);
+                }
+                _ => singles.push(j),
+            }
+        }
+        for key in keys {
+            let group = groups.remove(&key).expect("keyed above");
+            if group.len() < 2 {
+                singles.extend(group);
+                continue;
+            }
+            self.run_coalesced(group);
+        }
+        for j in singles {
+            self.run_single(j);
+        }
+    }
+
+    /// Run a same-matrix group as one engine batch. If the batch
+    /// fails (Err or contained panic), fall back to per-job isolation
+    /// so only the offending jobs fail.
+    fn run_coalesced(&mut self, group: Vec<QueuedJob>) {
+        let specs: Vec<(JobSpec, u64)> = group
+            .iter()
+            .map(|j| match &j.req.work {
+                ServeWork::SpMM { spec, seed } => {
+                    (Server::scoped_spmm(&j.req.tenant, spec), *seed)
+                }
+                ServeWork::SpGemm { .. } => unreachable!("coalesced groups are SpMM-only"),
+            })
+            .collect();
+        let engine = &mut self.engine;
+        let res = contain(catch_unwind(AssertUnwindSafe(|| engine.submit_batch_collect(&specs))));
+        match res {
+            Ok((rep, outs)) => {
+                for (j, (rec, out)) in
+                    group.into_iter().zip(rep.records.into_iter().zip(outs.into_iter()))
+                {
+                    self.log.push(j.req.clone());
+                    self.stats.jobs_done += 1;
+                    self.stats.coalesced_jobs += 1;
+                    j.ticket.fulfill(Ok(ServeReply {
+                        tag: j.req.tag,
+                        outcome: WorkloadOutcome::SpMM(rec),
+                        output: ServeOutput::Dense(out),
+                        coalesced: true,
+                    }));
+                }
+            }
+            Err(_) => {
+                for j in group {
+                    self.run_single(j);
+                }
+            }
+        }
+    }
+
+    fn run_single(&mut self, j: QueuedJob) {
+        let req = j.req;
+        let engine = &mut self.engine;
+        let result: Result<ServeReply> = match &req.work {
+            ServeWork::SpMM { spec, seed } => {
+                let scoped = Server::scoped_spmm(&req.tenant, spec);
+                let seed = *seed;
+                contain(catch_unwind(AssertUnwindSafe(|| engine.submit_collect(&scoped, seed))))
+                    .map(|(rec, out)| ServeReply {
+                        tag: req.tag,
+                        outcome: WorkloadOutcome::SpMM(rec),
+                        output: ServeOutput::Dense(out),
+                        coalesced: false,
+                    })
+            }
+            ServeWork::SpGemm { spec } => {
+                let scoped = Server::scoped_spgemm(&req.tenant, spec);
+                contain(catch_unwind(AssertUnwindSafe(|| engine.submit_spgemm_collect(&scoped))))
+                    .map(|(rec, c)| ServeReply {
+                        tag: req.tag,
+                        outcome: WorkloadOutcome::SpGemm(rec),
+                        output: ServeOutput::Sparse(c),
+                        coalesced: false,
+                    })
+            }
+        };
+        match &result {
+            Ok(_) => {
+                self.log.push(req);
+                self.stats.jobs_done += 1;
+            }
+            Err(_) => self.stats.jobs_failed += 1,
+        }
+        j.ticket.fulfill(result);
+    }
+}
+
+/// Flatten a `catch_unwind` result: a panic becomes [`Error::Panic`]
+/// carrying the payload's message, so one poisoned kernel reads as an
+/// ordinary failed job.
+fn contain<T>(r: std::thread::Result<Result<T>>) -> Result<T> {
+    match r {
+        Ok(inner) => inner,
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(Error::Panic(msg))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(tag: u64) -> ServeRequest {
+        ServeRequest::spmm("", JobSpec::new("m", 4), tag).with_tag(tag)
+    }
+
+    #[test]
+    fn queue_accepts_until_full_then_rejects_without_blocking() {
+        let q = JobQueue::new(2);
+        assert!(q.try_submit(req(1)).unwrap().is_accepted());
+        assert!(q.try_submit(req(2)).unwrap().is_accepted());
+        match q.try_submit(req(3)).unwrap() {
+            Submit::Rejected { queue_depth } => assert_eq!(queue_depth, 2),
+            Submit::Accepted(_) => panic!("full ring must reject"),
+        }
+        assert_eq!(q.depth(), 2);
+        let (submitted, rejected, peak) = q.counters();
+        assert_eq!((submitted, rejected, peak), (2, 1, 2));
+        // draining opens room again
+        let jobs = q.drain(1).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].req.tag, 1, "FIFO");
+        assert!(q.try_submit(req(4)).unwrap().is_accepted());
+    }
+
+    #[test]
+    fn ring_wraps_and_preserves_fifo() {
+        let q = JobQueue::new(3);
+        for tag in 1..=3 {
+            assert!(q.try_submit(req(tag)).unwrap().is_accepted());
+        }
+        let first = q.drain(2).unwrap();
+        assert_eq!(first.iter().map(|j| j.req.tag).collect::<Vec<_>>(), vec![1, 2]);
+        // head has advanced; these pushes wrap around the slot array
+        assert!(q.try_submit(req(4)).unwrap().is_accepted());
+        assert!(q.try_submit(req(5)).unwrap().is_accepted());
+        let rest = q.drain(10).unwrap();
+        assert_eq!(rest.iter().map(|j| j.req.tag).collect::<Vec<_>>(), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn closed_queue_errors_and_drain_returns_none() {
+        let q = JobQueue::new(2);
+        assert!(q.try_submit(req(1)).unwrap().is_accepted());
+        q.close();
+        assert!(q.try_submit(req(2)).is_err(), "closed queue must refuse new work");
+        // what was queued before the close still drains
+        assert_eq!(q.drain(8).unwrap().len(), 1);
+        assert!(q.drain(8).is_none(), "closed + empty = shutdown");
+    }
+
+    #[test]
+    fn ticket_try_take_then_wait_semantics() {
+        let t = Ticket::new();
+        assert!(t.try_take().is_none(), "unfulfilled ticket has nothing to take");
+        t.fulfill(Err(Error::Panic("boom".into())));
+        let taken = t.try_take().expect("fulfilled");
+        assert!(matches!(taken, Err(Error::Panic(_))));
+        assert!(t.try_take().is_none(), "results are take-once");
+    }
+
+    #[test]
+    fn ticket_wait_blocks_across_threads() {
+        let t = Ticket::new();
+        let t2 = t.clone();
+        let waiter = std::thread::spawn(move || t2.wait());
+        // fulfil from this side; the waiter must wake and see it
+        t.fulfill(Err(Error::Usage("x".into())));
+        let got = waiter.join().unwrap();
+        assert!(matches!(got, Err(Error::Usage(_))));
+    }
+
+    #[test]
+    fn stats_json_carries_the_coalesce_rate() {
+        let stats = ServeStats {
+            jobs_done: 8,
+            coalesced_jobs: 6,
+            batches: 2,
+            wall_secs: 2.0,
+            ..ServeStats::default()
+        };
+        assert!((stats.coalesce_rate() - 0.75).abs() < 1e-12);
+        assert!((stats.jobs_per_sec() - 4.0).abs() < 1e-12);
+        let json = stats.to_json("bench_serve", 4);
+        assert!(json.contains("\"coalesce_rate\": 0.7500"), "{json}");
+        assert!(json.contains("\"bench\": \"bench_serve\""));
+        assert!(json.contains("\"clients\": 4"));
+        // empty stats divide nothing by zero
+        assert_eq!(ServeStats::default().coalesce_rate(), 0.0);
+        assert_eq!(ServeStats::default().jobs_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn serve_output_accessors() {
+        let d = ServeOutput::Dense(vec![1.0, 2.0]);
+        assert_eq!(d.dense().unwrap().len(), 2);
+        assert!(d.sparse().is_none());
+        let s = ServeOutput::Sparse(Csr::from_dense(1, 1, &[3.0]));
+        assert!(s.dense().is_none());
+        assert_eq!(s.sparse().unwrap().nnz(), 1);
+    }
+}

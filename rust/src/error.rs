@@ -31,6 +31,11 @@ pub enum Error {
     /// Unknown CLI command / bad CLI usage.
     Usage(String),
 
+    /// A kernel panicked mid-execution; the panic was contained at the
+    /// serving layer and converted into this error so one poisoned job
+    /// (or coalesced batch) cannot take down the worker pool.
+    Panic(String),
+
     /// Underlying IO error.
     Io(std::io::Error),
 }
@@ -45,6 +50,7 @@ impl fmt::Display for Error {
             Error::MissingArtifact(s) => write!(f, "missing artifact: {s} (run `make artifacts`)"),
             Error::Xla(s) => write!(f, "xla runtime error: {s}"),
             Error::Usage(s) => write!(f, "usage error: {s}"),
+            Error::Panic(s) => write!(f, "kernel panic: {s}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

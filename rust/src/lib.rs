@@ -42,7 +42,12 @@
 //!   predict → route each SpMM job to the predicted-best kernel, with
 //!   prediction-vs-measurement bookkeeping — including a batched
 //!   submission path ([`coordinator::Engine::submit_batch`]) with
-//!   recycled dense operands and per-batch aggregate reporting.
+//!   recycled dense operands and per-batch aggregate reporting, and a
+//!   concurrent serving front-end ([`coordinator::Server`]): a bounded
+//!   job queue with explicit admission control, per-tenant matrix
+//!   namespaces, same-matrix batch coalescing, contained kernel
+//!   panics, and autotune decisions persisted across restarts
+//!   ([`report::AutotuneState`]).
 //! * **XLA/PJRT runtime** ([`runtime`]): loads AOT artifacts produced by
 //!   the JAX/Pallas compile path (`python/compile/`) and exposes them as
 //!   a fourth SpMM implementation.

@@ -1,15 +1,19 @@
 //! Report rendering: aligned text/markdown tables, CSV, SVG plots,
-//! machine-readable perf artifacts (`BENCH_schedule.json`), and the
-//! system-info probe (the paper's Table IV analog).
+//! machine-readable perf artifacts (`BENCH_schedule.json`), the
+//! system-info probe (the paper's Table IV analog), and the persisted
+//! autotune snapshot + crash-safe artifact writes ([`AutotuneState`],
+//! [`atomic_write`], [`FileLock`]).
 
 mod csv;
 mod perf;
+mod state;
 mod svg;
 mod sysinfo;
 mod table;
 
 pub use csv::write_csv;
 pub use perf::{PerfLog, PerfRecord};
+pub use state::{atomic_write, AutotuneState, FileLock, STATE_VERSION};
 pub use svg::{Marker, Series, SvgPlot, VLine, PALETTE};
 pub use sysinfo::{probe_system, SystemInfo};
 pub use table::{fmt3, Table};

@@ -17,6 +17,7 @@
 //! differing in `dt` (`dt == d` is the untiled run).
 
 use crate::error::{Error, Result};
+use crate::report::state::{atomic_write, FileLock};
 
 /// One measured cell: a bench × matrix × implementation × dense-width
 /// point at a specific column-tile width and matrix ordering.
@@ -157,15 +158,20 @@ impl PerfLog {
     /// benches while keeping other benches' records. A missing or
     /// unparsable existing file is treated as empty (the artifact is a
     /// build product, not a source of truth).
+    ///
+    /// The read-modify-write cycle holds a [`FileLock`] and lands via
+    /// [`atomic_write`], so two benches merging into the same artifact
+    /// concurrently cannot interleave and drop each other's records
+    /// (regression-tested in `tests/integration_serve.rs`).
     pub fn merge_save(&self, path: &str) -> Result<()> {
+        let _lock = FileLock::acquire(path)?;
         let mut merged = std::fs::read_to_string(path)
             .ok()
             .and_then(|t| PerfLog::parse(&t).ok())
             .unwrap_or_default();
         merged.records.retain(|r| !self.records.iter().any(|n| n.bench == r.bench));
         merged.records.extend(self.records.iter().cloned());
-        std::fs::write(path, merged.to_json())?;
-        Ok(())
+        atomic_write(path, &merged.to_json())
     }
 }
 

@@ -1,0 +1,589 @@
+//! Persisted autotune state and crash-safe merged-JSON writes.
+//!
+//! Two concerns live here because they share one mechanism:
+//!
+//! * **Atomic artifact writes** ([`atomic_write`], [`FileLock`]): every
+//!   merged-JSON artifact (`BENCH_route.json`, the autotune snapshot)
+//!   is written to a unique temporary sibling and `rename`d into
+//!   place, so readers never observe a torn file; read-modify-write
+//!   merges additionally serialise through a sibling `.lock` file so
+//!   two writers cannot interleave (the `PerfLog::merge_save` race —
+//!   regression-tested in `tests/integration_serve.rs`).
+//! * **The autotune snapshot** ([`AutotuneState`]): a versioned JSON
+//!   rendering of everything the router learned — pinned
+//!   [`RouteDecision`]s, pinned [`SpGemmDecision`]s with their
+//!   measured compression factors and per-candidate measurements, and
+//!   the planner's refined `(class, impl)` efficiency priors. A
+//!   restarted server loads the snapshot and *skips re-exploration*:
+//!   restored decisions serve from the pin exactly like decisions
+//!   tuned in-process (`tests/prop_serve.rs` asserts zero exploration
+//!   measurements after a restore).
+//!
+//! The format is the repo's usual flat-record JSON (the crate builds
+//! offline; serde is unavailable): one top-level object
+//! `{"version": 1, "records": [...]}` whose records are discriminated
+//! by a `"kind"` key (`route`, `spgemm`, `spgemm_candidate`,
+//! `spmm_prior`, `spgemm_prior`). Floats are rendered with Rust's
+//! shortest-round-trip `Display`, and records are emitted in sorted
+//! key order, so save → load → save is **byte-identical** — the
+//! property test's definition of a lossless snapshot. A corrupted or
+//! version-skewed snapshot parses as `Err`; [`AutotuneState::load_or_cold`]
+//! turns that into a warned cold start instead of a panic.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::parse_impl;
+use crate::coordinator::{RouteDecision, SpGemmCandidate, SpGemmDecision};
+use crate::error::{Error, Result};
+use crate::gen::SparsityClass;
+use crate::sparse::Reordering;
+use crate::spgemm::SpGemmImpl;
+use crate::spmm::Impl;
+
+/// Snapshot format version. Bumped on any schema change; a loader
+/// refuses mismatched versions (cold start beats misread state).
+pub const STATE_VERSION: u64 = 1;
+
+/// How long a writer waits on a held [`FileLock`] before assuming the
+/// holder crashed and stealing it.
+const LOCK_TIMEOUT_MS: u64 = 5_000;
+const LOCK_POLL_MS: u64 = 5;
+
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Write `contents` to `path` atomically: the bytes land in a unique
+/// temporary sibling (`<path>.tmp.<pid>.<n>`) and are `rename`d into
+/// place, so a concurrent reader sees either the old file or the new
+/// one — never a prefix.
+pub fn atomic_write(path: &str, contents: &str) -> Result<()> {
+    let n = TMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let tmp = format!("{path}.tmp.{}.{n}", std::process::id());
+    std::fs::write(&tmp, contents)?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
+    Ok(())
+}
+
+/// An advisory cross-process lock serialising read-modify-write cycles
+/// on one artifact: `acquire` spins until it can create `<path>.lock`
+/// exclusively, `Drop` removes it. After [`LOCK_TIMEOUT_MS`] the lock
+/// is presumed orphaned (holder crashed between create and drop) and
+/// stolen once, with a warning.
+pub struct FileLock {
+    lock_path: PathBuf,
+}
+
+impl FileLock {
+    /// Acquire the lock guarding `path` (not the lock file itself).
+    pub fn acquire(path: &str) -> Result<FileLock> {
+        let lock_path = PathBuf::from(format!("{path}.lock"));
+        let mut stolen = false;
+        let mut waited_ms = 0u64;
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&lock_path)
+            {
+                Ok(_) => return Ok(FileLock { lock_path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if waited_ms >= LOCK_TIMEOUT_MS {
+                        if stolen {
+                            return Err(Error::Io(e));
+                        }
+                        eprintln!(
+                            "warning: lock {} held past {LOCK_TIMEOUT_MS}ms — \
+                             presuming its holder crashed and stealing it",
+                            lock_path.display()
+                        );
+                        let _ = std::fs::remove_file(&lock_path);
+                        stolen = true;
+                        waited_ms = 0;
+                    } else {
+                        std::thread::sleep(std::time::Duration::from_millis(LOCK_POLL_MS));
+                        waited_ms += LOCK_POLL_MS;
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+impl Drop for FileLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.lock_path);
+    }
+}
+
+/// Everything the autotuning router learned, in snapshot form — see
+/// the module docs for the on-disk format.
+#[derive(Debug, Clone, Default)]
+pub struct AutotuneState {
+    /// Pinned SpMM routing decisions.
+    pub routes: Vec<RouteDecision>,
+    /// Pinned SpGEMM pair decisions (with measured cf and candidates).
+    pub spgemm: Vec<SpGemmDecision>,
+    /// Materialised `(class, impl)` SpMM efficiency priors.
+    pub spmm_priors: Vec<(SparsityClass, Impl, f64)>,
+    /// Materialised `(class, impl)` SpGEMM efficiency priors.
+    pub spgemm_priors: Vec<(SparsityClass, SpGemmImpl, f64)>,
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Shortest-round-trip float rendering (`Display` on `f64`), with
+/// non-finite values — never produced by a healthy tune, not JSON —
+/// clamped to 0 like the perf artifacts do.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".into()
+    }
+}
+
+fn class_name(c: SparsityClass) -> String {
+    format!("{c}")
+}
+
+fn parse_class(s: &str) -> Result<SparsityClass> {
+    match s {
+        "Blocking" => Ok(SparsityClass::Blocked),
+        "Scale-free" => Ok(SparsityClass::ScaleFree),
+        "Diagonal" => Ok(SparsityClass::Diagonal),
+        "Uniform Random" => Ok(SparsityClass::Random),
+        other => Err(Error::Parse(format!("unknown sparsity class '{other}'"))),
+    }
+}
+
+fn parse_reordering(s: &str) -> Result<Reordering> {
+    match s {
+        "none" => Ok(Reordering::None),
+        "rcm" => Ok(Reordering::Rcm),
+        "degree" => Ok(Reordering::DegreeSort),
+        other => Err(Error::Parse(format!("unknown reordering '{other}'"))),
+    }
+}
+
+fn parse_spgemm_impl(s: &str) -> Result<SpGemmImpl> {
+    match s {
+        "HASH" => Ok(SpGemmImpl::Hash),
+        "PBMERGE" => Ok(SpGemmImpl::PbMerge),
+        other => Err(Error::Parse(format!("unknown SpGEMM impl '{other}'"))),
+    }
+}
+
+impl AutotuneState {
+    /// True when there is nothing to persist.
+    pub fn is_empty(&self) -> bool {
+        self.routes.is_empty()
+            && self.spgemm.is_empty()
+            && self.spmm_priors.is_empty()
+            && self.spgemm_priors.is_empty()
+    }
+
+    /// Serialise to the versioned snapshot format. Deterministic:
+    /// records are sorted by their keys, floats render
+    /// shortest-round-trip, so equal states serialise to equal bytes.
+    pub fn to_json(&self) -> String {
+        let mut routes: Vec<&RouteDecision> = self.routes.iter().collect();
+        routes.sort_by(|a, b| (a.matrix.as_str(), a.d).cmp(&(b.matrix.as_str(), b.d)));
+        let mut spgemm: Vec<&SpGemmDecision> = self.spgemm.iter().collect();
+        spgemm.sort_by(|x, y| (x.a.as_str(), x.b.as_str()).cmp(&(y.a.as_str(), y.b.as_str())));
+        let mut spmm_priors = self.spmm_priors.clone();
+        spmm_priors.sort_by_key(|(c, i, _)| (class_name(*c), format!("{i}")));
+        let mut spgemm_priors = self.spgemm_priors.clone();
+        spgemm_priors.sort_by_key(|(c, i, _)| (class_name(*c), format!("{i}")));
+
+        let mut recs: Vec<String> = Vec::new();
+        for r in routes {
+            recs.push(format!(
+                "{{\"kind\": \"route\", \"matrix\": \"{}\", \"d\": {}, \"impl\": \"{}\", \
+                 \"reorder\": \"{}\", \"dt\": {}, \"class\": \"{}\", \"predicted\": {}, \
+                 \"measured\": {}, \"enumerated\": {}, \"explored\": {}, \"regret\": {}}}",
+                esc(&r.matrix),
+                r.d,
+                r.im,
+                r.reorder,
+                r.dt,
+                r.class,
+                num(r.predicted_gflops),
+                num(r.measured_gflops),
+                r.enumerated,
+                r.explored,
+                num(r.regret_gflops),
+            ));
+        }
+        for s in spgemm {
+            recs.push(format!(
+                "{{\"kind\": \"spgemm\", \"a\": \"{}\", \"b\": \"{}\", \"impl\": \"{}\", \
+                 \"class\": \"{}\", \"cf\": {}, \"predicted\": {}, \"measured\": {}, \
+                 \"explored\": {}, \"regret\": {}}}",
+                esc(&s.a),
+                esc(&s.b),
+                s.im,
+                s.class,
+                num(s.cf),
+                num(s.predicted_gflops),
+                num(s.measured_gflops),
+                s.explored,
+                num(s.regret_gflops),
+            ));
+            for c in &s.candidates {
+                recs.push(format!(
+                    "{{\"kind\": \"spgemm_candidate\", \"a\": \"{}\", \"b\": \"{}\", \
+                     \"impl\": \"{}\", \"predicted\": {}, \"measured\": {}, \"ai\": {}}}",
+                    esc(&s.a),
+                    esc(&s.b),
+                    c.im,
+                    num(c.predicted_gflops),
+                    num(c.measured_gflops),
+                    num(c.ai),
+                ));
+            }
+        }
+        for (c, i, v) in &spmm_priors {
+            recs.push(format!(
+                "{{\"kind\": \"spmm_prior\", \"class\": \"{c}\", \"impl\": \"{i}\", \
+                 \"value\": {}}}",
+                num(*v)
+            ));
+        }
+        for (c, i, v) in &spgemm_priors {
+            recs.push(format!(
+                "{{\"kind\": \"spgemm_prior\", \"class\": \"{c}\", \"impl\": \"{i}\", \
+                 \"value\": {}}}",
+                num(*v)
+            ));
+        }
+
+        let mut out = format!("{{\"version\": {STATE_VERSION}, \"records\": [\n");
+        for (i, r) in recs.iter().enumerate() {
+            out.push_str("  ");
+            out.push_str(r);
+            if i + 1 < recs.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    /// Parse a snapshot. Strict about the version and every record's
+    /// schema — a snapshot that cannot be fully understood is rejected
+    /// whole (the caller cold-starts) rather than half-applied.
+    pub fn parse(text: &str) -> Result<AutotuneState> {
+        let version = field_num(text, "version")? as u64;
+        if version != STATE_VERSION {
+            return Err(Error::Parse(format!(
+                "autotune snapshot version {version} (this build reads {STATE_VERSION})"
+            )));
+        }
+        // a healthy snapshot always ends with the wrapper's `]}` — a
+        // truncated file must reject whole, not load as a shorter state
+        if !text.trim_end().ends_with("]}") {
+            return Err(Error::Parse("truncated autotune snapshot".into()));
+        }
+        let mut state = AutotuneState::default();
+        let mut rest = text;
+        while let Some(start) = rest.find('{') {
+            rest = &rest[start + 1..];
+            let end = match rest.find('}') {
+                Some(e) => e,
+                None => return Err(Error::Parse("truncated snapshot record".into())),
+            };
+            let body = &rest[..end];
+            rest = &rest[end + 1..];
+            // the wrapper prefix (and any non-record object) carries no
+            // "kind" key in its body slice — skip it
+            if !body.contains("\"kind\"") {
+                continue;
+            }
+            match field_str(body, "kind")?.as_str() {
+                "route" => state.routes.push(RouteDecision {
+                    matrix: field_str(body, "matrix")?,
+                    d: field_num(body, "d")? as usize,
+                    im: parse_impl(&field_str(body, "impl")?)
+                        .map_err(|e| Error::Parse(e.to_string()))?,
+                    reorder: parse_reordering(&field_str(body, "reorder")?)?,
+                    dt: field_num(body, "dt")? as usize,
+                    class: parse_class(&field_str(body, "class")?)?,
+                    predicted_gflops: field_num(body, "predicted")?,
+                    measured_gflops: field_num(body, "measured")?,
+                    enumerated: field_num(body, "enumerated")? as usize,
+                    explored: field_num(body, "explored")? as usize,
+                    regret_gflops: field_num(body, "regret")?,
+                }),
+                "spgemm" => state.spgemm.push(SpGemmDecision {
+                    a: field_str(body, "a")?,
+                    b: field_str(body, "b")?,
+                    im: parse_spgemm_impl(&field_str(body, "impl")?)?,
+                    class: parse_class(&field_str(body, "class")?)?,
+                    cf: field_num(body, "cf")?,
+                    predicted_gflops: field_num(body, "predicted")?,
+                    measured_gflops: field_num(body, "measured")?,
+                    explored: field_num(body, "explored")? as usize,
+                    regret_gflops: field_num(body, "regret")?,
+                    candidates: Vec::new(),
+                }),
+                "spgemm_candidate" => {
+                    let (a, b) = (field_str(body, "a")?, field_str(body, "b")?);
+                    let cand = SpGemmCandidate {
+                        im: parse_spgemm_impl(&field_str(body, "impl")?)?,
+                        predicted_gflops: field_num(body, "predicted")?,
+                        measured_gflops: field_num(body, "measured")?,
+                        ai: field_num(body, "ai")?,
+                    };
+                    let dec = state
+                        .spgemm
+                        .iter_mut()
+                        .find(|d| d.a == a && d.b == b)
+                        .ok_or_else(|| {
+                            Error::Parse(format!("candidate for unknown pair {a}×{b}"))
+                        })?;
+                    dec.candidates.push(cand);
+                }
+                "spmm_prior" => state.spmm_priors.push((
+                    parse_class(&field_str(body, "class")?)?,
+                    parse_impl(&field_str(body, "impl")?)
+                        .map_err(|e| Error::Parse(e.to_string()))?,
+                    field_num(body, "value")?,
+                )),
+                "spgemm_prior" => state.spgemm_priors.push((
+                    parse_class(&field_str(body, "class")?)?,
+                    parse_spgemm_impl(&field_str(body, "impl")?)?,
+                    field_num(body, "value")?,
+                )),
+                other => {
+                    return Err(Error::Parse(format!("unknown snapshot record kind '{other}'")))
+                }
+            }
+        }
+        Ok(state)
+    }
+
+    /// Persist atomically (lock + temp sibling + rename).
+    pub fn save(&self, path: &str) -> Result<()> {
+        let _lock = FileLock::acquire(path)?;
+        atomic_write(path, &self.to_json())
+    }
+
+    /// Load a snapshot, strictly.
+    pub fn load(path: &str) -> Result<AutotuneState> {
+        AutotuneState::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Load a snapshot for serving: a missing file is a silent cold
+    /// start (`None`), a corrupted or version-skewed one is a *warned*
+    /// cold start — never a panic, never a half-applied state.
+    pub fn load_or_cold(path: &str) -> Option<AutotuneState> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(_) => return None,
+        };
+        match AutotuneState::parse(&text) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("warning: ignoring autotune snapshot {path}: {e} — cold start");
+                None
+            }
+        }
+    }
+}
+
+fn field<'a>(body: &'a str, key: &str) -> Result<&'a str> {
+    let pat = format!("\"{key}\"");
+    let at = body
+        .find(&pat)
+        .ok_or_else(|| Error::Parse(format!("snapshot record missing key '{key}'")))?;
+    let after = &body[at + pat.len()..];
+    let colon = after
+        .find(':')
+        .ok_or_else(|| Error::Parse(format!("snapshot key '{key}' has no value")))?;
+    Ok(after[colon + 1..].trim_start())
+}
+
+fn field_str(body: &str, key: &str) -> Result<String> {
+    let v = field(body, key)?;
+    let v = v
+        .strip_prefix('"')
+        .ok_or_else(|| Error::Parse(format!("'{key}' is not a string")))?;
+    let end = v
+        .find('"')
+        .ok_or_else(|| Error::Parse(format!("'{key}' string unterminated")))?;
+    Ok(v[..end].to_string())
+}
+
+fn field_num(body: &str, key: &str) -> Result<f64> {
+    let v = field(body, key)?;
+    let end = v
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == '+'))
+        .unwrap_or(v.len());
+    v[..end]
+        .parse::<f64>()
+        .map_err(|_| Error::Parse(format!("'{key}' is not a number: '{}'", &v[..end])))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn route(matrix: &str, d: usize) -> RouteDecision {
+        RouteDecision {
+            matrix: matrix.into(),
+            d,
+            im: Impl::Csb,
+            reorder: Reordering::Rcm,
+            dt: 8,
+            class: SparsityClass::Blocked,
+            predicted_gflops: 0.1 + 0.2, // deliberately awkward binary fraction
+            measured_gflops: std::f64::consts::PI,
+            enumerated: 9,
+            explored: 3,
+            regret_gflops: 0.0,
+        }
+    }
+
+    fn sample() -> AutotuneState {
+        AutotuneState {
+            routes: vec![route("m1", 8), route("m0", 4)],
+            spgemm: vec![SpGemmDecision {
+                a: "a".into(),
+                b: "b".into(),
+                im: SpGemmImpl::Hash,
+                class: SparsityClass::Random,
+                cf: 7.123456789123,
+                predicted_gflops: 1.5,
+                measured_gflops: 2.5,
+                explored: 2,
+                regret_gflops: 0.25,
+                candidates: vec![
+                    SpGemmCandidate {
+                        im: SpGemmImpl::Hash,
+                        predicted_gflops: 1.5,
+                        measured_gflops: 2.5,
+                        ai: 0.3,
+                    },
+                    SpGemmCandidate {
+                        im: SpGemmImpl::PbMerge,
+                        predicted_gflops: 1.25,
+                        measured_gflops: 2.0,
+                        ai: 0.2,
+                    },
+                ],
+            }],
+            spmm_priors: vec![
+                (SparsityClass::Random, Impl::Csr, 0.351234567890123),
+                (SparsityClass::Blocked, Impl::Csb, 0.85),
+            ],
+            spgemm_priors: vec![(SparsityClass::Random, SpGemmImpl::PbMerge, 0.8)],
+        }
+    }
+
+    #[test]
+    fn round_trip_preserves_bytes_and_values() {
+        let s = sample();
+        let j1 = s.to_json();
+        let back = AutotuneState::parse(&j1).unwrap();
+        let j2 = back.to_json();
+        assert_eq!(j1, j2, "save → load → save must be byte-identical");
+        assert_eq!(back.routes.len(), 2);
+        // sorted on save: m0 before m1
+        assert_eq!(back.routes[0].matrix, "m0");
+        assert_eq!(back.routes[0].predicted_gflops, 0.1 + 0.2);
+        assert_eq!(back.routes[0].measured_gflops, std::f64::consts::PI);
+        assert_eq!(back.spgemm[0].cf, 7.123456789123);
+        assert_eq!(back.spgemm[0].candidates.len(), 2);
+        assert_eq!(back.spgemm[0].candidates[1].im, SpGemmImpl::PbMerge);
+        assert_eq!(back.spmm_priors.len(), 2);
+        assert_eq!(back.spgemm_priors.len(), 1);
+    }
+
+    #[test]
+    fn empty_state_round_trips() {
+        let s = AutotuneState::default();
+        assert!(s.is_empty());
+        let back = AutotuneState::parse(&s.to_json()).unwrap();
+        assert!(back.is_empty());
+        assert_eq!(s.to_json(), back.to_json());
+    }
+
+    #[test]
+    fn corrupt_truncated_and_version_skew_reject() {
+        let full = sample().to_json();
+        let truncated = &full[..full.len() / 2];
+        assert!(AutotuneState::parse(truncated).is_err());
+        assert!(AutotuneState::parse("not json at all").is_err());
+        let skewed = full.replace("\"version\": 1", "\"version\": 99");
+        assert!(AutotuneState::parse(&skewed).is_err());
+        // unknown record kinds are rejected, not skipped — a snapshot
+        // this build cannot fully understand must cold-start
+        let alien = full.replace("\"kind\": \"spmm_prior\"", "\"kind\": \"mystery\"");
+        assert!(AutotuneState::parse(&alien).is_err());
+    }
+
+    #[test]
+    fn load_or_cold_warns_instead_of_panicking() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("state_cold_{}.json", std::process::id()));
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        // missing file: silent cold start
+        assert!(AutotuneState::load_or_cold(path).is_none());
+        // corrupted file: warned cold start, no panic
+        std::fs::write(path, "{\"version\": 1, \"records\": [{\"kind\": \"route\"").unwrap();
+        assert!(AutotuneState::load_or_cold(path).is_none());
+        // healthy file loads
+        sample().save(path).unwrap();
+        let s = AutotuneState::load_or_cold(path).unwrap();
+        assert_eq!(s.routes.len(), 2);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn save_leaves_no_temp_or_lock_droppings() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("state_tmp_{}.json", std::process::id()));
+        let path = path.to_str().unwrap();
+        sample().save(path).unwrap();
+        assert!(!std::path::Path::new(&format!("{path}.lock")).exists());
+        let loaded = AutotuneState::load(path).unwrap();
+        assert_eq!(loaded.to_json(), sample().to_json());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn file_lock_serialises_read_modify_write() {
+        use std::sync::Arc;
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("state_lock_{}.txt", std::process::id()));
+        let path: Arc<String> = Arc::new(path.to_str().unwrap().to_string());
+        let _ = std::fs::remove_file(path.as_str());
+        atomic_write(&path, "0").unwrap();
+        let threads = 4;
+        let iters = 25;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let path = Arc::clone(&path);
+                s.spawn(move || {
+                    for _ in 0..iters {
+                        let _lock = FileLock::acquire(&path).unwrap();
+                        let v: u64 =
+                            std::fs::read_to_string(path.as_str()).unwrap().parse().unwrap();
+                        atomic_write(&path, &format!("{}", v + 1)).unwrap();
+                    }
+                });
+            }
+        });
+        let total: u64 = std::fs::read_to_string(path.as_str()).unwrap().parse().unwrap();
+        assert_eq!(total, (threads * iters) as u64, "lost update under the lock");
+        let _ = std::fs::remove_file(path.as_str());
+    }
+}

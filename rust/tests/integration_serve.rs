@@ -1,0 +1,259 @@
+//! Integration tests for the serving front-end's failure semantics:
+//!
+//! * a panicking kernel planted inside a coalesced batch
+//!   ([`spmm_roofline::coordinator::Engine::install_kernel`], the
+//!   fault-injection seam) fails **only its own jobs** — the group
+//!   falls back to per-job isolation, healthy jobs still answer `Ok`,
+//!   and the engine keeps serving afterwards (no pool or lock
+//!   poisoning);
+//! * a full queue answers `Submit::Rejected` immediately — admission
+//!   control never blocks the producer (these tests run with no
+//!   consumer draining: a blocking submit would hang them);
+//! * shutdown drains: jobs accepted before `close()` are all
+//!   executed and their tickets fulfilled;
+//! * the `BENCH_route.json` merge path is concurrency-safe — the
+//!   regression test for the read-modify-write race in
+//!   `PerfLog::merge_save`, which now serialises through the
+//!   `report::state` file lock + atomic rename. Interleaved writers
+//!   with distinct bench names must all survive into the final file.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use spmm_roofline::coordinator::{
+    Engine, EngineConfig, JobSpec, ServeConfig, ServeRequest, Server, SpGemmSpec, Submit,
+};
+use spmm_roofline::error::Error;
+use spmm_roofline::gen::{erdos_renyi, Prng};
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::report::{PerfLog, PerfRecord};
+use spmm_roofline::spmm::{DenseMatrix, Impl, Spmm};
+
+fn test_engine(impls: Vec<Impl>) -> Engine {
+    Engine::new(EngineConfig {
+        threads: 2,
+        machine: Some(MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 }),
+        iters: 1,
+        warmup: 0,
+        impls,
+        artifacts_dir: None,
+        ..EngineConfig::default()
+    })
+    .unwrap()
+}
+
+/// A kernel that panics on execute — planted under a real impl id to
+/// poison exactly the jobs routed (here: forced) to it.
+struct PanicSpmm {
+    nrows: usize,
+    ncols: usize,
+}
+
+impl Spmm for PanicSpmm {
+    fn id(&self) -> Impl {
+        Impl::Csb
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        0
+    }
+    fn execute(&self, _b: &DenseMatrix, _c: &mut DenseMatrix) -> spmm_roofline::error::Result<()> {
+        panic!("injected kernel fault");
+    }
+}
+
+#[test]
+fn panicking_kernel_inside_a_coalesced_batch_fails_only_its_jobs() {
+    let mut rng = Prng::new(0xfa11);
+    let m = erdos_renyi(80, 80, 4.0, &mut rng);
+    let (nrows, ncols) = (m.nrows, m.ncols);
+    let mut e = test_engine(vec![Impl::Csr, Impl::Csb]);
+    e.register_for("acme", "m", m).unwrap();
+    e.install_kernel("acme/m", Impl::Csb, Box::new(PanicSpmm { nrows, ncols })).unwrap();
+
+    let mut server = Server::new(e, ServeConfig { queue_capacity: 16, ..ServeConfig::default() });
+    let handle = server.handle();
+    // six same-matrix jobs → one coalesced group; two of them are
+    // forced onto the planted kernel
+    let mut tickets = Vec::new();
+    for tag in 0..6u64 {
+        let spec = if tag % 3 == 0 {
+            JobSpec::new("m", 4).with_impl(Impl::Csb) // will panic
+        } else {
+            JobSpec::new("m", 4).with_impl(Impl::Csr) // healthy
+        };
+        let req = ServeRequest::spmm("acme", spec, tag).with_tag(tag);
+        tickets.push(handle.submit(req).unwrap().ticket().expect("queue has room"));
+    }
+    handle.close();
+    server.run();
+
+    for (tag, t) in tickets.iter().enumerate() {
+        let r = t.try_take().expect("shutdown fulfilled every ticket");
+        if tag % 3 == 0 {
+            match r {
+                Err(Error::Panic(msg)) => assert!(msg.contains("injected kernel fault"), "{msg}"),
+                other => panic!("job {tag} should fail with the contained panic, got {other:?}"),
+            }
+        } else {
+            let reply = r.unwrap_or_else(|e| panic!("healthy job {tag} must survive: {e}"));
+            // the group fell back to per-job isolation
+            assert!(!reply.coalesced, "a poisoned group must not report coalesced execution");
+            assert_eq!(reply.output.dense().unwrap().len(), 80 * 4);
+        }
+    }
+    assert_eq!(server.stats().jobs_done, 4);
+    assert_eq!(server.stats().jobs_failed, 2);
+    assert_eq!(server.stats().coalesced_jobs, 0, "fallback jobs are not coalesced");
+
+    // no poisoning: the same engine keeps serving after the panics
+    let rec = server.engine_mut().submit(&JobSpec::new("acme/m", 4).with_impl(Impl::Csr)).unwrap();
+    assert_eq!(rec.chosen, Impl::Csr);
+}
+
+#[test]
+fn full_queue_rejects_immediately_and_recovers_after_drain() {
+    let mut rng = Prng::new(0x5b1e);
+    let m = erdos_renyi(60, 60, 3.0, &mut rng);
+    let mut e = test_engine(vec![Impl::Csr]);
+    e.register_for("", "m", m).unwrap();
+    let mut server = Server::new(e, ServeConfig { queue_capacity: 2, ..ServeConfig::default() });
+    let handle = server.handle();
+
+    // no consumer is running here — if admission blocked on a full
+    // ring, this test would hang instead of seeing `Rejected`
+    let req = |tag| {
+        ServeRequest::spmm("", JobSpec::new("m", 4).with_impl(Impl::Csr), tag).with_tag(tag)
+    };
+    let t1 = handle.submit(req(1)).unwrap().ticket().unwrap();
+    let t2 = handle.submit(req(2)).unwrap().ticket().unwrap();
+    match handle.submit(req(3)).unwrap() {
+        Submit::Rejected { queue_depth } => assert_eq!(queue_depth, 2),
+        Submit::Accepted(_) => panic!("third job must hit backpressure"),
+    }
+    assert_eq!(handle.depth(), 2);
+
+    handle.close();
+    server.run();
+    assert!(t1.try_take().unwrap().is_ok());
+    assert!(t2.try_take().unwrap().is_ok());
+    assert_eq!(server.stats().rejected, 1);
+    assert_eq!(server.stats().jobs_done, 2);
+
+    // post-shutdown submissions fail loudly instead of queueing
+    assert!(handle.submit(req(4)).is_err(), "closed queue must refuse work");
+}
+
+#[test]
+fn shutdown_drains_every_in_flight_job_under_concurrency() {
+    let mut rng = Prng::new(0xd0a1);
+    let m = erdos_renyi(70, 70, 3.0, &mut rng);
+    let mut e = test_engine(vec![Impl::Csr]);
+    e.register_for("acme", "m", m.clone()).unwrap();
+    e.register_for("beta", "m", m).unwrap();
+    let mut server = Server::new(e, ServeConfig { queue_capacity: 64, ..ServeConfig::default() });
+    let handle = server.handle();
+    let fulfilled = AtomicUsize::new(0);
+    let clients = 3usize;
+    let per_client = 5u64;
+    let remaining = AtomicUsize::new(clients);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let h = handle.clone();
+            let fulfilled = &fulfilled;
+            let remaining = &remaining;
+            s.spawn(move || {
+                let tenant = if c % 2 == 0 { "acme" } else { "beta" };
+                let mut tickets = Vec::new();
+                for i in 0..per_client {
+                    let tag = ((c as u64) << 8) | i;
+                    let req = if i == 0 {
+                        ServeRequest::spgemm(tenant, SpGemmSpec::new("m", "m")).with_tag(tag)
+                    } else {
+                        ServeRequest::spmm(tenant, JobSpec::new("m", 4).with_impl(Impl::Csr), tag)
+                            .with_tag(tag)
+                    };
+                    tickets.push(h.submit(req).unwrap().ticket().expect("queue has room"));
+                }
+                // close races the server's drain loop: whatever was
+                // accepted must still complete
+                if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    h.close();
+                }
+                for t in tickets {
+                    t.wait().unwrap();
+                    fulfilled.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        server.run();
+    });
+    let total = clients * per_client as usize;
+    assert_eq!(fulfilled.load(Ordering::Relaxed), total);
+    assert_eq!(server.stats().jobs_done, total);
+    assert_eq!(server.stats().jobs_failed, 0);
+    assert_eq!(server.execution_log().len(), total);
+}
+
+/// Regression: `PerfLog::merge_save` used to read-modify-write the
+/// merged JSON without any interlock — two concurrent writers could
+/// both read the same base file and one's records would vanish. The
+/// merge path now holds the snapshot file lock across the
+/// read-merge-write and lands via atomic rename; interleaved writers
+/// with distinct bench names must all survive, and foreign records
+/// must be preserved verbatim.
+#[test]
+fn merge_save_interleaved_writers_preserve_every_bench() {
+    let dir = std::env::temp_dir().join("spmm_roofline_integration_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("BENCH_merge_{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(&path);
+
+    // a pre-existing foreign record (another bench's artifact)
+    let mut seed = PerfLog::new();
+    seed.push(PerfRecord::basic("bench_foreign", "m0", "Uniform Random", "CSR", 4, 4, 1.5));
+    seed.merge_save(&path).unwrap();
+
+    let writers = 4usize;
+    let rounds = 5usize;
+    std::thread::scope(|s| {
+        for w in 0..writers {
+            let path = &path;
+            s.spawn(move || {
+                for r in 0..rounds {
+                    let mut log = PerfLog::new();
+                    log.push(PerfRecord::basic(
+                        format!("bench_writer_{w}"),
+                        format!("m{r}"),
+                        "Uniform Random",
+                        "CSR",
+                        4,
+                        4,
+                        1.0 + r as f64,
+                    ));
+                    log.merge_save(path).unwrap();
+                }
+            });
+        }
+    });
+
+    let back = PerfLog::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let bench_of = |b: &str| back.records.iter().filter(|r| r.bench == b).count();
+    assert_eq!(bench_of("bench_foreign"), 1, "foreign records must survive the merges");
+    for w in 0..writers {
+        // merge_save replaces same-bench records, so each writer's
+        // *last* round is what must survive — exactly one record
+        assert_eq!(
+            bench_of(&format!("bench_writer_{w}")),
+            1,
+            "writer {w}'s records were clobbered by an interleaved writer"
+        );
+    }
+    assert_eq!(back.records.len(), 1 + writers);
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,381 @@
+//! Property tests for the concurrent serving front-end: whatever the
+//! thread interleaving, the queue admission order, or the batch
+//! coalescing did, every reply must be **bitwise identical** to a
+//! sequential replay of the same job on a fresh engine.
+//!
+//! The replay protocol (and why it is sound):
+//!
+//! * every SpMM request carries its own operand seed, and the pooled
+//!   dense operand is a pure function of `(rows, d, seed)` — recycled
+//!   buffers are cleared and refilled entirely from the passed RNG;
+//! * different kernels are *not* assumed bitwise-identical to each
+//!   other, so the replay forces the impl the server actually chose
+//!   (`JobRecord::chosen` / `SpGemmRecord::chosen`) — the property
+//!   pins the serving layer, not cross-kernel accumulation order;
+//! * autotune stays off here, so no reordering mutates layouts
+//!   mid-run (the persistence property below turns it on and replays
+//!   against the *pinned* decisions instead).
+//!
+//! Alongside: coalesced vs uncoalesced equality on an identical
+//! request list, and the persisted-autotune-state property — snapshot
+//! bytes round-trip exactly, a restarted server pins the same
+//! decisions with zero new exploration, and a corrupted snapshot
+//! cold-starts instead of panicking.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use spmm_roofline::coordinator::{
+    AutotunePolicy, Engine, EngineConfig, JobSpec, ServeConfig, ServeReply, ServeRequest,
+    ServeWork, Server, SpGemmSpec, Submit, WorkloadOutcome,
+};
+use spmm_roofline::gen::{banded, erdos_renyi, mesh2d, MeshKind, Prng};
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::report::AutotuneState;
+use spmm_roofline::sparse::Csr;
+use spmm_roofline::spgemm::SpGemmImpl;
+use spmm_roofline::spmm::Impl;
+use spmm_roofline::testutil::{assert_close_slice, assert_csr_eq, check};
+
+fn serve_engine(autotune: AutotunePolicy) -> Engine {
+    Engine::new(EngineConfig {
+        threads: 2,
+        machine: Some(MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 }),
+        iters: 1,
+        warmup: 0,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+        artifacts_dir: None,
+        autotune,
+    })
+    .unwrap()
+}
+
+/// A small structurally-mixed matrix set for one case. The same
+/// matrices are registered into the serving engine and the replay
+/// engine, under two tenants: `m0`/`m1` exist in both (shared local
+/// names — the tenant scoping must keep them apart), `m2` only under
+/// `acme` (disjoint).
+fn case_matrices(rng: &mut Prng) -> Vec<(&'static str, Csr)> {
+    // m0 is square: the scripts submit its self-product
+    let n0 = 90 + rng.below_usize(40);
+    vec![
+        ("m0", erdos_renyi(n0, n0, 4.0, rng)),
+        ("m1", banded(80 + rng.below_usize(40), 4, 0.5, rng)),
+        ("m2", mesh2d(9, MeshKind::Triangular, 0.9, rng)),
+    ]
+}
+
+fn register_all(e: &mut Engine, mats: &[(&'static str, Csr)]) {
+    for (name, m) in mats {
+        e.register_for("acme", name, m.clone()).unwrap();
+        if *name != "m2" {
+            e.register_for("beta", name, m.clone()).unwrap();
+        }
+    }
+}
+
+/// The per-client request script: a seeded SpMM/SpGemm mix over
+/// shared and (for acme) disjoint matrices, tags globally unique.
+fn client_script(c: usize, case_seed: u64, rng: &mut Prng) -> Vec<ServeRequest> {
+    let tenant = if c % 2 == 0 { "acme" } else { "beta" };
+    let mut out = Vec::new();
+    let mut tag = (c as u64) << 32;
+    let n_jobs = 3 + rng.below_usize(4); // 3..=6 per client
+    for i in 0..n_jobs {
+        let pick = rng.below_usize(4);
+        if pick == 3 {
+            // sparse×sparse leg on a shared matrix
+            out.push(ServeRequest::spgemm(tenant, SpGemmSpec::new("m0", "m0")).with_tag(tag));
+        } else {
+            let name = if pick == 2 && tenant == "acme" {
+                "m2"
+            } else if pick == 1 {
+                "m1"
+            } else {
+                "m0"
+            };
+            let d = [3usize, 5, 8][rng.below_usize(3)];
+            let seed = case_seed ^ ((c as u64) << 16) ^ (i as u64);
+            out.push(ServeRequest::spmm(tenant, JobSpec::new(name, d), seed).with_tag(tag));
+        }
+        tag += 1;
+    }
+    out
+}
+
+/// Drive a server with `clients` concurrent threads submitting the
+/// given scripts; returns every reply keyed by tag. The queue is
+/// sized to the full offered load, so nothing is rejected and every
+/// request must come back exactly once.
+fn serve_concurrently(
+    mut server: Server,
+    scripts: &[Vec<ServeRequest>],
+) -> (HashMap<u64, ServeReply>, Server) {
+    let total: usize = scripts.iter().map(|s| s.len()).sum();
+    let handle = server.handle();
+    let remaining = AtomicUsize::new(scripts.len());
+    let replies: Mutex<HashMap<u64, ServeReply>> = Mutex::new(HashMap::new());
+    std::thread::scope(|s| {
+        for script in scripts {
+            let h = handle.clone();
+            let remaining = &remaining;
+            let replies = &replies;
+            s.spawn(move || {
+                let mut tickets = Vec::new();
+                for req in script {
+                    match h.submit(req.clone()).unwrap() {
+                        Submit::Accepted(t) => tickets.push(t),
+                        Submit::Rejected { queue_depth } => {
+                            panic!("queue sized for the full load rejected at {queue_depth}")
+                        }
+                    }
+                }
+                if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    h.close();
+                }
+                let mut got = HashMap::new();
+                for t in tickets {
+                    let r = t.wait().unwrap();
+                    assert!(got.insert(r.tag, r).is_none(), "duplicate tag in replies");
+                }
+                replies.lock().unwrap().extend(got);
+            });
+        }
+        server.run();
+    });
+    let replies = replies.into_inner().unwrap();
+    assert_eq!(replies.len(), total, "every accepted job must be answered");
+    (replies, server)
+}
+
+/// Replay one served request sequentially on the given engine,
+/// forcing the impl the server chose, and demand bitwise equality.
+fn replay_one(e: &mut Engine, req: &ServeRequest, reply: &ServeReply) {
+    match (&req.work, &reply.outcome) {
+        (ServeWork::SpMM { spec, seed }, WorkloadOutcome::SpMM(rec)) => {
+            assert_eq!(rec.d, spec.d);
+            let forced = Server::scoped_spmm(&req.tenant, spec).with_impl(rec.chosen);
+            let (rec2, out2) = e.submit_collect(&forced, *seed).unwrap();
+            assert_eq!(rec2.chosen, rec.chosen);
+            let got = reply.output.dense().expect("SpMM reply carries a dense product");
+            assert_close_slice(got, &out2, 0.0);
+        }
+        (ServeWork::SpGemm { spec }, WorkloadOutcome::SpGemm(rec)) => {
+            let mut forced = Server::scoped_spgemm(&req.tenant, spec);
+            forced.force_impl = Some(rec.chosen);
+            let (rec2, c2) = e.submit_spgemm_collect(&forced).unwrap();
+            assert_eq!(rec2.chosen, rec.chosen);
+            let got = reply.output.sparse().expect("SpGEMM reply carries a CSR product");
+            assert_csr_eq(got, &c2, 0.0);
+        }
+        _ => panic!("reply workload kind does not match its request"),
+    }
+}
+
+/// Tentpole property: 2–8 client threads × seeded SpMM/SpGEMM mixes
+/// over shared and disjoint matrices — every concurrent (possibly
+/// coalesced) result equals the sequential replay, bit for bit.
+#[test]
+fn concurrent_serving_is_bitwise_equal_to_sequential_replay() {
+    check(0x5e21e, 4, |rng| {
+        let case_seed = rng.next_u64();
+        let mats = case_matrices(rng);
+        let clients = 2 + rng.below_usize(7); // 2..=8
+        let scripts: Vec<Vec<ServeRequest>> =
+            (0..clients).map(|c| client_script(c, case_seed, rng)).collect();
+        let total: usize = scripts.iter().map(|s| s.len()).sum();
+        let by_tag: HashMap<u64, ServeRequest> =
+            scripts.iter().flatten().map(|r| (r.tag, r.clone())).collect();
+        assert_eq!(by_tag.len(), total, "tags must be unique");
+
+        let mut e1 = serve_engine(AutotunePolicy::default());
+        register_all(&mut e1, &mats);
+        let server = Server::new(
+            e1,
+            ServeConfig { queue_capacity: total.max(1), max_drain: 5, ..ServeConfig::default() },
+        );
+        let (replies, server) = serve_concurrently(server, &scripts);
+        assert_eq!(server.stats().jobs_done, total);
+        assert_eq!(server.stats().jobs_failed, 0);
+        assert_eq!(server.execution_log().len(), total);
+
+        let mut e2 = serve_engine(AutotunePolicy::default());
+        register_all(&mut e2, &mats);
+        for (tag, reply) in &replies {
+            replay_one(&mut e2, &by_tag[tag], reply);
+        }
+        Ok(())
+    });
+}
+
+/// Coalescing is a pure scheduling optimisation: the same
+/// single-client request list served with coalescing on and off
+/// yields bitwise-identical outputs per tag (and the coalescing
+/// server really did merge something).
+#[test]
+fn coalesced_and_uncoalesced_servers_agree_bitwise() {
+    check(0xc0a1, 3, |rng| {
+        let case_seed = rng.next_u64();
+        let mats = case_matrices(rng);
+        // One script with repeated same-matrix jobs → mergeable pairs.
+        // Impls are forced: the on/off runs route independently, and
+        // unforced priors drift with timing — the property under test
+        // is the *coalescing*, not cross-kernel bit-equality.
+        let mut script: Vec<ServeRequest> = client_script(0, case_seed, rng)
+            .into_iter()
+            .map(|mut r| {
+                match &mut r.work {
+                    ServeWork::SpMM { spec, .. } => spec.force_impl = Some(Impl::Csr),
+                    ServeWork::SpGemm { spec } => spec.force_impl = Some(SpGemmImpl::Hash),
+                }
+                r
+            })
+            .collect();
+        let dup: Vec<ServeRequest> = script
+            .iter()
+            .filter(|r| matches!(r.work, ServeWork::SpMM { .. }))
+            .map(|r| r.clone().with_tag(r.tag | (1 << 60)))
+            .collect();
+        assert!(!dup.is_empty(), "script must contain SpMM work");
+        script.extend(dup);
+
+        let mut run = |coalesce: bool| {
+            let mut e = serve_engine(AutotunePolicy::default());
+            register_all(&mut e, &mats);
+            // single-threaded protocol: enqueue everything, close,
+            // then drain — fully deterministic
+            let mut server = Server::new(
+                e,
+                ServeConfig { queue_capacity: script.len(), coalesce, ..ServeConfig::default() },
+            );
+            let handle = server.handle();
+            let tickets: Vec<_> = script
+                .iter()
+                .map(|r| handle.submit(r.clone()).unwrap().ticket().expect("sized queue"))
+                .collect();
+            handle.close();
+            server.run();
+            let replies: Vec<ServeReply> = tickets.iter().map(|t| t.wait().unwrap()).collect();
+            (replies, server.stats().clone())
+        };
+        let (on, on_stats) = run(true);
+        let (off, off_stats) = run(false);
+        assert!(on_stats.coalesced_jobs > 0, "duplicated SpMM jobs must coalesce");
+        assert_eq!(off_stats.coalesced_jobs, 0, "coalescing was off");
+        assert_eq!(on_stats.jobs_done, off_stats.jobs_done);
+        for (a, b) in on.iter().zip(&off) {
+            assert_eq!(a.tag, b.tag, "ticket order is submission order");
+            match (&a.output, &b.output) {
+                (o1, o2) if o1.dense().is_some() => assert_close_slice(
+                    o1.dense().unwrap(),
+                    o2.dense().expect("kind must match"),
+                    0.0,
+                ),
+                (o1, o2) => assert_csr_eq(o1.sparse().unwrap(), o2.sparse().unwrap(), 0.0),
+            }
+        }
+        Ok(())
+    });
+}
+
+fn temp_state_path(tag: &str, case: u64) -> String {
+    let dir = std::env::temp_dir().join("spmm_roofline_prop_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("state_{}_{}_{}.json", tag, std::process::id(), case))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// Persistence property: the snapshot a serving run saves at shutdown
+/// round-trips byte-identically through parse→emit, and a second
+/// server constructed over the same registrations loads it, pins the
+/// same decisions, and serves the same mix with **zero** new
+/// exploration measurements. A corrupted or truncated snapshot must
+/// cold-start (with a warning) instead of panicking.
+#[test]
+fn persisted_state_round_trips_and_skips_exploration() {
+    check(0x9e51, 3, |rng| {
+        let case_seed = rng.next_u64();
+        let path = temp_state_path("rt", case_seed);
+        let _ = std::fs::remove_file(&path);
+        let mats = case_matrices(rng);
+        let scripts: Vec<Vec<ServeRequest>> =
+            (0..2).map(|c| client_script(c, case_seed, rng)).collect();
+        let quick = AutotunePolicy {
+            explore_iters: 1,
+            explore_min_secs: 0.0,
+            ..AutotunePolicy::enabled()
+        };
+
+        // run 1: tune while serving, persist at shutdown
+        let mut e1 = serve_engine(quick.clone());
+        register_all(&mut e1, &mats);
+        let server = Server::new(
+            e1,
+            ServeConfig {
+                queue_capacity: 64,
+                state_path: Some(path.clone()),
+                ..ServeConfig::default()
+            },
+        );
+        assert!(!server.restored(), "nothing to restore on the first run");
+        let (_, server) = serve_concurrently(server, &scripts);
+        let explored = server.engine().autotuner().measurements();
+        assert!(explored > 0, "first run must explore");
+        drop(server);
+
+        // byte-exact round trip: file → parse → emit → same bytes
+        let bytes1 = std::fs::read_to_string(&path).unwrap();
+        let state = AutotuneState::load(&path).unwrap();
+        assert!(!state.is_empty());
+        assert_eq!(state.to_json(), bytes1, "save→load→save must be byte-identical");
+
+        // run 2: restored server serves the same mix without exploring
+        let mut e2 = serve_engine(quick.clone());
+        register_all(&mut e2, &mats);
+        let server2 = Server::new(
+            e2,
+            ServeConfig {
+                queue_capacity: 64,
+                state_path: Some(path.clone()),
+                ..ServeConfig::default()
+            },
+        );
+        assert!(server2.restored(), "snapshot must load");
+        let (_, server2) = serve_concurrently(server2, &scripts);
+        assert_eq!(
+            server2.engine().autotuner().measurements(),
+            0,
+            "restored decisions pin every job — zero new exploration"
+        );
+        // and the decisions themselves are the run-1 decisions
+        let again = server2.engine().export_state();
+        assert_eq!(again.routes.len(), state.routes.len());
+        for (a, b) in again.routes.iter().zip(&state.routes) {
+            assert_eq!(
+                (a.matrix.clone(), a.d, a.im, a.reorder),
+                (b.matrix.clone(), b.d, b.im, b.reorder)
+            );
+        }
+        drop(server2);
+
+        // corruption: truncate the snapshot mid-record → cold start
+        let truncated = &bytes1[..bytes1.len() / 2];
+        std::fs::write(&path, truncated).unwrap();
+        let mut e3 = serve_engine(quick);
+        register_all(&mut e3, &mats);
+        let server3 = Server::new(
+            e3,
+            ServeConfig {
+                queue_capacity: 64,
+                state_path: Some(path.clone()),
+                ..ServeConfig::default()
+            },
+        );
+        assert!(!server3.restored(), "corrupt snapshot must cold-start, not panic");
+        let _ = std::fs::remove_file(&path);
+        Ok(())
+    });
+}
