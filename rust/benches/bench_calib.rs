@@ -1,0 +1,127 @@
+//! Bench: the measured calibration ladder end to end.
+//!
+//! Runs the per-cache-level read/write/triad bandwidth sweep plus the
+//! width-aware FMA peak probe (`membench::calibrate_with`), prints the
+//! resulting `MeasuredLadder`, then proves the restart contract: the
+//! ladder is persisted through an `AutotuneState` snapshot and a
+//! second engine restoring that snapshot reports a *measured* planner
+//! ladder without running any sweep of its own.
+//!
+//! `REPRO_SCALE` (default 0.25) scales the sweep cap and peak iters;
+//! `REPRO_ITERS` (default 3) sets the reps per point; `REPRO_FAST=1`
+//! injects nominal machine parameters for the engines (no STREAM run —
+//! CI smoke mode). Writes one `BENCH_calib.json` record per rung plus
+//! a peak record and asserts every ladder level name landed in the
+//! artifact.
+
+use spmm_roofline::coordinator::{AutotunePolicy, Engine, EngineConfig, LadderSource};
+use spmm_roofline::membench::{calibrate_with, CalibConfig};
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::report::{PerfLog, PerfRecord};
+use spmm_roofline::spmm::Impl;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env1(key: &str) -> bool {
+    std::env::var(key).map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    let scale = envf("REPRO_SCALE", 0.25).max(0.001);
+    let reps = (envf("REPRO_ITERS", 3.0) as usize).max(1);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let ccfg = CalibConfig {
+        reps,
+        max_len: (((64usize << 20) as f64 * scale) as usize).max(1 << 12),
+        peak_iters: ((4_000_000f64 * scale) as usize).max(10_000),
+    };
+    println!(
+        "calibrating: {threads} threads, {reps} reps, sweep cap {} doubles, peak iters {}",
+        ccfg.max_len, ccfg.peak_iters
+    );
+    let ml = calibrate_with(threads, ccfg);
+    for l in &ml.levels {
+        println!(
+            "  {:>5}: read {:.2}  write {:.2}  triad {:.2} GB/s",
+            l.level, l.read_gbs, l.write_gbs, l.triad_gbs
+        );
+    }
+    println!("  peak {:.2} GFLOP/s (simd {})", ml.peak_gflops, ml.simd_level);
+
+    // — restart contract: persist → restore → planner prefers measured —
+    let machine = if env1("REPRO_FAST") {
+        Some(MachineParams { beta_gbs: 25.0, pi_gflops: 100.0 })
+    } else {
+        None
+    };
+    let cfg = EngineConfig {
+        threads,
+        machine,
+        iters: 1,
+        warmup: 0,
+        impls: vec![Impl::Csr],
+        artifacts_dir: None,
+        autotune: AutotunePolicy::default(),
+    };
+    let path = std::env::temp_dir().join(format!("bench_calib_state_{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    let mut e1 = Engine::new(cfg.clone()).expect("engine construction");
+    e1.install_measured_ladder(ml.clone());
+    e1.save_state(&path).expect("persist snapshot");
+    let mut e2 = Engine::new(cfg).expect("engine construction");
+    assert_eq!(e2.planner().ladder_source(), LadderSource::Nominal);
+    assert!(e2.load_state(&path), "healthy snapshot must load");
+    assert_eq!(
+        e2.planner().ladder_source(),
+        LadderSource::Measured,
+        "restored engine must prefer the measured ladder"
+    );
+    assert_eq!(e2.measured_ladder(), Some(&ml), "ladder must survive the snapshot round trip");
+    let _ = std::fs::remove_file(&path);
+    println!("restart contract: restored engine prefers the measured ladder, zero re-measurement");
+
+    // — artifact: one record per rung (measured β) plus the peak probe —
+    let mut log = PerfLog::new();
+    for l in &ml.levels {
+        log.push(PerfRecord {
+            predicted_gflops: l.triad_gbs,
+            ..PerfRecord::basic(
+                "bench_calib",
+                l.level.clone(),
+                "calib",
+                ml.simd_level.clone(),
+                ml.threads,
+                0,
+                l.beta_gbs(),
+            )
+        });
+    }
+    log.push(PerfRecord {
+        predicted_gflops: ml.peak_gflops,
+        ..PerfRecord::basic(
+            "bench_calib",
+            "peak",
+            "calib",
+            ml.simd_level.clone(),
+            ml.threads,
+            0,
+            ml.peak_gflops,
+        )
+    });
+    log.merge_save("BENCH_calib.json").expect("write BENCH_calib.json");
+    let text = std::fs::read_to_string("BENCH_calib.json").expect("read artifact back");
+    for l in &ml.levels {
+        assert!(
+            text.contains(&format!("\"{}\"", l.level)),
+            "BENCH_calib.json is missing ladder level {}",
+            l.level
+        );
+    }
+    assert!(text.contains("\"peak\""), "BENCH_calib.json is missing the peak record");
+    println!(
+        "wrote BENCH_calib.json ({} rung records + peak, all levels present)",
+        ml.levels.len()
+    );
+}

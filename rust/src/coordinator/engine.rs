@@ -9,7 +9,7 @@ use crate::coordinator::planner::Planner;
 use crate::coordinator::registry::MatrixRegistry;
 use crate::error::{Error, Result};
 use crate::gen::Prng;
-use crate::membench;
+use crate::membench::{self, MeasuredLadder};
 use crate::metrics::{bench_adaptive_checked, gflops, spmm_flops, Timer};
 use crate::model::{MachineParams, Roofline, SpGemmParams};
 use crate::report::AutotuneState;
@@ -81,6 +81,10 @@ pub struct Engine {
     buffers: BufferPool,
     /// The adaptive router (pinned per-(matrix, d) decisions).
     tuner: Autotuner,
+    /// The measured calibration ladder, when one was run or restored —
+    /// kept so `export_state` can persist exactly what the planner is
+    /// using.
+    ladder: Option<MeasuredLadder>,
 }
 
 impl Engine {
@@ -114,7 +118,32 @@ impl Engine {
             rng: Prng::new(0x5eed),
             buffers: BufferPool::new(),
             tuner,
+            ladder: None,
         })
+    }
+
+    /// Install a measured calibration ladder: the planner's tiled
+    /// roofline switches from the nominal prior to the measured one
+    /// ([`Planner::install_measured`]) and the ladder is kept for
+    /// [`Engine::export_state`], so a restarted engine re-installs it
+    /// instead of re-measuring.
+    pub fn install_measured_ladder(&mut self, ml: MeasuredLadder) {
+        self.planner.install_measured(ml.to_roofline());
+        self.ladder = Some(ml);
+    }
+
+    /// Run the full calibration sweep ([`membench::calibrate`]) on this
+    /// engine's thread count and install the result. Seconds of
+    /// wall-clock — call once, persist via [`Engine::save_state`].
+    pub fn calibrate_ladder(&mut self) -> MeasuredLadder {
+        let ml = membench::calibrate(self.config.threads);
+        self.install_measured_ladder(ml.clone());
+        ml
+    }
+
+    /// The installed measured ladder, if any.
+    pub fn measured_ladder(&self) -> Option<&MeasuredLadder> {
+        self.ladder.as_ref()
     }
 
     /// The machine parameters the roofline uses.
@@ -542,13 +571,15 @@ impl Engine {
     }
 
     /// Snapshot everything the router learned: pinned SpMM/SpGEMM
-    /// decisions and the planner's materialised priors.
+    /// decisions, the planner's materialised priors, and the measured
+    /// calibration ladder (when one is installed).
     pub fn export_state(&self) -> AutotuneState {
         AutotuneState {
             routes: self.tuner.decisions().into_iter().cloned().collect(),
             spgemm: self.tuner.spgemm_decisions().into_iter().cloned().collect(),
             spmm_priors: self.planner.priors_snapshot(),
             spgemm_priors: self.planner.spgemm_priors_snapshot(),
+            ladder: self.ladder.clone(),
         }
     }
 
@@ -561,6 +592,12 @@ impl Engine {
     /// decisions). Returns how many decisions were adopted; adopted
     /// decisions serve with zero new exploration measurements.
     pub fn restore_state(&mut self, state: &AutotuneState) -> usize {
+        // the measured ladder restores first: it is machine state, not
+        // matrix state, so it applies regardless of what is registered
+        // — and skipping the re-measurement is the whole point
+        if let Some(ml) = &state.ladder {
+            self.install_measured_ladder(ml.clone());
+        }
         for &(c, i, v) in &state.spmm_priors {
             self.planner.set_prior(c, i, v);
         }
@@ -1007,6 +1044,56 @@ mod tests {
         // decisions for unregistered matrices are skipped, not errors
         let mut e3 = test_engine_with(quick_autotune());
         assert_eq!(e3.restore_state(&state), 0);
+    }
+
+    #[test]
+    fn restored_ladder_installs_without_remeasuring() {
+        use crate::coordinator::LadderSource;
+        use crate::membench::{LadderLevel, MeasuredLadder};
+        // a hand-built ladder: both engines use injected machine params,
+        // so no bandwidth sweep or peak probe ever runs in this test
+        let ml = MeasuredLadder {
+            levels: vec![
+                LadderLevel {
+                    level: "L1".into(),
+                    capacity_bytes: 32 * 1024,
+                    read_gbs: 400.0,
+                    write_gbs: 280.0,
+                    triad_gbs: 390.0,
+                },
+                LadderLevel {
+                    level: "DRAM".into(),
+                    capacity_bytes: usize::MAX,
+                    read_gbs: 18.0,
+                    write_gbs: 13.0,
+                    triad_gbs: 19.0,
+                },
+            ],
+            peak_gflops: 64.0,
+            simd_level: "avx".into(),
+            threads: 2,
+        };
+        let mut e1 = test_engine();
+        assert_eq!(e1.planner().ladder_source(), LadderSource::Nominal);
+        e1.install_measured_ladder(ml.clone());
+        assert_eq!(e1.planner().ladder_source(), LadderSource::Measured);
+        let state = e1.export_state();
+        assert_eq!(state.ladder.as_ref(), Some(&ml));
+
+        // a restarted engine adopts the measured ladder from the
+        // snapshot — the planner prefers it over the nominal prior and
+        // no re-calibration happens
+        let mut e2 = test_engine();
+        assert_eq!(e2.planner().ladder_source(), LadderSource::Nominal);
+        e2.restore_state(&state);
+        assert_eq!(e2.planner().ladder_source(), LadderSource::Measured);
+        assert_eq!(e2.measured_ladder(), Some(&ml));
+        assert_eq!(e2.planner().ladder().pi_gflops, 64.0);
+        // routing still flows end-to-end through the measured ladder
+        let a = erdos_renyi(200, 200, 4.0, &mut Prng::new(202));
+        e2.register("m", a).unwrap();
+        let rec = e2.submit(&JobSpec::new("m", 8)).unwrap();
+        assert!(rec.predicted_gflops > 0.0);
     }
 
     #[test]

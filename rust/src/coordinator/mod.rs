@@ -78,7 +78,7 @@ pub use autotune::{
 pub use batch::{BatchReport, BufferPool};
 pub use engine::{Engine, EngineConfig, WorkloadOutcome};
 pub use job::{JobRecord, JobSpec, PredictionReport, SpGemmRecord, SpGemmSpec, Workload};
-pub use planner::{Planner, Prediction, SpGemmPrediction};
+pub use planner::{LadderSource, Planner, Prediction, SpGemmPrediction};
 pub use registry::{MatrixEntry, MatrixRegistry};
 pub use serve::{
     JobQueue, Server, ServeConfig, ServeHandle, ServeOutput, ServeReply, ServeRequest, ServeStats,

@@ -68,11 +68,35 @@ pub struct SpGemmPrediction {
     pub cf: f64,
 }
 
+/// Where the planner's bandwidth ladder came from — the nominal
+/// scaled-β prior, or a real [`crate::membench::MeasuredLadder`]
+/// sweep. A measured ladder always wins: `install_measured` replaces
+/// the nominal one, and a restored autotune snapshot re-installs it
+/// without re-measuring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LadderSource {
+    /// `CacheAwareRoofline::nominal` — DRAM β scaled 2× per level.
+    Nominal,
+    /// `membench::calibrate` — per-level read/write/triad sweep.
+    Measured,
+}
+
+impl std::fmt::Display for LadderSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            LadderSource::Nominal => "nominal",
+            LadderSource::Measured => "measured",
+        })
+    }
+}
+
 /// Roofline-guided planner with online prior refinement.
 pub struct Planner {
     roofline: Roofline,
     /// Per-level bandwidth ceilings used for tile-width selection.
     ladder: CacheAwareRoofline,
+    /// Provenance of `ladder` (measured beats nominal).
+    ladder_source: LadderSource,
     /// (class, impl) → efficiency prior (fraction of roof).
     priors: Mutex<HashMap<(SparsityClass, Impl), f64>>,
     /// (class, SpGEMM impl) → efficiency prior — the same learning
@@ -178,10 +202,21 @@ impl Planner {
         Planner {
             roofline,
             ladder,
+            ladder_source: LadderSource::Nominal,
             priors: Mutex::new(HashMap::new()),
             spgemm_priors: Mutex::new(HashMap::new()),
             ema: 0.3,
         }
+    }
+
+    /// Install a measured bandwidth/peak ladder
+    /// ([`crate::membench::MeasuredLadder::to_roofline`]): it replaces
+    /// the nominal prior for every subsequent tile-width selection and
+    /// ceiling lookup, and [`Planner::ladder_source`] reports
+    /// `Measured` so reports (and tests) can pin the preference.
+    pub fn install_measured(&mut self, ladder: CacheAwareRoofline) {
+        self.ladder = ladder;
+        self.ladder_source = LadderSource::Measured;
     }
 
     /// The flat roofline used for reports.
@@ -192,6 +227,11 @@ impl Planner {
     /// The bandwidth ladder used for tile selection.
     pub fn ladder(&self) -> &CacheAwareRoofline {
         &self.ladder
+    }
+
+    /// Provenance of the active ladder.
+    pub fn ladder_source(&self) -> LadderSource {
+        self.ladder_source
     }
 
     /// Current prior for (class, impl).
@@ -612,6 +652,49 @@ mod tests {
         let tighter = p.predict_spgemm(&cls, params.with_cf(16.0), SpGemmImpl::Hash);
         assert!(tighter.ai > after.ai);
         assert_eq!(tighter.cf, 16.0);
+    }
+
+    #[test]
+    fn measured_ladder_is_preferred_over_nominal() {
+        use crate::membench::{LadderLevel, MeasuredLadder};
+        let machine = MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 };
+        let mut p = Planner::new(Roofline::new(machine));
+        assert_eq!(p.ladder_source(), LadderSource::Nominal);
+        // a measured ladder whose DRAM rung disagrees hard with the
+        // nominal β: installation must swap both the ceilings and π
+        let ml = MeasuredLadder {
+            levels: vec![
+                LadderLevel {
+                    level: "L1".into(),
+                    capacity_bytes: 32 << 10,
+                    read_gbs: 250.0,
+                    write_gbs: 180.0,
+                    triad_gbs: 240.0,
+                },
+                LadderLevel {
+                    level: "DRAM".into(),
+                    capacity_bytes: usize::MAX,
+                    read_gbs: 17.0,
+                    write_gbs: 12.0,
+                    triad_gbs: 18.5,
+                },
+            ],
+            peak_gflops: 77.0,
+            simd_level: "avx".into(),
+            threads: 2,
+        };
+        p.install_measured(ml.to_roofline());
+        assert_eq!(p.ladder_source(), LadderSource::Measured);
+        assert_eq!(p.ladder().pi_gflops, 77.0);
+        // working set in the fast rung earns the measured 250, not
+        // the nominal scaled β; DRAM earns the measured 18.5, not 10
+        assert_eq!(p.ladder().attainable_gflops(0.1, 1 << 10), 25.0);
+        assert_eq!(p.ladder().attainable_gflops(0.1, 1 << 30), 1.85);
+        // predictions flow through the measured ladder
+        let a = erdos_renyi(500, 500, 5.0, &mut Prng::new(0x5e0));
+        let cls = classify(&a);
+        let pred = p.predict(&cls, 8, Impl::Csr);
+        assert!(pred.roof_gflops > 0.0);
     }
 
     #[test]

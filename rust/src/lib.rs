@@ -23,9 +23,18 @@
 //!   d-specialised "OPT" kernel (the MKL stand-in), block-parallel CSB,
 //!   padded ELL, dense-tile BSR, and two-phase propagation-blocking PB
 //!   ([`spmm::PbSpmm`]) — all multithreaded over the persistent worker
-//!   pool (below) and all executing through a precomputed
+//!   pool (below), all executing through a precomputed
 //!   [`spmm::Schedule`] (nnz-balanced partitions + model-chosen column
-//!   tiles, `spmm/schedule.rs`).
+//!   tiles + nnz row bins, `spmm/schedule.rs`), and all running their
+//!   inner loops through the runtime-dispatched SIMD micro-kernels
+//!   ([`spmm::simd`]: scalar/SSE2/AVX, probed once, bitwise-identical
+//!   across widths).
+//! * **Machine calibration** ([`membench`]): the STREAM port and FMA
+//!   peak loop for the flat roofline, plus the per-cache-level
+//!   read/write/triad sweep and width-aware peak probe producing a
+//!   [`membench::MeasuredLadder`] the planner prefers over its nominal
+//!   ladder ([`coordinator::Planner::install_measured`]) — persisted
+//!   in the autotune snapshot so restarts skip re-calibration.
 //! * **Sparsity-aware roofline models** ([`model`]): the paper's four
 //!   arithmetic-intensity formulas (Eqs. 2, 3, 4, 6), the blocked-column
 //!   occupancy model `z = t(1-e^{-D/t})`, the scale-free hub-mass

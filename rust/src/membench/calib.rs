@@ -1,0 +1,379 @@
+//! The measured calibration path: a per-cache-level read/write/triad
+//! bandwidth sweep plus a width-aware FMA peak probe, packaged as a
+//! [`MeasuredLadder`] the planner consumes *in preference to* the
+//! calibration-free `CacheAwareRoofline::nominal` prior.
+//!
+//! `nominal` guesses each level's bandwidth as DRAM `β` scaled by
+//! conventional 2×-per-level multipliers; this module measures it. The
+//! sweep runs three kernels per level at a working set sized to sit
+//! inside that level:
+//!
+//! * **read** — a sum reduction (1 array in, nothing out): the pure
+//!   load bandwidth an SpMM `B`-panel gather is bounded by,
+//! * **write** — a fill (1 array out): the `C`-zeroing / spill-phase
+//!   store bandwidth,
+//! * **triad** — STREAM Triad `a = b + s·c` (3 arrays): the mixed
+//!   pattern the flat STREAM calibration quotes.
+//!
+//! The peak probe chains independent FMAs as wide as the dispatched
+//! micro-kernel tier ([`crate::spmm::simd::level`]): `_mm256_fmadd_pd`
+//! over 4 f64 lanes when AVX+FMA are live, the scalar `mul_add` chain
+//! otherwise — so `π` reflects the ISA the kernels actually run, not
+//! an abstract nameplate.
+//!
+//! Calibration is seconds of wall time, so the result is persisted in
+//! the autotune snapshot ([`crate::report::AutotuneState`]) and a
+//! restarted engine installs it without re-measuring — exactly as it
+//! skips re-exploration. `MODELS.md` §7 derives how the substitution
+//! moves each prediction term; the `calib` CLI command prints the
+//! measured-vs-nominal-vs-cachesim cross-validation table.
+
+use crate::membench::cache_levels;
+use crate::metrics::Timer;
+use crate::model::{BandwidthCeiling, CacheAwareRoofline};
+use crate::spmm::pool::parallel_ranges;
+use crate::spmm::simd;
+
+/// One measured rung: a named memory level with its capacity and the
+/// three per-kernel bandwidths. The DRAM rung carries
+/// `capacity_bytes == usize::MAX`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LadderLevel {
+    pub level: String,
+    pub capacity_bytes: usize,
+    pub read_gbs: f64,
+    pub write_gbs: f64,
+    pub triad_gbs: f64,
+}
+
+impl LadderLevel {
+    /// The bandwidth the roofline uses for this rung — the paper's
+    /// convention (`StreamResult::beta_gbs`) of quoting the best
+    /// kernel, since each model term is bounded by the pattern that
+    /// dominates it.
+    pub fn beta_gbs(&self) -> f64 {
+        self.read_gbs.max(self.write_gbs).max(self.triad_gbs)
+    }
+}
+
+/// A fully measured bandwidth/peak ladder: what
+/// [`CacheAwareRoofline::nominal`] guesses, measured. Built by
+/// [`calibrate`], installed into the planner
+/// (`coordinator::Planner::install_measured`), and persisted in the
+/// autotune snapshot so restarts skip the sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredLadder {
+    /// Rungs ordered by capacity ascending, DRAM last.
+    pub levels: Vec<LadderLevel>,
+    /// Measured compute roof (GFLOP/s) from the width-aware FMA probe.
+    pub peak_gflops: f64,
+    /// The dispatched micro-kernel tier the probe ran at
+    /// ([`crate::spmm::simd::SimdLevel::name`]).
+    pub simd_level: String,
+    /// Worker threads the sweep ran with.
+    pub threads: usize,
+}
+
+impl MeasuredLadder {
+    /// The roofline ladder the planner consumes. Mirrors the `nominal`
+    /// construction so the two are drop-in interchangeable: cache
+    /// capacities are halved as the effective residency threshold
+    /// (a working set at nominal capacity thrashes against the
+    /// kernel's other streams), DRAM keeps `usize::MAX`, and `π` is
+    /// the measured peak.
+    pub fn to_roofline(&self) -> CacheAwareRoofline {
+        assert!(!self.levels.is_empty());
+        let ceilings = self
+            .levels
+            .iter()
+            .map(|l| BandwidthCeiling {
+                level: l.level.clone(),
+                capacity_bytes: if l.capacity_bytes == usize::MAX {
+                    usize::MAX
+                } else {
+                    (l.capacity_bytes / 2).max(1)
+                },
+                beta_gbs: l.beta_gbs(),
+            })
+            .collect();
+        CacheAwareRoofline::new(ceilings, self.peak_gflops)
+    }
+
+    /// The flat machine parameters this ladder degenerates to (DRAM β,
+    /// measured π) — usable anywhere a `MachineParams` is.
+    pub fn flat(&self) -> crate::model::MachineParams {
+        crate::model::MachineParams {
+            beta_gbs: self.levels.last().map(|l| l.beta_gbs()).unwrap_or(0.0),
+            pi_gflops: self.peak_gflops,
+        }
+    }
+}
+
+/// Knobs for the sweep — the defaults are the real calibration; CI
+/// smoke runs pass tiny values so the job finishes in milliseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct CalibConfig {
+    /// Timed repetitions per kernel per level (best-of).
+    pub reps: usize,
+    /// Cap on elements per array (bounds the DRAM rung's footprint).
+    pub max_len: usize,
+    /// Iterations per FMA chain in the peak probe.
+    pub peak_iters: usize,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig { reps: 5, max_len: 64 << 20, peak_iters: 4_000_000 }
+    }
+}
+
+fn touch(x: f64) {
+    unsafe { std::ptr::read_volatile(&x) };
+}
+
+// RawParts shim: scoped pool workers write disjoint ranges.
+struct Raw(*mut f64);
+unsafe impl Send for Raw {}
+unsafe impl Sync for Raw {}
+
+/// Best-of-`reps` seconds for one timed closure.
+fn best_of<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = Timer::start();
+        f();
+        best = best.min(t.elapsed_secs());
+    }
+    best
+}
+
+/// Measure read (sum-reduce), write (fill) and triad bandwidth over
+/// arrays of `len` f64 elements.
+fn sweep_level(len: usize, threads: usize, reps: usize) -> (f64, f64, f64) {
+    let mut a = vec![1.0f64; len];
+    let mut b = vec![2.0f64; len];
+    let mut c = vec![0.5f64; len];
+    let scalar = 3.0f64;
+
+    // read: 1 array of traffic
+    let tr = best_of(reps, || {
+        let ap = Raw(a.as_mut_ptr());
+        parallel_ranges(len, threads, |r| {
+            let ap = &ap;
+            let mut acc = 0.0f64;
+            unsafe {
+                for i in r {
+                    acc += *ap.0.add(i);
+                }
+            }
+            touch(acc);
+        });
+    });
+
+    // write: 1 array of traffic
+    let tw = best_of(reps, || {
+        let cp = Raw(c.as_mut_ptr());
+        parallel_ranges(len, threads, |r| {
+            let cp = &cp;
+            unsafe {
+                for i in r {
+                    *cp.0.add(i) = 0.25;
+                }
+            }
+        });
+    });
+
+    // triad: a = b + s·c, 3 arrays of traffic
+    let tt = best_of(reps, || {
+        let (ap, bp, cp) = (Raw(a.as_mut_ptr()), Raw(b.as_mut_ptr()), Raw(c.as_mut_ptr()));
+        parallel_ranges(len, threads, |r| {
+            let (ap, bp, cp) = (&ap, &bp, &cp);
+            unsafe {
+                for i in r {
+                    *ap.0.add(i) = *bp.0.add(i) + scalar * *cp.0.add(i);
+                }
+            }
+        });
+    });
+    touch(a[len / 2] + b[len / 3] + c[len / 7]);
+
+    let gb = |arrays: f64, secs: f64| arrays * len as f64 * 8.0 / secs / 1e9;
+    (gb(1.0, tr), gb(1.0, tw), gb(3.0, tt))
+}
+
+/// FMA chains per work item in the peak probe — enough independent
+/// accumulators to cover FMA latency × issue width.
+const CHAINS: usize = 8;
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx,fma")]
+unsafe fn peak_item_avx_fma(iters: usize) -> f64 {
+    use std::arch::x86_64::*;
+    let x = _mm256_set1_pd(1.0000001);
+    let y = _mm256_set1_pd(0.9999999);
+    let mut acc = [_mm256_set1_pd(1.000001); CHAINS];
+    for _ in 0..iters {
+        for a in acc.iter_mut() {
+            *a = _mm256_fmadd_pd(*a, x, y);
+        }
+    }
+    let mut total = _mm256_setzero_pd();
+    for a in acc {
+        total = _mm256_add_pd(total, a);
+    }
+    let mut out = [0.0f64; 4];
+    _mm256_storeu_pd(out.as_mut_ptr(), total);
+    out.iter().sum()
+}
+
+fn peak_item_scalar(iters: usize) -> f64 {
+    let mut acc = [1.000001f64; CHAINS];
+    let x = 1.0000001f64;
+    let y = 0.9999999f64;
+    for _ in 0..iters {
+        for a in acc.iter_mut() {
+            *a = a.mul_add(x, y);
+        }
+    }
+    acc.iter().sum()
+}
+
+/// Width-aware peak probe: FMA chains as wide as the dispatched
+/// micro-kernel tier allows. Returns (GFLOP/s, lanes used). Timed as
+/// wall clock around the whole parallel loop so a pool smaller than
+/// `threads` cannot inflate the result.
+fn peak_probe(threads: usize, iters: usize) -> (f64, usize) {
+    let threads = threads.max(1);
+    #[cfg(target_arch = "x86_64")]
+    let lanes = if simd::level() != simd::SimdLevel::Scalar
+        && is_x86_feature_detected!("avx")
+        && is_x86_feature_detected!("fma")
+    {
+        4
+    } else {
+        1
+    };
+    #[cfg(not(target_arch = "x86_64"))]
+    let lanes = 1;
+
+    let t = Timer::start();
+    parallel_ranges(threads, threads, |_| {
+        #[cfg(target_arch = "x86_64")]
+        // safety: lanes == 4 only after both features were detected
+        let s = if lanes == 4 { unsafe { peak_item_avx_fma(iters) } } else { peak_item_scalar(iters) };
+        #[cfg(not(target_arch = "x86_64"))]
+        let s = peak_item_scalar(iters);
+        touch(s);
+    });
+    let secs = t.elapsed_secs();
+    let flops = (threads * iters * CHAINS * lanes * 2) as f64;
+    (flops / secs / 1e9, lanes)
+}
+
+/// Run the full measured calibration with custom knobs.
+pub fn calibrate_with(threads: usize, cfg: CalibConfig) -> MeasuredLadder {
+    let threads = threads.max(1);
+    let host = cache_levels();
+    let mut levels = Vec::with_capacity(host.len() + 1);
+    for (name, cap) in &host {
+        // three arrays must fit the level with 2× headroom, same
+        // sizing rule as membench::bandwidth_ladder
+        let len = (cap / (3 * 8 * 2)).max(1 << 10).min(cfg.max_len);
+        let (read, write, triad) = sweep_level(len, threads, cfg.reps);
+        levels.push(LadderLevel {
+            level: name.clone(),
+            capacity_bytes: *cap,
+            read_gbs: read,
+            write_gbs: write,
+            triad_gbs: triad,
+        });
+    }
+    // DRAM rung: 4× the largest cache, capped
+    let dram_len = (host.last().map(|&(_, c)| c).unwrap_or(16 << 20) * 4 / 8)
+        .max(1 << 20)
+        .min(cfg.max_len);
+    let (read, write, triad) = sweep_level(dram_len, threads, cfg.reps.min(2));
+    levels.push(LadderLevel {
+        level: "DRAM".into(),
+        capacity_bytes: usize::MAX,
+        read_gbs: read,
+        write_gbs: write,
+        triad_gbs: triad,
+    });
+
+    let (peak_gflops, _lanes) = peak_probe(threads, cfg.peak_iters);
+    MeasuredLadder {
+        levels,
+        peak_gflops,
+        simd_level: simd::level().name().to_string(),
+        threads,
+    }
+}
+
+/// Run the full measured calibration with default knobs (seconds of
+/// wall time — persist the result).
+pub fn calibrate(threads: usize) -> MeasuredLadder {
+    calibrate_with(threads, CalibConfig::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CalibConfig {
+        CalibConfig { reps: 1, max_len: 1 << 12, peak_iters: 10_000 }
+    }
+
+    #[test]
+    fn calibrate_covers_every_host_level_plus_dram() {
+        let ml = calibrate_with(1, tiny());
+        assert_eq!(ml.levels.len(), cache_levels().len() + 1);
+        assert_eq!(ml.levels.last().unwrap().level, "DRAM");
+        assert_eq!(ml.levels.last().unwrap().capacity_bytes, usize::MAX);
+        for l in &ml.levels {
+            assert!(l.read_gbs > 0.0 && l.read_gbs < 1e6, "{}: {}", l.level, l.read_gbs);
+            assert!(l.write_gbs > 0.0 && l.write_gbs < 1e6);
+            assert!(l.triad_gbs > 0.0 && l.triad_gbs < 1e6);
+            assert!(l.beta_gbs() >= l.triad_gbs);
+        }
+        assert!(ml.peak_gflops > 0.0 && ml.peak_gflops < 1e6);
+        assert!(crate::spmm::simd::SimdLevel::parse(&ml.simd_level).is_some());
+        assert_eq!(ml.threads, 1);
+    }
+
+    #[test]
+    fn to_roofline_mirrors_nominal_shape() {
+        let ml = MeasuredLadder {
+            levels: vec![
+                LadderLevel {
+                    level: "L1".into(),
+                    capacity_bytes: 32 << 10,
+                    read_gbs: 300.0,
+                    write_gbs: 200.0,
+                    triad_gbs: 280.0,
+                },
+                LadderLevel {
+                    level: "DRAM".into(),
+                    capacity_bytes: usize::MAX,
+                    read_gbs: 20.0,
+                    write_gbs: 15.0,
+                    triad_gbs: 22.0,
+                },
+            ],
+            peak_gflops: 90.0,
+            simd_level: "avx".into(),
+            threads: 4,
+        };
+        let r = ml.to_roofline();
+        assert_eq!(r.ceilings.len(), 2);
+        // capacity halved as the residency threshold, DRAM untouched
+        assert_eq!(r.ceilings[0].capacity_bytes, 16 << 10);
+        assert_eq!(r.ceilings[1].capacity_bytes, usize::MAX);
+        // best-of-kernels bandwidth per rung
+        assert_eq!(r.ceilings[0].beta_gbs, 300.0);
+        assert_eq!(r.ceilings[1].beta_gbs, 22.0);
+        assert_eq!(r.pi_gflops, 90.0);
+        assert_eq!(ml.flat().beta_gbs, 22.0);
+        assert_eq!(ml.flat().pi_gflops, 90.0);
+    }
+}

@@ -7,8 +7,14 @@
 //! Scale, Add, Triad) plus a peak-FLOP microbenchmark so the roofline
 //! is calibrated to *this* testbed.
 
+//! A second, deeper calibration lives in [`calib`]: a per-cache-level
+//! read/write/triad sweep plus a width-aware FMA peak probe producing
+//! a [`MeasuredLadder`] the planner prefers over the nominal prior.
+
+mod calib;
 mod stream;
 
+pub use calib::{calibrate, calibrate_with, CalibConfig, LadderLevel, MeasuredLadder};
 pub use stream::{
     bandwidth_ladder, cache_levels, measure_machine, peak_flops_gflops, stream_benchmark,
     StreamResult,

@@ -19,11 +19,19 @@
 //!   tuned in-process (`tests/prop_serve.rs` asserts zero exploration
 //!   measurements after a restore).
 //!
+//! The snapshot also carries the **measured calibration ladder**
+//! ([`crate::membench::MeasuredLadder`], kinds `calib` +
+//! `ladder_level`): calibration is seconds of wall-clock sweep, so a
+//! restarted server re-installs the measured ladder into the planner
+//! exactly as it re-adopts routing decisions — no re-measurement, no
+//! re-exploration.
+//!
 //! The format is the repo's usual flat-record JSON (the crate builds
 //! offline; serde is unavailable): one top-level object
-//! `{"version": 1, "records": [...]}` whose records are discriminated
-//! by a `"kind"` key (`route`, `spgemm`, `spgemm_candidate`,
-//! `spmm_prior`, `spgemm_prior`). Floats are rendered with Rust's
+//! `{"version": 2, "records": [...]}` whose records are discriminated
+//! by a `"kind"` key (`calib`, `ladder_level`, `route`, `spgemm`,
+//! `spgemm_candidate`, `spmm_prior`, `spgemm_prior`). Floats are
+//! rendered with Rust's
 //! shortest-round-trip `Display`, and records are emitted in sorted
 //! key order, so save → load → save is **byte-identical** — the
 //! property test's definition of a lossless snapshot. A corrupted or
@@ -37,13 +45,16 @@ use crate::config::parse_impl;
 use crate::coordinator::{RouteDecision, SpGemmCandidate, SpGemmDecision};
 use crate::error::{Error, Result};
 use crate::gen::SparsityClass;
+use crate::membench::{LadderLevel, MeasuredLadder};
 use crate::sparse::Reordering;
 use crate::spgemm::SpGemmImpl;
 use crate::spmm::Impl;
 
 /// Snapshot format version. Bumped on any schema change; a loader
 /// refuses mismatched versions (cold start beats misread state).
-pub const STATE_VERSION: u64 = 1;
+/// v2 added the measured calibration ladder (`calib` / `ladder_level`
+/// records).
+pub const STATE_VERSION: u64 = 2;
 
 /// How long a writer waits on a held [`FileLock`] before assuming the
 /// holder crashed and stealing it.
@@ -131,6 +142,10 @@ pub struct AutotuneState {
     pub spmm_priors: Vec<(SparsityClass, Impl, f64)>,
     /// Materialised `(class, impl)` SpGEMM efficiency priors.
     pub spgemm_priors: Vec<(SparsityClass, SpGemmImpl, f64)>,
+    /// Measured calibration ladder (bandwidth sweep + peak probe +
+    /// dispatch decision), if one was run — a restored engine installs
+    /// it without re-measuring.
+    pub ladder: Option<MeasuredLadder>,
 }
 
 fn esc(s: &str) -> String {
@@ -186,6 +201,7 @@ impl AutotuneState {
             && self.spgemm.is_empty()
             && self.spmm_priors.is_empty()
             && self.spgemm_priors.is_empty()
+            && self.ladder.is_none()
     }
 
     /// Serialise to the versioned snapshot format. Deterministic:
@@ -202,6 +218,31 @@ impl AutotuneState {
         spgemm_priors.sort_by_key(|(c, i, _)| (class_name(*c), format!("{i}")));
 
         let mut recs: Vec<String> = Vec::new();
+        // the calib record precedes its ladder_level records so the
+        // single-pass parser can attach levels to it (same ordering
+        // contract spgemm_candidate has with its spgemm decision)
+        if let Some(ml) = &self.ladder {
+            recs.push(format!(
+                "{{\"kind\": \"calib\", \"peak\": {}, \"simd\": \"{}\", \"threads\": {}}}",
+                num(ml.peak_gflops),
+                esc(&ml.simd_level),
+                ml.threads,
+            ));
+            for l in &ml.levels {
+                // capacity is a byte count, not an f64: rendered as the
+                // integer usize. The DRAM rung's usize::MAX survives the
+                // f64 parse because float→int `as` casts saturate.
+                recs.push(format!(
+                    "{{\"kind\": \"ladder_level\", \"level\": \"{}\", \"capacity\": {}, \
+                     \"read\": {}, \"write\": {}, \"triad\": {}}}",
+                    esc(&l.level),
+                    l.capacity_bytes,
+                    num(l.read_gbs),
+                    num(l.write_gbs),
+                    num(l.triad_gbs),
+                ));
+            }
+        }
         for r in routes {
             recs.push(format!(
                 "{{\"kind\": \"route\", \"matrix\": \"{}\", \"d\": {}, \"impl\": \"{}\", \
@@ -307,6 +348,28 @@ impl AutotuneState {
                 continue;
             }
             match field_str(body, "kind")?.as_str() {
+                "calib" => {
+                    state.ladder = Some(MeasuredLadder {
+                        levels: Vec::new(),
+                        peak_gflops: field_num(body, "peak")?,
+                        simd_level: field_str(body, "simd")?,
+                        threads: field_num(body, "threads")? as usize,
+                    })
+                }
+                "ladder_level" => {
+                    let ml = state.ladder.as_mut().ok_or_else(|| {
+                        Error::Parse("ladder_level record before its calib record".into())
+                    })?;
+                    ml.levels.push(LadderLevel {
+                        level: field_str(body, "level")?,
+                        // saturating cast maps the DRAM rung's rendered
+                        // usize::MAX back to usize::MAX exactly
+                        capacity_bytes: field_num(body, "capacity")? as usize,
+                        read_gbs: field_num(body, "read")?,
+                        write_gbs: field_num(body, "write")?,
+                        triad_gbs: field_num(body, "triad")?,
+                    });
+                }
                 "route" => state.routes.push(RouteDecision {
                     matrix: field_str(body, "matrix")?,
                     d: field_num(body, "d")? as usize,
@@ -484,6 +547,27 @@ mod tests {
                 (SparsityClass::Blocked, Impl::Csb, 0.85),
             ],
             spgemm_priors: vec![(SparsityClass::Random, SpGemmImpl::PbMerge, 0.8)],
+            ladder: Some(MeasuredLadder {
+                levels: vec![
+                    LadderLevel {
+                        level: "L1".into(),
+                        capacity_bytes: 32 * 1024,
+                        read_gbs: 412.5,
+                        write_gbs: 300.0 + 0.2, // awkward binary fraction
+                        triad_gbs: 398.0,
+                    },
+                    LadderLevel {
+                        level: "DRAM".into(),
+                        capacity_bytes: usize::MAX,
+                        read_gbs: 17.25,
+                        write_gbs: 12.5,
+                        triad_gbs: 18.625,
+                    },
+                ],
+                peak_gflops: 77.125,
+                simd_level: "avx".into(),
+                threads: 4,
+            }),
         }
     }
 
@@ -504,6 +588,16 @@ mod tests {
         assert_eq!(back.spgemm[0].candidates[1].im, SpGemmImpl::PbMerge);
         assert_eq!(back.spmm_priors.len(), 2);
         assert_eq!(back.spgemm_priors.len(), 1);
+        let ml = back.ladder.expect("ladder survives the round trip");
+        assert_eq!(ml.peak_gflops, 77.125);
+        assert_eq!(ml.simd_level, "avx");
+        assert_eq!(ml.threads, 4);
+        assert_eq!(ml.levels.len(), 2);
+        assert_eq!(ml.levels[0].level, "L1");
+        assert_eq!(ml.levels[0].write_gbs, 300.0 + 0.2);
+        // the DRAM rung's unbounded capacity sentinel must survive the
+        // f64-based field parser exactly
+        assert_eq!(ml.levels[1].capacity_bytes, usize::MAX);
     }
 
     #[test]
@@ -521,12 +615,18 @@ mod tests {
         let truncated = &full[..full.len() / 2];
         assert!(AutotuneState::parse(truncated).is_err());
         assert!(AutotuneState::parse("not json at all").is_err());
-        let skewed = full.replace("\"version\": 1", "\"version\": 99");
+        let skewed = full.replace("\"version\": 2", "\"version\": 99");
         assert!(AutotuneState::parse(&skewed).is_err());
         // unknown record kinds are rejected, not skipped — a snapshot
         // this build cannot fully understand must cold-start
         let alien = full.replace("\"kind\": \"spmm_prior\"", "\"kind\": \"mystery\"");
         assert!(AutotuneState::parse(&alien).is_err());
+        // a ladder_level whose calib record went missing is an orphan:
+        // reject whole rather than silently dropping measurements
+        // (renaming the key leaves the record kind-less, so it is
+        // skipped and the levels that follow have nothing to attach to)
+        let orphan = full.replace("\"kind\": \"calib\"", "\"kinb\": \"calib\"");
+        assert!(AutotuneState::parse(&orphan).is_err());
     }
 
     #[test]
@@ -538,7 +638,7 @@ mod tests {
         // missing file: silent cold start
         assert!(AutotuneState::load_or_cold(path).is_none());
         // corrupted file: warned cold start, no panic
-        std::fs::write(path, "{\"version\": 1, \"records\": [{\"kind\": \"route\"").unwrap();
+        std::fs::write(path, "{\"version\": 2, \"records\": [{\"kind\": \"route\"").unwrap();
         assert!(AutotuneState::load_or_cold(path).is_none());
         // healthy file loads
         sample().save(path).unwrap();

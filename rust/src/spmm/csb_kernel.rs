@@ -12,7 +12,7 @@
 
 use crate::error::Result;
 use crate::sparse::{Csb, Csr};
-use crate::spmm::csr_kernel::{axpy_row, RawRows};
+use crate::spmm::simd::{axpy_row, RawRows};
 use crate::spmm::schedule::{for_each_part, Schedule};
 use crate::spmm::{check_dims, check_schedule, DenseMatrix, Impl, Spmm};
 

@@ -1,81 +1,139 @@
 //! Textbook row-parallel CSR SpMM — the paper's "CSR" column.
 //!
 //! One pass over the rows; each nonzero `(r, c, v)` does
-//! `C[r, :] += v * B[c, :]`. Execution consumes a precomputed
+//! `C[r, :] += v * B[c, :]` through the dispatched micro-kernels in
+//! [`crate::spmm::simd`]. Execution consumes a precomputed
 //! [`Schedule`]: partitions are nnz-balanced over `row_ptr` and claimed
 //! dynamically, so skewed matrices stay balanced, and the dense
 //! operands are processed in column tiles when the schedule carries
 //! one.
+//!
+//! When the schedule also carries [`RowBins`] (the base schedule built
+//! at construction always does), each partition's rows run in three
+//! nnz classes — short rows fully unrolled, medium rows through the
+//! plain per-nonzero loop, long rows two nonzeros per pass
+//! ([`crate::spmm::simd::axpy2_row`]) — so the branch pattern matches
+//! the row shape instead of one generic loop mispredicting on all of
+//! them. Every variant keeps the same per-element rounded
+//! multiply-then-add sequence, so binned, unbinned, scalar and SIMD
+//! executions are all bitwise identical.
+
+use std::ops::Range;
 
 use crate::error::Result;
 use crate::sparse::Csr;
-use crate::spmm::schedule::{for_each_part, Schedule};
+use crate::spmm::schedule::{for_each_part, for_each_part_indexed, RowBins, Schedule};
+use crate::spmm::simd::{axpy2_row, axpy_row, RawRows};
 use crate::spmm::{check_dims, check_schedule, DenseMatrix, Impl, Spmm};
 
-/// `C[r,:] += v * B[c,:]` over a d-wide row (or row tile). 4-wide
-/// chunks with a scalar remainder; LLVM vectorises the chunked body
-/// with AVX2 on this target.
+/// One row's nonzeros into its zeroed tile: generic per-nonzero loop
+/// (the medium-bin and unbinned body).
 #[inline(always)]
-pub(crate) fn axpy_row(c: &mut [f64], b: &[f64], v: f64) {
-    debug_assert_eq!(c.len(), b.len());
-    let mut cq = c.chunks_exact_mut(4);
-    let mut bq = b.chunks_exact(4);
-    for (cc, bb) in (&mut cq).zip(&mut bq) {
-        cc[0] += v * bb[0];
-        cc[1] += v * bb[1];
-        cc[2] += v * bb[2];
-        cc[3] += v * bb[3];
-    }
-    for (cc, bb) in cq.into_remainder().iter_mut().zip(bq.remainder()) {
-        *cc += v * bb;
+fn row_generic(ct: &mut [f64], b: &DenseMatrix, cols: &Range<usize>, cis: &[u32], vs: &[f64]) {
+    for (ci, v) in cis.iter().zip(vs) {
+        axpy_row(ct, &b.row(*ci as usize)[cols.clone()], *v);
     }
 }
 
-/// Shared-pointer shim: lets scoped worker threads write *disjoint*
-/// regions of `C` without locks. Soundness argument: the schedule
-/// executor ([`for_each_part`]) hands each (partition × column tile)
-/// cell to exactly one worker, with a barrier between tiles, and
-/// kernels only write `C` rows inside their partition (and, when
-/// tiled, only the tile's column range).
-#[derive(Clone, Copy)]
-pub(crate) struct RawRows {
-    ptr: *mut f64,
-    ncols: usize,
-}
-unsafe impl Send for RawRows {}
-unsafe impl Sync for RawRows {}
-
-impl RawRows {
-    pub(crate) fn new(c: &mut DenseMatrix) -> Self {
-        RawRows { ptr: c.data.as_mut_ptr(), ncols: c.ncols }
+/// Long-bin body: two nonzeros per pass over the tile (halves the `C`
+/// tile load/store traffic), odd tail through the single-step kernel.
+/// Bitwise-equal to [`row_generic`] — `axpy2_row` rounds each nonzero's
+/// contribution separately, in order.
+#[inline(always)]
+fn row_paired(ct: &mut [f64], b: &DenseMatrix, cols: &Range<usize>, cis: &[u32], vs: &[f64]) {
+    let mut c2 = cis.chunks_exact(2);
+    let mut v2 = vs.chunks_exact(2);
+    for (cc, vv) in (&mut c2).zip(&mut v2) {
+        axpy2_row(
+            ct,
+            &b.row(cc[0] as usize)[cols.clone()],
+            vv[0],
+            &b.row(cc[1] as usize)[cols.clone()],
+            vv[1],
+        );
     }
-    /// Mutable view of row `r`. Caller must hold exclusive logical
-    /// ownership of row `r` (or of the slice of it it writes).
-    #[inline(always)]
-    #[allow(clippy::mut_from_ref)]
-    pub(crate) unsafe fn row(&self, r: usize) -> &mut [f64] {
-        std::slice::from_raw_parts_mut(self.ptr.add(r * self.ncols), self.ncols)
+    for (ci, v) in c2.remainder().iter().zip(v2.remainder()) {
+        axpy_row(ct, &b.row(*ci as usize)[cols.clone()], *v);
+    }
+}
+
+/// Short-bin body: the nonzero count is branched on **once per row**
+/// and each arm is straight-line. The `0` arm still exists because an
+/// empty row must keep its (already zeroed) tile. Falls back to the
+/// paired loop if a row longer than [`crate::spmm::schedule::SHORT_ROW_NNZ`]
+/// ever lands here — correct for any length, so a foreign bins table
+/// cannot corrupt results.
+#[inline(always)]
+fn row_short(ct: &mut [f64], b: &DenseMatrix, cols: &Range<usize>, cis: &[u32], vs: &[f64]) {
+    let bt = |i: usize| &b.row(cis[i] as usize)[cols.clone()];
+    match cis.len() {
+        0 => {}
+        1 => axpy_row(ct, bt(0), vs[0]),
+        2 => axpy2_row(ct, bt(0), vs[0], bt(1), vs[1]),
+        3 => {
+            axpy2_row(ct, bt(0), vs[0], bt(1), vs[1]);
+            axpy_row(ct, bt(2), vs[2]);
+        }
+        4 => {
+            axpy2_row(ct, bt(0), vs[0], bt(1), vs[1]);
+            axpy2_row(ct, bt(2), vs[2], bt(3), vs[3]);
+        }
+        _ => row_paired(ct, b, cols, cis, vs),
     }
 }
 
 /// Row-parallel CSR SpMM kernel.
 pub struct CsrSpmm {
     a: Csr,
-    /// Untiled nnz-balanced base schedule, precomputed at construction
-    /// (carries the thread count).
+    /// Untiled nnz-balanced base schedule with row bins, precomputed at
+    /// construction (carries the thread count).
     base: Schedule,
 }
 
 impl CsrSpmm {
     /// Wrap a CSR matrix; `threads` worker threads at execute time.
     pub fn new(a: Csr, threads: usize) -> Self {
-        let base = Schedule::nnz_balanced(&a.row_ptr, threads.max(1));
+        let base =
+            Schedule::nnz_balanced(&a.row_ptr, threads.max(1)).with_row_bins(&a.row_ptr);
         CsrSpmm { a, base }
     }
 
     /// Borrow the underlying matrix (used by the planner for stats).
     pub fn matrix(&self) -> &Csr {
         &self.a
+    }
+
+    /// The binned execute body for one (partition × column tile) cell.
+    #[inline(always)]
+    fn run_binned(
+        &self,
+        bins: &RowBins,
+        pi: usize,
+        cols: &Range<usize>,
+        b: &DenseMatrix,
+        rows: &RawRows,
+    ) {
+        let a = &self.a;
+        let (short, medium, long) = bins.part(pi);
+        for &r in short {
+            let r = r as usize;
+            // SAFETY: each (row, tile) cell is claimed exactly once.
+            let ct = unsafe { &mut rows.row(r)[cols.clone()] };
+            ct.fill(0.0);
+            row_short(ct, b, cols, a.row_cols(r), a.row_vals(r));
+        }
+        for &r in medium {
+            let r = r as usize;
+            let ct = unsafe { &mut rows.row(r)[cols.clone()] };
+            ct.fill(0.0);
+            row_generic(ct, b, cols, a.row_cols(r), a.row_vals(r));
+        }
+        for &r in long {
+            let r = r as usize;
+            let ct = unsafe { &mut rows.row(r)[cols.clone()] };
+            ct.fill(0.0);
+            row_paired(ct, b, cols, a.row_cols(r), a.row_vals(r));
+        }
     }
 }
 
@@ -106,17 +164,26 @@ impl Spmm for CsrSpmm {
         check_schedule(self.a.nrows, s)?;
         let rows = RawRows::new(c);
         let a = &self.a;
-        for_each_part(s, b.ncols, |range, cols| {
-            for r in range {
-                // SAFETY: each (row, tile) cell is claimed exactly once.
-                let crow = unsafe { rows.row(r) };
-                let ct = &mut crow[cols.clone()];
-                ct.fill(0.0);
-                for (ci, v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
-                    axpy_row(ct, &b.row(*ci as usize)[cols.clone()], *v);
+        // Only honour bins whose shape matches this schedule AND this
+        // matrix (a hand-built schedule may carry neither or foreign
+        // ones); otherwise run the row-ascending loop. Both paths are
+        // bitwise identical — rows own their C slices independently.
+        let bins = s
+            .row_bins()
+            .filter(|bb| bb.n_parts() == s.n_parts() && bb.n_rows() == a.nrows);
+        match bins {
+            Some(bins) => for_each_part_indexed(s, b.ncols, |pi, _units, cols| {
+                self.run_binned(bins, pi, &cols, b, &rows);
+            }),
+            None => for_each_part(s, b.ncols, |range, cols| {
+                for r in range {
+                    // SAFETY: each (row, tile) cell is claimed exactly once.
+                    let ct = unsafe { &mut rows.row(r)[cols.clone()] };
+                    ct.fill(0.0);
+                    row_generic(ct, b, &cols, a.row_cols(r), a.row_vals(r));
                 }
-            }
-        });
+            }),
+        }
         Ok(())
     }
 }
@@ -160,6 +227,64 @@ mod tests {
     }
 
     #[test]
+    fn binned_and_unbinned_schedules_match_bitwise() {
+        // the base schedule is binned; a hand-built nnz_balanced one is
+        // not — both must produce the identical byte stream
+        let mut rng = Prng::new(66);
+        let a = erdos_renyi(150, 150, 6.0, &mut rng);
+        let b = DenseMatrix::random(150, 9, &mut rng);
+        let k = CsrSpmm::new(a.clone(), 3);
+        assert!(k.plan(None).row_bins().is_some(), "base plan carries bins");
+        let bare = Schedule::nnz_balanced(&a.row_ptr, 3).with_tile(Some(4));
+        assert!(bare.row_bins().is_none());
+        let mut c_binned = DenseMatrix::zeros(150, 9);
+        k.execute_with(&b, &mut c_binned, &k.plan(Some(4))).unwrap();
+        let mut c_bare = DenseMatrix::zeros(150, 9);
+        k.execute_with(&b, &mut c_bare, &bare).unwrap();
+        assert_eq!(c_binned.data, c_bare.data, "binned visit order must be bitwise-neutral");
+    }
+
+    #[test]
+    fn adversarial_row_mixes_hit_every_bin() {
+        // rows: one giant (row 0), alternating empty/singleton, a run of
+        // medium rows — stresses all three bin classes in one matrix
+        let n = 64usize;
+        let mut coo = crate::sparse::Coo::new(n, n);
+        let mut rng = Prng::new(67);
+        for r in 0..n {
+            let len = if r == 0 {
+                n // giant row: every column
+            } else if r < 32 {
+                r % 2 // alternating empty / singleton
+            } else {
+                8 // medium
+            };
+            for j in 0..len {
+                let c = if len == n { j } else { (r * 7 + j * 5) % n };
+                coo.push(r, c, rng.range_f64(-1.0, 1.0));
+            }
+        }
+        let a = Csr::from_coo(coo);
+        assert_eq!(a.nnz(), n + 16 + 32 * 8, "generator rows must not collide");
+        let b = DenseMatrix::random(n, 5, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let k = CsrSpmm::new(a.clone(), 4);
+        let bins = k.plan(None);
+        let bins = bins.row_bins().unwrap();
+        let (mut ns, mut nm, mut nl) = (0, 0, 0);
+        for p in 0..bins.n_parts() {
+            let (s, m, l) = bins.part(p);
+            ns += s.len();
+            nm += m.len();
+            nl += l.len();
+        }
+        assert!(ns > 0 && nm > 0 && nl > 0, "all classes populated: {ns}/{nm}/{nl}");
+        let mut c = DenseMatrix::zeros(n, 5);
+        k.execute(&b, &mut c).unwrap();
+        assert!(c.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
     fn overwrites_stale_c() {
         let mut rng = Prng::new(61);
         let a = erdos_renyi(50, 50, 3.0, &mut rng);
@@ -191,17 +316,5 @@ mod tests {
         let mut c = DenseMatrix::zeros(10, 4);
         let foreign = Schedule::uniform(11, 1);
         assert!(k.execute_with(&b, &mut c, &foreign).is_err());
-    }
-
-    #[test]
-    fn axpy_row_remainders() {
-        for d in 0..9usize {
-            let b: Vec<f64> = (0..d).map(|i| i as f64).collect();
-            let mut c = vec![1.0; d];
-            axpy_row(&mut c, &b, 2.0);
-            for (i, &x) in c.iter().enumerate() {
-                assert_eq!(x, 1.0 + 2.0 * i as f64);
-            }
-        }
     }
 }

@@ -13,7 +13,7 @@
 
 use crate::error::Result;
 use crate::sparse::{Csr, Ell};
-use crate::spmm::csr_kernel::{axpy_row, RawRows};
+use crate::spmm::simd::{axpy_row, RawRows};
 use crate::spmm::schedule::{for_each_part, Schedule};
 use crate::spmm::{check_dims, check_schedule, DenseMatrix, Impl, Spmm};
 

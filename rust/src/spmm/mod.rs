@@ -18,7 +18,10 @@
 //! calls, so the hot path pays no spawn/join churn (see `DESIGN.md`
 //! §Execution-Model). Execution is plan/execute split: kernels consume
 //! a precomputed [`Schedule`] (nnz-balanced partitions + model-chosen
-//! column tiles, see [`schedule`]) instead of chunking ad hoc.
+//! column tiles, see [`schedule`]) instead of chunking ad hoc, and
+//! every inner loop runs through the dispatched micro-kernels in
+//! [`simd`] (scalar/SSE2/AVX, probed once, bitwise-identical across
+//! variants).
 //!
 //! **Hand-off** (classify → predict → schedule → route → execute):
 //! this module is the *execute* stage (and, via [`Spmm::plan`], the
@@ -42,6 +45,7 @@ mod opt_kernel;
 mod pb_kernel;
 pub mod pool;
 pub mod schedule;
+pub mod simd;
 
 pub use bsr_kernel::BsrSpmm;
 pub use csb_kernel::CsbSpmm;

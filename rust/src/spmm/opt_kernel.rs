@@ -20,7 +20,7 @@
 
 use crate::error::Result;
 use crate::sparse::Csr;
-use crate::spmm::csr_kernel::RawRows;
+use crate::spmm::simd::RawRows;
 use crate::spmm::schedule::{for_each_part, Schedule};
 use crate::spmm::{check_dims, check_schedule, DenseMatrix, Impl, Spmm};
 

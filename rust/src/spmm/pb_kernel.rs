@@ -53,7 +53,7 @@ use std::sync::Mutex;
 
 use crate::error::Result;
 use crate::sparse::Csr;
-use crate::spmm::csr_kernel::RawRows;
+use crate::spmm::simd::{add_row, scale_row, RawRows};
 use crate::spmm::pool::parallel_chunks_dynamic;
 use crate::spmm::schedule::Schedule;
 use crate::spmm::{check_dims, check_schedule, DenseMatrix, Impl, Spmm};
@@ -297,9 +297,9 @@ impl PbSpmm {
                     // SAFETY: pos maps entries to unique slots, and
                     // band β is claimed by exactly one worker.
                     let slot = unsafe { slots.slot(self.pos[k] as usize) };
-                    for (out, &x) in slot.iter_mut().zip(brow) {
-                        *out = v * x;
-                    }
+                    // product rounded here, the add in gather: the same
+                    // separately-rounded sequence CSR produces inline
+                    scale_row(slot, brow, v);
                 }
             }
         });
@@ -333,9 +333,7 @@ impl PbSpmm {
                         let slot = &arena[k * w..k * w + w];
                         // SAFETY: arena_row[k] is inside bucket j.
                         let crow = unsafe { rows.row(self.arena_row[k] as usize) };
-                        for (cc, &x) in crow[sub.clone()].iter_mut().zip(slot) {
-                            *cc += x;
-                        }
+                        add_row(&mut crow[sub.clone()], slot);
                     }
                 }
             }

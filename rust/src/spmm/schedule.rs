@@ -28,6 +28,16 @@
 //! and the coordinator caches tiled schedules per
 //! `(matrix, impl, threads, d, dt)` so repeated and batched submissions pay
 //! planning cost once (see `coordinator/registry.rs`).
+//!
+//! A schedule can additionally carry **nnz-length row bins**
+//! ([`RowBins`], attached via [`Schedule::with_row_bins`]): each
+//! partition's rows split into short (≤ [`SHORT_ROW_NNZ`]), medium,
+//! and long (> [`LONG_ROW_NNZ`]) classes, so a row-parallel kernel can
+//! run a width-matched micro-kernel variant per class instead of one
+//! generic loop — the customized-storage idea of Shi et al.
+//! (arXiv:2005.14469) adapted to CPU scheduling. Rows within a
+//! partition are independent (each owns its `C` row), so the binned
+//! visit order is bitwise-identical to the row-ascending one.
 
 use std::ops::Range;
 
@@ -37,6 +47,75 @@ use crate::spmm::pool::{parallel_chunks_dynamic, split_ranges};
 /// granularity `pool::default_chunk` used, but with nnz-balanced
 /// boundaries instead of uniform row counts.
 const PARTS_PER_THREAD: usize = 8;
+
+/// Rows with at most this many nonzeros fall in the *short* bin: the
+/// consuming kernel fully unrolls their nonzero loop (one branch per
+/// row instead of one per nonzero).
+pub const SHORT_ROW_NNZ: usize = 4;
+
+/// Rows with more than this many nonzeros fall in the *long* bin:
+/// worth the two-nonzero-per-pass micro-kernel that halves `C`
+/// load/store traffic. Rows in between are *medium* and run the plain
+/// per-nonzero loop.
+pub const LONG_ROW_NNZ: usize = 32;
+
+/// Per-partition nnz-length row classes (see module docs). Bin `i`
+/// holds the rows of partition `i`, partitioned by stored row length;
+/// every row of the partition appears in exactly one class (empty rows
+/// are short — they still must zero their `C` row).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowBins {
+    short: Vec<Vec<u32>>,
+    medium: Vec<Vec<u32>>,
+    long: Vec<Vec<u32>>,
+}
+
+impl RowBins {
+    /// Bin every partition of `schedule` by the work prefix sum
+    /// (`row_ptr` for CSR: `prefix.len() == units + 1`).
+    pub fn from_prefix(schedule: &Schedule, prefix: &[usize]) -> RowBins {
+        assert_eq!(
+            prefix.len(),
+            schedule.units() + 1,
+            "row bins need one prefix entry per scheduled unit (+1)"
+        );
+        let n = schedule.n_parts();
+        let mut bins = RowBins {
+            short: vec![Vec::new(); n],
+            medium: vec![Vec::new(); n],
+            long: vec![Vec::new(); n],
+        };
+        for p in 0..n {
+            for r in schedule.part(p) {
+                let nnz = prefix[r + 1] - prefix[r];
+                let class = if nnz <= SHORT_ROW_NNZ {
+                    &mut bins.short[p]
+                } else if nnz <= LONG_ROW_NNZ {
+                    &mut bins.medium[p]
+                } else {
+                    &mut bins.long[p]
+                };
+                class.push(r as u32);
+            }
+        }
+        bins
+    }
+
+    /// Number of partitions binned (equals the owning schedule's).
+    pub fn n_parts(&self) -> usize {
+        self.short.len()
+    }
+
+    /// The (short, medium, long) row ids of partition `p`.
+    pub fn part(&self, p: usize) -> (&[u32], &[u32], &[u32]) {
+        (&self.short[p], &self.medium[p], &self.long[p])
+    }
+
+    /// Total rows binned across all partitions and classes.
+    pub fn n_rows(&self) -> usize {
+        self.short.iter().chain(&self.medium).chain(&self.long).map(|v| v.len()).sum()
+    }
+}
 
 /// A precomputed SpMM execution schedule: nnz-balanced partitions over
 /// the kernel's parallel units (rows, or block rows for CSB/BSR) plus
@@ -54,6 +133,10 @@ pub struct Schedule {
     pub tile: Option<usize>,
     /// Worker threads the schedule was planned for.
     pub threads: usize,
+    /// Optional nnz-length row classes per partition (see [`RowBins`]);
+    /// only meaningful for row-parallel kernels whose units are matrix
+    /// rows, and ignored by kernels that don't opt in.
+    row_bins: Option<RowBins>,
 }
 
 impl Schedule {
@@ -82,7 +165,7 @@ impl Schedule {
             parts.push(b.clamp(prev, units));
         }
         parts.push(units);
-        Schedule { parts, tile: None, threads }
+        Schedule { parts, tile: None, threads, row_bins: None }
     }
 
     /// Uniform partition of `[0, units)` — the right "nnz balance" for
@@ -101,7 +184,7 @@ impl Schedule {
         if parts.len() == 1 {
             parts.push(units); // units == 0: keep the [0, 0] shape
         }
-        Schedule { parts, tile: None, threads }
+        Schedule { parts, tile: None, threads, row_bins: None }
     }
 
     /// Attach (or clear) a column-tile width. Widths ≥ the dense width
@@ -109,6 +192,18 @@ impl Schedule {
     pub fn with_tile(mut self, tile: Option<usize>) -> Schedule {
         self.tile = tile.filter(|&t| t > 0);
         self
+    }
+
+    /// Attach nnz-length row bins derived from the work prefix sum
+    /// (`row_ptr` for CSR). Panics if `prefix.len() != units + 1`.
+    pub fn with_row_bins(mut self, prefix: &[usize]) -> Schedule {
+        self.row_bins = Some(RowBins::from_prefix(&self, prefix));
+        self
+    }
+
+    /// The attached row bins, if any.
+    pub fn row_bins(&self) -> Option<&RowBins> {
+        self.row_bins.as_ref()
     }
 
     /// Number of partitions.
@@ -168,13 +263,23 @@ pub fn for_each_part<F>(schedule: &Schedule, d: usize, f: F)
 where
     F: Fn(Range<usize>, Range<usize>) + Sync,
 {
+    for_each_part_indexed(schedule, d, |_pi, units, cols| f(units, cols));
+}
+
+/// [`for_each_part`] with the partition index passed through, so a
+/// kernel can look up per-partition side tables (the [`RowBins`]
+/// classes) for the cell it was handed. Same disjointness contract.
+pub fn for_each_part_indexed<F>(schedule: &Schedule, d: usize, f: F)
+where
+    F: Fn(usize, Range<usize>, Range<usize>) + Sync,
+{
     let n_parts = schedule.n_parts();
     for cols in schedule.col_tiles(d) {
         parallel_chunks_dynamic(n_parts, schedule.threads, 1, |claimed| {
             for pi in claimed {
                 let units = schedule.part(pi);
                 if !units.is_empty() {
-                    f(units, cols.clone());
+                    f(pi, units, cols.clone());
                 }
             }
         });
@@ -278,6 +383,66 @@ mod tests {
         let s = Schedule::uniform(4, 1).with_tile(Some(5));
         let tiles = s.col_tiles(12);
         assert_eq!(tiles, vec![0..5, 5..10, 10..12]);
+    }
+
+    #[test]
+    fn row_bins_cover_every_row_with_correct_classes() {
+        // rows 0..48 with lengths cycling 0, 1, 4, 5, 32, 33: exercises
+        // empty rows, both thresholds, and both off-by-one neighbours
+        let lens = [0usize, 1, 4, 5, 32, 33];
+        let units = 48;
+        let mut prefix = vec![0usize; units + 1];
+        for r in 0..units {
+            prefix[r + 1] = prefix[r] + lens[r % lens.len()];
+        }
+        let s = Schedule::nnz_balanced(&prefix, 2).with_row_bins(&prefix);
+        let bins = s.row_bins().expect("bins attached");
+        assert_eq!(bins.n_parts(), s.n_parts());
+        assert_eq!(bins.n_rows(), units, "every row binned exactly once");
+        for p in 0..bins.n_parts() {
+            let part = s.part(p);
+            let (short, medium, long) = bins.part(p);
+            for &r in short {
+                assert!(part.contains(&(r as usize)));
+                assert!(prefix[r as usize + 1] - prefix[r as usize] <= SHORT_ROW_NNZ);
+            }
+            for &r in medium {
+                assert!(part.contains(&(r as usize)));
+                let nnz = prefix[r as usize + 1] - prefix[r as usize];
+                assert!(nnz > SHORT_ROW_NNZ && nnz <= LONG_ROW_NNZ);
+            }
+            for &r in long {
+                assert!(part.contains(&(r as usize)));
+                assert!(prefix[r as usize + 1] - prefix[r as usize] > LONG_ROW_NNZ);
+            }
+        }
+    }
+
+    #[test]
+    fn row_bins_do_not_change_schedule_equality_semantics() {
+        // the zero-work fallback test relies on bin-free schedules
+        // comparing equal; binned vs bin-free must differ
+        let prefix: Vec<usize> = (0..=16).collect();
+        let bare = Schedule::nnz_balanced(&prefix, 2);
+        assert_eq!(bare, Schedule::nnz_balanced(&prefix, 2));
+        let binned = bare.clone().with_row_bins(&prefix);
+        assert_ne!(bare, binned);
+        assert_eq!(binned, Schedule::nnz_balanced(&prefix, 2).with_row_bins(&prefix));
+    }
+
+    #[test]
+    #[should_panic(expected = "prefix entry")]
+    fn row_bins_reject_mismatched_prefix() {
+        let prefix: Vec<usize> = (0..=16).collect();
+        let _ = Schedule::nnz_balanced(&prefix, 2).with_row_bins(&prefix[..10]);
+    }
+
+    #[test]
+    fn for_each_part_indexed_passes_matching_partition() {
+        let s = Schedule::uniform(40, 3).with_tile(Some(4));
+        for_each_part_indexed(&s, 8, |pi, units, _cols| {
+            assert_eq!(units, s.part(pi), "index must match the handed range");
+        });
     }
 
     #[test]

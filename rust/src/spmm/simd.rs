@@ -1,0 +1,631 @@
+//! The SpMM micro-kernel layer: the **one** place the per-row
+//! primitives live, in scalar and explicitly vectorized form, behind a
+//! runtime dispatch that is probed once and cached.
+//!
+//! Before this module existed, `axpy_row` and the `RawRows` aliasing
+//! shim were private to `csr_kernel.rs` and the CSB/ELL/OPT/BSR/PB
+//! kernels reached into it for them. They are now defined here with
+//! one documented `pub(crate)` surface, and each primitive exists in
+//! up to three variants:
+//!
+//! * **scalar** — the portable fallback (and the only variant compiled
+//!   off x86_64),
+//! * **SSE2** (2 × f64 lanes) — baseline on every x86_64, and
+//! * **AVX** (4 × f64 lanes) — used when the one-time CPUID probe
+//!   ([`level`]) reports it. AVX-512 is deliberately absent: its f64
+//!   intrinsics are not stable at this crate's MSRV (1.70), and the
+//!   8-wide path would add a third ordering to audit for no measured
+//!   win on the paper's testbed.
+//!
+//! # Bitwise identity across variants
+//!
+//! Every variant of every primitive performs **exactly one rounded
+//! multiply followed by one rounded add per element, in the same
+//! order** — no `vfmadd`, no horizontal reassociation. IEEE-754
+//! vector `mul`/`add` round each lane exactly like the scalar ops, so
+//! the scalar and SIMD variants are bitwise identical at every length
+//! (including every `len % lane_width` remainder — the remainder loop
+//! uses the same multiply-then-add expression as the main loop).
+//! This is load-bearing: `tests/prop_pb.rs` pins the PB kernel
+//! bitwise-equal to CSR, and PB's spill/gather split rounds the
+//! product and the add *separately* ([`scale_row`], [`add_row`]) — a
+//! fused variant anywhere would break that chain. `tests/prop_simd.rs`
+//! pins forced-scalar ≡ dispatched for every kernel.
+//!
+//! # Dispatch
+//!
+//! [`level`] resolves once (env `SPMM_FORCE_SCALAR=1` wins, then
+//! `is_x86_feature_detected!`) and caches the answer in an atomic, so
+//! the per-call cost on the hot path is a single relaxed load.
+//! [`force_scalar`] re-resolves at runtime — the seam the property
+//! suite uses to run both legs in one process. The cached decision is
+//! reported by the engine and persisted in the autotune snapshot
+//! ([`crate::report::AutotuneState`]) alongside the measured ladder.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::spmm::DenseMatrix;
+
+/// The instruction-set tier the dispatcher selected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar loops (forced, or non-x86_64).
+    Scalar,
+    /// 2 × f64 lanes — baseline on every x86_64.
+    Sse2,
+    /// 4 × f64 lanes.
+    Avx,
+}
+
+impl SimdLevel {
+    /// f64 lanes per vector op.
+    pub fn lanes(self) -> usize {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Sse2 => 2,
+            SimdLevel::Avx => 4,
+        }
+    }
+
+    /// Stable lowercase name (used in reports and the persisted
+    /// snapshot).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx => "avx",
+        }
+    }
+
+    /// Inverse of [`SimdLevel::name`].
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s {
+            "scalar" => Some(SimdLevel::Scalar),
+            "sse2" => Some(SimdLevel::Sse2),
+            "avx" => Some(SimdLevel::Avx),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// 0 = unresolved; 1/2/3 = Scalar/Sse2/Avx.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+fn code(l: SimdLevel) -> u8 {
+    match l {
+        SimdLevel::Scalar => 1,
+        SimdLevel::Sse2 => 2,
+        SimdLevel::Avx => 3,
+    }
+}
+
+/// What the hardware supports, ignoring any forced override.
+pub fn detected() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx") {
+            SimdLevel::Avx
+        } else {
+            // SSE2 is architecturally guaranteed on x86_64
+            SimdLevel::Sse2
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        SimdLevel::Scalar
+    }
+}
+
+#[cold]
+fn resolve() -> SimdLevel {
+    let forced = std::env::var("SPMM_FORCE_SCALAR")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false);
+    let l = if forced { SimdLevel::Scalar } else { detected() };
+    LEVEL.store(code(l), Ordering::Relaxed);
+    l
+}
+
+/// The dispatch decision in force: resolved once (env override, then
+/// CPUID) and cached — one relaxed atomic load per call after that.
+#[inline(always)]
+pub fn level() -> SimdLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        1 => SimdLevel::Scalar,
+        2 => SimdLevel::Sse2,
+        3 => SimdLevel::Avx,
+        _ => resolve(),
+    }
+}
+
+/// Override the cached dispatch at runtime: `true` pins the scalar
+/// variants, `false` re-probes the hardware (overriding any
+/// `SPMM_FORCE_SCALAR` from the environment). Because every variant is
+/// bitwise-identical, toggling mid-computation changes timing only,
+/// never results — but tests that *compare* the legs should still
+/// serialise their toggles (see `tests/prop_simd.rs`).
+pub fn force_scalar(on: bool) {
+    let l = if on { SimdLevel::Scalar } else { detected() };
+    LEVEL.store(code(l), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// axpy_row: c[i] += v * b[i]
+// ---------------------------------------------------------------------------
+
+/// Scalar `c[i] += v * b[i]`. The 4-wide unrolled main loop and the
+/// remainder loop use the *same* multiply-then-add expression per
+/// element, so every `len % 4` tail rounds identically to the main
+/// body — and identically to the SIMD lanes.
+#[inline(always)]
+pub(crate) fn axpy_row_scalar(c: &mut [f64], b: &[f64], v: f64) {
+    debug_assert_eq!(c.len(), b.len());
+    let mut cq = c.chunks_exact_mut(4);
+    let mut bq = b.chunks_exact(4);
+    for (cc, bb) in (&mut cq).zip(&mut bq) {
+        cc[0] += v * bb[0];
+        cc[1] += v * bb[1];
+        cc[2] += v * bb[2];
+        cc[3] += v * bb[3];
+    }
+    for (cc, bb) in cq.into_remainder().iter_mut().zip(bq.remainder()) {
+        *cc += v * bb;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn axpy_row_sse2(c: &mut [f64], b: &[f64], v: f64) {
+    use std::arch::x86_64::*;
+    let n = c.len();
+    let (cp, bp) = (c.as_mut_ptr(), b.as_ptr());
+    let vv = _mm_set1_pd(v);
+    let pairs = n & !1;
+    let mut i = 0;
+    while i < pairs {
+        let acc = _mm_loadu_pd(cp.add(i));
+        let prod = _mm_mul_pd(vv, _mm_loadu_pd(bp.add(i)));
+        _mm_storeu_pd(cp.add(i), _mm_add_pd(acc, prod));
+        i += 2;
+    }
+    if i < n {
+        *cp.add(i) += v * *bp.add(i);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn axpy_row_avx(c: &mut [f64], b: &[f64], v: f64) {
+    use std::arch::x86_64::*;
+    let n = c.len();
+    let (cp, bp) = (c.as_mut_ptr(), b.as_ptr());
+    let vv = _mm256_set1_pd(v);
+    let quads = n & !3;
+    let mut i = 0;
+    while i < quads {
+        let acc = _mm256_loadu_pd(cp.add(i));
+        let prod = _mm256_mul_pd(vv, _mm256_loadu_pd(bp.add(i)));
+        _mm256_storeu_pd(cp.add(i), _mm256_add_pd(acc, prod));
+        i += 4;
+    }
+    while i < n {
+        *cp.add(i) += v * *bp.add(i);
+        i += 1;
+    }
+}
+
+/// `c[i] += v * b[i]` — the workhorse of every row-parallel kernel,
+/// dispatched to the widest available variant.
+#[inline(always)]
+pub(crate) fn axpy_row(c: &mut [f64], b: &[f64], v: f64) {
+    debug_assert_eq!(c.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    match level() {
+        // safety: variants only read/write within the equal-length
+        // slices, and the target features were verified by `level()`
+        SimdLevel::Avx => unsafe { axpy_row_avx(c, b, v) },
+        SimdLevel::Sse2 => unsafe { axpy_row_sse2(c, b, v) },
+        SimdLevel::Scalar => axpy_row_scalar(c, b, v),
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    axpy_row_scalar(c, b, v);
+}
+
+// ---------------------------------------------------------------------------
+// axpy2_row: c[i] += v0 * b0[i]; c[i] += v1 * b1[i]
+// ---------------------------------------------------------------------------
+
+/// Scalar two-nonzero step: per element, the product of the *first*
+/// nonzero is rounded and added, then the second — two separate adds,
+/// bitwise-equal to two consecutive [`axpy_row`] calls (the property
+/// the long-row bin variant relies on).
+#[inline(always)]
+pub(crate) fn axpy2_row_scalar(c: &mut [f64], b0: &[f64], v0: f64, b1: &[f64], v1: f64) {
+    debug_assert_eq!(c.len(), b0.len());
+    debug_assert_eq!(c.len(), b1.len());
+    for i in 0..c.len() {
+        c[i] += v0 * b0[i];
+        c[i] += v1 * b1[i];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn axpy2_row_avx(c: &mut [f64], b0: &[f64], v0: f64, b1: &[f64], v1: f64) {
+    use std::arch::x86_64::*;
+    let n = c.len();
+    let cp = c.as_mut_ptr();
+    let (p0, p1) = (b0.as_ptr(), b1.as_ptr());
+    let (w0, w1) = (_mm256_set1_pd(v0), _mm256_set1_pd(v1));
+    let quads = n & !3;
+    let mut i = 0;
+    while i < quads {
+        let mut acc = _mm256_loadu_pd(cp.add(i));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(w0, _mm256_loadu_pd(p0.add(i))));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(w1, _mm256_loadu_pd(p1.add(i))));
+        _mm256_storeu_pd(cp.add(i), acc);
+        i += 4;
+    }
+    while i < n {
+        *cp.add(i) += v0 * *p0.add(i);
+        *cp.add(i) += v1 * *p1.add(i);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn axpy2_row_sse2(c: &mut [f64], b0: &[f64], v0: f64, b1: &[f64], v1: f64) {
+    use std::arch::x86_64::*;
+    let n = c.len();
+    let cp = c.as_mut_ptr();
+    let (p0, p1) = (b0.as_ptr(), b1.as_ptr());
+    let (w0, w1) = (_mm_set1_pd(v0), _mm_set1_pd(v1));
+    let pairs = n & !1;
+    let mut i = 0;
+    while i < pairs {
+        let mut acc = _mm_loadu_pd(cp.add(i));
+        acc = _mm_add_pd(acc, _mm_mul_pd(w0, _mm_loadu_pd(p0.add(i))));
+        acc = _mm_add_pd(acc, _mm_mul_pd(w1, _mm_loadu_pd(p1.add(i))));
+        _mm_storeu_pd(cp.add(i), acc);
+        i += 2;
+    }
+    if i < n {
+        *cp.add(i) += v0 * *p0.add(i);
+        *cp.add(i) += v1 * *p1.add(i);
+    }
+}
+
+/// Two-nonzero fused *loop* (never fused *arithmetic*): processes a
+/// pair of nonzeros per pass over the row slice, halving the
+/// load/store traffic on `c` for long rows while keeping the
+/// per-element rounding sequence identical to two [`axpy_row`] calls.
+#[inline(always)]
+pub(crate) fn axpy2_row(c: &mut [f64], b0: &[f64], v0: f64, b1: &[f64], v1: f64) {
+    debug_assert_eq!(c.len(), b0.len());
+    debug_assert_eq!(c.len(), b1.len());
+    #[cfg(target_arch = "x86_64")]
+    match level() {
+        SimdLevel::Avx => unsafe { axpy2_row_avx(c, b0, v0, b1, v1) },
+        SimdLevel::Sse2 => unsafe { axpy2_row_sse2(c, b0, v0, b1, v1) },
+        SimdLevel::Scalar => axpy2_row_scalar(c, b0, v0, b1, v1),
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    axpy2_row_scalar(c, b0, v0, b1, v1);
+}
+
+// ---------------------------------------------------------------------------
+// scale_row: out[i] = v * b[i]   (PB spill phase)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+pub(crate) fn scale_row_scalar(out: &mut [f64], b: &[f64], v: f64) {
+    debug_assert_eq!(out.len(), b.len());
+    for (o, &x) in out.iter_mut().zip(b) {
+        *o = v * x;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn scale_row_sse2(out: &mut [f64], b: &[f64], v: f64) {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let (op, bp) = (out.as_mut_ptr(), b.as_ptr());
+    let vv = _mm_set1_pd(v);
+    let pairs = n & !1;
+    let mut i = 0;
+    while i < pairs {
+        _mm_storeu_pd(op.add(i), _mm_mul_pd(vv, _mm_loadu_pd(bp.add(i))));
+        i += 2;
+    }
+    if i < n {
+        *op.add(i) = v * *bp.add(i);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn scale_row_avx(out: &mut [f64], b: &[f64], v: f64) {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let (op, bp) = (out.as_mut_ptr(), b.as_ptr());
+    let vv = _mm256_set1_pd(v);
+    let quads = n & !3;
+    let mut i = 0;
+    while i < quads {
+        _mm256_storeu_pd(op.add(i), _mm256_mul_pd(vv, _mm256_loadu_pd(bp.add(i))));
+        i += 4;
+    }
+    while i < n {
+        *op.add(i) = v * *bp.add(i);
+        i += 1;
+    }
+}
+
+/// `out[i] = v * b[i]` — the PB spill write: the product is rounded
+/// *here* and the add happens later in [`add_row`], which is exactly
+/// the separately-rounded sequence the other kernels produce inline.
+#[inline(always)]
+pub(crate) fn scale_row(out: &mut [f64], b: &[f64], v: f64) {
+    debug_assert_eq!(out.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    match level() {
+        SimdLevel::Avx => unsafe { scale_row_avx(out, b, v) },
+        SimdLevel::Sse2 => unsafe { scale_row_sse2(out, b, v) },
+        SimdLevel::Scalar => scale_row_scalar(out, b, v),
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    scale_row_scalar(out, b, v);
+}
+
+// ---------------------------------------------------------------------------
+// add_row: c[i] += x[i]   (PB gather phase)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+pub(crate) fn add_row_scalar(c: &mut [f64], x: &[f64]) {
+    debug_assert_eq!(c.len(), x.len());
+    for (cc, &xx) in c.iter_mut().zip(x) {
+        *cc += xx;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn add_row_sse2(c: &mut [f64], x: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = c.len();
+    let (cp, xp) = (c.as_mut_ptr(), x.as_ptr());
+    let pairs = n & !1;
+    let mut i = 0;
+    while i < pairs {
+        let acc = _mm_add_pd(_mm_loadu_pd(cp.add(i)), _mm_loadu_pd(xp.add(i)));
+        _mm_storeu_pd(cp.add(i), acc);
+        i += 2;
+    }
+    if i < n {
+        *cp.add(i) += *xp.add(i);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn add_row_avx(c: &mut [f64], x: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = c.len();
+    let (cp, xp) = (c.as_mut_ptr(), x.as_ptr());
+    let quads = n & !3;
+    let mut i = 0;
+    while i < quads {
+        let acc = _mm256_add_pd(_mm256_loadu_pd(cp.add(i)), _mm256_loadu_pd(xp.add(i)));
+        _mm256_storeu_pd(cp.add(i), acc);
+        i += 4;
+    }
+    while i < n {
+        *cp.add(i) += *xp.add(i);
+        i += 1;
+    }
+}
+
+/// `c[i] += x[i]` — the PB gather accumulate over spilled products.
+#[inline(always)]
+pub(crate) fn add_row(c: &mut [f64], x: &[f64]) {
+    debug_assert_eq!(c.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    match level() {
+        SimdLevel::Avx => unsafe { add_row_avx(c, x) },
+        SimdLevel::Sse2 => unsafe { add_row_sse2(c, x) },
+        SimdLevel::Scalar => add_row_scalar(c, x),
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    add_row_scalar(c, x);
+}
+
+// ---------------------------------------------------------------------------
+// RawRows: the shared disjoint-row aliasing shim
+// ---------------------------------------------------------------------------
+
+/// Raw-pointer view of a dense output's rows, `Send + Sync` so a
+/// kernel can hand disjoint row ranges to the worker pool.
+///
+/// Safety contract (every kernel upholds it via its [`crate::spmm::Schedule`]):
+/// concurrent callers must touch **disjoint** row sets — the schedule
+/// partitions rows, so no two partitions alias.
+#[derive(Clone, Copy)]
+pub(crate) struct RawRows {
+    ptr: *mut f64,
+    ncols: usize,
+}
+
+unsafe impl Send for RawRows {}
+unsafe impl Sync for RawRows {}
+
+impl RawRows {
+    pub(crate) fn new(c: &mut DenseMatrix) -> Self {
+        RawRows { ptr: c.data.as_mut_ptr(), ncols: c.ncols }
+    }
+
+    /// Mutable view of row `r`. Caller guarantees `r` is in range and
+    /// no concurrent caller touches the same row.
+    #[inline(always)]
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn row(&self, r: usize) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.ptr.add(r * self.ncols), self.ncols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::Prng;
+    use std::sync::Mutex;
+
+    // force_scalar flips process-global dispatch state; tests that
+    // toggle it serialise here so they never observe each other's legs
+    static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+    fn rand_vec(n: usize, rng: &mut Prng) -> Vec<f64> {
+        (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect()
+    }
+
+    /// Satellite: the remainder path must round exactly like the main
+    /// loop at every `d % lane_width` — pinned against a per-element
+    /// reference and across forced-scalar vs dispatched legs.
+    #[test]
+    fn axpy_row_remainders() {
+        let _g = FORCE_LOCK.lock().unwrap();
+        let mut rng = Prng::new(0x51);
+        for d in 0..20 {
+            let b = rand_vec(d, &mut rng);
+            let base = rand_vec(d, &mut rng);
+            let v = 1.7f64;
+            // per-element reference: one rounded mul, one rounded add
+            let want: Vec<f64> = base.iter().zip(&b).map(|(c, x)| c + v * x).collect();
+
+            let mut scalar = base.clone();
+            axpy_row_scalar(&mut scalar, &b, v);
+            assert_eq!(scalar, want, "scalar main+remainder ordering at d={d}");
+
+            force_scalar(true);
+            let mut forced = base.clone();
+            axpy_row(&mut forced, &b, v);
+            force_scalar(false);
+            let mut auto = base.clone();
+            axpy_row(&mut auto, &b, v);
+            assert_eq!(forced, want, "forced-scalar dispatch at d={d}");
+            assert_eq!(auto, want, "dispatched variant must match bitwise at d={d}");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn simd_variants_bitwise_match_scalar() {
+        let mut rng = Prng::new(0x52);
+        for d in [1usize, 2, 3, 4, 5, 7, 8, 15, 16, 33, 100] {
+            let b = rand_vec(d, &mut rng);
+            let base = rand_vec(d, &mut rng);
+            let v = rng.range_f64(-3.0, 3.0);
+            let mut want = base.clone();
+            axpy_row_scalar(&mut want, &b, v);
+            let mut got = base.clone();
+            unsafe { axpy_row_sse2(&mut got, &b, v) };
+            assert_eq!(got, want, "sse2 axpy d={d}");
+            if is_x86_feature_detected!("avx") {
+                let mut got = base.clone();
+                unsafe { axpy_row_avx(&mut got, &b, v) };
+                assert_eq!(got, want, "avx axpy d={d}");
+            }
+
+            let mut sw = vec![0.0; d];
+            scale_row_scalar(&mut sw, &b, v);
+            let mut sg = vec![0.0; d];
+            unsafe { scale_row_sse2(&mut sg, &b, v) };
+            assert_eq!(sg, sw, "sse2 scale d={d}");
+            if is_x86_feature_detected!("avx") {
+                let mut sg = vec![0.0; d];
+                unsafe { scale_row_avx(&mut sg, &b, v) };
+                assert_eq!(sg, sw, "avx scale d={d}");
+            }
+
+            let mut aw = base.clone();
+            add_row_scalar(&mut aw, &b);
+            let mut ag = base.clone();
+            unsafe { add_row_sse2(&mut ag, &b) };
+            assert_eq!(ag, aw, "sse2 add d={d}");
+            if is_x86_feature_detected!("avx") {
+                let mut ag = base.clone();
+                unsafe { add_row_avx(&mut ag, &b) };
+                assert_eq!(ag, aw, "avx add d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy2_equals_two_axpy_bitwise() {
+        let _g = FORCE_LOCK.lock().unwrap();
+        let mut rng = Prng::new(0x53);
+        for d in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 13, 32, 65] {
+            let b0 = rand_vec(d, &mut rng);
+            let b1 = rand_vec(d, &mut rng);
+            let base = rand_vec(d, &mut rng);
+            let (v0, v1) = (rng.range_f64(-2.0, 2.0), rng.range_f64(-2.0, 2.0));
+            let mut want = base.clone();
+            axpy_row(&mut want, &b0, v0);
+            axpy_row(&mut want, &b1, v1);
+            for forced in [true, false] {
+                force_scalar(forced);
+                let mut got = base.clone();
+                axpy2_row(&mut got, &b0, v0, &b1, v1);
+                assert_eq!(got, want, "axpy2 (forced={forced}) d={d}");
+            }
+            force_scalar(false);
+        }
+    }
+
+    /// PB's spill/gather split (`out = v*x` then `c += out`) must
+    /// reproduce the inline `c += v*x` sequence bit for bit — the
+    /// foundation of the PB ≡ CSR bitwise pin.
+    #[test]
+    fn scale_then_add_matches_axpy_bitwise() {
+        let _g = FORCE_LOCK.lock().unwrap();
+        let mut rng = Prng::new(0x54);
+        for d in [1usize, 3, 4, 7, 16, 31] {
+            let b = rand_vec(d, &mut rng);
+            let base = rand_vec(d, &mut rng);
+            let v = rng.range_f64(-2.0, 2.0);
+            let mut want = base.clone();
+            axpy_row(&mut want, &b, v);
+            for forced in [true, false] {
+                force_scalar(forced);
+                let mut spill = vec![0.0; d];
+                scale_row(&mut spill, &b, v);
+                let mut got = base.clone();
+                add_row(&mut got, &spill);
+                assert_eq!(got, want, "spill/gather (forced={forced}) d={d}");
+            }
+            force_scalar(false);
+        }
+    }
+
+    #[test]
+    fn dispatch_resolves_and_force_round_trips() {
+        let _g = FORCE_LOCK.lock().unwrap();
+        let auto = detected();
+        #[cfg(target_arch = "x86_64")]
+        assert!(auto == SimdLevel::Sse2 || auto == SimdLevel::Avx);
+        force_scalar(true);
+        assert_eq!(level(), SimdLevel::Scalar);
+        force_scalar(false);
+        assert_eq!(level(), auto);
+        assert!(auto.lanes() >= 1);
+        assert_eq!(SimdLevel::parse(auto.name()), Some(auto));
+        assert_eq!(SimdLevel::parse("mmx"), None);
+    }
+}

@@ -1,0 +1,189 @@
+//! Property tests over the SIMD micro-kernel layer (`spmm::simd`):
+//! every kernel × dispatch variant (forced-scalar vs runtime-dispatched)
+//! must be **bitwise identical** — the primitives perform one rounded
+//! multiply and one rounded add per element in the same order at every
+//! width — across the five structural generators, `dt ∈ {1, 3, d−1, d}`,
+//! threads ∈ {1, 4}, and adversarial row-length mixes (empty rows, one
+//! giant row, all-singleton rows) stressing the nnz row bins.
+
+use std::sync::Mutex;
+
+use spmm_roofline::gen::{
+    banded, chung_lu, erdos_renyi, mesh2d, rmat, ChungLuParams, MeshKind, Prng,
+};
+use spmm_roofline::sparse::{Coo, Csr};
+use spmm_roofline::spmm::simd::{force_scalar, level, SimdLevel};
+use spmm_roofline::spmm::{build_native, DenseMatrix, Impl};
+use spmm_roofline::testutil::{check_default, dense_spmm};
+
+/// Dispatch-state mutations are process-global: every test that forces
+/// scalar serialises through this lock (mirroring the unit tests inside
+/// `spmm::simd`).
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+/// One matrix per structural regime (the prop_pb suite), sized for
+/// test speed.
+fn generator_suite(rng: &mut Prng) -> Vec<(&'static str, Csr)> {
+    vec![
+        ("banded", banded(180, 6, 0.4, rng)),
+        ("blocked", mesh2d(14, MeshKind::Triangular, 0.9, rng)),
+        ("er", erdos_renyi(200, 200, 6.0, rng)),
+        ("rmat", rmat(8, 6.0, 0.57, 0.19, 0.19, rng)),
+        (
+            "scalefree",
+            chung_lu(ChungLuParams { n: 250, alpha: 2.2, avg_deg: 8.0, k_min: 2.0 }, rng),
+        ),
+    ]
+}
+
+/// Run one kernel twice — forced scalar, then runtime-dispatched — on
+/// stale output buffers, and demand bitwise equality plus closeness to
+/// the dense oracle. Caller holds `FORCE_LOCK`.
+fn assert_dispatch_bitwise(
+    tag: &str,
+    k: &dyn spmm_roofline::spmm::Spmm,
+    b: &DenseMatrix,
+    want: &DenseMatrix,
+    s: &spmm_roofline::spmm::Schedule,
+    nrows: usize,
+    d: usize,
+) {
+    force_scalar(true);
+    let mut c_scalar = DenseMatrix::from_vec(nrows, d, vec![11.5; nrows * d]);
+    k.execute_with(b, &mut c_scalar, s).unwrap();
+    force_scalar(false);
+    let mut c_auto = DenseMatrix::from_vec(nrows, d, vec![-3.25; nrows * d]);
+    k.execute_with(b, &mut c_auto, s).unwrap();
+    assert_eq!(
+        c_scalar.data, c_auto.data,
+        "{tag}: forced-scalar and dispatched ({}) outputs differ bitwise",
+        level()
+    );
+    let diff = c_auto.max_abs_diff(want);
+    assert!(diff < 1e-11, "{tag}: |Δ| vs dense reference = {diff}");
+}
+
+/// The acceptance grid: every native kernel × every generator ×
+/// dt ∈ {1, 3, d−1, d} × threads ∈ {1, 4}, forced-scalar vs
+/// runtime-dispatched bitwise.
+#[test]
+fn every_kernel_bitwise_equal_across_dispatch_variants() {
+    let _g = FORCE_LOCK.lock().unwrap();
+    let mut rng = Prng::new(0x51d0);
+    for (name, a) in generator_suite(&mut rng) {
+        for d in [4usize, 16] {
+            let b = DenseMatrix::random(a.ncols, d, &mut rng);
+            let want = dense_spmm(&a, &b);
+            for threads in [1usize, 4] {
+                for im in Impl::NATIVE {
+                    let k = build_native(im, &a, threads).unwrap();
+                    for dt in [1usize, 3, d - 1, d] {
+                        let s = k.plan(Some(dt));
+                        let tag = format!("{name}/{im} d={d} dt={dt} threads={threads}");
+                        assert_dispatch_bitwise(&tag, k.as_ref(), &b, &want, &s, a.nrows, d);
+                    }
+                }
+            }
+        }
+    }
+    force_scalar(false);
+}
+
+/// Adversarial row-length mixes: one giant row, alternating
+/// empty/singleton rows, and a block of medium rows — every nnz bin
+/// (short/medium/long) populated, every kernel, both dispatch legs.
+#[test]
+fn adversarial_row_mixes_bitwise_across_dispatch() {
+    let _g = FORCE_LOCK.lock().unwrap();
+    check_default(0x51d1, |rng| {
+        let n = 24 + rng.below_usize(60);
+        let mut coo = Coo::new(n, n);
+        let giant = rng.below_usize(n);
+        for c in 0..n {
+            coo.push(giant, c, rng.range_f64(-1.0, 1.0));
+        }
+        for r in 0..n {
+            if r == giant {
+                continue;
+            }
+            match r % 3 {
+                0 => {} // empty row
+                1 => coo.push(r, rng.below_usize(n), rng.range_f64(-1.0, 1.0)),
+                _ => {
+                    for _ in 0..(5 + rng.below_usize(8)) {
+                        coo.push(r, rng.below_usize(n), rng.range_f64(-1.0, 1.0));
+                    }
+                }
+            }
+        }
+        let a = Csr::from_coo(coo);
+        let d = 1 + rng.below_usize(12);
+        let dt = 1 + rng.below_usize(d);
+        let threads = 1 + rng.below_usize(4);
+        let b = DenseMatrix::random(n, d, rng);
+        let want = dense_spmm(&a, &b);
+        for im in Impl::NATIVE {
+            let k = build_native(im, &a, threads).map_err(|e| e.to_string())?;
+            let s = k.plan(Some(dt));
+            force_scalar(true);
+            let mut c1 = DenseMatrix::zeros(n, d);
+            k.execute_with(&b, &mut c1, &s).map_err(|e| e.to_string())?;
+            force_scalar(false);
+            let mut c2 = DenseMatrix::from_vec(n, d, vec![7.0; n * d]);
+            k.execute_with(&b, &mut c2, &s).map_err(|e| e.to_string())?;
+            if c1.data != c2.data {
+                return Err(format!(
+                    "{im}: dispatch variants differ bitwise (n={n} d={d} dt={dt} \
+                     threads={threads})"
+                ));
+            }
+            let diff = c2.max_abs_diff(&want);
+            if diff > 1e-11 {
+                return Err(format!("{im}: |Δ|={diff} (n={n} d={d} dt={dt})"));
+            }
+        }
+        force_scalar(false);
+        Ok(())
+    });
+}
+
+/// All-singleton rows: the short bin's 1-nnz path end to end, with
+/// negative values guarding the `-0.0` hazard (a kernel that shortcut
+/// a single-nonzero row straight into `C` would flip `-0.0` to `+0.0`
+/// when the product lands on a zeroed tile).
+#[test]
+fn all_singleton_rows_bitwise_and_exact() {
+    let _g = FORCE_LOCK.lock().unwrap();
+    let mut rng = Prng::new(0x51d2);
+    let n = 96;
+    let mut coo = Coo::new(n, n);
+    for r in 0..n {
+        coo.push(r, (r * 7) % n, rng.range_f64(-2.0, 2.0));
+    }
+    let a = Csr::from_coo(coo);
+    assert_eq!(a.nnz(), n);
+    for d in [1usize, 2, 3, 5, 8] {
+        let b = DenseMatrix::random(n, d, &mut rng);
+        let want = dense_spmm(&a, &b);
+        for im in Impl::NATIVE {
+            let k = build_native(im, &a, 2).unwrap();
+            let s = k.plan(Some(d));
+            let tag = format!("singleton/{im} d={d}");
+            assert_dispatch_bitwise(&tag, k.as_ref(), &b, &want, &s, n, d);
+        }
+    }
+    force_scalar(false);
+}
+
+/// The probe resolves to a coherent level with a sane lane count, and
+/// forcing scalar round-trips.
+#[test]
+fn dispatch_level_is_coherent() {
+    let _g = FORCE_LOCK.lock().unwrap();
+    force_scalar(true);
+    assert_eq!(level(), SimdLevel::Scalar);
+    force_scalar(false);
+    let l = level();
+    assert!(matches!(l, SimdLevel::Scalar | SimdLevel::Sse2 | SimdLevel::Avx));
+    assert!([1usize, 2, 4].contains(&l.lanes()));
+}
