@@ -1,0 +1,182 @@
+//! Bench: pipeline-first workloads through the engine — whole chains
+//! (GCN forward, block power iteration, batched PageRank, SpGEMM→SpMM)
+//! tuned end-to-end against the inter-op roofline, then served from
+//! the pinned whole-chain plan.
+//!
+//! Writes `BENCH_pipeline.json`: one whole-chain record per (matrix,
+//! chain) with predicted vs measured GFLOP/s, plus per-op records
+//! (`class = "per_op"`, impl column = op label) splitting the chain's
+//! throughput between the SpMM sweeps and the non-SpMM stages. CI
+//! greps for both shapes.
+//!
+//! Also asserts the tentpole invariants in-process: a pinned
+//! re-submission explores nothing, and the pinned plans survive a
+//! JSON state round-trip into a fresh engine that then serves with
+//! zero measurements.
+//!
+//! `REPRO_SCALE` (default 0.25) and `REPRO_ITERS` (default 2) tune
+//! load; `REPRO_FAST=1` injects nominal machine parameters to skip
+//! STREAM/FMA calibration.
+
+use spmm_roofline::coordinator::{
+    AutotunePolicy, Engine, EngineConfig, PipelineKind, PipelineRecord, PipelineSpec,
+};
+use spmm_roofline::gen::representative_suite;
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::report::{AutotuneState, PerfLog, PerfRecord};
+use spmm_roofline::spmm::Impl;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn build_engine(scale: f64, iters: usize, machine: Option<MachineParams>) -> Engine {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut engine = Engine::new(EngineConfig {
+        threads,
+        machine,
+        iters,
+        warmup: 1,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+        artifacts_dir: None,
+        autotune: AutotunePolicy::enabled(),
+    })
+    .expect("engine construction");
+    for proxy in representative_suite() {
+        engine.register(proxy.name, proxy.generate(scale)).expect("register");
+    }
+    engine
+}
+
+/// Whole-chain + per-op records for one executed pipeline. The per-op
+/// split charges the SpMM sweeps with the chain's SpMM FLOPs and the
+/// non-SpMM stage with the model's `extra_flops`; ops whose FLOPs the
+/// record does not carry (the data-dependent SpGEMM leg) log the time
+/// split with zero throughput.
+fn push_records(
+    log: &mut PerfLog,
+    rec: &PipelineRecord,
+    kind: &PipelineKind,
+    pp_flops: (f64, f64),
+) {
+    let cell = format!("{}|{}", rec.matrix, rec.chain);
+    log.push(PerfRecord {
+        reorder: rec.reorder.to_string(),
+        predicted_gflops: rec.predicted_gflops,
+        ..PerfRecord::basic(
+            "bench_pipeline",
+            cell.clone(),
+            rec.class.to_string(),
+            rec.chosen.to_string(),
+            kind.d(),
+            rec.dt,
+            rec.measured_gflops,
+        )
+    });
+    let (spmm_flops, extra_flops) = pp_flops;
+    for op in &rec.per_op {
+        let gf = if op.secs <= 0.0 {
+            0.0
+        } else if op.op == "spmm" {
+            spmm_flops / op.secs / 1e9
+        } else if extra_flops > 0.0 {
+            extra_flops / op.secs / 1e9
+        } else {
+            0.0
+        };
+        log.push(PerfRecord::basic(
+            "bench_pipeline",
+            cell.clone(),
+            "per_op",
+            op.op,
+            kind.d(),
+            rec.dt,
+            gf,
+        ));
+    }
+}
+
+fn main() {
+    let scale = envf("REPRO_SCALE", 0.25);
+    let iters = envf("REPRO_ITERS", 2.0) as usize;
+    let fast = std::env::var("REPRO_FAST").map(|v| v == "1").unwrap_or(false);
+    let machine =
+        if fast { Some(MachineParams { beta_gbs: 25.0, pi_gflops: 100.0 }) } else { None };
+
+    let mut engine = build_engine(scale, iters, machine);
+    println!(
+        "pipeline bench: β={:.1} GB/s π={:.0} GFLOP/s",
+        engine.machine().beta_gbs,
+        engine.machine().pi_gflops
+    );
+
+    let d = 16usize;
+    let names: Vec<String> =
+        engine.registry().names().iter().map(|s| s.to_string()).collect();
+    let mut specs: Vec<PipelineSpec> = Vec::new();
+    for name in &names {
+        specs.push(PipelineSpec::new(name.clone(), PipelineKind::Gcn { dims: vec![d, d, d / 2] }));
+        specs.push(PipelineSpec::new(name.clone(), PipelineKind::PowerIteration { d, iters: 8 }));
+        specs.push(PipelineSpec::new(
+            name.clone(),
+            PipelineKind::PageRank { seeds: (0..4).collect(), alpha: 0.85, tol: 1e-9, iters: 10 },
+        ));
+    }
+    if let Some(first) = names.first() {
+        let kind = PipelineKind::SpGemmSpMM { b: first.clone(), d };
+        specs.push(PipelineSpec::new(first.clone(), kind));
+    }
+
+    let mut log = PerfLog::new();
+    println!("— tuning pass ({} chains, measured end-to-end per candidate) —", specs.len());
+    for spec in &specs {
+        let rec = engine.submit_pipeline(spec).expect("pipeline");
+        let entry = engine.registry().get(&spec.matrix).expect("registered");
+        let pp = spec.kind.pipeline_params(entry.n(), entry.nnz(), rec.ops.max(1));
+        push_records(&mut log, &rec, &spec.kind, (pp.flops() - pp.extra_flops, pp.extra_flops));
+        let ops: Vec<String> =
+            rec.per_op.iter().map(|o| format!("{} {:.1}ms", o.op, o.secs * 1e3)).collect();
+        println!(
+            "  {}  {}  {} pred {:.2} meas {:.2} GF/s  [{}]",
+            rec.matrix,
+            rec.chain,
+            rec.chosen,
+            rec.predicted_gflops,
+            rec.measured_gflops,
+            ops.join(", ")
+        );
+    }
+
+    // pinned re-submission must not measure anything new
+    let before = engine.autotuner().measurements();
+    for spec in &specs {
+        engine.submit_pipeline(spec).expect("pinned pipeline");
+    }
+    let explored = engine.autotuner().measurements() - before;
+    assert_eq!(explored, 0, "pinned re-submission explored {explored} candidates");
+    println!("pinned re-submission: 0 new measurements across {} chains", specs.len());
+
+    // pinned plans survive a JSON state round-trip into a fresh engine
+    // that then serves without exploring at all
+    let state = engine.export_state();
+    assert!(!state.pipelines.is_empty(), "tuning produced no pinned pipeline plans");
+    let restored = AutotuneState::parse(&state.to_json()).expect("state round-trip");
+    let mut fresh = build_engine(scale, iters, Some(engine.machine()));
+    let adopted = fresh.restore_state(&restored);
+    assert!(adopted > 0, "fresh engine adopted no pinned decisions");
+    for spec in &specs {
+        fresh.submit_pipeline(spec).expect("restored pipeline");
+    }
+    assert_eq!(
+        fresh.autotuner().measurements(),
+        0,
+        "restored engine explored despite pinned chain plans"
+    );
+    println!(
+        "state round-trip: {} pinned chain plans restored, 0 measurements on re-serve",
+        state.pipelines.len()
+    );
+
+    log.merge_save("BENCH_pipeline.json").expect("write BENCH_pipeline.json");
+    println!("wrote BENCH_pipeline.json ({} bench_pipeline records)", log.records.len());
+}

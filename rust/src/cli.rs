@@ -42,6 +42,13 @@
 //!                  queue; coalesced batches, admission stats, and
 //!                  (with --state FILE) persisted autotune decisions;
 //!                  writes BENCH_serve.json
+//!   pipeline       pipeline-first workloads: route GCN / power
+//!                  iteration / batched PageRank / SpGEMM→SpMM chains
+//!                  through the engine as whole units (one schedule,
+//!                  pooled intermediates, whole-chain tuning against
+//!                  the inter-op roofline), prove pinned re-submission
+//!                  explores nothing, and (with --state FILE) persist
+//!                  the pinned chain plans
 //! ```
 
 use crate::config::{parse_impl, ExperimentConfig};
@@ -127,7 +134,7 @@ fn bad(k: &str, v: &str) -> Error {
 pub fn usage() -> String {
     "usage: repro <command> [flags] — commands: sysinfo stream suite classify \
      table-v fig1 fig2 validate-ai ablate-block ablate-reuse ablate-threads \
-     ablate-reorder ladder calib hubs engine route spgemm serve\n\
+     ablate-reorder ladder calib hubs engine route spgemm serve pipeline\n\
      flags: --scale X --threads N --iters N --warmup N --d 1,4,16,64 \
      --impls CSR,MKL,CSB --out DIR --artifacts DIR --config FILE --autotune \
      --clients N --queue N --state FILE\n\
@@ -150,7 +157,12 @@ pub fn usage() -> String {
      `calib` measures the bandwidth/peak ladder (scaled by --scale and \
      --iters), writes BENCH_calib.json, and with --state FILE persists \
      the measured ladder into the snapshot so a restarted server skips \
-     re-calibration"
+     re-calibration\n\
+     `pipeline` routes whole multi-op chains (GCN, power iteration, \
+     batched PageRank, SpGEMM→SpMM) through the engine: each chain is \
+     tuned end-to-end against the inter-op roofline model and pinned; \
+     a second submission serves the pin with zero new measurements; \
+     --state FILE persists the pinned chain plans across runs"
         .to_string()
 }
 
@@ -188,6 +200,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
         "route" => cmd_route(cfg),
         "spgemm" => cmd_spgemm(cfg),
         "serve" => cmd_serve(cfg),
+        "pipeline" => cmd_pipeline(cfg),
         other => Err(Error::Usage(format!("unknown command '{other}'\n\n{}", usage()))),
     }
 }
@@ -1015,6 +1028,139 @@ fn cmd_serve(cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+/// The `pipeline` command: route whole multi-op chains through the
+/// engine. Each chain (GCN forward pass, block power iteration,
+/// batched PageRank, SpGEMM→SpMM) is tuned *end-to-end* — the router
+/// measures full-chain throughput per candidate format against the
+/// inter-op roofline ([`crate::model::ai_pipeline`]) and pins the
+/// winner under `(matrix, chain)`. A second submission pass proves the
+/// pin: zero new measurements, schedules served from cache. With
+/// `--state FILE` the pinned chain plans persist across runs
+/// (restored pins serve without any exploration at all).
+fn cmd_pipeline(cfg: &ExperimentConfig) -> Result<()> {
+    use crate::coordinator::{AutotunePolicy, Engine, EngineConfig, PipelineKind, PipelineSpec};
+
+    let impls: Vec<Impl> = cfg.impls.iter().copied().filter(|&i| i != Impl::Xla).collect();
+    let mut engine = Engine::new(EngineConfig {
+        threads: cfg.threads,
+        machine: None,
+        iters: cfg.iters,
+        warmup: cfg.warmup,
+        impls,
+        artifacts_dir: None,
+        autotune: AutotunePolicy::enabled(),
+    })?;
+    println!(
+        "pipeline engine up: β={:.1} GB/s π={:.0} GFLOP/s",
+        engine.machine().beta_gbs,
+        engine.machine().pi_gflops,
+    );
+    for proxy in crate::gen::representative_suite() {
+        engine.register(proxy.name, proxy.generate(cfg.scale))?;
+    }
+    let restored = if let Some(path) = &cfg.state_path {
+        match crate::report::AutotuneState::load(path) {
+            Ok(state) => engine.restore_state(&state),
+            Err(_) => 0, // cold start: no snapshot yet
+        }
+    } else {
+        0
+    };
+    if restored > 0 {
+        println!("restored {restored} pinned decisions — chains below serve without exploring");
+    }
+
+    // one chain of each kind per matrix; widths come from --d (head
+    // width for GCN, block width elsewhere)
+    let d = cfg.d_values.first().copied().unwrap_or(16);
+    let names: Vec<String> = engine.registry().names().iter().map(|s| s.to_string()).collect();
+    let mut specs: Vec<PipelineSpec> = Vec::new();
+    for name in &names {
+        specs.push(PipelineSpec::new(
+            name.clone(),
+            PipelineKind::Gcn { dims: vec![d, (d / 2).max(1), d] },
+        ));
+        specs.push(PipelineSpec::new(
+            name.clone(),
+            PipelineKind::PowerIteration { d, iters: 8 },
+        ));
+        specs.push(PipelineSpec::new(
+            name.clone(),
+            PipelineKind::PageRank {
+                seeds: (0..d.min(8)).collect(),
+                alpha: 0.85,
+                tol: 1e-9,
+                iters: 12,
+            },
+        ));
+    }
+    // one sparse×sparse chain: square the first matrix, then SpMM the
+    // product — the SpGEMM leg routes through `ensure_spgemm`, the
+    // SpMM leg is tuned on the *product's* structure
+    if let Some(first) = names.first() {
+        specs.push(PipelineSpec::new(
+            first.clone(),
+            PipelineKind::SpGemmSpMM { b: first.clone(), d },
+        ));
+    }
+
+    println!("\n— tuning pass (each chain measured end-to-end per candidate) —");
+    let mut t = crate::report::Table::new(
+        "pipeline — whole-chain routing (one schedule, pooled intermediates)",
+        &[
+            "Matrix", "Chain", "Class", "Impl", "Ops", "Resident", "AI", "Pred GF/s",
+            "Meas GF/s", "Meas/Pred",
+        ],
+    );
+    let mut records = Vec::new();
+    for spec in &specs {
+        let rec = engine.submit_pipeline(spec)?;
+        t.row(vec![
+            rec.matrix.clone(),
+            rec.chain.clone(),
+            rec.class.to_string(),
+            rec.chosen.to_string(),
+            rec.ops.to_string(),
+            if rec.resident { "yes".into() } else { "no".into() },
+            format!("{:.2}", rec.ai),
+            format!("{:.2}", rec.predicted_gflops),
+            format!("{:.2}", rec.measured_gflops),
+            format!("{:.2}", rec.prediction_ratio()),
+        ]);
+        records.push(rec);
+    }
+    println!("{}", t.to_text());
+    for rec in &records {
+        let ops: Vec<String> =
+            rec.per_op.iter().map(|o| format!("{} {:.1}ms", o.op, o.secs * 1e3)).collect();
+        println!("  {} {} per-op: {}", rec.matrix, rec.chain, ops.join(" → "));
+    }
+    for dec in engine.autotuner().pipeline_decisions() {
+        println!("  pinned: {}", dec.summary());
+    }
+
+    println!("\n— pinned re-submission (whole-chain plans cached) —");
+    let before = engine.autotuner().measurements();
+    for spec in &specs {
+        engine.submit_pipeline(spec)?;
+    }
+    let explored = engine.autotuner().measurements() - before;
+    println!(
+        "  explored this pass: {explored} (0 proves whole-chain pinning), schedule hit rate {:.0}%",
+        100.0 * engine.registry().schedule_hit_rate()
+    );
+
+    if let Some(path) = &cfg.state_path {
+        let state = engine.export_state();
+        state.save(path)?;
+        println!(
+            "persisted {} pinned chain plans into {path} — restarts serve without exploring",
+            state.pipelines.len()
+        );
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1063,6 +1209,15 @@ mod tests {
         // validation catches zeros
         assert!(parse_args(args("serve --clients 0")).is_err());
         assert!(parse_args(args("serve --queue 0")).is_err());
+    }
+
+    #[test]
+    fn pipeline_flags_parse() {
+        let cli = parse_args(args("pipeline --scale 0.1 --d 8 --state pins.json")).unwrap();
+        assert_eq!(cli.command, "pipeline");
+        assert_eq!(cli.cfg.d_values, vec![8]);
+        assert_eq!(cli.cfg.state_path.as_deref(), Some("pins.json"));
+        assert!(usage().contains("pipeline"));
     }
 
     #[test]

@@ -33,12 +33,12 @@
 use std::collections::HashMap;
 
 use crate::coordinator::batch::BufferPool;
-use crate::coordinator::planner::{Planner, Prediction};
+use crate::coordinator::planner::{Planner, PipelinePrediction, Prediction};
 use crate::coordinator::registry::MatrixRegistry;
 use crate::error::{Error, Result};
 use crate::gen::{Prng, SparsityClass};
 use crate::metrics::{bench_adaptive_checked, gflops, spmm_flops};
-use crate::model::SpGemmParams;
+use crate::model::{PipelineParams, SpGemmParams};
 use crate::pattern::{classify, Classification};
 use crate::sparse::{reorder::permute_symmetric, Csr, Reordering};
 use crate::spgemm::{compression_factor, spgemm_flops, SpGemm, SpGemmImpl};
@@ -207,6 +207,70 @@ impl SpGemmDecision {
     }
 }
 
+/// A pinned whole-chain decision for one `(matrix, chain)` — the
+/// pipeline dimension of the router
+/// ([`crate::coordinator::PipelineSpec`]). Unlike [`RouteDecision`]
+/// this is keyed by the chain's display string (e.g.
+/// `"GCN(layers=2,d=16)"`), because the winning kernel for a chained
+/// workload depends on the whole chain — op count, widths, dense
+/// epilogues — not just one `(matrix, d)`.
+///
+/// The candidate set is implementations on the **active layout only**:
+/// pipeline outputs are row-indexed user data (PageRank scores, GCN
+/// features), so permuting the operand under a chain would silently
+/// permute the answer. `reorder` records the layout the measurement
+/// was taken on, and the chain is measured end-to-end — the decision
+/// optimizes the pipeline, not its hottest op.
+#[derive(Debug, Clone)]
+pub struct PipelineDecision {
+    pub matrix: String,
+    /// Chain identity: the `Workload` display string.
+    pub chain: String,
+    /// Block width of the chain's first op.
+    pub d: usize,
+    /// Winning implementation, shared by every chained op.
+    pub im: Impl,
+    /// Active layout the chain was measured on (never changed by a
+    /// pipeline tune — see above).
+    pub reorder: Reordering,
+    /// Column-tile width: pinned to `d` (untiled) so one schedule
+    /// replays bitwise across every chained width.
+    pub dt: usize,
+    pub class: SparsityClass,
+    /// Whether the inter-op model found the `n × d` intermediate
+    /// cache-resident at decision time.
+    pub resident: bool,
+    /// Whole-chain planner prediction for the winner.
+    pub predicted_gflops: f64,
+    /// Whole-chain exploration measurement of the winner.
+    pub measured_gflops: f64,
+    /// Candidates measured for this decision (≤ `top_k`).
+    pub explored: usize,
+    /// Measured winner minus the predictor's top pick (0 when the
+    /// prediction was already right).
+    pub regret_gflops: f64,
+}
+
+impl PipelineDecision {
+    /// One-line human rendering for tables and logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} {} → {} / {} (class {}, {}, pred {:.2} meas {:.2} GFLOP/s, \
+             regret {:.2}, {} measured)",
+            self.matrix,
+            self.chain,
+            self.im,
+            self.reorder,
+            self.class,
+            if self.resident { "resident" } else { "streamed" },
+            self.predicted_gflops,
+            self.measured_gflops,
+            self.regret_gflops,
+            self.explored,
+        )
+    }
+}
+
 /// The router: pinned decisions plus the explore bookkeeping.
 ///
 /// Owned by the engine; all heavyweight collaborators (registry,
@@ -217,6 +281,8 @@ pub struct Autotuner {
     decisions: HashMap<(String, usize), RouteDecision>,
     /// Pinned SpGEMM decisions, keyed by (left, right) operand names.
     spgemm_decisions: HashMap<(String, String), SpGemmDecision>,
+    /// Pinned whole-chain decisions, keyed by (matrix, chain string).
+    pipeline_decisions: HashMap<(String, String), PipelineDecision>,
     /// Total exploration measurements ever run (observability: batch
     /// reports diff this to prove re-submission measures nothing).
     measurements: usize,
@@ -228,6 +294,7 @@ impl Autotuner {
             policy,
             decisions: HashMap::new(),
             spgemm_decisions: HashMap::new(),
+            pipeline_decisions: HashMap::new(),
             measurements: 0,
         }
     }
@@ -266,6 +333,21 @@ impl Autotuner {
         v
     }
 
+    /// The pinned pipeline decision for `(matrix, chain)`, if one
+    /// exists. `chain` is the workload's display string.
+    pub fn pipeline_decision(&self, matrix: &str, chain: &str) -> Option<&PipelineDecision> {
+        self.pipeline_decisions.get(&(matrix.to_string(), chain.to_string()))
+    }
+
+    /// Every pinned pipeline decision, sorted by (matrix, chain).
+    pub fn pipeline_decisions(&self) -> Vec<&PipelineDecision> {
+        let mut v: Vec<&PipelineDecision> = self.pipeline_decisions.values().collect();
+        v.sort_by(|x, y| {
+            (x.matrix.as_str(), x.chain.as_str()).cmp(&(y.matrix.as_str(), y.chain.as_str()))
+        });
+        v
+    }
+
     /// Adopt a decision from a persisted snapshot: it pins exactly
     /// like one tuned in-process — later submissions serve from it
     /// with **no** exploration — but the measurement counter is
@@ -279,12 +361,27 @@ impl Autotuner {
         self.spgemm_decisions.insert((dec.a.clone(), dec.b.clone()), dec);
     }
 
+    /// Adopt a persisted pipeline decision (see [`Autotuner::adopt`]).
+    pub fn adopt_pipeline(&mut self, dec: PipelineDecision) {
+        self.pipeline_decisions.insert((dec.matrix.clone(), dec.chain.clone()), dec);
+    }
+
     /// Drop every decision for `matrix` (the matrix was re-registered;
     /// its structure may have changed). SpGEMM decisions go whether the
-    /// matrix was the left or the right operand.
+    /// matrix was the left or the right operand; pipeline decisions go
+    /// with their operand.
     pub fn forget(&mut self, matrix: &str) {
         self.decisions.retain(|k, _| k.0 != matrix);
         self.invalidate_spgemm(matrix);
+        self.invalidate_pipelines(matrix);
+    }
+
+    /// Drop every pipeline decision over `matrix`. Called when the
+    /// matrix's active layout changes: chain measurements (and the
+    /// row-indexed outputs they describe) were taken on the old
+    /// layout.
+    fn invalidate_pipelines(&mut self, matrix: &str) {
+        self.pipeline_decisions.retain(|k, _| k.0 != matrix);
     }
 
     /// Drop every SpGEMM pair decision involving `matrix` as either
@@ -431,8 +528,10 @@ impl Autotuner {
             registry.apply_reordering(matrix, best.reorder)?;
             // the permuted layout computes a *different* product —
             // any pinned SpGEMM decision involving this matrix was
-            // measured (winner, cf) on the old layout and must go
+            // measured (winner, cf) on the old layout and must go;
+            // likewise chains, whose row-indexed outputs would move
             self.invalidate_spgemm(matrix);
+            self.invalidate_pipelines(matrix);
         }
         let decision = RouteDecision {
             matrix: matrix.to_string(),
@@ -533,6 +632,77 @@ impl Autotuner {
         };
         self.spgemm_decisions
             .insert((a.to_string(), b.to_string()), decision.clone());
+        Ok(decision)
+    }
+
+    /// Resolve the whole-chain decision for `(matrix, chain)`, running
+    /// the explore/exploit policy if none is pinned yet: rank
+    /// `candidates` (implementations prepared on the **active**
+    /// layout) with the inter-op pipeline model
+    /// ([`Planner::rank_pipeline`]), measure the top-`k` end-to-end
+    /// through the caller-supplied `measure` closure — the closure
+    /// owns the chain's actual execution (the engine routes it through
+    /// its cached schedule and shared pool), so the tuner stays
+    /// decoupled from how a chain runs — feed each measurement into
+    /// the per-op priors at the chain roof, and pin the measured best.
+    ///
+    /// Reorderings are deliberately **not** enumerated: chain outputs
+    /// are row-indexed user data, so a permuted layout is a different
+    /// answer, not a faster route to the same one.
+    #[allow(clippy::too_many_arguments)]
+    pub fn tune_pipeline(
+        &mut self,
+        matrix: &str,
+        chain: &str,
+        d: usize,
+        cls: &Classification,
+        pp: PipelineParams,
+        candidates: &[Impl],
+        active: Reordering,
+        planner: &Planner,
+        measure: &mut dyn FnMut(Impl) -> Result<f64>,
+    ) -> Result<PipelineDecision> {
+        if let Some(dec) = self.pipeline_decision(matrix, chain) {
+            return Ok(dec.clone());
+        }
+        if candidates.is_empty() {
+            return Err(Error::Usage(format!(
+                "no native kernels prepared for '{matrix}'"
+            )));
+        }
+        let ranked = planner.rank_pipeline(cls, pp, candidates);
+        let k = self.policy.top_k.clamp(1, ranked.len());
+
+        let mut measured: Vec<(PipelinePrediction, f64)> = Vec::new();
+        for pred in ranked.into_iter().take(k) {
+            let gf = measure(pred.im)?;
+            planner.observe(cls.class, pred.im, pred.roof_gflops, gf);
+            self.measurements += 1;
+            measured.push((pred, gf));
+        }
+
+        let &(best, best_gf) = measured
+            .iter()
+            .max_by(|x, y| x.1.total_cmp(&y.1))
+            .expect("k ≥ 1");
+        // `measured` is in predicted order, so [0] is the predictor's pick
+        let predictor_pick = measured[0].1;
+        let decision = PipelineDecision {
+            matrix: matrix.to_string(),
+            chain: chain.to_string(),
+            d,
+            im: best.im,
+            reorder: active,
+            dt: best.dt,
+            class: cls.class,
+            resident: best.resident,
+            predicted_gflops: best.predicted_gflops,
+            measured_gflops: best_gf,
+            explored: measured.len(),
+            regret_gflops: (best_gf - predictor_pick).max(0.0),
+        };
+        self.pipeline_decisions
+            .insert((matrix.to_string(), chain.to_string()), decision.clone());
         Ok(decision)
     }
 }
@@ -746,6 +916,142 @@ mod tests {
         let sched = real.plan(None);
         let gf = measure(&real, &sched, 4, &mut buffers, &mut rng, &policy).unwrap();
         assert!(gf > 0.0);
+    }
+
+    #[test]
+    fn tune_pipeline_pins_the_measured_best_whole_chain() {
+        use crate::model::AiParams;
+        let (_reg, planner, _buf, _rng) = fixture();
+        let a = erdos_renyi(200, 200, 5.0, &mut Prng::new(0xF20));
+        let cls = classify(&a);
+        let pp = PipelineParams::new(AiParams { n: 200, d: 8, nnz: a.nnz() }, 3);
+        let impls = [Impl::Csr, Impl::Opt, Impl::Csb];
+        let mut tuner = Autotuner::new(quick_policy());
+        let mut calls = 0usize;
+        {
+            let mut measure = |im: Impl| {
+                calls += 1;
+                Ok(match im {
+                    Impl::Opt => 9.0,
+                    Impl::Csr => 5.0,
+                    _ => 1.0,
+                })
+            };
+            let dec = tuner
+                .tune_pipeline(
+                    "er",
+                    "GCN(layers=3,d=8)",
+                    8,
+                    &cls,
+                    pp,
+                    &impls,
+                    Reordering::None,
+                    &planner,
+                    &mut measure,
+                )
+                .unwrap();
+            assert_eq!(dec.im, Impl::Opt, "measured best must win: {}", dec.summary());
+            assert_eq!(dec.dt, 8, "chain plans are pinned untiled (dt = d)");
+            assert_eq!(dec.explored, 3);
+            assert!(dec.regret_gflops >= 0.0);
+            assert!(dec.predicted_gflops > 0.0);
+        }
+        assert_eq!(calls, 3);
+        assert_eq!(tuner.measurements(), 3);
+        // pinned: the second resolve must not call the closure at all
+        let mut poison = |_im: Impl| -> Result<f64> { panic!("pinned chain re-measured") };
+        let dec2 = tuner
+            .tune_pipeline(
+                "er",
+                "GCN(layers=3,d=8)",
+                8,
+                &cls,
+                pp,
+                &impls,
+                Reordering::None,
+                &planner,
+                &mut poison,
+            )
+            .unwrap();
+        assert_eq!(dec2.im, Impl::Opt);
+        assert_eq!(tuner.measurements(), 3);
+        // a *different* chain over the same matrix is its own decision
+        let mut flat = |_im: Impl| Ok(2.0);
+        tuner
+            .tune_pipeline(
+                "er",
+                "Power(d=8,iters=4)",
+                8,
+                &cls,
+                pp,
+                &impls,
+                Reordering::None,
+                &planner,
+                &mut flat,
+            )
+            .unwrap();
+        assert_eq!(tuner.pipeline_decisions().len(), 2);
+        assert_eq!(tuner.measurements(), 6);
+    }
+
+    #[test]
+    fn pipeline_pins_adopt_without_counting_and_forget_drops() {
+        use crate::model::AiParams;
+        let (_reg, planner, _buf, _rng) = fixture();
+        let a = erdos_renyi(120, 120, 4.0, &mut Prng::new(0xF21));
+        let cls = classify(&a);
+        let pp = PipelineParams::new(AiParams { n: 120, d: 4, nnz: a.nnz() }, 2);
+        let mut tuner = Autotuner::new(quick_policy());
+        let dec = PipelineDecision {
+            matrix: "m".into(),
+            chain: "PageRank(seeds=4,iters=10)".into(),
+            d: 4,
+            im: Impl::Csr,
+            reorder: Reordering::None,
+            dt: 4,
+            class: cls.class,
+            resident: true,
+            predicted_gflops: 3.0,
+            measured_gflops: 2.5,
+            explored: 2,
+            regret_gflops: 0.0,
+        };
+        tuner.adopt_pipeline(dec.clone());
+        assert_eq!(tuner.measurements(), 0, "adoption is not a measurement");
+        // an adopted pin serves without touching the closure
+        let mut poison = |_im: Impl| -> Result<f64> { panic!("adopted pin re-measured") };
+        let got = tuner
+            .tune_pipeline(
+                "m",
+                &dec.chain,
+                4,
+                &cls,
+                pp,
+                &[Impl::Csr],
+                Reordering::None,
+                &planner,
+                &mut poison,
+            )
+            .unwrap();
+        assert_eq!(got.im, Impl::Csr);
+        assert_eq!(got.measured_gflops, 2.5);
+        tuner.forget("m");
+        assert!(tuner.pipeline_decision("m", &dec.chain).is_none());
+        // empty candidate set errors instead of pinning garbage
+        let mut flat = |_im: Impl| Ok(1.0);
+        assert!(tuner
+            .tune_pipeline(
+                "m",
+                &dec.chain,
+                4,
+                &cls,
+                pp,
+                &[],
+                Reordering::None,
+                &planner,
+                &mut flat,
+            )
+            .is_err());
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! The engine: classify → predict → route → execute → learn.
 
-use crate::coordinator::autotune::{Autotuner, AutotunePolicy, RouteDecision, SpGemmDecision};
+use std::collections::HashSet;
+
+use crate::coordinator::autotune::{
+    Autotuner, AutotunePolicy, PipelineDecision, RouteDecision, SpGemmDecision,
+};
 use crate::coordinator::batch::{BatchReport, BufferPool};
 use crate::coordinator::job::{
-    JobRecord, JobSpec, PredictionReport, SpGemmRecord, SpGemmSpec, Workload,
+    JobRecord, JobSpec, PipelineKind, PipelineRecord, PipelineSpec, PredictionReport,
+    SpGemmRecord, SpGemmSpec, Workload,
 };
 use crate::coordinator::planner::Planner;
 use crate::coordinator::registry::MatrixRegistry;
@@ -15,8 +20,17 @@ use crate::model::{MachineParams, Roofline, SpGemmParams};
 use crate::report::AutotuneState;
 use crate::runtime::{ArtifactManifest, XlaRuntime};
 use crate::sparse::Csr;
-use crate::spgemm::{compression_factor, spgemm_flops};
-use crate::spmm::Impl;
+use crate::spgemm::{compression_factor, spgemm_flops, SpGemmImpl};
+use crate::spmm::{build_native, Impl, Schedule, Spmm};
+use crate::workloads::{
+    gcn_chain, gcn_random_inputs, pagerank_chain, power_chain, power_random_input,
+    transition_matrix, OpSecs,
+};
+
+/// Fixed input seed for exploration measurements: tuning draws the
+/// same chain inputs for every candidate (and every process), so the
+/// ranking is apples-to-apples and replayable.
+const TUNE_SEED: u64 = 0x7e57_c4a1;
 
 /// Engine construction options.
 #[derive(Debug, Clone)]
@@ -64,6 +78,32 @@ impl Default for EngineConfig {
 pub enum WorkloadOutcome {
     SpMM(JobRecord),
     SpGemm(SpGemmRecord),
+    Pipeline(PipelineRecord),
+}
+
+/// The computed result of a pipeline submission
+/// ([`Engine::submit_pipeline_collect`]).
+#[derive(Debug, Clone)]
+pub enum PipelineOutput {
+    /// Final dense block, row-major `n × d` (GCN output features; the
+    /// SpMM block of an SpGEMM+SpMM chain).
+    Dense(Vec<f64>),
+    /// Final block plus convergence stats of the power iteration.
+    Power { block: Vec<f64>, lambda_max: f64, residual: f64 },
+    /// PageRank scores (`n × seeds`, row-major) plus convergence.
+    PageRank { scores: Vec<f64>, iterations: usize, delta: f64 },
+}
+
+impl PipelineOutput {
+    /// The dense payload, whichever arm carries it — what the
+    /// differential tests compare bitwise.
+    pub fn data(&self) -> &[f64] {
+        match self {
+            PipelineOutput::Dense(d) => d,
+            PipelineOutput::Power { block, .. } => block,
+            PipelineOutput::PageRank { scores, .. } => scores,
+        }
+    }
 }
 
 /// The roofline-guided SpMM engine (see module docs).
@@ -85,6 +125,12 @@ pub struct Engine {
     /// kept so `export_state` can persist exactly what the planner is
     /// using.
     ladder: Option<MeasuredLadder>,
+    /// Pipeline records, kept separately — their axes (chain, per-op
+    /// breakdown) do not fit the SpMM record shape.
+    pipeline_history: Vec<PipelineRecord>,
+    /// Graph names whose derived PageRank operator (`{name}::pr`) is
+    /// registered and current; re-registering the graph evicts it.
+    pr_derived: HashSet<String>,
 }
 
 impl Engine {
@@ -119,6 +165,8 @@ impl Engine {
             buffers: BufferPool::new(),
             tuner,
             ladder: None,
+            pipeline_history: Vec::new(),
+            pr_derived: HashSet::new(),
         })
     }
 
@@ -162,8 +210,10 @@ impl Engine {
         let impls = self.config.impls.clone();
         self.registry.register(name, csr, &impls)?;
         // a re-registered matrix invalidates its routing decisions —
-        // its structure may be entirely different
+        // its structure may be entirely different — and any derived
+        // PageRank operator built from the old structure
         self.tuner.forget(name);
+        self.pr_derived.remove(name);
         if let Some((rt, manifest)) = &self.xla {
             // staging failure (no fitting artifact) is not an error
             let _ = self.registry.attach_xla(name, rt, manifest);
@@ -442,11 +492,384 @@ impl Engine {
         Ok((record, captured))
     }
 
+    /// Execute a multi-op pipeline: route the whole chain to one
+    /// implementation (the pinned whole-chain decision when autotune
+    /// is on, the pipeline-model-best otherwise, or the forced one),
+    /// run it over **one** cached schedule with pooled ping-pong
+    /// intermediates, measure it end-to-end, and fold the measurement
+    /// back into the planner's priors at the chain roof.
+    ///
+    /// The chain executes exactly the shared cores in
+    /// [`crate::workloads`] — the same code the standalone wrappers
+    /// run — over the registry's cached untiled schedule (`dt = d`,
+    /// which is what `kernel.plan(None)` builds), so an engine-routed
+    /// chain is bitwise-identical to its standalone counterpart.
+    pub fn submit_pipeline(&mut self, spec: &PipelineSpec) -> Result<PipelineRecord> {
+        self.submit_pipeline_inner(spec, None).map(|(rec, _)| rec)
+    }
+
+    /// [`Engine::submit_pipeline`] with deterministic dense inputs and
+    /// the chain's result returned: inputs are drawn from a job-local
+    /// PRNG seeded with `seed` via the shared generators
+    /// ([`crate::workloads::gcn_random_inputs`] and friends), so the
+    /// same `(matrix, kind, seed)` computes the same answer no matter
+    /// how jobs interleave.
+    pub fn submit_pipeline_collect(
+        &mut self,
+        spec: &PipelineSpec,
+        seed: u64,
+    ) -> Result<(PipelineRecord, PipelineOutput)> {
+        self.submit_pipeline_inner(spec, Some(seed))
+    }
+
+    fn submit_pipeline_inner(
+        &mut self,
+        spec: &PipelineSpec,
+        seed: Option<u64>,
+    ) -> Result<(PipelineRecord, PipelineOutput)> {
+        if let PipelineKind::SpGemmSpMM { b, d } = &spec.kind {
+            let (b, d) = (b.clone(), *d);
+            return self.submit_chain_spgemm_spmm(spec, &b, d, seed);
+        }
+        let chain_key = spec.workload().to_string();
+        let d = spec.kind.d();
+        // derived-operator resolution: PageRank runs over the
+        // transition matrix of the *registered* graph (scores are
+        // indexed by the caller's row ids)
+        let (exec_name, dangling) = match &spec.kind {
+            PipelineKind::PageRank { .. } => self.ensure_pagerank_operator(&spec.matrix)?,
+            _ => {
+                if self.registry.get(&spec.matrix).is_none() {
+                    return Err(Error::Usage(format!(
+                        "matrix '{}' not registered",
+                        spec.matrix
+                    )));
+                }
+                (spec.matrix.clone(), Vec::new())
+            }
+        };
+        let entry = self.registry.get(&exec_name).expect("resolved above");
+        let cls = entry.classification.clone();
+        let reorder = entry.reordering();
+        let (n, nnz) = (entry.n(), entry.nnz());
+        // chained widths vary mid-pipeline (GCN), so only the
+        // width-agnostic native kernels are candidates
+        let candidates: Vec<Impl> =
+            entry.available(d).into_iter().filter(|&im| im != Impl::Xla).collect();
+        if candidates.is_empty() {
+            return Err(Error::Usage(format!(
+                "no native kernels available for '{exec_name}' at d={d}"
+            )));
+        }
+        let pp = spec.kind.pipeline_params(n, nnz, spec.kind.ops());
+
+        // adaptive routing: serve (or tune) the whole-chain pin; the
+        // measure closure runs the *full* chain per candidate, so the
+        // decision optimizes the pipeline, not its hottest op
+        let routed: Option<PipelineDecision> =
+            if self.config.autotune.enabled && spec.force_impl.is_none() {
+                let kind = &spec.kind;
+                let registry = &self.registry;
+                let buffers = &mut self.buffers;
+                let explore_iters = self.config.autotune.explore_iters;
+                let dang = &dangling;
+                let exec = exec_name.as_str();
+                let mut measure = |im: Impl| -> Result<f64> {
+                    let kernel = registry
+                        .get(exec)
+                        .expect("resolved above")
+                        .kernel(im, d)
+                        .ok_or_else(|| Error::Usage(format!("kernel {im} vanished")))?;
+                    let sched =
+                        registry.schedule(exec, im, d, d).expect("kernel exists");
+                    let (secs, _, ops, _) = measure_chain(0, explore_iters, || {
+                        run_chain(kind, kernel, &sched, dang, TUNE_SEED, buffers)
+                    })?;
+                    Ok(gflops(kind.pipeline_params(n, nnz, ops).flops(), secs))
+                };
+                Some(self.tuner.tune_pipeline(
+                    &spec.matrix,
+                    &chain_key,
+                    d,
+                    &cls,
+                    pp,
+                    &candidates,
+                    reorder,
+                    &self.planner,
+                    &mut measure,
+                )?)
+            } else {
+                None
+            };
+
+        let chosen_im = match (spec.force_impl, &routed) {
+            (Some(im), _) => {
+                if !candidates.contains(&im) {
+                    return Err(Error::Usage(format!(
+                        "impl {im} not prepared for '{exec_name}' (native chain \
+                         candidates: {candidates:?})"
+                    )));
+                }
+                im
+            }
+            (None, Some(dec)) => {
+                if !candidates.contains(&dec.im) {
+                    return Err(Error::Usage(format!(
+                        "pinned impl {} not prepared for '{exec_name}'",
+                        dec.im
+                    )));
+                }
+                dec.im
+            }
+            (None, None) => self.planner.rank_pipeline(&cls, pp, &candidates)[0].im,
+        };
+        let prediction = self.planner.predict_pipeline(&cls, pp, chosen_im);
+
+        let kernel = self
+            .registry
+            .get(&exec_name)
+            .expect("resolved above")
+            .kernel(chosen_im, d)
+            .expect("candidate impl has a kernel");
+        // ONE schedule for the whole chain, served from the registry
+        // cache; dt = d plans untiled — the width-independent plan
+        // every chained op shares, and the one `kernel.plan(None)`
+        // (the standalone wrappers' schedule) builds, which is what
+        // keeps both paths bitwise-identical
+        let sched = self
+            .registry
+            .schedule(&exec_name, chosen_im, d, d)
+            .expect("kernel was just resolved");
+        let input_seed = match seed {
+            Some(s) => s,
+            None => self.rng.next_u64(),
+        };
+        let kind = &spec.kind;
+        let dang = &dangling;
+        let buffers = &mut self.buffers;
+        let (secs, per_op, ops, output) =
+            measure_chain(self.config.warmup, self.config.iters, || {
+                run_chain(kind, kernel, &sched, dang, input_seed, buffers)
+            })?;
+        let flops = spec.kind.pipeline_params(n, nnz, ops).flops();
+        let measured = gflops(flops, secs);
+        self.planner.observe(cls.class, chosen_im, prediction.roof_gflops, measured);
+        let record = PipelineRecord {
+            matrix: spec.matrix.clone(),
+            class: cls.class,
+            chain: chain_key,
+            chosen: chosen_im,
+            reorder,
+            dt: prediction.dt,
+            ops,
+            resident: prediction.resident,
+            predicted_gflops: prediction.predicted_gflops,
+            ai: prediction.ai,
+            secs,
+            measured_gflops: measured,
+            per_op,
+        };
+        self.pipeline_history.push(record.clone());
+        Ok((record, output))
+    }
+
+    /// Resolve (and lazily register) the derived PageRank operator for
+    /// `graph`: the column-stochastic transition matrix of the
+    /// **registered** graph under the scoped name `{graph}::pr`, plus
+    /// the dangling-row mask. Derived from the base (unreordered)
+    /// matrix — a reordering pinned on the graph by SpMM tuning must
+    /// not leak into user-visible score indices. The operator entry
+    /// gets the engine's full kernel preparation, so chained
+    /// submissions serve its kernels and schedules from cache.
+    fn ensure_pagerank_operator(&mut self, graph: &str) -> Result<(String, Vec<bool>)> {
+        let derived = format!("{graph}::pr");
+        let (fresh, dangling) = {
+            let entry = self
+                .registry
+                .get(graph)
+                .ok_or_else(|| Error::Usage(format!("matrix '{graph}' not registered")))?;
+            let base = entry.base_csr();
+            let dangling: Vec<bool> =
+                (0..base.nrows).map(|r| base.row_len(r) == 0).collect();
+            if self.pr_derived.contains(graph) && self.registry.get(&derived).is_some() {
+                (None, dangling)
+            } else {
+                let (m, _) = transition_matrix(base)?;
+                (Some(m), dangling)
+            }
+        };
+        if let Some(m) = fresh {
+            self.register(&derived, m)?;
+            self.pr_derived.insert(graph.to_string());
+        }
+        Ok((derived, dangling))
+    }
+
+    /// The SpGEMM→SpMM chain: `C = A·B` through the registry's
+    /// prepared Hash kernel (every SpGEMM kernel agrees bitwise — see
+    /// [`crate::spgemm`]), then the routed SpMM of the data-dependent
+    /// product against a seeded dense block. The SpMM leg's kernel is
+    /// built on the product per submission — the product is not a
+    /// registered matrix — so candidates are the engine's configured
+    /// native impls, ranked on the chain model with `nnz(A)` standing
+    /// in for the unknown `nnz(C)`.
+    fn submit_chain_spgemm_spmm(
+        &mut self,
+        spec: &PipelineSpec,
+        bname: &str,
+        d: usize,
+        seed: Option<u64>,
+    ) -> Result<(PipelineRecord, PipelineOutput)> {
+        let chain_key = spec.workload().to_string();
+        self.registry.ensure_spgemm(&spec.matrix, SpGemmImpl::Hash)?;
+        let (entry_a, entry_b) = self.registry.spgemm_pair(&spec.matrix, bname)?;
+        let cls = entry_a.classification.clone();
+        let reorder = entry_a.reordering();
+        let (n, nnz) = (entry_a.n(), entry_a.nnz());
+        let spgemm_leg_flops = spgemm_flops(entry_a.csr(), entry_b.csr());
+        let pp = spec.kind.pipeline_params(n, nnz, 1);
+        let candidates: Vec<Impl> =
+            self.config.impls.iter().copied().filter(|&im| im != Impl::Xla).collect();
+        if candidates.is_empty() {
+            return Err(Error::Usage("no native impls configured".into()));
+        }
+
+        // SpGEMM leg once — timed, and its product feeds every SpMM
+        // candidate (the leg is impl-independent, so ranking by the
+        // SpMM leg ranks the whole chain)
+        let threads = self.config.threads;
+        let (product, spgemm_secs) = {
+            let entry_a = self.registry.get(&spec.matrix).expect("resolved above");
+            let bcsr = self.registry.get(bname).expect("resolved above").csr();
+            let gk = entry_a.spgemm_kernel(SpGemmImpl::Hash).expect("ensured above");
+            let gsched = gk.plan();
+            let t = Timer::start();
+            let c = gk.execute_with(bcsr, &gsched)?;
+            (c, t.elapsed_secs())
+        };
+        let spmm_leg_flops = spmm_flops(product.nnz(), d);
+
+        let routed: Option<PipelineDecision> =
+            if self.config.autotune.enabled && spec.force_impl.is_none() {
+                let buffers = &mut self.buffers;
+                let explore_iters = self.config.autotune.explore_iters;
+                let productr = &product;
+                let mut measure = |im: Impl| -> Result<f64> {
+                    let kernel = build_native(im, productr, threads)?;
+                    let sched = kernel.plan(None);
+                    let b =
+                        buffers.acquire_random(kernel.ncols(), d, &mut Prng::new(TUNE_SEED));
+                    let mut c = buffers.acquire(kernel.nrows(), d);
+                    let gf = (|| -> Result<f64> {
+                        kernel.execute_with(&b, &mut c, &sched)?;
+                        let iters = explore_iters.max(1);
+                        let r = bench_adaptive_checked(0, iters, iters * 4, 0.0, |_| {
+                            kernel.execute_with(&b, &mut c, &sched)
+                        })?;
+                        Ok(gflops(spmm_leg_flops, r.median_secs()))
+                    })();
+                    buffers.release(b);
+                    buffers.release(c);
+                    gf
+                };
+                Some(self.tuner.tune_pipeline(
+                    &spec.matrix,
+                    &chain_key,
+                    d,
+                    &cls,
+                    pp,
+                    &candidates,
+                    reorder,
+                    &self.planner,
+                    &mut measure,
+                )?)
+            } else {
+                None
+            };
+
+        let chosen_im = match (spec.force_impl, &routed) {
+            (Some(im), _) => {
+                if im == Impl::Xla {
+                    return Err(Error::Usage(
+                        "SpGEMM+SpMM chains route native SpMM kernels only".into(),
+                    ));
+                }
+                im
+            }
+            (None, Some(dec)) => dec.im,
+            (None, None) => self.planner.rank_pipeline(&cls, pp, &candidates)[0].im,
+        };
+        let prediction = self.planner.predict_pipeline(&cls, pp, chosen_im);
+
+        // SpMM leg on the product with the chosen impl
+        let kernel = build_native(chosen_im, &product, threads)?;
+        let sched = kernel.plan(None);
+        let input_seed = match seed {
+            Some(s) => s,
+            None => self.rng.next_u64(),
+        };
+        let b = self.buffers.acquire_random(kernel.ncols(), d, &mut Prng::new(input_seed));
+        let mut c = self.buffers.acquire(kernel.nrows(), d);
+        if let Err(e) = kernel.execute_with(&b, &mut c, &sched) {
+            self.buffers.release(b);
+            self.buffers.release(c);
+            return Err(e);
+        }
+        let r = bench_adaptive_checked(
+            self.config.warmup,
+            self.config.iters,
+            self.config.iters * 4,
+            0.2,
+            |_| kernel.execute_with(&b, &mut c, &sched),
+        );
+        let output = match &r {
+            Ok(_) => Some(c.data.clone()),
+            Err(_) => None,
+        };
+        self.buffers.release(b);
+        self.buffers.release(c);
+        let r = r?;
+        let spmm_secs = r.median_secs();
+        let secs = spgemm_secs + spmm_secs;
+        let flops = spgemm_leg_flops + spmm_leg_flops;
+        let measured = gflops(flops, secs);
+        self.planner.observe(cls.class, chosen_im, prediction.roof_gflops, measured);
+        let record = PipelineRecord {
+            matrix: spec.matrix.clone(),
+            class: cls.class,
+            chain: chain_key,
+            chosen: chosen_im,
+            reorder,
+            dt: prediction.dt,
+            ops: 1,
+            resident: prediction.resident,
+            predicted_gflops: prediction.predicted_gflops,
+            ai: prediction.ai,
+            secs,
+            measured_gflops: measured,
+            per_op: vec![
+                OpSecs { op: "spgemm", secs: spgemm_secs },
+                OpSecs { op: "spmm", secs: spmm_secs },
+            ],
+        };
+        self.pipeline_history.push(record.clone());
+        Ok((record, PipelineOutput::Dense(output.expect("benchmark succeeded"))))
+    }
+
+    /// Every pipeline record executed so far.
+    pub fn pipeline_history(&self) -> &[PipelineRecord] {
+        &self.pipeline_history
+    }
+
     /// Dispatch on the [`Workload`] dimension: `SpMM` jobs go through
     /// [`Engine::submit`], `SpGemm` jobs through
-    /// [`Engine::submit_spgemm`] — the single entry point for callers
-    /// holding a `(matrix, workload)` pair rather than a concrete
-    /// spec.
+    /// [`Engine::submit_spgemm`], and the pipeline workloads through
+    /// [`Engine::submit_pipeline`] — the single entry point for
+    /// callers holding a `(matrix, workload)` pair rather than a
+    /// concrete spec. The pipeline workloads use canonical chain
+    /// parameters (uniform GCN widths, PageRank seeds `0..k` at
+    /// `α = 0.85`, `tol = 1e-9`); callers wanting full control build a
+    /// [`PipelineSpec`] directly.
     pub fn submit_workload(&mut self, matrix: &str, w: &Workload) -> Result<WorkloadOutcome> {
         match w {
             Workload::SpMM { d } => {
@@ -455,6 +878,35 @@ impl Engine {
             Workload::SpGemm { b } => Ok(WorkloadOutcome::SpGemm(
                 self.submit_spgemm(&SpGemmSpec::new(matrix, b.clone()))?,
             )),
+            Workload::GcnLayer { layers, d } => {
+                Ok(WorkloadOutcome::Pipeline(self.submit_pipeline(&PipelineSpec::new(
+                    matrix,
+                    PipelineKind::Gcn { dims: vec![*d; layers + 1] },
+                ))?))
+            }
+            Workload::PowerIteration { d, iters } => {
+                Ok(WorkloadOutcome::Pipeline(self.submit_pipeline(&PipelineSpec::new(
+                    matrix,
+                    PipelineKind::PowerIteration { d: *d, iters: *iters },
+                ))?))
+            }
+            Workload::BatchedPageRank { seeds, iters } => {
+                Ok(WorkloadOutcome::Pipeline(self.submit_pipeline(&PipelineSpec::new(
+                    matrix,
+                    PipelineKind::PageRank {
+                        seeds: (0..*seeds).collect(),
+                        alpha: 0.85,
+                        tol: 1e-9,
+                        iters: *iters,
+                    },
+                ))?))
+            }
+            Workload::SpGemmSpMM { b, d } => {
+                Ok(WorkloadOutcome::Pipeline(self.submit_pipeline(&PipelineSpec::new(
+                    matrix,
+                    PipelineKind::SpGemmSpMM { b: b.clone(), d: *d },
+                ))?))
+            }
         }
     }
 
@@ -577,6 +1029,7 @@ impl Engine {
         AutotuneState {
             routes: self.tuner.decisions().into_iter().cloned().collect(),
             spgemm: self.tuner.spgemm_decisions().into_iter().cloned().collect(),
+            pipelines: self.tuner.pipeline_decisions().into_iter().cloned().collect(),
             spmm_priors: self.planner.priors_snapshot(),
             spgemm_priors: self.planner.spgemm_priors_snapshot(),
             ladder: self.ladder.clone(),
@@ -621,6 +1074,20 @@ impl Engine {
             }
             self.tuner.adopt_spgemm(dec.clone());
             adopted += 1;
+        }
+        // pipeline pins adopt only when the matrix's *current* layout
+        // matches the one the pin measured: pipelines never reorder
+        // (chain outputs are row-indexed user data), so a pin must not
+        // fight a route decision that restored a different layout —
+        // routes restore above, then compatible pipeline pins follow
+        for dec in &state.pipelines {
+            match self.registry.get(&dec.matrix) {
+                Some(e) if e.reordering() == dec.reorder => {
+                    self.tuner.adopt_pipeline(dec.clone());
+                    adopted += 1;
+                }
+                _ => {}
+            }
         }
         adopted
     }
@@ -709,11 +1176,100 @@ impl Engine {
     }
 }
 
+/// Execute one full chain through the shared workload cores: inputs
+/// come from the shared seeded generators (the same ones standalone
+/// callers and tests use, so identical seeds mean identical answers),
+/// intermediates ping-pong through `pool`, and the chain's dense
+/// output is copied out and its storage released back to the pool so
+/// repeated timing-loop runs are pool hits. Returns
+/// `(per_op timings, executed op count, output)` — the op count is
+/// runtime-resolved for iterative chains (PageRank converges early).
+fn run_chain(
+    kind: &PipelineKind,
+    kernel: &dyn Spmm,
+    sched: &Schedule,
+    dangling: &[bool],
+    seed: u64,
+    pool: &mut BufferPool,
+) -> Result<(Vec<OpSecs>, usize, PipelineOutput)> {
+    match kind {
+        PipelineKind::Gcn { dims } => {
+            let (h0, layers) = gcn_random_inputs(kernel.ncols(), dims, seed);
+            let (out, per_op) = gcn_chain(kernel, sched, &h0, &layers, pool)?;
+            let ops = layers.len();
+            let data = out.data.clone();
+            pool.release(out);
+            Ok((per_op, ops, PipelineOutput::Dense(data)))
+        }
+        PipelineKind::PowerIteration { d, iters } => {
+            let x0 = power_random_input(kernel.ncols(), *d, seed);
+            let (out, stats, per_op) = power_chain(kernel, sched, &x0, *iters, pool)?;
+            let ops = stats.iters;
+            let block = out.data.clone();
+            pool.release(out);
+            Ok((
+                per_op,
+                ops,
+                PipelineOutput::Power {
+                    block,
+                    lambda_max: stats.lambda_max,
+                    residual: stats.residual,
+                },
+            ))
+        }
+        PipelineKind::PageRank { seeds, alpha, tol, iters } => {
+            let (r, per_op) =
+                pagerank_chain(kernel, sched, dangling, seeds, *alpha, *tol, *iters, pool)?;
+            let ops = r.iterations;
+            let scores = r.scores.data.clone();
+            pool.release(r.scores);
+            Ok((
+                per_op,
+                ops,
+                PipelineOutput::PageRank { scores, iterations: r.iterations, delta: r.delta },
+            ))
+        }
+        PipelineKind::SpGemmSpMM { .. } => Err(Error::Usage(
+            "SpGEMM+SpMM chains run through their own path".into(),
+        )),
+    }
+}
+
+/// Time a chain end-to-end: `warmup` unrecorded runs, then
+/// `iters.max(1)` timed runs, reporting the median wall-clock and the
+/// per-op breakdown / op count / output of the **last** run (every
+/// run computes the same answer — inputs are re-drawn from the same
+/// seed each time).
+fn measure_chain<F>(
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> Result<(f64, Vec<OpSecs>, usize, PipelineOutput)>
+where
+    F: FnMut() -> Result<(Vec<OpSecs>, usize, PipelineOutput)>,
+{
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut times = Vec::new();
+    let mut last = None;
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        let out = f()?;
+        times.push(t.elapsed_secs());
+        last = Some(out);
+    }
+    times.sort_by(|a, b| a.total_cmp(b));
+    let (per_op, ops, output) = last.expect("at least one timed run");
+    Ok((times[times.len() / 2], per_op, ops, output))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::gen::{erdos_renyi, mesh2d, MeshKind, Prng};
     use crate::spgemm::SpGemmImpl;
+    use crate::workloads::{batched_pagerank, block_power_iteration, gcn_forward};
 
     fn test_engine() -> Engine {
         test_engine_with(AutotunePolicy::default())
@@ -1119,5 +1675,201 @@ mod tests {
         let _ = std::fs::remove_file(path);
         let mut e3 = test_engine_with(quick_autotune());
         assert!(!e3.load_state(path));
+    }
+
+    #[test]
+    fn pipeline_gcn_matches_standalone_bitwise() {
+        let a = erdos_renyi(150, 150, 4.0, &mut Prng::new(210));
+        let dims = vec![8usize, 4, 8];
+        let seed = 77u64;
+        // standalone: thin wrapper over the shared chain core
+        let kernel = build_native(Impl::Csr, &a, 2).unwrap();
+        let (h0, layers) = gcn_random_inputs(150, &dims, seed);
+        let want = gcn_forward(kernel.as_ref(), &h0, &layers).unwrap();
+        // engine: same chain over the cached schedule + shared pool
+        let mut e = test_engine();
+        e.register("m", a).unwrap();
+        let spec = PipelineSpec::new("m", PipelineKind::Gcn { dims }).with_impl(Impl::Csr);
+        let (rec, out) = e.submit_pipeline_collect(&spec, seed).unwrap();
+        assert_eq!(rec.ops, 2);
+        assert_eq!(rec.per_op.len(), 2);
+        assert_eq!(rec.chain, "GCN(layers=2,d=8)");
+        assert!(rec.measured_gflops > 0.0);
+        let got = out.data();
+        assert_eq!(got.len(), want.data.len());
+        assert!(
+            got.iter().zip(&want.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "engine-routed GCN must be bitwise-identical to gcn_forward"
+        );
+        assert_eq!(e.pipeline_history().len(), 1);
+    }
+
+    #[test]
+    fn pipeline_power_matches_standalone_bitwise() {
+        let a = mesh2d(14, MeshKind::Triangular, 0.9, &mut Prng::new(211));
+        let n = a.nrows;
+        let seed = 31u64;
+        let kernel = build_native(Impl::Opt, &a, 2).unwrap();
+        let x0 = power_random_input(n, 4, seed);
+        let (want, stats) = block_power_iteration(kernel.as_ref(), &x0, 5).unwrap();
+        let mut e = test_engine();
+        e.register("m", a).unwrap();
+        let spec = PipelineSpec::new("m", PipelineKind::PowerIteration { d: 4, iters: 5 })
+            .with_impl(Impl::Opt);
+        let (rec, out) = e.submit_pipeline_collect(&spec, seed).unwrap();
+        assert_eq!(rec.ops, stats.iters);
+        match out {
+            PipelineOutput::Power { block, lambda_max, residual } => {
+                assert!(block.iter().zip(&want.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+                assert_eq!(lambda_max.to_bits(), stats.lambda_max.to_bits());
+                assert_eq!(residual.to_bits(), stats.residual.to_bits());
+            }
+            other => panic!("power pipeline returned wrong output kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pipeline_pagerank_matches_standalone_and_refreshes_operator() {
+        let g = erdos_renyi(120, 120, 3.0, &mut Prng::new(212));
+        let seeds = vec![0usize, 1, 2];
+        let want = batched_pagerank(&g, &seeds, 0.85, 1e-9, 30, Impl::Csr, 2).unwrap();
+        let mut e = test_engine();
+        e.register("g", g).unwrap();
+        let kind = PipelineKind::PageRank {
+            seeds: seeds.clone(),
+            alpha: 0.85,
+            tol: 1e-9,
+            iters: 30,
+        };
+        let spec = PipelineSpec::new("g", kind.clone()).with_impl(Impl::Csr);
+        let (rec, out) = e.submit_pipeline_collect(&spec, 0).unwrap();
+        assert_eq!(rec.matrix, "g", "record names the user's graph, not the operator");
+        assert_eq!(rec.ops, want.iterations);
+        match out {
+            PipelineOutput::PageRank { scores, iterations, delta } => {
+                assert_eq!(iterations, want.iterations);
+                assert_eq!(delta.to_bits(), want.delta.to_bits());
+                assert!(
+                    scores.iter().zip(&want.scores.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "engine-routed PageRank must match batched_pagerank bitwise"
+                );
+            }
+            other => panic!("pagerank pipeline returned wrong output kind: {other:?}"),
+        }
+        // the derived transition operator is registered under a scoped
+        // name and refreshed when the graph is re-registered
+        assert!(e.registry().get("g::pr").is_some());
+        let g2 = erdos_renyi(80, 80, 3.0, &mut Prng::new(218));
+        e.register("g", g2).unwrap();
+        let (_, out2) = e.submit_pipeline_collect(&spec, 0).unwrap();
+        match out2 {
+            PipelineOutput::PageRank { scores, .. } => {
+                assert_eq!(scores.len(), 80 * 3, "operator must track the new graph");
+            }
+            other => panic!("pagerank pipeline returned wrong output kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn autotuned_pipeline_pins_whole_chain_then_serves() {
+        let mut e = test_engine_with(quick_autotune());
+        let a = erdos_renyi(200, 200, 4.0, &mut Prng::new(213));
+        e.register("m", a).unwrap();
+        let spec = PipelineSpec::new("m", PipelineKind::Gcn { dims: vec![8, 8, 8] });
+        let r1 = e.submit_pipeline(&spec).unwrap();
+        let dec = e.autotuner().pipeline_decision("m", "GCN(layers=2,d=8)").unwrap().clone();
+        assert_eq!(r1.chosen, dec.im);
+        assert_eq!(dec.explored, 3, "every native candidate measured on the whole chain");
+        assert_eq!(dec.reorder, crate::sparse::reorder::Reordering::None);
+        let n = e.autotuner().measurements();
+        let r2 = e.submit_pipeline(&spec).unwrap();
+        assert_eq!(e.autotuner().measurements(), n, "pinned chain explores nothing");
+        assert_eq!(r2.chosen, dec.im);
+        // one schedule serves every op of every run: after the first
+        // plan, chained submissions hit the registry cache
+        assert!(e.registry().schedule_hit_rate() > 0.5);
+        // re-registration forgets the pipeline pin
+        let a2 = erdos_renyi(200, 200, 3.0, &mut Prng::new(214));
+        e.register("m", a2).unwrap();
+        assert!(e.autotuner().pipeline_decision("m", "GCN(layers=2,d=8)").is_none());
+    }
+
+    #[test]
+    fn pipeline_state_round_trip_serves_without_exploring() {
+        let a = erdos_renyi(200, 200, 4.0, &mut Prng::new(215));
+        let mut e1 = test_engine_with(quick_autotune());
+        e1.register("m", a.clone()).unwrap();
+        let spec = PipelineSpec::new("m", PipelineKind::PowerIteration { d: 4, iters: 3 });
+        e1.submit_pipeline(&spec).unwrap();
+        let state = e1.export_state();
+        assert_eq!(state.pipelines.len(), 1);
+        let dec = state.pipelines[0].clone();
+
+        let mut e2 = test_engine_with(quick_autotune());
+        e2.register("m", a).unwrap();
+        assert_eq!(e2.restore_state(&state), 1);
+        let r = e2.submit_pipeline(&spec).unwrap();
+        assert_eq!(r.chosen, dec.im);
+        assert_eq!(e2.autotuner().measurements(), 0, "restored pipeline pin explores nothing");
+
+        // pins for unregistered matrices are skipped, not errors
+        let mut e3 = test_engine_with(quick_autotune());
+        assert_eq!(e3.restore_state(&state), 0);
+    }
+
+    #[test]
+    fn workload_dispatch_covers_pipeline_arms() {
+        let mut e = test_engine();
+        let a = erdos_renyi(120, 120, 3.0, &mut Prng::new(216));
+        e.register("m", a).unwrap();
+        match e.submit_workload("m", &Workload::GcnLayer { layers: 2, d: 4 }).unwrap() {
+            WorkloadOutcome::Pipeline(rec) => {
+                assert_eq!(rec.chain, "GCN(layers=2,d=4)");
+                assert_eq!(rec.ops, 2);
+                assert!(rec.measured_gflops > 0.0);
+            }
+            other => panic!("GCN workload dispatched wrong: {other:?}"),
+        }
+        match e.submit_workload("m", &Workload::BatchedPageRank { seeds: 2, iters: 10 }).unwrap() {
+            WorkloadOutcome::Pipeline(rec) => {
+                assert_eq!(rec.chain, "PageRank(seeds=2,iters=10)");
+                assert!(rec.ops >= 1 && rec.ops <= 10);
+            }
+            other => panic!("PageRank workload dispatched wrong: {other:?}"),
+        }
+        match e.submit_workload("m", &Workload::SpGemmSpMM { b: "m".into(), d: 4 }).unwrap() {
+            WorkloadOutcome::Pipeline(rec) => {
+                assert_eq!(rec.per_op.len(), 2);
+                assert_eq!(rec.per_op[0].op, "spgemm");
+                assert_eq!(rec.per_op[1].op, "spmm");
+                assert_eq!(rec.ops, 1);
+            }
+            other => panic!("SpGEMM+SpMM workload dispatched wrong: {other:?}"),
+        }
+        assert_eq!(e.pipeline_history().len(), 3);
+        // unknown matrices error instead of panicking
+        let ghost = PipelineSpec::new("ghost", PipelineKind::PowerIteration { d: 4, iters: 2 });
+        assert!(e.submit_pipeline(&ghost).is_err());
+    }
+
+    #[test]
+    fn spgemm_spmm_chain_is_seeded_and_rejects_xla() {
+        let mut e = test_engine();
+        let a = erdos_renyi(100, 100, 3.0, &mut Prng::new(217));
+        e.register("a", a).unwrap();
+        let spec = PipelineSpec::new("a", PipelineKind::SpGemmSpMM { b: "a".into(), d: 4 })
+            .with_impl(Impl::Csr);
+        let (rec, out) = e.submit_pipeline_collect(&spec, 5).unwrap();
+        assert_eq!(out.data().len(), 100 * 4);
+        assert_eq!(rec.ops, 1);
+        assert!(rec.secs > 0.0 && rec.measured_gflops > 0.0);
+        // same (chain, seed, impl) reproduces bitwise
+        let (_, out2) = e.submit_pipeline_collect(&spec, 5).unwrap();
+        assert!(out.data().iter().zip(out2.data()).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // the SpMM leg runs on a data-dependent product — only native
+        // kernels can serve it
+        let bad = PipelineSpec::new("a", PipelineKind::SpGemmSpMM { b: "a".into(), d: 4 })
+            .with_impl(Impl::Xla);
+        assert!(e.submit_pipeline(&bad).is_err());
     }
 }

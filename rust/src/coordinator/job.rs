@@ -1,21 +1,39 @@
 //! Job and result types for the engine.
 
 use crate::gen::SparsityClass;
+use crate::model::{AiParams, PipelineParams};
 use crate::sparse::Reordering;
 use crate::spgemm::SpGemmImpl;
 use crate::spmm::Impl;
+use crate::workloads::OpSecs;
 
 /// Which multiply a job performs — the routing dimension the planner
 /// and autotuner branch on. SpMM jobs multiply by a dense `n × d`
 /// operand ([`JobSpec`]); SpGEMM jobs multiply by another *registered
 /// sparse matrix* ([`SpGemmSpec`]), where output fill-in and the
 /// compression factor — not a dense width — drive the traffic models.
+/// The pipeline variants name multi-op chains ([`PipelineSpec`]),
+/// where *inter-op* reuse joins the traffic model
+/// ([`crate::model::bytes_pipeline`]) and the router tunes the whole
+/// chain, not each op.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Workload {
     /// Multiply by a dense operand of width `d`.
     SpMM { d: usize },
     /// Multiply by the sparse matrix registered under this name.
     SpGemm { b: String },
+    /// Pipeline: `layers` chained GCN layers (SpMM then dense
+    /// transform + ReLU), input feature width `d`.
+    GcnLayer { layers: usize, d: usize },
+    /// Pipeline: `iters` chained block power iterations (SpMM then
+    /// normalize) over a `d`-wide block.
+    PowerIteration { d: usize, iters: usize },
+    /// Pipeline: batched PageRank, one dense column per
+    /// personalization seed, up to `iters` chained iterations.
+    BatchedPageRank { seeds: usize, iters: usize },
+    /// Pipeline: SpGEMM against the sparse matrix registered as `b`,
+    /// then SpMM of the product by a `d`-wide dense block.
+    SpGemmSpMM { b: String, d: usize },
 }
 
 impl std::fmt::Display for Workload {
@@ -23,6 +41,12 @@ impl std::fmt::Display for Workload {
         match self {
             Workload::SpMM { d } => write!(f, "SpMM(d={d})"),
             Workload::SpGemm { b } => write!(f, "SpGEMM(×{b})"),
+            Workload::GcnLayer { layers, d } => write!(f, "GCN(layers={layers},d={d})"),
+            Workload::PowerIteration { d, iters } => write!(f, "Power(d={d},iters={iters})"),
+            Workload::BatchedPageRank { seeds, iters } => {
+                write!(f, "PageRank(seeds={seeds},iters={iters})")
+            }
+            Workload::SpGemmSpMM { b, d } => write!(f, "SpGEMM+SpMM(×{b},d={d})"),
         }
     }
 }
@@ -80,6 +104,195 @@ impl SpGemmSpec {
     /// This job's workload dimension.
     pub fn workload(&self) -> Workload {
         Workload::SpGemm { b: self.b.clone() }
+    }
+}
+
+/// Shape of a multi-op pipeline: which chain to run and its
+/// per-chain parameters. Dense inputs (feature blocks, weights, start
+/// vectors) are *not* stored here — the engine draws them
+/// deterministically from the job seed via the shared generators in
+/// [`crate::workloads`] (`gcn_random_inputs`, `power_random_input`),
+/// so a pipeline spec stays cheap to clone, coalesce, and persist.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PipelineKind {
+    /// GCN forward pass: `dims` is the width chain `d0 → d1 → …`
+    /// (`dims.len() − 1` layers; `dims[0]` is the input feature
+    /// width).
+    Gcn { dims: Vec<usize> },
+    /// Block power iteration: `iters` rounds over an `n × d` block.
+    PowerIteration { d: usize, iters: usize },
+    /// Batched personalized PageRank over the transition operator
+    /// derived from the registered graph
+    /// ([`crate::workloads::transition_matrix`]).
+    PageRank { seeds: Vec<usize>, alpha: f64, tol: f64, iters: usize },
+    /// SpGEMM against registered matrix `b`, then SpMM of the product
+    /// by a `d`-wide dense block.
+    SpGemmSpMM { b: String, d: usize },
+}
+
+impl PipelineKind {
+    /// This chain's workload dimension (the shape key decisions and
+    /// persisted plans are pinned under).
+    pub fn workload(&self) -> Workload {
+        match self {
+            PipelineKind::Gcn { dims } => {
+                Workload::GcnLayer { layers: dims.len().saturating_sub(1), d: dims[0] }
+            }
+            PipelineKind::PowerIteration { d, iters } => {
+                Workload::PowerIteration { d: *d, iters: *iters }
+            }
+            PipelineKind::PageRank { seeds, iters, .. } => {
+                Workload::BatchedPageRank { seeds: seeds.len(), iters: *iters }
+            }
+            PipelineKind::SpGemmSpMM { b, d } => Workload::SpGemmSpMM { b: b.clone(), d: *d },
+        }
+    }
+
+    /// The dense width the chain's cached schedule and kernel are
+    /// keyed on (the intermediate block's width at the chain head).
+    pub fn d(&self) -> usize {
+        match self {
+            PipelineKind::Gcn { dims } => dims[0],
+            PipelineKind::PowerIteration { d, .. } => *d,
+            PipelineKind::PageRank { seeds, .. } => seeds.len(),
+            PipelineKind::SpGemmSpMM { d, .. } => *d,
+        }
+    }
+
+    /// Chained SpMM applications at full length (PageRank may stop
+    /// earlier on convergence — records carry the executed count).
+    pub fn ops(&self) -> usize {
+        match self {
+            PipelineKind::Gcn { dims } => dims.len().saturating_sub(1),
+            PipelineKind::PowerIteration { iters, .. } => *iters,
+            PipelineKind::PageRank { iters, .. } => *iters,
+            PipelineKind::SpGemmSpMM { .. } => 1,
+        }
+    }
+
+    /// Model-side shape of this chain for a matrix with `n` rows and
+    /// `nnz` stored values, at an executed chain length of `ops`
+    /// (pass [`PipelineKind::ops`] for predictions). The SpMM term
+    /// uses the chain-head width ([`PipelineKind::d`]; for GCN the
+    /// mean layer input width, since widths change per layer); the
+    /// non-SpMM stages ride along as `extra_flops`/`extra_bytes`:
+    ///
+    /// * GCN — dense transforms `Σ 2·n·d_in·d_out` FLOPs with their
+    ///   weight panels `Σ 8·d_in·d_out` streamed once each (the
+    ///   intermediate feature blocks are already charged by the SpMM
+    ///   terms).
+    /// * Power iteration — per round: normalize + residual sweeps of
+    ///   the block (`≈ 6·n·d`) and the first-column Rayleigh dots
+    ///   (`≈ 4·n`); no extra DRAM streams beyond the resident block.
+    /// * PageRank — per round: the rank-one update sweep
+    ///   (`≈ 4·n·d`); same residency argument.
+    /// * SpGEMM+SpMM — the SpMM leg only; the SpGEMM leg's FLOPs are
+    ///   data-dependent and recorded separately.
+    pub fn pipeline_params(&self, n: usize, nnz: usize, ops: usize) -> PipelineParams {
+        let nf = n as f64;
+        match self {
+            PipelineKind::Gcn { dims } => {
+                let widths = &dims[..dims.len().saturating_sub(1)];
+                let mean_d = (widths.iter().sum::<usize>() / widths.len().max(1)).max(1);
+                let (mut xf, mut xb) = (0.0, 0.0);
+                for w in dims.windows(2) {
+                    xf += 2.0 * nf * w[0] as f64 * w[1] as f64;
+                    xb += 8.0 * w[0] as f64 * w[1] as f64;
+                }
+                PipelineParams::new(AiParams::new(n, mean_d, nnz), ops).with_extra(xf, xb)
+            }
+            PipelineKind::PowerIteration { d, .. } => {
+                let df = *d as f64;
+                PipelineParams::new(AiParams::new(n, *d, nnz), ops)
+                    .with_extra(ops as f64 * (6.0 * nf * df + 4.0 * nf), 0.0)
+            }
+            PipelineKind::PageRank { seeds, .. } => {
+                let d = seeds.len();
+                PipelineParams::new(AiParams::new(n, d, nnz), ops)
+                    .with_extra(ops as f64 * 4.0 * nf * d as f64, 0.0)
+            }
+            PipelineKind::SpGemmSpMM { d, .. } => {
+                PipelineParams::new(AiParams::new(n, *d, nnz), ops)
+            }
+        }
+    }
+}
+
+/// A unit of pipeline work: run a multi-op chain over a registered
+/// matrix, routed and tuned as one whole ([`PipelineKind`]).
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    /// Name the matrix was registered under.
+    pub matrix: String,
+    /// Which chain to run.
+    pub kind: PipelineKind,
+    /// Force a specific implementation (None = let the planner /
+    /// pinned pipeline plan route).
+    pub force_impl: Option<Impl>,
+}
+
+impl PipelineSpec {
+    pub fn new(matrix: impl Into<String>, kind: PipelineKind) -> PipelineSpec {
+        PipelineSpec { matrix: matrix.into(), kind, force_impl: None }
+    }
+
+    pub fn with_impl(mut self, im: Impl) -> PipelineSpec {
+        self.force_impl = Some(im);
+        self
+    }
+
+    /// This job's workload dimension.
+    pub fn workload(&self) -> Workload {
+        self.kind.workload()
+    }
+}
+
+/// Outcome of one executed pipeline job: whole-chain numbers plus the
+/// per-op wall-time breakdown (the fix for the old `bench_workloads`
+/// accounting bug, which divided SpMM-only FLOPs by whole-pipeline
+/// time).
+#[derive(Debug, Clone)]
+pub struct PipelineRecord {
+    pub matrix: String,
+    pub class: SparsityClass,
+    /// Workload display key, e.g. `GCN(layers=2,d=16)` — the string
+    /// pinned pipeline plans persist under.
+    pub chain: String,
+    /// Implementation every chained SpMM ran on.
+    pub chosen: Impl,
+    /// Matrix ordering the chain executed under.
+    pub reorder: Reordering,
+    /// Column-tile width (pipelines pin `dt == d`: the chained
+    /// operand is the previous op's cache-resident output, so tiling
+    /// has no residency left to buy — see
+    /// [`crate::coordinator::Planner::predict_pipeline`]).
+    pub dt: usize,
+    /// Chained SpMM applications actually executed (PageRank may
+    /// converge before its iteration cap).
+    pub ops: usize,
+    /// Was the inter-op block cache-resident under the active ladder
+    /// (the reuse term charged once)?
+    pub resident: bool,
+    /// Planner's whole-chain predicted GFLOP/s.
+    pub predicted_gflops: f64,
+    /// Whole-chain model arithmetic intensity.
+    pub ai: f64,
+    /// Whole-chain wall seconds (median over the job's iterations).
+    pub secs: f64,
+    /// Whole-chain measured GFLOP/s.
+    pub measured_gflops: f64,
+    /// Per-op wall-time breakdown from one representative run.
+    pub per_op: Vec<OpSecs>,
+}
+
+impl PipelineRecord {
+    /// measured / predicted — 1.0 is a perfect prediction.
+    pub fn prediction_ratio(&self) -> f64 {
+        if self.predicted_gflops <= 0.0 {
+            0.0
+        } else {
+            self.measured_gflops / self.predicted_gflops
+        }
     }
 }
 
@@ -238,6 +451,64 @@ mod tests {
         assert_eq!(j.force_impl, Some(Impl::Csb));
         assert_eq!(j.d, 16);
         assert_eq!(j.workload(), Workload::SpMM { d: 16 });
+    }
+
+    #[test]
+    fn pipeline_kind_shapes() {
+        let gcn = PipelineKind::Gcn { dims: vec![16, 8, 4] };
+        assert_eq!(gcn.workload(), Workload::GcnLayer { layers: 2, d: 16 });
+        assert_eq!(format!("{}", gcn.workload()), "GCN(layers=2,d=16)");
+        assert_eq!(gcn.d(), 16);
+        assert_eq!(gcn.ops(), 2);
+        let pp = gcn.pipeline_params(100, 500, 2);
+        assert_eq!(pp.ops, 2);
+        assert_eq!(pp.p.d, 12, "mean of the layer input widths 16 and 8");
+        // dense transforms: 2·100·16·8 + 2·100·8·4 FLOPs
+        assert_eq!(pp.extra_flops, 25_600.0 + 6_400.0);
+        assert_eq!(pp.extra_bytes, 8.0 * (128.0 + 32.0));
+
+        let pr = PipelineKind::PageRank { seeds: vec![0, 3], alpha: 0.85, tol: 1e-9, iters: 20 };
+        assert_eq!(pr.workload(), Workload::BatchedPageRank { seeds: 2, iters: 20 });
+        assert_eq!(pr.d(), 2);
+        // executed length overrides the cap in the params
+        assert_eq!(pr.pipeline_params(100, 500, 7).ops, 7);
+
+        let pw = PipelineKind::PowerIteration { d: 8, iters: 5 };
+        assert_eq!(format!("{}", pw.workload()), "Power(d=8,iters=5)");
+        assert_eq!(pw.ops(), 5);
+
+        let gg = PipelineKind::SpGemmSpMM { b: "b".into(), d: 4 };
+        assert_eq!(gg.workload(), Workload::SpGemmSpMM { b: "b".into(), d: 4 });
+        assert_eq!(format!("{}", gg.workload()), "SpGEMM+SpMM(×b,d=4)");
+        assert_eq!(gg.ops(), 1);
+    }
+
+    #[test]
+    fn pipeline_spec_builder() {
+        let s = PipelineSpec::new("m", PipelineKind::PowerIteration { d: 4, iters: 3 })
+            .with_impl(Impl::Csb);
+        assert_eq!(s.force_impl, Some(Impl::Csb));
+        assert_eq!(s.workload(), Workload::PowerIteration { d: 4, iters: 3 });
+    }
+
+    #[test]
+    fn pipeline_record_ratio() {
+        let r = PipelineRecord {
+            matrix: "m".into(),
+            class: SparsityClass::Random,
+            chain: "Power(d=4,iters=3)".into(),
+            chosen: Impl::Csr,
+            reorder: Reordering::None,
+            dt: 4,
+            ops: 3,
+            resident: true,
+            predicted_gflops: 2.0,
+            ai: 0.2,
+            secs: 0.01,
+            measured_gflops: 1.0,
+            per_op: vec![],
+        };
+        assert_eq!(r.prediction_ratio(), 0.5);
     }
 
     #[test]

@@ -55,6 +55,18 @@
 //! drive *execute* on the kernels ([`crate::spmm`]), then feed the
 //! measurement back into the priors.
 //!
+//! Multi-op **pipelines** are first-class workloads: a
+//! [`PipelineSpec`] names a whole chain (GCN forward pass, block power
+//! iteration, batched PageRank, SpGEMM→SpMM) and
+//! [`Engine::submit_pipeline`] routes it as one unit — one cached
+//! [`crate::spmm::Schedule`] serves every chained op, intermediates
+//! ping-pong through the shared [`BufferPool`], and the router's
+//! decision ([`Autotuner::tune_pipeline`]) is measured on the *full*
+//! chain against the inter-op roofline model
+//! ([`crate::model::ai_pipeline`], [`Planner::predict_pipeline`])
+//! rather than on the hottest op in isolation. Pinned whole-chain
+//! plans persist and restore with the rest of the autotune state.
+//!
 //! On top of the engine sits the **serving front-end** ([`Server`]):
 //! a bounded job queue with explicit admission control, concurrent
 //! batch coalescing (queued SpMM jobs sharing a matrix merge into one
@@ -73,12 +85,16 @@ mod registry;
 mod serve;
 
 pub use autotune::{
-    Autotuner, AutotunePolicy, Candidate, RouteDecision, SpGemmCandidate, SpGemmDecision,
+    Autotuner, AutotunePolicy, Candidate, PipelineDecision, RouteDecision, SpGemmCandidate,
+    SpGemmDecision,
 };
 pub use batch::{BatchReport, BufferPool};
-pub use engine::{Engine, EngineConfig, WorkloadOutcome};
-pub use job::{JobRecord, JobSpec, PredictionReport, SpGemmRecord, SpGemmSpec, Workload};
-pub use planner::{LadderSource, Planner, Prediction, SpGemmPrediction};
+pub use engine::{Engine, EngineConfig, PipelineOutput, WorkloadOutcome};
+pub use job::{
+    JobRecord, JobSpec, PipelineKind, PipelineRecord, PipelineSpec, PredictionReport, SpGemmRecord,
+    SpGemmSpec, Workload,
+};
+pub use planner::{LadderSource, Planner, PipelinePrediction, Prediction, SpGemmPrediction};
 pub use registry::{MatrixEntry, MatrixRegistry};
 pub use serve::{
     JobQueue, Server, ServeConfig, ServeHandle, ServeOutput, ServeReply, ServeRequest, ServeStats,

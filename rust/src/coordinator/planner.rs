@@ -26,8 +26,8 @@ use std::sync::Mutex;
 use crate::gen::SparsityClass;
 use crate::membench;
 use crate::model::{
-    ai_pb_tiled, ai_spgemm, csr_bytes, AiParams, CacheAwareRoofline, Roofline, SparsityModel,
-    SpGemmParams,
+    ai_pb_tiled, ai_pipeline, ai_pipeline_pb, ai_spgemm, csr_bytes, AiParams, CacheAwareRoofline,
+    PipelineParams, Roofline, SparsityModel, SpGemmParams,
 };
 use crate::spgemm::SpGemmImpl;
 use crate::spmm::pb_spill_tile;
@@ -66,6 +66,30 @@ pub struct SpGemmPrediction {
     /// Compression factor the prediction used
     /// ([`crate::model::SpGemmParams::cf`]).
     pub cf: f64,
+}
+
+/// A whole-chain prediction for one implementation — the pipeline
+/// workloads' analog of [`Prediction`]
+/// ([`Planner::predict_pipeline`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PipelinePrediction {
+    pub im: Impl,
+    /// Whole-chain arithmetic intensity
+    /// ([`crate::model::ai_pipeline`]).
+    pub ai: f64,
+    /// Was the inter-op `n×d` block cache-resident (its re-stream
+    /// charged once, not per op)?
+    pub resident: bool,
+    /// Ladder-roof performance at the chain AI and the intermediate
+    /// block's working set.
+    pub roof_gflops: f64,
+    /// Prior efficiency fraction applied.
+    pub prior: f64,
+    /// Predicted GFLOP/s = roof × prior.
+    pub predicted_gflops: f64,
+    /// Column-tile width — always the untiled `d` for pipelines (see
+    /// [`Planner::predict_pipeline`]).
+    pub dt: usize,
 }
 
 /// Where the planner's bandwidth ladder came from — the nominal
@@ -290,6 +314,69 @@ impl Planner {
         };
         let prior = self.prior(cls.class, im);
         Prediction { im, ai, roof_gflops: roof, prior, predicted_gflops: roof * prior, dt }
+    }
+
+    /// Predict whole-chain attainable GFLOP/s for one implementation
+    /// on a classified matrix — the pipeline workloads' predict stage,
+    /// fed by the inter-op reuse term ([`crate::model::ai_pipeline`]):
+    /// when the intermediate `n×d` block fits a cache rung of the
+    /// ladder, every chained op past the first drops its `B` re-stream
+    /// from the DRAM byte count, so the chain AI rises above the
+    /// single-op AI and earns a higher roof.
+    ///
+    /// Pipelines always predict (and execute) **untiled** (`dt = d`):
+    /// column tiling exists to manufacture residency for a *streamed*
+    /// dense operand, but a chained op's operand is the previous op's
+    /// output — already the hottest block in cache — so a narrower
+    /// tile buys no ceiling hop and only pays extra `A` streams.
+    /// Executing untiled also keeps the engine's pipeline route
+    /// bitwise-identical to the standalone workload functions (the
+    /// register-tiled kernels fuse accumulation differently per tile
+    /// width).
+    ///
+    /// [`Impl::Pb`] is the usual streaming exception: its bin/spill
+    /// traffic re-streams the block regardless of residency, so its
+    /// chain line ([`crate::model::ai_pipeline_pb`]) charges full
+    /// per-op bytes on the flat DRAM roof.
+    pub fn predict_pipeline(
+        &self,
+        cls: &Classification,
+        pp: PipelineParams,
+        im: Impl,
+    ) -> PipelinePrediction {
+        let ws = CacheAwareRoofline::spmm_working_set(pp.p.n, pp.p.d);
+        let (ai, resident, roof) = if im == Impl::Pb {
+            let ai = ai_pipeline_pb(pp);
+            (ai, false, self.roofline.attainable_gflops(ai))
+        } else {
+            let resident = self.ladder.cache_resident(ws);
+            let ai = ai_pipeline(cls.model, pp, resident);
+            (ai, resident, self.ladder.attainable_gflops(ai, ws))
+        };
+        let prior = self.prior(cls.class, im);
+        PipelinePrediction {
+            im,
+            ai,
+            resident,
+            roof_gflops: roof,
+            prior,
+            predicted_gflops: roof * prior,
+            dt: pp.p.d,
+        }
+    }
+
+    /// Rank the candidate implementations on a whole chain, best
+    /// predicted first.
+    pub fn rank_pipeline(
+        &self,
+        cls: &Classification,
+        pp: PipelineParams,
+        candidates: &[Impl],
+    ) -> Vec<PipelinePrediction> {
+        let mut preds: Vec<PipelinePrediction> =
+            candidates.iter().map(|&im| self.predict_pipeline(cls, pp, im)).collect();
+        preds.sort_by(|a, b| b.predicted_gflops.total_cmp(&a.predicted_gflops));
+        preds
     }
 
     /// Rank the candidate implementations, best predicted first.
@@ -695,6 +782,60 @@ mod tests {
         let cls = classify(&a);
         let pred = p.predict(&cls, 8, Impl::Csr);
         assert!(pred.roof_gflops > 0.0);
+    }
+
+    #[test]
+    fn resident_pipeline_beats_its_single_op_prediction() {
+        use crate::model::PipelineParams;
+        let a = erdos_renyi(2000, 2000, 6.0, &mut Prng::new(0x5f0));
+        let cls = classify(&a);
+        let p = planner();
+        let d = 8;
+        let params = AiParams::new(cls.stats.n, d, cls.stats.nnz);
+        let ws = CacheAwareRoofline::spmm_working_set(cls.stats.n, d);
+        assert!(p.ladder().cache_resident(ws), "small block must sit in a cache rung");
+        let single = p.predict(&cls, d, Impl::Csr);
+        let chain = p.predict_pipeline(&cls, PipelineParams::new(params, 8), Impl::Csr);
+        assert!(chain.resident);
+        assert!(chain.ai > single.ai, "chain {} vs single {}", chain.ai, single.ai);
+        assert!(chain.predicted_gflops >= single.predicted_gflops);
+        assert_eq!(chain.dt, d, "pipelines pin the untiled width");
+    }
+
+    #[test]
+    fn streamed_pipeline_collapses_to_the_per_op_ai() {
+        use crate::model::{BandwidthCeiling, PipelineParams};
+        let machine = MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 };
+        let dram = vec![BandwidthCeiling {
+            level: "DRAM".into(),
+            capacity_bytes: usize::MAX,
+            beta_gbs: machine.beta_gbs,
+        }];
+        let ladder = CacheAwareRoofline::new(dram, machine.pi_gflops);
+        let p = Planner::with_ladder(Roofline::new(machine), ladder);
+        let a = erdos_renyi(1000, 1000, 5.0, &mut Prng::new(0x5f1));
+        let cls = classify(&a);
+        let params = AiParams::new(cls.stats.n, 16, cls.stats.nnz);
+        let chain = p.predict_pipeline(&cls, PipelineParams::new(params, 6), Impl::Csr);
+        assert!(!chain.resident, "DRAM-only ladder: nothing is resident");
+        assert!((chain.ai - cls.model.ai(params)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipeline_rank_is_sorted_and_pb_stays_on_the_flat_roof() {
+        use crate::model::{ai_pb, PipelineParams};
+        let a = erdos_renyi(1500, 1500, 6.0, &mut Prng::new(0x5f2));
+        let cls = classify(&a);
+        let p = planner();
+        let params = AiParams::new(cls.stats.n, 8, cls.stats.nnz);
+        let pp = PipelineParams::new(params, 10);
+        let ranked = p.rank_pipeline(&cls, pp, &Impl::NATIVE);
+        for w in ranked.windows(2) {
+            assert!(w[0].predicted_gflops >= w[1].predicted_gflops);
+        }
+        let pb = ranked.iter().find(|r| r.im == Impl::Pb).unwrap();
+        assert!(!pb.resident, "PB streams regardless of residency");
+        assert!((pb.ai - ai_pb(params)).abs() < 1e-12);
     }
 
     #[test]

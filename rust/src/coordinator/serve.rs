@@ -11,6 +11,10 @@
 //! matrix into one [`Engine::submit_batch_collect`] call — the pooled
 //! dense buffers and the cached execution schedule stay warm across
 //! the whole group, which is exactly the engine's batch fast path.
+//! Pipeline jobs ([`ServeWork::Pipeline`]) ride the same queue and
+//! run as singles inside a coalescing cycle — a pipeline is already
+//! the engine's multi-op fast path (one schedule, pooled
+//! intermediates), so there is nothing further to merge.
 //!
 //! Design decisions, each pinned by a test:
 //!
@@ -46,8 +50,8 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::coordinator::engine::{Engine, WorkloadOutcome};
-use crate::coordinator::job::{JobSpec, SpGemmSpec};
+use crate::coordinator::engine::{Engine, PipelineOutput, WorkloadOutcome};
+use crate::coordinator::job::{JobSpec, PipelineKind, PipelineSpec, SpGemmSpec};
 use crate::coordinator::registry::MatrixRegistry;
 use crate::error::{Error, Result};
 use crate::metrics::Timer;
@@ -91,6 +95,16 @@ pub enum ServeWork {
         /// The pair, named tenant-locally.
         spec: SpGemmSpec,
     },
+    /// Multi-op pipeline ([`Engine::submit_pipeline_collect`]); dense
+    /// inputs are drawn from `seed` by the shared generators, so a
+    /// pipeline reply is a pure function of `(matrix, kind, impl,
+    /// seed)` like every other served job.
+    Pipeline {
+        /// The chain, with matrix named tenant-locally.
+        spec: PipelineSpec,
+        /// Seed for the chain's dense inputs.
+        seed: u64,
+    },
 }
 
 /// One queued unit of work. Matrix names inside are tenant-local; the
@@ -117,6 +131,11 @@ impl ServeRequest {
         ServeRequest { tenant: tenant.into(), tag: 0, work: ServeWork::SpGemm { spec } }
     }
 
+    /// A pipeline request.
+    pub fn pipeline(tenant: impl Into<String>, spec: PipelineSpec, seed: u64) -> ServeRequest {
+        ServeRequest { tenant: tenant.into(), tag: 0, work: ServeWork::Pipeline { spec, seed } }
+    }
+
     /// Set the correlation tag.
     pub fn with_tag(mut self, tag: u64) -> ServeRequest {
         self.tag = tag;
@@ -132,6 +151,9 @@ pub enum ServeOutput {
     Dense(Vec<f64>),
     /// Sparse product.
     Sparse(Csr),
+    /// Pipeline result (final features / power block + spectral stats
+    /// / PageRank scores).
+    Pipeline(PipelineOutput),
 }
 
 impl ServeOutput {
@@ -139,7 +161,7 @@ impl ServeOutput {
     pub fn dense(&self) -> Option<&[f64]> {
         match self {
             ServeOutput::Dense(v) => Some(v),
-            ServeOutput::Sparse(_) => None,
+            _ => None,
         }
     }
 
@@ -147,7 +169,15 @@ impl ServeOutput {
     pub fn sparse(&self) -> Option<&Csr> {
         match self {
             ServeOutput::Sparse(c) => Some(c),
-            ServeOutput::Dense(_) => None,
+            _ => None,
+        }
+    }
+
+    /// The chain result, if this was a pipeline job.
+    pub fn pipeline(&self) -> Option<&PipelineOutput> {
+        match self {
+            ServeOutput::Pipeline(p) => Some(p),
+            _ => None,
         }
     }
 }
@@ -529,6 +559,23 @@ impl Server {
         }
     }
 
+    /// Scope a request's pipeline spec into its tenant's namespace —
+    /// including the SpGEMM→SpMM chain's right operand, which is a
+    /// registered name too.
+    pub fn scoped_pipeline(tenant: &str, spec: &PipelineSpec) -> PipelineSpec {
+        let kind = match &spec.kind {
+            PipelineKind::SpGemmSpMM { b, d } => {
+                PipelineKind::SpGemmSpMM { b: MatrixRegistry::scoped(tenant, b), d: *d }
+            }
+            other => other.clone(),
+        };
+        PipelineSpec {
+            matrix: MatrixRegistry::scoped(tenant, &spec.matrix),
+            kind,
+            force_impl: spec.force_impl,
+        }
+    }
+
     /// Serve until the queue closes and drains: each cycle takes up to
     /// `max_drain` queued jobs, coalesces SpMM jobs sharing a (scoped)
     /// matrix into one engine batch, runs the rest individually, and
@@ -647,6 +694,19 @@ impl Server {
                         output: ServeOutput::Sparse(c),
                         coalesced: false,
                     })
+            }
+            ServeWork::Pipeline { spec, seed } => {
+                let scoped = Server::scoped_pipeline(&req.tenant, spec);
+                let seed = *seed;
+                contain(catch_unwind(AssertUnwindSafe(|| {
+                    engine.submit_pipeline_collect(&scoped, seed)
+                })))
+                .map(|(rec, out)| ServeReply {
+                    tag: req.tag,
+                    outcome: WorkloadOutcome::Pipeline(rec),
+                    output: ServeOutput::Pipeline(out),
+                    coalesced: false,
+                })
             }
         };
         match &result {
@@ -778,8 +838,29 @@ mod tests {
         let d = ServeOutput::Dense(vec![1.0, 2.0]);
         assert_eq!(d.dense().unwrap().len(), 2);
         assert!(d.sparse().is_none());
+        assert!(d.pipeline().is_none());
         let s = ServeOutput::Sparse(Csr::from_dense(1, 1, &[3.0]));
         assert!(s.dense().is_none());
         assert_eq!(s.sparse().unwrap().nnz(), 1);
+        let p = ServeOutput::Pipeline(PipelineOutput::Dense(vec![4.0]));
+        assert!(p.dense().is_none());
+        assert_eq!(p.pipeline().unwrap().data(), &[4.0]);
+    }
+
+    #[test]
+    fn scoped_pipeline_scopes_every_registered_name() {
+        let spec = PipelineSpec::new("m", PipelineKind::SpGemmSpMM { b: "w".into(), d: 4 });
+        let scoped = Server::scoped_pipeline("acme", &spec);
+        assert_eq!(scoped.matrix, "acme/m");
+        match scoped.kind {
+            PipelineKind::SpGemmSpMM { ref b, d } => {
+                assert_eq!(b, "acme/w");
+                assert_eq!(d, 4);
+            }
+            ref other => panic!("kind must survive scoping: {other:?}"),
+        }
+        // non-SpGEMM kinds carry no second registered name
+        let gcn = PipelineSpec::new("g", PipelineKind::Gcn { dims: vec![8, 8] });
+        assert_eq!(Server::scoped_pipeline("t", &gcn).matrix, "t/g");
     }
 }

@@ -57,6 +57,18 @@
 //!   namespaces, same-matrix batch coalescing, contained kernel
 //!   panics, and autotune decisions persisted across restarts
 //!   ([`report::AutotuneState`]).
+//! * **Application pipelines** ([`workloads`], [`coordinator`]): GCN
+//!   forward passes, block power iteration, batched PageRank, and
+//!   SpGEMM→SpMM chains as first-class multi-op pipelines
+//!   ([`coordinator::Engine::submit_pipeline`]) — one cached schedule
+//!   and pooled ping-pong intermediates per chain, the whole chain
+//!   autotuned end-to-end and pinned per `(matrix, chain)`
+//!   ([`coordinator::PipelineKind`]), priced by the inter-op roofline
+//!   term ([`model::ai_pipeline`]: a cache-resident intermediate drops
+//!   the following op's dense-operand traffic). The standalone
+//!   functions ([`workloads::gcn_forward`] and friends) wrap the same
+//!   chain cores, so engine-routed results are bitwise-identical to
+//!   manual composition.
 //! * **XLA/PJRT runtime** ([`runtime`]): loads AOT artifacts produced by
 //!   the JAX/Pallas compile path (`python/compile/`) and exposes them as
 //!   a fourth SpMM implementation.

@@ -68,8 +68,11 @@ impl SparsityModel {
     /// tile) and leaves B and C invariant (every model's B term is
     /// linear in the dense width, so per-tile traffic at width `dt`
     /// summed over `⌈d/dt⌉` tiles telescopes back to the full-width
-    /// term).
-    fn traffic_split(&self, p: AiParams) -> (f64, f64) {
+    /// term). The pipeline model ([`crate::model::bytes_pipeline`])
+    /// consumes the same split from the other side: when a chained
+    /// op's `B` is the previous op's cache-resident output, the B term
+    /// is the traffic that disappears.
+    pub fn traffic_split(&self, p: AiParams) -> (f64, f64) {
         let (n, d, nnz) = (p.n as f64, p.d as f64, p.nnz as f64);
         match *self {
             SparsityModel::Random => (12.0 * nnz, 8.0 * d * nnz),

@@ -62,6 +62,18 @@ impl CacheAwareRoofline {
         (self.ceiling_for(working_set_bytes).beta_gbs * ai).min(self.pi_gflops)
     }
 
+    /// Whether a working set of this size is served by an actual
+    /// *cache* rung — some level short of the last (DRAM fallback)
+    /// ceiling fits it. The pipeline model's inter-op reuse term
+    /// ([`crate::model::bytes_pipeline`]) keys on this: an
+    /// intermediate block that is cache-resident is charged to DRAM
+    /// once, not re-streamed by the consuming op. A single-rung
+    /// (DRAM-only) ladder resolves to `false` for every size.
+    pub fn cache_resident(&self, working_set_bytes: usize) -> bool {
+        let n = self.ceilings.len();
+        self.ceilings[..n - 1].iter().any(|c| working_set_bytes <= c.capacity_bytes)
+    }
+
     /// A calibration-free ladder from flat machine parameters plus the
     /// host's cache capacities: per-level bandwidths are the DRAM `β`
     /// scaled by conventional multipliers (`2×` per level inward —
@@ -184,6 +196,24 @@ mod tests {
     fn flat_is_dram() {
         let r = ladder();
         assert_eq!(r.flat().beta_gbs, 20.0);
+    }
+
+    #[test]
+    fn cache_resident_stops_at_the_dram_fallback() {
+        let r = ladder();
+        assert!(r.cache_resident(1 << 10), "fits L1");
+        assert!(r.cache_resident(1 << 20), "fits L2");
+        assert!(!r.cache_resident(1 << 30), "only the DRAM rung fits this");
+        // a DRAM-only ladder is never resident
+        let dram = CacheAwareRoofline::new(
+            vec![BandwidthCeiling {
+                level: "DRAM".into(),
+                capacity_bytes: usize::MAX,
+                beta_gbs: 20.0,
+            }],
+            100.0,
+        );
+        assert!(!dram.cache_resident(1));
     }
 
     #[test]

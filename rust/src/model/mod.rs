@@ -1,7 +1,8 @@
 //! Sparsity-aware roofline models — §III of the paper, plus this
 //! repo's extensions (tile-aware traffic, the cache-aware ladder, the
-//! propagation-blocking model, and the compression-factor-parameterized
-//! SpGEMM models [`bytes_spgemm_hash`]/[`bytes_spgemm_pb`]).
+//! propagation-blocking model, the compression-factor-parameterized
+//! SpGEMM models [`bytes_spgemm_hash`]/[`bytes_spgemm_pb`], and the
+//! chained-workload inter-op reuse term [`bytes_pipeline`]).
 //!
 //! Everything here is pure math over structural statistics; the
 //! measured side lives in [`crate::metrics`] / [`crate::harness`], and
@@ -24,6 +25,7 @@ mod ai;
 mod blocked;
 mod cache_aware;
 mod pb;
+mod pipeline;
 mod roofline;
 mod scalefree;
 mod spgemm;
@@ -32,6 +34,9 @@ pub use ai::{AiParams, SparsityModel};
 pub use blocked::{expected_z, expected_z_exact, BlockStats};
 pub use cache_aware::{BandwidthCeiling, CacheAwareRoofline, LatencyModel};
 pub use pb::{ai_pb, ai_pb_tiled, bytes_pb, bytes_pb_tiled, PB_STRUCT_BYTES_PER_NNZ};
+pub use pipeline::{
+    ai_pipeline, ai_pipeline_pb, bytes_pipeline, intermediate_resident, PipelineParams,
+};
 pub use roofline::{MachineParams, Roofline};
 pub use scalefree::{hub_mass_fraction, measured_hub_mass, HubParams};
 pub use spgemm::{

@@ -1,0 +1,219 @@
+//! Inter-op roofline term for chained workloads — the pipeline
+//! extension of the paper's single-op models.
+//!
+//! The paper's thesis is that *structure* changes effective arithmetic
+//! intensity. Chained workloads (GCN layers, PageRank iterations,
+//! Krylov blocks) change it again: the output of one op is the hot
+//! input of the next, and that inter-op reuse is a traffic term no
+//! single-op roofline captures. Every per-op model charges the dense
+//! operand `B` as if it arrived from DRAM — correct for a cold
+//! operand, wrong for a chain whose intermediate `n×d` block never
+//! left cache between ops.
+//!
+//! The correction is a residency test plus a byte subtraction:
+//!
+//! * The intermediate block's working set is `8·n·d` bytes
+//!   ([`CacheAwareRoofline::spmm_working_set`]). If it fits a cache
+//!   rung of the measured ladder
+//!   ([`CacheAwareRoofline::cache_resident`]), each *subsequent* op's
+//!   `B` traffic ([`SparsityModel::traffic_split`]'s second component)
+//!   is dropped from the DRAM byte count: the block was already
+//!   charged once as the producing op's `C` write, and the consumer
+//!   reads it at cache bandwidth.
+//! * If it does not fit, nothing changes: every op pays its full
+//!   structural byte count and the chain AI collapses to the
+//!   single-op AI.
+//!
+//! Formally, for a chain of `ops` identical SpMM applications
+//! (`A` is `n×n` with `nnz`, intermediates `n×d`):
+//!
+//! ```text
+//! bytes_chain = bytes_op + (ops − 1) · follow + extra_bytes
+//! follow      = bytes_op − B_term        (resident)
+//!             = bytes_op                 (streamed)
+//! AI_chain    = (ops · 2·d·nnz + extra_flops) / bytes_chain
+//! ```
+//!
+//! `extra_flops`/`extra_bytes` fold in the non-SpMM stages riding the
+//! chain (GCN dense transforms, PageRank vector updates) so the
+//! whole-pipeline prediction and the whole-pipeline measurement
+//! divide the same work. The full derivation with a worked GCN
+//! example is MODELS.md §8; [`crate::coordinator::Planner::predict_pipeline`]
+//! feeds this into the ladder.
+//!
+//! Propagation blocking is the exception that proves the rule: PB
+//! streams every byte by construction (its bin/spill arena re-streams
+//! the dense operand regardless of residency), so its chain line
+//! ([`ai_pipeline_pb`]) charges the full per-op byte count every op
+//! and stays on the flat DRAM roof — inter-op residency buys the
+//! gathering kernels a ceiling hop that PB can never take.
+
+use crate::model::{bytes_pb, AiParams, CacheAwareRoofline, SparsityModel};
+
+/// Shape of a chained workload: `ops` SpMM applications over the same
+/// `n×n`/`nnz` operand with `n×d` intermediates, plus the non-SpMM
+/// work that rides along.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineParams {
+    /// Per-op SpMM parameters (the intermediate block is `n×d`).
+    pub p: AiParams,
+    /// Number of chained SpMM applications (layers / iterations).
+    pub ops: usize,
+    /// Non-SpMM FLOPs across the whole chain (dense transforms,
+    /// normalization, rank-update vector math).
+    pub extra_flops: f64,
+    /// DRAM bytes those extra stages stream (weight panels, per-op
+    /// score vectors).
+    pub extra_bytes: f64,
+}
+
+impl PipelineParams {
+    /// A pure SpMM chain: `ops` applications, no side work.
+    pub fn new(p: AiParams, ops: usize) -> PipelineParams {
+        PipelineParams { p, ops, extra_flops: 0.0, extra_bytes: 0.0 }
+    }
+
+    /// Attach the chain's non-SpMM work.
+    pub fn with_extra(self, flops: f64, bytes: f64) -> PipelineParams {
+        PipelineParams { extra_flops: flops, extra_bytes: bytes, ..self }
+    }
+
+    /// Whole-chain FLOPs: `ops · 2·d·nnz + extra_flops`.
+    pub fn flops(&self) -> f64 {
+        self.ops as f64 * self.p.flops() + self.extra_flops
+    }
+}
+
+/// Whole-chain modeled DRAM bytes under a structural model. The first
+/// op always pays its full byte count; each subsequent op drops its
+/// `B` term when `resident` (the intermediate is served from cache —
+/// charged once as the producer's `C` write) and pays in full
+/// otherwise.
+pub fn bytes_pipeline(model: SparsityModel, pp: PipelineParams, resident: bool) -> f64 {
+    if pp.ops == 0 {
+        return pp.extra_bytes;
+    }
+    let per_op = model.bytes(pp.p);
+    let follow = if resident {
+        let (_, b_bytes) = model.traffic_split(pp.p);
+        per_op - b_bytes
+    } else {
+        per_op
+    };
+    per_op + (pp.ops - 1) as f64 * follow + pp.extra_bytes
+}
+
+/// Whole-chain arithmetic intensity. With `resident = false` (or a
+/// single op) this reproduces the per-op model exactly; with
+/// residency the chain AI rises toward the `B`-free limit as `ops`
+/// grows — the inter-op reuse the single-op roofline cannot see.
+pub fn ai_pipeline(model: SparsityModel, pp: PipelineParams, resident: bool) -> f64 {
+    pp.flops() / bytes_pipeline(model, pp, resident)
+}
+
+/// Chain AI for propagation blocking: every op pays the full
+/// structure-independent PB byte count ([`bytes_pb`]) — the two-phase
+/// bin/spill traffic streams the dense operand from DRAM regardless of
+/// whether the intermediate would fit a cache rung, so residency buys
+/// PB nothing.
+pub fn ai_pipeline_pb(pp: PipelineParams) -> f64 {
+    pp.flops() / (pp.ops as f64 * bytes_pb(pp.p) + pp.extra_bytes)
+}
+
+/// Residency of the inter-op `n×d` block on a given ladder — the
+/// predicate [`bytes_pipeline`]'s `resident` flag comes from.
+pub fn intermediate_resident(ladder: &CacheAwareRoofline, n: usize, d: usize) -> bool {
+    ladder.cache_resident(CacheAwareRoofline::spmm_working_set(n, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ai_pb, BandwidthCeiling, MachineParams};
+
+    const P: AiParams = AiParams { n: 4096, d: 16, nnz: 40_960 };
+
+    #[test]
+    fn single_op_matches_the_flat_model() {
+        for model in [SparsityModel::Random, SparsityModel::Diagonal] {
+            let pp = PipelineParams::new(P, 1);
+            assert_eq!(bytes_pipeline(model, pp, true), model.bytes(P), "{model:?}");
+            assert_eq!(bytes_pipeline(model, pp, false), model.bytes(P), "{model:?}");
+            assert!((ai_pipeline(model, pp, false) - model.ai(P)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn streamed_chain_ai_equals_per_op_ai() {
+        // no residency → chain bytes scale exactly with ops, so AI is
+        // invariant in chain length
+        let m = SparsityModel::Random;
+        let a1 = ai_pipeline(m, PipelineParams::new(P, 1), false);
+        let a8 = ai_pipeline(m, PipelineParams::new(P, 8), false);
+        assert!((a1 - a8).abs() < 1e-15);
+    }
+
+    #[test]
+    fn resident_chain_ai_rises_with_ops() {
+        // residency drops the B term from every follow-on op: the
+        // random model's dominant 8·d·nnz re-stream disappears, so the
+        // chain AI climbs strictly with ops and beats the per-op AI
+        let m = SparsityModel::Random;
+        let a1 = ai_pipeline(m, PipelineParams::new(P, 1), true);
+        let a2 = ai_pipeline(m, PipelineParams::new(P, 2), true);
+        let a8 = ai_pipeline(m, PipelineParams::new(P, 8), true);
+        assert!(a2 > a1);
+        assert!(a8 > a2);
+        assert!(a8 > m.ai(P));
+        // and the subtraction is exactly (ops−1) B terms
+        let (_, b) = m.traffic_split(P);
+        let want = 8.0 * m.bytes(P) - 7.0 * b;
+        assert!((bytes_pipeline(m, PipelineParams::new(P, 8), true) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn extra_work_is_charged_on_both_sides() {
+        let m = SparsityModel::Diagonal;
+        let bare = PipelineParams::new(P, 4);
+        let loaded = bare.with_extra(1e6, 1e5);
+        assert_eq!(loaded.flops(), bare.flops() + 1e6);
+        assert_eq!(
+            bytes_pipeline(m, loaded, true),
+            bytes_pipeline(m, bare, true) + 1e5
+        );
+    }
+
+    #[test]
+    fn zero_ops_is_just_the_extra_work() {
+        let pp = PipelineParams::new(P, 0).with_extra(10.0, 5.0);
+        assert_eq!(bytes_pipeline(SparsityModel::Random, pp, true), 5.0);
+        assert_eq!(pp.flops(), 10.0);
+    }
+
+    #[test]
+    fn pb_chain_ignores_residency() {
+        let pp = PipelineParams::new(P, 6);
+        assert!((ai_pipeline_pb(pp) - ai_pb(P)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn residency_predicate_matches_the_ladder() {
+        let machine = MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 };
+        let levels = vec![("L2".to_string(), 8 << 20)];
+        let ladder = CacheAwareRoofline::nominal(machine, &levels);
+        // 8·n·d = 512 KiB fits the halved 4 MiB L2 threshold
+        assert!(intermediate_resident(&ladder, P.n, P.d));
+        // a much wider block does not
+        assert!(!intermediate_resident(&ladder, P.n, 4096));
+        // DRAM-only ladder: nothing is ever resident
+        let dram = CacheAwareRoofline::new(
+            vec![BandwidthCeiling {
+                level: "DRAM".into(),
+                capacity_bytes: usize::MAX,
+                beta_gbs: 10.0,
+            }],
+            100.0,
+        );
+        assert!(!intermediate_resident(&dram, 8, 1));
+    }
+}

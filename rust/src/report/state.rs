@@ -28,10 +28,10 @@
 //!
 //! The format is the repo's usual flat-record JSON (the crate builds
 //! offline; serde is unavailable): one top-level object
-//! `{"version": 2, "records": [...]}` whose records are discriminated
+//! `{"version": 3, "records": [...]}` whose records are discriminated
 //! by a `"kind"` key (`calib`, `ladder_level`, `route`, `spgemm`,
-//! `spgemm_candidate`, `spmm_prior`, `spgemm_prior`). Floats are
-//! rendered with Rust's
+//! `spgemm_candidate`, `pipeline`, `spmm_prior`, `spgemm_prior`).
+//! Floats are rendered with Rust's
 //! shortest-round-trip `Display`, and records are emitted in sorted
 //! key order, so save → load → save is **byte-identical** — the
 //! property test's definition of a lossless snapshot. A corrupted or
@@ -42,7 +42,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::config::parse_impl;
-use crate::coordinator::{RouteDecision, SpGemmCandidate, SpGemmDecision};
+use crate::coordinator::{PipelineDecision, RouteDecision, SpGemmCandidate, SpGemmDecision};
 use crate::error::{Error, Result};
 use crate::gen::SparsityClass;
 use crate::membench::{LadderLevel, MeasuredLadder};
@@ -53,8 +53,9 @@ use crate::spmm::Impl;
 /// Snapshot format version. Bumped on any schema change; a loader
 /// refuses mismatched versions (cold start beats misread state).
 /// v2 added the measured calibration ladder (`calib` / `ladder_level`
+/// records); v3 added pinned whole-chain pipeline plans (`pipeline`
 /// records).
-pub const STATE_VERSION: u64 = 2;
+pub const STATE_VERSION: u64 = 3;
 
 /// How long a writer waits on a held [`FileLock`] before assuming the
 /// holder crashed and stealing it.
@@ -138,6 +139,10 @@ pub struct AutotuneState {
     pub routes: Vec<RouteDecision>,
     /// Pinned SpGEMM pair decisions (with measured cf and candidates).
     pub spgemm: Vec<SpGemmDecision>,
+    /// Pinned whole-chain pipeline plans, keyed `(matrix, chain)` — a
+    /// restored engine serves pipelines from these with zero
+    /// re-exploration.
+    pub pipelines: Vec<PipelineDecision>,
     /// Materialised `(class, impl)` SpMM efficiency priors.
     pub spmm_priors: Vec<(SparsityClass, Impl, f64)>,
     /// Materialised `(class, impl)` SpGEMM efficiency priors.
@@ -199,6 +204,7 @@ impl AutotuneState {
     pub fn is_empty(&self) -> bool {
         self.routes.is_empty()
             && self.spgemm.is_empty()
+            && self.pipelines.is_empty()
             && self.spmm_priors.is_empty()
             && self.spgemm_priors.is_empty()
             && self.ladder.is_none()
@@ -212,6 +218,10 @@ impl AutotuneState {
         routes.sort_by(|a, b| (a.matrix.as_str(), a.d).cmp(&(b.matrix.as_str(), b.d)));
         let mut spgemm: Vec<&SpGemmDecision> = self.spgemm.iter().collect();
         spgemm.sort_by(|x, y| (x.a.as_str(), x.b.as_str()).cmp(&(y.a.as_str(), y.b.as_str())));
+        let mut pipelines: Vec<&PipelineDecision> = self.pipelines.iter().collect();
+        pipelines.sort_by(|x, y| {
+            (x.matrix.as_str(), x.chain.as_str()).cmp(&(y.matrix.as_str(), y.chain.as_str()))
+        });
         let mut spmm_priors = self.spmm_priors.clone();
         spmm_priors.sort_by_key(|(c, i, _)| (class_name(*c), format!("{i}")));
         let mut spgemm_priors = self.spgemm_priors.clone();
@@ -288,6 +298,26 @@ impl AutotuneState {
                     num(c.ai),
                 ));
             }
+        }
+        for p in pipelines {
+            recs.push(format!(
+                "{{\"kind\": \"pipeline\", \"matrix\": \"{}\", \"chain\": \"{}\", \"d\": {}, \
+                 \"impl\": \"{}\", \"reorder\": \"{}\", \"dt\": {}, \"class\": \"{}\", \
+                 \"resident\": {}, \"predicted\": {}, \"measured\": {}, \"explored\": {}, \
+                 \"regret\": {}}}",
+                esc(&p.matrix),
+                esc(&p.chain),
+                p.d,
+                p.im,
+                p.reorder,
+                p.dt,
+                p.class,
+                p.resident,
+                num(p.predicted_gflops),
+                num(p.measured_gflops),
+                p.explored,
+                num(p.regret_gflops),
+            ));
         }
         for (c, i, v) in &spmm_priors {
             recs.push(format!(
@@ -413,6 +443,21 @@ impl AutotuneState {
                         })?;
                     dec.candidates.push(cand);
                 }
+                "pipeline" => state.pipelines.push(PipelineDecision {
+                    matrix: field_str(body, "matrix")?,
+                    chain: field_str(body, "chain")?,
+                    d: field_num(body, "d")? as usize,
+                    im: parse_impl(&field_str(body, "impl")?)
+                        .map_err(|e| Error::Parse(e.to_string()))?,
+                    reorder: parse_reordering(&field_str(body, "reorder")?)?,
+                    dt: field_num(body, "dt")? as usize,
+                    class: parse_class(&field_str(body, "class")?)?,
+                    resident: field_bool(body, "resident")?,
+                    predicted_gflops: field_num(body, "predicted")?,
+                    measured_gflops: field_num(body, "measured")?,
+                    explored: field_num(body, "explored")? as usize,
+                    regret_gflops: field_num(body, "regret")?,
+                }),
                 "spmm_prior" => state.spmm_priors.push((
                     parse_class(&field_str(body, "class")?)?,
                     parse_impl(&field_str(body, "impl")?)
@@ -484,6 +529,17 @@ fn field_str(body: &str, key: &str) -> Result<String> {
     Ok(v[..end].to_string())
 }
 
+fn field_bool(body: &str, key: &str) -> Result<bool> {
+    let v = field(body, key)?;
+    if v.starts_with("true") {
+        Ok(true)
+    } else if v.starts_with("false") {
+        Ok(false)
+    } else {
+        Err(Error::Parse(format!("'{key}' is not a bool")))
+    }
+}
+
 fn field_num(body: &str, key: &str) -> Result<f64> {
     let v = field(body, key)?;
     let end = v
@@ -542,6 +598,20 @@ mod tests {
                     },
                 ],
             }],
+            pipelines: vec![PipelineDecision {
+                matrix: "m1".into(),
+                chain: "GCN(layers=2,d=16)".into(),
+                d: 16,
+                im: Impl::Opt,
+                reorder: Reordering::None,
+                dt: 16,
+                class: SparsityClass::ScaleFree,
+                resident: true,
+                predicted_gflops: 3.75,
+                measured_gflops: 4.0 + 0.4, // awkward binary fraction
+                explored: 3,
+                regret_gflops: 0.125,
+            }],
             spmm_priors: vec![
                 (SparsityClass::Random, Impl::Csr, 0.351234567890123),
                 (SparsityClass::Blocked, Impl::Csb, 0.85),
@@ -586,6 +656,11 @@ mod tests {
         assert_eq!(back.spgemm[0].cf, 7.123456789123);
         assert_eq!(back.spgemm[0].candidates.len(), 2);
         assert_eq!(back.spgemm[0].candidates[1].im, SpGemmImpl::PbMerge);
+        assert_eq!(back.pipelines.len(), 1);
+        assert_eq!(back.pipelines[0].chain, "GCN(layers=2,d=16)");
+        assert_eq!(back.pipelines[0].im, Impl::Opt);
+        assert!(back.pipelines[0].resident, "bool field survives the round trip");
+        assert_eq!(back.pipelines[0].measured_gflops, 4.0 + 0.4);
         assert_eq!(back.spmm_priors.len(), 2);
         assert_eq!(back.spgemm_priors.len(), 1);
         let ml = back.ladder.expect("ladder survives the round trip");
@@ -615,7 +690,7 @@ mod tests {
         let truncated = &full[..full.len() / 2];
         assert!(AutotuneState::parse(truncated).is_err());
         assert!(AutotuneState::parse("not json at all").is_err());
-        let skewed = full.replace("\"version\": 2", "\"version\": 99");
+        let skewed = full.replace("\"version\": 3", "\"version\": 99");
         assert!(AutotuneState::parse(&skewed).is_err());
         // unknown record kinds are rejected, not skipped — a snapshot
         // this build cannot fully understand must cold-start
@@ -638,7 +713,7 @@ mod tests {
         // missing file: silent cold start
         assert!(AutotuneState::load_or_cold(path).is_none());
         // corrupted file: warned cold start, no panic
-        std::fs::write(path, "{\"version\": 2, \"records\": [{\"kind\": \"route\"").unwrap();
+        std::fs::write(path, "{\"version\": 3, \"records\": [{\"kind\": \"route\"").unwrap();
         assert!(AutotuneState::load_or_cold(path).is_none());
         // healthy file loads
         sample().save(path).unwrap();

@@ -1,0 +1,431 @@
+//! Shared chain-execution core for the pipeline workloads.
+//!
+//! Every multi-op workload (GCN forward, batched PageRank, block
+//! power iteration) is one function here, parameterized on a prepared
+//! kernel, a [`Schedule`], and a [`BufferPool`] for the inter-op
+//! intermediates. The standalone workload functions
+//! ([`crate::workloads::gcn_forward`] etc.) call these with the
+//! kernel's own base schedule (`kernel.plan(None)`) and a throwaway
+//! pool — byte-for-byte the pre-pipeline behaviour, since every
+//! native kernel's `execute` is `execute_with(&base)` and the pool
+//! hands back zeroed buffers exactly like `DenseMatrix::zeros`. The
+//! engine ([`crate::coordinator::Engine::submit_pipeline`]) calls the
+//! *same* functions with its registry-cached schedule and shared
+//! pool, which is what makes the engine route bitwise-identical to
+//! the free functions by construction.
+//!
+//! Intermediates ping-pong through the pool: each op releases its
+//! consumed input and the next acquire recycles it best-fit, so a
+//! chain of any depth touches at most two live scratch buffers
+//! instead of two fresh `DenseMatrix::zeros` per op.
+//!
+//! Each chain also reports a per-op wall-time breakdown
+//! ([`OpSecs`]) so whole-pipeline GFLOP/s accounting can show where
+//! the time went (the old `bench_workloads` bug divided SpMM-only
+//! FLOPs by whole-pipeline time).
+
+use std::time::Instant;
+
+use crate::coordinator::BufferPool;
+use crate::error::{Error, Result};
+use crate::gen::Prng;
+use crate::sparse::Csr;
+use crate::spmm::{DenseMatrix, Schedule, Spmm};
+use crate::workloads::{GcnLayer, KrylovStats, PageRankResult};
+
+/// Accumulated wall-clock seconds of one op kind within a chain run.
+#[derive(Debug, Clone)]
+pub struct OpSecs {
+    /// Stable op label (`"spmm"`, `"dense"`, `"rank_update"`, ...).
+    pub op: &'static str,
+    pub secs: f64,
+}
+
+/// GCN forward pass over a prepared kernel and a fixed schedule:
+/// `H ← relu((A·H)·Wₗ)` per layer, intermediates from `pool`.
+///
+/// Validates the whole width chain up front
+/// (`layer[l].d_in == layer[l-1].d_out`, `layer[0].d_in == h0.ncols`,
+/// `h0.nrows == A.ncols`) and returns
+/// [`Error::DimensionMismatch`] instead of panicking on bad input.
+pub fn gcn_chain(
+    kernel: &dyn Spmm,
+    sched: &Schedule,
+    h0: &DenseMatrix,
+    layers: &[GcnLayer],
+    pool: &mut BufferPool,
+) -> Result<(DenseMatrix, Vec<OpSecs>)> {
+    if h0.nrows != kernel.ncols() {
+        return Err(Error::DimensionMismatch(format!(
+            "H0 has {} rows but A is {}x{}",
+            h0.nrows,
+            kernel.nrows(),
+            kernel.ncols()
+        )));
+    }
+    let mut width = h0.ncols;
+    for (l, layer) in layers.iter().enumerate() {
+        if layer.d_in() != width {
+            return Err(Error::DimensionMismatch(format!(
+                "layer {l} expects d_in={} but receives width {width}",
+                layer.d_in()
+            )));
+        }
+        width = layer.d_out();
+    }
+
+    let (mut spmm_secs, mut dense_secs) = (0.0, 0.0);
+    let mut h = h0.clone();
+    for layer in layers {
+        // propagate: P = A·H
+        let mut p = pool.acquire(kernel.nrows(), h.ncols);
+        let t = Instant::now();
+        if let Err(e) = kernel.execute_with(&h, &mut p, sched) {
+            pool.release(p);
+            pool.release(h);
+            return Err(e);
+        }
+        spmm_secs += t.elapsed().as_secs_f64();
+        pool.release(h);
+        // transform + relu: H' = relu(P·W)
+        let mut out = pool.acquire(p.nrows, layer.d_out());
+        let t = Instant::now();
+        dense_matmul_relu(&p, &layer.weight, &mut out);
+        dense_secs += t.elapsed().as_secs_f64();
+        pool.release(p);
+        h = out;
+    }
+    let per_op = vec![
+        OpSecs { op: "spmm", secs: spmm_secs },
+        OpSecs { op: "dense", secs: dense_secs },
+    ];
+    Ok((h, per_op))
+}
+
+/// `out = relu(p · w)` — small dense GEMM with fused ReLU (d is
+/// tall-and-skinny so a simple ikj loop vectorises fine). Shapes are
+/// validated by the callers ([`gcn_chain`]).
+pub(crate) fn dense_matmul_relu(p: &DenseMatrix, w: &DenseMatrix, out: &mut DenseMatrix) {
+    debug_assert_eq!(p.ncols, w.nrows);
+    out.fill_zero();
+    for r in 0..p.nrows {
+        let prow = p.row(r);
+        let orow = out.row_mut(r);
+        for (k, &pv) in prow.iter().enumerate() {
+            let wrow = w.row(k);
+            for j in 0..wrow.len() {
+                orow[j] += pv * wrow[j];
+            }
+        }
+        for v in orow.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// The column-stochastic transition operator of a directed graph, as
+/// the pair (CSR over destinations, dangling-vertex mask): `M[r][c] =
+/// 1/outdeg(c)` for each edge `c→r` — the transpose of the
+/// row-normalized adjacency. Shared by the standalone
+/// [`crate::workloads::batched_pagerank`] and the engine's pipeline
+/// route so both iterate the *same* operator bytes.
+pub fn transition_matrix(graph: &Csr) -> Result<(Csr, Vec<bool>)> {
+    if graph.nrows != graph.ncols {
+        return Err(Error::DimensionMismatch(format!(
+            "PageRank needs a square graph, got {}x{}",
+            graph.nrows, graph.ncols
+        )));
+    }
+    let n = graph.nrows;
+    let mut norm = graph.clone();
+    for r in 0..n {
+        let deg = norm.row_len(r) as f64;
+        let (start, end) = (norm.row_ptr[r], norm.row_ptr[r + 1]);
+        for v in &mut norm.vals[start..end] {
+            *v = 1.0 / deg;
+        }
+    }
+    let m = norm.transpose();
+    let dangling: Vec<bool> = (0..n).map(|r| graph.row_len(r) == 0).collect();
+    Ok((m, dangling))
+}
+
+/// Batched PageRank iteration over a prepared transition kernel (from
+/// [`transition_matrix`]): `x ← α·(M·x + dangling/n) + (1−α)·e_seed`
+/// per column until `tol` or `max_iters`. `x`/`y` ping-pong through
+/// `pool`.
+pub fn pagerank_chain(
+    kernel: &dyn Spmm,
+    sched: &Schedule,
+    dangling: &[bool],
+    seeds: &[usize],
+    alpha: f64,
+    tol: f64,
+    max_iters: usize,
+    pool: &mut BufferPool,
+) -> Result<(PageRankResult, Vec<OpSecs>)> {
+    let n = kernel.nrows();
+    if seeds.is_empty() || seeds.iter().any(|&s| s >= n) {
+        return Err(Error::DimensionMismatch(format!(
+            "need ≥1 personalization seed, all < n={n}, got {seeds:?}"
+        )));
+    }
+    if dangling.len() != n {
+        return Err(Error::DimensionMismatch(format!(
+            "dangling mask covers {} vertices but M has {n} rows",
+            dangling.len()
+        )));
+    }
+    let d = seeds.len();
+
+    let mut x = pool.acquire(n, d);
+    for (j, &s) in seeds.iter().enumerate() {
+        x.set(s, j, 1.0);
+    }
+    let mut y = pool.acquire(n, d);
+    let (mut spmm_secs, mut update_secs) = (0.0, 0.0);
+    let mut delta = f64::INFINITY;
+    let mut it = 0;
+    while it < max_iters && delta > tol {
+        let t = Instant::now();
+        if let Err(e) = kernel.execute_with(&x, &mut y, sched) {
+            pool.release(y);
+            pool.release(x);
+            return Err(e);
+        }
+        spmm_secs += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        // dangling mass per column
+        let mut dm = vec![0.0f64; d];
+        for (r, &is_d) in dangling.iter().enumerate() {
+            if is_d {
+                for (j, slot) in dm.iter_mut().enumerate() {
+                    *slot += x.get(r, j);
+                }
+            }
+        }
+        delta = 0.0;
+        for r in 0..n {
+            for j in 0..d {
+                let teleport = if r == seeds[j] { 1.0 - alpha } else { 0.0 };
+                let new = alpha * (y.get(r, j) + dm[j] / n as f64) + teleport;
+                delta = delta.max((new - x.get(r, j)).abs());
+                y.set(r, j, new);
+            }
+        }
+        update_secs += t.elapsed().as_secs_f64();
+        std::mem::swap(&mut x, &mut y);
+        it += 1;
+    }
+    pool.release(y);
+    let per_op = vec![
+        OpSecs { op: "spmm", secs: spmm_secs },
+        OpSecs { op: "rank_update", secs: update_secs },
+    ];
+    Ok((PageRankResult { scores: x, iterations: it, delta }, per_op))
+}
+
+/// Block power iteration `X ← normalize(A·X)` over a prepared kernel
+/// and fixed schedule, `iters` rounds, scratch from `pool`.
+pub fn power_chain(
+    kernel: &dyn Spmm,
+    sched: &Schedule,
+    x0: &DenseMatrix,
+    iters: usize,
+    pool: &mut BufferPool,
+) -> Result<(DenseMatrix, KrylovStats, Vec<OpSecs>)> {
+    if kernel.ncols() != x0.nrows {
+        return Err(Error::DimensionMismatch(format!(
+            "A is {}x{} but X0 has {} rows",
+            kernel.nrows(),
+            kernel.ncols(),
+            x0.nrows
+        )));
+    }
+    let mut x = x0.clone();
+    normalize(&mut x);
+    let mut y = pool.acquire(kernel.nrows(), x.ncols);
+    let (mut spmm_secs, mut vec_secs) = (0.0, 0.0);
+    let mut lambda = 0.0;
+    let mut residual = f64::INFINITY;
+    for _ in 0..iters {
+        let t = Instant::now();
+        if let Err(e) = kernel.execute_with(&x, &mut y, sched) {
+            pool.release(y);
+            return Err(e);
+        }
+        spmm_secs += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        // Rayleigh estimate from the first block column: λ ≈ xᵀ(Ax)
+        lambda = x
+            .data
+            .iter()
+            .step_by(x.ncols)
+            .zip(y.data.iter().step_by(y.ncols))
+            .map(|(xi, yi)| xi * yi)
+            .sum::<f64>()
+            / x.data
+                .iter()
+                .step_by(x.ncols)
+                .map(|xi| xi * xi)
+                .sum::<f64>()
+                .max(1e-300);
+        normalize(&mut y);
+        residual = diff_norm(&x, &y);
+        vec_secs += t.elapsed().as_secs_f64();
+        std::mem::swap(&mut x, &mut y);
+    }
+    pool.release(y);
+    let per_op = vec![
+        OpSecs { op: "spmm", secs: spmm_secs },
+        OpSecs { op: "normalize", secs: vec_secs },
+    ];
+    Ok((x, KrylovStats { iters, lambda_max: lambda, residual }, per_op))
+}
+
+pub(crate) fn normalize(x: &mut DenseMatrix) {
+    let norm = x.frob_norm().max(1e-300);
+    for v in x.data.iter_mut() {
+        *v /= norm;
+    }
+}
+
+fn diff_norm(a: &DenseMatrix, b: &DenseMatrix) -> f64 {
+    let num: f64 = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt();
+    num / b.frob_norm().max(1e-300)
+}
+
+/// Deterministic GCN pipeline inputs from a job seed: `H0 (n×d0)` and
+/// one weight per layer (`dims[i] × dims[i+1]`), all drawn from a
+/// single `Prng::new(seed)` in order. The engine and the differential
+/// tests both use this, so an engine-routed pipeline and a manual
+/// composition see identical bytes.
+pub fn gcn_random_inputs(n: usize, dims: &[usize], seed: u64) -> (DenseMatrix, Vec<GcnLayer>) {
+    let mut rng = Prng::new(seed);
+    let h0 = DenseMatrix::random(n, dims[0], &mut rng);
+    let layers = dims
+        .windows(2)
+        .map(|w| GcnLayer::new(DenseMatrix::random(w[0], w[1], &mut rng)))
+        .collect();
+    (h0, layers)
+}
+
+/// Deterministic power-iteration start block (`n×d`) from a job seed
+/// — same sharing contract as [`gcn_random_inputs`].
+pub fn power_random_input(n: usize, d: usize, seed: u64) -> DenseMatrix {
+    DenseMatrix::random(n, d, &mut Prng::new(seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{chung_lu, ChungLuParams, Prng};
+    use crate::spmm::{build_native, Impl};
+    use crate::workloads::{batched_pagerank, block_power_iteration, gcn_forward};
+
+    fn graph(n: usize, seed: u64) -> Csr {
+        chung_lu(ChungLuParams { n, alpha: 2.3, avg_deg: 8.0, k_min: 2.0 }, &mut Prng::new(seed))
+    }
+
+    #[test]
+    fn chains_match_their_free_functions_bitwise() {
+        let a = graph(180, 270);
+        let kernel = build_native(Impl::Opt, &a, 2).unwrap();
+        let sched = kernel.plan(None);
+        let mut pool = BufferPool::new();
+
+        let (h0, layers) = gcn_random_inputs(180, &[6, 8, 4], 7);
+        let (via_chain, per_op) =
+            gcn_chain(kernel.as_ref(), &sched, &h0, &layers, &mut pool).unwrap();
+        let via_free = gcn_forward(kernel.as_ref(), &h0, &layers).unwrap();
+        assert_eq!(via_chain.data.len(), via_free.data.len());
+        for (a, b) in via_chain.data.iter().zip(&via_free.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(per_op.len(), 2);
+
+        let x0 = power_random_input(180, 4, 8);
+        let (xc, sc, _) = power_chain(kernel.as_ref(), &sched, &x0, 12, &mut pool).unwrap();
+        let (xf, sf) = block_power_iteration(kernel.as_ref(), &x0, 12).unwrap();
+        for (a, b) in xc.data.iter().zip(&xf.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(sc.lambda_max.to_bits(), sf.lambda_max.to_bits());
+        assert_eq!(sc.residual.to_bits(), sf.residual.to_bits());
+
+        let (m, dangling) = transition_matrix(&a).unwrap();
+        let mk = build_native(Impl::Csr, &m, 2).unwrap();
+        let msched = mk.plan(None);
+        let (rc, _) = pagerank_chain(
+            mk.as_ref(),
+            &msched,
+            &dangling,
+            &[3, 11],
+            0.85,
+            1e-9,
+            40,
+            &mut pool,
+        )
+        .unwrap();
+        let rf = batched_pagerank(&a, &[3, 11], 0.85, 1e-9, 40, Impl::Csr, 2).unwrap();
+        assert_eq!(rc.iterations, rf.iterations);
+        for (a, b) in rc.scores.data.iter().zip(&rf.scores.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn intermediates_recycle_through_the_pool() {
+        let a = graph(150, 271);
+        let kernel = build_native(Impl::Csr, &a, 1).unwrap();
+        let sched = kernel.plan(None);
+        let mut pool = BufferPool::new();
+        let (h0, layers) = gcn_random_inputs(150, &[8, 8, 8, 8], 9);
+        gcn_chain(kernel.as_ref(), &sched, &h0, &layers, &mut pool).unwrap();
+        // 3 layers × 2 acquires = 6, minus the two cold ones (first P
+        // plus the first transform output) — everything later must
+        // ping-pong out of the pool
+        assert!(pool.hits >= 4, "hits {} misses {}", pool.hits, pool.misses);
+        assert!(pool.misses <= 2, "hits {} misses {}", pool.hits, pool.misses);
+    }
+
+    #[test]
+    fn shape_errors_are_errors_not_panics() {
+        let a = graph(60, 272);
+        let kernel = build_native(Impl::Csr, &a, 1).unwrap();
+        let sched = kernel.plan(None);
+        let mut pool = BufferPool::new();
+        // mismatched layer chain
+        let (h0, _) = gcn_random_inputs(60, &[4], 1);
+        let bad = vec![GcnLayer::new(DenseMatrix::zeros(5, 3))];
+        assert!(matches!(
+            gcn_chain(kernel.as_ref(), &sched, &h0, &bad, &mut pool),
+            Err(Error::DimensionMismatch(_))
+        ));
+        // seed out of range
+        let (m, dangling) = transition_matrix(&a).unwrap();
+        let mk = build_native(Impl::Csr, &m, 1).unwrap();
+        let ms = mk.plan(None);
+        assert!(matches!(
+            pagerank_chain(mk.as_ref(), &ms, &dangling, &[99], 0.85, 1e-9, 5, &mut pool),
+            Err(Error::DimensionMismatch(_))
+        ));
+        // wrong X0 height
+        let x0 = DenseMatrix::zeros(10, 2);
+        assert!(matches!(
+            power_chain(kernel.as_ref(), &sched, &x0, 3, &mut pool),
+            Err(Error::DimensionMismatch(_))
+        ));
+        // non-square graph for the transition operator
+        let rect = Csr::from_dense(2, 3, &[1.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+        assert!(matches!(transition_matrix(&rect), Err(Error::DimensionMismatch(_))));
+    }
+}

@@ -1,8 +1,17 @@
 //! GCN-style forward pass: `H' = relu((A·H)·W)` per layer (Table II
 //! row 1; the paper's introduction leads with GNN training/inference).
+//!
+//! The arithmetic lives in the shared chain core
+//! ([`crate::workloads::gcn_chain`]); this standalone entry point
+//! wraps it with the kernel's own base schedule and a private buffer
+//! pool, so existing callers keep the old one-call API while the
+//! engine routes the same code through its cached schedule and shared
+//! pool ([`crate::coordinator::Engine::submit_pipeline`]).
 
+use crate::coordinator::BufferPool;
 use crate::error::Result;
 use crate::spmm::{DenseMatrix, Spmm};
+use crate::workloads::chain::gcn_chain;
 
 /// One GCN layer's parameters: a dense feature transform `W (d_in ×
 /// d_out)` applied after propagation.
@@ -28,47 +37,19 @@ impl GcnLayer {
 /// (already prepared in any format): `H ← relu((A·H)·Wₗ)`.
 ///
 /// Layer widths must chain (`layer[l].d_in == layer[l-1].d_out`,
-/// `layer[0].d_in == h0.ncols`). Returns the final features.
+/// `layer[0].d_in == h0.ncols`); a mismatch is an
+/// [`crate::error::Error::DimensionMismatch`], not a panic. Returns
+/// the final features.
 pub fn gcn_forward(a: &dyn Spmm, h0: &DenseMatrix, layers: &[GcnLayer]) -> Result<DenseMatrix> {
-    let mut h = h0.clone();
-    for layer in layers {
-        assert_eq!(h.ncols, layer.d_in(), "layer width mismatch");
-        // propagate: P = A·H
-        let mut p = DenseMatrix::zeros(a.nrows(), h.ncols);
-        a.execute(&h, &mut p)?;
-        // transform + relu: H' = relu(P·W)
-        let mut out = DenseMatrix::zeros(p.nrows, layer.d_out());
-        dense_matmul_relu(&p, &layer.weight, &mut out);
-        h = out;
-    }
-    Ok(h)
-}
-
-/// `out = relu(p · w)` — small dense GEMM with fused ReLU (d is
-/// tall-and-skinny so a simple ikj loop vectorises fine).
-fn dense_matmul_relu(p: &DenseMatrix, w: &DenseMatrix, out: &mut DenseMatrix) {
-    assert_eq!(p.ncols, w.nrows);
-    out.fill_zero();
-    for r in 0..p.nrows {
-        let prow = p.row(r);
-        let orow = out.row_mut(r);
-        for (k, &pv) in prow.iter().enumerate() {
-            let wrow = w.row(k);
-            for j in 0..wrow.len() {
-                orow[j] += pv * wrow[j];
-            }
-        }
-        for v in orow.iter_mut() {
-            if *v < 0.0 {
-                *v = 0.0;
-            }
-        }
-    }
+    let sched = a.plan(None);
+    let mut pool = BufferPool::new();
+    gcn_chain(a, &sched, h0, layers, &mut pool).map(|(h, _)| h)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Error;
     use crate::gen::{chung_lu, ChungLuParams, Prng};
     use crate::spmm::{build_native, reference_spmm, Impl};
 
@@ -126,5 +107,18 @@ mod tests {
         for o in &outs[1..] {
             assert!(o.max_abs_diff(&outs[0]) < 1e-10);
         }
+    }
+
+    #[test]
+    fn width_mismatch_is_an_error_not_a_panic() {
+        let mut rng = Prng::new(243);
+        let a = chung_lu(ChungLuParams { n: 80, alpha: 2.3, avg_deg: 6.0, k_min: 2.0 }, &mut rng);
+        let h0 = DenseMatrix::random(80, 6, &mut rng);
+        let layers = vec![GcnLayer::new(DenseMatrix::random(7, 4, &mut rng))];
+        let kernel = build_native(Impl::Csr, &a, 1).unwrap();
+        assert!(matches!(
+            gcn_forward(kernel.as_ref(), &h0, &layers),
+            Err(Error::DimensionMismatch(_))
+        ));
     }
 }

@@ -1,9 +1,16 @@
 //! Block power iteration — the FEM/DFT block-Krylov pattern of
 //! Table II rows 2–3 (stiffness/Hamiltonian matrix × block of
 //! vectors, Gutknecht's block Krylov methods).
+//!
+//! The iteration lives in the shared chain core
+//! ([`crate::workloads::power_chain`]); this standalone entry point
+//! wraps it with the kernel's base schedule and a private pool, the
+//! same code the engine routes with its cached schedule.
 
+use crate::coordinator::BufferPool;
 use crate::error::Result;
 use crate::spmm::{DenseMatrix, Spmm};
+use crate::workloads::chain::power_chain;
 
 /// Convergence record of [`block_power_iteration`].
 #[derive(Debug, Clone)]
@@ -21,62 +28,22 @@ pub struct KrylovStats {
 /// d-wide block, returning the final block and convergence stats.
 /// (Orthogonalisation is skipped — this drives the SpMM access
 /// pattern, not an eigensolver; the Rayleigh estimate is for the
-/// dominant direction only.)
+/// dominant direction only.) A height mismatch between `A` and `x0`
+/// is an [`crate::error::Error::DimensionMismatch`], not a panic.
 pub fn block_power_iteration(
     a: &dyn Spmm,
     x0: &DenseMatrix,
     iters: usize,
 ) -> Result<(DenseMatrix, KrylovStats)> {
-    assert_eq!(a.ncols(), x0.nrows);
-    let mut x = x0.clone();
-    normalize(&mut x);
-    let mut y = DenseMatrix::zeros(a.nrows(), x.ncols);
-    let mut lambda = 0.0;
-    let mut residual = f64::INFINITY;
-    for _ in 0..iters {
-        a.execute(&x, &mut y)?;
-        // Rayleigh estimate from the first block column: λ ≈ xᵀ(Ax)
-        lambda = x
-            .data
-            .iter()
-            .step_by(x.ncols)
-            .zip(y.data.iter().step_by(y.ncols))
-            .map(|(xi, yi)| xi * yi)
-            .sum::<f64>()
-            / x.data
-                .iter()
-                .step_by(x.ncols)
-                .map(|xi| xi * xi)
-                .sum::<f64>()
-                .max(1e-300);
-        normalize(&mut y);
-        residual = diff_norm(&x, &y);
-        std::mem::swap(&mut x, &mut y);
-    }
-    Ok((x, KrylovStats { iters, lambda_max: lambda, residual }))
-}
-
-fn normalize(x: &mut DenseMatrix) {
-    let norm = x.frob_norm().max(1e-300);
-    for v in x.data.iter_mut() {
-        *v /= norm;
-    }
-}
-
-fn diff_norm(a: &DenseMatrix, b: &DenseMatrix) -> f64 {
-    let num: f64 = a
-        .data
-        .iter()
-        .zip(&b.data)
-        .map(|(x, y)| (x - y) * (x - y))
-        .sum::<f64>()
-        .sqrt();
-    num / b.frob_norm().max(1e-300)
+    let sched = a.plan(None);
+    let mut pool = BufferPool::new();
+    power_chain(a, &sched, x0, iters, &mut pool).map(|(x, stats, _)| (x, stats))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Error;
     use crate::gen::{banded, Prng};
     use crate::sparse::Csr;
     use crate::spmm::{build_native, Impl};
@@ -111,5 +78,17 @@ mod tests {
         for f in &finals[1..] {
             assert!(f.max_abs_diff(&finals[0]) < 1e-8);
         }
+    }
+
+    #[test]
+    fn height_mismatch_is_an_error_not_a_panic() {
+        let mut rng = Prng::new(252);
+        let a = banded(50, 2, 0.5, &mut rng);
+        let kernel = build_native(Impl::Csr, &a, 1).unwrap();
+        let x0 = DenseMatrix::random(49, 2, &mut rng);
+        assert!(matches!(
+            block_power_iteration(kernel.as_ref(), &x0, 3),
+            Err(Error::DimensionMismatch(_))
+        ));
     }
 }

@@ -5,11 +5,25 @@
 //! kernels (or an engine-routed kernel) through the access pattern the
 //! application actually produces, so the examples and benches exercise
 //! SpMM the way downstream users would.
+//!
+//! The multi-op arithmetic lives in [`chain`]: one chain-execution
+//! function per workload, parameterized on a prepared kernel, a
+//! schedule, and a buffer pool. The standalone functions
+//! ([`gcn_forward`], [`batched_pagerank`], [`block_power_iteration`])
+//! are thin wrappers over those cores; the engine routes the same
+//! cores through its cached schedules and shared pool
+//! ([`crate::coordinator::Engine::submit_pipeline`]), which is what
+//! keeps both paths bitwise-identical.
 
+mod chain;
 mod gnn;
 mod krylov;
 mod pagerank;
 
+pub use chain::{
+    gcn_chain, gcn_random_inputs, pagerank_chain, power_chain, power_random_input,
+    transition_matrix, OpSecs,
+};
 pub use gnn::{gcn_forward, GcnLayer};
 pub use krylov::{block_power_iteration, KrylovStats};
 pub use pagerank::{batched_pagerank, PageRankResult};

@@ -2,10 +2,19 @@
 //! "batched PageRank computations" as an SpMM application): `d`
 //! personalization vectors advance simultaneously as the dense block
 //! of an SpMM against `Aᵀ` (column-stochastic).
+//!
+//! The operator derivation and the iteration both live in the shared
+//! chain core ([`crate::workloads::transition_matrix`] /
+//! [`crate::workloads::pagerank_chain`]); this standalone entry point
+//! builds the requested kernel over the derived operator and runs the
+//! chain with the kernel's base schedule, exactly like the engine's
+//! pipeline route does with its cached schedule.
 
+use crate::coordinator::BufferPool;
 use crate::error::Result;
 use crate::sparse::Csr;
 use crate::spmm::{build_native, DenseMatrix, Impl};
+use crate::workloads::chain::{pagerank_chain, transition_matrix};
 
 /// Result of [`batched_pagerank`].
 #[derive(Debug, Clone)]
@@ -21,7 +30,8 @@ pub struct PageRankResult {
 /// `max_iters`. `seeds[j]` is the personalization vertex of column
 /// `j`. The kernel runs over the column-stochastic transition matrix
 /// built from `graph` (dangling vertices redistribute uniformly via a
-/// rank-one correction).
+/// rank-one correction). A non-square graph or an out-of-range seed
+/// is an [`crate::error::Error::DimensionMismatch`], not a panic.
 pub fn batched_pagerank(
     graph: &Csr,
     seeds: &[usize],
@@ -31,63 +41,18 @@ pub fn batched_pagerank(
     im: Impl,
     threads: usize,
 ) -> Result<PageRankResult> {
-    assert_eq!(graph.nrows, graph.ncols);
-    let n = graph.nrows;
-    let d = seeds.len();
-    assert!(d > 0 && seeds.iter().all(|&s| s < n));
-
-    // column-stochastic P = (D⁻¹ A)ᵀ as a CSR over destinations:
-    // rank update x' = α·Pᵀ... we iterate x ← α·M·x + (1−α)·e_seed,
-    // with M[r][c] = 1/outdeg(c) for each edge c→r — i.e. the
-    // transpose of the row-normalized adjacency.
-    let mut norm = graph.clone();
-    for r in 0..n {
-        let deg = norm.row_len(r) as f64;
-        let (start, end) = (norm.row_ptr[r], norm.row_ptr[r + 1]);
-        for v in &mut norm.vals[start..end] {
-            *v = 1.0 / deg;
-        }
-    }
-    let m = norm.transpose();
-    let dangling: Vec<bool> = (0..n).map(|r| graph.row_len(r) == 0).collect();
+    let (m, dangling) = transition_matrix(graph)?;
     let kernel = build_native(im, &m, threads)?;
-
-    let mut x = DenseMatrix::zeros(n, d);
-    for (j, &s) in seeds.iter().enumerate() {
-        x.set(s, j, 1.0);
-    }
-    let mut y = DenseMatrix::zeros(n, d);
-    let mut delta = f64::INFINITY;
-    let mut it = 0;
-    while it < max_iters && delta > tol {
-        kernel.execute(&x, &mut y)?;
-        // dangling mass per column
-        let mut dm = vec![0.0f64; d];
-        for (r, &is_d) in dangling.iter().enumerate() {
-            if is_d {
-                for (j, slot) in dm.iter_mut().enumerate() {
-                    *slot += x.get(r, j);
-                }
-            }
-        }
-        delta = 0.0;
-        for r in 0..n {
-            for j in 0..d {
-                let teleport = if r == seeds[j] { 1.0 - alpha } else { 0.0 };
-                let new = alpha * (y.get(r, j) + dm[j] / n as f64) + teleport;
-                delta = delta.max((new - x.get(r, j)).abs());
-                y.set(r, j, new);
-            }
-        }
-        std::mem::swap(&mut x, &mut y);
-        it += 1;
-    }
-    Ok(PageRankResult { scores: x, iterations: it, delta })
+    let sched = kernel.plan(None);
+    let mut pool = BufferPool::new();
+    pagerank_chain(kernel.as_ref(), &sched, &dangling, seeds, alpha, tol, max_iters, &mut pool)
+        .map(|(r, _)| r)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Error;
     use crate::gen::{chung_lu, ChungLuParams, Prng};
     use crate::sparse::Coo;
 
@@ -144,5 +109,20 @@ mod tests {
         let r = batched_pagerank(&g, &[0], 0.85, 1e-12, 500, Impl::Csr, 1).unwrap();
         let total: f64 = (0..3).map(|i| r.scores.get(i, 0)).sum();
         assert!((total - 1.0).abs() < 1e-6, "mass {total}");
+    }
+
+    #[test]
+    fn bad_arguments_are_errors_not_panics() {
+        let g = ring(10);
+        // empty seed set
+        assert!(matches!(
+            batched_pagerank(&g, &[], 0.85, 1e-9, 10, Impl::Csr, 1),
+            Err(Error::DimensionMismatch(_))
+        ));
+        // out-of-range seed
+        assert!(matches!(
+            batched_pagerank(&g, &[10], 0.85, 1e-9, 10, Impl::Csr, 1),
+            Err(Error::DimensionMismatch(_))
+        ));
     }
 }

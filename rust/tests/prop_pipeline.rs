@@ -1,0 +1,308 @@
+//! Property tests for engine-routed pipelines: whatever the engine's
+//! routing, schedule caching, and buffer pooling did, a pipeline
+//! submitted through [`Engine::submit_pipeline_collect`] must be
+//! **bitwise identical** to the manual per-op composition of the same
+//! chain out of the standalone workload functions.
+//!
+//! Why bitwise equality is achievable (and therefore demanded): the
+//! engine runs the *same* chain cores (`crate::workloads::chain`) the
+//! free functions wrap, with an untiled `dt = d` schedule — exactly
+//! what `kernel.plan(None)` builds — and dense inputs drawn from the
+//! shared seeded generators. The comparison forces the impl on both
+//! sides, so the property pins the routing layer, not cross-kernel
+//! accumulation order.
+//!
+//! Alongside the differential property: whole-chain pins — a tuned
+//! pipeline's re-submission explores nothing — and persistence — the
+//! pinned chain plans survive an emit→parse round trip and a fresh
+//! engine restored from them serves the same chains with zero
+//! exploration measurements.
+
+use spmm_roofline::coordinator::{
+    AutotunePolicy, Engine, EngineConfig, PipelineKind, PipelineOutput, PipelineSpec,
+};
+use spmm_roofline::gen::{
+    banded, chung_lu, erdos_renyi, mesh2d, rmat, ChungLuParams, MeshKind, Prng,
+};
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::report::AutotuneState;
+use spmm_roofline::sparse::Csr;
+use spmm_roofline::spgemm::{build_spgemm, SpGemmImpl};
+use spmm_roofline::spmm::{build_native, DenseMatrix, Impl};
+use spmm_roofline::testutil::check;
+use spmm_roofline::workloads::{
+    batched_pagerank, block_power_iteration, gcn_forward, gcn_random_inputs, power_random_input,
+};
+
+fn pipeline_engine(threads: usize, autotune: AutotunePolicy) -> Engine {
+    Engine::new(EngineConfig {
+        threads,
+        machine: Some(MachineParams { beta_gbs: 10.0, pi_gflops: 100.0 }),
+        iters: 1,
+        warmup: 0,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+        artifacts_dir: None,
+        autotune,
+    })
+    .unwrap()
+}
+
+/// Five structurally distinct square generators — one per sparsity
+/// regime the suite models (random, banded, FE-mesh, scale-free,
+/// power-law RMAT).
+fn gen_matrix(g: usize, rng: &mut Prng) -> Csr {
+    match g {
+        0 => {
+            let n = 90 + rng.below_usize(50);
+            erdos_renyi(n, n, 4.0, rng)
+        }
+        1 => banded(90 + rng.below_usize(50), 4, 0.6, rng),
+        2 => mesh2d(8 + rng.below_usize(4), MeshKind::Triangular, 0.9, rng),
+        3 => chung_lu(
+            ChungLuParams { n: 110 + rng.below_usize(60), alpha: 2.3, avg_deg: 6.0, k_min: 2.0 },
+            rng,
+        ),
+        _ => rmat(7, 4.0, 0.45, 0.22, 0.22, rng),
+    }
+}
+
+fn bits_eq(got: &[f64], want: &[f64], what: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if g.to_bits() != w.to_bits() {
+            return Err(format!("{what}: [{i}] {g} vs {w} (bitwise)"));
+        }
+    }
+    Ok(())
+}
+
+fn err<E: std::fmt::Display>(e: E) -> String {
+    e.to_string()
+}
+
+/// Tentpole differential: 5 generators × threads {1, 4} × forced
+/// native impls, chain kinds cycled over the cross so every generator
+/// meets every chain. Engine route == manual composition, bit for bit.
+#[test]
+fn engine_routed_pipelines_match_manual_composition_bitwise() {
+    check(0x919e1, 2, |rng| {
+        let mats: Vec<(String, Csr)> =
+            (0..5).map(|g| (format!("g{g}"), gen_matrix(g, rng))).collect();
+        for &threads in &[1usize, 4] {
+            let mut engine = pipeline_engine(threads, AutotunePolicy::default());
+            for (name, m) in &mats {
+                engine.register(name, m.clone()).map_err(err)?;
+            }
+            for (gi, (name, m)) in mats.iter().enumerate() {
+                for (ii, &im) in [Impl::Csr, Impl::Opt, Impl::Csb].iter().enumerate() {
+                    let seed = rng.next_u64();
+                    let n = m.nrows;
+                    match (gi + ii) % 4 {
+                        0 => {
+                            let dims = vec![3 + rng.below_usize(4), 5, 3];
+                            let spec = PipelineSpec::new(
+                                name.clone(),
+                                PipelineKind::Gcn { dims: dims.clone() },
+                            )
+                            .with_impl(im);
+                            let (rec, out) =
+                                engine.submit_pipeline_collect(&spec, seed).map_err(err)?;
+                            if rec.chosen != im {
+                                return Err(format!("forced {im} but ran {}", rec.chosen));
+                            }
+                            let k = build_native(im, m, threads).map_err(err)?;
+                            let (h0, layers) = gcn_random_inputs(n, &dims, seed);
+                            let want = gcn_forward(k.as_ref(), &h0, &layers).map_err(err)?;
+                            bits_eq(out.data(), &want.data, "gcn")?;
+                        }
+                        1 => {
+                            let (d, iters) = (2 + rng.below_usize(4), 3 + rng.below_usize(5));
+                            let spec = PipelineSpec::new(
+                                name.clone(),
+                                PipelineKind::PowerIteration { d, iters },
+                            )
+                            .with_impl(im);
+                            let (_, out) =
+                                engine.submit_pipeline_collect(&spec, seed).map_err(err)?;
+                            let k = build_native(im, m, threads).map_err(err)?;
+                            let x0 = power_random_input(n, d, seed);
+                            let (want, stats) =
+                                block_power_iteration(k.as_ref(), &x0, iters).map_err(err)?;
+                            match out {
+                                PipelineOutput::Power { block, lambda_max, residual } => {
+                                    bits_eq(&block, &want.data, "power block")?;
+                                    bits_eq(
+                                        &[lambda_max, residual],
+                                        &[stats.lambda_max, stats.residual],
+                                        "power stats",
+                                    )?;
+                                }
+                                _ => return Err("power chain must return Power output".into()),
+                            }
+                        }
+                        2 => {
+                            let seeds: Vec<usize> =
+                                (0..1 + rng.below_usize(3)).map(|_| rng.below_usize(n)).collect();
+                            let spec = PipelineSpec::new(
+                                name.clone(),
+                                PipelineKind::PageRank {
+                                    seeds: seeds.clone(),
+                                    alpha: 0.85,
+                                    tol: 1e-9,
+                                    iters: 12,
+                                },
+                            )
+                            .with_impl(im);
+                            let (_, out) =
+                                engine.submit_pipeline_collect(&spec, seed).map_err(err)?;
+                            let want = batched_pagerank(m, &seeds, 0.85, 1e-9, 12, im, threads)
+                                .map_err(err)?;
+                            match out {
+                                PipelineOutput::PageRank { scores, iterations, .. } => {
+                                    bits_eq(&scores, &want.scores.data, "pagerank scores")?;
+                                    if iterations != want.iterations {
+                                        return Err(format!(
+                                            "pagerank iters {iterations} vs {}",
+                                            want.iterations
+                                        ));
+                                    }
+                                }
+                                _ => {
+                                    return Err("pagerank chain must return PageRank output".into())
+                                }
+                            }
+                        }
+                        _ => {
+                            let d = 2 + rng.below_usize(5);
+                            let spec = PipelineSpec::new(
+                                name.clone(),
+                                PipelineKind::SpGemmSpMM { b: name.clone(), d },
+                            )
+                            .with_impl(im);
+                            let (_, out) =
+                                engine.submit_pipeline_collect(&spec, seed).map_err(err)?;
+                            let gk = build_spgemm(SpGemmImpl::Hash, m, threads);
+                            let product = gk.execute(m).map_err(err)?;
+                            let k = build_native(im, &product, threads).map_err(err)?;
+                            let b =
+                                DenseMatrix::random(product.ncols, d, &mut Prng::new(seed));
+                            let mut c = DenseMatrix::zeros(product.nrows, d);
+                            k.execute(&b, &mut c).map_err(err)?;
+                            bits_eq(out.data(), &c.data, "spgemm+spmm")?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn chain_specs() -> Vec<PipelineSpec> {
+    vec![
+        PipelineSpec::new("m", PipelineKind::Gcn { dims: vec![5, 4, 3] }),
+        PipelineSpec::new("m", PipelineKind::PowerIteration { d: 3, iters: 4 }),
+        PipelineSpec::new(
+            "m",
+            PipelineKind::PageRank { seeds: vec![0, 1], alpha: 0.85, tol: 1e-9, iters: 6 },
+        ),
+        PipelineSpec::new("m", PipelineKind::SpGemmSpMM { b: "m".into(), d: 4 }),
+    ]
+}
+
+fn quick() -> AutotunePolicy {
+    AutotunePolicy { explore_iters: 1, explore_min_secs: 0.0, ..AutotunePolicy::enabled() }
+}
+
+/// Whole-chain pinning: the first submission of each chain explores,
+/// every re-submission serves the pin — zero new measurements, and the
+/// executed impl is the pinned one.
+#[test]
+fn tuned_pipelines_pin_and_resubmission_explores_nothing() {
+    check(0x919e2, 3, |rng| {
+        let m = gen_matrix(rng.below_usize(5), rng);
+        let threads = [1usize, 4][rng.below_usize(2)];
+        let mut engine = pipeline_engine(threads, quick());
+        engine.register("m", m).map_err(err)?;
+        let specs = chain_specs();
+        for spec in &specs {
+            engine.submit_pipeline(spec).map_err(err)?;
+        }
+        let tuned = engine.autotuner().measurements();
+        if tuned == 0 {
+            return Err("the tuning pass must measure candidates".into());
+        }
+        if engine.autotuner().pipeline_decisions().len() != specs.len() {
+            return Err(format!(
+                "expected {} pinned chains, got {}",
+                specs.len(),
+                engine.autotuner().pipeline_decisions().len()
+            ));
+        }
+        for spec in &specs {
+            let rec = engine.submit_pipeline(spec).map_err(err)?;
+            let dec = engine
+                .autotuner()
+                .pipeline_decision("m", &rec.chain)
+                .ok_or_else(|| format!("no pin for chain {}", rec.chain))?;
+            if rec.chosen != dec.im {
+                return Err(format!("pin says {} but chain ran {}", dec.im, rec.chosen));
+            }
+        }
+        if engine.autotuner().measurements() != tuned {
+            return Err(format!(
+                "pinned re-submission explored {} extra candidates",
+                engine.autotuner().measurements() - tuned
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Persistence: pinned chain plans survive emit→parse byte-stably, and
+/// a fresh engine restored from the snapshot serves the same chains
+/// with **zero** exploration measurements.
+#[test]
+fn pinned_pipeline_state_round_trips_and_serves_without_exploring() {
+    check(0x919e3, 3, |rng| {
+        let m = gen_matrix(rng.below_usize(5), rng);
+        let specs = chain_specs();
+
+        let mut e1 = pipeline_engine(2, quick());
+        e1.register("m", m.clone()).map_err(err)?;
+        for spec in &specs {
+            e1.submit_pipeline(spec).map_err(err)?;
+        }
+        let state = e1.export_state();
+        if state.pipelines.len() != specs.len() {
+            return Err(format!(
+                "expected {} persisted chain plans, got {}",
+                specs.len(),
+                state.pipelines.len()
+            ));
+        }
+        let json = state.to_json();
+        let rt = AutotuneState::parse(&json).map_err(err)?;
+        if rt.to_json() != json {
+            return Err("emit→parse→emit must be byte-stable".into());
+        }
+
+        let mut e2 = pipeline_engine(2, quick());
+        e2.register("m", m).map_err(err)?;
+        if e2.restore_state(&rt) == 0 {
+            return Err("restore adopted nothing".into());
+        }
+        for spec in &specs {
+            e2.submit_pipeline(spec).map_err(err)?;
+        }
+        if e2.autotuner().measurements() != 0 {
+            return Err(format!(
+                "restored engine explored {} times despite pinned chain plans",
+                e2.autotuner().measurements()
+            ));
+        }
+        Ok(())
+    });
+}
