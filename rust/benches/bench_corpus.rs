@@ -1,0 +1,133 @@
+//! Bench: the out-of-core corpus harness end to end (EXPERIMENTS row
+//! CO).
+//!
+//! 1. Builds a corpus directory: `CORPUS_DIR` when set, otherwise a
+//!    temp tree synthesized from the proxy suite (one subdirectory per
+//!    structure group) — the same tree the CI smoke job uses.
+//! 2. Runs the harness: streaming MatrixMarket ingest → classify →
+//!    autotune-route (tuning batch + pinned batch) → per-group report.
+//! 3. Differential check on the side: the first corpus file is
+//!    executed both whole-matrix ([`CsrSpmm`]) and band-by-band
+//!    through a file-backed [`OocCsr`] under a budget small enough to
+//!    force several bands; the outputs must be bitwise identical.
+//! 4. Writes `BENCH_corpus.json` via the merging perf log and asserts
+//!    foreign benches' records survive the merge.
+//!
+//! `REPRO_SCALE` (default 0.1) and `REPRO_ITERS` (default 2) tune
+//! runtime; `REPRO_FAST=1` injects nominal machine parameters instead
+//! of running STREAM (CI smoke mode).
+
+use spmm_roofline::gen::Prng;
+use spmm_roofline::harness::{ingest_dir, run_corpus, synthesize_corpus, CorpusConfig};
+use spmm_roofline::model::MachineParams;
+use spmm_roofline::report::{PerfLog, PerfRecord};
+use spmm_roofline::sparse::{OocCsr, OocSpmm};
+use spmm_roofline::spmm::{CsrSpmm, DenseMatrix, Spmm};
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env1(key: &str) -> bool {
+    std::env::var(key).map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    let scale = envf("REPRO_SCALE", 0.1);
+    let iters = envf("REPRO_ITERS", 2.0) as usize;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let machine = if env1("REPRO_FAST") {
+        Some(MachineParams { beta_gbs: 25.0, pi_gflops: 100.0 })
+    } else {
+        None
+    };
+
+    let dir = match std::env::var("CORPUS_DIR") {
+        Ok(d) => std::path::PathBuf::from(d),
+        Err(_) => {
+            let d = std::env::temp_dir().join("spmm_roofline_bench_corpus");
+            let _ = std::fs::remove_dir_all(&d);
+            d
+        }
+    };
+    std::fs::create_dir_all(&dir).expect("corpus dir");
+    let ingested = ingest_dir(&dir).expect("corpus dir walk");
+    let synthesized_tree = ingested.is_empty();
+    if synthesized_tree {
+        let written = synthesize_corpus(&dir, scale).expect("synthesize corpus");
+        println!("synthesized {} .mtx files under {}", written.len(), dir.display());
+    } else {
+        println!("found {} .mtx files under {}", ingested.len(), dir.display());
+    }
+
+    // differential check: whole-matrix vs file-backed band-by-band on
+    // the first corpus file, budget forcing several bands
+    let files = ingest_dir(&dir).expect("corpus dir walk");
+    let (name, path, csr) = &files[0];
+    let d = 8;
+    let budget = spmm_roofline::sparse::mm_io::band_bytes(csr.nrows, csr.nnz()) / 4 + 1;
+    let ooc = OocCsr::open(path, budget).expect("ooc open");
+    assert!(ooc.n_bands() >= 2, "{name}: budget must force multiple bands");
+    let b = DenseMatrix::random(csr.ncols, d, &mut Prng::new(0xc0c0));
+    let mut c_whole = DenseMatrix::zeros(csr.nrows, d);
+    let mut c_banded = DenseMatrix::zeros(csr.nrows, d);
+    CsrSpmm::new(csr.clone(), threads).execute(&b, &mut c_whole).expect("whole-matrix SpMM");
+    let kern = OocSpmm::new(ooc, threads);
+    kern.execute(&b, &mut c_banded).expect("banded SpMM");
+    assert_eq!(
+        c_whole.data, c_banded.data,
+        "{name}: band-by-band execution must be bitwise identical"
+    );
+    println!(
+        "ooc differential: {name} in {} bands (budget {budget} B) — bitwise identical",
+        kern.backing().n_bands()
+    );
+
+    let rep = run_corpus(&CorpusConfig {
+        dir: Some(dir),
+        scale,
+        threads,
+        iters,
+        warmup: 1,
+        d_values: vec![4, 16],
+        machine,
+        ooc_budget: budget,
+    })
+    .expect("corpus run");
+    assert!(!rep.synthesized, "bench corpus dir was just populated");
+    println!("{}", rep.matrix_table().to_text());
+    println!("{}", rep.group_table().to_text());
+    assert_eq!(
+        rep.pinned_explores, 0,
+        "pinned re-submission must serve decisions without exploring"
+    );
+    assert_eq!(rep.rows.len(), rep.matrices.len() * 2, "one row per matrix × d");
+    if synthesized_tree {
+        // the synthesized proxy corpus spans all four structure groups
+        for class in ["Uniform Random", "Diagonal", "Blocking", "Scale-free"] {
+            assert!(
+                rep.groups.iter().any(|g| g.class == class),
+                "missing structure group {class}"
+            );
+        }
+    }
+
+    // a foreign record must survive the merge (regression: PR 6)
+    let mut probe = PerfLog::new();
+    probe.push(PerfRecord::basic("bench_other", "keepme", "Diagonal", "CSR", 4, 4, 1.0));
+    probe.merge_save("BENCH_corpus.json").expect("seed foreign record");
+    rep.save("BENCH_corpus.json").expect("write BENCH_corpus.json");
+    let merged = PerfLog::parse(
+        &std::fs::read_to_string("BENCH_corpus.json").expect("read artifact"),
+    )
+    .expect("parse artifact");
+    assert!(
+        merged.records.iter().any(|r| r.bench == "bench_other" && r.matrix == "keepme"),
+        "merge_save must preserve other benches' records"
+    );
+    assert_eq!(
+        merged.records.iter().filter(|r| r.bench == "bench_corpus").count(),
+        rep.rows.len()
+    );
+    println!("wrote BENCH_corpus.json ({} corpus records)", rep.rows.len());
+}

@@ -49,6 +49,12 @@
 //!                  the inter-op roofline), prove pinned re-submission
 //!                  explores nothing, and (with --state FILE) persist
 //!                  the pinned chain plans
+//!   corpus         out-of-core corpus harness: ingest every .mtx
+//!                  under --mtx DIR via the streaming MatrixMarket
+//!                  reader (or synthesize a proxy corpus), classify,
+//!                  autotune-route, plan row bands under --budget
+//!                  BYTES, report per structure group; writes
+//!                  BENCH_corpus.json
 //! ```
 
 use crate::config::{parse_impl, ExperimentConfig};
@@ -100,6 +106,8 @@ pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
             "clients" => cfg.clients = v.parse().map_err(|_| bad(k, v))?,
             "queue" => cfg.queue_cap = v.parse().map_err(|_| bad(k, v))?,
             "state" => cfg.state_path = Some(v.clone()),
+            "mtx" => cfg.mtx_dir = Some(v.clone()),
+            "budget" => cfg.ooc_budget = v.parse().map_err(|_| bad(k, v))?,
             "d" => {
                 cfg.d_values = v
                     .split(',')
@@ -134,10 +142,11 @@ fn bad(k: &str, v: &str) -> Error {
 pub fn usage() -> String {
     "usage: repro <command> [flags] — commands: sysinfo stream suite classify \
      table-v fig1 fig2 validate-ai ablate-block ablate-reuse ablate-threads \
-     ablate-reorder ladder calib hubs engine route spgemm serve pipeline\n\
+     ablate-reorder ladder calib hubs engine route spgemm serve pipeline \
+     corpus\n\
      flags: --scale X --threads N --iters N --warmup N --d 1,4,16,64 \
      --impls CSR,MKL,CSB --out DIR --artifacts DIR --config FILE --autotune \
-     --clients N --queue N --state FILE\n\
+     --clients N --queue N --state FILE --mtx DIR --budget BYTES\n\
      --impls accepts any of CSR,MKL/OPT,CSB,ELL,BSR,PB,XLA or the shorthand \
      `all` (= the six native kernels); `engine` prepares exactly the \
      requested set, so ELL/BSR/PB are opt-in there\n\
@@ -162,7 +171,12 @@ pub fn usage() -> String {
      batched PageRank, SpGEMM→SpMM) through the engine: each chain is \
      tuned end-to-end against the inter-op roofline model and pinned; \
      a second submission serves the pin with zero new measurements; \
-     --state FILE persists the pinned chain plans across runs"
+     --state FILE persists the pinned chain plans across runs\n\
+     `corpus` ingests every .mtx under --mtx DIR through the streaming \
+     MatrixMarket reader (no DIR: synthesizes a proxy corpus from the \
+     generator suite), classifies each matrix, routes it through the \
+     autotuner, plans out-of-core row bands under --budget BYTES, and \
+     writes per-structure-group results to BENCH_corpus.json"
         .to_string()
 }
 
@@ -201,6 +215,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
         "spgemm" => cmd_spgemm(cfg),
         "serve" => cmd_serve(cfg),
         "pipeline" => cmd_pipeline(cfg),
+        "corpus" => cmd_corpus(cfg),
         other => Err(Error::Usage(format!("unknown command '{other}'\n\n{}", usage()))),
     }
 }
@@ -1161,6 +1176,37 @@ fn cmd_pipeline(cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+fn cmd_corpus(cfg: &ExperimentConfig) -> Result<()> {
+    use crate::harness::{run_corpus, CorpusConfig};
+
+    let ccfg = CorpusConfig {
+        dir: cfg.mtx_dir.as_ref().map(std::path::PathBuf::from),
+        scale: cfg.scale,
+        threads: cfg.threads,
+        iters: cfg.iters,
+        warmup: cfg.warmup,
+        d_values: cfg.d_values.clone(),
+        machine: None,
+        ooc_budget: cfg.ooc_budget,
+    };
+    let rep = run_corpus(&ccfg)?;
+    if rep.synthesized {
+        println!(
+            "no .mtx corpus under {:?} — synthesized the proxy suite at scale {}",
+            cfg.mtx_dir, cfg.scale
+        );
+    }
+    println!("{}", rep.matrix_table().to_text());
+    println!("{}", rep.group_table().to_text());
+    println!(
+        "pinned re-submission explored {} candidates (0 proves the routing held)",
+        rep.pinned_explores
+    );
+    rep.save("BENCH_corpus.json")?;
+    println!("wrote BENCH_corpus.json ({} records)", rep.rows.len());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1218,6 +1264,20 @@ mod tests {
         assert_eq!(cli.cfg.d_values, vec![8]);
         assert_eq!(cli.cfg.state_path.as_deref(), Some("pins.json"));
         assert!(usage().contains("pipeline"));
+    }
+
+    #[test]
+    fn corpus_flags_parse() {
+        let cli = parse_args(args("corpus --mtx data/ss --budget 1048576 --d 8")).unwrap();
+        assert_eq!(cli.command, "corpus");
+        assert_eq!(cli.cfg.mtx_dir.as_deref(), Some("data/ss"));
+        assert_eq!(cli.cfg.ooc_budget, 1048576);
+        // defaults when unset
+        let cli = parse_args(args("corpus")).unwrap();
+        assert!(cli.cfg.mtx_dir.is_none());
+        assert_eq!(cli.cfg.ooc_budget, crate::harness::CORPUS_DEFAULT_BUDGET);
+        assert!(parse_args(args("corpus --budget nope")).is_err());
+        assert!(usage().contains("corpus"));
     }
 
     #[test]

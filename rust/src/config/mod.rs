@@ -43,6 +43,11 @@ pub struct ExperimentConfig {
     /// Autotune snapshot path for the serving front-end: loaded at
     /// startup, saved at shutdown (`None` = in-memory only).
     pub state_path: Option<String>,
+    /// MatrixMarket corpus directory for the `corpus` command (`None`
+    /// = synthesize a proxy corpus from the generator suite).
+    pub mtx_dir: Option<String>,
+    /// Out-of-core band byte budget for corpus band planning.
+    pub ooc_budget: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -61,6 +66,8 @@ impl Default for ExperimentConfig {
             clients: 4,
             queue_cap: 64,
             state_path: None,
+            mtx_dir: None,
+            ooc_budget: crate::harness::CORPUS_DEFAULT_BUDGET,
         }
     }
 }
@@ -111,6 +118,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = t.get_str("state_path")? {
             cfg.state_path = Some(v.to_string());
+        }
+        if let Some(v) = t.get_str("mtx_dir")? {
+            cfg.mtx_dir = Some(v.to_string());
+        }
+        if let Some(v) = t.get_f64("ooc_budget")? {
+            cfg.ooc_budget = v as usize;
         }
         if let Some(list) = t.get_str_array("impls")? {
             cfg.impls = list
@@ -191,6 +204,17 @@ use_xla = true
         assert!(ExperimentConfig::from_toml_text("impls = [\"NOPE\"]").is_err());
         assert!(ExperimentConfig::from_toml_text("clients = 0").is_err());
         assert!(ExperimentConfig::from_toml_text("queue_cap = 0").is_err());
+    }
+
+    #[test]
+    fn parses_corpus_keys() {
+        let c = ExperimentConfig::default();
+        assert!(c.mtx_dir.is_none());
+        assert_eq!(c.ooc_budget, crate::harness::CORPUS_DEFAULT_BUDGET);
+        let text = "mtx_dir = \"corpus\"\nooc_budget = 4096\n";
+        let c = ExperimentConfig::from_toml_text(text).unwrap();
+        assert_eq!(c.mtx_dir.as_deref(), Some("corpus"));
+        assert_eq!(c.ooc_budget, 4096);
     }
 
     #[test]

@@ -1,0 +1,442 @@
+//! Corpus harness (EXPERIMENTS row CO): ingest a directory tree of
+//! MatrixMarket files, classify each matrix, route it through the
+//! autotuner, and report **per structure group** — the paper's
+//! group-by-structure evaluation (its SuiteSparse tables) on real
+//! matrices instead of the synthetic generators.
+//!
+//! Ingestion runs through the streaming reader
+//! ([`crate::sparse::mm_io::read_csr_streaming`]); when the corpus
+//! directory is absent or holds no `.mtx` files, a stand-in corpus is
+//! synthesized from the proxy suite ([`crate::gen::representative_suite`])
+//! so the harness (and the CI smoke job) always has something
+//! structurally diverse to chew on. Each matrix also gets an
+//! out-of-core band plan under the configured byte budget
+//! ([`crate::sparse::mm_io::plan_row_bands`]) and the band-pass model
+//! AI ([`crate::model::ai_ooc`], MODELS.md §9), so the report shows
+//! what executing it under that residency budget would cost.
+//!
+//! Artifact: `BENCH_corpus.json` via the shared merge-on-save perf log
+//! ([`crate::report::PerfLog::merge_save`]) — one record per routed
+//! `(matrix, d)`, class = structure group.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::{AutotunePolicy, Engine, EngineConfig, JobSpec};
+use crate::error::{Error, Result};
+use crate::model::{ai_ooc, AiParams, MachineParams};
+use crate::report::{PerfLog, PerfRecord, Table};
+use crate::sparse::mm_io::{self, plan_row_bands};
+use crate::sparse::Csr;
+use crate::spmm::Impl;
+
+/// Default out-of-core band budget for corpus planning: 64 MiB, the
+/// same order as the PB kernel's spill arena bound.
+pub const CORPUS_DEFAULT_BUDGET: usize = 1 << 26;
+
+/// Knobs for one corpus run. `dir = None` (or an empty/absent tree)
+/// synthesizes the proxy corpus at `scale`.
+pub struct CorpusConfig {
+    pub dir: Option<PathBuf>,
+    pub scale: f64,
+    pub threads: usize,
+    pub iters: usize,
+    pub warmup: usize,
+    pub d_values: Vec<usize>,
+    /// Nominal machine override (`REPRO_FAST` / tests); `None` runs
+    /// STREAM calibration.
+    pub machine: Option<MachineParams>,
+    /// Out-of-core band byte budget used for the plan/model columns.
+    pub ooc_budget: usize,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> CorpusConfig {
+        CorpusConfig {
+            dir: None,
+            scale: 0.05,
+            threads: 1,
+            iters: 2,
+            warmup: 1,
+            d_values: vec![8],
+            machine: None,
+            ooc_budget: CORPUS_DEFAULT_BUDGET,
+        }
+    }
+}
+
+/// One ingested matrix: structural facts + its out-of-core plan.
+pub struct CorpusMatrix {
+    pub name: String,
+    /// Source path; `None` for synthesized matrices.
+    pub path: Option<PathBuf>,
+    pub class: String,
+    pub class_summary: String,
+    pub nrows: usize,
+    pub nnz: usize,
+    /// Bands the byte budget would split this matrix into.
+    pub n_bands: usize,
+    /// In-memory model AI at the first configured `d`.
+    pub ai_mem: f64,
+    /// Band-pass model AI at the same `d` ([`crate::model::ai_ooc`]).
+    pub ai_banded: f64,
+}
+
+/// One routed `(matrix, d)` cell from the pinned pass.
+pub struct CorpusRow {
+    pub matrix: String,
+    pub class: String,
+    pub impl_name: String,
+    pub reorder: String,
+    pub d: usize,
+    pub dt: usize,
+    pub ai: f64,
+    pub predicted_gflops: f64,
+    pub measured_gflops: f64,
+}
+
+/// Aggregates over one structure group.
+pub struct GroupRow {
+    pub class: String,
+    pub matrices: usize,
+    pub jobs: usize,
+    pub geomean_gflops: f64,
+    /// Geometric mean of measured/predicted (1.0 = perfect model).
+    pub geomean_pred_ratio: f64,
+}
+
+/// Everything one corpus run produced.
+pub struct CorpusReport {
+    /// True when no `.mtx` corpus was found and the proxy suite stood
+    /// in.
+    pub synthesized: bool,
+    pub matrices: Vec<CorpusMatrix>,
+    pub rows: Vec<CorpusRow>,
+    pub groups: Vec<GroupRow>,
+    /// Explore measurements in the pinned (second) pass — 0 proves the
+    /// router pinned every decision during tuning.
+    pub pinned_explores: usize,
+}
+
+fn walk_mtx(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.map(|e| Ok(e?.path())).collect::<Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_mtx(&p, out)?;
+        } else if p.extension().map(|e| e == "mtx").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Collect every `.mtx` under `dir` (recursive, sorted for
+/// deterministic job order) and parse each through the streaming
+/// reader. A malformed file is a typed error naming the file — a
+/// corpus run must not die with a panic halfway through a directory.
+pub fn ingest_dir(dir: &Path) -> Result<Vec<(String, PathBuf, Csr)>> {
+    let mut paths = Vec::new();
+    walk_mtx(dir, &mut paths)?;
+    let mut out = Vec::with_capacity(paths.len());
+    for p in paths {
+        let name = p
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| p.display().to_string());
+        let csr = mm_io::read_csr_streaming(&p)
+            .map_err(|e| Error::Parse(format!("{}: {e}", p.display())))?;
+        out.push((name, p, csr));
+    }
+    Ok(out)
+}
+
+/// Write the proxy suite as a small `.mtx` tree under `dir`, one
+/// subdirectory per structure group (`dir/<class>/<name>.mtx`) — what
+/// the CI corpus smoke job ingests. Returns the written paths.
+pub fn synthesize_corpus(dir: &Path, scale: f64) -> Result<Vec<PathBuf>> {
+    let mut written = Vec::new();
+    for proxy in crate::gen::representative_suite() {
+        let sub = dir.join(proxy.class.to_string().replace(' ', "_").to_lowercase());
+        std::fs::create_dir_all(&sub)?;
+        let path = sub.join(format!("{}.mtx", proxy.name));
+        mm_io::write_csr(&path, &proxy.generate(scale))?;
+        written.push(path);
+    }
+    Ok(written)
+}
+
+fn geomean(xs: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0f64, 0usize);
+    for x in xs {
+        if x > 0.0 && x.is_finite() {
+            sum += x.ln();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (sum / n as f64).exp()
+    }
+}
+
+/// Run the corpus: ingest (or synthesize), classify + register, one
+/// tuning batch (explores candidates), one pinned batch (the reported
+/// rows), then group by structure.
+pub fn run_corpus(cfg: &CorpusConfig) -> Result<CorpusReport> {
+    if cfg.d_values.is_empty() {
+        return Err(Error::Usage("corpus needs at least one d value".into()));
+    }
+    let mut synthesized = false;
+    let mats: Vec<(String, Option<PathBuf>, Csr)> = match &cfg.dir {
+        Some(dir) if dir.is_dir() => {
+            let found = ingest_dir(dir)?;
+            if found.is_empty() {
+                synthesized = true;
+                synth_mats(cfg.scale)
+            } else {
+                found.into_iter().map(|(n, p, c)| (n, Some(p), c)).collect()
+            }
+        }
+        _ => {
+            synthesized = true;
+            synth_mats(cfg.scale)
+        }
+    };
+
+    let mut engine = Engine::new(EngineConfig {
+        threads: cfg.threads,
+        machine: cfg.machine,
+        iters: cfg.iters,
+        warmup: cfg.warmup,
+        // the paper trio: ELL/BSR preparation is O(n·max_row_degree)
+        // and a hub row in an untrusted corpus matrix would blow it up
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb],
+        artifacts_dir: None,
+        autotune: AutotunePolicy::enabled(),
+    })?;
+
+    let d0 = cfg.d_values[0];
+    let mut matrices = Vec::with_capacity(mats.len());
+    let mut names = Vec::with_capacity(mats.len());
+    for (name, path, csr) in mats {
+        let n_bands = plan_row_bands(&csr.row_ptr, cfg.ooc_budget).len().saturating_sub(1);
+        let p = AiParams { n: csr.nrows, d: d0, nnz: csr.nnz() };
+        engine.register(&name, csr)?;
+        let entry = engine
+            .registry()
+            .get(&name)
+            .ok_or_else(|| Error::InvalidStructure(format!("{name} vanished from registry")))?;
+        let model = entry.classification.model;
+        matrices.push(CorpusMatrix {
+            name: name.clone(),
+            path,
+            class: entry.classification.class.to_string(),
+            class_summary: entry.classification.summary(),
+            nrows: p.n,
+            nnz: p.nnz,
+            n_bands,
+            ai_mem: ai_ooc(&model, p, 1),
+            ai_banded: ai_ooc(&model, p, n_bands),
+        });
+        names.push(name);
+    }
+
+    let jobs: Vec<JobSpec> = names
+        .iter()
+        .flat_map(|n| cfg.d_values.iter().map(|&d| JobSpec::new(n.clone(), d)))
+        .collect();
+
+    // pass 1 explores impl × reordering candidates and pins winners
+    engine.submit_batch(&jobs)?;
+    // pass 2 serves the pinned decisions — these are the report rows
+    let h0 = engine.history().len();
+    let pinned = engine.submit_batch(&jobs)?;
+    let rows: Vec<CorpusRow> = engine.history()[h0..]
+        .iter()
+        .map(|r| CorpusRow {
+            matrix: r.matrix.clone(),
+            class: r.class.to_string(),
+            impl_name: r.chosen.to_string(),
+            reorder: r.reorder.to_string(),
+            d: r.d,
+            dt: r.dt.min(r.d),
+            ai: r.ai,
+            predicted_gflops: r.predicted_gflops,
+            measured_gflops: r.measured_gflops,
+        })
+        .collect();
+
+    // group by structure class, in first-seen order
+    let mut groups: Vec<GroupRow> = Vec::new();
+    let mut classes: Vec<String> = Vec::new();
+    for r in &rows {
+        if !classes.contains(&r.class) {
+            classes.push(r.class.clone());
+        }
+    }
+    for class in classes {
+        let in_group: Vec<&CorpusRow> = rows.iter().filter(|r| r.class == class).collect();
+        let mut mats_in: Vec<&str> = in_group.iter().map(|r| r.matrix.as_str()).collect();
+        mats_in.dedup();
+        groups.push(GroupRow {
+            class,
+            matrices: mats_in.len(),
+            jobs: in_group.len(),
+            geomean_gflops: geomean(in_group.iter().map(|r| r.measured_gflops)),
+            geomean_pred_ratio: geomean(in_group.iter().map(|r| {
+                if r.predicted_gflops > 0.0 {
+                    r.measured_gflops / r.predicted_gflops
+                } else {
+                    0.0
+                }
+            })),
+        });
+    }
+
+    Ok(CorpusReport {
+        synthesized,
+        matrices,
+        rows,
+        groups,
+        pinned_explores: pinned.explore_measurements,
+    })
+}
+
+fn synth_mats(scale: f64) -> Vec<(String, Option<PathBuf>, Csr)> {
+    crate::gen::representative_suite()
+        .into_iter()
+        .map(|p| (p.name.to_string(), None, p.generate(scale)))
+        .collect()
+}
+
+impl CorpusReport {
+    /// The ingest table: one line per matrix with its structure group
+    /// and out-of-core plan.
+    pub fn matrix_table(&self) -> Table {
+        let mut t = Table::new(
+            "corpus — ingested matrices and band plans",
+            &["Matrix", "Group", "Rows", "Nnz", "Bands", "AI mem", "AI banded"],
+        );
+        for m in &self.matrices {
+            t.row(vec![
+                m.name.clone(),
+                m.class.clone(),
+                m.nrows.to_string(),
+                m.nnz.to_string(),
+                m.n_bands.to_string(),
+                format!("{:.3}", m.ai_mem),
+                format!("{:.3}", m.ai_banded),
+            ]);
+        }
+        t
+    }
+
+    /// The per-structure-group aggregate table — the paper's
+    /// group-by-structure view.
+    pub fn group_table(&self) -> Table {
+        let mut t = Table::new(
+            "corpus — per structure group (pinned routing)",
+            &["Group", "Matrices", "Jobs", "geomean GF/s", "geomean meas/pred"],
+        );
+        for g in &self.groups {
+            t.row(vec![
+                g.class.clone(),
+                g.matrices.to_string(),
+                g.jobs.to_string(),
+                format!("{:.2}", g.geomean_gflops),
+                format!("{:.2}", g.geomean_pred_ratio),
+            ]);
+        }
+        t
+    }
+
+    /// Flat perf records (bench = `bench_corpus`) for the artifact.
+    pub fn perf_records(&self) -> Vec<PerfRecord> {
+        self.rows
+            .iter()
+            .map(|r| PerfRecord {
+                reorder: r.reorder.clone(),
+                predicted_gflops: r.predicted_gflops,
+                ..PerfRecord::basic(
+                    "bench_corpus",
+                    r.matrix.clone(),
+                    r.class.clone(),
+                    r.impl_name.clone(),
+                    r.d,
+                    r.dt,
+                    r.measured_gflops,
+                )
+            })
+            .collect()
+    }
+
+    /// Merge the records into `path` (replacing only `bench_corpus`
+    /// records — other benches' latest numbers survive).
+    pub fn save(&self, path: &str) -> Result<()> {
+        let mut log = PerfLog::new();
+        for rec in self.perf_records() {
+            log.push(rec);
+        }
+        log.merge_save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spmm_roofline_corpus_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn synthesize_then_ingest_round_trips() {
+        let dir = tmp_dir("roundtrip");
+        let written = synthesize_corpus(&dir, 0.02).unwrap();
+        assert_eq!(written.len(), crate::gen::representative_suite().len());
+        // one subdirectory per structure group
+        assert!(written.iter().all(|p| p.parent().unwrap() != dir));
+        let got = ingest_dir(&dir).unwrap();
+        assert_eq!(got.len(), written.len());
+        for (name, _, csr) in &got {
+            let proxy = crate::gen::suite::find(name).expect("ingested name is a proxy");
+            let want = proxy.generate(0.02);
+            assert_eq!(csr.nrows, want.nrows, "{name}");
+            assert_eq!(csr.vals, want.vals, "{name}: write→stream-read must be bitwise");
+        }
+    }
+
+    #[test]
+    fn ingest_reports_malformed_files_by_name() {
+        let dir = tmp_dir("malformed");
+        std::fs::write(dir.join("bad.mtx"), "%%MatrixMarket matrix coordinate real general\n2 2 5\n1 1 1.0\n").unwrap();
+        let err = ingest_dir(&dir).unwrap_err();
+        assert!(err.to_string().contains("bad.mtx"), "error names the file: {err}");
+    }
+
+    #[test]
+    fn run_corpus_synthesizes_when_dir_missing() {
+        let cfg = CorpusConfig {
+            dir: Some(tmp_dir("empty")),
+            scale: 0.015,
+            machine: Some(MachineParams { beta_gbs: 25.0, pi_gflops: 100.0 }),
+            iters: 1,
+            warmup: 0,
+            d_values: vec![4],
+            ..CorpusConfig::default()
+        };
+        let rep = run_corpus(&cfg).unwrap();
+        assert!(rep.synthesized);
+        assert_eq!(rep.rows.len(), rep.matrices.len());
+        assert_eq!(rep.pinned_explores, 0, "second pass must serve pins only");
+        assert!(!rep.groups.is_empty());
+        let total: usize = rep.groups.iter().map(|g| g.jobs).sum();
+        assert_eq!(total, rep.rows.len());
+    }
+}

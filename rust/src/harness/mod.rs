@@ -8,6 +8,7 @@
 
 mod ablations;
 mod common;
+pub mod corpus;
 mod fig1;
 mod fig2;
 mod table_v;
@@ -16,6 +17,10 @@ pub mod validate;
 pub use ablations::{
     ablate_block_size, ablate_reorder, ablate_reuse_factor, ablate_threads, traffic_vs_d,
     z_model_grid,
+};
+pub use corpus::{
+    ingest_dir, run_corpus, synthesize_corpus, CorpusConfig, CorpusMatrix, CorpusReport,
+    CorpusRow, GroupRow, CORPUS_DEFAULT_BUDGET,
 };
 pub use common::{machine_params_cached, measure_kernel, CellMeasurement};
 pub use fig1::{run_fig1, Fig1Data};

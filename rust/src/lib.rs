@@ -69,6 +69,16 @@
 //!   functions ([`workloads::gcn_forward`] and friends) wrap the same
 //!   chain cores, so engine-routed results are bitwise-identical to
 //!   manual composition.
+//! * **Out-of-core execution and corpus harness** ([`sparse::ooc`],
+//!   [`harness::corpus`]): a streaming MatrixMarket reader
+//!   ([`sparse::mm_io::MmStream`]) that rejects malformed input with
+//!   typed errors, row-band planning under a byte budget
+//!   ([`sparse::mm_io::plan_row_bands`]), band-by-band SpMM
+//!   ([`sparse::OocSpmm`]) that is bitwise-identical to whole-matrix
+//!   CSR, the band-pass traffic term ([`model::bytes_ooc`], MODELS.md
+//!   §9), and a corpus harness that ingests a directory of `.mtx`
+//!   files, classifies each matrix, routes it through the autotuner,
+//!   and reports per structure group (`BENCH_corpus.json`).
 //! * **XLA/PJRT runtime** ([`runtime`]): loads AOT artifacts produced by
 //!   the JAX/Pallas compile path (`python/compile/`) and exposes them as
 //!   a fourth SpMM implementation.

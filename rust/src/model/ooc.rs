@@ -1,0 +1,86 @@
+//! Band-pass traffic term for out-of-core SpMM
+//! ([`crate::sparse::OocSpmm`]) — MODELS.md §9.
+//!
+//! Band-by-band execution trades residency for passes, exactly like
+//! the PB kernel trades random access for passes
+//! ([`crate::model::bytes_pb_tiled`]'s `⌈d/dt⌉` re-streams): every row
+//! band gathers from `B` independently, so whatever `B`-panel reuse
+//! the structural model credited *within* the matrix is lost *between*
+//! bands. The honest worst-case charge is one extra full read of the
+//! `B` panel (`8·n·d` bytes) per band beyond the first:
+//!
+//! ```text
+//! bytes_ooc(model, p, nb) = model.bytes(p) + (nb − 1) · 8 · n · d
+//! ```
+//!
+//! With one band the term vanishes and the out-of-core line collapses
+//! onto the in-memory structural line — the model analog of the
+//! bitwise-identity contract in `tests/prop_ooc.rs`. As the budget
+//! shrinks (`nb → nrows`), the AI decays toward `2·nnz·d` FLOPs over
+//! `≈ 8·n·d·nb` bytes, which is the planner's signal that a matrix is
+//! being executed under too small a residency budget.
+
+use crate::model::{AiParams, SparsityModel};
+
+/// Extra DRAM bytes band-by-band execution adds on top of the
+/// structural model: one full `B`-panel read (`8·n·d`) per band beyond
+/// the first. Zero for `n_bands ≤ 1`.
+pub fn bytes_ooc_extra(p: AiParams, n_bands: usize) -> f64 {
+    (n_bands.saturating_sub(1)) as f64 * 8.0 * p.n as f64 * p.d as f64
+}
+
+/// Modeled total DRAM bytes for an out-of-core execution in `n_bands`
+/// passes under the given structural model.
+pub fn bytes_ooc(model: &SparsityModel, p: AiParams, n_bands: usize) -> f64 {
+    model.bytes(p) + bytes_ooc_extra(p, n_bands)
+}
+
+/// Out-of-core arithmetic intensity: the structural AI with the
+/// band-pass penalty in the denominator.
+pub fn ai_ooc(model: &SparsityModel, p: AiParams, n_bands: usize) -> f64 {
+    p.flops() / bytes_ooc(model, p, n_bands)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: AiParams = AiParams { n: 1 << 16, d: 16, nnz: 1 << 20 };
+
+    #[test]
+    fn one_band_collapses_to_in_memory() {
+        for m in [SparsityModel::Random, SparsityModel::Diagonal] {
+            assert_eq!(bytes_ooc(&m, P, 1), m.bytes(P));
+            assert_eq!(ai_ooc(&m, P, 1), m.ai(P));
+            assert_eq!(bytes_ooc_extra(P, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn each_extra_band_charges_one_b_panel() {
+        let panel = 8.0 * P.n as f64 * P.d as f64;
+        assert_eq!(bytes_ooc_extra(P, 2), panel);
+        assert_eq!(bytes_ooc_extra(P, 5), 4.0 * panel);
+        let m = SparsityModel::Diagonal;
+        assert!(ai_ooc(&m, P, 5) < ai_ooc(&m, P, 2));
+        assert!(ai_ooc(&m, P, 2) < m.ai(P));
+    }
+
+    #[test]
+    fn monotone_in_bands_for_every_model() {
+        for m in [
+            SparsityModel::Random,
+            SparsityModel::Diagonal,
+            SparsityModel::Blocked { t: 8, n_blocks: 4096 },
+            SparsityModel::ScaleFree { alpha: 2.1, f: 0.001 },
+        ] {
+            let mut last = f64::INFINITY;
+            for nb in [1usize, 2, 4, 16, 256] {
+                let ai = ai_ooc(&m, P, nb);
+                assert!(ai.is_finite() && ai > 0.0);
+                assert!(ai <= last, "{m:?}: AI must not rise with bands");
+                last = ai;
+            }
+        }
+    }
+}

@@ -121,6 +121,23 @@ impl Csr {
         self.nnz() * (BYTES_VAL + BYTES_IDX) + (self.nrows + 1) * BYTES_IDX
     }
 
+    /// Copy out rows `[r0, r1)` as a standalone CSR segment over the
+    /// full column space, rows rebased to local indices. The row data
+    /// (`col_idx`/`vals` slices) are byte-for-byte the originals, so
+    /// band-by-band consumers ([`crate::sparse::ooc`]) inherit bitwise
+    /// agreement with whole-matrix execution for free.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Csr {
+        assert!(r0 <= r1 && r1 <= self.nrows, "band [{r0},{r1}) out of {} rows", self.nrows);
+        let (lo, hi) = (self.row_ptr[r0], self.row_ptr[r1]);
+        Csr {
+            nrows: r1 - r0,
+            ncols: self.ncols,
+            row_ptr: self.row_ptr[r0..=r1].iter().map(|p| p - lo).collect(),
+            col_idx: self.col_idx[lo..hi].to_vec(),
+            vals: self.vals[lo..hi].to_vec(),
+        }
+    }
+
     /// Convert back to COO (row-major ordered).
     pub fn to_coo(&self) -> Coo {
         let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz());
@@ -196,6 +213,20 @@ mod tests {
         assert_eq!(m.row_vals(2), &[3.0, 4.0]);
         let d = m.to_dense();
         assert_eq!(d, vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn slice_rows_rebases_and_preserves_data() {
+        let m = sample();
+        let band = m.slice_rows(1, 3);
+        band.validate().unwrap();
+        assert_eq!((band.nrows, band.ncols), (2, 3));
+        assert_eq!(band.row_ptr, vec![0, 0, 2]);
+        assert_eq!(band.row_cols(1), m.row_cols(2));
+        assert_eq!(band.row_vals(1), m.row_vals(2));
+        // degenerate bands: empty and whole
+        assert_eq!(m.slice_rows(1, 1).nnz(), 0);
+        assert_eq!(m.slice_rows(0, 3), m);
     }
 
     #[test]

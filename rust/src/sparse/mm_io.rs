@@ -3,22 +3,78 @@
 //! Supports the `%%MatrixMarket matrix coordinate (real|integer|pattern)
 //! (general|symmetric)` subset — enough to exchange matrices with
 //! SuiteSparse tooling and to persist generated proxy matrices.
+//!
+//! Two reading paths share one header parser but keep **independent
+//! entry loops**, deliberately:
+//!
+//! * [`read_coo_from`] — the original materialize-then-convert reader,
+//!   kept as the golden oracle for the differential suite
+//!   (`tests/prop_mm_io.rs`);
+//! * [`MmStream`] — a single-pass streaming entry iterator that never
+//!   holds more than one line, feeding the exact-`nnz`-preallocating
+//!   [`read_csr_streaming`], the chunked [`StreamingCsrBuilder`], and
+//!   the out-of-core backing ([`crate::sparse::ooc::OocCsr`]).
+//!
+//! Every malformed input — bad banner, truncated body, out-of-range or
+//! zero-based indices, declared-`nnz` mismatch or overflow, non-finite
+//! values — is a typed [`Error::Parse`], never a panic: corpus files
+//! arrive from outside the process and the harness must survive them.
 
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, Lines, Write};
 use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::sparse::{Coo, Csr};
+use crate::{BYTES_IDX, BYTES_VAL};
 
-/// Parse a MatrixMarket file into COO.
-pub fn read_coo<P: AsRef<Path>>(path: P) -> Result<Coo> {
-    let f = std::fs::File::open(path)?;
-    read_coo_from(BufReader::new(f))
+/// Value field of a MatrixMarket banner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmField {
+    Real,
+    Integer,
+    /// Pattern files store structure only; every entry reads as `1.0`.
+    Pattern,
 }
 
-/// Parse MatrixMarket text from any reader.
-pub fn read_coo_from<R: BufRead>(r: R) -> Result<Coo> {
-    let mut lines = r.lines();
+/// Symmetry of a MatrixMarket banner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmSymmetry {
+    General,
+    /// Only one triangle is stored; reading mirrors every off-diagonal
+    /// entry (see [`Coo::symmetrize`]).
+    Symmetric,
+}
+
+/// Parsed banner + size line of a MatrixMarket file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MmHeader {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Declared stored-entry count (pre-symmetrization, pre-dedup).
+    pub nnz: usize,
+    pub field: MmField,
+    pub symmetry: MmSymmetry,
+}
+
+impl MmHeader {
+    /// Stored entries after symmetric mirroring, before dedup — the
+    /// exact preallocation for the streaming CSR path (an upper bound
+    /// only when the file stores duplicates or an off-banner diagonal).
+    pub fn expanded_nnz(&self) -> usize {
+        match self.symmetry {
+            MmSymmetry::General => self.nnz,
+            // saturating: the header guard below caps nnz ≤ u32::MAX,
+            // so 2·nnz cannot overflow usize on any supported target,
+            // but stay total anyway
+            MmSymmetry::Symmetric => self.nnz.saturating_mul(2),
+        }
+    }
+}
+
+/// Parse the banner and size line off a line iterator, leaving it
+/// positioned at the first entry line. Shared by the oracle reader and
+/// the streaming path so both report identical header errors.
+fn parse_header<B: BufRead>(lines: &mut Lines<B>) -> Result<MmHeader> {
     let header = lines
         .next()
         .ok_or_else(|| Error::Parse("empty MatrixMarket file".into()))??;
@@ -26,14 +82,17 @@ pub fn read_coo_from<R: BufRead>(r: R) -> Result<Coo> {
     if h.len() < 4 || h[0] != "%%matrixmarket" || h[1] != "matrix" || h[2] != "coordinate" {
         return Err(Error::Parse(format!("unsupported MatrixMarket header: {header}")));
     }
-    let field = h[3].as_str(); // real | integer | pattern
-    if !matches!(field, "real" | "integer" | "pattern") {
-        return Err(Error::Parse(format!("unsupported field type: {field}")));
-    }
-    let symmetry = h.get(4).map(|s| s.as_str()).unwrap_or("general").to_string();
-    if !matches!(symmetry.as_str(), "general" | "symmetric") {
-        return Err(Error::Parse(format!("unsupported symmetry: {symmetry}")));
-    }
+    let field = match h[3].as_str() {
+        "real" => MmField::Real,
+        "integer" => MmField::Integer,
+        "pattern" => MmField::Pattern,
+        other => return Err(Error::Parse(format!("unsupported field type: {other}"))),
+    };
+    let symmetry = match h.get(4).map(|s| s.as_str()).unwrap_or("general") {
+        "general" => MmSymmetry::General,
+        "symmetric" => MmSymmetry::Symmetric,
+        other => return Err(Error::Parse(format!("unsupported symmetry: {other}"))),
+    };
 
     // skip comments, find the size line
     let mut size_line = None;
@@ -55,8 +114,156 @@ pub fn read_coo_from<R: BufRead>(r: R) -> Result<Coo> {
         return Err(Error::Parse(format!("bad size line: {size_line}")));
     }
     let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+    // The crate's storage model is 32-bit indices (Coo/Csr store u32,
+    // and Coo::sorted_dedup permutes entries through a u32 index), so
+    // dimensions or entry counts beyond u32::MAX cannot be represented
+    // — reject at the header instead of truncating downstream. The
+    // symmetric bound is on the *expanded* count the mirroring pass
+    // produces.
+    let lim = u32::MAX as usize;
+    if nrows > lim || ncols > lim {
+        return Err(Error::Parse(format!(
+            "dimensions {nrows}x{ncols} exceed the 32-bit index model"
+        )));
+    }
+    let expanded = if symmetry == MmSymmetry::Symmetric { nnz.saturating_mul(2) } else { nnz };
+    if expanded > lim {
+        return Err(Error::Parse(format!(
+            "declared nnz {nnz} overflows the 32-bit entry budget{}",
+            if symmetry == MmSymmetry::Symmetric { " after symmetric mirroring" } else { "" }
+        )));
+    }
+    if symmetry == MmSymmetry::Symmetric && nrows != ncols {
+        return Err(Error::Parse(format!(
+            "symmetric banner on a non-square {nrows}x{ncols} matrix"
+        )));
+    }
+    Ok(MmHeader { nrows, ncols, nnz, field, symmetry })
+}
 
-    let mut coo = Coo::with_capacity(nrows, ncols, nnz);
+/// Single-pass streaming reader over a MatrixMarket body: yields stored
+/// entries one at a time as 0-indexed `(row, col, value)` triples, in
+/// file order, holding only the current line. Symmetric files yield the
+/// *stored* triangle; callers mirror (all library consumers do, so
+/// read-side semantics match [`read_coo_from`] exactly).
+///
+/// The declared-count contract is enforced at the tail: exhausting the
+/// body with fewer entries than the header declared is an error
+/// surfaced by the final [`MmStream::next_entry`] call (or the last
+/// iterator item), so truncated files cannot be mistaken for short
+/// ones.
+pub struct MmStream<B: BufRead> {
+    lines: Lines<B>,
+    header: MmHeader,
+    seen: usize,
+    done: bool,
+}
+
+impl<B: BufRead> MmStream<B> {
+    /// Parse the banner + size line and position the stream at the
+    /// first entry.
+    pub fn open(r: B) -> Result<MmStream<B>> {
+        let mut lines = r.lines();
+        let header = parse_header(&mut lines)?;
+        Ok(MmStream { lines, header, seen: 0, done: false })
+    }
+
+    /// The parsed banner + size line.
+    pub fn header(&self) -> MmHeader {
+        self.header
+    }
+
+    /// Entries yielded so far.
+    pub fn entries_read(&self) -> usize {
+        self.seen
+    }
+
+    /// Pull the next stored entry, or `Ok(None)` at a well-formed end
+    /// of body. Errors are terminal: the stream fuses.
+    pub fn next_entry(&mut self) -> Result<Option<(usize, usize, f64)>> {
+        if self.done {
+            return Ok(None);
+        }
+        let r = self.next_entry_inner();
+        if matches!(r, Err(_) | Ok(None)) {
+            self.done = true;
+        }
+        r
+    }
+
+    fn next_entry_inner(&mut self) -> Result<Option<(usize, usize, f64)>> {
+        let h = self.header;
+        for line in self.lines.by_ref() {
+            let line = line?;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            if self.seen == h.nnz {
+                return Err(Error::Parse(format!(
+                    "body continues past the declared nnz {}",
+                    h.nnz
+                )));
+            }
+            let mut it = t.split_whitespace();
+            let r: usize = it
+                .next()
+                .ok_or_else(|| Error::Parse("short entry line".into()))?
+                .parse()
+                .map_err(|e| Error::Parse(format!("row: {e}")))?;
+            let c: usize = it
+                .next()
+                .ok_or_else(|| Error::Parse("short entry line".into()))?
+                .parse()
+                .map_err(|e| Error::Parse(format!("col: {e}")))?;
+            let v: f64 = match h.field {
+                MmField::Pattern => 1.0,
+                _ => it
+                    .next()
+                    .ok_or_else(|| Error::Parse("missing value".into()))?
+                    .parse()
+                    .map_err(|e| Error::Parse(format!("val: {e}")))?,
+            };
+            if !v.is_finite() {
+                return Err(Error::Parse(format!("non-finite value {v} at ({r},{c})")));
+            }
+            if r == 0 || c == 0 || r > h.nrows || c > h.ncols {
+                return Err(Error::Parse(format!("entry ({r},{c}) out of 1-based range")));
+            }
+            self.seen += 1;
+            return Ok(Some((r - 1, c - 1, v)));
+        }
+        if self.seen != h.nnz {
+            return Err(Error::Parse(format!(
+                "declared nnz {} but read {} (truncated body)",
+                h.nnz, self.seen
+            )));
+        }
+        Ok(None)
+    }
+}
+
+impl<B: BufRead> Iterator for MmStream<B> {
+    type Item = Result<(usize, usize, f64)>;
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_entry().transpose()
+    }
+}
+
+/// Parse a MatrixMarket file into COO.
+pub fn read_coo<P: AsRef<Path>>(path: P) -> Result<Coo> {
+    let f = std::fs::File::open(path)?;
+    read_coo_from(BufReader::new(f))
+}
+
+/// Parse MatrixMarket text from any reader — the materializing oracle
+/// path: every stored entry is pushed into one [`Coo`] (file order),
+/// then symmetric files are mirrored. The streaming paths below are
+/// differential-tested against this reader entry for entry.
+pub fn read_coo_from<R: BufRead>(r: R) -> Result<Coo> {
+    let mut lines = r.lines();
+    let h = parse_header(&mut lines)?;
+    let mut coo = Coo::with_capacity(h.nrows, h.ncols, h.nnz);
     let mut seen = 0usize;
     for line in lines {
         let line = line?;
@@ -75,27 +282,169 @@ pub fn read_coo_from<R: BufRead>(r: R) -> Result<Coo> {
             .ok_or_else(|| Error::Parse("short entry line".into()))?
             .parse()
             .map_err(|e| Error::Parse(format!("col: {e}")))?;
-        let v: f64 = match field {
-            "pattern" => 1.0,
+        let v: f64 = match h.field {
+            MmField::Pattern => 1.0,
             _ => it
                 .next()
                 .ok_or_else(|| Error::Parse("missing value".into()))?
                 .parse()
                 .map_err(|e| Error::Parse(format!("val: {e}")))?,
         };
-        if r == 0 || c == 0 || r > nrows || c > ncols {
+        if !v.is_finite() {
+            return Err(Error::Parse(format!("non-finite value {v} at ({r},{c})")));
+        }
+        if r == 0 || c == 0 || r > h.nrows || c > h.ncols {
             return Err(Error::Parse(format!("entry ({r},{c}) out of 1-based range")));
         }
         coo.push(r - 1, c - 1, v);
         seen += 1;
     }
-    if seen != nnz {
-        return Err(Error::Parse(format!("declared nnz {nnz} but read {seen}")));
+    if seen != h.nnz {
+        return Err(Error::Parse(format!("declared nnz {} but read {seen}", h.nnz)));
     }
-    if symmetry == "symmetric" {
+    if h.symmetry == MmSymmetry::Symmetric {
         coo = coo.symmetrize();
     }
     Ok(coo)
+}
+
+/// Parse a MatrixMarket file straight to CSR through the streaming
+/// reader: one pass over the body into exactly
+/// [`MmHeader::expanded_nnz`]-preallocated entry arrays (no line
+/// buffering, no reallocation), then the shared sort/dedup conversion.
+/// Bitwise-identical to `Csr::from_coo(read_coo(path)?)` — the
+/// mirroring and duplicate-summation orders match the oracle's.
+pub fn read_csr_streaming<P: AsRef<Path>>(path: P) -> Result<Csr> {
+    let f = std::fs::File::open(path)?;
+    read_csr_streaming_from(BufReader::new(f))
+}
+
+/// [`read_csr_streaming`] over any reader.
+pub fn read_csr_streaming_from<R: BufRead>(r: R) -> Result<Csr> {
+    let mut s = MmStream::open(r)?;
+    let h = s.header();
+    let mut coo = Coo::with_capacity(h.nrows, h.ncols, h.expanded_nnz());
+    while let Some((r, c, v)) = s.next_entry()? {
+        coo.push(r, c, v);
+    }
+    if h.symmetry == MmSymmetry::Symmetric {
+        coo = coo.symmetrize();
+    }
+    Ok(Csr::from_coo(coo))
+}
+
+/// In-memory bytes of a CSR row band: value + index per nonzero plus
+/// the row-pointer array — the cost [`plan_row_bands`] budgets.
+pub fn band_bytes(rows: usize, nnz: usize) -> usize {
+    nnz * (BYTES_VAL + BYTES_IDX) + (rows + 1) * std::mem::size_of::<usize>()
+}
+
+/// Split `[0, nrows)` into contiguous row bands whose in-memory CSR
+/// cost ([`band_bytes`]) stays within `budget_bytes`, given the
+/// entry-count prefix sum per row (`row_ptr` shape:
+/// `prefix.len() == nrows + 1`). Returns the band boundaries
+/// (`band_ptr[k]..band_ptr[k+1]` is band `k`); bands are never empty,
+/// so a single row heavier than the budget still gets its own band —
+/// the budget bounds the pass, it never splits a row. `budget_bytes ==
+/// 0` therefore degenerates to one band per row (the adversarial
+/// geometry the OOC property suite leans on).
+pub fn plan_row_bands(prefix: &[usize], budget_bytes: usize) -> Vec<usize> {
+    assert!(!prefix.is_empty(), "prefix must have len nrows+1");
+    let nrows = prefix.len() - 1;
+    let mut ptr = vec![0usize];
+    let mut start = 0usize;
+    for r in 0..nrows {
+        let cost = band_bytes(r + 1 - start, prefix[r + 1] - prefix[start]);
+        if cost > budget_bytes && r > start {
+            ptr.push(r);
+            start = r;
+        }
+    }
+    if nrows > 0 {
+        ptr.push(nrows);
+    }
+    ptr
+}
+
+/// One row-band CSR segment of a logical `nrows × ncols` matrix:
+/// `csr` holds rows `row_start .. row_start + csr.nrows`, rebased to
+/// local indices, over the full column space.
+#[derive(Debug, Clone)]
+pub struct CsrBand {
+    pub row_start: usize,
+    pub csr: Csr,
+}
+
+/// Chunked CSR construction: entries are pushed in any order (with
+/// strict `Err`-not-panic range/finiteness checking) and `finish`
+/// emits row-band CSR segments whose in-memory cost each stays within
+/// the byte budget ([`plan_row_bands`]). The concatenated bands are
+/// row-for-row bitwise-identical to one whole-matrix
+/// [`Csr::from_coo`]: the builder performs the *same* global
+/// sort/dedup, then slices — so duplicate summation order is the
+/// oracle's, and a band boundary can never change a value.
+///
+/// This is the band emitter behind the out-of-core path; the
+/// memory-bounded *ingestion* protocol (never holding the whole file)
+/// is [`crate::sparse::ooc::OocCsr`], which re-streams the file per
+/// band instead of buffering entries here.
+pub struct StreamingCsrBuilder {
+    pending: Coo,
+    budget_bytes: usize,
+}
+
+impl StreamingCsrBuilder {
+    /// Builder for an `nrows × ncols` matrix with the given band byte
+    /// budget.
+    pub fn new(nrows: usize, ncols: usize, budget_bytes: usize) -> StreamingCsrBuilder {
+        StreamingCsrBuilder { pending: Coo::new(nrows, ncols), budget_bytes }
+    }
+
+    /// Builder with entry capacity reserved up front (the streaming
+    /// reader knows [`MmHeader::expanded_nnz`] exactly).
+    pub fn with_capacity(
+        nrows: usize,
+        ncols: usize,
+        budget_bytes: usize,
+        cap: usize,
+    ) -> StreamingCsrBuilder {
+        StreamingCsrBuilder { pending: Coo::with_capacity(nrows, ncols, cap), budget_bytes }
+    }
+
+    /// Append one 0-indexed entry. Out-of-range indices and non-finite
+    /// values are typed errors (the corpus path feeds this from
+    /// external files; a debug-assert panic is not an acceptable
+    /// failure mode).
+    pub fn push(&mut self, row: usize, col: usize, val: f64) -> Result<()> {
+        if row >= self.pending.nrows || col >= self.pending.ncols {
+            return Err(Error::Parse(format!(
+                "entry ({row},{col}) out of {}x{}",
+                self.pending.nrows, self.pending.ncols
+            )));
+        }
+        if !val.is_finite() {
+            return Err(Error::Parse(format!("non-finite value {val} at ({row},{col})")));
+        }
+        self.pending.push(row, col, val);
+        Ok(())
+    }
+
+    /// Entries pushed so far (pre-dedup).
+    pub fn nnz(&self) -> usize {
+        self.pending.nnz()
+    }
+
+    /// Sort, dedup, and emit the row-band segments.
+    pub fn finish(self) -> Result<Vec<CsrBand>> {
+        let budget = self.budget_bytes;
+        let csr = Csr::from_coo(self.pending);
+        let band_ptr = plan_row_bands(&csr.row_ptr, budget);
+        let mut bands = Vec::with_capacity(band_ptr.len().saturating_sub(1));
+        for w in band_ptr.windows(2) {
+            bands.push(CsrBand { row_start: w[0], csr: csr.slice_rows(w[0], w[1]) });
+        }
+        Ok(bands)
+    }
 }
 
 /// Write a CSR matrix as `%%MatrixMarket matrix coordinate real general`.
@@ -157,6 +506,10 @@ mod tests {
         let coo = read_coo(&path).unwrap();
         let csr2 = Csr::from_coo(coo);
         assert_eq!(csr.to_dense(), csr2.to_dense());
+        // the streaming path lands on the identical CSR
+        let csr3 = read_csr_streaming(&path).unwrap();
+        assert_eq!(csr2.to_dense(), csr3.to_dense());
+        assert_eq!(csr2.vals, csr3.vals);
     }
 
     #[test]
@@ -165,23 +518,129 @@ mod tests {
         let coo = read_coo_from(Cursor::new(text)).unwrap();
         let d = Csr::from_coo(coo).to_dense();
         assert_eq!(d, vec![0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+        let sd = read_csr_streaming_from(Cursor::new(text)).unwrap().to_dense();
+        assert_eq!(sd, d);
+    }
+
+    #[test]
+    fn stream_yields_stored_entries_in_file_order() {
+        let text = "%%MatrixMarket matrix coordinate real general\n3 4 3\n2 1 5.0\n1 4 -1.0\n3 2 2.5\n";
+        let mut s = MmStream::open(Cursor::new(text)).unwrap();
+        let h = s.header();
+        assert_eq!((h.nrows, h.ncols, h.nnz), (3, 4, 3));
+        assert_eq!(h.field, MmField::Real);
+        assert_eq!(h.symmetry, MmSymmetry::General);
+        assert_eq!(h.expanded_nnz(), 3);
+        let got: Vec<_> = (&mut s).collect::<Result<Vec<_>>>().unwrap();
+        assert_eq!(got, vec![(1, 0, 5.0), (0, 3, -1.0), (2, 1, 2.5)]);
+        assert_eq!(s.entries_read(), 3);
+        // fused: further pulls stay None
+        assert!(s.next_entry().unwrap().is_none());
     }
 
     #[test]
     fn rejects_bad_header() {
         let text = "%%MatrixMarket matrix array real general\n1 1\n1.0\n";
         assert!(read_coo_from(Cursor::new(text)).is_err());
+        assert!(MmStream::open(Cursor::new(text)).is_err());
     }
 
     #[test]
     fn rejects_wrong_count() {
         let text = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
         assert!(read_coo_from(Cursor::new(text)).is_err());
+        assert!(read_csr_streaming_from(Cursor::new(text)).is_err());
     }
 
     #[test]
     fn rejects_zero_based_entries() {
         let text = "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n";
         assert!(read_coo_from(Cursor::new(text)).is_err());
+        assert!(read_csr_streaming_from(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn rejects_nnz_overflow_and_nonsquare_symmetric() {
+        let big = format!(
+            "%%MatrixMarket matrix coordinate real general\n10 10 {}\n",
+            u32::MAX as u64 + 1
+        );
+        assert!(matches!(read_coo_from(Cursor::new(big)), Err(Error::Parse(_))));
+        // symmetric doubling overflows the 32-bit entry budget
+        let half = format!(
+            "%%MatrixMarket matrix coordinate real symmetric\n10 10 {}\n",
+            u32::MAX / 2 + 1
+        );
+        assert!(matches!(read_coo_from(Cursor::new(half)), Err(Error::Parse(_))));
+        let nonsq = "%%MatrixMarket matrix coordinate real symmetric\n2 3 1\n1 1 1.0\n";
+        assert!(matches!(read_coo_from(Cursor::new(nonsq)), Err(Error::Parse(_))));
+    }
+
+    #[test]
+    fn rejects_non_finite_values() {
+        for bad in ["inf", "-inf", "nan"] {
+            let text =
+                format!("%%MatrixMarket matrix coordinate real general\n2 2 1\n1 2 {bad}\n");
+            assert!(matches!(read_coo_from(Cursor::new(text.clone())), Err(Error::Parse(_))));
+            assert!(matches!(
+                read_csr_streaming_from(Cursor::new(text)),
+                Err(Error::Parse(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn plan_row_bands_budgets() {
+        // 4 rows with 2 entries each
+        let prefix = [0usize, 2, 4, 6, 8];
+        // unbounded: one band
+        assert_eq!(plan_row_bands(&prefix, usize::MAX), vec![0, 4]);
+        // zero budget: one band per row
+        assert_eq!(plan_row_bands(&prefix, 0), vec![0, 1, 2, 3, 4]);
+        // mid budget: rows pair up (2 rows ≈ 2·2·12 + 3·8 = 72 bytes)
+        let two_rows = band_bytes(2, 4);
+        let p = plan_row_bands(&prefix, two_rows);
+        assert_eq!(p, vec![0, 2, 4]);
+        // empty matrix: no bands
+        assert_eq!(plan_row_bands(&[0], 64), vec![0]);
+    }
+
+    #[test]
+    fn builder_bands_concatenate_to_from_coo() {
+        // duplicates with magnitude skew: summation order must be the
+        // oracle's (see Coo::sorted_dedup) even across band splits
+        let mut b = StreamingCsrBuilder::new(4, 4, 0);
+        let entries: &[(usize, usize, f64)] = &[
+            (2, 1, 1e16),
+            (0, 0, 2.0),
+            (2, 1, 1.0),
+            (3, 3, -4.0),
+            (2, 1, -1e16),
+            (1, 2, 7.0),
+        ];
+        let mut coo = Coo::new(4, 4);
+        for &(r, c, v) in entries {
+            b.push(r, c, v).unwrap();
+            coo.push(r, c, v);
+        }
+        let whole = Csr::from_coo(coo);
+        let bands = b.finish().unwrap();
+        assert_eq!(bands.len(), 4, "zero budget → one band per row");
+        for band in &bands {
+            let r = band.row_start;
+            assert_eq!(band.csr.nrows, 1);
+            assert_eq!(band.csr.row_cols(0), whole.row_cols(r));
+            assert_eq!(band.csr.row_vals(0), whole.row_vals(r), "row {r} bitwise");
+        }
+    }
+
+    #[test]
+    fn builder_rejects_bad_pushes() {
+        let mut b = StreamingCsrBuilder::new(2, 2, usize::MAX);
+        assert!(b.push(2, 0, 1.0).is_err());
+        assert!(b.push(0, 5, 1.0).is_err());
+        assert!(b.push(0, 0, f64::NAN).is_err());
+        assert!(b.push(1, 1, 3.0).is_ok());
+        assert_eq!(b.nnz(), 1);
     }
 }

@@ -13,6 +13,7 @@ mod csc;
 mod csr;
 mod ell;
 pub mod mm_io;
+pub mod ooc;
 pub mod reorder;
 
 pub use bsr::Bsr;
@@ -21,6 +22,7 @@ pub use csb::{Csb, CsbBlock};
 pub use csc::Csc;
 pub use csr::Csr;
 pub use ell::Ell;
+pub use ooc::{OocCsr, OocSpmm};
 pub use reorder::Reordering;
 
 /// The storage formats the engine can route between.

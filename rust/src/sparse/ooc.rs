@@ -1,0 +1,359 @@
+//! Out-of-core CSR backing: matrices larger than RAM, planned and
+//! executed **band by band** (ROADMAP item 4).
+//!
+//! The template is the PB kernel's bounded-pass spill machinery
+//! (`spmm/pb_kernel.rs`): there, a byte budget caps the spill arena
+//! and the kernel makes as many passes as the budget demands; here, a
+//! byte budget caps how much of `A` is resident at once and the
+//! executor makes one pass per row band. Two source shapes:
+//!
+//! * **File-backed** ([`OocCsr::open`]): a MatrixMarket file is
+//!   streamed twice through [`MmStream`] — pass 1 counts entries per
+//!   row (O(nrows) memory) and plans the bands
+//!   ([`crate::sparse::mm_io::plan_row_bands`]); pass 2 happens lazily
+//!   *per band* at execute time, re-streaming the file and keeping
+//!   only that band's entries. Peak memory is one band (≤ budget,
+//!   unless a single row exceeds it) plus the O(nrows) plan.
+//! * **In-memory** ([`OocCsr::from_csr`]): bands are row slices of a
+//!   resident CSR ([`Csr::slice_rows`]) — the differential-test
+//!   configuration, and the cheap path when a corpus matrix happens to
+//!   fit.
+//!
+//! [`OocSpmm`] drives SpMM over the bands: each band runs through a
+//! regular [`CsrSpmm`] — the same nnz-balanced [`Schedule`], the same
+//! worker pool, the same micro-kernels — into a recycled band-sized
+//! `C` buffer that is then copied into place. Because a band's rows
+//! are byte-identical slices of the whole matrix's rows and every `C`
+//! row is produced by exactly one band with the identical
+//! per-row/per-tile accumulation order, the result is **bitwise
+//! identical** to whole-matrix [`CsrSpmm`] at every thread count,
+//! tile width, and band budget (`tests/prop_ooc.rs` pins this across
+//! the generator suite).
+
+use std::io::BufReader;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::sparse::mm_io::{plan_row_bands, MmStream, MmSymmetry};
+use crate::sparse::{Coo, Csr};
+use crate::spmm::{check_dims, check_schedule, CsrSpmm, DenseMatrix, Impl, Schedule, Spmm};
+
+enum OocSource {
+    /// Re-streamable MatrixMarket file (pass-2 source).
+    File(PathBuf),
+    /// Resident matrix; bands are row slices.
+    Mem(Csr),
+}
+
+/// A CSR matrix backed out of core: shape, per-row entry counts, and a
+/// band plan are resident; row data is materialized one band at a
+/// time.
+pub struct OocCsr {
+    nrows: usize,
+    ncols: usize,
+    /// Stored entries after symmetric mirroring. Exact for in-memory
+    /// sources; for file sources this is the pre-dedup count (an upper
+    /// bound when the file stores duplicate coordinates — SuiteSparse
+    /// exports do not).
+    nnz: usize,
+    /// Entry-count prefix per row (`row_ptr` shape), from pass 1.
+    row_prefix: Vec<usize>,
+    /// Band boundaries over rows (see
+    /// [`crate::sparse::mm_io::plan_row_bands`]).
+    band_ptr: Vec<usize>,
+    budget_bytes: usize,
+    source: OocSource,
+}
+
+impl OocCsr {
+    /// Open a MatrixMarket file out of core: stream it once to count
+    /// entries per row and plan row bands under `budget_bytes`. No row
+    /// data is retained.
+    pub fn open<P: AsRef<Path>>(path: P, budget_bytes: usize) -> Result<OocCsr> {
+        let path = path.as_ref().to_path_buf();
+        let mut s = MmStream::open(BufReader::new(std::fs::File::open(&path)?))?;
+        let h = s.header();
+        let mut counts = vec![0usize; h.nrows];
+        let mut n = 0usize;
+        while let Some((r, c, _)) = s.next_entry()? {
+            counts[r] += 1;
+            n += 1;
+            if h.symmetry == MmSymmetry::Symmetric && r != c {
+                counts[c] += 1;
+                n += 1;
+            }
+        }
+        let mut row_prefix = Vec::with_capacity(h.nrows + 1);
+        row_prefix.push(0usize);
+        let mut acc = 0usize;
+        for &k in &counts {
+            acc += k;
+            row_prefix.push(acc);
+        }
+        let band_ptr = plan_row_bands(&row_prefix, budget_bytes);
+        Ok(OocCsr {
+            nrows: h.nrows,
+            ncols: h.ncols,
+            nnz: n,
+            row_prefix,
+            band_ptr,
+            budget_bytes,
+            source: OocSource::File(path),
+        })
+    }
+
+    /// Wrap a resident CSR with a band plan — the configuration the
+    /// differential suite runs, since it makes "out of core" purely an
+    /// execution-strategy change.
+    pub fn from_csr(csr: Csr, budget_bytes: usize) -> OocCsr {
+        let band_ptr = plan_row_bands(&csr.row_ptr, budget_bytes);
+        OocCsr {
+            nrows: csr.nrows,
+            ncols: csr.ncols,
+            nnz: csr.nnz(),
+            row_prefix: csr.row_ptr.clone(),
+            band_ptr,
+            budget_bytes,
+            source: OocSource::Mem(csr),
+        }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Stored entries (see the field note on duplicates).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// The band byte budget this plan was built for.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Number of row bands in the plan.
+    pub fn n_bands(&self) -> usize {
+        self.band_ptr.len().saturating_sub(1)
+    }
+
+    /// Rows covered by band `k`.
+    pub fn band_rows(&self, k: usize) -> Range<usize> {
+        self.band_ptr[k]..self.band_ptr[k + 1]
+    }
+
+    /// Stored entries in band `k` (pass-1 counts).
+    pub fn band_nnz(&self, k: usize) -> usize {
+        let r = self.band_rows(k);
+        self.row_prefix[r.end] - self.row_prefix[r.start]
+    }
+
+    /// Entry-count prefix per row — `row_ptr`-shaped, so it feeds
+    /// [`Schedule::nnz_balanced`] directly.
+    pub fn row_prefix(&self) -> &[usize] {
+        &self.row_prefix
+    }
+
+    /// Materialize band `k` as a standalone CSR segment (rows rebased,
+    /// full column space). File-backed sources re-stream the file and
+    /// keep only this band's entries; the mirror pass replays
+    /// [`Coo::symmetrize`]'s ordering (all stored entries first, then
+    /// mirrors, each in file order), so duplicate summation is
+    /// bitwise-identical to the whole-matrix read.
+    pub fn load_band(&self, k: usize) -> Result<Csr> {
+        let rows = self.band_rows(k);
+        match &self.source {
+            OocSource::Mem(csr) => Ok(csr.slice_rows(rows.start, rows.end)),
+            OocSource::File(path) => {
+                let mut s = MmStream::open(BufReader::new(std::fs::File::open(path)?))?;
+                let h = s.header();
+                if h.nrows != self.nrows || h.ncols != self.ncols {
+                    return Err(Error::InvalidStructure(format!(
+                        "{} changed shape under OocCsr: planned {}x{}, found {}x{}",
+                        path.display(),
+                        self.nrows,
+                        self.ncols,
+                        h.nrows,
+                        h.ncols
+                    )));
+                }
+                let cap = self.band_nnz(k);
+                let mut coo = Coo::with_capacity(rows.len(), self.ncols, cap);
+                let mut mirrors: Vec<(usize, usize, f64)> = Vec::new();
+                while let Some((r, c, v)) = s.next_entry()? {
+                    if rows.contains(&r) {
+                        coo.push(r - rows.start, c, v);
+                    }
+                    if h.symmetry == MmSymmetry::Symmetric && r != c && rows.contains(&c) {
+                        mirrors.push((c - rows.start, r, v));
+                    }
+                }
+                for (r, c, v) in mirrors {
+                    coo.push(r, c, v);
+                }
+                Ok(Csr::from_coo(coo))
+            }
+        }
+    }
+}
+
+/// Band-by-band SpMM over an [`OocCsr`]. Routes as [`Impl::Csr`] —
+/// out-of-core is an execution strategy for the CSR kernel, not a
+/// storage format — and is bitwise-identical to whole-matrix
+/// [`CsrSpmm`] (module docs explain why).
+pub struct OocSpmm {
+    ooc: OocCsr,
+    threads: usize,
+    /// Recycled band-`C` buffer — the bounded-pass arena, reused
+    /// across bands and executions exactly like the PB kernel's spill
+    /// scratch (`Mutex` + `mem::take`, poison-tolerant: a panicking
+    /// worker on a previous execution only loses the recycled
+    /// allocation, never correctness).
+    scratch: Mutex<Vec<f64>>,
+}
+
+impl OocSpmm {
+    /// Wrap a planned out-of-core matrix; `threads` workers per band.
+    pub fn new(ooc: OocCsr, threads: usize) -> OocSpmm {
+        OocSpmm { ooc, threads: threads.max(1), scratch: Mutex::new(Vec::new()) }
+    }
+
+    /// The underlying out-of-core plan.
+    pub fn backing(&self) -> &OocCsr {
+        &self.ooc
+    }
+}
+
+impl Spmm for OocSpmm {
+    fn id(&self) -> Impl {
+        Impl::Csr
+    }
+    fn nrows(&self) -> usize {
+        self.ooc.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ooc.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.ooc.nnz
+    }
+
+    fn execute(&self, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        self.execute_with(b, c, &self.plan(None))
+    }
+
+    /// The whole-matrix schedule shape: nnz-balanced over the pass-1
+    /// row counts. Only its tile width reaches the band executors —
+    /// each band re-plans its own partitions over the band's rows, the
+    /// whole point of band-local execution.
+    fn plan(&self, tile: Option<usize>) -> Schedule {
+        Schedule::nnz_balanced(&self.ooc.row_prefix, self.threads).with_tile(tile)
+    }
+
+    fn execute_with(&self, b: &DenseMatrix, c: &mut DenseMatrix, s: &Schedule) -> Result<()> {
+        check_dims(self.ooc.nrows, self.ooc.ncols, b, c)?;
+        check_schedule(self.ooc.nrows, s)?;
+        let d = b.ncols;
+        let mut cbuf =
+            std::mem::take(&mut *self.scratch.lock().unwrap_or_else(|e| e.into_inner()));
+        for k in 0..self.ooc.n_bands() {
+            let rows = self.ooc.band_rows(k);
+            let band = self.ooc.load_band(k)?;
+            let kern = CsrSpmm::new(band, self.threads);
+            let band_schedule = kern.plan(s.tile);
+            cbuf.clear();
+            cbuf.resize(rows.len() * d, 0.0);
+            let mut c_band = DenseMatrix::from_vec(rows.len(), d, std::mem::take(&mut cbuf));
+            kern.execute_with(b, &mut c_band, &band_schedule)?;
+            c.data[rows.start * d..rows.end * d].copy_from_slice(&c_band.data);
+            cbuf = c_band.data;
+        }
+        *self.scratch.lock().unwrap_or_else(|e| e.into_inner()) = cbuf;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, Prng};
+    use crate::spmm::reference_spmm;
+
+    fn band_counts(ooc: &OocCsr) -> Vec<usize> {
+        (0..ooc.n_bands()).map(|k| ooc.band_rows(k).len()).collect()
+    }
+
+    #[test]
+    fn from_csr_band_plan_covers_all_rows() {
+        let a = erdos_renyi(60, 60, 4.0, &mut Prng::new(0x00c1));
+        for budget in [0usize, 256, 4096, usize::MAX] {
+            let ooc = OocCsr::from_csr(a.clone(), budget);
+            assert_eq!(band_counts(&ooc).iter().sum::<usize>(), 60, "budget={budget}");
+            let total: usize = (0..ooc.n_bands()).map(|k| ooc.band_nnz(k)).sum();
+            assert_eq!(total, a.nnz());
+        }
+        assert_eq!(OocCsr::from_csr(a.clone(), usize::MAX).n_bands(), 1);
+        assert_eq!(OocCsr::from_csr(a, 0).n_bands(), 60);
+    }
+
+    #[test]
+    fn bands_reassemble_the_matrix() {
+        let a = erdos_renyi(50, 50, 3.0, &mut Prng::new(0x00c2));
+        let ooc = OocCsr::from_csr(a.clone(), 300);
+        assert!(ooc.n_bands() > 1, "budget must force multiple bands");
+        for k in 0..ooc.n_bands() {
+            let rows = ooc.band_rows(k);
+            let band = ooc.load_band(k).unwrap();
+            band.validate().unwrap();
+            for (i, r) in rows.enumerate() {
+                assert_eq!(band.row_cols(i), a.row_cols(r));
+                assert_eq!(band.row_vals(i), a.row_vals(r));
+            }
+        }
+    }
+
+    #[test]
+    fn ooc_execute_matches_csr_bitwise_mem_source() {
+        let mut rng = Prng::new(0x00c3);
+        let a = erdos_renyi(120, 120, 5.0, &mut rng);
+        let d = 7;
+        let b = DenseMatrix::random(120, d, &mut rng);
+        let want = reference_spmm(&a, &b);
+        let csr = CsrSpmm::new(a.clone(), 2);
+        let mut c_csr = DenseMatrix::zeros(120, d);
+        csr.execute(&b, &mut c_csr).unwrap();
+        for budget in [0usize, 1024, usize::MAX] {
+            let ooc = OocSpmm::new(OocCsr::from_csr(a.clone(), budget), 2);
+            // stale C: every row must be overwritten by exactly one band
+            let mut c = DenseMatrix::from_vec(120, d, vec![9.0; 120 * d]);
+            ooc.execute(&b, &mut c).unwrap();
+            assert!(c.max_abs_diff(&want) < 1e-12);
+            assert_eq!(c.data, c_csr.data, "budget={budget} not bitwise");
+        }
+    }
+
+    #[test]
+    fn dimension_errors_propagate() {
+        let a = erdos_renyi(10, 10, 2.0, &mut Prng::new(0x00c4));
+        let k = OocSpmm::new(OocCsr::from_csr(a, 128), 1);
+        let b = DenseMatrix::zeros(11, 3);
+        let mut c = DenseMatrix::zeros(10, 3);
+        assert!(k.execute(&b, &mut c).is_err());
+        let b = DenseMatrix::zeros(10, 3);
+        let foreign = Schedule::uniform(11, 1);
+        assert!(k.execute_with(&b, &mut c, &foreign).is_err());
+    }
+
+    #[test]
+    fn open_missing_file_is_io_error() {
+        let p = std::env::temp_dir().join("spmm_roofline_ooc_missing.mtx");
+        let _ = std::fs::remove_file(&p);
+        assert!(matches!(OocCsr::open(&p, 1024), Err(Error::Io(_))));
+    }
+}

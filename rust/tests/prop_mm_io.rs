@@ -1,0 +1,288 @@
+//! Differential wall around the MatrixMarket readers: the streaming
+//! path ([`MmStream`] / `read_csr_streaming` / `StreamingCsrBuilder`)
+//! must match the materializing oracle (`read_coo_from`) **entry for
+//! entry and bit for bit** on a fixture corpus covering every
+//! supported banner, and every malformed input must come back as a
+//! typed `Err` — never a panic — from both paths.
+
+use std::io::{BufReader, Cursor};
+use std::path::PathBuf;
+
+use spmm_roofline::error::Error;
+use spmm_roofline::gen::{
+    banded, chung_lu, erdos_renyi, mesh2d, rmat, ChungLuParams, MeshKind, Prng,
+};
+use spmm_roofline::sparse::mm_io::{
+    band_bytes, read_coo, read_coo_from, read_csr_streaming, read_csr_streaming_from,
+    write_csr, write_csr_symmetric, MmStream, MmSymmetry, StreamingCsrBuilder,
+};
+use spmm_roofline::sparse::{Coo, Csr};
+use spmm_roofline::testutil::check_default;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+/// Every `.mtx` fixture, sorted for deterministic order.
+fn fixture_paths() -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = std::fs::read_dir(fixture_dir())
+        .expect("tests/fixtures exists")
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| p.extension().map(|e| e == "mtx").unwrap_or(false))
+        .collect();
+    v.sort();
+    assert_eq!(v.len(), 5, "fixture corpus: {v:?}");
+    v
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("spmm_roofline_prop_mm_io");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir.join(format!("{tag}.mtx"))
+}
+
+/// One matrix per structural regime (the shared generator suite).
+fn generator_suite(rng: &mut Prng) -> Vec<(&'static str, Csr)> {
+    vec![
+        ("banded", banded(180, 6, 0.4, rng)),
+        ("blocked", mesh2d(14, MeshKind::Triangular, 0.9, rng)),
+        ("er", erdos_renyi(200, 200, 6.0, rng)),
+        ("rmat", rmat(8, 6.0, 0.57, 0.19, 0.19, rng)),
+        (
+            "scalefree",
+            chung_lu(ChungLuParams { n: 250, alpha: 2.2, avg_deg: 8.0, k_min: 2.0 }, rng),
+        ),
+    ]
+}
+
+/// Keep only the lower triangle (diagonal included) of `a`, then
+/// mirror — a numerically symmetric matrix for the symmetric-banner
+/// round-trip.
+fn symmetrized(a: &Csr) -> Csr {
+    let mut lt = Coo::new(a.nrows, a.nrows);
+    for r in 0..a.nrows {
+        for (c, v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+            if (*c as usize) <= r {
+                lt.push(r, *c as usize, *v);
+            }
+        }
+    }
+    Csr::from_coo(lt.symmetrize())
+}
+
+#[test]
+fn fixtures_stream_matches_oracle_entry_for_entry() {
+    for path in fixture_paths() {
+        let name = path.display();
+        let oracle = read_coo(&path).unwrap_or_else(|e| panic!("{name}: oracle: {e}"));
+        let f = std::fs::File::open(&path).expect("open fixture");
+        let mut s = MmStream::open(BufReader::new(f))
+            .unwrap_or_else(|e| panic!("{name}: stream open: {e}"));
+        let h = s.header();
+        let mut coo = Coo::with_capacity(h.nrows, h.ncols, h.expanded_nnz());
+        while let Some((r, c, v)) =
+            s.next_entry().unwrap_or_else(|e| panic!("{name}: stream: {e}"))
+        {
+            coo.push(r, c, v);
+        }
+        assert_eq!(s.entries_read(), h.nnz, "{name}: declared count honoured");
+        if h.symmetry == MmSymmetry::Symmetric {
+            coo = coo.symmetrize();
+        }
+        // pre-dedup triple arrays identical: same entries, same order
+        assert_eq!(coo.rows, oracle.rows, "{name}: row stream");
+        assert_eq!(coo.cols, oracle.cols, "{name}: col stream");
+        assert_eq!(coo.vals, oracle.vals, "{name}: val stream (bitwise)");
+        assert_eq!((coo.nrows, coo.ncols), (oracle.nrows, oracle.ncols), "{name}: shape");
+    }
+}
+
+#[test]
+fn fixtures_streaming_csr_is_bitwise_oracle() {
+    for path in fixture_paths() {
+        let name = path.display();
+        let oracle = Csr::from_coo(read_coo(&path).expect("oracle read"));
+        let streamed = read_csr_streaming(&path).expect("streaming read");
+        assert_eq!(streamed, oracle, "{name}: streaming CSR ≠ oracle CSR");
+    }
+}
+
+#[test]
+fn fixtures_builder_bands_concatenate_to_oracle() {
+    for path in fixture_paths() {
+        let name = path.display();
+        let oracle_coo = read_coo(&path).expect("oracle read");
+        let whole = Csr::from_coo(oracle_coo.clone());
+        let budgets =
+            [0usize, band_bytes(whole.nrows, whole.nnz()) / 2, usize::MAX];
+        for budget in budgets {
+            let mut b = StreamingCsrBuilder::with_capacity(
+                whole.nrows,
+                whole.ncols,
+                budget,
+                oracle_coo.nnz(),
+            );
+            for ((&r, &c), &v) in
+                oracle_coo.rows.iter().zip(&oracle_coo.cols).zip(&oracle_coo.vals)
+            {
+                b.push(r as usize, c as usize, v).expect("in-range push");
+            }
+            let bands = b.finish().expect("finish");
+            let mut covered = 0usize;
+            for band in &bands {
+                assert_eq!(band.row_start, covered, "{name}: bands contiguous");
+                assert!(band.csr.nrows > 0, "{name}: no empty bands");
+                for lr in 0..band.csr.nrows {
+                    let gr = band.row_start + lr;
+                    assert_eq!(band.csr.row_cols(lr), whole.row_cols(gr), "{name} row {gr}");
+                    assert_eq!(
+                        band.csr.row_vals(lr),
+                        whole.row_vals(gr),
+                        "{name} row {gr} bitwise (budget {budget})"
+                    );
+                }
+                covered += band.csr.nrows;
+            }
+            assert_eq!(covered, whole.nrows, "{name}: bands cover all rows");
+        }
+    }
+}
+
+#[test]
+fn generators_roundtrip_general_banner_bitwise() {
+    let mut rng = Prng::new(0x310);
+    for (name, a) in generator_suite(&mut rng) {
+        let path = tmp_path(&format!("gen_{name}"));
+        write_csr(&path, &a).expect("write");
+        let oracle = Csr::from_coo(read_coo(&path).expect("oracle read"));
+        let streamed = read_csr_streaming(&path).expect("streaming read");
+        assert_eq!(oracle, a, "{name}: write → oracle read must round-trip bitwise");
+        assert_eq!(streamed, a, "{name}: write → streaming read must round-trip bitwise");
+    }
+}
+
+#[test]
+fn generators_roundtrip_symmetric_banner_bitwise() {
+    let mut rng = Prng::new(0x311);
+    for (name, a) in generator_suite(&mut rng) {
+        let sym = symmetrized(&a);
+        let path = tmp_path(&format!("sym_{name}"));
+        write_csr_symmetric(&path, &sym).expect("write symmetric");
+        let oracle = Csr::from_coo(read_coo(&path).expect("oracle read"));
+        let streamed = read_csr_streaming(&path).expect("streaming read");
+        assert_eq!(oracle, sym, "{name}: symmetric write → oracle read round-trip");
+        assert_eq!(streamed, oracle, "{name}: streaming ≠ oracle on symmetric file");
+    }
+}
+
+#[test]
+fn malformed_inputs_are_typed_errors_on_both_paths() {
+    let overflow = format!(
+        "%%MatrixMarket matrix coordinate real general\n4 4 {}\n",
+        u32::MAX as u64 + 1
+    );
+    let sym_overflow = format!(
+        "%%MatrixMarket matrix coordinate real symmetric\n4 4 {}\n",
+        u32::MAX / 2 + 1
+    );
+    let huge_dim = format!(
+        "%%MatrixMarket matrix coordinate real general\n{} 4 1\n1 1 1.0\n",
+        u32::MAX as u64 + 1
+    );
+    let cases: Vec<(&str, String)> = vec![
+        ("empty file", String::new()),
+        ("not a banner", "3 3 1\n1 1 1.0\n".into()),
+        ("array banner", "%%MatrixMarket matrix array real general\n2 2\n1.0\n".into()),
+        ("bad field", "%%MatrixMarket matrix coordinate complex general\n2 2 1\n1 1 1.0 0.0\n".into()),
+        ("bad symmetry", "%%MatrixMarket matrix coordinate real hermitian\n2 2 1\n1 1 1.0\n".into()),
+        ("missing size line", "%%MatrixMarket matrix coordinate real general\n% only comments\n".into()),
+        ("short size line", "%%MatrixMarket matrix coordinate real general\n2 2\n1 1 1.0\n".into()),
+        ("non-numeric size", "%%MatrixMarket matrix coordinate real general\n2 2 x\n1 1 1.0\n".into()),
+        ("truncated body", "%%MatrixMarket matrix coordinate real general\n3 3 3\n1 1 1.0\n".into()),
+        ("extra entries", "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0\n2 2 2.0\n".into()),
+        ("zero-based row", "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n".into()),
+        ("zero-based col", "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 0 1.0\n".into()),
+        ("row past nrows", "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n".into()),
+        ("col past ncols", "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 3 1.0\n".into()),
+        ("missing value", "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1\n".into()),
+        ("non-numeric value", "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 abc\n".into()),
+        ("inf value", "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 inf\n".into()),
+        ("neg-inf value", "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 -inf\n".into()),
+        ("nan value", "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 nan\n".into()),
+        ("non-numeric row", "%%MatrixMarket matrix coordinate real general\n2 2 1\nx 1 1.0\n".into()),
+        ("nnz overflows u32", overflow),
+        ("symmetric nnz overflows after mirroring", sym_overflow),
+        ("dimension overflows u32", huge_dim),
+        ("non-square symmetric", "%%MatrixMarket matrix coordinate real symmetric\n2 3 1\n1 1 1.0\n".into()),
+    ];
+    for (label, text) in &cases {
+        match read_coo_from(Cursor::new(text.clone())) {
+            Err(Error::Parse(msg)) => assert!(!msg.is_empty(), "{label}: empty oracle message"),
+            Err(e) => panic!("{label}: oracle returned non-Parse error {e}"),
+            Ok(_) => panic!("{label}: oracle accepted malformed input"),
+        }
+        match read_csr_streaming_from(Cursor::new(text.clone())) {
+            Err(Error::Parse(msg)) => {
+                assert!(!msg.is_empty(), "{label}: empty streaming message")
+            }
+            Err(e) => panic!("{label}: streaming returned non-Parse error {e}"),
+            Ok(_) => panic!("{label}: streaming accepted malformed input"),
+        }
+    }
+}
+
+#[test]
+fn stream_fuses_after_error() {
+    let text = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n9 9 1.0\n";
+    let mut s = MmStream::open(Cursor::new(text)).unwrap();
+    assert!(s.next_entry().unwrap().is_some());
+    assert!(s.next_entry().is_err(), "out-of-range entry errors");
+    // fused: no resurrection after the error
+    assert!(s.next_entry().unwrap().is_none());
+    assert!(s.next().is_none());
+}
+
+#[test]
+fn prop_write_read_roundtrips_and_bands_match() {
+    check_default(0x312, |rng| {
+        let nr = 4 + rng.below_usize(60);
+        let nc = 4 + rng.below_usize(60);
+        let a = erdos_renyi(nr, nc, rng.range_f64(0.5, 6.0), rng);
+        let path = tmp_path(&format!("prop_{nr}_{nc}_{}", rng.below_usize(1 << 30)));
+        write_csr(&path, &a).map_err(|e| format!("write: {e}"))?;
+        let oracle = Csr::from_coo(read_coo(&path).map_err(|e| format!("oracle: {e}"))?);
+        let streamed = read_csr_streaming(&path).map_err(|e| format!("stream: {e}"))?;
+        if oracle != a {
+            return Err("oracle read ≠ written matrix".into());
+        }
+        if streamed != oracle {
+            return Err("streaming read ≠ oracle read".into());
+        }
+        // random budget: bands must still concatenate to the whole
+        let budget = rng.below_usize(band_bytes(a.nrows, a.nnz()) + 1);
+        let mut b = StreamingCsrBuilder::new(a.nrows, a.ncols, budget);
+        for r in 0..a.nrows {
+            for (c, v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+                b.push(r, *c as usize, *v).map_err(|e| format!("push: {e}"))?;
+            }
+        }
+        let bands = b.finish().map_err(|e| format!("finish: {e}"))?;
+        let mut covered = 0usize;
+        for band in &bands {
+            for lr in 0..band.csr.nrows {
+                let gr = band.row_start + lr;
+                if band.csr.row_vals(lr) != a.row_vals(gr)
+                    || band.csr.row_cols(lr) != a.row_cols(gr)
+                {
+                    return Err(format!("band row {gr} differs (budget {budget})"));
+                }
+            }
+            covered += band.csr.nrows;
+        }
+        if covered != a.nrows {
+            return Err(format!("bands cover {covered} of {} rows", a.nrows));
+        }
+        let _ = std::fs::remove_file(&path);
+        Ok(())
+    });
+}

@@ -1,0 +1,244 @@
+//! Differential wall around out-of-core execution: band-by-band SpMM
+//! ([`OocSpmm`]) must be **bitwise identical** to whole-matrix
+//! [`CsrSpmm`] across the structural generator suite, every dense
+//! width, tile width, thread count, and band budget — including the
+//! adversarial geometries (single-row bands, empty rows, hub rows, a
+//! file-backed symmetric source whose mirror ordering must replay the
+//! oracle's duplicate-summation order).
+
+use std::path::PathBuf;
+
+use spmm_roofline::gen::{
+    banded, chung_lu, erdos_renyi, mesh2d, rmat, ChungLuParams, MeshKind, Prng,
+};
+use spmm_roofline::sparse::mm_io::{band_bytes, write_csr, write_csr_symmetric};
+use spmm_roofline::sparse::{Coo, Csr, OocCsr, OocSpmm};
+use spmm_roofline::spmm::{CsrSpmm, DenseMatrix, Spmm};
+use spmm_roofline::testutil::{check_default, dense_spmm};
+
+/// One matrix per structural regime (the shared generator suite).
+fn generator_suite(rng: &mut Prng) -> Vec<(&'static str, Csr)> {
+    vec![
+        ("banded", banded(180, 6, 0.4, rng)),
+        ("blocked", mesh2d(14, MeshKind::Triangular, 0.9, rng)),
+        ("er", erdos_renyi(200, 200, 6.0, rng)),
+        ("rmat", rmat(8, 6.0, 0.57, 0.19, 0.19, rng)),
+        (
+            "scalefree",
+            chung_lu(ChungLuParams { n: 250, alpha: 2.2, avg_deg: 8.0, k_min: 2.0 }, rng),
+        ),
+    ]
+}
+
+/// Budgets forcing one band, a few bands, and one band per row.
+fn budget_ladder(a: &Csr) -> [usize; 3] {
+    [usize::MAX, band_bytes(a.nrows, a.nnz()) / 2 + 1, 0]
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("spmm_roofline_prop_ooc");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir.join(format!("{tag}.mtx"))
+}
+
+/// Whole-matrix CSR result for (a, b, dt, threads) with a stale-C
+/// prefill.
+fn csr_result(a: &Csr, b: &DenseMatrix, dt: usize, threads: usize) -> Vec<f64> {
+    let kern = CsrSpmm::new(a.clone(), threads);
+    let s = kern.plan(Some(dt));
+    let mut c = DenseMatrix::from_vec(a.nrows, b.ncols, vec![13.0; a.nrows * b.ncols]);
+    kern.execute_with(b, &mut c, &s).expect("CSR execute");
+    c.data
+}
+
+/// Band-by-band result for the same cell, asserting the expected band
+/// structure actually materialized.
+fn ooc_result(
+    ooc: OocCsr,
+    b: &DenseMatrix,
+    dt: usize,
+    threads: usize,
+    min_bands: usize,
+) -> Vec<f64> {
+    let nrows = ooc.nrows();
+    assert!(ooc.n_bands() >= min_bands, "plan has {} bands, wanted ≥{min_bands}", ooc.n_bands());
+    let kern = OocSpmm::new(ooc, threads);
+    let s = kern.plan(Some(dt));
+    let mut c = DenseMatrix::from_vec(nrows, b.ncols, vec![-7.0; nrows * b.ncols]);
+    kern.execute_with(b, &mut c, &s).expect("OOC execute");
+    c.data
+}
+
+/// The acceptance grid: every generator × d ∈ {3, 8, 16} × threads ∈
+/// {1, 4} × dt ∈ {1, 3, d−1, d} × budgets forcing {1, ≥2, nrows}
+/// bands — OOC vs whole-matrix CSR bit for bit, and vs the dense
+/// reference within tolerance.
+#[test]
+fn ooc_matches_csr_bitwise_across_generators() {
+    let mut rng = Prng::new(0x00cc);
+    for (name, a) in generator_suite(&mut rng) {
+        for d in [3usize, 8, 16] {
+            let b = DenseMatrix::random(a.ncols, d, &mut rng);
+            let want = dense_spmm(&a, &b);
+            for threads in [1usize, 4] {
+                for dt in [1usize, 3, d - 1, d] {
+                    let whole = csr_result(&a, &b, dt, threads);
+                    for (bi, budget) in budget_ladder(&a).into_iter().enumerate() {
+                        let min_bands = [1usize, 2, a.nrows][bi];
+                        let got = ooc_result(
+                            OocCsr::from_csr(a.clone(), budget),
+                            &b,
+                            dt,
+                            threads,
+                            min_bands,
+                        );
+                        assert_eq!(
+                            got, whole,
+                            "{name}: OOC ≠ CSR (d={d} dt={dt} threads={threads} budget={budget})"
+                        );
+                        let diff = got
+                            .iter()
+                            .zip(&want.data)
+                            .map(|(x, y)| (x - y).abs())
+                            .fold(0.0f64, f64::max);
+                        assert!(diff < 1e-11, "{name}: OOC vs reference |Δ|={diff}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// File-backed bands (general banner): re-streaming the file per band
+/// must land on the identical bits as the resident slices.
+#[test]
+fn file_backed_general_matches_in_memory_bitwise() {
+    let mut rng = Prng::new(0x00cd);
+    for (name, a) in generator_suite(&mut rng) {
+        let path = tmp_path(&format!("gen_{name}"));
+        write_csr(&path, &a).expect("write");
+        let d = 5;
+        let b = DenseMatrix::random(a.ncols, d, &mut rng);
+        let whole = csr_result(&a, &b, d, 2);
+        for budget in budget_ladder(&a) {
+            let ooc = OocCsr::open(&path, budget).expect("ooc open");
+            assert_eq!((ooc.nrows(), ooc.ncols(), ooc.nnz()), (a.nrows, a.ncols, a.nnz()));
+            let got = ooc_result(ooc, &b, d, 2, 1);
+            assert_eq!(got, whole, "{name}: file-backed OOC ≠ CSR (budget={budget})");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// File-backed bands from a **symmetric** banner: the band loader must
+/// replay `Coo::symmetrize`'s ordering (stored entries first, mirrors
+/// after) or duplicate summation drifts by an ulp.
+#[test]
+fn file_backed_symmetric_matches_in_memory_bitwise() {
+    let mut rng = Prng::new(0x00ce);
+    for (name, a) in generator_suite(&mut rng) {
+        // lower triangle mirrored — numerically symmetric by construction
+        let mut lt = Coo::new(a.nrows, a.nrows);
+        for r in 0..a.nrows {
+            for (c, v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+                if (*c as usize) <= r {
+                    lt.push(r, *c as usize, *v);
+                }
+            }
+        }
+        let sym = Csr::from_coo(lt.symmetrize());
+        let path = tmp_path(&format!("sym_{name}"));
+        write_csr_symmetric(&path, &sym).expect("write symmetric");
+        let d = 6;
+        let b = DenseMatrix::random(sym.ncols, d, &mut rng);
+        let whole = csr_result(&sym, &b, 2, 2);
+        for budget in budget_ladder(&sym) {
+            let ooc = OocCsr::open(&path, budget).expect("ooc open");
+            let got = ooc_result(ooc, &b, 2, 2, 1);
+            assert_eq!(got, whole, "{name}: symmetric file OOC ≠ CSR (budget={budget})");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// Adversarial geometry: a hub row heavier than the budget (gets its
+/// own band), empty rows (bands must still cover them and zero their
+/// `C` rows), and a run of single-row bands.
+#[test]
+fn adversarial_hub_and_empty_rows() {
+    let n = 24;
+    let mut rng = Prng::new(0x00cf);
+    let mut coo = Coo::new(n, n);
+    for c in 0..n {
+        coo.push(0, c, rng.range_f64(-1.0, 1.0)); // hub row
+    }
+    for r in 2..n {
+        if r % 3 != 0 {
+            // rows 3, 6, 9, ... stay empty (row 1 too)
+            coo.push(r, (r * 5) % n, rng.range_f64(-1.0, 1.0));
+            coo.push(r, (r * 7 + 1) % n, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    let a = Csr::from_coo(coo.sorted_dedup());
+    let d = 4;
+    let b = DenseMatrix::random(n, d, &mut rng);
+    let whole = csr_result(&a, &b, d, 2);
+    // hub row alone busts this budget; plan_row_bands must give it its
+    // own band rather than splitting it
+    let hub_budget = band_bytes(1, n) - 1;
+    for budget in [0usize, hub_budget, band_bytes(n, a.nnz()) / 3, usize::MAX] {
+        let ooc = OocCsr::from_csr(a.clone(), budget);
+        let covered: usize = (0..ooc.n_bands()).map(|k| ooc.band_rows(k).len()).sum();
+        assert_eq!(covered, n, "bands cover every row incl. empty ones");
+        let got = ooc_result(ooc, &b, d, 2, 1);
+        assert_eq!(got, whole, "adversarial geometry ≠ CSR (budget={budget})");
+    }
+    // stale C over the empty rows must have been zeroed
+    let zero_rows: Vec<usize> = (0..n).filter(|&r| a.row_cols(r).is_empty()).collect();
+    assert!(!zero_rows.is_empty(), "fixture must contain empty rows");
+    for r in zero_rows {
+        assert!(whole[r * d..(r + 1) * d].iter().all(|&x| x == 0.0));
+    }
+}
+
+/// An entirely empty matrix still executes and zeroes `C`.
+#[test]
+fn empty_matrix_zeroes_c() {
+    let a = Csr::from_coo(Coo::new(5, 4));
+    let b = DenseMatrix::random(4, 3, &mut Prng::new(0x00d0));
+    for budget in [0usize, usize::MAX] {
+        let kern = OocSpmm::new(OocCsr::from_csr(a.clone(), budget), 2);
+        let mut c = DenseMatrix::from_vec(5, 3, vec![5.0; 15]);
+        kern.execute(&b, &mut c).expect("empty execute");
+        assert!(c.data.iter().all(|&x| x == 0.0), "budget={budget}");
+    }
+}
+
+/// Randomized: shape, density, budget, dt, threads all drawn per case
+/// (PROP_SEED varies the corpus in CI).
+#[test]
+fn prop_ooc_random_budgets_bitwise() {
+    check_default(0x00d1, |rng| {
+        let nr = 4 + rng.below_usize(100);
+        let nc = 4 + rng.below_usize(100);
+        let a = erdos_renyi(nr, nc, rng.range_f64(0.0, 7.0), rng);
+        let d = 1 + rng.below_usize(12);
+        let dt = 1 + rng.below_usize(d + 3);
+        let threads = 1 + rng.below_usize(4);
+        let budget = match rng.below_usize(3) {
+            0 => 0,
+            1 => usize::MAX,
+            _ => rng.below_usize(band_bytes(nr, a.nnz()) + 1),
+        };
+        let b = DenseMatrix::random(nc, d, rng);
+        let whole = csr_result(&a, &b, dt, threads);
+        let got = ooc_result(OocCsr::from_csr(a.clone(), budget), &b, dt, threads, 1);
+        if got != whole {
+            return Err(format!(
+                "OOC ≠ CSR: {nr}x{nc} nnz={} d={d} dt={dt} threads={threads} budget={budget}",
+                a.nnz()
+            ));
+        }
+        Ok(())
+    });
+}
