@@ -17,9 +17,18 @@
 //!    router's reordering wins), for the batch-total comparison the
 //!    router must not lose.
 //!
+//! 4. **learned re-route** — trains the learned structure router on
+//!    the accumulated `BENCH_route.json` records, re-routes the same
+//!    queue on a fresh engine, and prints the per-structure-group
+//!    regret-vs-analytic table (what trusting the forest cost against
+//!    the measured analytic pick — 0 where analytic routed).
+//!
 //! Writes one `BENCH_route.json` record per pinned decision (chosen
-//! impl, reordering, predicted vs measured GFLOP/s) via the merging
-//! perf log.
+//! impl, reordering, predicted vs measured GFLOP/s, routing source,
+//! and the structural features the decision was made on — the learned
+//! router's training set) via the merging perf log; the learned leg's
+//! records land under the separate bench name `bench_route_learned`
+//! so they never clobber the analytic training records.
 //!
 //! `REPRO_SCALE` (default 0.25) and `REPRO_ITERS` (default 3) tune
 //! runtime; `REPRO_FAST=1` injects nominal machine parameters instead
@@ -27,9 +36,13 @@
 //! if the routed batch total falls below the always-CSR baseline
 //! (kept opt-in: CI runners are too noisy for a hard perf gate).
 
-use spmm_roofline::coordinator::{AutotunePolicy, Engine, EngineConfig, JobSpec};
+use std::collections::BTreeMap;
+
+use spmm_roofline::coordinator::{
+    AutotunePolicy, Engine, EngineConfig, JobSpec, RouteDecision, RouteSource, TrainConfig,
+};
 use spmm_roofline::gen::{representative_suite, suite, Prng};
-use spmm_roofline::model::MachineParams;
+use spmm_roofline::model::{FeatureVec, MachineParams};
 use spmm_roofline::report::{PerfLog, PerfRecord};
 use spmm_roofline::sparse::reorder::{permute_symmetric, random_permutation};
 use spmm_roofline::spmm::Impl;
@@ -40,6 +53,33 @@ fn envf(key: &str, default: f64) -> f64 {
 
 fn env1(key: &str) -> bool {
     std::env::var(key).map(|v| v == "1").unwrap_or(false)
+}
+
+/// One perf record per pinned decision. The decision's structural
+/// features ride along (raw fractions + exact un-log-scaled counts) so
+/// the learned router can train on the accumulated artifact; `source`
+/// records which model ranked the explore order.
+fn record_of(bench: &str, dec: &RouteDecision) -> PerfRecord {
+    PerfRecord {
+        reorder: dec.reorder.to_string(),
+        predicted_gflops: dec.predicted_gflops,
+        source: dec.source.to_string(),
+        cv: dec.features.0[0],
+        hub: dec.features.0[1],
+        diag: dec.features.0[2],
+        block: dec.features.0[3],
+        n: FeatureVec::count_of(dec.features.0[4]),
+        nnz: FeatureVec::count_of(dec.features.0[5]),
+        ..PerfRecord::basic(
+            bench,
+            dec.matrix.clone(),
+            dec.class.to_string(),
+            dec.im.to_string(),
+            dec.d,
+            dec.dt.min(dec.d),
+            dec.measured_gflops,
+        )
+    }
 }
 
 fn main() {
@@ -154,20 +194,81 @@ fn main() {
 
     let mut log = PerfLog::new();
     for dec in engine.autotuner().decisions() {
-        log.push(PerfRecord {
-            reorder: dec.reorder.to_string(),
-            predicted_gflops: dec.predicted_gflops,
-            ..PerfRecord::basic(
-                "bench_route",
-                dec.matrix.clone(),
-                dec.class.to_string(),
-                dec.im.to_string(),
-                dec.d,
-                dec.dt.min(dec.d),
-                dec.measured_gflops,
-            )
-        });
+        log.push(record_of("bench_route", dec));
     }
     log.merge_save("BENCH_route.json").expect("write BENCH_route.json");
     println!("wrote BENCH_route.json ({} routing records)", log.records.len());
+
+    // — batch 4: the learned leg. Train the structure router on the
+    // *accumulated* artifact (this run's records merged with whatever
+    // earlier runs left behind), stand up a fresh engine holding the
+    // original layouts, and re-route the identical queue — the forest
+    // promotes its predicted winner where it is confident and
+    // in-distribution, the analytic model routes the rest, and the
+    // per-structure-group table reports what trusting the forest cost
+    // against the measured analytic pick.
+    println!("\n— batch 4: learned re-route (forest trained on BENCH_route.json) —");
+    let accumulated = std::fs::read_to_string("BENCH_route.json")
+        .ok()
+        .and_then(|t| PerfLog::parse(&t).ok())
+        .unwrap_or_default();
+    let mut learned_engine = Engine::new(EngineConfig {
+        threads,
+        machine: Some(engine.machine()),
+        iters,
+        warmup: 1,
+        impls: vec![Impl::Csr, Impl::Opt, Impl::Csb, Impl::Pb],
+        artifacts_dir: None,
+        autotune: AutotunePolicy::enabled(),
+    })
+    .expect("learned engine");
+    for proxy in representative_suite() {
+        learned_engine.register(proxy.name, proxy.generate(scale)).expect("register");
+    }
+    let mut rng = Prng::new(0x0de7);
+    let mesh = suite::find("road_usa_p").expect("suite entry").generate(scale);
+    let scrambled = permute_symmetric(&mesh, &random_permutation(mesh.nrows, &mut rng));
+    learned_engine.register("road_scrambled", scrambled).expect("register");
+    // min_support 1: the bench suites are small (tens of records), and
+    // a single-example leaf at an exactly-reproduced training point is
+    // precisely the interpolation the gate should admit here
+    let cfg = TrainConfig { min_support: 1, ..TrainConfig::default() };
+    match learned_engine.train_learned_router(&accumulated, &cfg) {
+        Ok(n) => println!(
+            "  trained on {n} examples: {}",
+            learned_engine.learned_router().expect("just installed").summary()
+        ),
+        Err(e) => println!("  learned leg skipped ({e})"),
+    }
+    let relearned = learned_engine.submit_batch(&jobs).expect("learned batch");
+    println!("  {}", relearned.summary_line());
+
+    // per-structure-group regret-vs-analytic table
+    let mut groups: BTreeMap<String, (usize, usize, f64)> = BTreeMap::new();
+    for dec in learned_engine.autotuner().decisions() {
+        let g = groups.entry(dec.class.to_string()).or_insert((0, 0, 0.0));
+        g.0 += 1;
+        if dec.source == RouteSource::Learned {
+            g.1 += 1;
+        }
+        g.2 += dec.regret_vs_analytic();
+    }
+    println!("\n  regret-vs-analytic by structure group:");
+    println!("  {:<16} {:>7} {:>8} {:>22}", "class", "routes", "learned", "mean regret GFLOP/s");
+    for (class, (routes, learned, regret)) in &groups {
+        println!(
+            "  {class:<16} {routes:>7} {learned:>8} {:>22.4}",
+            regret / (*routes as f64).max(1.0)
+        );
+    }
+
+    let mut learned_log = PerfLog::new();
+    for dec in learned_engine.autotuner().decisions() {
+        learned_log.push(record_of("bench_route_learned", dec));
+    }
+    learned_log.merge_save("BENCH_route.json").expect("write BENCH_route.json");
+    println!(
+        "wrote BENCH_route.json ({} learned re-route records)",
+        learned_log.records.len()
+    );
 }

@@ -657,11 +657,45 @@ fn cmd_engine(cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+/// One perf record per pinned SpMM decision — the routing source and
+/// the decision-time structural features ride along (raw fractions +
+/// exactly un-log-scaled counts) so the learned router can train on
+/// the accumulated artifact
+/// ([`crate::coordinator::examples_from_log`]).
+fn route_record(
+    bench: &str,
+    dec: &crate::coordinator::RouteDecision,
+) -> crate::report::PerfRecord {
+    use crate::model::FeatureVec;
+    crate::report::PerfRecord {
+        reorder: dec.reorder.to_string(),
+        predicted_gflops: dec.predicted_gflops,
+        source: dec.source.to_string(),
+        cv: dec.features.0[0],
+        hub: dec.features.0[1],
+        diag: dec.features.0[2],
+        block: dec.features.0[3],
+        n: FeatureVec::count_of(dec.features.0[4]),
+        nnz: FeatureVec::count_of(dec.features.0[5]),
+        ..crate::report::PerfRecord::basic(
+            bench,
+            dec.matrix.clone(),
+            dec.class.to_string(),
+            dec.im.to_string(),
+            dec.d,
+            dec.dt.min(dec.d),
+            dec.measured_gflops,
+        )
+    }
+}
+
 /// The `route` command: register a generated suite spanning all four
 /// sparsity classes (plus a scrambled mesh, so the RCM lever has
 /// something to recover), autotune every (matrix, d), print the pinned
 /// decisions, compare the routed batch against an always-CSR baseline,
-/// and write the `BENCH_route.json` artifact.
+/// train the learned structure router on the accumulated artifact and
+/// re-route (reporting per-structure-group regret-vs-analytic), and
+/// write the `BENCH_route.json` artifact.
 fn cmd_route(cfg: &ExperimentConfig) -> Result<()> {
     use crate::coordinator::{AutotunePolicy, Engine, EngineConfig, JobSpec};
     use crate::report::{PerfLog, PerfRecord};
@@ -680,7 +714,7 @@ fn cmd_route(cfg: &ExperimentConfig) -> Result<()> {
         machine: None,
         iters: cfg.iters,
         warmup: cfg.warmup,
-        impls: route_impls,
+        impls: route_impls.clone(),
         artifacts_dir: Some(cfg.artifacts_dir.clone()),
         autotune: AutotunePolicy::enabled(),
     })?;
@@ -717,7 +751,10 @@ fn cmd_route(cfg: &ExperimentConfig) -> Result<()> {
     println!("  {}", tuned.summary_line());
     let mut t = crate::report::Table::new(
         "route — pinned decisions (format × reordering per matrix × d)",
-        &["Matrix", "Class", "d", "Impl", "Reorder", "dt", "Pred GF/s", "Meas GF/s", "Regret"],
+        &[
+            "Matrix", "Class", "d", "Impl", "Reorder", "dt", "Pred GF/s", "Meas GF/s", "Regret",
+            "Source",
+        ],
     );
     for dec in engine.autotuner().decisions() {
         t.row(vec![
@@ -730,6 +767,7 @@ fn cmd_route(cfg: &ExperimentConfig) -> Result<()> {
             format!("{:.2}", dec.predicted_gflops),
             format!("{:.2}", dec.measured_gflops),
             format!("{:.2}", dec.regret_gflops),
+            dec.source.to_string(),
         ]);
     }
     println!("{}", t.to_text());
@@ -805,22 +843,12 @@ fn cmd_route(cfg: &ExperimentConfig) -> Result<()> {
     }
 
     // machine-readable artifact: one record per pinned decision, with
-    // predicted vs measured (regret analysis across PRs)
+    // predicted vs measured (regret analysis across PRs), the routing
+    // source, and the decision-time structural features — the learned
+    // router's training set
     let mut log = PerfLog::new();
     for dec in engine.autotuner().decisions() {
-        log.push(PerfRecord {
-            reorder: dec.reorder.to_string(),
-            predicted_gflops: dec.predicted_gflops,
-            ..PerfRecord::basic(
-                "bench_route",
-                dec.matrix.clone(),
-                dec.class.to_string(),
-                dec.im.to_string(),
-                dec.d,
-                dec.dt.min(dec.d),
-                dec.measured_gflops,
-            )
-        });
+        log.push(route_record("bench_route", dec));
     }
     // SpGEMM rows: one record per measured candidate per pair
     // (impl ∈ {HASH, PBMERGE}; d = dt = 0 marks the sparse operand)
@@ -842,6 +870,86 @@ fn cmd_route(cfg: &ExperimentConfig) -> Result<()> {
     }
     log.merge_save("BENCH_route.json")?;
     println!("wrote BENCH_route.json ({} routing records)", log.records.len());
+
+    // learned leg: train the structure router on the accumulated
+    // artifact, re-route the identical queue on a fresh engine
+    // (original layouts), and report per-structure-group
+    // regret-vs-analytic — what trusting the forest cost against the
+    // measured analytic pick (0 where the analytic model routed)
+    println!("\n— learned re-route (forest trained on BENCH_route.json) —");
+    let accumulated = std::fs::read_to_string("BENCH_route.json")
+        .ok()
+        .and_then(|t| PerfLog::parse(&t).ok())
+        .unwrap_or_default();
+    let mut learned_engine = Engine::new(EngineConfig {
+        threads: cfg.threads,
+        machine: Some(engine.machine()),
+        iters: cfg.iters,
+        warmup: cfg.warmup,
+        impls: route_impls,
+        artifacts_dir: None,
+        autotune: AutotunePolicy::enabled(),
+    })?;
+    for proxy in crate::gen::representative_suite() {
+        learned_engine.register(proxy.name, proxy.generate(cfg.scale))?;
+    }
+    let mut rng3 = crate::gen::Prng::new(0x0de7);
+    let mesh3 = crate::gen::suite::find("road_usa_p")
+        .expect("road_usa_p is in the suite")
+        .generate(cfg.scale);
+    learned_engine.register(
+        "road_scrambled",
+        permute_symmetric(&mesh3, &random_permutation(mesh3.nrows, &mut rng3)),
+    )?;
+    // min_support 1: the generated suites are small, and a
+    // single-example leaf at an exactly-reproduced training point is
+    // the interpolation the gate should admit here
+    let tc = crate::coordinator::TrainConfig {
+        min_support: 1,
+        ..crate::coordinator::TrainConfig::default()
+    };
+    match learned_engine.train_learned_router(&accumulated, &tc) {
+        Ok(n) => println!(
+            "  trained on {n} examples: {}",
+            learned_engine.learned_router().expect("just installed").summary()
+        ),
+        Err(e) => println!("  learned leg skipped ({e})"),
+    }
+    let relearned = learned_engine.submit_batch(&jobs)?;
+    println!("  {}", relearned.summary_line());
+    let mut gt = crate::report::Table::new(
+        "learned re-route — regret-vs-analytic by structure group",
+        &["Class", "Routes", "Learned", "Mean regret GF/s"],
+    );
+    let mut groups: std::collections::BTreeMap<String, (usize, usize, f64)> =
+        std::collections::BTreeMap::new();
+    for dec in learned_engine.autotuner().decisions() {
+        let g = groups.entry(dec.class.to_string()).or_insert((0, 0, 0.0));
+        g.0 += 1;
+        if dec.source == crate::coordinator::RouteSource::Learned {
+            g.1 += 1;
+        }
+        g.2 += dec.regret_vs_analytic();
+    }
+    for (class, (routes, learned, regret)) in &groups {
+        gt.row(vec![
+            class.clone(),
+            routes.to_string(),
+            learned.to_string(),
+            format!("{:.4}", regret / (*routes as f64).max(1.0)),
+        ]);
+    }
+    println!("{}", gt.to_text());
+
+    let mut learned_log = PerfLog::new();
+    for dec in learned_engine.autotuner().decisions() {
+        learned_log.push(route_record("bench_route_learned", dec));
+    }
+    learned_log.merge_save("BENCH_route.json")?;
+    println!(
+        "wrote BENCH_route.json ({} learned re-route records)",
+        learned_log.records.len()
+    );
     Ok(())
 }
 

@@ -33,12 +33,13 @@
 use std::collections::HashMap;
 
 use crate::coordinator::batch::BufferPool;
+use crate::coordinator::learned::{features_of, LearnedRouter, RouteSource};
 use crate::coordinator::planner::{Planner, PipelinePrediction, Prediction};
 use crate::coordinator::registry::MatrixRegistry;
 use crate::error::{Error, Result};
 use crate::gen::{Prng, SparsityClass};
 use crate::metrics::{bench_adaptive_checked, gflops, spmm_flops};
-use crate::model::{PipelineParams, SpGemmParams};
+use crate::model::{FeatureVec, PipelineParams, SpGemmParams};
 use crate::pattern::{classify, Classification};
 use crate::sparse::{reorder::permute_symmetric, Csr, Reordering};
 use crate::spgemm::{compression_factor, spgemm_flops, SpGemm, SpGemmImpl};
@@ -121,13 +122,28 @@ pub struct RouteDecision {
     /// over predict-and-commit (0 when the prediction was already
     /// right).
     pub regret_gflops: f64,
+    /// Which router ranked the explore order: the analytic roofline
+    /// model, or the learned forest promoting its prediction to the
+    /// top (measurement still decides the pin either way).
+    pub source: RouteSource,
+    /// Forest confidence behind a learned promotion (0 for analytic).
+    pub confidence: f64,
+    /// Measured GFLOP/s of the *analytic* top-ranked candidate — the
+    /// regret-vs-analytic baseline. 0 when that candidate was not
+    /// measured (only possible with `top_k = 1` and a learned
+    /// promotion that disagreed with it).
+    pub analytic_gflops: f64,
+    /// Structural features of the matrix (active layout) at decision
+    /// time — what the learned router was (or would have been) asked,
+    /// and what future training sets are built from.
+    pub features: FeatureVec,
 }
 
 impl RouteDecision {
     /// One-line human rendering for tables and logs.
     pub fn summary(&self) -> String {
         format!(
-            "{} d={} → {} / {} (dt={}, class {}, pred {:.2} meas {:.2} GFLOP/s, \
+            "{} d={} → {} / {} (dt={}, class {}, {} pred {:.2} meas {:.2} GFLOP/s, \
              regret {:.2}, {}/{} measured)",
             self.matrix,
             self.d,
@@ -135,12 +151,27 @@ impl RouteDecision {
             self.reorder,
             self.dt,
             self.class,
+            self.source,
             self.predicted_gflops,
             self.measured_gflops,
             self.regret_gflops,
             self.explored,
             self.enumerated,
         )
+    }
+
+    /// Measured shortfall of the routed top pick against the analytic
+    /// top pick — the learned router's regret-vs-analytic. 0 for
+    /// analytic decisions (the baseline is itself) and when the
+    /// analytic pick went unmeasured.
+    pub fn regret_vs_analytic(&self) -> f64 {
+        if self.source == RouteSource::Analytic || self.analytic_gflops <= 0.0 {
+            return 0.0;
+        }
+        // the routed top pick's measurement: the winner minus what
+        // measuring top-k bought over trusting the top pick
+        let routed_pick = self.measured_gflops - self.regret_gflops;
+        (self.analytic_gflops - routed_pick).max(0.0)
     }
 }
 
@@ -286,6 +317,10 @@ pub struct Autotuner {
     /// Total exploration measurements ever run (observability: batch
     /// reports diff this to prove re-submission measures nothing).
     measurements: usize,
+    /// The learned structure router, when one is installed: a
+    /// confident in-distribution prediction promotes its candidate to
+    /// the top of the explore order ([`Autotuner::tune`]).
+    learned: Option<LearnedRouter>,
 }
 
 impl Autotuner {
@@ -296,11 +331,30 @@ impl Autotuner {
             spgemm_decisions: HashMap::new(),
             pipeline_decisions: HashMap::new(),
             measurements: 0,
+            learned: None,
         }
     }
 
     pub fn policy(&self) -> &AutotunePolicy {
         &self.policy
+    }
+
+    /// Install (or replace) the learned structure router. Pinned
+    /// decisions are untouched — the forest only influences *future*
+    /// tunes.
+    pub fn install_learned(&mut self, router: LearnedRouter) {
+        self.learned = Some(router);
+    }
+
+    /// The installed learned router, if any.
+    pub fn learned(&self) -> Option<&LearnedRouter> {
+        self.learned.as_ref()
+    }
+
+    /// Remove the learned router; tunes fall back to pure analytic
+    /// ranking.
+    pub fn clear_learned(&mut self) {
+        self.learned = None;
     }
 
     /// The pinned decision for `(matrix, d)`, if one exists.
@@ -419,6 +473,9 @@ impl Autotuner {
             return Err(Error::Usage(format!("no native kernels prepared for '{matrix}'")));
         }
         let active = entry.reordering();
+        // decision-time features come from the *active* layout — the
+        // same view a future submit (and the learned router) sees
+        let feats = features_of(&entry.classification, d);
         let base = entry.base_csr();
         let square = base.nrows == base.ncols;
 
@@ -481,34 +538,91 @@ impl Autotuner {
             b.1.prediction.predicted_gflops.total_cmp(&a.1.prediction.predicted_gflops)
         });
 
-        // explore: measure the top-k predicted candidates once each
+        // remember the analytic top pick before any learned promotion:
+        // it is the regret-vs-analytic baseline
+        let analytic_top = (scored[0].1.im, scored[0].1.reorder);
+
+        // learned promotion: a confident in-distribution forest
+        // prediction moves its candidate to the top of the explore
+        // order and supplies its tile width — the analytic ranking is
+        // otherwise untouched, and the measured best still wins the
+        // pin. Off-distribution / low-confidence queries return None
+        // and the analytic order stands (the fallback rule).
+        let mut source = RouteSource::Analytic;
+        let mut confidence = 0.0;
+        if let Some(lr) = self.learned.as_ref().and_then(|l| l.route(&feats)) {
+            if let Some(pos) = scored
+                .iter()
+                .position(|(_, c)| c.im == lr.im && c.reorder == lr.reorder)
+            {
+                let (li, mut cand) = scored.remove(pos);
+                // the forest's tile width, bounded by this job's d
+                cand.prediction.dt = lr.dt.clamp(1, d);
+                scored.insert(0, (li, cand));
+                source = RouteSource::Learned;
+                confidence = lr.confidence;
+            }
+            // a predicted (impl, reorder) outside the enumerated set
+            // (kernel not prepared, reordering not applicable) cannot
+            // be promoted: analytic order stands
+        }
+
+        // explore: measure the top-k predicted candidates once each.
+        // A candidate whose measurement errors is *skipped*, not
+        // fatal — one flaky kernel must not kill the whole tune; only
+        // an all-failed explore errors (as Usage, never a panic).
         let k = self.policy.top_k.clamp(1, scored.len());
         let mut measured: Vec<Candidate> = Vec::new();
+        let mut last_err: Option<Error> = None;
         for (li, mut cand) in scored.into_iter().take(k) {
             let dt = cand.prediction.dt;
-            let gf = match &layouts[li].2 {
+            let gf_res = match &layouts[li].2 {
                 None => {
                     // active layout: prepared kernel + cached schedule
                     let entry = registry.get(matrix).expect("entry resolved above");
-                    let kernel = entry
-                        .kernel(cand.im, d)
-                        .ok_or_else(|| Error::Usage(format!("kernel {} vanished", cand.im)))?;
-                    let sched =
-                        registry.schedule(matrix, cand.im, d, dt).expect("kernel exists");
-                    measure(kernel, &sched, d, buffers, rng, &self.policy)?
+                    match entry.kernel(cand.im, d) {
+                        Some(kernel) => {
+                            let sched = registry
+                                .schedule(matrix, cand.im, d, dt)
+                                .expect("kernel exists");
+                            measure(kernel, &sched, d, buffers, rng, &self.policy)
+                        }
+                        None => Err(Error::Usage(format!("kernel {} vanished", cand.im))),
+                    }
                 }
                 Some(csr) => {
                     // candidate layout: throwaway kernel on the
                     // permuted matrix (pinning rebuilds it for keeps)
-                    let kernel = build_native(cand.im, csr, registry.threads())?;
-                    let sched = kernel.plan(Some(dt).filter(|&dt| dt < d));
-                    measure(kernel.as_ref(), &sched, d, buffers, rng, &self.policy)?
+                    build_native(cand.im, csr, registry.threads()).and_then(|kernel| {
+                        let sched = kernel.plan(Some(dt).filter(|&dt| dt < d));
+                        measure(kernel.as_ref(), &sched, d, buffers, rng, &self.policy)
+                    })
+                }
+            };
+            let gf = match gf_res {
+                Ok(gf) => gf,
+                Err(e) => {
+                    eprintln!(
+                        "warning: explore candidate {} / {} failed for '{matrix}' d={d}: \
+                         {e} — skipping",
+                        cand.im, cand.reorder
+                    );
+                    last_err = Some(e);
+                    continue;
                 }
             };
             planner.observe(cand.class, cand.im, cand.prediction.roof_gflops, gf);
             self.measurements += 1;
             cand.measured_gflops = Some(gf);
             measured.push(cand);
+        }
+        if measured.is_empty() {
+            // every candidate errored: nothing to pin (the old code
+            // `expect`ed here and panicked)
+            return Err(Error::Usage(format!(
+                "every explored candidate failed for '{matrix}' d={d}: {}",
+                last_err.map_or_else(|| "no candidates".into(), |e| e.to_string())
+            )));
         }
 
         // exploit: pin the measured-best candidate
@@ -519,11 +633,18 @@ impl Autotuner {
                     .unwrap_or(f64::NEG_INFINITY)
                     .total_cmp(&b.measured_gflops.unwrap_or(f64::NEG_INFINITY))
             })
-            .expect("k ≥ 1")
+            .expect("measured is non-empty (checked above)")
             .clone();
-        // `measured` is in predicted order, so [0] is the predictor's pick
+        // `measured` is in explore order, so [0] is the routed top pick
         let predictor_pick_gf = measured[0].measured_gflops.unwrap_or(0.0);
         let best_gf = best.measured_gflops.unwrap_or(0.0);
+        // the analytic baseline's own measurement, wherever it landed
+        // in the explore order (0 when it was not measured)
+        let analytic_gflops = measured
+            .iter()
+            .find(|c| (c.im, c.reorder) == analytic_top)
+            .and_then(|c| c.measured_gflops)
+            .unwrap_or(0.0);
         if best.reorder != active {
             registry.apply_reordering(matrix, best.reorder)?;
             // the permuted layout computes a *different* product —
@@ -545,6 +666,10 @@ impl Autotuner {
             enumerated,
             explored: measured.len(),
             regret_gflops: (best_gf - predictor_pick_gf).max(0.0),
+            source,
+            confidence,
+            analytic_gflops,
+            features: feats,
         };
         self.decisions.insert((matrix.to_string(), d), decision.clone());
         Ok(decision)
@@ -587,19 +712,46 @@ impl Autotuner {
 
         let mut measured: Vec<SpGemmCandidate> = Vec::new();
         let mut cf_measured: Option<f64> = None;
+        let mut last_err: Option<Error> = None;
         for pred in ranked.into_iter().take(k) {
             let kernel = entry_a.spgemm_kernel(pred.im).expect("ensured above");
             let sched = kernel.plan();
             // first execution surfaces kernel errors before the timing
-            // loop and yields nnz(C) for the measured cf
-            let c = kernel.execute_with(bcsr, &sched)?;
+            // loop and yields nnz(C) for the measured cf; a failing
+            // candidate is skipped, not fatal — the healthy kernel can
+            // still win the pin
+            let c = match kernel.execute_with(bcsr, &sched) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!(
+                        "warning: SpGEMM candidate {} failed for {a}×{b}: {e} — skipping",
+                        pred.im
+                    );
+                    last_err = Some(e);
+                    continue;
+                }
+            };
             cf_measured = Some(compression_factor(flops, c.nnz()));
             drop(c);
             let iters = self.policy.explore_iters.max(1);
-            let r =
-                bench_adaptive_checked(0, iters, iters * 4, self.policy.explore_min_secs, |_| {
-                    kernel.execute_with(bcsr, &sched).map(|_| ())
-                })?;
+            let r = match bench_adaptive_checked(
+                0,
+                iters,
+                iters * 4,
+                self.policy.explore_min_secs,
+                |_| kernel.execute_with(bcsr, &sched).map(|_| ()),
+            ) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!(
+                        "warning: SpGEMM candidate {} failed mid-loop for {a}×{b}: {e} \
+                         — skipping",
+                        pred.im
+                    );
+                    last_err = Some(e);
+                    continue;
+                }
+            };
             let gf = gflops(flops, r.median_secs());
             planner.observe_spgemm(cls.class, pred.im, pred.roof_gflops, gf);
             self.measurements += 1;
@@ -610,13 +762,22 @@ impl Autotuner {
                 ai: pred.ai,
             });
         }
+        if measured.is_empty() {
+            // every kernel errored: nothing to pin (the old code
+            // `expect`ed here and panicked)
+            return Err(Error::Usage(format!(
+                "every SpGEMM candidate failed for {a}×{b}: {}",
+                last_err.map_or_else(|| "no candidates".into(), |e| e.to_string())
+            )));
+        }
 
         let best = measured
             .iter()
             .max_by(|x, y| x.measured_gflops.total_cmp(&y.measured_gflops))
-            .expect("k ≥ 1")
+            .expect("measured is non-empty (checked above)")
             .clone();
-        // `measured` is in predicted order, so [0] is the predictor's pick
+        // `measured` keeps predicted order, so [0] is the predictor's
+        // best *surviving* pick
         let predictor_pick = measured[0].measured_gflops;
         let decision = SpGemmDecision {
             a: a.to_string(),
@@ -674,18 +835,40 @@ impl Autotuner {
         let k = self.policy.top_k.clamp(1, ranked.len());
 
         let mut measured: Vec<(PipelinePrediction, f64)> = Vec::new();
+        let mut last_err: Option<Error> = None;
         for pred in ranked.into_iter().take(k) {
-            let gf = measure(pred.im)?;
+            // a failing chain candidate is skipped, not fatal
+            let gf = match measure(pred.im) {
+                Ok(gf) => gf,
+                Err(e) => {
+                    eprintln!(
+                        "warning: pipeline candidate {} failed for '{matrix}' {chain}: \
+                         {e} — skipping",
+                        pred.im
+                    );
+                    last_err = Some(e);
+                    continue;
+                }
+            };
             planner.observe(cls.class, pred.im, pred.roof_gflops, gf);
             self.measurements += 1;
             measured.push((pred, gf));
+        }
+        if measured.is_empty() {
+            // every candidate errored: nothing to pin (the old code
+            // `expect`ed here and panicked)
+            return Err(Error::Usage(format!(
+                "every pipeline candidate failed for '{matrix}' {chain}: {}",
+                last_err.map_or_else(|| "no candidates".into(), |e| e.to_string())
+            )));
         }
 
         let &(best, best_gf) = measured
             .iter()
             .max_by(|x, y| x.1.total_cmp(&y.1))
-            .expect("k ≥ 1");
-        // `measured` is in predicted order, so [0] is the predictor's pick
+            .expect("measured is non-empty (checked above)");
+        // `measured` keeps predicted order, so [0] is the predictor's
+        // best *surviving* pick
         let predictor_pick = measured[0].1;
         let decision = PipelineDecision {
             matrix: matrix.to_string(),
@@ -1052,6 +1235,116 @@ mod tests {
                 &mut flat,
             )
             .is_err());
+    }
+
+    /// A kernel that errors on every execution — planted through the
+    /// `install_kernel` seam to exercise the all-candidates-failed
+    /// path.
+    struct AlwaysFail {
+        n: usize,
+        im: Impl,
+    }
+    impl Spmm for AlwaysFail {
+        fn id(&self) -> Impl {
+            self.im
+        }
+        fn nrows(&self) -> usize {
+            self.n
+        }
+        fn ncols(&self) -> usize {
+            self.n
+        }
+        fn nnz(&self) -> usize {
+            0
+        }
+        fn execute(
+            &self,
+            _b: &crate::spmm::DenseMatrix,
+            _c: &mut crate::spmm::DenseMatrix,
+        ) -> crate::error::Result<()> {
+            Err(Error::InvalidStructure("planted failure".into()))
+        }
+    }
+
+    #[test]
+    fn all_candidates_failing_is_usage_error_not_panic() {
+        // regression: the old `.expect("k ≥ 1")` chain panicked when
+        // every exploration measurement errored — now it's Err(Usage)
+        let (mut reg, planner, mut buf, mut rng) = fixture();
+        let a = erdos_renyi(80, 80, 3.0, &mut Prng::new(0xF40));
+        reg.register("m", a, &[Impl::Csr]).unwrap();
+        reg.install_kernel("m", Impl::Csr, Box::new(AlwaysFail { n: 80, im: Impl::Csr }))
+            .unwrap();
+        // active layout only: the planted kernel is the whole field
+        let mut tuner = Autotuner::new(AutotunePolicy {
+            reorderings: vec![Reordering::None],
+            ..quick_policy()
+        });
+        let err = tuner.tune("m", 4, &mut reg, &planner, &mut buf, &mut rng).unwrap_err();
+        assert!(matches!(err, Error::Usage(_)), "got {err:?}");
+        assert!(tuner.decision("m", 4).is_none(), "a failed tune must pin nothing");
+        assert_eq!(tuner.measurements(), 0);
+    }
+
+    #[test]
+    fn flaky_candidate_is_skipped_and_the_healthy_one_pins() {
+        let (mut reg, planner, mut buf, mut rng) = fixture();
+        let a = erdos_renyi(80, 80, 3.0, &mut Prng::new(0xF41));
+        reg.register("m", a, &[Impl::Csr, Impl::Opt]).unwrap();
+        reg.install_kernel("m", Impl::Csr, Box::new(AlwaysFail { n: 80, im: Impl::Csr }))
+            .unwrap();
+        let mut tuner = Autotuner::new(AutotunePolicy {
+            reorderings: vec![Reordering::None],
+            ..quick_policy()
+        });
+        let dec = tuner.tune("m", 4, &mut reg, &planner, &mut buf, &mut rng).unwrap();
+        assert_eq!(dec.im, Impl::Opt, "the healthy kernel must win: {}", dec.summary());
+        assert_eq!(dec.explored, 1, "the flaky candidate is skipped, not measured");
+        assert!(dec.measured_gflops > 0.0);
+        assert_eq!(tuner.measurements(), 1);
+    }
+
+    #[test]
+    fn learned_router_promotes_in_distribution_and_falls_back_off() {
+        use crate::coordinator::learned::{Example, RouteLabel, TrainConfig};
+        let (mut reg, planner, mut buf, mut rng) = fixture();
+        let a = erdos_renyi(250, 250, 5.0, &mut Prng::new(0xF42));
+        let cls = classify(&a);
+        reg.register("er", a, &[Impl::Csr, Impl::Csb]).unwrap();
+        let feats = features_of(&cls, 8);
+        // a forest trained on this exact feature point, unanimous for
+        // (CSB, none, 8)
+        let examples: Vec<Example> = (0..6)
+            .map(|_| Example {
+                features: feats,
+                label: RouteLabel { im: Impl::Csb, reorder: Reordering::None, dt: 8 },
+            })
+            .collect();
+        let router = LearnedRouter::train(&examples, &TrainConfig::default()).unwrap();
+        let mut tuner = Autotuner::new(quick_policy());
+        tuner.install_learned(router);
+        assert!(tuner.learned().is_some());
+        let dec = tuner.tune("er", 8, &mut reg, &planner, &mut buf, &mut rng).unwrap();
+        assert_eq!(dec.source, RouteSource::Learned, "{}", dec.summary());
+        assert!(dec.confidence >= 0.65);
+        assert_eq!(dec.features, feats);
+        // top_k = 3 measures the analytic pick too, so the
+        // regret-vs-analytic baseline is populated and consistent
+        assert!(dec.analytic_gflops > 0.0);
+        assert!(dec.regret_vs_analytic() >= 0.0);
+        // the pin is still the measured best, whatever the promotion
+        assert!(dec.measured_gflops > 0.0);
+        // a different matrix at a different width: off the forest's
+        // (degenerate) training distribution → analytic fallback
+        let b = erdos_renyi(500, 500, 8.0, &mut Prng::new(0xF43));
+        reg.register("er2", b, &[Impl::Csr, Impl::Csb]).unwrap();
+        let dec2 = tuner.tune("er2", 16, &mut reg, &planner, &mut buf, &mut rng).unwrap();
+        assert_eq!(dec2.source, RouteSource::Analytic, "{}", dec2.summary());
+        assert_eq!(dec2.confidence, 0.0);
+        assert_eq!(dec2.regret_vs_analytic(), 0.0, "analytic is its own baseline");
+        // clearing the router restores pure analytic routing
+        tuner.clear_learned();
+        assert!(tuner.learned().is_none());
     }
 
     #[test]

@@ -6,6 +6,7 @@ use crate::coordinator::autotune::{
     Autotuner, AutotunePolicy, PipelineDecision, RouteDecision, SpGemmDecision,
 };
 use crate::coordinator::batch::{BatchReport, BufferPool};
+use crate::coordinator::learned::{examples_from_log, LearnedRouter, TrainConfig};
 use crate::coordinator::job::{
     JobRecord, JobSpec, PipelineKind, PipelineRecord, PipelineSpec, PredictionReport,
     SpGemmRecord, SpGemmSpec, Workload,
@@ -1023,8 +1024,9 @@ impl Engine {
     }
 
     /// Snapshot everything the router learned: pinned SpMM/SpGEMM
-    /// decisions, the planner's materialised priors, and the measured
-    /// calibration ladder (when one is installed).
+    /// decisions, the planner's materialised priors, the measured
+    /// calibration ladder, and the trained learned router (when
+    /// installed).
     pub fn export_state(&self) -> AutotuneState {
         AutotuneState {
             routes: self.tuner.decisions().into_iter().cloned().collect(),
@@ -1033,6 +1035,7 @@ impl Engine {
             spmm_priors: self.planner.priors_snapshot(),
             spgemm_priors: self.planner.spgemm_priors_snapshot(),
             ladder: self.ladder.clone(),
+            learned: self.tuner.learned().cloned(),
         }
     }
 
@@ -1050,6 +1053,12 @@ impl Engine {
         // — and skipping the re-measurement is the whole point
         if let Some(ml) = &state.ladder {
             self.install_measured_ladder(ml.clone());
+        }
+        // likewise the trained forest: learned routing knowledge, not
+        // matrix state — a restored engine routes learned-vs-analytic
+        // without retraining (the snapshot parser already validated it)
+        if let Some(lr) = &state.learned {
+            self.tuner.install_learned(lr.clone());
         }
         for &(c, i, v) in &state.spmm_priors {
             self.planner.set_prior(c, i, v);
@@ -1118,6 +1127,35 @@ impl Engine {
     /// The adaptive router (pinned decisions, exploration counters).
     pub fn autotuner(&self) -> &Autotuner {
         &self.tuner
+    }
+
+    /// Install a trained learned router: future tunes consult the
+    /// forest first and fall back to the analytic model off
+    /// distribution (see [`crate::coordinator::LearnedRouter`]).
+    pub fn install_learned_router(&mut self, router: LearnedRouter) {
+        self.tuner.install_learned(router);
+    }
+
+    /// The installed learned router, if any.
+    pub fn learned_router(&self) -> Option<&LearnedRouter> {
+        self.tuner.learned()
+    }
+
+    /// Train a learned router from an accumulated perf log
+    /// (`BENCH_route.json` records carry the winning plan *and* the
+    /// structural features it was chosen on) and install it. Returns
+    /// how many usable examples the log yielded; errors
+    /// (`Error::Usage`) when the log holds too few featureful records
+    /// to train on.
+    pub fn train_learned_router(
+        &mut self,
+        log: &crate::report::PerfLog,
+        cfg: &TrainConfig,
+    ) -> Result<usize> {
+        let examples = examples_from_log(log);
+        let router = LearnedRouter::train(&examples, cfg)?;
+        self.tuner.install_learned(router);
+        Ok(examples.len())
     }
 
     /// Eagerly tune one `(matrix, d)` (normally tuning happens lazily

@@ -1,0 +1,663 @@
+//! The learned structure router: a pure-Rust decision forest over the
+//! accumulated `BENCH_route.json` records.
+//!
+//! The analytic router (PR 3 onward) ranks candidates with
+//! hand-derived roofline formulas and per-structure priors. Every tune
+//! it runs emits a `PerfRecord` pairing the matrix's *structural
+//! features* with the *measured winner* — nine PRs of those records
+//! are a labeled training set. Following SpChar's observation that
+//! decision trees over structure features characterise sparse-kernel
+//! behaviour well (PAPERS.md, arXiv:2304.06944), this module trains a
+//! small CART forest mapping a [`FeatureVec`] (row-length CV, hub
+//! mass, diagonal/block fractions, log-scaled n/nnz/d) to the winning
+//! `(impl, reorder, dt)` triple — a [`RouteLabel`].
+//!
+//! **The learned router advises; measurement still decides.** When
+//! installed on the [`crate::coordinator::Autotuner`], a confident
+//! in-distribution prediction *promotes* its candidate to the top of
+//! the explore order (and supplies its tile width); the measured-best
+//! candidate still wins the pin. Off-distribution queries — any
+//! feature outside the training ranges (± a 10% span margin) — and
+//! low-confidence leaves return `None`, falling back to the analytic
+//! ranking unchanged. [`RouteSource`] on the decision records which
+//! path fired, so `bench_route` can report regret-vs-analytic per
+//! structure group.
+//!
+//! **Confidence** is the purity-weighted vote share: each tree's leaf
+//! votes for its majority label with weight = leaf purity (majority
+//! fraction), and the winner's share of the total weight must clear
+//! `min_confidence`, with the winner's aggregate leaf support (total
+//! training examples in its voting leaves) clearing `min_support`.
+//! A forest split 2-vs-1 over pure leaves scores 2/3; an impure
+//! unanimous forest scores its mean purity — both must beat the gate
+//! or the analytic model routes.
+//!
+//! Zero dependencies, deterministic: trees split on Gini impurity with
+//! ascending feature/threshold tie-breaking, bootstrap resampling uses
+//! the repo's seeded [`Prng`], and equal training sets train to equal
+//! forests — which is what lets the trained forest round-trip
+//! byte-identically through the STATE_VERSION 4 snapshot.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::error::{Error, Result};
+use crate::gen::Prng;
+use crate::model::{FeatureVec, N_FEATURES};
+use crate::pattern::Classification;
+use crate::report::PerfLog;
+use crate::sparse::Reordering;
+use crate::spmm::Impl;
+
+/// Which model produced a routing decision's candidate ranking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RouteSource {
+    /// The hand-derived roofline ranking (the default).
+    Analytic,
+    /// The learned forest promoted its predicted winner.
+    Learned,
+}
+
+impl fmt::Display for RouteSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteSource::Analytic => write!(f, "analytic"),
+            RouteSource::Learned => write!(f, "learned"),
+        }
+    }
+}
+
+/// The prediction target: the winning plan triple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RouteLabel {
+    pub im: Impl,
+    pub reorder: Reordering,
+    /// Column-tile width of the winning plan.
+    pub dt: usize,
+}
+
+impl RouteLabel {
+    /// Deterministic ordering key (display names — the enums
+    /// deliberately don't implement `Ord`).
+    fn key(&self) -> (String, String, usize) {
+        (format!("{}", self.im), format!("{}", self.reorder), self.dt)
+    }
+}
+
+/// One labeled training point: features at tune time → measured winner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    pub features: FeatureVec,
+    pub label: RouteLabel,
+}
+
+/// Training knobs. The defaults are sized for the record volumes the
+/// benches actually produce (tens of decisions): shallow trees, leaves
+/// down to single examples, and gates that hand anything ambiguous
+/// back to the analytic model.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Trees in the forest: tree 0 trains on the full set, the rest on
+    /// seeded bootstrap resamples.
+    pub n_trees: usize,
+    /// Maximum split depth.
+    pub max_depth: usize,
+    /// Minimum examples per leaf.
+    pub min_leaf: usize,
+    /// Minimum purity-weighted vote share for a learned route.
+    pub min_confidence: f64,
+    /// Minimum aggregate leaf support behind the winning vote.
+    pub min_support: usize,
+    /// Bootstrap PRNG seed — fixed so training is reproducible.
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            n_trees: 3,
+            max_depth: 6,
+            min_leaf: 1,
+            min_confidence: 0.65,
+            min_support: 3,
+            seed: 0x1ea7_ed,
+        }
+    }
+}
+
+/// A tree node, stored flat in [`DecisionTree::nodes`]. Children
+/// always have a larger index than their parent (pre-order emission),
+/// so traversal terminates by construction and [`DecisionTree::validate`]
+/// can reject cyclic or dangling snapshots structurally.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Node {
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+    Leaf { label: RouteLabel, count: usize, purity: f64 },
+}
+
+/// One CART tree: Gini-impurity splits, majority-label leaves.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DecisionTree {
+    pub nodes: Vec<Node>,
+}
+
+fn gini(counts: &HashMap<RouteLabel, usize>, total: usize) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let mut g = 1.0;
+    for &c in counts.values() {
+        let p = c as f64 / total as f64;
+        g -= p * p;
+    }
+    g
+}
+
+/// Majority label with deterministic tie-breaking (count desc, then
+/// display-name key asc), plus its purity.
+fn majority(counts: &HashMap<RouteLabel, usize>, total: usize) -> (RouteLabel, f64) {
+    let mut items: Vec<(&RouteLabel, &usize)> = counts.iter().collect();
+    items.sort_by(|a, b| b.1.cmp(a.1).then_with(|| a.0.key().cmp(&b.0.key())));
+    let (label, &count) = items[0];
+    (*label, count as f64 / total as f64)
+}
+
+fn label_counts(examples: &[Example], idx: &[usize]) -> HashMap<RouteLabel, usize> {
+    let mut counts = HashMap::new();
+    for &i in idx {
+        *counts.entry(examples[i].label).or_insert(0) += 1;
+    }
+    counts
+}
+
+impl DecisionTree {
+    /// Train one tree on `idx` (indices into `examples`).
+    fn fit(examples: &[Example], idx: &[usize], cfg: &TrainConfig) -> DecisionTree {
+        let mut nodes = Vec::new();
+        grow(&mut nodes, examples, idx.to_vec(), 0, cfg);
+        DecisionTree { nodes }
+    }
+
+    /// Descend to the leaf for `x`. `None` only on a malformed tree
+    /// (never after [`DecisionTree::validate`]).
+    pub fn route(&self, x: &FeatureVec) -> Option<(RouteLabel, f64, usize)> {
+        let mut i = 0usize;
+        // children strictly outrank parents, so the walk is bounded
+        for _ in 0..=self.nodes.len() {
+            match self.nodes.get(i)? {
+                Node::Split { feature, threshold, left, right } => {
+                    i = if x.0[*feature] <= *threshold { *left } else { *right };
+                }
+                Node::Leaf { label, count, purity } => return Some((*label, *purity, *count)),
+            }
+        }
+        None
+    }
+
+    /// Structural validation for snapshot restore: indices in range,
+    /// children strictly after their parent (acyclic by construction),
+    /// every non-root node referenced exactly once, finite thresholds,
+    /// sane leaf statistics. A tree failing any check rejects the
+    /// whole snapshot — cold start beats routing through garbage.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.nodes.len();
+        if n == 0 {
+            return Err(Error::Parse("learned tree has no nodes".into()));
+        }
+        let mut refs = vec![0usize; n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            match node {
+                Node::Split { feature, threshold, left, right } => {
+                    if *feature >= N_FEATURES {
+                        return Err(Error::Parse(format!(
+                            "learned tree split on unknown feature {feature}"
+                        )));
+                    }
+                    if !threshold.is_finite() {
+                        return Err(Error::Parse("learned tree threshold not finite".into()));
+                    }
+                    for &child in [left, right] {
+                        if child <= i || child >= n {
+                            return Err(Error::Parse(format!(
+                                "learned tree child {child} does not follow parent {i}"
+                            )));
+                        }
+                        refs[child] += 1;
+                    }
+                    if left == right {
+                        return Err(Error::Parse("learned tree split with equal children".into()));
+                    }
+                }
+                Node::Leaf { count, purity, label } => {
+                    if *count == 0 {
+                        return Err(Error::Parse("learned tree leaf with zero support".into()));
+                    }
+                    if !purity.is_finite() || *purity <= 0.0 || *purity > 1.0 {
+                        return Err(Error::Parse("learned tree leaf purity out of range".into()));
+                    }
+                    if label.dt == 0 {
+                        return Err(Error::Parse("learned tree leaf with dt = 0".into()));
+                    }
+                }
+            }
+        }
+        if refs[0] != 0 {
+            return Err(Error::Parse("learned tree root is someone's child".into()));
+        }
+        if refs.iter().skip(1).any(|&r| r != 1) {
+            return Err(Error::Parse("learned tree has unreachable or shared nodes".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Recursive split search; returns the new node's index. Children are
+/// emitted after their parent, preserving the index invariant
+/// `validate` checks.
+fn grow(
+    nodes: &mut Vec<Node>,
+    examples: &[Example],
+    idx: Vec<usize>,
+    depth: usize,
+    cfg: &TrainConfig,
+) -> usize {
+    let counts = label_counts(examples, &idx);
+    let total = idx.len();
+    let make_leaf = |nodes: &mut Vec<Node>| {
+        let (label, purity) = majority(&counts, total);
+        nodes.push(Node::Leaf { label, count: total, purity });
+        nodes.len() - 1
+    };
+    if counts.len() <= 1 || depth >= cfg.max_depth || total < 2 * cfg.min_leaf.max(1) {
+        return make_leaf(nodes);
+    }
+
+    // exhaustive threshold search: per feature, candidate thresholds
+    // are midpoints between adjacent distinct sorted values
+    let parent_gini = gini(&counts, total);
+    let mut best: Option<(f64, usize, f64)> = None; // (gain, feature, threshold)
+    for f in 0..N_FEATURES {
+        let mut sorted = idx.clone();
+        sorted.sort_by(|&a, &b| examples[a].features.0[f].total_cmp(&examples[b].features.0[f]));
+        let mut left_counts: HashMap<RouteLabel, usize> = HashMap::new();
+        for i in 0..total - 1 {
+            *left_counts.entry(examples[sorted[i]].label).or_insert(0) += 1;
+            let (va, vb) =
+                (examples[sorted[i]].features.0[f], examples[sorted[i + 1]].features.0[f]);
+            if va == vb {
+                continue;
+            }
+            let nl = i + 1;
+            let nr = total - nl;
+            if nl < cfg.min_leaf.max(1) || nr < cfg.min_leaf.max(1) {
+                continue;
+            }
+            let mut right_counts = counts.clone();
+            for (l, c) in &left_counts {
+                let r = right_counts.get_mut(l).expect("left labels ⊆ parent labels");
+                *r -= c;
+                if *r == 0 {
+                    right_counts.remove(l);
+                }
+            }
+            let weighted = (nl as f64 * gini(&left_counts, nl)
+                + nr as f64 * gini(&right_counts, nr))
+                / total as f64;
+            let gain = parent_gini - weighted;
+            // strict improvement keeps the first (lowest feature,
+            // lowest threshold) of any tie — deterministic training
+            if gain > best.map_or(1e-12, |(g, _, _)| g + 1e-12) {
+                best = Some((gain, f, (va + vb) / 2.0));
+            }
+        }
+    }
+    let Some((_, feature, threshold)) = best else {
+        // no feature separates the labels (duplicate points with
+        // conflicting winners): an impure leaf, gated by confidence
+        return make_leaf(nodes);
+    };
+
+    let (left_idx, right_idx): (Vec<usize>, Vec<usize>) =
+        idx.iter().partition(|&&i| examples[i].features.0[feature] <= threshold);
+    let at = nodes.len();
+    // placeholder, patched once the children know their indices
+    nodes.push(Node::Split { feature, threshold, left: 0, right: 0 });
+    let left = grow(nodes, examples, left_idx, depth + 1, cfg);
+    let right = grow(nodes, examples, right_idx, depth + 1, cfg);
+    nodes[at] = Node::Split { feature, threshold, left, right };
+    at
+}
+
+/// A confident in-distribution prediction from the forest.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LearnedRoute {
+    pub im: Impl,
+    pub reorder: Reordering,
+    pub dt: usize,
+    /// Purity-weighted vote share of the winning label, in (0, 1].
+    pub confidence: f64,
+}
+
+/// The trained forest plus everything needed to gate its answers:
+/// per-feature training ranges (off-distribution detection) and the
+/// confidence/support thresholds baked at train time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LearnedRouter {
+    pub trees: Vec<DecisionTree>,
+    /// Per-feature `(min, max)` over the training set.
+    pub ranges: Vec<(f64, f64)>,
+    /// Training-set size (observability; also persisted).
+    pub n_examples: usize,
+    pub min_confidence: f64,
+    pub min_support: usize,
+}
+
+impl LearnedRouter {
+    /// Train a forest. Errors (`Error::Usage`) on a training set too
+    /// small to ever clear the support gate.
+    pub fn train(examples: &[Example], cfg: &TrainConfig) -> Result<LearnedRouter> {
+        let n = examples.len();
+        if n < cfg.min_support.max(2) {
+            return Err(Error::Usage(format!(
+                "learned router needs ≥ {} examples, got {n}",
+                cfg.min_support.max(2)
+            )));
+        }
+        let mut ranges = vec![(f64::INFINITY, f64::NEG_INFINITY); N_FEATURES];
+        for ex in examples {
+            for (f, r) in ranges.iter_mut().enumerate() {
+                r.0 = r.0.min(ex.features.0[f]);
+                r.1 = r.1.max(ex.features.0[f]);
+            }
+        }
+        let mut rng = Prng::new(cfg.seed);
+        let full: Vec<usize> = (0..n).collect();
+        let mut trees = Vec::with_capacity(cfg.n_trees.max(1));
+        trees.push(DecisionTree::fit(examples, &full, cfg));
+        for _ in 1..cfg.n_trees.max(1) {
+            let sample: Vec<usize> = (0..n).map(|_| rng.below_usize(n)).collect();
+            trees.push(DecisionTree::fit(examples, &sample, cfg));
+        }
+        Ok(LearnedRouter {
+            trees,
+            ranges,
+            n_examples: n,
+            min_confidence: cfg.min_confidence,
+            min_support: cfg.min_support,
+        })
+    }
+
+    /// True when every feature lies inside its training range extended
+    /// by a 10%-of-span margin — the forest only interpolates; asking
+    /// it to extrapolate falls back to the analytic model.
+    pub fn in_distribution(&self, x: &FeatureVec) -> bool {
+        self.ranges.iter().enumerate().all(|(f, &(lo, hi))| {
+            let margin = (0.1 * (hi - lo)).max(1e-9);
+            x.0[f] >= lo - margin && x.0[f] <= hi + margin
+        })
+    }
+
+    /// Predict the winning plan for `x`, or `None` when the forest has
+    /// no confident in-distribution answer (the analytic fallback).
+    pub fn route(&self, x: &FeatureVec) -> Option<LearnedRoute> {
+        if self.ranges.len() != N_FEATURES || !self.in_distribution(x) {
+            return None;
+        }
+        let mut votes: HashMap<RouteLabel, (f64, usize)> = HashMap::new();
+        let mut total_weight = 0.0;
+        for t in &self.trees {
+            let (label, purity, count) = t.route(x)?;
+            let v = votes.entry(label).or_insert((0.0, 0));
+            v.0 += purity;
+            v.1 += count;
+            total_weight += purity;
+        }
+        if total_weight <= 0.0 {
+            return None;
+        }
+        let mut items: Vec<(&RouteLabel, &(f64, usize))> = votes.iter().collect();
+        items.sort_by(|a, b| {
+            b.1 .0.total_cmp(&a.1 .0).then_with(|| a.0.key().cmp(&b.0.key()))
+        });
+        let (label, &(weight, support)) = items[0];
+        let confidence = weight / total_weight;
+        if confidence < self.min_confidence || support < self.min_support {
+            return None;
+        }
+        Some(LearnedRoute {
+            im: label.im,
+            reorder: label.reorder,
+            dt: label.dt,
+            confidence,
+        })
+    }
+
+    /// Structural validation of a restored forest (see
+    /// [`DecisionTree::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.trees.is_empty() {
+            return Err(Error::Parse("learned router with no trees".into()));
+        }
+        if self.ranges.len() != N_FEATURES {
+            return Err(Error::Parse(format!(
+                "learned router carries {} feature ranges (this build has {N_FEATURES})",
+                self.ranges.len()
+            )));
+        }
+        if self.n_examples == 0 {
+            return Err(Error::Parse("learned router trained on zero examples".into()));
+        }
+        if !self.min_confidence.is_finite() || !(0.0..=1.0).contains(&self.min_confidence) {
+            return Err(Error::Parse("learned router confidence gate out of range".into()));
+        }
+        for (lo, hi) in &self.ranges {
+            if !lo.is_finite() || !hi.is_finite() || lo > hi {
+                return Err(Error::Parse("learned router feature range malformed".into()));
+            }
+        }
+        for t in &self.trees {
+            t.validate()?;
+        }
+        Ok(())
+    }
+
+    /// One-line human rendering for tables and logs.
+    pub fn summary(&self) -> String {
+        let nodes: usize = self.trees.iter().map(|t| t.nodes.len()).sum();
+        format!(
+            "{} trees / {} nodes over {} examples (conf ≥ {:.2}, support ≥ {})",
+            self.trees.len(),
+            nodes,
+            self.n_examples,
+            self.min_confidence,
+            self.min_support,
+        )
+    }
+}
+
+/// The feature encoding of a classified matrix at dense width `d` —
+/// the single definition every caller (tuner, benches, CLI, trainer)
+/// shares, so train-time and route-time features cannot drift.
+pub fn features_of(cls: &Classification, d: usize) -> FeatureVec {
+    let s = &cls.stats;
+    FeatureVec::new(
+        s.row_len_cv,
+        s.hub_mass_1pct,
+        s.diag_fraction,
+        s.block_diag_fraction,
+        s.n,
+        s.nnz,
+        d,
+    )
+}
+
+/// Extract training examples from a perf log: every record that
+/// carries structural features (`n > 0`), a positive measurement, and
+/// a parsable winning plan. Records from pre-feature artifacts, SpGEMM
+/// rows (no dense width), and malformed rows are skipped — the trainer
+/// never errors on a dirty log, it just learns from less.
+pub fn examples_from_log(log: &PerfLog) -> Vec<Example> {
+    let mut out = Vec::new();
+    for r in &log.records {
+        if r.n == 0 || r.d == 0 || r.dt == 0 || !(r.gflops > 0.0) {
+            continue;
+        }
+        let Ok(im) = crate::config::parse_impl(&r.impl_name) else { continue };
+        let Ok(reorder) = crate::report::parse_reordering(&r.reorder) else { continue };
+        out.push(Example {
+            features: FeatureVec::new(r.cv, r.hub, r.diag, r.block, r.n, r.nnz, r.d),
+            label: RouteLabel { im, reorder, dt: r.dt },
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lab(im: Impl, reorder: Reordering, dt: usize) -> RouteLabel {
+        RouteLabel { im, reorder, dt }
+    }
+
+    /// Two well-separated clusters in feature space with distinct
+    /// winners, plus a third distinguished by width.
+    fn clustered() -> Vec<Example> {
+        let mut ex = Vec::new();
+        for i in 0..6 {
+            // banded-ish: high diag fraction, low cv
+            ex.push(Example {
+                features: FeatureVec::new(0.2 + 0.01 * i as f64, 0.01, 0.95, 0.6, 4096, 40960, 16),
+                label: lab(Impl::Csr, Reordering::Rcm, 16),
+            });
+            // scale-free-ish: high cv, high hub mass
+            ex.push(Example {
+                features: FeatureVec::new(2.5 + 0.1 * i as f64, 0.4, 0.05, 0.1, 8192, 131072, 16),
+                label: lab(Impl::Pb, Reordering::DegreeSort, 8),
+            });
+            // same structure as the first cluster, wider: tiles
+            ex.push(Example {
+                features: FeatureVec::new(0.2 + 0.01 * i as f64, 0.01, 0.95, 0.6, 4096, 40960, 64),
+                label: lab(Impl::Csb, Reordering::Rcm, 16),
+            });
+        }
+        ex
+    }
+
+    #[test]
+    fn forest_reproduces_separable_winners() {
+        let ex = clustered();
+        let router = LearnedRouter::train(&ex, &TrainConfig::default()).unwrap();
+        router.validate().unwrap();
+        for e in &ex {
+            let r = router.route(&e.features).expect("in-distribution training point");
+            assert_eq!((r.im, r.reorder, r.dt), (e.label.im, e.label.reorder, e.label.dt));
+            assert!(r.confidence >= 0.65, "confidence {}", r.confidence);
+        }
+    }
+
+    #[test]
+    fn off_distribution_falls_back_to_none() {
+        let router = LearnedRouter::train(&clustered(), &TrainConfig::default()).unwrap();
+        // cv far beyond anything trained on
+        let far = FeatureVec::new(250.0, 0.4, 0.05, 0.1, 8192, 131072, 16);
+        assert!(!router.in_distribution(&far));
+        assert!(router.route(&far).is_none());
+        // n far beyond the trained range
+        let huge = FeatureVec::new(0.2, 0.01, 0.95, 0.6, 1 << 30, 1 << 33, 16);
+        assert!(router.route(&huge).is_none());
+    }
+
+    #[test]
+    fn conflicting_labels_fail_the_confidence_gate() {
+        // identical features, three different winners: no split can
+        // separate them, the leaf is 1/3-pure everywhere
+        let f = FeatureVec::new(1.0, 0.1, 0.3, 0.2, 1024, 8192, 16);
+        let ex = vec![
+            Example { features: f, label: lab(Impl::Csr, Reordering::None, 16) },
+            Example { features: f, label: lab(Impl::Opt, Reordering::None, 16) },
+            Example { features: f, label: lab(Impl::Csb, Reordering::None, 16) },
+        ];
+        let router = LearnedRouter::train(&ex, &TrainConfig::default()).unwrap();
+        assert!(router.in_distribution(&f));
+        assert!(router.route(&f).is_none(), "ambiguous leaf must fall back");
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let ex = clustered();
+        let a = LearnedRouter::train(&ex, &TrainConfig::default()).unwrap();
+        let b = LearnedRouter::train(&ex, &TrainConfig::default()).unwrap();
+        assert_eq!(a, b, "same data + same seed must train the same forest");
+    }
+
+    #[test]
+    fn too_few_examples_error() {
+        let ex = clustered();
+        assert!(LearnedRouter::train(&ex[..1], &TrainConfig::default()).is_err());
+        assert!(LearnedRouter::train(&[], &TrainConfig::default()).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_structural_garbage() {
+        let good = LearnedRouter::train(&clustered(), &TrainConfig::default()).unwrap();
+        // child pointing at (or before) its parent
+        let mut bad = good.clone();
+        if let Node::Split { left, .. } = &mut bad.trees[0].nodes[0] {
+            *left = 0;
+        }
+        assert!(bad.validate().is_err(), "self-referential child must reject");
+        // unknown feature index
+        let mut bad = good.clone();
+        if let Node::Split { feature, .. } = &mut bad.trees[0].nodes[0] {
+            *feature = N_FEATURES;
+        }
+        assert!(bad.validate().is_err());
+        // leaf purity out of range
+        let mut bad = good.clone();
+        for n in bad.trees[0].nodes.iter_mut() {
+            if let Node::Leaf { purity, .. } = n {
+                *purity = 1.5;
+            }
+        }
+        assert!(bad.validate().is_err());
+        // wrong feature-range arity (a snapshot from a different build)
+        let mut bad = good.clone();
+        bad.ranges.pop();
+        assert!(bad.validate().is_err());
+        assert!(bad.route(&FeatureVec::zero()).is_none(), "invalid router must not route");
+        // empty forest
+        let bad = LearnedRouter { trees: Vec::new(), ..good.clone() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn examples_come_only_from_featureful_records() {
+        use crate::report::PerfRecord;
+        let mut log = PerfLog::new();
+        // featureful winner record
+        log.push(PerfRecord {
+            reorder: "rcm".into(),
+            source: "analytic".into(),
+            cv: 0.3,
+            hub: 0.02,
+            diag: 0.9,
+            block: 0.5,
+            n: 4096,
+            nnz: 40000,
+            ..PerfRecord::basic("bench_route", "m", "Diagonal", "CSR", 16, 8, 2.5)
+        });
+        // pre-feature record (n = 0): skipped
+        log.push(PerfRecord::basic("bench_route", "old", "Random", "CSR", 16, 16, 1.0));
+        // unparsable impl: skipped, not an error
+        log.push(PerfRecord {
+            n: 64,
+            nnz: 256,
+            ..PerfRecord::basic("bench_x", "weird", "Random", "WAT", 4, 4, 1.0)
+        });
+        let ex = examples_from_log(&log);
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].label, lab(Impl::Csr, Reordering::Rcm, 8));
+        assert!(ex[0].features.is_present());
+    }
+}

@@ -37,6 +37,17 @@
 //! the explored top-k exactly where the structural models collapse to
 //! the random floor.
 //!
+//! The explore *order* itself has two sources: the analytic roofline
+//! ranking above, and — once enough routing records have accumulated —
+//! a **learned structure router** ([`LearnedRouter`], a pure-Rust
+//! decision forest trained on the features those records carry via
+//! [`examples_from_log`]). A confident, supported, in-distribution
+//! prediction is promoted to the front of the explore order; anything
+//! else falls back to the analytic ranking, and every pinned
+//! [`RouteDecision`] records which source ranked it ([`RouteSource`])
+//! plus the regret of the learned pick against the measured analytic
+//! top candidate.
+//!
 //! The engine is **workload-aware**: [`Workload`] names the two
 //! multiply dimensions and [`Engine::submit_workload`] dispatches on
 //! it. SpMM jobs ([`JobSpec`]) route across the dense-operand kernel
@@ -80,6 +91,7 @@ mod autotune;
 mod batch;
 mod engine;
 mod job;
+mod learned;
 mod planner;
 mod registry;
 mod serve;
@@ -87,6 +99,10 @@ mod serve;
 pub use autotune::{
     Autotuner, AutotunePolicy, Candidate, PipelineDecision, RouteDecision, SpGemmCandidate,
     SpGemmDecision,
+};
+pub use learned::{
+    examples_from_log, features_of, DecisionTree, Example, LearnedRoute, LearnedRouter, Node,
+    RouteLabel, RouteSource, TrainConfig,
 };
 pub use batch::{BatchReport, BufferPool};
 pub use engine::{Engine, EngineConfig, PipelineOutput, WorkloadOutcome};

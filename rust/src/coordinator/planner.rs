@@ -446,7 +446,11 @@ impl Planner {
         roof_gflops: f64,
         measured_gflops: f64,
     ) {
-        if roof_gflops <= 0.0 {
+        // a non-finite measurement (NaN from a zero-length timing, or
+        // an inf from a zero-flop degenerate) must not enter the EMA:
+        // clamp is identity on NaN, so one poisoned sample would stick
+        // in the prior forever and persist into the snapshot
+        if roof_gflops <= 0.0 || !roof_gflops.is_finite() || !measured_gflops.is_finite() {
             return;
         }
         let eff = (measured_gflops / roof_gflops).clamp(0.0, 2.0);
@@ -461,7 +465,9 @@ impl Planner {
     /// prediction used ([`Prediction::roof_gflops`]), so the learned
     /// fraction matches what `predict` multiplies by.
     pub fn observe(&self, class: SparsityClass, im: Impl, roof_gflops: f64, measured_gflops: f64) {
-        if roof_gflops <= 0.0 {
+        // see observe_spgemm: NaN survives `.clamp` (identity on NaN)
+        // and would poison the EMA permanently — drop the sample
+        if roof_gflops <= 0.0 || !roof_gflops.is_finite() || !measured_gflops.is_finite() {
             return;
         }
         let eff = (measured_gflops / roof_gflops).clamp(0.0, 2.0);
@@ -494,14 +500,23 @@ impl Planner {
 
     /// Overwrite one `(class, impl)` prior — restoring a persisted
     /// snapshot. Clamped to the same `[0, 2]` band `observe` enforces,
-    /// so a hand-edited snapshot cannot plant an unbounded prior.
+    /// so a hand-edited snapshot cannot plant an unbounded prior; a
+    /// non-finite value (an already-poisoned snapshot, which `.clamp`
+    /// passes through) is ignored entirely so the slot cold-starts
+    /// from its seed prior instead of re-poisoning.
     pub fn set_prior(&self, class: SparsityClass, im: Impl, value: f64) {
+        if !value.is_finite() {
+            return;
+        }
         self.priors.lock().unwrap().insert((class, im), value.clamp(0.0, 2.0));
     }
 
-    /// Overwrite one SpGEMM prior (snapshot restore; clamped like
-    /// [`Planner::set_prior`]).
+    /// Overwrite one SpGEMM prior (snapshot restore; clamped and
+    /// NaN-rejected like [`Planner::set_prior`]).
     pub fn set_spgemm_prior(&self, class: SparsityClass, im: SpGemmImpl, value: f64) {
+        if !value.is_finite() {
+            return;
+        }
         self.spgemm_priors.lock().unwrap().insert((class, im), value.clamp(0.0, 2.0));
     }
 
@@ -844,6 +859,46 @@ mod tests {
         assert_eq!(tile_candidates(8), vec![8]);
         assert_eq!(tile_candidates(64), vec![64, 32, 16, 8]);
         assert_eq!(tile_candidates(100), vec![100, 64, 32, 16, 8]);
+    }
+
+    #[test]
+    fn non_finite_observations_never_poison_the_priors() {
+        use crate::spgemm::SpGemmImpl;
+        let p = planner();
+        let before = p.prior(SparsityClass::Random, Impl::Csr);
+        assert!(before.is_finite());
+        // regression: NaN survives `.clamp(0.0, 2.0)` (clamp is
+        // identity on NaN) — before the guard, one NaN measurement
+        // stuck in the EMA forever and persisted into the snapshot
+        p.observe(SparsityClass::Random, Impl::Csr, 10.0, f64::NAN);
+        p.observe(SparsityClass::Random, Impl::Csr, 10.0, f64::INFINITY);
+        p.observe(SparsityClass::Random, Impl::Csr, f64::NAN, 5.0);
+        assert_eq!(p.prior(SparsityClass::Random, Impl::Csr), before);
+        p.observe_spgemm(SparsityClass::Random, SpGemmImpl::Hash, 10.0, f64::NAN);
+        assert!(p.spgemm_prior(SparsityClass::Random, SpGemmImpl::Hash).is_finite());
+        // a healthy observation still moves the prior
+        p.observe(SparsityClass::Random, Impl::Csr, 10.0, 9.0);
+        assert_ne!(p.prior(SparsityClass::Random, Impl::Csr), before);
+        assert!(p.prior(SparsityClass::Random, Impl::Csr).is_finite());
+    }
+
+    #[test]
+    fn restoring_a_poisoned_prior_cold_starts_the_slot() {
+        use crate::spgemm::SpGemmImpl;
+        let p = planner();
+        let seed = p.prior(SparsityClass::Blocked, Impl::Csb);
+        // an already-poisoned snapshot (written before the observe
+        // guard existed) must not re-poison on restore: the slot keeps
+        // its seed prior instead
+        p.set_prior(SparsityClass::Blocked, Impl::Csb, f64::NAN);
+        assert_eq!(p.prior(SparsityClass::Blocked, Impl::Csb), seed);
+        p.set_spgemm_prior(SparsityClass::Blocked, SpGemmImpl::Hash, f64::INFINITY);
+        assert!(p.spgemm_prior(SparsityClass::Blocked, SpGemmImpl::Hash).is_finite());
+        // finite values still restore, clamped to the observe band
+        p.set_prior(SparsityClass::Blocked, Impl::Csb, 5.0);
+        assert_eq!(p.prior(SparsityClass::Blocked, Impl::Csb), 2.0);
+        p.set_prior(SparsityClass::Blocked, Impl::Csb, 0.37);
+        assert_eq!(p.prior(SparsityClass::Blocked, Impl::Csb), 0.37);
     }
 
     #[test]

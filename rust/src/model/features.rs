@@ -1,0 +1,149 @@
+//! Feature vector for the learned structure router.
+//!
+//! The learned router (`crate::coordinator::LearnedRouter`) predicts
+//! the winning `(impl, reorder, dt)` triple directly from the same
+//! structural statistics the classifier derives — this module fixes
+//! the *encoding* of those statistics as a flat `f64` vector so the
+//! model layer, the tree trainer, and the snapshot format all agree on
+//! feature order and scaling.
+//!
+//! Scaling choices:
+//!
+//! - The four structural fractions (row-length CV, 1% hub mass,
+//!   diagonal fraction, block-diagonal fraction) are used raw — they
+//!   are already dimensionless and O(1).
+//! - The three size-like quantities (`n`, `nnz`, `d`) are log2-scaled:
+//!   tree splits are threshold comparisons, and a threshold in log
+//!   space expresses "bigger than ~2^k" the way cache-capacity
+//!   boundaries actually behave. `log2(x + 1)` keeps zero finite.
+//!
+//! Non-finite inputs (a NaN CV from a degenerate matrix, say) are
+//! sanitized to 0.0 at construction: a feature vector must never carry
+//! NaN into training, routing, or the persisted snapshot.
+
+/// Number of features in a [`FeatureVec`]. Fixed by the snapshot
+/// format (STATE_VERSION 4 stores `f0..f{N-1}` per route record).
+pub const N_FEATURES: usize = 7;
+
+/// Human-readable names, index-aligned with [`FeatureVec`] storage.
+pub const FEATURE_NAMES: [&str; N_FEATURES] = [
+    "row_len_cv",
+    "hub_mass_1pct",
+    "diag_fraction",
+    "block_diag_fraction",
+    "log2_n",
+    "log2_nnz",
+    "log2_d",
+];
+
+/// A point in the router's feature space.
+///
+/// Construct via [`FeatureVec::new`] (applies scaling + sanitization)
+/// or [`FeatureVec::from_raw`] (trusts the caller, still sanitizes —
+/// used when re-hydrating from a snapshot or a perf record that
+/// already stores scaled values).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FeatureVec(pub [f64; N_FEATURES]);
+
+impl FeatureVec {
+    /// Build a feature vector from raw structural statistics.
+    ///
+    /// `cv`, `hub`, `diag`, `block` are the dimensionless fractions
+    /// from `StructuralStats`; `n`, `nnz` are matrix dimensions; `d`
+    /// is the dense operand width of the job being routed.
+    pub fn new(cv: f64, hub: f64, diag: f64, block: f64, n: usize, nnz: usize, d: usize) -> Self {
+        Self::from_raw([
+            cv,
+            hub,
+            diag,
+            block,
+            (n as f64 + 1.0).log2(),
+            (nnz as f64 + 1.0).log2(),
+            (d as f64 + 1.0).log2(),
+        ])
+    }
+
+    /// Wrap already-scaled values, replacing non-finite entries with
+    /// 0.0 so NaN can never enter training or the snapshot.
+    pub fn from_raw(values: [f64; N_FEATURES]) -> Self {
+        let mut v = values;
+        for x in v.iter_mut() {
+            if !x.is_finite() {
+                *x = 0.0;
+            }
+        }
+        FeatureVec(v)
+    }
+
+    /// The all-zero vector (used for records that carry no features,
+    /// e.g. SpGEMM rows in a perf log).
+    pub fn zero() -> Self {
+        FeatureVec([0.0; N_FEATURES])
+    }
+
+    /// True if any entry is non-zero — feature-less records store the
+    /// zero vector, and the trainer skips them.
+    pub fn is_present(&self) -> bool {
+        self.0.iter().any(|&x| x != 0.0)
+    }
+
+    /// Invert the `log2(x + 1)` size encoding back to the integer
+    /// count. Exact for any count that fits in an `f64` mantissa
+    /// (rounding absorbs the ~ulp-level `exp2 ∘ log2` error), so a
+    /// perf record emitted from a scaled decision vector re-derives
+    /// the identical [`FeatureVec`] when re-trained on.
+    pub fn count_of(scaled: f64) -> usize {
+        if !scaled.is_finite() || scaled <= 0.0 {
+            return 0;
+        }
+        (scaled.exp2() - 1.0).round() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_scaling_is_monotone_in_size() {
+        let small = FeatureVec::new(0.5, 0.0, 0.0, 0.0, 1 << 10, 1 << 13, 4);
+        let large = FeatureVec::new(0.5, 0.0, 0.0, 0.0, 1 << 20, 1 << 24, 64);
+        assert!(small.0[4] < large.0[4]);
+        assert!(small.0[5] < large.0[5]);
+        assert!(small.0[6] < large.0[6]);
+        // Fractions pass through unscaled.
+        assert_eq!(small.0[0], 0.5);
+    }
+
+    #[test]
+    fn non_finite_inputs_sanitize_to_zero() {
+        let v = FeatureVec::new(f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.25, 8, 16, 4);
+        assert_eq!(v.0[0], 0.0);
+        assert_eq!(v.0[1], 0.0);
+        assert_eq!(v.0[2], 0.0);
+        assert_eq!(v.0[3], 0.25);
+        assert!(v.0.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn zero_vector_is_not_present() {
+        assert!(!FeatureVec::zero().is_present());
+        assert!(FeatureVec::new(0.1, 0.0, 0.0, 0.0, 0, 0, 0).is_present());
+    }
+
+    #[test]
+    fn names_align_with_width() {
+        assert_eq!(FEATURE_NAMES.len(), N_FEATURES);
+    }
+
+    #[test]
+    fn count_round_trips_through_the_log_encoding() {
+        for n in [0usize, 1, 2, 7, 1023, 1 << 20, 3_141_592, (1 << 40) + 12345] {
+            let v = FeatureVec::new(0.0, 0.0, 0.0, 0.0, n, n, 4);
+            assert_eq!(FeatureVec::count_of(v.0[4]), n, "n = {n}");
+            assert_eq!(FeatureVec::count_of(v.0[5]), n, "nnz = {n}");
+        }
+        assert_eq!(FeatureVec::count_of(f64::NAN), 0);
+        assert_eq!(FeatureVec::count_of(-1.0), 0);
+    }
+}

@@ -24,6 +24,7 @@
 mod ai;
 mod blocked;
 mod cache_aware;
+mod features;
 mod ooc;
 mod pb;
 mod pipeline;
@@ -34,6 +35,7 @@ mod spgemm;
 pub use ai::{AiParams, SparsityModel};
 pub use blocked::{expected_z, expected_z_exact, BlockStats};
 pub use cache_aware::{BandwidthCeiling, CacheAwareRoofline, LatencyModel};
+pub use features::{FeatureVec, FEATURE_NAMES, N_FEATURES};
 pub use ooc::{ai_ooc, bytes_ooc, bytes_ooc_extra};
 pub use pb::{ai_pb, ai_pb_tiled, bytes_pb, bytes_pb_tiled, PB_STRUCT_BYTES_PER_NNZ};
 pub use pipeline::{

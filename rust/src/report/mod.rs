@@ -14,6 +14,7 @@ mod table;
 pub use csv::write_csv;
 pub use perf::{PerfLog, PerfRecord};
 pub use state::{atomic_write, AutotuneState, FileLock, STATE_VERSION};
+pub(crate) use state::parse_reordering;
 pub use svg::{Marker, Series, SvgPlot, VLine, PALETTE};
 pub use sysinfo::{probe_system, SystemInfo};
 pub use table::{fmt3, Table};

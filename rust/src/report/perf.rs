@@ -44,6 +44,21 @@ pub struct PerfRecord {
     pub predicted_gflops: f64,
     /// Measured GFLOP/s.
     pub gflops: f64,
+    /// Which router produced the decision this record describes
+    /// (`analytic` / `learned`); benches without a router emit
+    /// `analytic`, and older artifacts parse with that default.
+    pub source: String,
+    /// Structural features of the routed matrix at decision time —
+    /// the learned router's training inputs (`examples_from_log`).
+    /// Raw fractions plus raw sizes; all-zero (`n == 0`) marks a
+    /// record without features (pre-feature artifacts, SpGEMM rows),
+    /// which the trainer skips.
+    pub cv: f64,
+    pub hub: f64,
+    pub diag: f64,
+    pub block: f64,
+    pub n: usize,
+    pub nnz: usize,
 }
 
 impl PerfRecord {
@@ -68,12 +83,30 @@ impl PerfRecord {
             reorder: "none".into(),
             predicted_gflops: 0.0,
             gflops,
+            source: "analytic".into(),
+            cv: 0.0,
+            hub: 0.0,
+            diag: 0.0,
+            block: 0.0,
+            n: 0,
+            nnz: 0,
         }
     }
 }
 
 fn esc(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Shortest-round-trip float rendering with the same non-finite guard
+/// the throughput fields get: NaN/inf is not JSON and a single bad
+/// value must not cost the whole artifact.
+fn fnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".into()
+    }
 }
 
 impl PerfRecord {
@@ -86,7 +119,9 @@ impl PerfRecord {
         format!(
             "{{\"bench\": \"{}\", \"matrix\": \"{}\", \"class\": \"{}\", \
              \"impl\": \"{}\", \"d\": {}, \"dt\": {}, \"reorder\": \"{}\", \
-             \"predicted\": {:.4}, \"gflops\": {:.4}}}",
+             \"predicted\": {:.4}, \"gflops\": {:.4}, \"source\": \"{}\", \
+             \"cv\": {}, \"hub\": {}, \"diag\": {}, \"block\": {}, \
+             \"n\": {}, \"nnz\": {}}}",
             esc(&self.bench),
             esc(&self.matrix),
             esc(&self.class),
@@ -95,7 +130,14 @@ impl PerfRecord {
             self.dt,
             esc(&self.reorder),
             pred,
-            gf
+            gf,
+            esc(&self.source),
+            fnum(self.cv),
+            fnum(self.hub),
+            fnum(self.diag),
+            fnum(self.block),
+            self.n,
+            self.nnz,
         )
     }
 }
@@ -148,7 +190,18 @@ impl PerfLog {
             if !body.contains("\"bench\"") {
                 continue;
             }
-            records.push(parse_record(body)?);
+            // a single malformed record (hand-edited artifact, or one
+            // written by a buggy tool) is skipped with a warning — the
+            // artifact is a build product, and the learned router
+            // trains on whatever healthy records remain; losing the
+            // whole log to one bad row was the old behaviour and it
+            // turned a cosmetic corruption into an empty training set
+            match parse_record(body) {
+                Ok(r) => records.push(r),
+                Err(e) => {
+                    eprintln!("warning: skipping malformed perf record: {e}");
+                }
+            }
             rest = &rest[end + 1..];
         }
         Ok(PerfLog { records })
@@ -221,6 +274,15 @@ fn parse_record(body: &str) -> Result<PerfRecord> {
         reorder: field_str(body, "reorder").unwrap_or_else(|_| "none".into()),
         predicted_gflops: field_num(body, "predicted").unwrap_or(0.0),
         gflops: field_num(body, "gflops")?,
+        // learned-router extras (PR 10): source tag + structural
+        // features; pre-feature artifacts parse with the defaults
+        source: field_str(body, "source").unwrap_or_else(|_| "analytic".into()),
+        cv: field_num(body, "cv").unwrap_or(0.0),
+        hub: field_num(body, "hub").unwrap_or(0.0),
+        diag: field_num(body, "diag").unwrap_or(0.0),
+        block: field_num(body, "block").unwrap_or(0.0),
+        n: field_num(body, "n").unwrap_or(0.0) as usize,
+        nnz: field_num(body, "nnz").unwrap_or(0.0) as usize,
     })
 }
 
@@ -243,11 +305,30 @@ mod tests {
             predicted_gflops: 4.5,
             ..rec("bench_route", "CSB", 16, 8, 5.25)
         });
+        // a learned-routed record with structural features — awkward
+        // binary fractions must survive exactly (shortest-round-trip
+        // rendering), since the learned router trains on these
+        log.push(PerfRecord {
+            reorder: "degree".into(),
+            source: "learned".into(),
+            cv: 0.1 + 0.2,
+            hub: 0.371234567890123,
+            diag: 0.0625,
+            block: std::f64::consts::FRAC_1_SQRT_2,
+            n: 262144,
+            nnz: 4194304,
+            ..rec("bench_route_learned", "PB", 64, 16, 7.5)
+        });
         let text = log.to_json();
         let back = PerfLog::parse(&text).unwrap();
         assert_eq!(back, log);
         assert_eq!(back.records[2].reorder, "rcm");
         assert!((back.records[2].predicted_gflops - 4.5).abs() < 1e-9);
+        assert_eq!(back.records[3].source, "learned");
+        assert_eq!(back.records[3].cv, 0.1 + 0.2, "features must round-trip exactly");
+        assert_eq!(back.records[3].block, std::f64::consts::FRAC_1_SQRT_2);
+        assert_eq!(back.records[3].n, 262144);
+        assert_eq!(back.records[3].nnz, 4194304);
     }
 
     #[test]
@@ -261,6 +342,10 @@ mod tests {
         assert_eq!(log.records[0].reorder, "none");
         assert_eq!(log.records[0].predicted_gflops, 0.0);
         assert!((log.records[0].gflops - 1.25).abs() < 1e-9);
+        // learned-router extras default too: analytic, no features
+        assert_eq!(log.records[0].source, "analytic");
+        assert_eq!(log.records[0].n, 0);
+        assert_eq!(log.records[0].cv, 0.0);
     }
 
     #[test]
@@ -273,11 +358,46 @@ mod tests {
     }
 
     #[test]
-    fn parse_rejects_malformed_records() {
-        assert!(PerfLog::parse("{\"records\": [{\"bench\": \"x\"}]}").is_err());
+    fn parse_skips_malformed_records_and_keeps_the_rest() {
+        // a malformed record no longer costs the whole artifact: it is
+        // skipped (with a warning) and every healthy record survives —
+        // the learned router trains on what remains
+        let mut log = PerfLog::new();
+        log.push(rec("bench_batch", "CSR", 4, 4, 1.5));
+        let mut text = log.to_json();
+        text = text.replace("]}", ", {\"bench\": \"x\"}\n]}");
+        let back = PerfLog::parse(&text).unwrap();
+        assert_eq!(back.records.len(), 1, "healthy record must survive the bad row");
+        assert_eq!(back.records[0].impl_name, "CSR");
+        // all-malformed parses as empty, not Err
+        assert!(PerfLog::parse("{\"records\": [{\"bench\": \"x\"}]}")
+            .unwrap()
+            .records
+            .is_empty());
         // no records at all is fine (empty artifact)
         assert!(PerfLog::parse("{\"records\": []}").unwrap().records.is_empty());
         assert!(PerfLog::parse("").unwrap().records.is_empty());
+    }
+
+    #[test]
+    fn non_finite_features_serialise_as_zero() {
+        // same guard the throughput fields have: a NaN row-length CV
+        // (degenerate matrix) must not emit a bare `NaN` token and
+        // corrupt the training artifact
+        let mut log = PerfLog::new();
+        log.push(PerfRecord {
+            cv: f64::NAN,
+            hub: f64::INFINITY,
+            diag: 0.5,
+            n: 100,
+            nnz: 400,
+            ..rec("bench_route", "CSR", 4, 4, 1.0)
+        });
+        let back = PerfLog::parse(&log.to_json()).unwrap();
+        assert_eq!(back.records.len(), 1);
+        assert_eq!(back.records[0].cv, 0.0);
+        assert_eq!(back.records[0].hub, 0.0);
+        assert_eq!(back.records[0].diag, 0.5);
     }
 
     #[test]

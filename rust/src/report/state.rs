@@ -26,11 +26,21 @@
 //! exactly as it re-adopts routing decisions — no re-measurement, no
 //! re-exploration.
 //!
+//! Since v4 the snapshot also carries the **trained learned router**
+//! ([`crate::coordinator::LearnedRouter`], kinds `learned_meta` +
+//! `learned_range` + `learned_node`): training is deterministic but
+//! needs the accumulated `BENCH_route.json` records, so a restarted
+//! server re-installs the forest and routes learned-vs-analytic
+//! exactly as before the restart — no retraining. A restored forest
+//! is structurally validated ([`crate::coordinator::LearnedRouter::validate`])
+//! before it is accepted; a malformed tree rejects the whole snapshot.
+//!
 //! The format is the repo's usual flat-record JSON (the crate builds
 //! offline; serde is unavailable): one top-level object
-//! `{"version": 3, "records": [...]}` whose records are discriminated
+//! `{"version": 4, "records": [...]}` whose records are discriminated
 //! by a `"kind"` key (`calib`, `ladder_level`, `route`, `spgemm`,
-//! `spgemm_candidate`, `pipeline`, `spmm_prior`, `spgemm_prior`).
+//! `spgemm_candidate`, `pipeline`, `learned_meta`, `learned_range`,
+//! `learned_node`, `spmm_prior`, `spgemm_prior`).
 //! Floats are rendered with Rust's
 //! shortest-round-trip `Display`, and records are emitted in sorted
 //! key order, so save → load → save is **byte-identical** — the
@@ -42,10 +52,14 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::config::parse_impl;
-use crate::coordinator::{PipelineDecision, RouteDecision, SpGemmCandidate, SpGemmDecision};
+use crate::coordinator::{
+    DecisionTree, LearnedRouter, Node, PipelineDecision, RouteDecision, RouteLabel, RouteSource,
+    SpGemmCandidate, SpGemmDecision,
+};
 use crate::error::{Error, Result};
 use crate::gen::SparsityClass;
 use crate::membench::{LadderLevel, MeasuredLadder};
+use crate::model::{FeatureVec, N_FEATURES};
 use crate::sparse::Reordering;
 use crate::spgemm::SpGemmImpl;
 use crate::spmm::Impl;
@@ -54,8 +68,10 @@ use crate::spmm::Impl;
 /// refuses mismatched versions (cold start beats misread state).
 /// v2 added the measured calibration ladder (`calib` / `ladder_level`
 /// records); v3 added pinned whole-chain pipeline plans (`pipeline`
-/// records).
-pub const STATE_VERSION: u64 = 3;
+/// records); v4 added the trained learned router (`learned_meta` /
+/// `learned_range` / `learned_node` records) and the route records'
+/// source / confidence / analytic-baseline / feature columns.
+pub const STATE_VERSION: u64 = 4;
 
 /// How long a writer waits on a held [`FileLock`] before assuming the
 /// holder crashed and stealing it.
@@ -151,6 +167,9 @@ pub struct AutotuneState {
     /// dispatch decision), if one was run — a restored engine installs
     /// it without re-measuring.
     pub ladder: Option<MeasuredLadder>,
+    /// Trained learned router, if one was installed — a restored
+    /// engine routes learned-vs-analytic without retraining.
+    pub learned: Option<LearnedRouter>,
 }
 
 fn esc(s: &str) -> String {
@@ -182,12 +201,20 @@ fn parse_class(s: &str) -> Result<SparsityClass> {
     }
 }
 
-fn parse_reordering(s: &str) -> Result<Reordering> {
+pub(crate) fn parse_reordering(s: &str) -> Result<Reordering> {
     match s {
         "none" => Ok(Reordering::None),
         "rcm" => Ok(Reordering::Rcm),
         "degree" => Ok(Reordering::DegreeSort),
         other => Err(Error::Parse(format!("unknown reordering '{other}'"))),
+    }
+}
+
+fn parse_source(s: &str) -> Result<RouteSource> {
+    match s {
+        "analytic" => Ok(RouteSource::Analytic),
+        "learned" => Ok(RouteSource::Learned),
+        other => Err(Error::Parse(format!("unknown route source '{other}'"))),
     }
 }
 
@@ -208,6 +235,7 @@ impl AutotuneState {
             && self.spmm_priors.is_empty()
             && self.spgemm_priors.is_empty()
             && self.ladder.is_none()
+            && self.learned.is_none()
     }
 
     /// Serialise to the versioned snapshot format. Deterministic:
@@ -254,10 +282,21 @@ impl AutotuneState {
             }
         }
         for r in routes {
+            // the decision-time feature vector rides along (f0..f6 in
+            // FEATURE_NAMES order) so a restored decision can still be
+            // audited against the learned router that ranked it
+            let feats: String = r
+                .features
+                .0
+                .iter()
+                .enumerate()
+                .map(|(i, v)| format!(", \"f{i}\": {}", num(*v)))
+                .collect();
             recs.push(format!(
                 "{{\"kind\": \"route\", \"matrix\": \"{}\", \"d\": {}, \"impl\": \"{}\", \
                  \"reorder\": \"{}\", \"dt\": {}, \"class\": \"{}\", \"predicted\": {}, \
-                 \"measured\": {}, \"enumerated\": {}, \"explored\": {}, \"regret\": {}}}",
+                 \"measured\": {}, \"enumerated\": {}, \"explored\": {}, \"regret\": {}, \
+                 \"source\": \"{}\", \"conf\": {}, \"analytic_gf\": {}{}}}",
                 esc(&r.matrix),
                 r.d,
                 r.im,
@@ -269,6 +308,10 @@ impl AutotuneState {
                 r.enumerated,
                 r.explored,
                 num(r.regret_gflops),
+                r.source,
+                num(r.confidence),
+                num(r.analytic_gflops),
+                feats,
             ));
         }
         for s in spgemm {
@@ -318,6 +361,49 @@ impl AutotuneState {
                 p.explored,
                 num(p.regret_gflops),
             ));
+        }
+        if let Some(lr) = &self.learned {
+            // the meta record precedes its range/node records so the
+            // single-pass parser can attach them (the calib /
+            // ladder_level ordering contract); ranges in feature-index
+            // order, nodes in (tree, node) order — positional, so the
+            // parser verifies indices as it re-assembles the forest
+            recs.push(format!(
+                "{{\"kind\": \"learned_meta\", \"examples\": {}, \"min_conf\": {}, \
+                 \"min_support\": {}, \"trees\": {}}}",
+                lr.n_examples,
+                num(lr.min_confidence),
+                lr.min_support,
+                lr.trees.len(),
+            ));
+            for (f, (lo, hi)) in lr.ranges.iter().enumerate() {
+                recs.push(format!(
+                    "{{\"kind\": \"learned_range\", \"feature\": {f}, \"lo\": {}, \"hi\": {}}}",
+                    num(*lo),
+                    num(*hi),
+                ));
+            }
+            for (t, tree) in lr.trees.iter().enumerate() {
+                for (n, node) in tree.nodes.iter().enumerate() {
+                    match node {
+                        Node::Split { feature, threshold, left, right } => recs.push(format!(
+                            "{{\"kind\": \"learned_node\", \"tree\": {t}, \"node\": {n}, \
+                             \"split\": {feature}, \"thresh\": {}, \"left\": {left}, \
+                             \"right\": {right}}}",
+                            num(*threshold),
+                        )),
+                        Node::Leaf { label, count, purity } => recs.push(format!(
+                            "{{\"kind\": \"learned_node\", \"tree\": {t}, \"node\": {n}, \
+                             \"impl\": \"{}\", \"reorder\": \"{}\", \"dt\": {}, \
+                             \"count\": {count}, \"purity\": {}}}",
+                            label.im,
+                            label.reorder,
+                            label.dt,
+                            num(*purity),
+                        )),
+                    }
+                }
+            }
         }
         for (c, i, v) in &spmm_priors {
             recs.push(format!(
@@ -400,20 +486,35 @@ impl AutotuneState {
                         triad_gbs: field_num(body, "triad")?,
                     });
                 }
-                "route" => state.routes.push(RouteDecision {
-                    matrix: field_str(body, "matrix")?,
-                    d: field_num(body, "d")? as usize,
-                    im: parse_impl(&field_str(body, "impl")?)
-                        .map_err(|e| Error::Parse(e.to_string()))?,
-                    reorder: parse_reordering(&field_str(body, "reorder")?)?,
-                    dt: field_num(body, "dt")? as usize,
-                    class: parse_class(&field_str(body, "class")?)?,
-                    predicted_gflops: field_num(body, "predicted")?,
-                    measured_gflops: field_num(body, "measured")?,
-                    enumerated: field_num(body, "enumerated")? as usize,
-                    explored: field_num(body, "explored")? as usize,
-                    regret_gflops: field_num(body, "regret")?,
-                }),
+                "route" => {
+                    let mut feats = [0.0; N_FEATURES];
+                    for (i, f) in feats.iter_mut().enumerate() {
+                        *f = field_num(body, &format!("f{i}"))?;
+                    }
+                    state.routes.push(RouteDecision {
+                        matrix: field_str(body, "matrix")?,
+                        d: field_num(body, "d")? as usize,
+                        im: parse_impl(&field_str(body, "impl")?)
+                            .map_err(|e| Error::Parse(e.to_string()))?,
+                        reorder: parse_reordering(&field_str(body, "reorder")?)?,
+                        dt: field_num(body, "dt")? as usize,
+                        class: parse_class(&field_str(body, "class")?)?,
+                        predicted_gflops: field_num(body, "predicted")?,
+                        measured_gflops: field_num(body, "measured")?,
+                        enumerated: field_num(body, "enumerated")? as usize,
+                        explored: field_num(body, "explored")? as usize,
+                        regret_gflops: field_num(body, "regret")?,
+                        source: parse_source(&field_str(body, "source")?)?,
+                        confidence: field_num(body, "conf")?,
+                        // key deliberately NOT "analytic": the substring
+                        // field lookup would first hit the *value* of
+                        // `"source": "analytic"` and misparse
+                        analytic_gflops: field_num(body, "analytic_gf")?,
+                        // from_raw sanitises: a hand-edited snapshot
+                        // cannot smuggle non-finite features in
+                        features: FeatureVec::from_raw(feats),
+                    });
+                }
                 "spgemm" => state.spgemm.push(SpGemmDecision {
                     a: field_str(body, "a")?,
                     b: field_str(body, "b")?,
@@ -458,6 +559,64 @@ impl AutotuneState {
                     explored: field_num(body, "explored")? as usize,
                     regret_gflops: field_num(body, "regret")?,
                 }),
+                "learned_meta" => {
+                    let n_trees = field_num(body, "trees")? as usize;
+                    state.learned = Some(LearnedRouter {
+                        // trees fill positionally from the learned_node
+                        // records that follow; an unfilled tree fails
+                        // the final validate (no nodes)
+                        trees: vec![DecisionTree::default(); n_trees],
+                        ranges: Vec::new(),
+                        n_examples: field_num(body, "examples")? as usize,
+                        min_confidence: field_num(body, "min_conf")?,
+                        min_support: field_num(body, "min_support")? as usize,
+                    });
+                }
+                "learned_range" => {
+                    let lr = state.learned.as_mut().ok_or_else(|| {
+                        Error::Parse("learned_range record before its learned_meta".into())
+                    })?;
+                    // ranges are emitted in feature-index order: a
+                    // skipped or repeated index is a mangled snapshot
+                    if field_num(body, "feature")? as usize != lr.ranges.len() {
+                        return Err(Error::Parse("learned_range out of order".into()));
+                    }
+                    lr.ranges.push((field_num(body, "lo")?, field_num(body, "hi")?));
+                }
+                "learned_node" => {
+                    let lr = state.learned.as_mut().ok_or_else(|| {
+                        Error::Parse("learned_node record before its learned_meta".into())
+                    })?;
+                    let t = field_num(body, "tree")? as usize;
+                    let tree = lr.trees.get_mut(t).ok_or_else(|| {
+                        Error::Parse(format!("learned_node for unknown tree {t}"))
+                    })?;
+                    // nodes are emitted in index order within a tree
+                    if field_num(body, "node")? as usize != tree.nodes.len() {
+                        return Err(Error::Parse("learned_node out of order".into()));
+                    }
+                    // a split node carries a "split" key, a leaf an
+                    // "impl" key — the discriminator
+                    tree.nodes.push(if body.contains("\"split\"") {
+                        Node::Split {
+                            feature: field_num(body, "split")? as usize,
+                            threshold: field_num(body, "thresh")?,
+                            left: field_num(body, "left")? as usize,
+                            right: field_num(body, "right")? as usize,
+                        }
+                    } else {
+                        Node::Leaf {
+                            label: RouteLabel {
+                                im: parse_impl(&field_str(body, "impl")?)
+                                    .map_err(|e| Error::Parse(e.to_string()))?,
+                                reorder: parse_reordering(&field_str(body, "reorder")?)?,
+                                dt: field_num(body, "dt")? as usize,
+                            },
+                            count: field_num(body, "count")? as usize,
+                            purity: field_num(body, "purity")?,
+                        }
+                    });
+                }
                 "spmm_prior" => state.spmm_priors.push((
                     parse_class(&field_str(body, "class")?)?,
                     parse_impl(&field_str(body, "impl")?)
@@ -473,6 +632,12 @@ impl AutotuneState {
                     return Err(Error::Parse(format!("unknown snapshot record kind '{other}'")))
                 }
             }
+        }
+        // a restored forest must be structurally sound before it gets
+        // anywhere near routing: truncated trees, dangling child
+        // indices, out-of-range purities all reject the whole snapshot
+        if let Some(lr) = &state.learned {
+            lr.validate()?;
         }
         Ok(state)
     }
@@ -567,6 +732,59 @@ mod tests {
             enumerated: 9,
             explored: 3,
             regret_gflops: 0.0,
+            source: RouteSource::Learned,
+            confidence: 0.8125,
+            analytic_gflops: 2.5 + 0.0625,
+            features: FeatureVec::from_raw([0.5, 0.1 + 0.2, 0.0, 0.25, 10.0, 14.5, 3.0]),
+        }
+    }
+
+    fn forest() -> LearnedRouter {
+        LearnedRouter {
+            trees: vec![
+                DecisionTree {
+                    nodes: vec![
+                        Node::Split { feature: 4, threshold: 7.5, left: 1, right: 2 },
+                        Node::Leaf {
+                            label: RouteLabel {
+                                im: Impl::Csr,
+                                reorder: Reordering::None,
+                                dt: 8,
+                            },
+                            count: 3,
+                            purity: 1.0,
+                        },
+                        Node::Leaf {
+                            label: RouteLabel {
+                                im: Impl::Pb,
+                                reorder: Reordering::DegreeSort,
+                                dt: 16,
+                            },
+                            count: 2,
+                            purity: 0.1 + 0.7, // awkward binary fraction
+                        },
+                    ],
+                },
+                DecisionTree {
+                    nodes: vec![Node::Leaf {
+                        label: RouteLabel { im: Impl::Csr, reorder: Reordering::None, dt: 8 },
+                        count: 5,
+                        purity: 0.6,
+                    }],
+                },
+            ],
+            ranges: vec![
+                (0.0, 1.5),
+                (0.0, 0.25),
+                (0.0, 0.0),
+                (0.0, 1.0),
+                (5.0, 12.0),
+                (8.0, 20.0),
+                (2.0, 6.0),
+            ],
+            n_examples: 5,
+            min_confidence: 0.65,
+            min_support: 3,
         }
     }
 
@@ -638,6 +856,7 @@ mod tests {
                 simd_level: "avx".into(),
                 threads: 4,
             }),
+            learned: Some(forest()),
         }
     }
 
@@ -673,6 +892,15 @@ mod tests {
         // the DRAM rung's unbounded capacity sentinel must survive the
         // f64-based field parser exactly
         assert_eq!(ml.levels[1].capacity_bytes, usize::MAX);
+        // the route's learned columns round-trip exactly
+        assert_eq!(back.routes[0].source, RouteSource::Learned);
+        assert_eq!(back.routes[0].confidence, 0.8125);
+        assert_eq!(back.routes[0].analytic_gflops, 2.5 + 0.0625);
+        assert_eq!(back.routes[0].features.0[1], 0.1 + 0.2);
+        // the trained forest restores node-for-node and validates
+        let lr = back.learned.expect("forest survives the round trip");
+        assert_eq!(lr, forest());
+        lr.validate().unwrap();
     }
 
     #[test]
@@ -690,7 +918,7 @@ mod tests {
         let truncated = &full[..full.len() / 2];
         assert!(AutotuneState::parse(truncated).is_err());
         assert!(AutotuneState::parse("not json at all").is_err());
-        let skewed = full.replace("\"version\": 3", "\"version\": 99");
+        let skewed = full.replace("\"version\": 4", "\"version\": 99");
         assert!(AutotuneState::parse(&skewed).is_err());
         // unknown record kinds are rejected, not skipped — a snapshot
         // this build cannot fully understand must cold-start
@@ -705,6 +933,33 @@ mod tests {
     }
 
     #[test]
+    fn malformed_learned_forest_rejects_the_whole_snapshot() {
+        let full = sample().to_json();
+        // a leaf purity outside (0, 1] fails the structural validate
+        let bad_purity = full.replace("\"purity\": 0.6", "\"purity\": 7.5");
+        assert!(AutotuneState::parse(&bad_purity).is_err());
+        // a node pointing at a tree the meta record never declared
+        let bad_tree = full.replace("\"tree\": 1, \"node\": 0", "\"tree\": 9, \"node\": 0");
+        assert!(AutotuneState::parse(&bad_tree).is_err());
+        // losing a tree's nodes entirely (truncated forest): the
+        // declared second tree restores empty and validate rejects it
+        let missing = full.replace("\"trees\": 2", "\"trees\": 3");
+        assert!(AutotuneState::parse(&missing).is_err());
+        // a split whose child does not strictly follow its parent
+        // (self-reference / cycle) is structurally rejected
+        let cyclic = full.replace("\"left\": 1, \"right\": 2", "\"left\": 0, \"right\": 2");
+        assert!(AutotuneState::parse(&cyclic).is_err());
+        // a range record out of feature order is a mangled snapshot
+        let skewed_range = full.replace("\"feature\": 3", "\"feature\": 5");
+        assert!(AutotuneState::parse(&skewed_range).is_err());
+        // orphaned learned records (meta went missing) reject whole
+        let orphan = full.replace("\"kind\": \"learned_meta\"", "\"kinb\": \"learned_meta\"");
+        assert!(AutotuneState::parse(&orphan).is_err());
+        // and the healthy original still parses, of course
+        assert!(AutotuneState::parse(&full).is_ok());
+    }
+
+    #[test]
     fn load_or_cold_warns_instead_of_panicking() {
         let dir = std::env::temp_dir();
         let path = dir.join(format!("state_cold_{}.json", std::process::id()));
@@ -713,7 +968,7 @@ mod tests {
         // missing file: silent cold start
         assert!(AutotuneState::load_or_cold(path).is_none());
         // corrupted file: warned cold start, no panic
-        std::fs::write(path, "{\"version\": 3, \"records\": [{\"kind\": \"route\"").unwrap();
+        std::fs::write(path, "{\"version\": 4, \"records\": [{\"kind\": \"route\"").unwrap();
         assert!(AutotuneState::load_or_cold(path).is_none());
         // healthy file loads
         sample().save(path).unwrap();

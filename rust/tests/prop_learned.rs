@@ -1,0 +1,256 @@
+//! Property tests for the learned structure router.
+//!
+//! Four properties, each over seeded random cases (`PROP_SEED` folds a
+//! fleet-wide offset into every seed — see `testutil`):
+//!
+//! 1. **In-distribution reproduction** — a forest trained on feature
+//!    points from five structurally distinct generator families, each
+//!    family labeled with its own `(impl, reorder, dt)` triple, never
+//!    routes a training point to another family's label, and
+//!    confidently reproduces the label on at least half of them (the
+//!    rest may fall back through the confidence/support gates — a
+//!    fallback is correct behaviour, a cross-family answer is a bug).
+//! 2. **Off-distribution fallback** — any query outside the training
+//!    ranges returns `None` (the analytic fallback), and arbitrary
+//!    finite or non-finite query vectors never panic.
+//! 3. **Snapshot round trip** — a trained forest embedded in an
+//!    `AutotuneState` survives save → load → save byte-identically and
+//!    routes identically after the round trip.
+//! 4. **Malformed snapshots reject** — truncation, a dropped tree
+//!    node, and an out-of-range confidence gate each reject the whole
+//!    snapshot at parse (`Err`, never a half-loaded forest).
+
+use spmm_roofline::coordinator::{
+    features_of, Example, LearnedRouter, RouteLabel, TrainConfig,
+};
+use spmm_roofline::gen::{
+    banded, chung_lu, erdos_renyi, mesh2d, rmat, ChungLuParams, MeshKind, Prng,
+};
+use spmm_roofline::model::{FeatureVec, N_FEATURES};
+use spmm_roofline::pattern::classify;
+use spmm_roofline::report::AutotuneState;
+use spmm_roofline::sparse::{Csr, Reordering};
+use spmm_roofline::spmm::Impl;
+use spmm_roofline::testutil::check;
+
+/// One labeled family: a generator plus the plan triple that "wins"
+/// on it. The labels are synthetic ground truth — the property tests
+/// the forest's ability to reproduce a consistent mapping, not kernel
+/// performance.
+struct Family {
+    name: &'static str,
+    label: RouteLabel,
+    gen: fn(&mut Prng) -> Csr,
+}
+
+fn families() -> Vec<Family> {
+    vec![
+        Family {
+            name: "erdos_renyi",
+            label: RouteLabel { im: Impl::Csr, reorder: Reordering::None, dt: 16 },
+            gen: |rng| {
+                let n = 150 + rng.below_usize(100);
+                erdos_renyi(n, n, 4.0 + rng.below_usize(4) as f64, rng)
+            },
+        },
+        Family {
+            name: "banded",
+            label: RouteLabel { im: Impl::Csb, reorder: Reordering::Rcm, dt: 8 },
+            gen: |rng| banded(150 + rng.below_usize(100), 3 + rng.below_usize(4), 0.8, rng),
+        },
+        Family {
+            name: "mesh2d",
+            label: RouteLabel { im: Impl::Opt, reorder: Reordering::Rcm, dt: 16 },
+            gen: |rng| mesh2d(12 + rng.below_usize(6), MeshKind::Triangular, 0.9, rng),
+        },
+        Family {
+            name: "chung_lu",
+            label: RouteLabel { im: Impl::Pb, reorder: Reordering::DegreeSort, dt: 8 },
+            gen: |rng| {
+                chung_lu(
+                    ChungLuParams {
+                        n: 300 + rng.below_usize(150),
+                        alpha: 2.2,
+                        avg_deg: 8.0,
+                        k_min: 2.0,
+                    },
+                    rng,
+                )
+            },
+        },
+        Family {
+            name: "rmat",
+            label: RouteLabel { im: Impl::Ell, reorder: Reordering::DegreeSort, dt: 4 },
+            gen: |rng| rmat(8, 6.0, 0.57, 0.19, 0.19, rng),
+        },
+    ]
+}
+
+/// Training set: `per_family` instances of each family at a couple of
+/// dense widths, all labeled with the family's triple.
+fn training_set(per_family: usize, rng: &mut Prng) -> Vec<Example> {
+    let mut out = Vec::new();
+    for fam in families() {
+        for _ in 0..per_family {
+            let m = (fam.gen)(rng);
+            let cls = classify(&m);
+            let d = [8usize, 32][rng.below_usize(2)];
+            out.push(Example { features: features_of(&cls, d), label: fam.label });
+        }
+    }
+    out
+}
+
+#[test]
+fn forest_reproduces_family_labels_in_distribution() {
+    check(0x1ea7_0001, 6, |rng| {
+        let examples = training_set(4, rng);
+        let router = LearnedRouter::train(&examples, &TrainConfig::default())
+            .map_err(|e| format!("train failed: {e}"))?;
+        router.validate().map_err(|e| format!("fresh forest invalid: {e}"))?;
+        let mut confident = 0usize;
+        for (i, ex) in examples.iter().enumerate() {
+            match router.route(&ex.features) {
+                // a gated fallback is fine; a cross-family answer is not
+                None => {}
+                Some(got) => {
+                    let want = ex.label;
+                    if (got.im, got.reorder, got.dt) != (want.im, want.reorder, want.dt) {
+                        return Err(format!(
+                            "training point {i} routed to {}/{}/{} instead of {}/{}/{}",
+                            got.im, got.reorder, got.dt, want.im, want.reorder, want.dt
+                        ));
+                    }
+                    if !(got.confidence > 0.0 && got.confidence <= 1.0) {
+                        return Err(format!("confidence {} out of (0,1]", got.confidence));
+                    }
+                    confident += 1;
+                }
+            }
+        }
+        if confident * 2 < examples.len() {
+            return Err(format!(
+                "only {confident}/{} training points reproduced confidently",
+                examples.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn off_distribution_queries_fall_back_and_never_panic() {
+    check(0x1ea7_0002, 6, |rng| {
+        let examples = training_set(3, rng);
+        let router = LearnedRouter::train(&examples, &TrainConfig::default())
+            .map_err(|e| format!("train failed: {e}"))?;
+        // push each feature in turn far past its training range: the
+        // forest must refuse to extrapolate
+        for f in 0..N_FEATURES {
+            let (lo, hi) = router.ranges[f];
+            let span = (hi - lo).max(1.0);
+            let mut high = [0.0; N_FEATURES];
+            let mut low = [0.0; N_FEATURES];
+            for (g, &(glo, ghi)) in router.ranges.iter().enumerate() {
+                // otherwise mid-range, so feature f is the sole excursion
+                high[g] = 0.5 * (glo + ghi);
+                low[g] = 0.5 * (glo + ghi);
+            }
+            high[f] = hi + 2.0 * span;
+            low[f] = lo - 2.0 * span;
+            if router.route(&FeatureVec::from_raw(high)).is_some() {
+                return Err(format!("feature {f} above range did not fall back"));
+            }
+            if router.route(&FeatureVec::from_raw(low)).is_some() {
+                return Err(format!("feature {f} below range did not fall back"));
+            }
+        }
+        // arbitrary garbage — huge magnitudes, negatives, non-finite
+        // (sanitized to 0 by construction) — must never panic
+        for _ in 0..50 {
+            let mut v = [0.0; N_FEATURES];
+            for x in v.iter_mut() {
+                *x = match rng.below(5) {
+                    0 => f64::NAN,
+                    1 => f64::INFINITY,
+                    2 => -1e300,
+                    3 => rng.below(1_000_000) as f64,
+                    _ => rng.below(1000) as f64 / 997.0,
+                };
+            }
+            let _ = router.route(&FeatureVec::from_raw(v));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trained_forest_snapshot_round_trips_byte_identically() {
+    check(0x1ea7_0003, 6, |rng| {
+        let examples = training_set(3, rng);
+        let router = LearnedRouter::train(&examples, &TrainConfig::default())
+            .map_err(|e| format!("train failed: {e}"))?;
+        let state = AutotuneState { learned: Some(router.clone()), ..Default::default() };
+        let j1 = state.to_json();
+        let back = AutotuneState::parse(&j1).map_err(|e| format!("parse failed: {e}"))?;
+        let j2 = back.to_json();
+        if j1 != j2 {
+            return Err("save → load → save is not byte-identical".into());
+        }
+        let restored = back.learned.ok_or("forest lost in round trip")?;
+        if restored != router {
+            return Err("restored forest differs structurally".into());
+        }
+        // and it routes identically — on training points and on
+        // perturbed near-distribution points alike
+        for ex in examples.iter() {
+            let mut probe = ex.features.0;
+            probe[rng.below_usize(N_FEATURES)] *= 1.0 + (rng.below(100) as f64 - 50.0) / 1000.0;
+            for q in [ex.features, FeatureVec::from_raw(probe)] {
+                if router.route(&q) != restored.route(&q) {
+                    return Err("restored forest routes differently".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn malformed_forest_snapshots_reject_at_parse() {
+    check(0x1ea7_0004, 6, |rng| {
+        let examples = training_set(3, rng);
+        let router = LearnedRouter::train(&examples, &TrainConfig::default())
+            .map_err(|e| format!("train failed: {e}"))?;
+        let state = AutotuneState { learned: Some(router), ..Default::default() };
+        let json = state.to_json();
+
+        // raw truncation anywhere inside the records fails the
+        // wrapper-integrity check
+        let cut = json.len() / 2 + rng.below_usize(json.len() / 4);
+        if AutotuneState::parse(&json[..cut]).is_ok() {
+            return Err("truncated snapshot parsed".into());
+        }
+
+        // dropping the final tree node (and re-closing the wrapper)
+        // leaves a dangling child reference or an empty tree — the
+        // structural validate must reject it whole
+        let last = json
+            .rfind(",\n  {\"kind\": \"learned_node\"")
+            .ok_or("no learned_node records emitted")?;
+        let dropped = format!("{}\n]}}\n", &json[..last]);
+        if AutotuneState::parse(&dropped).is_ok() {
+            return Err("snapshot with a missing tree node parsed".into());
+        }
+
+        // an impossible confidence gate (> 1) fails the range check
+        let skewed = json.replace("\"min_conf\": 0.65", "\"min_conf\": 1.65");
+        if skewed == json {
+            return Err("expected the default 0.65 confidence gate in the snapshot".into());
+        }
+        if AutotuneState::parse(&skewed).is_ok() {
+            return Err("snapshot with confidence gate > 1 parsed".into());
+        }
+        Ok(())
+    });
+}
